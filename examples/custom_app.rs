@@ -1,0 +1,106 @@
+//! Public-API tour: define your own application with the builder, attach
+//! AOT compute bodies, set trust domains, tune the fusion policy, and
+//! inspect what the platform learned about your call graph.
+//!
+//! The app models a document-processing service: `ingest` synchronously
+//! calls `extract`, which synchronously calls `classify` (same trust
+//! domain — fusable), `classify` synchronously calls `audit` in a
+//! *different* trust domain (must never fuse), and `ingest` asynchronously
+//! hands off to `archive`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example custom_app
+//! ```
+
+use std::rc::Rc;
+
+use provuse::apps::AppSpec;
+use provuse::config::{ComputeMode, PlatformConfig, WorkloadConfig};
+use provuse::exec::{self, Executor, Mode};
+use provuse::platform::Platform;
+use provuse::workload;
+
+fn build_app() -> provuse::Result<AppSpec> {
+    AppSpec::builder("docproc")
+        .function("ingest")
+        .entry()
+        .body("parse")
+        .busy_ms(40.0)
+        .code_mb(15.0)
+        .trust_domain("pipeline")
+        .sync_call("extract")
+        .async_call("archive")
+        .done()
+        .function("extract")
+        .body("analyze_sensor")
+        .busy_ms(80.0)
+        .trust_domain("pipeline")
+        .sync_call("classify")
+        .done()
+        .function("classify")
+        .body("aggregate")
+        .busy_ms(60.0)
+        .trust_domain("pipeline")
+        .sync_call("audit")
+        .done()
+        .function("audit")
+        .body("notify")
+        .busy_ms(10.0)
+        .trust_domain("compliance") // cross-domain: must never fuse
+        .done()
+        .function("archive")
+        .body("persist")
+        .busy_ms(50.0)
+        .trust_domain("pipeline")
+        .done()
+        .build()
+}
+
+fn main() -> provuse::Result<()> {
+    let app = build_app()?;
+    println!("app `{}`:\n{}", app.name, app.to_dot());
+    println!("fusion groups the platform should converge to: {:?}\n", app.sync_fusion_groups());
+
+    Executor::new(Mode::Virtual).block_on(async {
+        // custom fusion policy: aggressive threshold, capped group size
+        let mut config = PlatformConfig::tiny().with_compute(ComputeMode::Replay);
+        config.fusion.min_observations = 2;
+        config.fusion.max_group_size = 3;
+        let platform = Platform::deploy(build_app()?, config).await?;
+
+        let wl = WorkloadConfig { requests: 300, rate_rps: 10.0, seed: 1, timeout_ms: 60_000.0 };
+        let report = workload::run(Rc::clone(&platform), wl).await?;
+        exec::sleep_ms(5_000.0).await;
+        println!("workload: {}\n", report.summary());
+
+        println!("observed call graph (sync edges + counts):");
+        for ((caller, callee), count) in platform.observer.observed_graph() {
+            println!("  {caller} -> {callee}: {count}");
+        }
+
+        println!("\nfinal routing:");
+        for (function, inst) in platform.gateway.snapshot() {
+            println!(
+                "  {function:<10} -> {} hosting {:?}",
+                inst.id(),
+                inst.functions().iter().map(|(f, _)| f.as_str()).collect::<Vec<_>>()
+            );
+        }
+
+        // invariants this example demonstrates
+        let audit_inst = platform.gateway.resolve("audit")?;
+        assert_eq!(
+            audit_inst.functions().len(),
+            1,
+            "cross-trust-domain function must stay isolated"
+        );
+        let ingest_inst = platform.gateway.resolve("ingest")?;
+        assert!(
+            ingest_inst.functions().len() <= 3,
+            "max_group_size=3 must cap fused instances"
+        );
+        println!("\ninvariants held: audit stayed isolated, group size capped at 3");
+        platform.shutdown();
+        Ok(())
+    })
+}

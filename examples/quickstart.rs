@@ -1,0 +1,77 @@
+//! Quickstart: deploy the TREE app on a tinyFaaS-flavored platform, watch
+//! the platform detect synchronous calls and fuse instances at runtime, and
+//! compare latency before and after.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::rc::Rc;
+
+use provuse::apps;
+use provuse::config::{ComputeMode, PlatformConfig, WorkloadConfig};
+use provuse::exec::{self, Executor, Mode};
+use provuse::platform::Platform;
+use provuse::workload;
+
+fn main() -> provuse::Result<()> {
+    let ex = Executor::new(Mode::Virtual); // deterministic virtual time
+    ex.block_on(async {
+        // 1. deploy: one container instance per function, fusion enabled
+        let app = apps::tree();
+        println!("deploying `{}` ({} functions)...", app.name, app.len());
+        println!("theoretical fusion groups: {:?}\n", app.sync_fusion_groups());
+        let config = PlatformConfig::tiny().with_compute(ComputeMode::Replay);
+        let platform = Platform::deploy(app, config).await?;
+        println!(
+            "deployed: {} instances, {} MiB platform RAM\n",
+            platform.containers.live_count(),
+            platform.containers.total_ram_mb() as u64
+        );
+
+        // 2. drive a small workload; the Function Handler observes the
+        //    blocking calls and the Merger consolidates instances
+        let wl = WorkloadConfig { requests: 400, rate_rps: 10.0, seed: 7, timeout_ms: 60_000.0 };
+        let report = workload::run(Rc::clone(&platform), wl).await?;
+        exec::sleep_ms(5_000.0).await; // let drains settle
+        println!("workload: {}\n", report.summary());
+
+        // 3. what happened while we were serving
+        println!("merge events:");
+        for m in platform.metrics.merges() {
+            println!(
+                "  t={:>6.1}s  [{}] (pipeline took {:.1}s)",
+                m.t_ms / 1e3,
+                m.functions.join(" + "),
+                m.duration_ms / 1e3
+            );
+        }
+        let pre = platform.metrics.latency_quantiles_window(0.0, 5_000.0);
+        let last_merge = platform
+            .metrics
+            .merges()
+            .iter()
+            .map(|m| m.t_ms)
+            .fold(0.0f64, f64::max);
+        let post = platform.metrics.latency_quantiles_window(last_merge, f64::INFINITY);
+        println!(
+            "\nmedian latency: {:.0} ms (first 5s, pre-merge) -> {:.0} ms (post-merge)",
+            pre.median(),
+            post.median()
+        );
+        println!(
+            "platform RAM:   {:.0} MiB -> {:.0} MiB  ({} -> {} instances)",
+            platform.metrics.ram_series().first().map(|s| s.total_mb).unwrap_or(0.0),
+            platform.containers.total_ram_mb(),
+            platform.app.len(),
+            platform.containers.live_count()
+        );
+        println!(
+            "inline calls served: {}  (remote sync calls observed: {})",
+            platform.metrics.counter("inline_calls"),
+            platform.metrics.counter("remote_sync_calls")
+        );
+        platform.shutdown();
+        Ok(())
+    })
+}

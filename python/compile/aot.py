@@ -1,0 +1,120 @@
+"""AOT lowering: JAX compute bodies -> HLO text artifacts for the Rust runtime.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+For every body in :data:`model.BODIES` this writes
+
+    artifacts/<name>.hlo.txt      the lowered module (return_tuple=True)
+    artifacts/golden/<name>.json  deterministic input + expected output
+
+plus ``artifacts/manifest.json`` describing the whole set.  The Rust side
+(`runtime::ArtifactSet`) loads the manifest, compiles every module once, and
+verifies numeric parity against the goldens (`provuse validate-artifacts`).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+SCHEMA_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text via stablehlo.
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big dense literals as ``constant({...})``, which the xla crate's text
+    parser silently turns into zeros — every baked weight matrix would
+    vanish on the Rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided constants survived printing"
+    return text
+
+
+def lower_body(name: str) -> str:
+    fn = model.BODIES[name]
+    spec = jax.ShapeDtypeStruct((model.BATCH, model.IN_DIM), np.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def golden_case(name: str):
+    fn = model.BODIES[name]
+    x = model.golden_input(name)
+    y = np.asarray(jax.jit(fn)(x))
+    return x, y
+
+
+def build(out_dir: str, names=None) -> dict:
+    names = list(names or model.BODIES)
+    golden_dir = os.path.join(out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+
+    entries = []
+    for name in names:
+        hlo = lower_body(name)
+        hlo_rel = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_rel), "w") as f:
+            f.write(hlo)
+
+        x, y = golden_case(name)
+        golden_rel = os.path.join("golden", f"{name}.json")
+        with open(os.path.join(out_dir, golden_rel), "w") as f:
+            json.dump(
+                {
+                    "name": name,
+                    "input": [float(v) for v in x.ravel()],
+                    "output": [float(v) for v in y.ravel()],
+                },
+                f,
+            )
+        entries.append(
+            {
+                "name": name,
+                "hlo": hlo_rel,
+                "golden": golden_rel,
+                "input_shape": [model.BATCH, model.IN_DIM],
+                "output_shape": [int(d) for d in y.shape],
+            }
+        )
+        print(f"  lowered {name:>16s}: {len(hlo):7d} chars, out {list(y.shape)}")
+
+    manifest = {
+        "schema": SCHEMA_VERSION,
+        "batch": model.BATCH,
+        "in_dim": model.IN_DIM,
+        "out_dim": model.OUT_DIM,
+        "bodies": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", nargs="*", help="subset of body names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = build(args.out, args.only)
+    print(f"wrote {len(manifest['bodies'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for Provuse function compute bodies.
+
+Every kernel is written TPU-idiomatically (VMEM-sized blocks, MXU-aligned
+matmul tiles, BlockSpec-expressed HBM<->VMEM schedules) but lowered with
+``interpret=True`` so the resulting HLO executes on the CPU PJRT client used
+by the Rust runtime.  Correctness oracles live in :mod:`ref`.
+"""
+
+from .window_stats import window_stats, STATS
+from .matmul import matmul
+from .conv1d import traffic_summary, TRAFFIC_STATS
+from .histogram import histogram, NBINS
+
+__all__ = [
+    "window_stats",
+    "matmul",
+    "traffic_summary",
+    "histogram",
+    "STATS",
+    "TRAFFIC_STATS",
+    "NBINS",
+]

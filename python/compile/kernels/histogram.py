@@ -1,0 +1,71 @@
+"""Binned-histogram Pallas kernel (the `persist` body's digest).
+
+Computes, per row of a ``[B, T]`` f32 array, an ``NBINS``-bin histogram of
+values clipped to ``[lo, hi)``.  TPU adaptation: histograms are
+scatter-shaped on GPUs (atomics into bins); on a TPU the idiomatic form is
+a dense compare-and-reduce — each bin is a vectorized mask-sum on the VPU,
+statically unrolled over the (small, constant) bin count.  The grid tiles
+rows by ``bm`` and time by ``bt`` with the revisited-output accumulation
+schedule (same as window_stats).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: number of histogram bins
+NBINS = 8
+
+
+def _make_kernel(nbins: int, lo: float, hi: float):
+    def kernel(x_ref, o_ref):
+        j = pl.program_id(1)
+        x = x_ref[...]  # (bm, bt)
+        scaled = (jnp.clip(x, lo, hi) - lo) / (hi - lo) * (nbins - 1e-3)
+        bin_idx = jnp.floor(scaled)
+        # dense compare-and-reduce per bin (static unroll, VPU-friendly)
+        part = jnp.stack(
+            [
+                jnp.sum((bin_idx == float(k)).astype(jnp.float32), axis=1)
+                for k in range(nbins)
+            ],
+            axis=1,
+        )  # (bm, nbins)
+
+        @pl.when(j == 0)
+        def _init():
+            o_ref[...] = part
+
+        @pl.when(j > 0)
+        def _accumulate():
+            o_ref[...] += part
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "lo", "hi", "bm", "bt"))
+def histogram(
+    x,
+    *,
+    nbins: int = NBINS,
+    lo: float = -4.0,
+    hi: float = 4.0,
+    bm: int = 8,
+    bt: int = 128,
+):
+    """Per-row clipped histogram of ``x`` (f32 ``[B, T]`` -> ``[B, nbins]``,
+    raw counts).  ``bm``/``bt`` must divide the array dimensions."""
+    b, t = x.shape
+    if b % bm or t % bt:
+        raise ValueError(f"shape ({b},{t}) not divisible by block ({bm},{bt})")
+    grid = (b // bm, t // bt)
+    return pl.pallas_call(
+        _make_kernel(nbins, lo, hi),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bt), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, nbins), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nbins), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,64 @@
+"""K-tiled matmul Pallas kernel with a fused activation epilogue.
+
+The schedule is the canonical MXU-friendly blocked matmul: the grid is
+``(M/bm, N/bn, K/bk)`` with the K dimension innermost, the output block is
+revisited across K steps and acts as the accumulator (f32 accumulation via
+``preferred_element_type``), and the optional activation is applied once on
+the final K step so it fuses into the epilogue instead of costing an extra
+pass over HBM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(activation):
+    def kernel(x_ref, w_ref, o_ref):
+        kk = pl.program_id(2)
+        nk = pl.num_programs(2)
+
+        @pl.when(kk == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+        if activation is not None:
+
+            @pl.when(kk == nk - 1)
+            def _epilogue():
+                o_ref[...] = activation(o_ref[...])
+
+    return kernel
+
+
+def matmul(x, w, *, activation=None, bm: int = 8, bn: int = 128, bk: int = 128):
+    """Blocked ``x @ w`` (f32) with an optional fused activation epilogue.
+
+    ``x``: ``[M, K]``, ``w``: ``[K, N]``.  Block sizes are clamped to the
+    array dimensions; all dimensions must be divisible by their (clamped)
+    block size.  ``activation`` is a jnp-level elementwise function (e.g.
+    ``jax.nn.relu``) applied to the final accumulator.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"({m},{k})@({k},{n}) not divisible by ({bm},{bn},{bk})")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _make_kernel(activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)

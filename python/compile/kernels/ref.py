@@ -1,0 +1,75 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Each function here mirrors one kernel's contract exactly, written with
+straight-line jnp (no pallas, no tiling) so any discrepancy implicates the
+kernel's schedule rather than the math.  pytest compares kernel vs oracle
+with ``assert_allclose`` across hypothesis-generated shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def window_stats_ref(x):
+    """Oracle for :func:`..window_stats.window_stats`."""
+    b, t = x.shape
+    pos = jnp.arange(t, dtype=jnp.float32)[None, :]
+    return jnp.stack(
+        [
+            jnp.sum(x, axis=1),
+            jnp.sum(x * x, axis=1),
+            jnp.min(x, axis=1),
+            jnp.max(x, axis=1),
+            jnp.sum(jnp.abs(x), axis=1),
+            jnp.max(jnp.abs(x), axis=1),
+            jnp.sum(x * pos, axis=1),
+            jnp.full((b,), t, jnp.float32),
+        ],
+        axis=1,
+    )
+
+
+def matmul_ref(x, w, *, activation=None):
+    """Oracle for :func:`..matmul.matmul`."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if activation is not None:
+        out = activation(out)
+    return out
+
+
+def histogram_ref(x, *, nbins=8, lo=-4.0, hi=4.0):
+    """Oracle for :func:`..histogram.histogram` (raw counts)."""
+    scaled = (jnp.clip(x, lo, hi) - lo) / (hi - lo) * (nbins - 1e-3)
+    bins = jnp.floor(scaled).astype(jnp.int32)
+    onehot = jax.nn.one_hot(bins, nbins, dtype=jnp.float32)
+    return jnp.sum(onehot, axis=1)
+
+
+def traffic_summary_ref(x, w):
+    """Oracle for :func:`..conv1d.traffic_summary`."""
+    b, t = x.shape
+    (ktaps,) = w.shape
+    half = ktaps // 2
+    # 'same' FIR with zero padding: smooth[t] = sum_k x[t + k - half] * w[k]
+    xp = jnp.pad(x, ((0, 0), (half, half)))
+    smooth = jnp.zeros_like(x)
+    for tap in range(ktaps):
+        smooth = smooth + xp[:, tap : tap + t] * w[tap]
+    mean = jnp.mean(smooth, axis=1, keepdims=True)
+    var = jnp.mean((smooth - mean) ** 2, axis=1, keepdims=True)
+    thresh = mean + 1.5 * jnp.sqrt(var + 1e-9)
+    peaks = jnp.sum((smooth > thresh).astype(jnp.float32), axis=1)
+    step = smooth[:, 1:] - smooth[:, :-1]
+    return jnp.stack(
+        [
+            peaks,
+            jnp.max(smooth, axis=1),
+            mean[:, 0],
+            jnp.sum(smooth * smooth, axis=1) / t,
+            jnp.max(step, axis=1),
+            -jnp.min(step, axis=1),
+            jnp.mean(x * w[0], axis=1),
+            jnp.full((b,), t, jnp.float32),
+        ],
+        axis=1,
+    )

@@ -1,0 +1,89 @@
+"""Tiled streaming-statistics Pallas kernel.
+
+Computes, per row of a ``[B, T]`` f32 array, eight streaming statistics:
+
+    0: sum        1: sum of squares   2: min            3: max
+    4: l1 norm    5: abs-max          6: position-weighted sum (for slope)
+    7: element count
+
+The grid tiles ``B`` into ``bm``-row blocks and ``T`` into ``bt``-column
+blocks; the output block index depends only on the row-block index, so the
+kernel accumulates partial statistics across the ``T`` dimension (the
+classic revisited-output reduction schedule).  On a TPU the ``(bm, bt)``
+input block is VMEM-resident and statistics reduce on the VPU; here the
+kernel is lowered with ``interpret=True`` into plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: number of statistics produced per row
+STATS = 8
+
+
+def _kernel(x_ref, o_ref):
+    j = pl.program_id(1)
+    x = x_ref[...]  # (bm, bt) f32 block
+    bm, bt = x.shape
+    # Global column positions of this block, used by the position-weighted
+    # sum so the statistic is tiling-invariant.
+    pos = jnp.float32(j * bt) + jax.lax.broadcasted_iota(jnp.float32, x.shape, 1)
+    part = jnp.stack(
+        [
+            jnp.sum(x, axis=1),
+            jnp.sum(x * x, axis=1),
+            jnp.min(x, axis=1),
+            jnp.max(x, axis=1),
+            jnp.sum(jnp.abs(x), axis=1),
+            jnp.max(jnp.abs(x), axis=1),
+            jnp.sum(x * pos, axis=1),
+            jnp.full((bm,), bt, jnp.float32),
+        ],
+        axis=1,
+    )  # (bm, STATS)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(j > 0)
+    def _accumulate():
+        acc = o_ref[...]
+        o_ref[...] = jnp.stack(
+            [
+                acc[:, 0] + part[:, 0],
+                acc[:, 1] + part[:, 1],
+                jnp.minimum(acc[:, 2], part[:, 2]),
+                jnp.maximum(acc[:, 3], part[:, 3]),
+                acc[:, 4] + part[:, 4],
+                jnp.maximum(acc[:, 5], part[:, 5]),
+                acc[:, 6] + part[:, 6],
+                acc[:, 7] + part[:, 7],
+            ],
+            axis=1,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bt"))
+def window_stats(x, *, bm: int = 8, bt: int = 128):
+    """Per-row streaming statistics of ``x`` (f32 ``[B, T]`` -> ``[B, 8]``).
+
+    ``bm``/``bt`` are the row/column block sizes; both must divide the
+    corresponding array dimension.  ``bt`` defaults to the TPU lane width
+    (128) and ``bm`` to the f32 sublane count (8).
+    """
+    b, t = x.shape
+    if b % bm or t % bt:
+        raise ValueError(f"shape ({b},{t}) not divisible by block ({bm},{bt})")
+    grid = (b // bm, t // bt)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bt), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, STATS), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, STATS), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,179 @@
+"""Layer-2 JAX compute bodies for the Provuse benchmark functions.
+
+Each FaaS function in the TREE / IOT benchmark applications carries a real
+compute payload.  This module defines those payloads as JAX graphs composed
+from the Layer-1 Pallas kernels, with a **uniform signature**
+
+    f32[BATCH, IN_DIM]  ->  f32[BATCH, OUT_DIM]
+
+so the Rust runtime can execute any body generically and thread outputs of
+one function into inputs of the next (padding / tiling is done Rust-side).
+
+Weights are baked in as constants from a fixed seed: the platform never
+manages parameters (the paper's functions are self-contained code bundles),
+and baked constants keep the AOT artifacts single-input.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the temperature body
+computes its exponential moving average as a matmul against a precomputed
+lower-triangular decay matrix — an MXU-shaped reformulation of what a GPU
+implementation would express as a sequential scan.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import histogram, matmul, traffic_summary, window_stats
+
+#: uniform body signature
+BATCH = 8
+IN_DIM = 256
+OUT_DIM = 8
+
+_WEIGHT_SEED = 20260710
+
+
+def _rng():
+    return np.random.RandomState(_WEIGHT_SEED)
+
+
+def _w(rs, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return jnp.asarray(rs.randn(*shape).astype(np.float32) * scale)
+
+
+def _ewma_matrix(t: int, alpha: float = 0.08) -> jnp.ndarray:
+    """Lower-triangular decay matrix L with (x @ L)[b, t] = EWMA_t(x[b])."""
+    idx = np.arange(t)
+    # L[s, t] = alpha * (1 - alpha)^(t - s) for s <= t (column-causal).
+    expo = idx[None, :] - idx[:, None]
+    mat = alpha * np.power(1.0 - alpha, np.clip(expo, 0, None))
+    mat = np.where(expo >= 0, mat, 0.0)
+    # Row 0 keeps full initial mass so the EWMA is exact, not leaky.
+    mat[0, :] = np.power(1.0 - alpha, idx)
+    return jnp.asarray(mat.astype(np.float32))
+
+
+def _normalize_rows(s):
+    return s / (1.0 + jnp.abs(s))
+
+
+# --------------------------------------------------------------------------
+# IOT application bodies (Fig. 3)
+# --------------------------------------------------------------------------
+
+def body_analyze_sensor(x):
+    """Entry point I: clip raw sensor batch, compute streaming statistics."""
+    x = jnp.clip(x, -5.0, 5.0)
+    return _normalize_rows(window_stats(x))
+
+
+def body_parse(x):
+    """Decode/rescale raw payload, then summarize."""
+    y = jnp.tanh(x * 0.1 + 0.05)
+    return _normalize_rows(window_stats(y, bt=64))
+
+
+def _mlp_head(feats, rs, hidden):
+    w1 = _w(rs, (feats.shape[1], hidden))
+    w2 = _w(rs, (hidden, OUT_DIM))
+    h = matmul(feats, w1, activation=jax.nn.relu, bn=hidden, bk=feats.shape[1])
+    return matmul(h, w2, bk=hidden)
+
+
+def body_temperature(x):
+    """EWMA-as-matmul trend extraction + anomaly-scoring MLP.
+
+    Perf note (EXPERIMENTS.md §Perf L1-1): the 256-wide matmuls use
+    bn=bk=256 single-step grids — interpret-mode lowering emits a while
+    loop + dynamic-update-slice per grid step, so on the CPU-PJRT path
+    fewer/larger blocks win; the blocks remain VMEM-resident (~264 KiB)
+    and lane-aligned on a real TPU.
+    """
+    rs = _rng()
+    ewma = matmul(x, _ewma_matrix(IN_DIM), bn=256, bk=256)  # (B, 256) trend
+    proj = matmul(ewma, _w(rs, (IN_DIM, 128)), activation=jax.nn.relu, bk=256)
+    return jnp.tanh(_mlp_head(proj, rs, 256))
+
+
+def body_airquality(x):
+    """Magnitude-feature anomaly scorer (different widths than temperature)."""
+    rs = np.random.RandomState(_WEIGHT_SEED + 1)
+    feats = matmul(jnp.abs(x), _w(rs, (IN_DIM, 128)), activation=jax.nn.relu, bk=256)
+    h = matmul(feats, _w(rs, (128, 128)), activation=jax.nn.relu)
+    return jnp.tanh(matmul(h, _w(rs, (128, OUT_DIM))))
+
+
+def body_traffic(x):
+    """FIR smoothing + peak detection via the conv1d kernel."""
+    taps = jnp.asarray(
+        np.array([1, 4, 8, 12, 14, 12, 8, 4, 1], dtype=np.float32) / 64.0
+    )
+    return _normalize_rows(traffic_summary(x, taps))
+
+
+def body_aggregate(x):
+    """Combine upstream analysis scores into a routing decision vector."""
+    rs = np.random.RandomState(_WEIGHT_SEED + 2)
+    z = matmul(x, _w(rs, (IN_DIM, 64)), activation=jax.nn.relu, bk=256)
+    o = matmul(z, _w(rs, (64, OUT_DIM)))
+    return jax.nn.softmax(o, axis=1)
+
+
+def body_persist(x):
+    """Quantized digest (8-bin per-row histogram) of the stored payload,
+    via the compare-and-reduce Pallas histogram kernel."""
+    return histogram(x, nbins=OUT_DIM) / x.shape[1]
+
+
+def body_notify(x):
+    """Cheap notification formatting: bounded summary of the trigger."""
+    return jnp.tanh(window_stats(x) * 0.01)
+
+
+# --------------------------------------------------------------------------
+# TREE application bodies (Fig. 4)
+# --------------------------------------------------------------------------
+
+def body_tree_light(x):
+    """Light synchronous-branch payload (nodes A, B, D, E)."""
+    return _normalize_rows(window_stats(x))
+
+
+def body_tree_heavy(x):
+    """Heavy asynchronous-branch payload (nodes C, F, G).
+
+    Fig. 4: 'The asynchronous path dominates the workload, requiring far
+    more computation than the synchronous branch.'
+    """
+    rs = np.random.RandomState(_WEIGHT_SEED + 3)
+    h = x
+    for layer in range(3):
+        # single-step grid per layer: see body_temperature perf note
+        h = matmul(h, _w(rs, (IN_DIM, IN_DIM)), activation=jax.nn.relu, bn=256, bk=256)
+    return jnp.tanh(matmul(h, _w(rs, (IN_DIM, OUT_DIM)), bk=256))
+
+
+#: registry of every AOT-compiled compute body, keyed by artifact name
+BODIES = {
+    "analyze_sensor": body_analyze_sensor,
+    "parse": body_parse,
+    "temperature": body_temperature,
+    "airquality": body_airquality,
+    "traffic": body_traffic,
+    "aggregate": body_aggregate,
+    "persist": body_persist,
+    "notify": body_notify,
+    "tree_light": body_tree_light,
+    "tree_heavy": body_tree_heavy,
+}
+
+
+def golden_input(name: str) -> np.ndarray:
+    """Deterministic per-body input used for cross-layer parity checks."""
+    import zlib
+
+    # crc32 is stable across processes (python hash() is salted).
+    seed = zlib.crc32(name.encode()) & 0x7FFFFFFF
+    rs = np.random.RandomState(seed)
+    return rs.randn(BATCH, IN_DIM).astype(np.float32)

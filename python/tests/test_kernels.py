@@ -1,0 +1,182 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and block sizes where the kernel exposes them);
+assert_allclose is the CORE correctness signal for the compute layer.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import histogram, matmul, traffic_summary, window_stats
+from compile.kernels.ref import (
+    histogram_ref,
+    matmul_ref,
+    traffic_summary_ref,
+    window_stats_ref,
+)
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape, scale=2.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ---------------------------------------------------------------- window_stats
+
+@SETTINGS
+@given(
+    b_blocks=st.integers(1, 3),
+    t_blocks=st.integers(1, 4),
+    bt=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_window_stats_matches_ref(b_blocks, t_blocks, bt, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (8 * b_blocks, bt * t_blocks))
+    got = window_stats(x, bm=8, bt=bt)
+    want = window_stats_ref(x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_window_stats_tiling_invariance():
+    rng = np.random.default_rng(7)
+    x = _arr(rng, (8, 256))
+    a = window_stats(x, bt=32)
+    b = window_stats(x, bt=128)
+    c = window_stats(x, bt=256)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4)
+    assert_allclose(np.asarray(b), np.asarray(c), rtol=1e-5, atol=1e-4)
+
+
+def test_window_stats_rejects_bad_blocks():
+    x = jnp.zeros((8, 100), jnp.float32)
+    with pytest.raises(ValueError):
+        window_stats(x, bt=64)
+
+
+def test_window_stats_constant_rows():
+    x = jnp.full((8, 128), 3.0, jnp.float32)
+    s = np.asarray(window_stats(x))
+    assert_allclose(s[:, 0], 3.0 * 128)          # sum
+    assert_allclose(s[:, 2], 3.0)                # min
+    assert_allclose(s[:, 3], 3.0)                # max
+    assert_allclose(s[:, 7], 128.0)              # count
+
+
+# --------------------------------------------------------------------- matmul
+
+@SETTINGS
+@given(
+    m=st.sampled_from([8, 16]),
+    k=st.sampled_from([64, 128, 256]),
+    n=st.sampled_from([8, 64, 128, 256]),
+    act=st.sampled_from([None, "relu", "tanh"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (m, k), scale=1.0)
+    w = _arr(rng, (k, n), scale=0.1)
+    activation = {None: None, "relu": jax.nn.relu, "tanh": jnp.tanh}[act]
+    got = matmul(x, w, activation=activation)
+    want = matmul_ref(x, w, activation=activation)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@SETTINGS
+@given(bk=st.sampled_from([32, 64, 128, 256]), seed=st.integers(0, 2**31 - 1))
+def test_matmul_k_tiling_invariance(bk, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (8, 256), scale=1.0)
+    w = _arr(rng, (256, 64), scale=0.1)
+    got = matmul(x, w, bk=bk)
+    want = matmul_ref(x, w)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_shape_mismatch():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((8, 64)), jnp.zeros((32, 8)))
+
+
+def test_matmul_identity():
+    x = _arr(np.random.default_rng(0), (8, 64), scale=1.0)
+    eye = jnp.eye(64, dtype=jnp.float32)
+    assert_allclose(np.asarray(matmul(x, eye)), np.asarray(x), rtol=1e-6)
+
+
+# ------------------------------------------------------------ traffic_summary
+
+@SETTINGS
+@given(
+    b_blocks=st.integers(1, 3),
+    t=st.sampled_from([64, 128, 256, 512]),
+    ktaps=st.sampled_from([3, 5, 9]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_traffic_summary_matches_ref(b_blocks, t, ktaps, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (8 * b_blocks, t))
+    w = jnp.asarray(rng.standard_normal(ktaps, dtype=np.float32) * 0.2)
+    got = traffic_summary(x, w)
+    want = traffic_summary_ref(x, w)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_traffic_summary_rejects_even_taps():
+    with pytest.raises(ValueError):
+        traffic_summary(jnp.zeros((8, 64)), jnp.zeros((4,)))
+
+
+# ------------------------------------------------------------------ histogram
+
+@SETTINGS
+@given(
+    b_blocks=st.integers(1, 3),
+    t_blocks=st.integers(1, 4),
+    bt=st.sampled_from([32, 64, 128]),
+    nbins=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_histogram_matches_ref(b_blocks, t_blocks, bt, nbins, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (8 * b_blocks, bt * t_blocks), scale=3.0)
+    got = histogram(x, nbins=nbins, bm=8, bt=bt)
+    want = histogram_ref(x, nbins=nbins)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_histogram_mass_conservation():
+    rng = np.random.default_rng(1)
+    x = _arr(rng, (8, 256), scale=10.0)  # plenty of clipping
+    h = np.asarray(histogram(x))
+    assert_allclose(h.sum(axis=1), 256.0)
+    assert np.all(h >= 0)
+
+
+def test_histogram_tiling_invariance():
+    rng = np.random.default_rng(2)
+    x = _arr(rng, (8, 256))
+    a = histogram(x, bt=32)
+    b = histogram(x, bt=256)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_histogram_rejects_bad_blocks():
+    with pytest.raises(ValueError):
+        histogram(jnp.zeros((8, 100)), bt=64)
+
+
+def test_traffic_summary_impulse():
+    """A delta filter must reproduce the input's own statistics."""
+    rng = np.random.default_rng(3)
+    x = _arr(rng, (8, 128))
+    w = jnp.asarray(np.array([0, 0, 0, 0, 1, 0, 0, 0, 0], dtype=np.float32))
+    got = np.asarray(traffic_summary(x, w))
+    assert_allclose(got[:, 1], np.max(np.asarray(x), axis=1), rtol=1e-5, atol=1e-5)
+    assert_allclose(got[:, 2], np.mean(np.asarray(x), axis=1), rtol=1e-4, atol=1e-5)

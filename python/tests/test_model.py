@@ -1,0 +1,83 @@
+"""L2 checks: every compute body obeys the uniform contract and is
+deterministic, finite, and non-degenerate."""
+
+import numpy as np
+import jax
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def jitted():
+    return {name: jax.jit(fn) for name, fn in model.BODIES.items()}
+
+
+@pytest.mark.parametrize("name", sorted(model.BODIES))
+def test_body_contract(name, jitted):
+    x = model.golden_input(name)
+    y = np.asarray(jitted[name](x))
+    assert y.shape == (model.BATCH, model.OUT_DIM), name
+    assert y.dtype == np.float32
+    assert np.all(np.isfinite(y)), f"{name} produced non-finite values"
+
+
+@pytest.mark.parametrize("name", sorted(model.BODIES))
+def test_body_deterministic(name, jitted):
+    x = model.golden_input(name)
+    y1 = np.asarray(jitted[name](x))
+    y2 = np.asarray(jitted[name](x))
+    assert_allclose(y1, y2, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("name", sorted(model.BODIES))
+def test_body_input_sensitive(name, jitted):
+    """Bodies must actually depend on their input (no constant folding)."""
+    x = model.golden_input(name)
+    y1 = np.asarray(jitted[name](x))
+    y2 = np.asarray(jitted[name](x + 0.37))
+    assert not np.allclose(y1, y2), f"{name} ignores its input"
+
+
+def test_golden_input_stable():
+    a = model.golden_input("temperature")
+    b = model.golden_input("temperature")
+    assert_allclose(a, b, rtol=0, atol=0)
+    c = model.golden_input("traffic")
+    assert not np.allclose(a, c)
+
+
+def test_aggregate_rows_are_distributions(jitted):
+    y = np.asarray(jitted["aggregate"](model.golden_input("aggregate")))
+    assert np.all(y >= 0)
+    assert_allclose(y.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_persist_histogram_mass(jitted):
+    y = np.asarray(jitted["persist"](model.golden_input("persist")))
+    # Each row is a normalized 8-bin histogram over IN_DIM samples.
+    assert np.all(y >= 0)
+    assert_allclose(y.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_tree_heavy_costlier_than_light():
+    """The async TREE branch must dominate compute (Fig. 4 caption)."""
+    light = jax.jit(model.BODIES["tree_light"]).lower(
+        jax.ShapeDtypeStruct((model.BATCH, model.IN_DIM), np.float32)
+    ).compile()
+    heavy = jax.jit(model.BODIES["tree_heavy"]).lower(
+        jax.ShapeDtypeStruct((model.BATCH, model.IN_DIM), np.float32)
+    ).compile()
+    lf = light.cost_analysis()
+    hf = heavy.cost_analysis()
+    if lf and hf and "flops" in lf and "flops" in hf:
+        assert hf["flops"] > 10 * lf["flops"]
+
+
+def test_ewma_matrix_is_causal_and_normalized():
+    mat = np.asarray(model._ewma_matrix(32, alpha=0.1))
+    assert mat.shape == (32, 32)
+    assert np.allclose(mat[np.tril_indices(32, -1)], 0.0)  # strictly-lower = 0
+    # Columns sum to 1: EWMA of a constant signal is that constant.
+    assert_allclose(mat.sum(axis=0), 1.0, rtol=1e-5)

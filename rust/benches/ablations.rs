@@ -1,0 +1,28 @@
+//! `cargo bench --bench ablations` — ABL-RATE / ABL-HOP / ABL-POLICY
+//! sweeps (DESIGN.md §4): sensitivity of the paper's claims to request
+//! rate, per-hop overhead, and fusion-policy knobs.  800 requests per
+//! point (PROVUSE_BENCH_FULL=1 for 2 000).
+
+use provuse::config::ComputeMode;
+use provuse::experiments::sweep;
+use provuse::util::bench::once;
+
+fn main() {
+    let requests = if std::env::var("PROVUSE_BENCH_FULL").is_ok() { 2_000 } else { 800 };
+    let compute = if std::path::Path::new("artifacts/manifest.json").exists() {
+        ComputeMode::Replay
+    } else {
+        ComputeMode::Disabled
+    };
+    let out = std::path::PathBuf::from("results/sweeps");
+
+    println!("== ablation sweeps ({requests} requests per point) ==\n");
+    for dim in ["rate", "hop", "policy"] {
+        let (result, _) = once(&format!("sweep `{dim}`"), || {
+            sweep::run(dim, &out, requests, compute).expect("sweep failed")
+        });
+        println!("{}", result.render());
+    }
+
+    println!("outputs written to {}", out.display());
+}

@@ -1,0 +1,171 @@
+//! `cargo bench --bench hotpath` — microbenchmarks of the request hot path
+//! and the merge pipeline's CPU work (DESIGN.md §Perf: the gateway+handler
+//! CPU overhead must be microseconds so the *modeled* hop costs dominate,
+//! as in the paper's testbed).
+
+use std::rc::Rc;
+
+use provuse::apps;
+use provuse::config::{ComputeMode, PlatformConfig, WorkloadConfig};
+use provuse::containerd::{ContainerRuntime, FsManifest};
+use provuse::exec::{run_virtual, Executor, Mode};
+use provuse::gateway::Gateway;
+use provuse::merger::fsunion;
+use provuse::platform::Platform;
+use provuse::runtime::ArtifactSet;
+use provuse::util::bench::bench;
+use provuse::util::json::Json;
+use provuse::util::rng::Rng;
+use provuse::workload::{self, request_payload};
+
+fn main() {
+    println!("== L3 hot-path microbenches ==");
+
+    // gateway resolve + swap
+    {
+        let cfg = Rc::new(PlatformConfig::tiny());
+        let rt = ContainerRuntime::new(cfg);
+        let img = rt.register_image(FsManifest::function_code("f", 64), vec![("f".into(), 9.0)]);
+        let (inst_a, inst_b) = run_virtual({
+            let rt = rt.clone();
+            async move { (rt.launch(img).unwrap(), rt.launch(img).unwrap()) }
+        });
+        let gw = Gateway::new();
+        for i in 0..64 {
+            gw.set_route(format!("fn{i}"), Rc::clone(&inst_a));
+        }
+        bench("gateway::resolve (64 routes)", 1_000, 100_000, || {
+            gw.resolve("fn42").unwrap()
+        });
+        let names: Vec<String> = (0..8).map(|i| format!("fn{i}")).collect();
+        let mut flip = false;
+        bench("gateway::swap_routes (8 functions)", 1_000, 50_000, || {
+            flip = !flip;
+            gw.swap_routes(&names, Rc::clone(if flip { &inst_b } else { &inst_a })).unwrap()
+        });
+    }
+
+    // merger fs union
+    {
+        let a = ("i1".to_string(), FsManifest::function_code("alpha", 120));
+        let b = ("i2".to_string(), FsManifest::function_code("beta", 140));
+        let parts = vec![a, b];
+        bench("fsunion::union_namespaced (2 fns)", 1_000, 50_000, || {
+            fsunion::union_namespaced(&parts)
+        });
+        // 8-function fused instance re-export
+        let big: Vec<(String, FsManifest)> = (0..8)
+            .map(|i| (format!("i{i}"), FsManifest::function_code(&format!("f{i}"), 100)))
+            .collect();
+        bench("fsunion::union_namespaced (8 fns)", 200, 10_000, || {
+            fsunion::union_namespaced(&big)
+        });
+    }
+
+    // payload derivation + response combine (per-call arithmetic);
+    // naive vs shipped (chunked) — §Perf L3-1 before/after
+    {
+        let out = vec![0.5f32; 64];
+        bench("payload tile 64->2048 (naive, pre-opt)", 1_000, 100_000, || {
+            let mut payload = vec![0.0f32; 2048];
+            for (i, slot) in payload.iter_mut().enumerate() {
+                *slot = out[i % out.len()] * 0.5;
+            }
+            payload
+        });
+        bench("payload tile 64->2048 (chunked, shipped)", 1_000, 100_000, || {
+            let mut payload = vec![0.0f32; 2048];
+            let scaled: Vec<f32> = out.iter().map(|v| v * 0.5).collect();
+            for chunk in payload.chunks_exact_mut(scaled.len()) {
+                chunk.copy_from_slice(&scaled);
+            }
+            payload
+        });
+    }
+
+    // RNG + latency sampling
+    {
+        let mut rng = Rng::new(7);
+        bench("rng lognormal sample", 1_000, 200_000, || rng.lognormal(2.0, 0.25));
+    }
+
+    // JSON (manifest-sized)
+    {
+        let text = Json::arr_f64((0..2048).map(|i| i as f64 * 0.5)).to_string();
+        bench("json parse 2048-float array", 100, 2_000, || Json::parse(&text).unwrap());
+    }
+
+    // executor primitives
+    {
+        bench("executor spawn+join (noop task)", 100, 5_000, || {
+            run_virtual(async {
+                let h = provuse::exec::spawn(async { 1u64 });
+                h.await
+            })
+        });
+        bench("executor 1k virtual sleeps", 5, 200, || {
+            run_virtual(async {
+                let handles: Vec<_> = (0..1000)
+                    .map(|i| provuse::exec::spawn(provuse::exec::sleep_ms((i % 97) as f64)))
+                    .collect();
+                for h in handles {
+                    h.await;
+                }
+            })
+        });
+    }
+
+    // PJRT compute bodies (the L1/L2 layers from the request path's view)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n== L1/L2 PJRT compute (per-invocation, CPU) ==");
+        let set = ArtifactSet::cached("artifacts").unwrap();
+        for name in set.names() {
+            let input = set.golden_input(name).unwrap().to_vec();
+            bench(&format!("pjrt execute `{name}`"), 20, 300, || {
+                set.execute(name, &input).unwrap()
+            });
+        }
+    } else {
+        eprintln!("artifacts/ missing; skipping PJRT benches");
+    }
+
+    // end-to-end single request, virtual time (full platform, replay)
+    {
+        println!("\n== end-to-end (virtual-clock wall cost per simulated request) ==");
+        let compute = if std::path::Path::new("artifacts/manifest.json").exists() {
+            ComputeMode::Replay
+        } else {
+            ComputeMode::Disabled
+        };
+        for (label, fusion) in [("vanilla", false), ("fused", true)] {
+            bench(&format!("simulate 100 iot requests ({label})"), 2, 10, || {
+                Executor::new(Mode::Virtual).block_on(async move {
+                    let mut cfg = PlatformConfig::tiny().with_compute(compute);
+                    cfg.latency.image_build_ms = 200.0;
+                    cfg.latency.boot_ms = 100.0;
+                    cfg.fusion.min_observations = 1;
+                    if !fusion {
+                        cfg = cfg.vanilla();
+                    }
+                    let p = Platform::deploy(apps::iot(), cfg).await.unwrap();
+                    let wl = WorkloadConfig {
+                        requests: 100,
+                        rate_rps: 50.0,
+                        seed: 3,
+                        timeout_ms: 60_000.0,
+                    };
+                    let r = workload::run(Rc::clone(&p), wl).await.unwrap();
+                    assert_eq!(r.failed, 0);
+                    p.shutdown();
+                })
+            });
+        }
+    }
+
+    // sanity guard for §Perf: per-request CPU budget
+    {
+        let payload = request_payload(1, 1, 2048);
+        assert_eq!(payload.len(), 2048);
+        println!("\nhotpath bench complete");
+    }
+}

@@ -1,0 +1,83 @@
+//! `cargo bench --bench paper_figures` — regenerates every table and
+//! figure of the paper's evaluation at bench scale (2 000 requests instead
+//! of 10 000; pass PROVUSE_BENCH_FULL=1 for the paper's exact workload)
+//! and reports measured-vs-paper values plus wall time per regeneration.
+//!
+//! FIG3/FIG4 (call graphs) are structural: regenerated as DOT + checked
+//! against the paper's fusion groups.  FIG5/FIG6/TAB-LAT/TAB-RAM run the
+//! platform matrix.
+
+use provuse::apps;
+use provuse::config::{ComputeMode, WorkloadConfig};
+use provuse::experiments::{fig5, fig6};
+use provuse::util::bench::once;
+
+fn workload() -> WorkloadConfig {
+    let full = std::env::var("PROVUSE_BENCH_FULL").is_ok();
+    let mut wl = WorkloadConfig::paper();
+    if !full {
+        wl.requests = 2_000;
+    }
+    wl
+}
+
+fn compute() -> ComputeMode {
+    // Replay keeps bench timing deterministic; artifacts must exist.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        ComputeMode::Replay
+    } else {
+        eprintln!("WARNING: artifacts/ missing, benching with compute disabled");
+        ComputeMode::Disabled
+    }
+}
+
+fn main() {
+    let wl = workload();
+    let compute = compute();
+    let out = std::path::PathBuf::from("results/bench");
+    println!(
+        "== paper figure regeneration ({} requests @ {} rps per run) ==\n",
+        wl.requests, wl.rate_rps
+    );
+
+    // ---- FIG3 / FIG4: call graphs -------------------------------------------
+    let (_, _) = once("FIG3: IOT call graph (DOT)", || {
+        let app = apps::iot();
+        let dot = app.to_dot();
+        assert!(dot.contains("cluster_"));
+        provuse::experiments::write_output(&out.join("fig3_iot.dot"), &dot).unwrap();
+        assert_eq!(app.sync_fusion_groups().len(), 2);
+    });
+    let (_, _) = once("FIG4: TREE call graph (DOT)", || {
+        let app = apps::tree();
+        provuse::experiments::write_output(&out.join("fig4_tree.dot"), &app.to_dot()).unwrap();
+        assert_eq!(app.sync_fusion_groups().len(), 2);
+    });
+    println!();
+
+    // ---- FIG5: IOT/tinyFaaS time series --------------------------------------
+    let (fig5_result, _) = once("FIG5: IOT/tinyFaaS vanilla+fusion series", || {
+        fig5::run(&out.join("fig5"), wl.clone(), compute).expect("fig5 failed")
+    });
+    println!("{}", fig5_result.render());
+
+    // ---- FIG6 + TAB-LAT + TAB-RAM: the 4-cell matrix -------------------------
+    let (fig6_result, _) = once("FIG6: 4-config matrix (8 runs)", || {
+        fig6::run(&out.join("fig6"), wl.clone(), compute).expect("fig6 failed")
+    });
+    println!("{}", fig6_result.render());
+    println!(
+        "TAB-RAM mean reduction: {:.1}% (paper 53.6%)\n",
+        fig6_result.mean_ram_reduction_pct()
+    );
+
+    // ---- headline check -------------------------------------------------------
+    let lat = fig6_result.mean_latency_reduction_pct();
+    let ram = fig6_result.mean_ram_reduction_pct();
+    println!("== headline vs paper ==");
+    println!("  mean latency reduction: {lat:.1}%  (paper: 26.3%)");
+    println!("  mean RAM reduction:     {ram:.1}%  (paper: 53.6%)");
+    assert!(lat > 10.0, "latency reduction shape lost");
+    assert!(ram > 25.0, "RAM reduction shape lost");
+    println!("\nshape PRESERVED: fusion wins every cell on both axes");
+}

@@ -1,0 +1,62 @@
+//! Parameterizable N-stage synchronous chain — not from the paper; used by
+//! the ablation sweeps (`provuse sweep`) to study how fusion benefit scales
+//! with sync-call depth, and by unit tests as a minimal workload.
+
+use super::spec::{AppSpec, CallMode, CallSpec, FunctionSpec};
+
+/// Build a chain `s0 ->sync s1 ->sync ... ->sync s{n-1}`.
+pub fn chain(n: usize) -> AppSpec {
+    assert!(n >= 1, "chain needs at least one stage");
+    let mut functions = Vec::new();
+    for i in 0..n {
+        let calls = if i + 1 < n {
+            vec![CallSpec { target: format!("s{}", i + 1), mode: CallMode::Sync, scale: 1.0 }]
+        } else {
+            Vec::new()
+        };
+        functions.push(FunctionSpec {
+            name: format!("s{i}"),
+            body: Some(if i % 2 == 0 { "tree_light" } else { "parse" }.into()),
+            busy_ms: 40.0,
+            code_mb: 12.0,
+            code_kb: 96,
+            trust_domain: "chain".into(),
+            calls,
+        });
+    }
+    AppSpec::new("chain", "s0", functions).expect("chain app is statically valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_structure() {
+        let app = chain(4);
+        assert_eq!(app.len(), 4);
+        assert_eq!(app.entry, "s0");
+        assert_eq!(app.function("s0").unwrap().calls[0].target, "s1");
+        assert!(app.function("s3").unwrap().calls.is_empty());
+    }
+
+    #[test]
+    fn whole_chain_is_one_fusion_group() {
+        let groups = chain(5).sync_fusion_groups();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].len(), 5);
+    }
+
+    #[test]
+    fn single_stage_chain() {
+        let app = chain(1);
+        assert_eq!(app.len(), 1);
+        assert!(app.sync_fusion_groups().len() == 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_stage_chain_panics() {
+        chain(0);
+    }
+}

@@ -1,0 +1,33 @@
+//! Benchmark applications (paper §5.1) + the application model.
+//!
+//! * [`tree`] — Fusionize++ TREE (Fig. 4): minimal fusion use case.
+//! * [`iot`] — Fusionize++ IOT (Fig. 3): realistic sensor pipeline.
+//! * [`chain`] — an N-stage sequential chain used by the ablation sweeps.
+
+mod spec;
+
+pub mod chain;
+pub mod iot;
+pub mod tree;
+
+pub use chain::chain;
+pub use iot::iot;
+pub use spec::{AppBuilder, AppSpec, CallMode, CallSpec, FnBuilder, FunctionSpec};
+pub use tree::tree;
+
+use crate::error::{Error, Result};
+
+/// Look an application up by CLI name.
+pub fn by_name(name: &str) -> Result<AppSpec> {
+    match name {
+        "tree" => Ok(tree()),
+        "iot" => Ok(iot()),
+        "chain" => Ok(chain(6)),
+        other => Err(Error::Config(format!(
+            "unknown app `{other}` (available: tree, iot, chain)"
+        ))),
+    }
+}
+
+/// All benchmark app names.
+pub const APP_NAMES: &[&str] = &["tree", "iot", "chain"];

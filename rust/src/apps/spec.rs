@@ -1,0 +1,458 @@
+//! Application model: a FaaS app as a set of independently deployed
+//! functions with typed call edges (DESIGN.md substitution #3).
+//!
+//! The fusion mechanism never inspects function code (the paper optimizes
+//! purely at the invocation level), so a function is fully described by
+//! (a) its call pattern — synchronous edges block the caller, asynchronous
+//! edges do not — and (b) its compute cost: a real AOT-compiled HLO body
+//! plus a calibrated busy-time term standing in for the I/O the paper's
+//! Python functions perform.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::error::{Error, Result};
+
+/// Whether an outbound call blocks the calling function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CallMode {
+    /// Caller blocks on the result (solid edges in Figs. 3-4); the response
+    /// feeds into the caller's own response. Fusion candidates.
+    Sync,
+    /// Fire-and-forget (dashed edges); does not affect the caller's
+    /// end-to-end latency. Never fused.
+    Async,
+}
+
+/// One outbound call edge.
+#[derive(Debug, Clone)]
+pub struct CallSpec {
+    pub target: String,
+    pub mode: CallMode,
+    /// linear transform applied when deriving the child payload from the
+    /// caller's compute output (keeps data flow deterministic + non-trivial)
+    pub scale: f32,
+}
+
+/// One deployable function.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub name: String,
+    /// AOT artifact executed as the compute body (None = pure orchestration)
+    pub body: Option<String>,
+    /// calibrated extra busy time (ms) modeling the paper functions' I/O +
+    /// processing not captured by the HLO body
+    pub busy_ms: f64,
+    /// code + dependency RAM footprint (MiB)
+    pub code_mb: f64,
+    /// code size on disk (KiB) for the image manifest
+    pub code_kb: u64,
+    /// trust domain label (paper §6: fusion restricted to one domain)
+    pub trust_domain: String,
+    /// outbound calls; all Sync calls are issued concurrently and joined,
+    /// then Async calls are detached (Figs. 3-4 semantics)
+    pub calls: Vec<CallSpec>,
+}
+
+/// A composed FaaS application.
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub name: String,
+    pub entry: String,
+    functions: BTreeMap<String, FunctionSpec>,
+}
+
+impl AppSpec {
+    /// Build + validate. Rejects: missing entry, dangling call targets,
+    /// duplicate functions, self-calls, and call cycles (FaaS workflows in
+    /// the paper's model are DAGs).
+    pub fn new(
+        name: impl Into<String>,
+        entry: impl Into<String>,
+        functions: Vec<FunctionSpec>,
+    ) -> Result<Self> {
+        let name = name.into();
+        let entry = entry.into();
+        let mut map = BTreeMap::new();
+        for f in functions {
+            if map.insert(f.name.clone(), f).is_some() {
+                return Err(Error::Config(format!("duplicate function in `{name}`")));
+            }
+        }
+        let app = AppSpec { name, entry, functions: map };
+        app.validate()?;
+        Ok(app)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !self.functions.contains_key(&self.entry) {
+            return Err(Error::Config(format!(
+                "entry `{}` not defined in app `{}`",
+                self.entry, self.name
+            )));
+        }
+        for f in self.functions.values() {
+            for c in &f.calls {
+                if c.target == f.name {
+                    return Err(Error::Config(format!("`{}` calls itself", f.name)));
+                }
+                if !self.functions.contains_key(&c.target) {
+                    return Err(Error::Config(format!(
+                        "`{}` calls undefined `{}`",
+                        f.name, c.target
+                    )));
+                }
+            }
+        }
+        // cycle detection (DFS, three-color)
+        #[derive(Clone, Copy, PartialEq)]
+        enum Color {
+            White,
+            Grey,
+            Black,
+        }
+        fn visit(
+            app: &AppSpec,
+            node: &str,
+            colors: &mut BTreeMap<String, Color>,
+        ) -> Result<()> {
+            colors.insert(node.into(), Color::Grey);
+            for c in &app.functions[node].calls {
+                match colors.get(c.target.as_str()).copied().unwrap_or(Color::White) {
+                    Color::Grey => {
+                        return Err(Error::Config(format!(
+                            "call cycle through `{}` in app `{}`",
+                            c.target, app.name
+                        )))
+                    }
+                    Color::White => visit(app, &c.target, colors)?,
+                    Color::Black => {}
+                }
+            }
+            colors.insert(node.into(), Color::Black);
+            Ok(())
+        }
+        let mut colors = BTreeMap::new();
+        for name in self.functions.keys() {
+            if colors.get(name.as_str()).copied().unwrap_or(Color::White) == Color::White {
+                visit(self, name, &mut colors)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn function(&self, name: &str) -> Result<&FunctionSpec> {
+        self.functions
+            .get(name)
+            .ok_or_else(|| Error::NoRoute(name.to_string()))
+    }
+
+    pub fn functions(&self) -> impl Iterator<Item = &FunctionSpec> {
+        self.functions.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.functions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.functions.is_empty()
+    }
+
+    /// The theoretical fusion groups (dashed shapes in Figs. 3-4):
+    /// connected components of the sync-edge subgraph, restricted to shared
+    /// trust domains — what a perfect run of the platform converges to.
+    pub fn sync_fusion_groups(&self) -> Vec<Vec<String>> {
+        let mut parent: BTreeMap<&str, &str> = BTreeMap::new();
+        fn find<'a>(parent: &BTreeMap<&'a str, &'a str>, mut x: &'a str) -> &'a str {
+            while parent[x] != x {
+                x = parent[x];
+            }
+            x
+        }
+        for name in self.functions.keys() {
+            parent.insert(name, name);
+        }
+        for f in self.functions.values() {
+            for c in &f.calls {
+                if c.mode == CallMode::Sync {
+                    let target = &self.functions[&c.target];
+                    if target.trust_domain != f.trust_domain {
+                        continue;
+                    }
+                    let ra = find(&parent, f.name.as_str());
+                    let rb = find(&parent, c.target.as_str());
+                    if ra != rb {
+                        parent.insert(ra, rb);
+                    }
+                }
+            }
+        }
+        let mut groups: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+        for name in self.functions.keys() {
+            groups.entry(find(&parent, name)).or_default().push(name.clone());
+        }
+        let mut out: Vec<Vec<String>> = groups.into_values().collect();
+        for g in &mut out {
+            g.sort();
+        }
+        out.sort();
+        out
+    }
+
+    /// Functions whose critical path (sync closure from the entry) includes
+    /// them — i.e. they affect end-to-end latency.
+    pub fn sync_reachable_from_entry(&self) -> HashSet<String> {
+        let mut seen = HashSet::new();
+        let mut stack = vec![self.entry.clone()];
+        while let Some(f) = stack.pop() {
+            if !seen.insert(f.clone()) {
+                continue;
+            }
+            for c in &self.functions[&f].calls {
+                if c.mode == CallMode::Sync {
+                    stack.push(c.target.clone());
+                }
+            }
+        }
+        seen
+    }
+
+    /// Graphviz DOT rendering (Figs. 3-4 regeneration:
+    /// `provuse apps --graph <name>`).
+    pub fn to_dot(&self) -> String {
+        let mut out = format!("digraph {} {{\n  rankdir=TB;\n", self.name);
+        out.push_str(&format!("  \"{}\" [shape=doublecircle];\n", self.entry));
+        for f in self.functions.values() {
+            for c in &f.calls {
+                let style = match c.mode {
+                    CallMode::Sync => "solid",
+                    CallMode::Async => "dashed",
+                };
+                out.push_str(&format!(
+                    "  \"{}\" -> \"{}\" [style={style}];\n",
+                    f.name, c.target
+                ));
+            }
+        }
+        for (i, group) in self.sync_fusion_groups().iter().enumerate() {
+            if group.len() > 1 {
+                out.push_str(&format!(
+                    "  subgraph cluster_{i} {{ style=dashed; label=\"fusion group\"; {} }}\n",
+                    group
+                        .iter()
+                        .map(|g| format!("\"{g}\";"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                ));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// builder (public API for custom apps — see examples/custom_app.rs)
+// ---------------------------------------------------------------------------
+
+/// Fluent builder for [`AppSpec`].
+pub struct AppBuilder {
+    name: String,
+    entry: Option<String>,
+    functions: Vec<FunctionSpec>,
+}
+
+impl AppSpec {
+    pub fn builder(name: impl Into<String>) -> AppBuilder {
+        AppBuilder { name: name.into(), entry: None, functions: Vec::new() }
+    }
+}
+
+impl AppBuilder {
+    /// Add a function; the first one added becomes the entry unless
+    /// [`FnBuilder::entry`] marks another.
+    pub fn function(self, name: impl Into<String>) -> FnBuilder {
+        FnBuilder {
+            app: self,
+            spec: FunctionSpec {
+                name: name.into(),
+                body: None,
+                busy_ms: 10.0,
+                code_mb: 9.0,
+                code_kb: 64,
+                trust_domain: "default".into(),
+                calls: Vec::new(),
+            },
+            is_entry: false,
+        }
+    }
+
+    pub fn build(self) -> Result<AppSpec> {
+        let entry = self
+            .entry
+            .clone()
+            .or_else(|| self.functions.first().map(|f| f.name.clone()))
+            .ok_or_else(|| Error::Config("app has no functions".into()))?;
+        AppSpec::new(self.name, entry, self.functions)
+    }
+}
+
+/// Builder for one function; `done()` returns to the app builder.
+pub struct FnBuilder {
+    app: AppBuilder,
+    spec: FunctionSpec,
+    is_entry: bool,
+}
+
+impl FnBuilder {
+    pub fn entry(mut self) -> Self {
+        self.is_entry = true;
+        self
+    }
+
+    /// Attach an AOT compute body (artifact name from the manifest).
+    pub fn body(mut self, artifact: impl Into<String>) -> Self {
+        self.spec.body = Some(artifact.into());
+        self
+    }
+
+    pub fn busy_ms(mut self, ms: f64) -> Self {
+        self.spec.busy_ms = ms;
+        self
+    }
+
+    pub fn code_mb(mut self, mb: f64) -> Self {
+        self.spec.code_mb = mb;
+        self
+    }
+
+    pub fn code_kb(mut self, kb: u64) -> Self {
+        self.spec.code_kb = kb;
+        self
+    }
+
+    pub fn trust_domain(mut self, domain: impl Into<String>) -> Self {
+        self.spec.trust_domain = domain.into();
+        self
+    }
+
+    pub fn sync_call(mut self, target: impl Into<String>) -> Self {
+        self.spec.calls.push(CallSpec { target: target.into(), mode: CallMode::Sync, scale: 1.0 });
+        self
+    }
+
+    pub fn async_call(mut self, target: impl Into<String>) -> Self {
+        self.spec.calls.push(CallSpec {
+            target: target.into(),
+            mode: CallMode::Async,
+            scale: 1.0,
+        });
+        self
+    }
+
+    pub fn done(mut self) -> AppBuilder {
+        let name = self.spec.name.clone();
+        self.app.functions.push(self.spec);
+        if self.is_entry {
+            self.app.entry = Some(name);
+        }
+        self.app
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_fn_app() -> AppSpec {
+        AppSpec::builder("t")
+            .function("a").entry().sync_call("b").done()
+            .function("b").done()
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_and_accessors() {
+        let app = two_fn_app();
+        assert_eq!(app.entry, "a");
+        assert_eq!(app.len(), 2);
+        assert_eq!(app.function("a").unwrap().calls.len(), 1);
+        assert!(app.function("zz").is_err());
+    }
+
+    #[test]
+    fn rejects_dangling_target() {
+        let r = AppSpec::builder("t").function("a").sync_call("ghost").done().build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_self_call() {
+        let r = AppSpec::builder("t").function("a").sync_call("a").done().build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_cycles() {
+        let r = AppSpec::builder("t")
+            .function("a").entry().sync_call("b").done()
+            .function("b").async_call("c").done()
+            .function("c").sync_call("a").done()
+            .build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_function() {
+        let r = AppSpec::builder("t").function("a").done().function("a").done().build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fusion_groups_follow_sync_edges() {
+        let app = AppSpec::builder("t")
+            .function("a").entry().sync_call("b").async_call("c").done()
+            .function("b").sync_call("d").done()
+            .function("c").done()
+            .function("d").done()
+            .build()
+            .unwrap();
+        let groups = app.sync_fusion_groups();
+        assert!(groups.contains(&vec!["a".into(), "b".into(), "d".into()]));
+        assert!(groups.contains(&vec!["c".into()]));
+    }
+
+    #[test]
+    fn fusion_groups_respect_trust_domains() {
+        let app = AppSpec::builder("t")
+            .function("a").entry().trust_domain("x").sync_call("b").done()
+            .function("b").trust_domain("y").done()
+            .build()
+            .unwrap();
+        let groups = app.sync_fusion_groups();
+        assert_eq!(groups.len(), 2);
+    }
+
+    #[test]
+    fn sync_reachability() {
+        let app = AppSpec::builder("t")
+            .function("a").entry().sync_call("b").async_call("c").done()
+            .function("b").done()
+            .function("c").sync_call("d").done()
+            .function("d").done()
+            .build()
+            .unwrap();
+        let r = app.sync_reachable_from_entry();
+        assert!(r.contains("a") && r.contains("b"));
+        assert!(!r.contains("c") && !r.contains("d"));
+    }
+
+    #[test]
+    fn dot_contains_styles_and_cluster() {
+        let dot = two_fn_app().to_dot();
+        assert!(dot.contains("style=solid"));
+        assert!(dot.contains("cluster_"));
+        assert!(dot.contains("doublecircle"));
+    }
+}

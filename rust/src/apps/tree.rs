@@ -1,0 +1,100 @@
+//! The TREE application from Fusionize++ (paper Fig. 4).
+//!
+//! > "A synchronously invokes B, which calls D and E, while A also triggers
+//! > an asynchronous branch via C to F and G. The asynchronous path
+//! > dominates the workload, requiring far more computation than the
+//! > synchronous branch."
+//!
+//! Theoretical fusion groups (dashed in the figure): the synchronous
+//! component {A, B, D, E} and the C-side component {C, F, G} (C's own
+//! downstream calls are synchronous; only A→C is asynchronous).  busy-time
+//! calibration targets the paper's vanilla median of ~452 ms (DESIGN.md §5).
+
+use super::spec::{AppSpec, CallMode, CallSpec, FunctionSpec};
+
+fn f(
+    name: &str,
+    body: &str,
+    busy_ms: f64,
+    calls: Vec<(&str, CallMode)>,
+) -> FunctionSpec {
+    FunctionSpec {
+        name: name.into(),
+        body: Some(body.into()),
+        busy_ms,
+        code_mb: 20.0,
+        code_kb: 180,
+        trust_domain: "tree".into(),
+        calls: calls
+            .into_iter()
+            .map(|(t, mode)| CallSpec { target: t.into(), mode, scale: 1.0 })
+            .collect(),
+    }
+}
+
+/// Build the TREE application.
+pub fn tree() -> AppSpec {
+    use CallMode::*;
+    AppSpec::new(
+        "tree",
+        "a",
+        vec![
+            f("a", "tree_light", 60.0, vec![("b", Sync), ("c", Async)]),
+            f("b", "tree_light", 110.0, vec![("d", Sync), ("e", Sync)]),
+            f("d", "tree_light", 100.0, vec![]),
+            f("e", "tree_light", 110.0, vec![]),
+            // asynchronous branch: far more computation (heavy bodies)
+            f("c", "tree_heavy", 300.0, vec![("f", Sync), ("g", Sync)]),
+            f("f", "tree_heavy", 500.0, vec![]),
+            f("g", "tree_heavy", 450.0, vec![]),
+        ],
+    )
+    .expect("tree app is statically valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_figure4() {
+        let app = tree();
+        assert_eq!(app.entry, "a");
+        assert_eq!(app.len(), 7);
+        let a = app.function("a").unwrap();
+        assert_eq!(a.calls.len(), 2);
+        assert!(a.calls.iter().any(|c| c.target == "b" && c.mode == CallMode::Sync));
+        assert!(a.calls.iter().any(|c| c.target == "c" && c.mode == CallMode::Async));
+    }
+
+    #[test]
+    fn fusion_groups_match_figure4() {
+        let groups = tree().sync_fusion_groups();
+        assert!(groups.contains(&vec!["a".into(), "b".into(), "d".into(), "e".into()]));
+        assert!(groups.contains(&vec!["c".into(), "f".into(), "g".into()]));
+        assert_eq!(groups.len(), 2);
+    }
+
+    #[test]
+    fn async_branch_dominates_compute() {
+        let app = tree();
+        let sync_busy: f64 = ["a", "b", "d", "e"]
+            .iter()
+            .map(|n| app.function(n).unwrap().busy_ms)
+            .sum();
+        let async_busy: f64 = ["c", "f", "g"]
+            .iter()
+            .map(|n| app.function(n).unwrap().busy_ms)
+            .sum();
+        assert!(async_busy > 2.0 * sync_busy);
+        // and heavy bodies on the async branch
+        assert_eq!(app.function("f").unwrap().body.as_deref(), Some("tree_heavy"));
+    }
+
+    #[test]
+    fn latency_critical_path_excludes_async_branch() {
+        let reach = tree().sync_reachable_from_entry();
+        assert_eq!(reach.len(), 4);
+        assert!(!reach.contains("c"));
+    }
+}

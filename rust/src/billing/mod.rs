@@ -1,0 +1,153 @@
+//! Billing model — the paper's economic motivation, quantified.
+//!
+//! FaaS platforms bill per invocation: `duration x allocated memory` plus
+//! a per-invocation fee (§2.3).  In composed applications a synchronous
+//! call *double-bills*: the caller's instance is billed while it blocks on
+//! the callee (Baldini et al.'s serverless trilemma).  Fusion eliminates
+//! the inner invocations entirely — an inlined call is neither a billed
+//! invocation nor a separately billed wait.
+//!
+//! The platform records one [`BillingEvent`] per **remote arrival** (what
+//! a provider meters), with the serving instance's allocation.  Cost is
+//! evaluated against a provider-style [`CostModel`].
+
+use crate::metrics::Recorder;
+
+/// One billed invocation.
+#[derive(Debug, Clone)]
+pub struct BillingEvent {
+    pub function: String,
+    /// billed duration (ms): dispatch + execution incl. blocking waits
+    pub duration_ms: f64,
+    /// memory allocation of the serving instance (GiB)
+    pub alloc_gb: f64,
+}
+
+impl BillingEvent {
+    pub fn gb_seconds(&self) -> f64 {
+        self.duration_ms / 1e3 * self.alloc_gb
+    }
+}
+
+/// Provider price sheet (defaults are AWS-Lambda-like list prices).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// $ per GiB-second of billed duration
+    pub per_gb_second: f64,
+    /// $ per million invocations
+    pub per_million_invocations: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { per_gb_second: 0.0000166667, per_million_invocations: 0.20 }
+    }
+}
+
+/// Aggregate bill over a run.
+#[derive(Debug, Clone, Default)]
+pub struct Bill {
+    pub invocations: u64,
+    pub gb_seconds: f64,
+}
+
+impl Bill {
+    pub fn from_events(events: &[BillingEvent]) -> Bill {
+        Bill {
+            invocations: events.len() as u64,
+            gb_seconds: events.iter().map(|e| e.gb_seconds()).sum(),
+        }
+    }
+
+    /// Dollar cost under `model`.
+    pub fn cost(&self, model: &CostModel) -> f64 {
+        self.gb_seconds * model.per_gb_second
+            + self.invocations as f64 / 1e6 * model.per_million_invocations
+    }
+
+    /// Cost per thousand application requests.
+    pub fn cost_per_kreq(&self, model: &CostModel, requests: u64) -> f64 {
+        if requests == 0 {
+            return f64::NAN;
+        }
+        self.cost(model) * 1e3 / requests as f64
+    }
+}
+
+/// Recorder extension: billing events ride the counters-free side channel.
+#[derive(Clone, Default)]
+pub struct BillingLedger {
+    events: std::rc::Rc<std::cell::RefCell<Vec<BillingEvent>>>,
+}
+
+impl BillingLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, event: BillingEvent) {
+        self.events.borrow_mut().push(event);
+    }
+
+    pub fn events(&self) -> Vec<BillingEvent> {
+        self.events.borrow().clone()
+    }
+
+    pub fn bill(&self) -> Bill {
+        Bill::from_events(&self.events.borrow())
+    }
+
+    /// Billed GiB-seconds attributed to one function name.
+    pub fn gb_seconds_for(&self, function: &str) -> f64 {
+        self.events
+            .borrow()
+            .iter()
+            .filter(|e| e.function == function)
+            .map(|e| e.gb_seconds())
+            .sum()
+    }
+
+    pub fn attach_summary(&self, metrics: &Recorder) {
+        let bill = self.bill();
+        for _ in 0..bill.invocations {
+            metrics.bump("billed_invocations");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gb_seconds_math() {
+        let e = BillingEvent { function: "f".into(), duration_ms: 2_000.0, alloc_gb: 0.5 };
+        assert!((e.gb_seconds() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bill_cost() {
+        let events = vec![
+            BillingEvent { function: "a".into(), duration_ms: 1_000.0, alloc_gb: 1.0 },
+            BillingEvent { function: "b".into(), duration_ms: 500.0, alloc_gb: 2.0 },
+        ];
+        let bill = Bill::from_events(&events);
+        assert_eq!(bill.invocations, 2);
+        assert!((bill.gb_seconds - 2.0).abs() < 1e-12);
+        let m = CostModel::default();
+        let expected = 2.0 * m.per_gb_second + 2.0 / 1e6 * m.per_million_invocations;
+        assert!((bill.cost(&m) - expected).abs() < 1e-15);
+        assert!(bill.cost_per_kreq(&m, 0).is_nan());
+    }
+
+    #[test]
+    fn ledger_per_function_attribution() {
+        let l = BillingLedger::new();
+        l.record(BillingEvent { function: "a".into(), duration_ms: 1_000.0, alloc_gb: 1.0 });
+        l.record(BillingEvent { function: "a".into(), duration_ms: 1_000.0, alloc_gb: 1.0 });
+        l.record(BillingEvent { function: "b".into(), duration_ms: 1_000.0, alloc_gb: 0.25 });
+        assert!((l.gb_seconds_for("a") - 2.0).abs() < 1e-12);
+        assert!((l.gb_seconds_for("b") - 0.25).abs() < 1e-12);
+        assert_eq!(l.bill().invocations, 3);
+    }
+}

@@ -1,0 +1,349 @@
+//! Platform and experiment configuration with the calibration defaults from
+//! DESIGN.md §5.  All latency/RAM knobs are data, not code: the benchmark
+//! harness sweeps them (`provuse sweep`) to probe the sensitivity of the
+//! paper's claims.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Which FaaS platform flavor to assemble (paper §4: tinyFaaS + Kubernetes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    /// tinyFaaS-like: single-binary gateway, direct container dispatch.
+    Tiny,
+    /// Kubernetes-like: Service VIP indirection, reconciler-driven deploys.
+    Kube,
+}
+
+impl PlatformKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlatformKind::Tiny => "tinyfaas",
+            PlatformKind::Kube => "kubernetes",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "tiny" | "tinyfaas" => Ok(PlatformKind::Tiny),
+            "kube" | "kubernetes" | "k8s" => Ok(PlatformKind::Kube),
+            other => Err(Error::Config(format!("unknown platform `{other}`"))),
+        }
+    }
+}
+
+/// How function compute bodies are executed on the request path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// Execute the HLO artifact through PJRT on every invocation.
+    Live,
+    /// Execute each artifact once at deploy time; replay its output and
+    /// charge its profiled duration per invocation (deterministic timing,
+    /// used by the large experiment sweeps).
+    Replay,
+    /// No PJRT at all: charge only spec busy-time (pure-coordination unit
+    /// tests that must not depend on `artifacts/`).
+    Disabled,
+}
+
+/// Latency fabric calibration (virtual-time milliseconds). See DESIGN.md §5.
+#[derive(Debug, Clone)]
+pub struct LatencyParams {
+    /// gateway route lookup + request admission
+    pub gateway_ms: f64,
+    /// Kubernetes Service VIP / kube-proxy hop (0 for tiny)
+    pub service_indirection_ms: f64,
+    /// median one-way network latency between instances
+    pub net_hop_ms: f64,
+    /// lognormal sigma of network latency
+    pub net_sigma: f64,
+    /// envelope (de)serialization fixed cost per remote call
+    pub serialize_base_ms: f64,
+    /// (de)serialization per-KiB cost
+    pub serialize_per_kb_ms: f64,
+    /// handler dispatch overhead per invocation (python shim in the paper)
+    pub dispatch_ms: f64,
+    /// gaussian jitter std on dispatch
+    pub dispatch_sigma: f64,
+    /// cost of an inlined (fused, same-process) call
+    pub inline_call_ms: f64,
+    /// container/pod boot latency
+    pub boot_ms: f64,
+    /// fused image export+union+build latency
+    pub image_build_ms: f64,
+    /// interval between health checks of a booting instance
+    pub health_interval_ms: f64,
+    /// consecutive successes required before traffic cutover
+    pub health_checks_required: u32,
+    /// reconciler poll interval (Kube only; 0 = direct)
+    pub reconcile_interval_ms: f64,
+}
+
+/// Instance RAM model (MiB). See DESIGN.md §5.
+#[derive(Debug, Clone)]
+pub struct RamParams {
+    /// language runtime + Function Handler baseline per instance
+    pub base_instance_mb: f64,
+    /// default code+deps footprint per function (specs may override)
+    pub per_function_mb: f64,
+    /// transient working set per in-flight request
+    pub working_per_request_mb: f64,
+    /// RAM ledger sampling interval
+    pub sample_interval_ms: f64,
+}
+
+/// Fusion policy knobs (paper §3: Merger admission).
+#[derive(Debug, Clone)]
+pub struct FusionParams {
+    /// master switch: false = vanilla deployment
+    pub enabled: bool,
+    /// sync-call observations of a pair before requesting fusion
+    pub min_observations: u32,
+    /// per-pair cooldown after a failed/aborted fusion
+    pub cooldown_ms: f64,
+    /// allow fused instances to keep growing (A+B then AB+C)
+    pub transitive: bool,
+    /// restrict fusion to functions in the same trust domain (paper §6)
+    pub respect_trust_domains: bool,
+    /// upper bound on functions per fused instance (0 = unlimited)
+    pub max_group_size: usize,
+}
+
+/// Complete platform assembly configuration.
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    pub kind: PlatformKind,
+    pub latency: LatencyParams,
+    pub ram: RamParams,
+    pub fusion: FusionParams,
+    pub compute: ComputeMode,
+    /// directory containing `manifest.json` + HLO artifacts
+    pub artifacts_dir: String,
+    pub seed: u64,
+}
+
+impl PlatformConfig {
+    /// tinyFaaS-flavored calibration (DESIGN.md §5).
+    pub fn tiny() -> Self {
+        PlatformConfig {
+            kind: PlatformKind::Tiny,
+            latency: LatencyParams {
+                gateway_ms: 5.0,
+                service_indirection_ms: 0.0,
+                net_hop_ms: 2.0,
+                net_sigma: 0.25,
+                serialize_base_ms: 1.5,
+                serialize_per_kb_ms: 0.06,
+                dispatch_ms: 45.0,
+                dispatch_sigma: 4.0,
+                inline_call_ms: 0.05,
+                boot_ms: 1_200.0,
+                image_build_ms: 4_000.0,
+                health_interval_ms: 250.0,
+                health_checks_required: 2,
+                reconcile_interval_ms: 0.0,
+            },
+            ram: RamParams {
+                base_instance_mb: 58.0,
+                per_function_mb: 9.0,
+                working_per_request_mb: 1.5,
+                sample_interval_ms: 1_000.0,
+            },
+            fusion: FusionParams::default_enabled(),
+            compute: ComputeMode::Replay,
+            artifacts_dir: "artifacts".into(),
+            seed: 7,
+        }
+    }
+
+    /// Kubernetes-flavored calibration (DESIGN.md §5).
+    pub fn kube() -> Self {
+        let mut c = Self::tiny();
+        c.kind = PlatformKind::Kube;
+        c.latency.gateway_ms = 6.0;
+        c.latency.service_indirection_ms = 6.0;
+        c.latency.net_hop_ms = 2.5;
+        c.latency.net_sigma = 0.30;
+        c.latency.boot_ms = 2_800.0;
+        c.latency.reconcile_interval_ms = 500.0;
+        c.ram.base_instance_mb = 72.0;
+        c
+    }
+
+    pub fn of_kind(kind: PlatformKind) -> Self {
+        match kind {
+            PlatformKind::Tiny => Self::tiny(),
+            PlatformKind::Kube => Self::kube(),
+        }
+    }
+
+    /// Vanilla (fusion disabled) variant of this config.
+    pub fn vanilla(mut self) -> Self {
+        self.fusion.enabled = false;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_compute(mut self, mode: ComputeMode) -> Self {
+        self.compute = mode;
+        self
+    }
+
+    /// Uniformly scale every latency parameter (e.g. 0.1 for a snappy
+    /// real-time demo of the live HTTP gateway).
+    pub fn scale_latency(mut self, factor: f64) -> Self {
+        let l = &mut self.latency;
+        for v in [
+            &mut l.gateway_ms,
+            &mut l.service_indirection_ms,
+            &mut l.net_hop_ms,
+            &mut l.serialize_base_ms,
+            &mut l.serialize_per_kb_ms,
+            &mut l.dispatch_ms,
+            &mut l.dispatch_sigma,
+            &mut l.inline_call_ms,
+            &mut l.boot_ms,
+            &mut l.image_build_ms,
+            &mut l.health_interval_ms,
+            &mut l.reconcile_interval_ms,
+        ] {
+            *v *= factor;
+        }
+        self
+    }
+}
+
+impl FusionParams {
+    pub fn default_enabled() -> Self {
+        FusionParams {
+            enabled: true,
+            min_observations: 3,
+            cooldown_ms: 10_000.0,
+            transitive: true,
+            respect_trust_domains: true,
+            max_group_size: 0,
+        }
+    }
+
+    pub fn disabled() -> Self {
+        FusionParams { enabled: false, ..Self::default_enabled() }
+    }
+}
+
+/// One benchmark run (paper §5.1: 10 000 requests at 5 rps).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// total requests to issue
+    pub requests: u64,
+    /// constant open-loop arrival rate (requests/second)
+    pub rate_rps: f64,
+    /// workload generator seed (payload + arrival jitter)
+    pub seed: u64,
+    /// per-request response deadline; exceeding counts as failure
+    pub timeout_ms: f64,
+}
+
+impl WorkloadConfig {
+    /// The paper's exact workload: 10 000 requests @ 5 rps.
+    pub fn paper() -> Self {
+        WorkloadConfig { requests: 10_000, rate_rps: 5.0, seed: 1, timeout_ms: 60_000.0 }
+    }
+
+    /// Scaled-down workload for quick tests.
+    pub fn smoke(requests: u64) -> Self {
+        WorkloadConfig { requests, rate_rps: 20.0, seed: 1, timeout_ms: 60_000.0 }
+    }
+}
+
+impl PlatformConfig {
+    /// Serialize the calibration to JSON (CLI `--dump-config`).
+    pub fn to_json(&self) -> Json {
+        let l = &self.latency;
+        let r = &self.ram;
+        let f = &self.fusion;
+        Json::obj(vec![
+            ("platform", Json::str(self.kind.name())),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "latency_ms",
+                Json::obj(vec![
+                    ("gateway", Json::Num(l.gateway_ms)),
+                    ("service_indirection", Json::Num(l.service_indirection_ms)),
+                    ("net_hop", Json::Num(l.net_hop_ms)),
+                    ("net_sigma", Json::Num(l.net_sigma)),
+                    ("serialize_base", Json::Num(l.serialize_base_ms)),
+                    ("serialize_per_kb", Json::Num(l.serialize_per_kb_ms)),
+                    ("dispatch", Json::Num(l.dispatch_ms)),
+                    ("dispatch_sigma", Json::Num(l.dispatch_sigma)),
+                    ("inline_call", Json::Num(l.inline_call_ms)),
+                    ("boot", Json::Num(l.boot_ms)),
+                    ("image_build", Json::Num(l.image_build_ms)),
+                    ("health_interval", Json::Num(l.health_interval_ms)),
+                    ("reconcile_interval", Json::Num(l.reconcile_interval_ms)),
+                ]),
+            ),
+            (
+                "ram_mb",
+                Json::obj(vec![
+                    ("base_instance", Json::Num(r.base_instance_mb)),
+                    ("per_function", Json::Num(r.per_function_mb)),
+                    ("working_per_request", Json::Num(r.working_per_request_mb)),
+                ]),
+            ),
+            (
+                "fusion",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(f.enabled)),
+                    ("min_observations", Json::Num(f.min_observations as f64)),
+                    ("cooldown_ms", Json::Num(f.cooldown_ms)),
+                    ("transitive", Json::Bool(f.transitive)),
+                    ("max_group_size", Json::Num(f.max_group_size as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kube_is_heavier_than_tiny() {
+        let t = PlatformConfig::tiny();
+        let k = PlatformConfig::kube();
+        assert!(k.latency.gateway_ms >= t.latency.gateway_ms);
+        assert!(k.latency.service_indirection_ms > 0.0);
+        assert!(k.latency.boot_ms > t.latency.boot_ms);
+        assert!(k.ram.base_instance_mb > t.ram.base_instance_mb);
+    }
+
+    #[test]
+    fn vanilla_disables_fusion_only() {
+        let c = PlatformConfig::tiny().vanilla();
+        assert!(!c.fusion.enabled);
+        assert_eq!(c.latency.gateway_ms, PlatformConfig::tiny().latency.gateway_ms);
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(PlatformKind::parse("k8s").unwrap(), PlatformKind::Kube);
+        assert_eq!(PlatformKind::parse("tinyfaas").unwrap(), PlatformKind::Tiny);
+        assert!(PlatformKind::parse("lambda").is_err());
+    }
+
+    #[test]
+    fn config_json_dump_parses() {
+        let j = PlatformConfig::kube().to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("platform").unwrap().as_str().unwrap(), "kubernetes");
+        assert!(
+            v.get("latency_ms").unwrap().get("service_indirection").unwrap().as_f64().unwrap()
+                > 0.0
+        );
+    }
+}

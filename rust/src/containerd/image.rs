@@ -1,0 +1,193 @@
+//! Images as content-addressed filesystem manifests.
+//!
+//! The Merger's filesystem-union step operates on these: `FsManifest` is the
+//! simulated analog of a container filesystem export, and the
+//! collision-preserving union (paper §3: "the Merger preserves the original
+//! identifiers of each function instance while copying them into the shared
+//! file system") lives in `merger::fsunion` on top of these primitives.
+
+/// Unique image identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ImageId(pub u64);
+
+impl std::fmt::Display for ImageId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "img-{}", self.0)
+    }
+}
+
+/// One file inside a container filesystem.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileEntry {
+    /// absolute path inside the container
+    pub path: String,
+    /// file size (KiB) — drives image-size accounting
+    pub size_kb: u64,
+    /// content digest (synthetic; collisions model identical files)
+    pub digest: u64,
+}
+
+/// A container filesystem as a sorted list of file entries.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FsManifest {
+    entries: Vec<FileEntry>,
+}
+
+impl FsManifest {
+    pub fn new(mut entries: Vec<FileEntry>) -> Self {
+        entries.sort_by(|a, b| a.path.cmp(&b.path));
+        entries.dedup_by(|a, b| a.path == b.path);
+        FsManifest { entries }
+    }
+
+    /// Synthesize the filesystem of a single deployed function: language
+    /// runtime layer + handler shim + the function's code directory.  The
+    /// layout mirrors the paper's bring-your-own-code model where the
+    /// platform owns the entry point and the code lives in a predictable
+    /// directory.
+    pub fn function_code(name: &str, code_kb: u64) -> Self {
+        let digest = fnv1a(name.as_bytes());
+        FsManifest::new(vec![
+            FileEntry {
+                path: "/runtime/python3.11".into(),
+                size_kb: 48_000,
+                digest: 0xBA5E,
+            },
+            FileEntry {
+                path: "/platform/handler.py".into(),
+                size_kb: 64,
+                digest: 0x4A4D,
+            },
+            FileEntry {
+                path: format!("/app/{name}/main.py"),
+                size_kb: code_kb,
+                digest,
+            },
+            FileEntry {
+                path: format!("/app/{name}/requirements.txt"),
+                size_kb: 1,
+                digest: digest ^ 0xDEAD,
+            },
+        ])
+    }
+
+    pub fn entries(&self) -> &[FileEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn total_kb(&self) -> u64 {
+        self.entries.iter().map(|e| e.size_kb).sum()
+    }
+
+    pub fn contains_path(&self, path: &str) -> bool {
+        self.entries.binary_search_by(|e| e.path.as_str().cmp(path)).is_ok()
+    }
+
+    pub fn get(&self, path: &str) -> Option<&FileEntry> {
+        self.entries
+            .binary_search_by(|e| e.path.as_str().cmp(path))
+            .ok()
+            .map(|i| &self.entries[i])
+    }
+
+    /// Paths under a prefix (e.g. all code of one function).
+    pub fn under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a FileEntry> + 'a {
+        self.entries.iter().filter(move |e| e.path.starts_with(prefix))
+    }
+}
+
+/// An image: a filesystem plus the functions it hosts.
+#[derive(Debug, Clone)]
+pub struct Image {
+    pub id: ImageId,
+    pub manifest: FsManifest,
+    /// (function name, code+deps RAM footprint MiB)
+    pub functions: Vec<(String, f64)>,
+}
+
+impl Image {
+    pub fn code_ram_mb(&self) -> f64 {
+        self.functions.iter().map(|(_, mb)| mb).sum()
+    }
+
+    pub fn hosts(&self, function: &str) -> bool {
+        self.functions.iter().any(|(f, _)| f == function)
+    }
+}
+
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_sorted_and_deduped() {
+        let m = FsManifest::new(vec![
+            FileEntry { path: "/b".into(), size_kb: 1, digest: 1 },
+            FileEntry { path: "/a".into(), size_kb: 2, digest: 2 },
+            FileEntry { path: "/b".into(), size_kb: 3, digest: 3 },
+        ]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.entries()[0].path, "/a");
+        assert!(m.contains_path("/b"));
+        assert!(!m.contains_path("/c"));
+    }
+
+    #[test]
+    fn function_code_layout() {
+        let m = FsManifest::function_code("temperature", 120);
+        assert!(m.contains_path("/app/temperature/main.py"));
+        assert!(m.contains_path("/platform/handler.py"));
+        assert!(m.contains_path("/runtime/python3.11"));
+        assert_eq!(m.get("/app/temperature/main.py").unwrap().size_kb, 120);
+    }
+
+    #[test]
+    fn distinct_functions_distinct_digests() {
+        let a = FsManifest::function_code("a", 10);
+        let b = FsManifest::function_code("b", 10);
+        assert_ne!(
+            a.get("/app/a/main.py").unwrap().digest,
+            b.get("/app/b/main.py").unwrap().digest
+        );
+        // shared runtime layer has identical digest (dedupable)
+        assert_eq!(
+            a.get("/runtime/python3.11").unwrap().digest,
+            b.get("/runtime/python3.11").unwrap().digest
+        );
+    }
+
+    #[test]
+    fn under_prefix() {
+        let m = FsManifest::function_code("x", 10);
+        assert_eq!(m.under("/app/x/").count(), 2);
+        assert_eq!(m.under("/nope").count(), 0);
+    }
+
+    #[test]
+    fn image_accessors() {
+        let img = Image {
+            id: ImageId(1),
+            manifest: FsManifest::function_code("a", 1),
+            functions: vec![("a".into(), 9.0), ("b".into(), 6.5)],
+        };
+        assert!((img.code_ram_mb() - 15.5).abs() < 1e-12);
+        assert!(img.hosts("a") && img.hosts("b") && !img.hosts("c"));
+    }
+}

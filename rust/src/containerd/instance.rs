@@ -1,0 +1,250 @@
+//! Instance lifecycle state machine + per-instance RAM accounting.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use super::image::{Image, ImageId};
+use crate::config::PlatformConfig;
+use crate::error::{Error, Result};
+use crate::exec::sync::Gauge;
+
+/// Unique instance identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId(pub u64);
+
+impl std::fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "inst-{}", self.0)
+    }
+}
+
+/// Lifecycle:
+/// `Booting -> Healthy -> Draining -> Terminated`; any live state may also
+/// jump directly to `Terminated` on a rollback of a never-routed instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    Booting,
+    Healthy,
+    Draining,
+    Terminated,
+}
+
+impl InstanceState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InstanceState::Booting => "Booting",
+            InstanceState::Healthy => "Healthy",
+            InstanceState::Draining => "Draining",
+            InstanceState::Terminated => "Terminated",
+        }
+    }
+
+    pub fn is_live(&self) -> bool {
+        !matches!(self, InstanceState::Terminated)
+    }
+}
+
+/// One container instance.
+pub struct Instance {
+    id: InstanceId,
+    image: Rc<Image>,
+    config: Rc<PlatformConfig>,
+    state: Cell<InstanceState>,
+    /// in-flight request gauge (awaitable for drain)
+    inflight: Gauge,
+    /// lifetime request count (merge observability)
+    served: Cell<u64>,
+}
+
+impl Instance {
+    pub(crate) fn new(id: InstanceId, image: Rc<Image>, config: Rc<PlatformConfig>) -> Self {
+        Instance {
+            id,
+            image,
+            config,
+            state: Cell::new(InstanceState::Booting),
+            inflight: Gauge::new(),
+            served: Cell::new(0),
+        }
+    }
+
+    pub fn id(&self) -> InstanceId {
+        self.id
+    }
+
+    pub fn image(&self) -> ImageId {
+        self.image.id
+    }
+
+    /// Functions hosted by this instance (name, code MiB).
+    pub fn functions(&self) -> &[(String, f64)] {
+        &self.image.functions
+    }
+
+    pub fn hosts(&self, function: &str) -> bool {
+        self.image.hosts(function)
+    }
+
+    pub fn state(&self) -> InstanceState {
+        self.state.get()
+    }
+
+    pub fn inflight(&self) -> i64 {
+        self.inflight.value()
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served.get()
+    }
+
+    /// Static memory allocation (MiB) a provider would bill this instance
+    /// at: base runtime + hosted code (no transient working sets).
+    pub fn alloc_mb(&self) -> f64 {
+        self.config.ram.base_instance_mb + self.image.code_ram_mb()
+    }
+
+    /// RAM footprint (MiB): base runtime + hosted code + in-flight working
+    /// sets.  Fusion saves the `(N-1) * base` term — the paper's §5.2 RAM
+    /// reduction.
+    pub fn ram_mb(&self) -> f64 {
+        if !self.state.get().is_live() {
+            return 0.0;
+        }
+        let r = &self.config.ram;
+        r.base_instance_mb
+            + self.image.code_ram_mb()
+            + self.inflight.value() as f64 * r.working_per_request_mb
+    }
+
+    // -- request accounting ---------------------------------------------------
+
+    pub fn request_started(&self) {
+        self.inflight.add(1);
+        self.served.set(self.served.get() + 1);
+    }
+
+    pub fn request_finished(&self) {
+        self.inflight.sub(1);
+    }
+
+    /// Await zero in-flight requests (merge drain step).
+    pub async fn drained(&self) {
+        self.inflight.wait_zero().await;
+    }
+
+    // -- lifecycle transitions -------------------------------------------------
+
+    pub(crate) fn mark_healthy(&self) {
+        // A hung/rolled-back instance may have been terminated while booting.
+        if self.state.get() == InstanceState::Booting {
+            self.state.set(InstanceState::Healthy);
+        }
+    }
+
+    /// Stop accepting new traffic (router must already point elsewhere).
+    pub fn begin_drain(&self) -> Result<()> {
+        match self.state.get() {
+            InstanceState::Healthy | InstanceState::Booting => {
+                self.state.set(InstanceState::Draining);
+                Ok(())
+            }
+            s => Err(Error::BadTransition {
+                instance: self.id.0,
+                from: s.name(),
+                to: "Draining",
+            }),
+        }
+    }
+
+    pub(crate) fn mark_terminated(&self) -> Result<()> {
+        match self.state.get() {
+            InstanceState::Draining | InstanceState::Booting => {
+                self.state.set(InstanceState::Terminated);
+                Ok(())
+            }
+            InstanceState::Healthy => Err(Error::BadTransition {
+                instance: self.id.0,
+                from: "Healthy",
+                to: "Terminated (must drain first)",
+            }),
+            InstanceState::Terminated => Ok(()), // idempotent
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::containerd::FsManifest;
+
+    fn instance() -> Instance {
+        let config = Rc::new(PlatformConfig::tiny());
+        let image = Rc::new(Image {
+            id: ImageId(1),
+            manifest: FsManifest::function_code("a", 10),
+            functions: vec![("a".into(), 9.0)],
+        });
+        Instance::new(InstanceId(1), image, config)
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let i = instance();
+        assert_eq!(i.state(), InstanceState::Booting);
+        i.mark_healthy();
+        assert_eq!(i.state(), InstanceState::Healthy);
+        i.begin_drain().unwrap();
+        assert_eq!(i.state(), InstanceState::Draining);
+        i.mark_terminated().unwrap();
+        assert_eq!(i.state(), InstanceState::Terminated);
+        assert!(!i.state().is_live());
+    }
+
+    #[test]
+    fn healthy_cannot_terminate_directly() {
+        let i = instance();
+        i.mark_healthy();
+        assert!(i.mark_terminated().is_err());
+    }
+
+    #[test]
+    fn drain_from_terminated_fails() {
+        let i = instance();
+        i.begin_drain().unwrap();
+        i.mark_terminated().unwrap();
+        assert!(i.begin_drain().is_err());
+    }
+
+    #[test]
+    fn terminated_instance_has_zero_ram() {
+        let i = instance();
+        i.mark_healthy();
+        assert!(i.ram_mb() > 0.0);
+        i.begin_drain().unwrap();
+        i.mark_terminated().unwrap();
+        assert_eq!(i.ram_mb(), 0.0);
+    }
+
+    #[test]
+    fn ram_includes_inflight_working_sets() {
+        let i = instance();
+        i.mark_healthy();
+        let idle = i.ram_mb();
+        i.request_started();
+        i.request_started();
+        assert!((i.ram_mb() - idle - 3.0).abs() < 1e-12); // 2 x 1.5 MiB
+        i.request_finished();
+        i.request_finished();
+        assert_eq!(i.ram_mb(), idle);
+        assert_eq!(i.served(), 2);
+    }
+
+    #[test]
+    fn healthy_after_terminate_is_noop() {
+        let i = instance();
+        i.begin_drain().unwrap();
+        i.mark_terminated().unwrap();
+        i.mark_healthy(); // must not resurrect
+        assert_eq!(i.state(), InstanceState::Terminated);
+    }
+}

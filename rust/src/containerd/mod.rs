@@ -1,0 +1,301 @@
+//! Simulated container runtime (DESIGN.md substitution #1).
+//!
+//! The paper's Merger manipulates real containers: it exports their
+//! filesystems, unions them, builds a new image, deploys it, and terminates
+//! the originals.  This module reproduces that control surface — images as
+//! content-addressed layer manifests, instances as lifecycle state machines
+//! with calibrated boot/build latencies and a RAM ledger — so the Merger
+//! exercises the identical control flow with synthetic bytes.
+
+mod image;
+mod instance;
+
+pub use image::{FileEntry, FsManifest, Image, ImageId};
+pub use instance::{Instance, InstanceId, InstanceState};
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::config::PlatformConfig;
+use crate::error::{Error, Result};
+use crate::exec;
+
+/// Functions hosted by an image: (function name, code+deps footprint MiB).
+pub type HostedFunctions = Vec<(String, f64)>;
+
+/// Handle to the simulated container runtime (cheaply clonable).
+#[derive(Clone)]
+pub struct ContainerRuntime {
+    inner: Rc<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    config: Rc<PlatformConfig>,
+    images: RefCell<HashMap<ImageId, Rc<Image>>>,
+    instances: RefCell<HashMap<InstanceId, Rc<Instance>>>,
+    next_image: Cell<u64>,
+    next_instance: Cell<u64>,
+    /// fault injection: number of upcoming builds that must fail
+    failing_builds: Cell<u32>,
+    /// fault injection: number of upcoming launches that never get healthy
+    hanging_boots: Cell<u32>,
+}
+
+impl ContainerRuntime {
+    pub fn new(config: Rc<PlatformConfig>) -> Self {
+        ContainerRuntime {
+            inner: Rc::new(RuntimeInner {
+                config,
+                images: RefCell::new(HashMap::new()),
+                instances: RefCell::new(HashMap::new()),
+                next_image: Cell::new(1),
+                next_instance: Cell::new(1),
+                failing_builds: Cell::new(0),
+                hanging_boots: Cell::new(0),
+            }),
+        }
+    }
+
+    // -- images --------------------------------------------------------------
+
+    /// Register a pre-built image (initial function deployment artifacts
+    /// exist before the experiment starts; no build cost).
+    pub fn register_image(&self, manifest: FsManifest, functions: HostedFunctions) -> ImageId {
+        let id = ImageId(self.inner.next_image.get());
+        self.inner.next_image.set(id.0 + 1);
+        let image = Rc::new(Image { id, manifest, functions });
+        self.inner.images.borrow_mut().insert(id, image);
+        id
+    }
+
+    /// Build a new image at runtime (the Merger's fused images): charges the
+    /// calibrated export+union+build latency on the virtual clock.
+    pub async fn build_image(
+        &self,
+        manifest: FsManifest,
+        functions: HostedFunctions,
+    ) -> Result<ImageId> {
+        exec::sleep_ms(self.inner.config.latency.image_build_ms).await;
+        if self.inner.failing_builds.get() > 0 {
+            self.inner.failing_builds.set(self.inner.failing_builds.get() - 1);
+            return Err(Error::FusionAborted("injected image build failure".into()));
+        }
+        Ok(self.register_image(manifest, functions))
+    }
+
+    pub fn image(&self, id: ImageId) -> Result<Rc<Image>> {
+        self.inner
+            .images
+            .borrow()
+            .get(&id)
+            .cloned()
+            .ok_or(Error::UnknownImage(id.0))
+    }
+
+    /// Export a live instance's filesystem (the Merger's first step).
+    pub fn export_fs(&self, instance: &Instance) -> Result<FsManifest> {
+        let image = self.image(instance.image())?;
+        Ok(image.manifest.clone())
+    }
+
+    // -- instances -----------------------------------------------------------
+
+    /// Start a container from `image`. Returns immediately with the handle
+    /// in `Booting` state; a background task flips it to `Healthy` after the
+    /// calibrated boot latency (or never, under injected boot hangs).
+    pub fn launch(&self, image_id: ImageId) -> Result<Rc<Instance>> {
+        let image = self.image(image_id)?;
+        let id = InstanceId(self.inner.next_instance.get());
+        self.inner.next_instance.set(id.0 + 1);
+        let instance = Rc::new(Instance::new(id, image, self.inner.config.clone()));
+        self.inner.instances.borrow_mut().insert(id, Rc::clone(&instance));
+
+        let hang = self.inner.hanging_boots.get() > 0;
+        if hang {
+            self.inner.hanging_boots.set(self.inner.hanging_boots.get() - 1);
+        }
+        let boot_ms = self.inner.config.latency.boot_ms;
+        let inst = Rc::clone(&instance);
+        exec::spawn(async move {
+            if hang {
+                return; // stays Booting forever (fault injection)
+            }
+            exec::sleep_ms(boot_ms).await;
+            inst.mark_healthy();
+        });
+        Ok(instance)
+    }
+
+    pub fn instance(&self, id: InstanceId) -> Result<Rc<Instance>> {
+        self.inner
+            .instances
+            .borrow()
+            .get(&id)
+            .cloned()
+            .ok_or(Error::UnknownInstance(id.0))
+    }
+
+    /// Probe an instance's health endpoint (charged a trivial cost by the
+    /// caller's polling interval, not here).
+    pub fn health_check(&self, instance: &Instance) -> bool {
+        instance.state() == InstanceState::Healthy
+    }
+
+    /// Terminate an instance (caller must have drained it; termination of a
+    /// draining instance with in-flight requests is a platform bug).
+    pub fn terminate(&self, instance: &Instance) -> Result<()> {
+        if instance.inflight() > 0 {
+            return Err(Error::BadTransition {
+                instance: instance.id().0,
+                from: instance.state().name(),
+                to: "Terminated (inflight > 0)",
+            });
+        }
+        instance.mark_terminated()
+    }
+
+    /// All live (non-terminated) instances.
+    pub fn live_instances(&self) -> Vec<Rc<Instance>> {
+        self.inner
+            .instances
+            .borrow()
+            .values()
+            .filter(|i| i.state() != InstanceState::Terminated)
+            .cloned()
+            .collect()
+    }
+
+    /// Total platform RAM across live instances (MiB) — the paper's
+    /// resource-efficiency metric.
+    pub fn total_ram_mb(&self) -> f64 {
+        self.live_instances().iter().map(|i| i.ram_mb()).sum()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live_instances().len()
+    }
+
+    // -- fault injection -------------------------------------------------------
+
+    pub fn inject_build_failures(&self, n: u32) {
+        self.inner.failing_builds.set(self.inner.failing_builds.get() + n);
+    }
+
+    pub fn inject_boot_hangs(&self, n: u32) {
+        self.inner.hanging_boots.set(self.inner.hanging_boots.get() + n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{now, run_virtual};
+
+    fn runtime() -> ContainerRuntime {
+        ContainerRuntime::new(Rc::new(PlatformConfig::tiny()))
+    }
+
+    fn manifest_for(name: &str) -> FsManifest {
+        FsManifest::function_code(name, 42)
+    }
+
+    #[test]
+    fn launch_becomes_healthy_after_boot() {
+        run_virtual(async {
+            let rt = runtime();
+            let img = rt.register_image(manifest_for("a"), vec![("a".into(), 9.0)]);
+            let inst = rt.launch(img).unwrap();
+            assert_eq!(inst.state(), InstanceState::Booting);
+            assert!(!rt.health_check(&inst));
+            exec::sleep_ms(1_300.0).await;
+            assert_eq!(inst.state(), InstanceState::Healthy);
+            assert!(rt.health_check(&inst));
+            assert_eq!(now().as_millis_f64(), 1_300.0);
+        });
+    }
+
+    #[test]
+    fn build_charges_latency() {
+        run_virtual(async {
+            let rt = runtime();
+            let t0 = now().as_millis_f64();
+            let img = rt
+                .build_image(manifest_for("ab"), vec![("a".into(), 9.0), ("b".into(), 9.0)])
+                .await
+                .unwrap();
+            assert_eq!(now().as_millis_f64() - t0, 4_000.0);
+            assert_eq!(rt.image(img).unwrap().functions.len(), 2);
+        });
+    }
+
+    #[test]
+    fn injected_build_failure() {
+        run_virtual(async {
+            let rt = runtime();
+            rt.inject_build_failures(1);
+            let r = rt.build_image(manifest_for("x"), vec![("x".into(), 1.0)]).await;
+            assert!(r.is_err());
+            // next build succeeds
+            let r = rt.build_image(manifest_for("x"), vec![("x".into(), 1.0)]).await;
+            assert!(r.is_ok());
+        });
+    }
+
+    #[test]
+    fn injected_boot_hang_never_heals() {
+        run_virtual(async {
+            let rt = runtime();
+            let img = rt.register_image(manifest_for("a"), vec![("a".into(), 9.0)]);
+            rt.inject_boot_hangs(1);
+            let inst = rt.launch(img).unwrap();
+            exec::sleep_ms(60_000.0).await;
+            assert_eq!(inst.state(), InstanceState::Booting);
+        });
+    }
+
+    #[test]
+    fn ram_ledger_counts_live_instances() {
+        run_virtual(async {
+            let rt = runtime();
+            let img = rt.register_image(manifest_for("a"), vec![("a".into(), 9.0)]);
+            let i1 = rt.launch(img).unwrap();
+            let i2 = rt.launch(img).unwrap();
+            exec::sleep_ms(2_000.0).await;
+            // 2 instances x (58 base + 9 code)
+            assert!((rt.total_ram_mb() - 2.0 * 67.0).abs() < 1e-9);
+            i1.begin_drain().unwrap();
+            rt.terminate(&i1).unwrap();
+            assert!((rt.total_ram_mb() - 67.0).abs() < 1e-9);
+            assert_eq!(rt.live_count(), 1);
+            drop(i2);
+        });
+    }
+
+    #[test]
+    fn terminate_with_inflight_fails() {
+        run_virtual(async {
+            let rt = runtime();
+            let img = rt.register_image(manifest_for("a"), vec![("a".into(), 9.0)]);
+            let inst = rt.launch(img).unwrap();
+            exec::sleep_ms(1_500.0).await;
+            inst.request_started();
+            inst.begin_drain().unwrap();
+            assert!(rt.terminate(&inst).is_err());
+            inst.request_finished();
+            assert!(rt.terminate(&inst).is_ok());
+        });
+    }
+
+    #[test]
+    fn export_fs_returns_image_manifest() {
+        run_virtual(async {
+            let rt = runtime();
+            let m = manifest_for("a");
+            let img = rt.register_image(m.clone(), vec![("a".into(), 9.0)]);
+            let inst = rt.launch(img).unwrap();
+            let exported = rt.export_fs(&inst).unwrap();
+            assert_eq!(exported, m);
+        });
+    }
+}

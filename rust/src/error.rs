@@ -1,0 +1,70 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the Provuse platform and its substrates.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// A function name was not found in the routing table.
+    #[error("no route for function `{0}`")]
+    NoRoute(String),
+
+    /// An instance id did not resolve to a live instance.
+    #[error("unknown instance `{0}`")]
+    UnknownInstance(u64),
+
+    /// An image id did not resolve to a stored image.
+    #[error("unknown image `{0}`")]
+    UnknownImage(u64),
+
+    /// Lifecycle transition not allowed from the current state.
+    #[error("invalid lifecycle transition for instance {instance}: {from} -> {to}")]
+    BadTransition {
+        instance: u64,
+        from: &'static str,
+        to: &'static str,
+    },
+
+    /// The merger declined or aborted a fusion.
+    #[error("fusion aborted: {0}")]
+    FusionAborted(String),
+
+    /// Health checks did not pass within the deadline.
+    #[error("health check timeout for instance {0}")]
+    HealthTimeout(u64),
+
+    /// Artifact loading / PJRT failure.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Compute body unknown to the artifact set.
+    #[error("unknown compute body `{0}`")]
+    UnknownBody(String),
+
+    /// JSON parse error (hand-rolled parser in `util::json`).
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Configuration problem.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Request failed (dropped, instance terminated mid-flight, ...).
+    #[error("request failed: {0}")]
+    Request(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Error bubbled up from the `xla` crate.
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

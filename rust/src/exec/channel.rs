@@ -1,0 +1,284 @@
+//! Async channels for the in-repo executor: `oneshot` and unbounded `mpsc`.
+//!
+//! Both are `Mutex`-based so their `Sender` halves are usable from external
+//! OS threads (the real-time HTTP front end); receivers must live on the
+//! executor thread.
+
+use std::collections::VecDeque;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
+
+// ---------------------------------------------------------------------------
+// oneshot
+// ---------------------------------------------------------------------------
+
+/// Create a oneshot channel.
+pub fn oneshot<T>() -> (OneshotSender<T>, OneshotReceiver<T>) {
+    let state = Arc::new(Mutex::new(OneshotState {
+        value: None,
+        waker: None,
+        closed: false,
+    }));
+    (
+        OneshotSender { state: Arc::clone(&state) },
+        OneshotReceiver { state },
+    )
+}
+
+struct OneshotState<T> {
+    value: Option<T>,
+    waker: Option<Waker>,
+    closed: bool,
+}
+
+pub struct OneshotSender<T> {
+    state: Arc<Mutex<OneshotState<T>>>,
+}
+
+/// Error: the receiving half was dropped.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+impl<T> OneshotSender<T> {
+    /// Deliver the value; fails if the receiver is gone.
+    pub fn send(self, value: T) -> Result<(), Closed> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(Closed);
+        }
+        s.value = Some(value);
+        if let Some(w) = s.waker.take() {
+            w.wake();
+        }
+        Ok(())
+    }
+}
+
+impl<T> Drop for OneshotSender<T> {
+    fn drop(&mut self) {
+        let mut s = self.state.lock().unwrap();
+        if s.value.is_none() {
+            s.closed = true;
+            if let Some(w) = s.waker.take() {
+                w.wake();
+            }
+        }
+    }
+}
+
+pub struct OneshotReceiver<T> {
+    state: Arc<Mutex<OneshotState<T>>>,
+}
+
+impl<T> Drop for OneshotReceiver<T> {
+    fn drop(&mut self) {
+        self.state.lock().unwrap().closed = true;
+    }
+}
+
+impl<T> Future for OneshotReceiver<T> {
+    type Output = Result<T, Closed>;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut s = self.state.lock().unwrap();
+        if let Some(v) = s.value.take() {
+            return Poll::Ready(Ok(v));
+        }
+        if s.closed {
+            return Poll::Ready(Err(Closed));
+        }
+        s.waker = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unbounded mpsc
+// ---------------------------------------------------------------------------
+
+/// Create an unbounded mpsc channel.
+pub fn mpsc<T>() -> (Sender<T>, Receiver<T>) {
+    let state = Arc::new(Mutex::new(MpscState {
+        queue: VecDeque::new(),
+        waker: None,
+        senders: 1,
+        receiver_alive: true,
+    }));
+    (
+        Sender { state: Arc::clone(&state) },
+        Receiver { state },
+    )
+}
+
+struct MpscState<T> {
+    queue: VecDeque<T>,
+    waker: Option<Waker>,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+pub struct Sender<T> {
+    state: Arc<Mutex<MpscState<T>>>,
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.state.lock().unwrap().senders += 1;
+        Sender { state: Arc::clone(&self.state) }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut s = self.state.lock().unwrap();
+        s.senders -= 1;
+        if s.senders == 0 {
+            if let Some(w) = s.waker.take() {
+                w.wake();
+            }
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Enqueue a message; fails if the receiver was dropped.
+    pub fn send(&self, value: T) -> Result<(), Closed> {
+        let mut s = self.state.lock().unwrap();
+        if !s.receiver_alive {
+            return Err(Closed);
+        }
+        s.queue.push_back(value);
+        if let Some(w) = s.waker.take() {
+            w.wake();
+        }
+        Ok(())
+    }
+}
+
+pub struct Receiver<T> {
+    state: Arc<Mutex<MpscState<T>>>,
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.state.lock().unwrap().receiver_alive = false;
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Await the next message; `None` once all senders are gone and the
+    /// queue is drained.
+    pub fn recv(&mut self) -> Recv<'_, T> {
+        Recv { receiver: self }
+    }
+
+    /// Non-blocking poll of the queue.
+    pub fn try_recv(&mut self) -> Option<T> {
+        self.state.lock().unwrap().queue.pop_front()
+    }
+}
+
+pub struct Recv<'a, T> {
+    receiver: &'a mut Receiver<T>,
+}
+
+impl<T> Future for Recv<'_, T> {
+    type Output = Option<T>;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut s = self.receiver.state.lock().unwrap();
+        if let Some(v) = s.queue.pop_front() {
+            return Poll::Ready(Some(v));
+        }
+        if s.senders == 0 {
+            return Poll::Ready(None);
+        }
+        s.waker = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{run_virtual, sleep_ms, spawn};
+
+    #[test]
+    fn oneshot_roundtrip() {
+        run_virtual(async {
+            let (tx, rx) = oneshot();
+            spawn(async move {
+                sleep_ms(5.0).await;
+                tx.send(42).unwrap();
+            });
+            assert_eq!(rx.await, Ok(42));
+        });
+    }
+
+    #[test]
+    fn oneshot_sender_drop_closes() {
+        run_virtual(async {
+            let (tx, rx) = oneshot::<u32>();
+            spawn(async move {
+                sleep_ms(1.0).await;
+                drop(tx);
+            });
+            assert_eq!(rx.await, Err(Closed));
+        });
+    }
+
+    #[test]
+    fn oneshot_receiver_drop_fails_send() {
+        let (tx, rx) = oneshot::<u32>();
+        drop(rx);
+        assert_eq!(tx.send(1), Err(Closed));
+    }
+
+    #[test]
+    fn mpsc_fifo_across_tasks() {
+        run_virtual(async {
+            let (tx, mut rx) = mpsc();
+            for i in 0..3u64 {
+                let tx = tx.clone();
+                spawn(async move {
+                    sleep_ms(i as f64).await;
+                    tx.send(i).unwrap();
+                });
+            }
+            drop(tx);
+            let mut got = Vec::new();
+            while let Some(v) = rx.recv().await {
+                got.push(v);
+            }
+            assert_eq!(got, vec![0, 1, 2]);
+        });
+    }
+
+    #[test]
+    fn mpsc_close_on_all_senders_dropped() {
+        run_virtual(async {
+            let (tx, mut rx) = mpsc::<u8>();
+            let tx2 = tx.clone();
+            drop(tx);
+            tx2.send(9).unwrap();
+            drop(tx2);
+            assert_eq!(rx.recv().await, Some(9));
+            assert_eq!(rx.recv().await, None);
+        });
+    }
+
+    #[test]
+    fn mpsc_send_to_dropped_receiver_errors() {
+        let (tx, rx) = mpsc::<u8>();
+        drop(rx);
+        assert!(tx.send(1).is_err());
+    }
+
+    #[test]
+    fn mpsc_try_recv() {
+        let (tx, mut rx) = mpsc::<u8>();
+        assert_eq!(rx.try_recv(), None);
+        tx.send(3).unwrap();
+        assert_eq!(rx.try_recv(), Some(3));
+    }
+}

@@ -1,0 +1,674 @@
+//! Single-threaded async executor with a **virtual clock** (discrete-event
+//! semantics) or a real clock — the substrate the whole platform runs on
+//! (the offline crate set has no tokio).
+//!
+//! * **Virtual mode** (experiments, tests, benches): `sleep()` registers a
+//!   timer; when no task is runnable the clock jumps to the next deadline.
+//!   The paper's 2 000-second workload executes in wall-milliseconds and
+//!   every run is deterministic.
+//! * **Real mode** (the live HTTP gateway example): the same timer wheel is
+//!   driven off `std::time::Instant`, and external OS threads (TCP accept
+//!   loops) can inject wakeups through the thread-safe wake queue.
+//!
+//! Tasks are plain non-`Send` futures (`Rc`-friendly platform state);
+//! wakers are `Send` as the contract requires — they only push a task id
+//! onto a mutex-protected queue.
+
+pub mod channel;
+pub mod sync;
+
+use std::cell::{Cell, RefCell};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Waker};
+use std::time::{Duration, Instant};
+
+/// Clock mode for an [`Executor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Discrete-event virtual time: idle executor jumps to the next timer.
+    Virtual,
+    /// Wall-clock time: idle executor parks until the next timer/wakeup.
+    Real,
+}
+
+/// Nanosecond-resolution instant on the executor's clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimInstant(pub u64);
+
+impl SimInstant {
+    pub fn duration_since(&self, earlier: SimInstant) -> Duration {
+        Duration::from_nanos(self.0.saturating_sub(earlier.0))
+    }
+    pub fn as_secs_f64(&self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn as_millis_f64(&self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wake queue (thread-safe so Waker is genuinely Send)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct WakeQueue {
+    queue: Mutex<VecDeque<u64>>,
+    condvar: Condvar,
+}
+
+impl WakeQueue {
+    fn push(&self, id: u64) {
+        self.queue.lock().unwrap().push_back(id);
+        self.condvar.notify_one();
+    }
+    /// Move all pending wakeups into `buf` (reused across loop iterations
+    /// to keep the scheduler allocation-free at steady state).
+    fn drain_into(&self, buf: &mut Vec<u64>) {
+        let mut q = self.queue.lock().unwrap();
+        buf.extend(q.drain(..));
+    }
+}
+
+struct TaskWaker {
+    id: u64,
+    queue: Arc<WakeQueue>,
+}
+
+impl std::task::Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        self.queue.push(self.id);
+    }
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.queue.push(self.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// executor core
+// ---------------------------------------------------------------------------
+
+struct TimerEntry {
+    deadline: u64,
+    seq: u64,
+    waker: Waker,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.deadline, self.seq).cmp(&(other.deadline, other.seq))
+    }
+}
+
+type LocalFuture = Pin<Box<dyn Future<Output = ()>>>;
+
+struct TaskEntry {
+    future: LocalFuture,
+    /// created once per task; cloning is a refcount bump, not an alloc
+    waker: Waker,
+}
+
+struct Inner {
+    mode: Mode,
+    now_ns: Cell<u64>,
+    real_anchor: Instant,
+    next_task_id: Cell<u64>,
+    next_timer_seq: Cell<u64>,
+    tasks: RefCell<HashMap<u64, TaskEntry>>,
+    /// tasks spawned while the executor is mid-poll (picked up next loop)
+    incoming: RefCell<Vec<(u64, LocalFuture)>>,
+    timers: RefCell<BinaryHeap<Reverse<TimerEntry>>>,
+    wake_queue: Arc<WakeQueue>,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Rc<Inner>>> = const { RefCell::new(None) };
+}
+
+fn with_current<T>(f: impl FnOnce(&Rc<Inner>) -> T) -> T {
+    CURRENT.with(|c| {
+        let borrowed = c.borrow();
+        let inner = borrowed
+            .as_ref()
+            .expect("no executor running on this thread (use Executor::block_on)");
+        f(inner)
+    })
+}
+
+/// The executor. Create one per experiment / test.
+pub struct Executor {
+    inner: Rc<Inner>,
+}
+
+impl Executor {
+    pub fn new(mode: Mode) -> Self {
+        Executor {
+            inner: Rc::new(Inner {
+                mode,
+                now_ns: Cell::new(0),
+                real_anchor: Instant::now(),
+                next_task_id: Cell::new(1),
+                next_timer_seq: Cell::new(0),
+                tasks: RefCell::new(HashMap::new()),
+                incoming: RefCell::new(Vec::new()),
+                timers: RefCell::new(BinaryHeap::new()),
+                wake_queue: Arc::new(WakeQueue::default()),
+            }),
+        }
+    }
+
+    /// Handle external threads can use to wake the executor (real mode).
+    pub fn remote(&self) -> Remote {
+        Remote { queue: Arc::clone(&self.inner.wake_queue) }
+    }
+
+    /// Drive `root` to completion, running all spawned tasks.
+    pub fn block_on<T: 'static>(&self, root: impl Future<Output = T> + 'static) -> T {
+        let guard = CurrentGuard::install(Rc::clone(&self.inner));
+        let result: Rc<RefCell<Option<T>>> = Rc::new(RefCell::new(None));
+        let result2 = Rc::clone(&result);
+        let root_id = self.inner.spawn_inner(async move {
+            *result2.borrow_mut() = Some(root.await);
+        });
+        self.inner.wake_queue.push(root_id);
+
+        let mut ready: Vec<u64> = Vec::new();
+        loop {
+            // move freshly spawned tasks into the task table
+            {
+                let mut incoming = self.inner.incoming.borrow_mut();
+                if !incoming.is_empty() {
+                    let mut tasks = self.inner.tasks.borrow_mut();
+                    for (id, future) in incoming.drain(..) {
+                        let waker = Waker::from(Arc::new(TaskWaker {
+                            id,
+                            queue: Arc::clone(&self.inner.wake_queue),
+                        }));
+                        tasks.insert(id, TaskEntry { future, waker });
+                    }
+                }
+            }
+
+            ready.clear();
+            self.inner.wake_queue.drain_into(&mut ready);
+            let mut polled_any = false;
+            for &id in ready.iter() {
+                let entry = self.inner.tasks.borrow_mut().remove(&id);
+                let Some(mut entry) = entry else { continue }; // completed or duplicate wake
+                polled_any = true;
+                let mut cx = Context::from_waker(&entry.waker);
+                match entry.future.as_mut().poll(&mut cx) {
+                    Poll::Ready(()) => {}
+                    Poll::Pending => {
+                        self.inner.tasks.borrow_mut().insert(id, entry);
+                    }
+                }
+            }
+
+            if let Some(v) = result.borrow_mut().take() {
+                drop(guard);
+                return v;
+            }
+            if polled_any || !self.inner.incoming.borrow().is_empty() {
+                continue;
+            }
+            // Nothing runnable: advance (virtual) or park (real).
+            if !self.inner.advance_idle() {
+                panic!(
+                    "executor stalled: root not finished, no runnable tasks, no timers \
+                     ({} tasks parked)",
+                    self.inner.tasks.borrow().len()
+                );
+            }
+        }
+    }
+
+    /// Current instant on this executor's clock (for assertions in tests).
+    pub fn now(&self) -> SimInstant {
+        self.inner.current_now()
+    }
+}
+
+struct CurrentGuard {
+    prev: Option<Rc<Inner>>,
+}
+
+impl CurrentGuard {
+    fn install(inner: Rc<Inner>) -> Self {
+        let prev = CURRENT.with(|c| c.borrow_mut().replace(inner));
+        CurrentGuard { prev }
+    }
+}
+
+impl Drop for CurrentGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Thread-safe wakeup handle for external threads (real mode I/O).
+#[derive(Clone)]
+pub struct Remote {
+    queue: Arc<WakeQueue>,
+}
+
+impl Remote {
+    /// Nudge the executor loop (it will re-drain channels guarded by wakers).
+    pub fn nudge(&self) {
+        self.queue.condvar.notify_one();
+    }
+}
+
+impl Inner {
+    fn current_now(&self) -> SimInstant {
+        match self.mode {
+            Mode::Virtual => SimInstant(self.now_ns.get()),
+            Mode::Real => SimInstant(self.real_anchor.elapsed().as_nanos() as u64),
+        }
+    }
+
+    fn spawn_inner(&self, fut: impl Future<Output = ()> + 'static) -> u64 {
+        let id = self.next_task_id.get();
+        self.next_task_id.set(id + 1);
+        self.incoming.borrow_mut().push((id, Box::pin(fut)));
+        id
+    }
+
+    fn register_timer(&self, deadline: u64, waker: Waker) {
+        let seq = self.next_timer_seq.get();
+        self.next_timer_seq.set(seq + 1);
+        self.timers
+            .borrow_mut()
+            .push(Reverse(TimerEntry { deadline, seq, waker }));
+    }
+
+    /// Fire timers with deadline <= now; returns how many fired.
+    fn fire_due_timers(&self) -> usize {
+        let now = self.current_now().0;
+        let mut fired = 0;
+        let mut timers = self.timers.borrow_mut();
+        while let Some(Reverse(head)) = timers.peek() {
+            if head.deadline > now {
+                break;
+            }
+            let Reverse(entry) = timers.pop().unwrap();
+            entry.waker.wake();
+            fired += 1;
+        }
+        fired
+    }
+
+    /// Idle step: advance virtual clock to next timer, or park until one is
+    /// due / an external wake arrives. Returns false on deadlock.
+    fn advance_idle(&self) -> bool {
+        match self.mode {
+            Mode::Virtual => {
+                let next = self.timers.borrow().peek().map(|Reverse(e)| e.deadline);
+                match next {
+                    Some(deadline) => {
+                        self.now_ns.set(self.now_ns.get().max(deadline));
+                        self.fire_due_timers();
+                        true
+                    }
+                    None => false,
+                }
+            }
+            Mode::Real => {
+                if self.fire_due_timers() > 0 {
+                    return true;
+                }
+                let next = self.timers.borrow().peek().map(|Reverse(e)| e.deadline);
+                let q = self.wake_queue.queue.lock().unwrap();
+                if !q.is_empty() {
+                    return true;
+                }
+                match next {
+                    Some(deadline) => {
+                        let now = self.current_now().0;
+                        let wait = Duration::from_nanos(deadline.saturating_sub(now));
+                        let (guard, _timeout) = self
+                            .wake_queue
+                            .condvar
+                            .wait_timeout(q, wait)
+                            .unwrap();
+                        drop(guard);
+                        self.fire_due_timers();
+                        true
+                    }
+                    None => {
+                        // No timers: only an external wake can unblock us.
+                        let (guard, timeout) = self
+                            .wake_queue
+                            .condvar
+                            .wait_timeout(q, Duration::from_millis(50))
+                            .unwrap();
+                        let empty = guard.is_empty();
+                        drop(guard);
+                        // Spin while external I/O threads are alive; a truly
+                        // stalled real-mode executor keeps polling (it cannot
+                        // distinguish deadlock from quiescent I/O).
+                        let _ = timeout;
+                        let _ = empty;
+                        true
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// public task & time API (free functions, tokio-flavored)
+// ---------------------------------------------------------------------------
+
+/// Spawn a task on the current executor; returns a [`JoinHandle`].
+pub fn spawn<T: 'static>(fut: impl Future<Output = T> + 'static) -> JoinHandle<T> {
+    let state = Rc::new(RefCell::new(JoinState::<T> { value: None, waker: None }));
+    let state2 = Rc::clone(&state);
+    let id = with_current(|inner| {
+        let id = inner.spawn_inner(async move {
+            let value = fut.await;
+            let mut s = state2.borrow_mut();
+            s.value = Some(value);
+            if let Some(w) = s.waker.take() {
+                w.wake();
+            }
+        });
+        inner.wake_queue.push(id);
+        id
+    });
+    JoinHandle { state, id }
+}
+
+struct JoinState<T> {
+    value: Option<T>,
+    waker: Option<Waker>,
+}
+
+/// Await the result of a spawned task.
+pub struct JoinHandle<T> {
+    state: Rc<RefCell<JoinState<T>>>,
+    #[allow(dead_code)]
+    id: u64,
+}
+
+impl<T> Future for JoinHandle<T> {
+    type Output = T;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<T> {
+        let mut s = self.state.borrow_mut();
+        if let Some(v) = s.value.take() {
+            Poll::Ready(v)
+        } else {
+            s.waker = Some(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+/// Current instant on the running executor's clock.
+pub fn now() -> SimInstant {
+    with_current(|inner| inner.current_now())
+}
+
+/// Sleep for `dur` on the executor clock (virtual: may complete instantly
+/// in wall time; ordering across tasks is preserved).
+pub fn sleep(dur: Duration) -> Sleep {
+    Sleep { dur, deadline: None }
+}
+
+/// Sleep specified in (possibly fractional) milliseconds.
+pub fn sleep_ms(ms: f64) -> Sleep {
+    sleep(Duration::from_nanos((ms.max(0.0) * 1e6) as u64))
+}
+
+pub struct Sleep {
+    dur: Duration,
+    deadline: Option<u64>,
+}
+
+impl Future for Sleep {
+    type Output = ();
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        with_current(|inner| {
+            let now = inner.current_now().0;
+            let dur_ns = self.dur.as_nanos() as u64;
+            let deadline = *self.deadline.get_or_insert(now + dur_ns);
+            if now >= deadline {
+                Poll::Ready(())
+            } else {
+                inner.register_timer(deadline, cx.waker().clone());
+                Poll::Pending
+            }
+        })
+    }
+}
+
+/// Yield once (re-queue at the back of the ready list).
+pub fn yield_now() -> YieldNow {
+    YieldNow { yielded: false }
+}
+
+pub struct YieldNow {
+    yielded: bool,
+}
+
+impl Future for YieldNow {
+    type Output = ();
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.yielded {
+            Poll::Ready(())
+        } else {
+            self.yielded = true;
+            cx.waker().wake_by_ref();
+            Poll::Pending
+        }
+    }
+}
+
+/// Outcome of [`timeout`].
+#[derive(Debug, PartialEq, Eq)]
+pub struct Elapsed;
+
+/// Run `fut` with a deadline on the executor clock.
+pub async fn timeout<T>(
+    dur: Duration,
+    fut: impl Future<Output = T>,
+) -> std::result::Result<T, Elapsed> {
+    let mut fut = Box::pin(fut);
+    let mut slept = Box::pin(sleep(dur));
+    std::future::poll_fn(move |cx| {
+        if let Poll::Ready(v) = fut.as_mut().poll(cx) {
+            return Poll::Ready(Ok(v));
+        }
+        if slept.as_mut().poll(cx).is_ready() {
+            return Poll::Ready(Err(Elapsed));
+        }
+        Poll::Pending
+    })
+    .await
+}
+
+/// Convenience: run a future on a fresh virtual-clock executor.
+pub fn run_virtual<T: 'static>(fut: impl Future<Output = T> + 'static) -> T {
+    Executor::new(Mode::Virtual).block_on(fut)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_sleep_is_instant_in_wall_time() {
+        let wall = Instant::now();
+        let ex = Executor::new(Mode::Virtual);
+        ex.block_on(async {
+            sleep(Duration::from_secs(3600)).await;
+            assert_eq!(now().0, 3_600_000_000_000);
+        });
+        assert!(wall.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn sleeps_order_across_tasks() {
+        run_virtual(async {
+            let log = Rc::new(RefCell::new(Vec::new()));
+            let mut handles = Vec::new();
+            for (tag, ms) in [("c", 30.0), ("a", 10.0), ("b", 20.0)] {
+                let log = Rc::clone(&log);
+                handles.push(spawn(async move {
+                    sleep_ms(ms).await;
+                    log.borrow_mut().push(tag);
+                }));
+            }
+            for h in handles {
+                h.await;
+            }
+            assert_eq!(*log.borrow(), vec!["a", "b", "c"]);
+        });
+    }
+
+    #[test]
+    fn nested_spawns_run() {
+        let total = run_virtual(async {
+            let h = spawn(async {
+                let inner = spawn(async {
+                    sleep_ms(1.0).await;
+                    21
+                });
+                inner.await + 21
+            });
+            h.await
+        });
+        assert_eq!(total, 42);
+    }
+
+    #[test]
+    fn timeout_fires() {
+        run_virtual(async {
+            let r = timeout(Duration::from_millis(5), sleep_ms(50.0)).await;
+            assert_eq!(r, Err(Elapsed));
+            assert_eq!(now().as_millis_f64(), 5.0);
+            let r = timeout(Duration::from_millis(100), async { 7 }).await;
+            assert_eq!(r, Ok(7));
+        });
+    }
+
+    #[test]
+    fn deterministic_interleaving() {
+        fn run_once() -> Vec<(u32, u64)> {
+            run_virtual(async {
+                let log = Rc::new(RefCell::new(Vec::new()));
+                let mut handles = Vec::new();
+                for i in 0..20u32 {
+                    let log = Rc::clone(&log);
+                    handles.push(spawn(async move {
+                        sleep_ms(((i * 7) % 13) as f64).await;
+                        log.borrow_mut().push((i, now().0));
+                        sleep_ms((i % 3) as f64).await;
+                        log.borrow_mut().push((i + 100, now().0));
+                    }));
+                }
+                for h in handles {
+                    h.await;
+                }
+                Rc::try_unwrap(log).unwrap().into_inner()
+            })
+        }
+        assert_eq!(run_once(), run_once());
+    }
+
+    #[test]
+    fn zero_sleep_completes() {
+        run_virtual(async {
+            sleep_ms(0.0).await;
+            yield_now().await;
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "executor stalled")]
+    fn deadlock_panics_in_virtual_mode() {
+        run_virtual(async {
+            std::future::poll_fn::<(), _>(|_| Poll::Pending).await;
+        });
+    }
+
+    #[test]
+    fn real_mode_sleep_actually_sleeps() {
+        let ex = Executor::new(Mode::Real);
+        let wall = Instant::now();
+        ex.block_on(async {
+            sleep(Duration::from_millis(30)).await;
+        });
+        assert!(wall.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn real_mode_external_thread_wakes_executor() {
+        // models the HTTP front end: an OS thread sends into an mpsc whose
+        // receiver lives on a Real-mode executor with no timers pending
+        let ex = Executor::new(Mode::Real);
+        let (tx, mut rx) = crate::exec::channel::mpsc::<u32>();
+        let remote = ex.remote();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            tx.send(7).unwrap();
+            remote.nudge();
+        });
+        let got = ex.block_on(async move { rx.recv().await });
+        assert_eq!(got, Some(7));
+    }
+
+    #[test]
+    fn join_handle_found_after_task_completes() {
+        run_virtual(async {
+            let h = spawn(async { 5u8 });
+            sleep_ms(10.0).await; // task finishes long before we join
+            assert_eq!(h.await, 5);
+        });
+    }
+
+    #[test]
+    fn timeout_zero_duration_still_polls_future_first() {
+        run_virtual(async {
+            // an immediately-ready future wins over a zero timeout
+            let r = timeout(Duration::from_millis(0), async { 1u8 }).await;
+            assert_eq!(r, Ok(1));
+        });
+    }
+
+    #[test]
+    fn many_tasks_throughput() {
+        let n = run_virtual(async {
+            let mut handles = Vec::new();
+            for i in 0..10_000u64 {
+                handles.push(spawn(async move {
+                    sleep_ms((i % 97) as f64).await;
+                    1u64
+                }));
+            }
+            let mut total = 0;
+            for h in handles {
+                total += h.await;
+            }
+            total
+        });
+        assert_eq!(n, 10_000);
+    }
+}

@@ -1,0 +1,256 @@
+//! Async coordination primitives for the in-repo executor: [`Notify`]
+//! (edge-triggered with a permit, tokio-flavored) and [`Gauge`] (an awaited
+//! counter used for instance drain accounting).
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
+
+// ---------------------------------------------------------------------------
+// Notify
+// ---------------------------------------------------------------------------
+
+/// Wait/notify with a single stored permit, so a `notify_one()` that races
+/// ahead of `notified().await` is not lost.
+#[derive(Clone, Default)]
+pub struct Notify {
+    state: Arc<Mutex<NotifyState>>,
+}
+
+#[derive(Default)]
+struct NotifyState {
+    permit: bool,
+    waiters: Vec<Arc<Mutex<WaiterState>>>,
+}
+
+#[derive(Default)]
+struct WaiterState {
+    fired: bool,
+    waker: Option<Waker>,
+}
+
+impl Notify {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wake one waiter, or store a permit if none are waiting.
+    pub fn notify_one(&self) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(waiter) = s.waiters.pop() {
+            let mut w = waiter.lock().unwrap();
+            w.fired = true;
+            if let Some(waker) = w.waker.take() {
+                waker.wake();
+            }
+        } else {
+            s.permit = true;
+        }
+    }
+
+    /// Wake all current waiters (does not store a permit).
+    pub fn notify_all(&self) {
+        let mut s = self.state.lock().unwrap();
+        for waiter in s.waiters.drain(..) {
+            let mut w = waiter.lock().unwrap();
+            w.fired = true;
+            if let Some(waker) = w.waker.take() {
+                waker.wake();
+            }
+        }
+    }
+
+    /// Wait until notified (consumes a stored permit immediately if present).
+    pub fn notified(&self) -> Notified {
+        Notified { notify: self.clone(), waiter: None }
+    }
+}
+
+pub struct Notified {
+    notify: Notify,
+    waiter: Option<Arc<Mutex<WaiterState>>>,
+}
+
+impl Future for Notified {
+    type Output = ();
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        // Already registered: check our own fired flag.
+        if let Some(waiter) = &self.waiter {
+            let mut w = waiter.lock().unwrap();
+            if w.fired {
+                return Poll::Ready(());
+            }
+            w.waker = Some(cx.waker().clone());
+            return Poll::Pending;
+        }
+        let mut s = self.notify.state.lock().unwrap();
+        if s.permit {
+            s.permit = false;
+            return Poll::Ready(());
+        }
+        let waiter = Arc::new(Mutex::new(WaiterState {
+            fired: false,
+            waker: Some(cx.waker().clone()),
+        }));
+        s.waiters.push(Arc::clone(&waiter));
+        drop(s);
+        self.waiter = Some(waiter);
+        Poll::Pending
+    }
+}
+
+impl Drop for Notified {
+    fn drop(&mut self) {
+        // Deregister so an abandoned waiter doesn't swallow a notify_one.
+        if let Some(waiter) = self.waiter.take() {
+            let fired = waiter.lock().unwrap().fired;
+            let mut s = self.notify.state.lock().unwrap();
+            s.waiters.retain(|w| !Arc::ptr_eq(w, &waiter));
+            // If we were already fired but never observed it, hand the
+            // wakeup to someone else.
+            if fired {
+                drop(s);
+                self.notify.notify_one();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gauge — awaited counter (drain accounting)
+// ---------------------------------------------------------------------------
+
+/// A counter whose transitions can be awaited; used for in-flight request
+/// accounting: `add(1)` on dispatch, `sub(1)` on completion,
+/// `wait_zero().await` to drain.
+#[derive(Clone, Default)]
+pub struct Gauge {
+    state: Arc<Mutex<GaugeState>>,
+}
+
+#[derive(Default)]
+struct GaugeState {
+    value: i64,
+    waiters: Vec<Waker>,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, n: i64) {
+        let mut s = self.state.lock().unwrap();
+        s.value += n;
+        debug_assert!(s.value >= 0, "gauge went negative");
+        if s.value == 0 {
+            for w in s.waiters.drain(..) {
+                w.wake();
+            }
+        }
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.add(-n);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.state.lock().unwrap().value
+    }
+
+    /// Resolve once the gauge reads zero (immediately if it already does).
+    pub fn wait_zero(&self) -> WaitZero {
+        WaitZero { gauge: self.clone() }
+    }
+}
+
+pub struct WaitZero {
+    gauge: Gauge,
+}
+
+impl Future for WaitZero {
+    type Output = ();
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let mut s = self.gauge.state.lock().unwrap();
+        if s.value == 0 {
+            Poll::Ready(())
+        } else {
+            s.waiters.retain(|w| !w.will_wake(cx.waker()));
+            s.waiters.push(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{now, run_virtual, sleep_ms, spawn};
+
+    #[test]
+    fn notify_wakes_waiter() {
+        run_virtual(async {
+            let n = Notify::new();
+            let n2 = n.clone();
+            let h = spawn(async move {
+                n2.notified().await;
+                now().as_millis_f64()
+            });
+            sleep_ms(7.0).await;
+            n.notify_one();
+            assert_eq!(h.await, 7.0);
+        });
+    }
+
+    #[test]
+    fn notify_permit_not_lost() {
+        run_virtual(async {
+            let n = Notify::new();
+            n.notify_one(); // before anyone waits
+            n.notified().await; // must not hang
+        });
+    }
+
+    #[test]
+    fn notify_all_wakes_everyone() {
+        run_virtual(async {
+            let n = Notify::new();
+            let mut handles = Vec::new();
+            for _ in 0..5 {
+                let n = n.clone();
+                handles.push(spawn(async move { n.notified().await }));
+            }
+            sleep_ms(1.0).await;
+            n.notify_all();
+            for h in handles {
+                h.await;
+            }
+        });
+    }
+
+    #[test]
+    fn gauge_drain() {
+        run_virtual(async {
+            let g = Gauge::new();
+            for i in 0..4u64 {
+                g.add(1);
+                let g = g.clone();
+                spawn(async move {
+                    sleep_ms(10.0 + i as f64).await;
+                    g.sub(1);
+                });
+            }
+            g.wait_zero().await;
+            assert_eq!(now().as_millis_f64(), 13.0);
+            assert_eq!(g.value(), 0);
+        });
+    }
+
+    #[test]
+    fn gauge_zero_resolves_immediately() {
+        run_virtual(async {
+            Gauge::new().wait_zero().await;
+        });
+    }
+}

@@ -1,0 +1,146 @@
+//! FIG5 — paper Figure 5: end-to-end latency time series of the IOT
+//! application on tinyFaaS, vanilla vs function-fusion deployment, with
+//! merge-completion events marked.  The paper reports a 28.9 % median
+//! latency reduction (807 ms -> 574 ms) and ~57 % RAM reduction.
+
+use std::path::Path;
+
+use super::{reduction_pct, run_one, write_output, RunResult};
+use crate::config::{ComputeMode, PlatformKind, WorkloadConfig};
+use crate::error::Result;
+use crate::util::stats::fmt_ms;
+
+/// Output of the Figure-5 experiment.
+pub struct Fig5 {
+    pub vanilla: RunResult,
+    pub fusion: RunResult,
+}
+
+impl Fig5 {
+    pub fn median_reduction_pct(&self) -> f64 {
+        reduction_pct(
+            self.vanilla.report.latency.median(),
+            self.fusion.report.latency.median(),
+        )
+    }
+
+    pub fn ram_reduction_pct(&self) -> f64 {
+        reduction_pct(self.vanilla.ram_mean_mb, self.fusion.ram_mean_mb)
+    }
+
+    /// Median latency after the last merge completed (the "optimization
+    /// phase concludes" regime the paper describes).  NaN when fewer than
+    /// 10 requests arrived post-merge.
+    pub fn post_merge_median(&self) -> f64 {
+        let last_merge = self
+            .fusion
+            .merges
+            .iter()
+            .map(|m| m.t_ms)
+            .fold(0.0f64, f64::max);
+        let q = crate::util::stats::Quantiles::from_samples(
+            self.fusion
+                .latency_series
+                .iter()
+                .filter(|s| s.t_ms > last_merge)
+                .map(|s| s.latency_ms)
+                .collect(),
+        );
+        if q.len() < 10 {
+            f64::NAN
+        } else {
+            q.median()
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("FIG5: IOT on tinyFaaS — latency time series (paper Fig. 5)\n");
+        out.push_str(&format!(
+            "  vanilla : {}\n  fusion  : {}\n",
+            self.vanilla.report.summary(),
+            self.fusion.report.summary()
+        ));
+        out.push_str(&format!(
+            "  merges  : {} completed at t = [{}]\n",
+            self.fusion.merges.len(),
+            self.fusion
+                .merges
+                .iter()
+                .map(|m| format!("{:.1}s", m.t_ms / 1e3))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+        out.push_str(&format!(
+            "  median reduction: {:.1}%   (paper: 28.9%, 807 ms -> 574 ms)\n",
+            self.median_reduction_pct()
+        ));
+        out.push_str(&format!(
+            "  post-merge median: {}   (run-wide fusion median: {})\n",
+            fmt_ms(self.post_merge_median()),
+            fmt_ms(self.fusion.report.latency.median())
+        ));
+        out.push_str(&format!(
+            "  RAM reduction: {:.1}%   (paper: ~57%)\n",
+            self.ram_reduction_pct()
+        ));
+        out
+    }
+}
+
+/// Run the experiment and write `fig5_vanilla.csv`, `fig5_fusion.csv`,
+/// `fig5_merges.csv`, and `fig5_summary.txt` into `out_dir`.
+pub fn run(out_dir: &Path, wl: WorkloadConfig, compute: ComputeMode) -> Result<Fig5> {
+    let vanilla = run_one(PlatformKind::Tiny, "iot", false, wl.clone(), compute)?;
+    let fusion = run_one(PlatformKind::Tiny, "iot", true, wl, compute)?;
+    let fig = Fig5 { vanilla, fusion };
+
+    let series = |r: &RunResult| {
+        let mut csv = String::from("t_ms,latency_ms\n");
+        for s in &r.latency_series {
+            csv.push_str(&format!("{:.3},{:.3}\n", s.t_ms, s.latency_ms));
+        }
+        csv
+    };
+    write_output(&out_dir.join("fig5_vanilla.csv"), &series(&fig.vanilla))?;
+    write_output(&out_dir.join("fig5_fusion.csv"), &series(&fig.fusion))?;
+    let mut merges = String::from("t_ms,duration_ms,functions\n");
+    for m in &fig.fusion.merges {
+        merges.push_str(&format!(
+            "{:.3},{:.3},{}\n",
+            m.t_ms,
+            m.duration_ms,
+            m.functions.join("+")
+        ));
+    }
+    write_output(&out_dir.join("fig5_merges.csv"), &merges)?;
+    write_output(&out_dir.join("fig5_summary.txt"), &fig.render())?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_holds_at_small_scale() {
+        let wl = WorkloadConfig { requests: 600, rate_rps: 10.0, seed: 2, timeout_ms: 60_000.0 };
+        let dir = std::env::temp_dir().join("provuse_fig5_test");
+        let fig = run(&dir, wl, ComputeMode::Disabled).unwrap();
+        // fusion completes merges and wins on both axes
+        assert!(!fig.fusion.merges.is_empty());
+        assert!(fig.median_reduction_pct() > 0.0, "{}", fig.render());
+        assert!(fig.ram_reduction_pct() > 0.0, "{}", fig.render());
+        // post-merge regime is at least as fast as the run-wide median
+        let pm = fig.post_merge_median();
+        assert!(
+            pm.is_nan() || pm <= fig.fusion.report.latency.median() * 1.05,
+            "post-merge {pm} vs {}",
+            fig.fusion.report.latency.median()
+        );
+        assert!(dir.join("fig5_vanilla.csv").exists());
+        assert!(dir.join("fig5_merges.csv").exists());
+        let summary = fig.render();
+        assert!(summary.contains("median reduction"));
+    }
+}

@@ -1,0 +1,237 @@
+//! FIG6 / TAB-LAT / TAB-RAM — paper Figure 6 and the §5.2 numbers: median
+//! end-to-end latency and RAM usage for {tinyFaaS, Kubernetes} x {IOT,
+//! TREE} x {vanilla, fusion}.
+//!
+//! Paper reference values:
+//!
+//! | config     | vanilla | fusion | reduction |  RAM   |
+//! |------------|---------|--------|-----------|--------|
+//! | tiny/IOT   | 807 ms  | 574 ms |   28.9 %  | ~57 %  |
+//! | tiny/TREE  | 452 ms  | 350 ms |   22.6 %  | ~50 %  |
+//! | kube/IOT   | 815 ms  | 551 ms |   32.4 %  | ~57 %  |
+//! | kube/TREE  | 456 ms  | 358 ms |   21.5 %  | ~50 %  |
+//! | average    |         |        |   26.3 %  | 53.6 % |
+
+use std::path::Path;
+
+use super::{reduction_pct, run_one, write_output, RunResult};
+use crate::config::{ComputeMode, PlatformKind, WorkloadConfig};
+use crate::error::Result;
+
+/// Paper reference numbers for one cell (for side-by-side reporting).
+#[derive(Debug, Clone, Copy)]
+pub struct PaperCell {
+    pub vanilla_ms: f64,
+    pub fusion_ms: f64,
+    pub ram_reduction_pct: f64,
+}
+
+/// One platform x app cell: vanilla + fusion runs.
+pub struct Cell {
+    pub platform: PlatformKind,
+    pub app: &'static str,
+    pub vanilla: RunResult,
+    pub fusion: RunResult,
+    pub paper: PaperCell,
+}
+
+impl Cell {
+    pub fn latency_reduction_pct(&self) -> f64 {
+        reduction_pct(
+            self.vanilla.report.latency.median(),
+            self.fusion.report.latency.median(),
+        )
+    }
+
+    pub fn ram_reduction_pct(&self) -> f64 {
+        reduction_pct(self.vanilla.ram_mean_mb, self.fusion.ram_mean_mb)
+    }
+
+    pub fn paper_reduction_pct(&self) -> f64 {
+        reduction_pct(self.paper.vanilla_ms, self.paper.fusion_ms)
+    }
+}
+
+/// The full 4-cell matrix.
+pub struct Fig6 {
+    pub cells: Vec<Cell>,
+}
+
+const CONFIGS: [(PlatformKind, &str, PaperCell); 4] = [
+    (
+        PlatformKind::Tiny,
+        "iot",
+        PaperCell { vanilla_ms: 807.0, fusion_ms: 574.0, ram_reduction_pct: 57.0 },
+    ),
+    (
+        PlatformKind::Tiny,
+        "tree",
+        PaperCell { vanilla_ms: 452.0, fusion_ms: 350.0, ram_reduction_pct: 50.0 },
+    ),
+    (
+        PlatformKind::Kube,
+        "iot",
+        PaperCell { vanilla_ms: 815.0, fusion_ms: 551.0, ram_reduction_pct: 57.0 },
+    ),
+    (
+        PlatformKind::Kube,
+        "tree",
+        PaperCell { vanilla_ms: 456.0, fusion_ms: 358.0, ram_reduction_pct: 50.0 },
+    ),
+];
+
+impl Fig6 {
+    pub fn mean_latency_reduction_pct(&self) -> f64 {
+        self.cells.iter().map(|c| c.latency_reduction_pct()).sum::<f64>()
+            / self.cells.len() as f64
+    }
+
+    pub fn mean_ram_reduction_pct(&self) -> f64 {
+        self.cells.iter().map(|c| c.ram_reduction_pct()).sum::<f64>() / self.cells.len() as f64
+    }
+
+    /// Markdown table: measured vs paper, per cell.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("FIG6 / TAB-LAT / TAB-RAM: median e2e latency + RAM (paper Fig. 6, §5.2)\n\n");
+        out.push_str(
+            "| config | vanilla (ms) | fusion (ms) | reduction | paper | RAM reduction | paper RAM |\n",
+        );
+        out.push_str(
+            "|--------|-------------:|------------:|----------:|------:|--------------:|----------:|\n",
+        );
+        for c in &self.cells {
+            out.push_str(&format!(
+                "| {}/{} | {:.0} | {:.0} | {:.1}% | {:.1}% ({:.0}→{:.0}) | {:.1}% | ~{:.0}% |\n",
+                c.platform.name(),
+                c.app,
+                c.vanilla.report.latency.median(),
+                c.fusion.report.latency.median(),
+                c.latency_reduction_pct(),
+                c.paper_reduction_pct(),
+                c.paper.vanilla_ms,
+                c.paper.fusion_ms,
+                c.ram_reduction_pct(),
+                c.paper.ram_reduction_pct,
+            ));
+        }
+        out.push_str(&format!(
+            "| **average** | | | **{:.1}%** | **26.3%** | **{:.1}%** | **53.6%** |\n",
+            self.mean_latency_reduction_pct(),
+            self.mean_ram_reduction_pct(),
+        ));
+        out
+    }
+
+    /// TAB-COST (ours): provider bill per configuration — the double-
+    /// billing elimination the paper motivates with, in dollars.
+    pub fn render_cost(&self) -> String {
+        let model = crate::billing::CostModel::default();
+        let mut out = String::new();
+        out.push_str("TAB-COST: provider bill (AWS-like list prices) per 1k requests\n\n");
+        out.push_str(
+            "| config | vanilla $/kreq | fusion $/kreq | saving | vanilla GB-s | fusion GB-s | billed invocations v->f |\n",
+        );
+        out.push_str(
+            "|--------|---------------:|--------------:|-------:|-------------:|------------:|------------------------:|\n",
+        );
+        let mut savings = Vec::new();
+        for c in &self.cells {
+            let v = c.vanilla.bill.cost_per_kreq(&model, c.vanilla.report.issued);
+            let f = c.fusion.bill.cost_per_kreq(&model, c.fusion.report.issued);
+            let saving = reduction_pct(v, f);
+            savings.push(saving);
+            out.push_str(&format!(
+                "| {}/{} | ${:.4} | ${:.4} | {:.1}% | {:.0} | {:.0} | {} -> {} |\n",
+                c.platform.name(),
+                c.app,
+                v,
+                f,
+                saving,
+                c.vanilla.bill.gb_seconds,
+                c.fusion.bill.gb_seconds,
+                c.vanilla.bill.invocations,
+                c.fusion.bill.invocations,
+            ));
+        }
+        out.push_str(&format!(
+            "| **average** | | | **{:.1}%** | | | |\n",
+            savings.iter().sum::<f64>() / savings.len() as f64
+        ));
+        out
+    }
+
+    /// CSV of the bar-chart data behind Figure 6.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "platform,app,deployment,median_ms,p25_ms,p75_ms,ram_mean_mb,merges,final_instances\n",
+        );
+        for c in &self.cells {
+            for r in [&c.vanilla, &c.fusion] {
+                out.push_str(&format!(
+                    "{},{},{},{:.3},{:.3},{:.3},{:.3},{},{}\n",
+                    c.platform.name(),
+                    c.app,
+                    if r.fusion { "fusion" } else { "vanilla" },
+                    r.report.latency.median(),
+                    r.report.latency.q(0.25),
+                    r.report.latency.q(0.75),
+                    r.ram_mean_mb,
+                    r.merges.len(),
+                    r.final_instances,
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Run all four cells and write `fig6.csv` + `fig6_table.md` to `out_dir`.
+pub fn run(out_dir: &Path, wl: WorkloadConfig, compute: ComputeMode) -> Result<Fig6> {
+    let mut cells = Vec::new();
+    for (kind, app, paper) in CONFIGS {
+        eprintln!("  fig6: running {}/{app} ...", kind.name());
+        let vanilla = run_one(kind, app, false, wl.clone(), compute)?;
+        let fusion = run_one(kind, app, true, wl.clone(), compute)?;
+        cells.push(Cell { platform: kind, app, vanilla, fusion, paper });
+    }
+    let fig = Fig6 { cells };
+    write_output(&out_dir.join("fig6.csv"), &fig.to_csv())?;
+    write_output(&out_dir.join("fig6_table.md"), &fig.render())?;
+    write_output(&out_dir.join("cost_table.md"), &fig.render_cost())?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_shape_holds_at_small_scale() {
+        let wl = WorkloadConfig { requests: 120, rate_rps: 10.0, seed: 4, timeout_ms: 60_000.0 };
+        let dir = std::env::temp_dir().join("provuse_fig6_test");
+        let fig = run(&dir, wl, ComputeMode::Disabled).unwrap();
+        assert_eq!(fig.cells.len(), 4);
+        for c in &fig.cells {
+            // the paper's headline: fusion wins every cell on both axes
+            assert!(
+                c.latency_reduction_pct() > 0.0,
+                "{}/{}: {}",
+                c.platform.name(),
+                c.app,
+                c.latency_reduction_pct()
+            );
+            assert!(c.ram_reduction_pct() > 0.0);
+            assert_eq!(c.vanilla.report.failed, 0);
+            assert_eq!(c.fusion.report.failed, 0);
+            // double billing eliminated: fewer billed invocations and
+            // fewer GB-seconds under fusion
+            assert!(c.fusion.bill.invocations < c.vanilla.bill.invocations);
+            assert!(c.fusion.bill.gb_seconds < c.vanilla.bill.gb_seconds);
+        }
+        assert!(fig.render_cost().contains("TAB-COST"));
+        let table = fig.render();
+        assert!(table.contains("average"));
+        assert!(dir.join("fig6.csv").exists());
+    }
+}

@@ -1,0 +1,167 @@
+//! Paper experiment drivers (DESIGN.md §4 experiment index).
+//!
+//! Every table and figure in the paper's evaluation maps to a driver here:
+//!
+//! | id      | artifact                     | driver                |
+//! |---------|------------------------------|-----------------------|
+//! | FIG3/4  | call graphs                  | `apps::*::to_dot()`   |
+//! | FIG5    | IOT/tinyFaaS latency series  | [`fig5`]              |
+//! | FIG6    | median latency, 4 configs    | [`fig6`]              |
+//! | TAB-LAT | §5.2 median latencies        | [`fig6`] (table form) |
+//! | TAB-RAM | §5.2 RAM reductions          | [`fig6`] (RAM columns)|
+//! | ABL-*   | ours: rate/hop/policy sweeps | [`sweep`]             |
+
+pub mod fig5;
+pub mod fig6;
+pub mod sweep;
+
+use std::rc::Rc;
+
+use crate::apps;
+use crate::billing::Bill;
+use crate::config::{ComputeMode, PlatformConfig, PlatformKind, WorkloadConfig};
+use crate::error::Result;
+use crate::exec::{Executor, Mode};
+use crate::metrics::{LatencySample, MergeEvent, RamSample};
+use crate::platform::Platform;
+use crate::workload::{self, WorkloadReport};
+
+/// One platform x app x deployment-mode benchmark run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub platform: PlatformKind,
+    pub app: String,
+    pub fusion: bool,
+    pub report: WorkloadReport,
+    pub latency_series: Vec<LatencySample>,
+    pub ram_series: Vec<RamSample>,
+    pub merges: Vec<MergeEvent>,
+    /// time-weighted mean platform RAM over the whole run (MiB)
+    pub ram_mean_mb: f64,
+    /// instances alive at the end of the run
+    pub final_instances: usize,
+    pub inline_calls: u64,
+    pub remote_sync_calls: u64,
+    /// aggregate provider bill (invocations + GiB-seconds)
+    pub bill: Bill,
+}
+
+impl RunResult {
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}",
+            self.platform.name(),
+            self.app,
+            if self.fusion { "fusion" } else { "vanilla" }
+        )
+    }
+}
+
+/// Execute one benchmark run on a fresh virtual-clock executor.
+pub fn run_one(
+    kind: PlatformKind,
+    app_name: &str,
+    fusion: bool,
+    wl: WorkloadConfig,
+    compute: ComputeMode,
+) -> Result<RunResult> {
+    let app = apps::by_name(app_name)?;
+    let mut config = PlatformConfig::of_kind(kind).with_compute(compute);
+    if !fusion {
+        config = config.vanilla();
+    }
+    run_custom(app, config, wl)
+}
+
+/// Execute a benchmark run with a fully custom platform config (sweeps).
+pub fn run_custom(
+    app: apps::AppSpec,
+    config: PlatformConfig,
+    wl: WorkloadConfig,
+) -> Result<RunResult> {
+    let kind = config.kind;
+    let fusion = config.fusion.enabled;
+    let app_name = app.name.clone();
+    Executor::new(Mode::Virtual).block_on(async move {
+        let platform = Platform::deploy(app, config).await?;
+        let report = workload::run(Rc::clone(&platform), wl).await?;
+        // let stragglers (async branches, drains) settle before sampling ends
+        crate::exec::sleep_ms(10_000.0).await;
+        platform.shutdown();
+        let m = &platform.metrics;
+        Ok(RunResult {
+            platform: kind,
+            app: app_name,
+            fusion,
+            latency_series: m.latencies(),
+            ram_series: m.ram_series(),
+            merges: m.merges(),
+            ram_mean_mb: m.ram_mean_mb(),
+            final_instances: platform.containers.live_count(),
+            inline_calls: m.counter("inline_calls"),
+            remote_sync_calls: m.counter("remote_sync_calls"),
+            bill: platform.billing.bill(),
+            report,
+        })
+    })
+}
+
+/// Percentage reduction from `vanilla` to `fused` (positive = improvement).
+pub fn reduction_pct(vanilla: f64, fused: f64) -> f64 {
+    if vanilla <= 0.0 {
+        return f64::NAN;
+    }
+    (vanilla - fused) / vanilla * 100.0
+}
+
+/// Write a file, creating parent directories.
+pub fn write_output(path: &std::path::Path, contents: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_math() {
+        assert!((reduction_pct(800.0, 600.0) - 25.0).abs() < 1e-9);
+        assert!((reduction_pct(100.0, 110.0) + 10.0).abs() < 1e-9);
+        assert!(reduction_pct(0.0, 1.0).is_nan());
+    }
+
+    #[test]
+    fn run_one_smoke_vanilla_vs_fusion() {
+        // small workload, no PJRT dependency
+        let wl = WorkloadConfig { requests: 60, rate_rps: 10.0, seed: 5, timeout_ms: 60_000.0 };
+        let v = run_one(PlatformKind::Tiny, "chain", false, wl.clone(), ComputeMode::Disabled)
+            .unwrap();
+        let f =
+            run_one(PlatformKind::Tiny, "chain", true, wl, ComputeMode::Disabled).unwrap();
+        assert_eq!(v.report.failed, 0);
+        assert_eq!(f.report.failed, 0);
+        assert!(v.merges.is_empty());
+        assert!(!f.merges.is_empty());
+        assert!(f.inline_calls > 0);
+        // fusion must win on latency and RAM for a pure sync chain
+        assert!(f.report.latency.median() < v.report.latency.median());
+        assert!(f.ram_mean_mb < v.ram_mean_mb);
+        assert!(f.final_instances < v.final_instances);
+    }
+
+    #[test]
+    fn run_one_is_deterministic() {
+        let wl = WorkloadConfig { requests: 30, rate_rps: 10.0, seed: 9, timeout_ms: 60_000.0 };
+        let a = run_one(PlatformKind::Kube, "chain", true, wl.clone(), ComputeMode::Disabled)
+            .unwrap();
+        let b =
+            run_one(PlatformKind::Kube, "chain", true, wl, ComputeMode::Disabled).unwrap();
+        assert_eq!(a.report.latency.median(), b.report.latency.median());
+        assert_eq!(a.merges.len(), b.merges.len());
+        assert_eq!(a.ram_mean_mb, b.ram_mean_mb);
+    }
+}

@@ -1,0 +1,275 @@
+//! ABL-RATE / ABL-HOP / ABL-POLICY — ablation sweeps (ours, motivated by
+//! DESIGN.md §4): sensitivity of the paper's latency claim to request rate,
+//! per-hop overhead, and fusion-policy knobs.
+
+use std::path::Path;
+
+use super::{reduction_pct, write_output, RunResult};
+use crate::apps::{self, AppSpec};
+use crate::config::{ComputeMode, PlatformConfig, WorkloadConfig};
+use crate::error::Result;
+use crate::exec::{Executor, Mode};
+use crate::platform::Platform;
+use crate::workload::{self, Arrival};
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub x: f64,
+    pub label: String,
+    pub vanilla_median_ms: f64,
+    pub fusion_median_ms: f64,
+    pub reduction_pct: f64,
+    pub merges: usize,
+}
+
+/// A completed sweep.
+pub struct Sweep {
+    pub dim: String,
+    pub points: Vec<SweepPoint>,
+}
+
+impl Sweep {
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("x,label,vanilla_median_ms,fusion_median_ms,reduction_pct,merges\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{},{:.3},{:.3},{:.2},{}\n",
+                p.x, p.label, p.vanilla_median_ms, p.fusion_median_ms, p.reduction_pct, p.merges
+            ));
+        }
+        out
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("ABL-{}: fusion benefit sweep\n", self.dim.to_uppercase());
+        out.push_str("|     point | vanilla | fusion | reduction | merges |\n");
+        out.push_str("|-----------|--------:|-------:|----------:|-------:|\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "| {:>9} | {:6.0}  | {:5.0}  | {:8.1}% | {:6} |\n",
+                p.label, p.vanilla_median_ms, p.fusion_median_ms, p.reduction_pct, p.merges
+            ));
+        }
+        out
+    }
+}
+
+/// Like `experiments::run_custom` but under an explicit arrival process.
+fn run_arrival(
+    app: AppSpec,
+    config: PlatformConfig,
+    wl: WorkloadConfig,
+    arrival: Arrival,
+) -> Result<RunResult> {
+    let kind = config.kind;
+    let fusion = config.fusion.enabled;
+    let app_name = app.name.clone();
+    Executor::new(Mode::Virtual).block_on(async move {
+        let platform = Platform::deploy(app, config).await?;
+        let report =
+            workload::run_with_arrival(std::rc::Rc::clone(&platform), wl, arrival).await?;
+        crate::exec::sleep_ms(10_000.0).await;
+        platform.shutdown();
+        let m = &platform.metrics;
+        Ok(RunResult {
+            platform: kind,
+            app: app_name,
+            fusion,
+            latency_series: m.latencies(),
+            ram_series: m.ram_series(),
+            merges: m.merges(),
+            ram_mean_mb: m.ram_mean_mb(),
+            final_instances: platform.containers.live_count(),
+            inline_calls: m.counter("inline_calls"),
+            remote_sync_calls: m.counter("remote_sync_calls"),
+            bill: platform.billing.bill(),
+            report,
+        })
+    })
+}
+
+fn point_app(
+    label: String,
+    x: f64,
+    base: PlatformConfig,
+    wl: WorkloadConfig,
+    app: &AppSpec,
+    arrival: Arrival,
+) -> Result<SweepPoint> {
+    let vanilla = run_arrival(app.clone(), base.clone().vanilla(), wl.clone(), arrival.clone())?;
+    let fusion = run_arrival(app.clone(), base, wl, arrival)?;
+    Ok(SweepPoint {
+        x,
+        label,
+        vanilla_median_ms: vanilla.report.latency.median(),
+        fusion_median_ms: fusion.report.latency.median(),
+        reduction_pct: reduction_pct(
+            vanilla.report.latency.median(),
+            fusion.report.latency.median(),
+        ),
+        merges: fusion.merges.len(),
+    })
+}
+
+fn point(
+    label: String,
+    x: f64,
+    base: PlatformConfig,
+    wl: WorkloadConfig,
+    app: &str,
+) -> Result<SweepPoint> {
+    point_app(label, x, base, wl, &apps::by_name(app)?, Arrival::Constant)
+}
+
+/// ABL-RATE: request-rate sweep on IOT/tiny.
+pub fn rate_sweep(requests: u64, compute: ComputeMode) -> Result<Sweep> {
+    let mut points = Vec::new();
+    for rate in [1.0, 2.0, 5.0, 10.0, 20.0, 50.0] {
+        let wl = WorkloadConfig { requests, rate_rps: rate, seed: 11, timeout_ms: 120_000.0 };
+        let cfg = PlatformConfig::tiny().with_compute(compute);
+        points.push(point(format!("{rate} rps"), rate, cfg, wl, "iot")?);
+    }
+    Ok(Sweep { dim: "rate".into(), points })
+}
+
+/// ABL-HOP: per-hop (dispatch) overhead sweep on IOT/tiny.
+pub fn hop_sweep(requests: u64, compute: ComputeMode) -> Result<Sweep> {
+    let mut points = Vec::new();
+    for hop_ms in [1.0, 5.0, 10.0, 25.0, 50.0] {
+        let wl = WorkloadConfig { requests, rate_rps: 5.0, seed: 12, timeout_ms: 120_000.0 };
+        let mut cfg = PlatformConfig::tiny().with_compute(compute);
+        cfg.latency.dispatch_ms = hop_ms;
+        points.push(point(format!("{hop_ms} ms"), hop_ms, cfg, wl, "iot")?);
+    }
+    Ok(Sweep { dim: "hop".into(), points })
+}
+
+/// ABL-POLICY: fusion policy ablation on IOT/tiny.
+pub fn policy_sweep(requests: u64, compute: ComputeMode) -> Result<Sweep> {
+    let wl = WorkloadConfig { requests, rate_rps: 5.0, seed: 13, timeout_ms: 120_000.0 };
+    let mut points = Vec::new();
+    type Tweak = Box<dyn Fn(&mut PlatformConfig)>;
+    let variants: Vec<(&str, Tweak)> = vec![
+        ("default", Box::new(|_| {})),
+        ("thresh=1", Box::new(|c| c.fusion.min_observations = 1)),
+        ("thresh=25", Box::new(|c| c.fusion.min_observations = 25)),
+        ("no-trans", Box::new(|c| c.fusion.transitive = false)),
+        ("max-grp=2", Box::new(|c| c.fusion.max_group_size = 2)),
+    ];
+    for (i, (label, tweak)) in variants.iter().enumerate() {
+        let mut cfg = PlatformConfig::tiny().with_compute(compute);
+        tweak(&mut cfg);
+        points.push(point(label.to_string(), i as f64, cfg, wl.clone(), "iot")?);
+    }
+    Ok(Sweep { dim: "policy".into(), points })
+}
+
+/// ABL-DEPTH: fusion benefit vs sync-chain depth.
+pub fn depth_sweep(requests: u64, compute: ComputeMode) -> Result<Sweep> {
+    let mut points = Vec::new();
+    for depth in [2usize, 3, 4, 6, 8] {
+        let wl = WorkloadConfig { requests, rate_rps: 5.0, seed: 14, timeout_ms: 120_000.0 };
+        let cfg = PlatformConfig::tiny().with_compute(compute);
+        let app = apps::chain(depth);
+        points.push(point_app(
+            format!("depth {depth}"),
+            depth as f64,
+            cfg,
+            wl,
+            &app,
+            Arrival::Constant,
+        )?);
+    }
+    Ok(Sweep { dim: "depth".into(), points })
+}
+
+/// ABL-ARRIVAL: fusion benefit under different arrival processes
+/// (constant / Poisson / bursty — paper §6 motivates pre-warming for
+/// bursty workloads).
+pub fn arrival_sweep(requests: u64, compute: ComputeMode) -> Result<Sweep> {
+    let mut points = Vec::new();
+    let arrivals = [
+        ("constant", Arrival::Constant),
+        ("poisson", Arrival::Poisson),
+        ("burst", Arrival::Burst { period_s: 30.0, burst_factor: 4.0 }),
+    ];
+    for (i, (label, arrival)) in arrivals.iter().enumerate() {
+        let wl = WorkloadConfig { requests, rate_rps: 5.0, seed: 15, timeout_ms: 120_000.0 };
+        let cfg = PlatformConfig::tiny().with_compute(compute);
+        points.push(point_app(
+            label.to_string(),
+            i as f64,
+            cfg,
+            wl,
+            &apps::iot(),
+            arrival.clone(),
+        )?);
+    }
+    Ok(Sweep { dim: "arrival".into(), points })
+}
+
+/// Run one sweep dimension by name and write its CSV + table.
+pub fn run(dim: &str, out_dir: &Path, requests: u64, compute: ComputeMode) -> Result<Sweep> {
+    let sweep = match dim {
+        "rate" => rate_sweep(requests, compute)?,
+        "hop" => hop_sweep(requests, compute)?,
+        "policy" => policy_sweep(requests, compute)?,
+        "depth" => depth_sweep(requests, compute)?,
+        "arrival" => arrival_sweep(requests, compute)?,
+        other => {
+            return Err(crate::error::Error::Config(format!(
+                "unknown sweep dim `{other}` (rate|hop|policy|depth|arrival)"
+            )))
+        }
+    };
+    write_output(&out_dir.join(format!("sweep_{dim}.csv")), &sweep.to_csv())?;
+    write_output(&out_dir.join(format!("sweep_{dim}.md")), &sweep.render())?;
+    Ok(sweep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hop_sweep_reduction_grows_with_overhead() {
+        // Small-scale variant with fast merge plumbing so the post-merge
+        // regime dominates the run (the full-scale sweep is `provuse sweep`).
+        let mk = |hop_ms: f64| {
+            let mut cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled);
+            cfg.latency.dispatch_ms = hop_ms;
+            cfg.latency.image_build_ms = 200.0;
+            cfg.latency.boot_ms = 100.0;
+            cfg.fusion.min_observations = 1;
+            cfg
+        };
+        let wl = WorkloadConfig { requests: 300, rate_rps: 20.0, seed: 12, timeout_ms: 120_000.0 };
+        let cheap = point("1ms".into(), 1.0, mk(1.0), wl.clone(), "iot").unwrap();
+        let dear = point("50ms".into(), 50.0, mk(50.0), wl, "iot").unwrap();
+        assert!(
+            dear.reduction_pct > cheap.reduction_pct,
+            "cheap {:?} vs dear {:?}",
+            cheap,
+            dear
+        );
+        assert!(dear.merges > 0);
+    }
+
+    #[test]
+    fn policy_no_transitive_merges_less() {
+        let sweep = policy_sweep(80, ComputeMode::Disabled).unwrap();
+        let default = &sweep.points[0];
+        let no_trans = sweep.points.iter().find(|p| p.label == "no-trans").unwrap();
+        assert!(no_trans.merges <= default.merges);
+        // and yields less benefit on a deep-sync app
+        assert!(no_trans.reduction_pct <= default.reduction_pct + 1.0);
+    }
+
+    #[test]
+    fn unknown_dim_errors() {
+        let dir = std::env::temp_dir();
+        assert!(run("nope", &dir, 10, ComputeMode::Disabled).is_err());
+    }
+}

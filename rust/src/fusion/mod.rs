@@ -1,0 +1,240 @@
+//! Fusion decision layer: the call-graph observation store and the
+//! admission policy.
+//!
+//! The Function Handler reports every *remote synchronous* call it observes
+//! (paper §3: detected via blocking outbound sockets).  Once a (caller,
+//! callee) pair crosses the observation threshold — and passes trust-domain,
+//! cooldown, and group-size checks — a [`FusionRequest`] is emitted to the
+//! Merger.  The observer also maintains the empirically discovered call
+//! graph, which `provuse apps --observed` can dump.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::apps::AppSpec;
+use crate::config::FusionParams;
+use crate::error::Result;
+use crate::exec;
+use crate::exec::channel::Sender;
+
+/// A request for the Merger to fuse the instances hosting two functions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusionRequest {
+    pub caller: String,
+    pub callee: String,
+}
+
+/// Shared observation store + policy gate.
+pub struct Observer {
+    policy: FusionParams,
+    /// fn name -> trust domain (from the app spec)
+    trust: HashMap<String, String>,
+    state: RefCell<ObserverState>,
+    tx: Sender<FusionRequest>,
+}
+
+#[derive(Default)]
+struct ObserverState {
+    /// sync-call observation counts per (caller, callee)
+    counts: BTreeMap<(String, String), u64>,
+    /// pairs already submitted to the merger (suppress duplicates)
+    requested: HashSet<(String, String)>,
+    /// virtual-time (ms) before which a pair may not be re-requested
+    cooldown_until: HashMap<(String, String), f64>,
+}
+
+impl Observer {
+    pub fn new(policy: FusionParams, app: &AppSpec, tx: Sender<FusionRequest>) -> Self {
+        let trust = app
+            .functions()
+            .map(|f| (f.name.clone(), f.trust_domain.clone()))
+            .collect();
+        Observer { policy, trust, state: RefCell::new(ObserverState::default()), tx }
+    }
+
+    pub fn policy(&self) -> &FusionParams {
+        &self.policy
+    }
+
+    /// Record one observed remote synchronous call; may emit a
+    /// [`FusionRequest`] if the policy admits the pair.
+    pub fn observe_sync_call(&self, caller: &str, callee: &str) {
+        let key = (caller.to_string(), callee.to_string());
+        let mut s = self.state.borrow_mut();
+        let count = {
+            let c = s.counts.entry(key.clone()).or_insert(0);
+            *c += 1;
+            *c
+        };
+        if !self.policy.enabled {
+            return;
+        }
+        if count < self.policy.min_observations as u64 {
+            return;
+        }
+        if s.requested.contains(&key) {
+            return;
+        }
+        if let Some(&until) = s.cooldown_until.get(&key) {
+            if exec::now().as_millis_f64() < until {
+                return;
+            }
+        }
+        if self.policy.respect_trust_domains {
+            let (ta, tb) = (self.trust.get(caller), self.trust.get(callee));
+            if ta.is_none() || tb.is_none() || ta != tb {
+                return;
+            }
+        }
+        s.requested.insert(key.clone());
+        drop(s);
+        // Receiver gone (merger shut down) is benign: fusion simply stops.
+        let _ = self.tx.send(FusionRequest { caller: key.0, callee: key.1 });
+    }
+
+    /// Merger feedback: the pair's fusion failed — re-allow after cooldown.
+    pub fn fusion_failed(&self, caller: &str, callee: &str) {
+        let key = (caller.to_string(), callee.to_string());
+        let mut s = self.state.borrow_mut();
+        s.requested.remove(&key);
+        s.cooldown_until
+            .insert(key, exec::now().as_millis_f64() + self.policy.cooldown_ms);
+    }
+
+    /// Merger feedback: the pair is now colocated; further observations of
+    /// this pair are inline calls and will not be reported anyway.
+    pub fn fusion_succeeded(&self, caller: &str, callee: &str) {
+        let key = (caller.to_string(), callee.to_string());
+        self.state.borrow_mut().requested.insert(key);
+    }
+
+    /// Observation count of a pair.
+    pub fn count(&self, caller: &str, callee: &str) -> u64 {
+        self.state
+            .borrow()
+            .counts
+            .get(&(caller.to_string(), callee.to_string()))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// The empirically observed call graph, sorted.
+    pub fn observed_graph(&self) -> Vec<((String, String), u64)> {
+        self.state.borrow().counts.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+}
+
+/// Validate a proposed fused group against the policy (used by the Merger
+/// before committing to a build).
+pub fn admit_group(policy: &FusionParams, group_size: usize) -> Result<()> {
+    if policy.max_group_size > 0 && group_size > policy.max_group_size {
+        return Err(crate::error::Error::FusionAborted(format!(
+            "group size {group_size} exceeds max {}",
+            policy.max_group_size
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::exec::channel::{mpsc, Receiver};
+    use crate::exec::run_virtual;
+
+    fn observer(policy: FusionParams) -> (Observer, Receiver<FusionRequest>) {
+        let (tx, rx) = mpsc();
+        let app = apps::tree();
+        (Observer::new(policy, &app, tx), rx)
+    }
+
+    #[test]
+    fn threshold_gates_requests() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(FusionParams::default_enabled());
+            obs.observe_sync_call("a", "b");
+            obs.observe_sync_call("a", "b");
+            assert!(rx.try_recv().is_none(), "below threshold");
+            obs.observe_sync_call("a", "b");
+            assert_eq!(
+                rx.try_recv(),
+                Some(FusionRequest { caller: "a".into(), callee: "b".into() })
+            );
+            // no duplicate request
+            obs.observe_sync_call("a", "b");
+            assert!(rx.try_recv().is_none());
+            assert_eq!(obs.count("a", "b"), 4);
+        });
+    }
+
+    #[test]
+    fn disabled_policy_never_requests() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(FusionParams::disabled());
+            for _ in 0..10 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert!(rx.try_recv().is_none());
+            assert_eq!(obs.count("a", "b"), 10); // still observes
+        });
+    }
+
+    #[test]
+    fn trust_domain_mismatch_blocks() {
+        run_virtual(async {
+            let (tx, mut rx) = mpsc();
+            let app = apps::AppSpec::builder("t")
+                .function("a").entry().trust_domain("x").sync_call("b").done()
+                .function("b").trust_domain("y").done()
+                .build()
+                .unwrap();
+            let obs = Observer::new(FusionParams::default_enabled(), &app, tx);
+            for _ in 0..5 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert!(rx.try_recv().is_none());
+        });
+    }
+
+    #[test]
+    fn cooldown_after_failure() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(FusionParams::default_enabled());
+            for _ in 0..3 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert!(rx.try_recv().is_some());
+            obs.fusion_failed("a", "b");
+            // immediately re-observed: still cooling down
+            obs.observe_sync_call("a", "b");
+            assert!(rx.try_recv().is_none());
+            crate::exec::sleep_ms(10_001.0).await;
+            obs.observe_sync_call("a", "b");
+            assert!(rx.try_recv().is_some());
+        });
+    }
+
+    #[test]
+    fn group_size_admission() {
+        let mut p = FusionParams::default_enabled();
+        assert!(admit_group(&p, 100).is_ok());
+        p.max_group_size = 3;
+        assert!(admit_group(&p, 3).is_ok());
+        assert!(admit_group(&p, 4).is_err());
+    }
+
+    #[test]
+    fn observed_graph_sorted() {
+        run_virtual(async {
+            let (obs, _rx) = observer(FusionParams::disabled());
+            obs.observe_sync_call("b", "d");
+            obs.observe_sync_call("a", "b");
+            obs.observe_sync_call("a", "b");
+            let g = obs.observed_graph();
+            assert_eq!(g[0].0, ("a".into(), "b".into()));
+            assert_eq!(g[0].1, 2);
+            assert_eq!(g[1].0, ("b".into(), "d".into()));
+        });
+    }
+}

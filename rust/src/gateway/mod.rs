@@ -1,0 +1,161 @@
+//! API gateway: function-name → instance routing with atomic multi-route
+//! hot swap (the Merger's traffic-cutover step depends on it).
+//!
+//! On tinyFaaS the combined instance "overwrites the old function entries
+//! in the API gateway"; on Kubernetes the equivalent is a Service backend
+//! update (paper §4).  Both reduce to the same primitive: swap a set of
+//! routes so no request ever observes a half-updated table.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::containerd::Instance;
+use crate::error::{Error, Result};
+
+/// Routing table handle (cheaply clonable, single-threaded interior
+/// mutability).
+#[derive(Clone, Default)]
+pub struct Gateway {
+    inner: Rc<GatewayInner>,
+}
+
+#[derive(Default)]
+struct GatewayInner {
+    routes: RefCell<HashMap<String, Rc<Instance>>>,
+    /// bumped on every swap; lets tests assert atomicity
+    version: Cell<u64>,
+}
+
+impl Gateway {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install or replace a single route (initial deployment).
+    pub fn set_route(&self, function: impl Into<String>, instance: Rc<Instance>) {
+        self.inner.routes.borrow_mut().insert(function.into(), instance);
+        self.inner.version.set(self.inner.version.get() + 1);
+    }
+
+    /// Atomically repoint every function in `functions` to `instance` —
+    /// the fused-instance cutover.  Either all routes change or none.
+    pub fn swap_routes(&self, functions: &[String], instance: Rc<Instance>) -> Result<()> {
+        let mut routes = self.inner.routes.borrow_mut();
+        for f in functions {
+            if !routes.contains_key(f) {
+                return Err(Error::NoRoute(f.clone()));
+            }
+        }
+        for f in functions {
+            routes.insert(f.clone(), Rc::clone(&instance));
+        }
+        self.inner.version.set(self.inner.version.get() + 1);
+        Ok(())
+    }
+
+    /// Resolve a function to its current instance.
+    pub fn resolve(&self, function: &str) -> Result<Rc<Instance>> {
+        self.inner
+            .routes
+            .borrow()
+            .get(function)
+            .cloned()
+            .ok_or_else(|| Error::NoRoute(function.to_string()))
+    }
+
+    /// Snapshot of the full table (merger introspection, reports).
+    pub fn snapshot(&self) -> Vec<(String, Rc<Instance>)> {
+        let mut v: Vec<(String, Rc<Instance>)> = self
+            .inner
+            .routes
+            .borrow()
+            .iter()
+            .map(|(k, inst)| (k.clone(), Rc::clone(inst)))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.version.get()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.routes.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.routes.borrow().is_empty()
+    }
+
+    /// Number of distinct instances currently routed to.
+    pub fn distinct_instances(&self) -> usize {
+        let routes = self.inner.routes.borrow();
+        let mut ids: Vec<u64> = routes.values().map(|i| i.id().0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::containerd::{ContainerRuntime, FsManifest};
+
+    fn setup() -> (ContainerRuntime, Gateway, Rc<Instance>, Rc<Instance>) {
+        let rt = ContainerRuntime::new(Rc::new(PlatformConfig::tiny()));
+        let img_a = rt.register_image(FsManifest::function_code("a", 1), vec![("a".into(), 9.0)]);
+        let img_b = rt.register_image(FsManifest::function_code("b", 1), vec![("b".into(), 9.0)]);
+        let gw = Gateway::new();
+        let (ia, ib) = crate::exec::run_virtual({
+            let rt = rt.clone();
+            async move { (rt.launch(img_a).unwrap(), rt.launch(img_b).unwrap()) }
+        });
+        gw.set_route("a", Rc::clone(&ia));
+        gw.set_route("b", Rc::clone(&ib));
+        (rt, gw, ia, ib)
+    }
+
+    #[test]
+    fn resolve_and_miss() {
+        let (_rt, gw, ia, _ib) = setup();
+        assert_eq!(gw.resolve("a").unwrap().id(), ia.id());
+        assert!(matches!(gw.resolve("zz"), Err(Error::NoRoute(_))));
+    }
+
+    #[test]
+    fn swap_is_all_or_nothing() {
+        let (rt, gw, _ia, ib) = setup();
+        let fused_img =
+            rt.register_image(FsManifest::function_code("ab", 1), vec![("a".into(), 9.0), ("b".into(), 9.0)]);
+        let fused = crate::exec::run_virtual({
+            let rt = rt.clone();
+            async move { rt.launch(fused_img).unwrap() }
+        });
+        let v0 = gw.version();
+        // includes an unknown function -> must change nothing
+        let err = gw.swap_routes(&["a".into(), "ghost".into()], Rc::clone(&fused));
+        assert!(err.is_err());
+        assert_eq!(gw.version(), v0);
+        assert_ne!(gw.resolve("a").unwrap().id(), fused.id());
+
+        gw.swap_routes(&["a".into(), "b".into()], Rc::clone(&fused)).unwrap();
+        assert_eq!(gw.version(), v0 + 1);
+        assert_eq!(gw.resolve("a").unwrap().id(), fused.id());
+        assert_eq!(gw.resolve("b").unwrap().id(), fused.id());
+        assert_eq!(gw.distinct_instances(), 1);
+        drop(ib);
+    }
+
+    #[test]
+    fn snapshot_sorted() {
+        let (_rt, gw, _a, _b) = setup();
+        let snap = gw.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "a");
+        assert_eq!(snap[1].0, "b");
+    }
+}

@@ -1,0 +1,337 @@
+//! The Function Handler (paper §3): per-instance request dispatch, compute
+//! execution, outbound-call orchestration, and synchronous-call detection.
+//!
+//! The paper's handler owns each function's entry point and inspects the
+//! blocking state of outbound sockets.  Here the handler *is* the entry
+//! point: it executes the function spec, issues its Sync calls concurrently
+//! and awaits them (the blocking signal), detaches Async calls, and reports
+//! every **remote synchronous** call to the fusion [`Observer`].  Calls
+//! whose target resolves to the same instance are inlined — no gateway, no
+//! network, no serialization — which is exactly the fused fast path of
+//! paper Fig. 1.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+
+use crate::apps::{AppSpec, CallMode};
+use crate::billing::{BillingEvent, BillingLedger};
+use crate::config::PlatformConfig;
+use crate::containerd::{Instance, InstanceState};
+use crate::error::{Error, Result};
+use crate::exec;
+use crate::fusion::Observer;
+use crate::gateway::Gateway;
+use crate::metrics::Recorder;
+use crate::netsim::{Fabric, Hop};
+use crate::runtime::ComputeService;
+
+/// How child payloads are derived and responses combined (fixed, so vanilla
+/// and fused deployments produce byte-identical responses).
+const CHILD_MIX: f32 = 0.5;
+const COMBINE_WEIGHT: f32 = 0.1;
+
+type LocalBoxFuture<T> = Pin<Box<dyn Future<Output = T>>>;
+
+/// Request dispatcher: the composition of gateway, fabric, handlers and
+/// compute that a request traverses.  Cheaply clonable.
+#[derive(Clone)]
+pub struct Dispatcher {
+    inner: Rc<DispatcherInner>,
+}
+
+struct DispatcherInner {
+    app: AppSpec,
+    config: Rc<PlatformConfig>,
+    fabric: Fabric,
+    gateway: Gateway,
+    compute: ComputeService,
+    observer: Rc<Observer>,
+    metrics: Recorder,
+    billing: BillingLedger,
+    payload_len: usize,
+    response_len: usize,
+}
+
+impl Dispatcher {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        app: AppSpec,
+        config: Rc<PlatformConfig>,
+        fabric: Fabric,
+        gateway: Gateway,
+        compute: ComputeService,
+        observer: Rc<Observer>,
+        metrics: Recorder,
+        billing: BillingLedger,
+    ) -> Self {
+        let (payload_len, response_len) = match compute.artifacts() {
+            Some(set) => (set.batch * set.in_dim, set.batch * set.out_dim),
+            None => (2048, 64),
+        };
+        Dispatcher {
+            inner: Rc::new(DispatcherInner {
+                app,
+                config,
+                fabric,
+                gateway,
+                compute,
+                observer,
+                metrics,
+                billing,
+                payload_len,
+                response_len,
+            }),
+        }
+    }
+
+    /// Request payload size expected by entry functions (f32 count).
+    pub fn payload_len(&self) -> usize {
+        self.inner.payload_len
+    }
+
+    pub fn response_len(&self) -> usize {
+        self.inner.response_len
+    }
+
+    /// Client-facing invocation of `function` through the full remote path.
+    pub async fn invoke(&self, function: &str, payload: Vec<f32>) -> Result<Vec<f32>> {
+        self.invoke_remote(function.to_string(), payload, 0).await
+    }
+
+    /// Full remote invocation: gateway -> (service) -> network -> handler.
+    fn invoke_remote(
+        &self,
+        function: String,
+        payload: Vec<f32>,
+        depth: u32,
+    ) -> LocalBoxFuture<Result<Vec<f32>>> {
+        let this = self.clone();
+        Box::pin(async move {
+            let d = &this.inner;
+            if depth > 64 {
+                return Err(Error::Request("call depth exceeded".into()));
+            }
+            // gateway admission + route lookup. In-flight accounting starts
+            // at routing time: once the gateway has committed this request
+            // to an instance, a draining original must wait for it
+            // ("stopped and deleted as soon as they are no longer
+            // processing requests", paper §3).
+            let gateway_ms = d.fabric.sample(Hop::Gateway);
+            let inst = d.gateway.resolve(&function)?;
+            inst.request_started();
+
+            // gateway + (kube) service indirection + network + request
+            // serialization, charged as one timer (perf: §Perf L3-3)
+            let env_ms = gateway_ms
+                + d.fabric.sample(Hop::ServiceIndirection)
+                + d.fabric.sample(Hop::Network)
+                + d.fabric.serialize_cost(payload.len() * 4);
+            exec::sleep_ms(env_ms).await;
+
+            // cold-start wait: a booting instance queues the request
+            while inst.state() == InstanceState::Booting {
+                exec::sleep_ms(d.config.latency.health_interval_ms).await;
+            }
+            if inst.state() == InstanceState::Terminated {
+                inst.request_finished();
+                return Err(Error::Request(format!(
+                    "instance {} terminated before dispatch",
+                    inst.id()
+                )));
+            }
+
+            // handler dispatch (entry-point shim) — remote arrivals only;
+            // inlined (fused) calls bypass it entirely (paper Fig. 1).
+            // The dispatch charge is folded into the body's compute timer.
+            let bill_start = exec::now();
+            let dispatch_ms = d.fabric.sample(Hop::Dispatch);
+            let result = this
+                .execute_function(Rc::clone(&inst), function.clone(), payload, depth, dispatch_ms)
+                .await;
+            inst.request_finished();
+            // One billed invocation per remote arrival (§2.3): duration x
+            // instance allocation, *including* time blocked on sync calls —
+            // the double-billing the paper's fusion eliminates.
+            d.billing.record(BillingEvent {
+                function,
+                duration_ms: exec::now().duration_since(bill_start).as_secs_f64() * 1e3,
+                alloc_gb: inst.alloc_mb() / 1024.0,
+            });
+            let out = result?;
+
+            // response path: serialization + network back to the caller
+            let back_ms =
+                d.fabric.serialize_cost(out.len() * 4) + d.fabric.sample(Hop::Network);
+            exec::sleep_ms(back_ms).await;
+            Ok(out)
+        })
+    }
+
+    /// Execute `function` on `inst` (already located there): upfront charge
+    /// (dispatch for remote arrivals, inline hop for fused calls), compute
+    /// body, then the outbound call plan.
+    fn execute_function(
+        &self,
+        inst: Rc<Instance>,
+        function: String,
+        input: Vec<f32>,
+        depth: u32,
+        upfront_ms: f64,
+    ) -> LocalBoxFuture<Result<Vec<f32>>> {
+        let this = self.clone();
+        Box::pin(async move {
+            let d = &this.inner;
+            let spec = d.app.function(&function)?.clone();
+
+            // compute body: real PJRT execution (mode-dependent charging);
+            // charged together with the upfront hop as one timer
+            let (mut out, compute_ms) = match &spec.body {
+                Some(body) => d.compute.run(body, &input)?,
+                None => d.compute.run("", &input)?, // orchestration-only fold
+            };
+            exec::sleep_ms(upfront_ms + compute_ms + spec.busy_ms).await;
+            d.metrics.bump("invocations");
+
+            // --- outbound calls ------------------------------------------------
+            // Sync calls are issued concurrently and joined in spec order
+            // (the handler thread blocks on them -> sync detection); async
+            // calls are detached after the sync group completes.
+            let mut sync_handles = Vec::new();
+            for call in spec.calls.iter().filter(|c| c.mode == CallMode::Sync) {
+                let child_payload = this.child_payload(&out, call.scale);
+                let target_inst = d.gateway.resolve(&call.target)?;
+                let local = target_inst.id() == inst.id();
+                let fut: LocalBoxFuture<Result<Vec<f32>>> = if local {
+                    // fused fast path: in-process call
+                    d.metrics.bump("inline_calls");
+                    let inline_ms = d.fabric.sample(Hop::Inline);
+                    let this2 = this.clone();
+                    let target = call.target.clone();
+                    let inst2 = Rc::clone(&inst);
+                    Box::pin(async move {
+                        this2
+                            .execute_function(inst2, target, child_payload, depth + 1, inline_ms)
+                            .await
+                    })
+                } else {
+                    // remote sync call: THE fusion signal (paper §3)
+                    d.metrics.bump("remote_sync_calls");
+                    d.observer.observe_sync_call(&function, &call.target);
+                    this.invoke_remote(call.target.clone(), child_payload, depth + 1)
+                };
+                sync_handles.push(exec::spawn(fut));
+            }
+            for handle in sync_handles {
+                let child_out = handle.await?;
+                combine(&mut out, &child_out);
+            }
+
+            // async calls: fire-and-forget (own in-flight accounting so a
+            // draining instance is not reclaimed under detached local work)
+            for call in spec.calls.iter().filter(|c| c.mode == CallMode::Async) {
+                let child_payload = this.child_payload(&out, call.scale);
+                let target_inst = d.gateway.resolve(&call.target)?;
+                let local = target_inst.id() == inst.id();
+                let this2 = this.clone();
+                let target = call.target.clone();
+                d.metrics.bump("async_calls");
+                if local {
+                    let inline_ms = d.fabric.sample(Hop::Inline);
+                    let inst2 = Rc::clone(&inst);
+                    // count before detaching so a drain waits for this work
+                    inst2.request_started();
+                    exec::spawn(async move {
+                        let r = this2
+                            .execute_function(
+                                Rc::clone(&inst2),
+                                target,
+                                child_payload,
+                                depth + 1,
+                                inline_ms,
+                            )
+                            .await;
+                        inst2.request_finished();
+                        if r.is_err() {
+                            this2.inner.metrics.bump("async_failures");
+                        }
+                    });
+                } else {
+                    exec::spawn(async move {
+                        let r = this2.invoke_remote(target, child_payload, depth + 1).await;
+                        if r.is_err() {
+                            this2.inner.metrics.bump("async_failures");
+                        }
+                    });
+                }
+            }
+
+            Ok(out)
+        })
+    }
+
+    /// Derive a child call payload from the caller's output: deterministic
+    /// tiling + linear transform (same math in vanilla and fused paths).
+    ///
+    /// Perf (EXPERIMENTS.md §Perf L3-1): scale the source once, then tile
+    /// with `copy_from_slice` chunks — the naive `out[i % len]` loop costs
+    /// a div per element and dominated the simulated request's CPU time.
+    fn child_payload(&self, out: &[f32], scale: f32) -> Vec<f32> {
+        let n = self.inner.payload_len;
+        let mut payload = vec![0.0f32; n];
+        if out.is_empty() {
+            return payload;
+        }
+        let factor = scale * CHILD_MIX;
+        let scaled: Vec<f32> = out.iter().map(|v| v * factor).collect();
+        let mut chunks = payload.chunks_exact_mut(scaled.len());
+        for chunk in &mut chunks {
+            chunk.copy_from_slice(&scaled);
+        }
+        let rem = chunks.into_remainder();
+        rem.copy_from_slice(&scaled[..rem.len()]);
+        payload
+    }
+}
+
+/// Fold a child response into the caller's output (fixed spec order keeps
+/// this deterministic and deployment-independent).
+fn combine(out: &mut [f32], child: &[f32]) {
+    if child.is_empty() {
+        return;
+    }
+    if out.len() == child.len() {
+        // common case (uniform body signature): no index arithmetic
+        for (v, c) in out.iter_mut().zip(child) {
+            *v += COMBINE_WEIGHT * c;
+        }
+    } else {
+        for (i, v) in out.iter_mut().enumerate() {
+            *v += COMBINE_WEIGHT * child[i % child.len()];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combine_is_order_dependent_but_deterministic() {
+        let mut a = vec![1.0f32; 4];
+        combine(&mut a, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a, vec![1.1, 1.2, 1.3, 1.4]);
+        let mut b = vec![1.0f32; 4];
+        combine(&mut b, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn combine_handles_len_mismatch() {
+        let mut a = vec![0.0f32; 5];
+        combine(&mut a, &[1.0, 2.0]);
+        assert_eq!(a, vec![0.1, 0.2, 0.1, 0.2, 0.1]);
+        combine(&mut a, &[]);
+        assert_eq!(a, vec![0.1, 0.2, 0.1, 0.2, 0.1]);
+    }
+}

@@ -1,0 +1,328 @@
+//! Real-time HTTP front end: serves a deployed platform over actual TCP
+//! with a minimal HTTP/1.1 implementation (no hyper offline).
+//!
+//! Architecture: OS threads own the listener and per-connection I/O and
+//! forward parsed requests through a thread-safe mpsc into the
+//! single-threaded platform executor (running in [`exec::Mode::Real`]);
+//! replies travel back over oneshot channels.  Python is nowhere in sight:
+//! the compute bodies the requests exercise are the AOT artifacts executed
+//! through PJRT.
+//!
+//! Endpoints:
+//! * `POST /invoke` — invoke the app's entry function. Body: optional JSON
+//!   array of f32 (padded/truncated to the payload length); empty body uses
+//!   a seeded payload.
+//! * `POST /invoke/<function>` — invoke a specific function.
+//! * `GET /metrics` — latency quantiles, RAM, merges, counters as JSON.
+//! * `GET /routes` — current routing table.
+//! * `GET /healthz` — liveness.
+//! * `POST /shutdown` — stop the server.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::apps::AppSpec;
+use crate::config::PlatformConfig;
+use crate::error::{Error, Result};
+use crate::exec::channel::{mpsc, oneshot, OneshotSender, Sender};
+use crate::exec::{Executor, Mode};
+use crate::platform::Platform;
+use crate::util::json::Json;
+use crate::workload::request_payload;
+
+/// A parsed inbound request, crossing from the I/O threads to the executor.
+struct FrontRequest {
+    function: Option<String>,
+    payload: Option<Vec<f32>>,
+    reply: OneshotSender<FrontReply>,
+}
+
+enum FrontReply {
+    Output(Vec<f32>, f64),
+    Metrics(String),
+    Routes(String),
+    Error(String),
+}
+
+/// Serve `app` on `config` at `127.0.0.1:port`.  Blocks until
+/// `POST /shutdown` (or `max_requests` invocations, if set).
+pub fn serve(app: AppSpec, config: PlatformConfig, port: u16, max_requests: Option<u64>) -> Result<()> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    let actual_port = listener.local_addr()?.port();
+    eprintln!("provuse: serving on http://127.0.0.1:{actual_port}");
+
+    let (tx, mut rx) = mpsc::<Option<FrontRequest>>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+
+    // accept loop on an OS thread
+    let accept_stop = Arc::clone(&stop);
+    let accept_tx = tx.clone();
+    let io_thread = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if accept_stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let tx = accept_tx.clone();
+            let stop = Arc::clone(&accept_stop);
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, &tx, &stop);
+            });
+        }
+    });
+
+    // platform executor on this thread
+    let ex = Executor::new(Mode::Real);
+    let served_main = Arc::clone(&served);
+    let result: Result<()> = ex.block_on(async move {
+        let platform = Platform::deploy(app, config).await?;
+        eprintln!(
+            "provuse: deployed `{}` ({} functions, {} instances)",
+            platform.app.name,
+            platform.app.len(),
+            platform.containers.live_count()
+        );
+        while let Some(msg) = rx.recv().await {
+            let Some(req) = msg else { break }; // shutdown sentinel
+            let platform = Rc::clone(&platform);
+            let served = Arc::clone(&served_main);
+            crate::exec::spawn(async move {
+                let reply = match &req.function {
+                    None => metrics_or_invoke(&platform, req.payload, &served).await,
+                    Some(f) if f == "__metrics" => {
+                        FrontReply::Metrics(metrics_json(&platform))
+                    }
+                    Some(f) if f == "__routes" => FrontReply::Routes(routes_json(&platform)),
+                    Some(f) => {
+                        let payload = materialize_payload(&platform, req.payload, &served);
+                        match invoke_timed(&platform, Some(f.clone()), payload).await {
+                            Ok((out, ms)) => FrontReply::Output(out, ms),
+                            Err(e) => FrontReply::Error(e.to_string()),
+                        }
+                    }
+                };
+                let _ = req.reply.send(reply);
+            });
+            if let Some(max) = max_requests {
+                if served_main.load(Ordering::SeqCst) >= max {
+                    break;
+                }
+            }
+        }
+        platform.shutdown();
+        Ok(())
+    });
+
+    stop.store(true, Ordering::SeqCst);
+    // unblock the accept loop
+    let _ = TcpStream::connect(("127.0.0.1", actual_port));
+    let _ = io_thread.join();
+    result
+}
+
+fn materialize_payload(
+    platform: &Platform,
+    payload: Option<Vec<f32>>,
+    served: &AtomicU64,
+) -> Vec<f32> {
+    let len = platform.payload_len();
+    match payload {
+        Some(mut p) => {
+            p.resize(len, 0.0);
+            p
+        }
+        None => request_payload(0xF00D, served.load(Ordering::SeqCst), len),
+    }
+}
+
+async fn metrics_or_invoke(
+    platform: &Rc<Platform>,
+    payload: Option<Vec<f32>>,
+    served: &Arc<AtomicU64>,
+) -> FrontReply {
+    let payload = materialize_payload(platform, payload, served);
+    match invoke_timed(platform, None, payload).await {
+        Ok((out, ms)) => {
+            served.fetch_add(1, Ordering::SeqCst);
+            FrontReply::Output(out, ms)
+        }
+        Err(e) => FrontReply::Error(e.to_string()),
+    }
+}
+
+async fn invoke_timed(
+    platform: &Rc<Platform>,
+    function: Option<String>,
+    payload: Vec<f32>,
+) -> Result<(Vec<f32>, f64)> {
+    let t0 = crate::exec::now();
+    let arrival = platform.metrics.rel_now_ms();
+    let out = match &function {
+        None => platform.invoke(payload).await?,
+        Some(f) => platform.invoke_function(f, payload).await?,
+    };
+    let ms = crate::exec::now().duration_since(t0).as_secs_f64() * 1e3;
+    platform.metrics.record_latency(arrival, ms);
+    Ok((out, ms))
+}
+
+fn metrics_json(platform: &Platform) -> String {
+    let q = platform.metrics.latency_quantiles();
+    let merges = platform.metrics.merges();
+    Json::obj(vec![
+        ("requests", Json::Num(q.len() as f64)),
+        ("median_ms", Json::Num(q.median())),
+        ("p95_ms", Json::Num(q.p95())),
+        ("p99_ms", Json::Num(q.p99())),
+        ("ram_mb", Json::Num(platform.containers.total_ram_mb())),
+        ("instances", Json::Num(platform.containers.live_count() as f64)),
+        ("merges", Json::Num(merges.len() as f64)),
+        (
+            "merged_functions",
+            Json::Arr(
+                merges
+                    .iter()
+                    .map(|m| Json::str(m.functions.join("+")))
+                    .collect(),
+            ),
+        ),
+        ("inline_calls", Json::Num(platform.metrics.counter("inline_calls") as f64)),
+        (
+            "remote_sync_calls",
+            Json::Num(platform.metrics.counter("remote_sync_calls") as f64),
+        ),
+    ])
+    .to_string()
+}
+
+fn routes_json(platform: &Platform) -> String {
+    Json::Obj(
+        platform
+            .gateway
+            .snapshot()
+            .into_iter()
+            .map(|(f, inst)| (f, Json::str(inst.id().to_string())))
+            .collect(),
+    )
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// minimal HTTP/1.1
+// ---------------------------------------------------------------------------
+
+fn handle_connection(
+    stream: TcpStream,
+    tx: &Sender<Option<FrontRequest>>,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length.min(16 << 20)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+
+    let mut stream = stream;
+    let respond = |stream: &mut TcpStream, code: u16, body: &str| -> std::io::Result<()> {
+        write!(
+            stream,
+            "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            if code == 200 { "OK" } else { "Error" },
+            body.len(),
+        )
+    };
+
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => respond(&mut stream, 200, r#"{"ok":true}"#),
+        ("POST", "/shutdown") => {
+            stop.store(true, Ordering::SeqCst);
+            let _ = tx.send(None);
+            respond(&mut stream, 200, r#"{"shutdown":true}"#)
+        }
+        ("GET", "/metrics") | ("GET", "/routes") => {
+            let magic = if path == "/metrics" { "__metrics" } else { "__routes" };
+            match roundtrip(tx, Some(magic.to_string()), None) {
+                Ok(FrontReply::Metrics(j)) | Ok(FrontReply::Routes(j)) => {
+                    respond(&mut stream, 200, &j)
+                }
+                _ => respond(&mut stream, 500, r#"{"error":"internal"}"#),
+            }
+        }
+        ("POST", p) if p == "/invoke" || p.starts_with("/invoke/") => {
+            let function = p.strip_prefix("/invoke/").map(|s| s.to_string());
+            let payload = parse_payload(&body);
+            match roundtrip(tx, function, payload) {
+                Ok(FrontReply::Output(out, ms)) => {
+                    let json = Json::obj(vec![
+                        ("latency_ms", Json::Num(ms)),
+                        ("output", Json::arr_f64(out.iter().map(|v| *v as f64))),
+                    ]);
+                    respond(&mut stream, 200, &json.to_string())
+                }
+                Ok(FrontReply::Error(e)) => {
+                    respond(&mut stream, 500, &Json::obj(vec![("error", Json::str(e))]).to_string())
+                }
+                _ => respond(&mut stream, 500, r#"{"error":"internal"}"#),
+            }
+        }
+        _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),
+    }
+}
+
+fn parse_payload(body: &[u8]) -> Option<Vec<f32>> {
+    if body.is_empty() {
+        return None;
+    }
+    let text = std::str::from_utf8(body).ok()?;
+    let json = Json::parse(text).ok()?;
+    json.as_f32_vec().ok()
+}
+
+/// Send a request into the executor and synchronously wait for the reply
+/// (we are on an I/O thread; the oneshot is mutex-based so busy-wait with a
+/// short sleep is fine and keeps the receiver non-async).
+fn roundtrip(
+    tx: &Sender<Option<FrontRequest>>,
+    function: Option<String>,
+    payload: Option<Vec<f32>>,
+) -> Result<FrontReply> {
+    let (reply_tx, reply_rx) = oneshot::<FrontReply>();
+    tx.send(Some(FrontRequest { function, payload, reply: reply_tx }))
+        .map_err(|_| Error::Request("server shutting down".into()))?;
+    // poll the oneshot from this thread (no executor here)
+    let mut rx = Box::pin(reply_rx);
+    let waker = std::task::Waker::noop().clone();
+    let mut cx = std::task::Context::from_waker(&waker);
+    loop {
+        use std::future::Future;
+        match rx.as_mut().poll(&mut cx) {
+            std::task::Poll::Ready(Ok(reply)) => return Ok(reply),
+            std::task::Poll::Ready(Err(_)) => {
+                return Err(Error::Request("reply channel closed".into()))
+            }
+            std::task::Poll::Pending => std::thread::sleep(std::time::Duration::from_millis(2)),
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! # Provuse — platform-side function fusion for FaaS (reproduction)
+//!
+//! Reproduction of *"Provuse: Platform-Side Function Fusion for Performance
+//! and Efficiency in FaaS Environments"* (Kowallik et al., CS.DC 2026) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the FaaS platform and the paper's
+//!   contribution: API gateway, Function Handler with synchronous-call
+//!   detection, the Merger (filesystem union → image build → deploy →
+//!   reroute → drain), fusion policy, two platform flavors (tinyFaaS-like
+//!   and Kubernetes-like), a simulated container runtime, a network fabric
+//!   model, metrics, and a k6-like workload generator.
+//! * **Layer 2 (python/compile/model.py)** — the benchmark functions'
+//!   compute bodies as JAX graphs, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels behind those
+//!   graphs, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts through the PJRT CPU client (`xla` crate) and executes them
+//! from Rust.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod apps;
+pub mod billing;
+pub mod config;
+pub mod containerd;
+pub mod error;
+pub mod exec;
+pub mod experiments;
+pub mod fusion;
+pub mod gateway;
+pub mod handler;
+pub mod httpfront;
+pub mod merger;
+pub mod metrics;
+pub mod netsim;
+pub mod platform;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

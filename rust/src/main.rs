@@ -1,0 +1,211 @@
+//! `provuse` — CLI launcher for the Provuse reproduction.
+//!
+//! Subcommands map to DESIGN.md's experiment index:
+//!
+//! ```text
+//! provuse figure5             regenerate paper Fig. 5 (IOT/tinyFaaS series)
+//! provuse figure6             regenerate paper Fig. 6 + §5.2 tables
+//! provuse ram-table           TAB-RAM (RAM columns of the matrix)
+//! provuse sweep --dim X       ablations: rate | hop | policy
+//! provuse experiment ...      one custom run
+//! provuse apps [--graph APP]  list apps / emit DOT call graphs (Figs. 3-4)
+//! provuse validate-artifacts  PJRT vs python golden parity check
+//! provuse dump-config         print platform calibration as JSON
+//! ```
+
+use provuse::config::{ComputeMode, PlatformConfig, PlatformKind, WorkloadConfig};
+use provuse::error::Result;
+use provuse::util::args::Args;
+use provuse::{apps, experiments, runtime};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn workload_from(args: &Args) -> Result<WorkloadConfig> {
+    let paper = WorkloadConfig::paper();
+    Ok(WorkloadConfig {
+        requests: args.u64_or("requests", paper.requests)?,
+        rate_rps: args.f64_or("rate", paper.rate_rps)?,
+        seed: args.u64_or("seed", paper.seed)?,
+        timeout_ms: args.f64_or("timeout-ms", paper.timeout_ms)?,
+    })
+}
+
+fn compute_from(args: &Args) -> ComputeMode {
+    if args.has("live") {
+        ComputeMode::Live
+    } else if args.has("no-compute") {
+        ComputeMode::Disabled
+    } else {
+        ComputeMode::Replay
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("figure5") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/fig5"));
+            let fig = experiments::fig5::run(&out, workload_from(args)?, compute_from(args))?;
+            println!("{}", fig.render());
+            println!("outputs written to {}", out.display());
+            Ok(())
+        }
+        Some("figure6") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/fig6"));
+            let fig = experiments::fig6::run(&out, workload_from(args)?, compute_from(args))?;
+            println!("{}", fig.render());
+            println!("outputs written to {}", out.display());
+            Ok(())
+        }
+        Some("ram-table") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/ram"));
+            let fig = experiments::fig6::run(&out, workload_from(args)?, compute_from(args))?;
+            println!("TAB-RAM: platform RAM (time-weighted mean, MiB)\n");
+            println!("| config | vanilla | fusion | reduction | paper |");
+            println!("|--------|--------:|-------:|----------:|------:|");
+            for c in &fig.cells {
+                println!(
+                    "| {}/{} | {:.0} | {:.0} | {:.1}% | ~{:.0}% |",
+                    c.platform.name(),
+                    c.app,
+                    c.vanilla.ram_mean_mb,
+                    c.fusion.ram_mean_mb,
+                    c.ram_reduction_pct(),
+                    c.paper.ram_reduction_pct
+                );
+            }
+            println!(
+                "| average | | | {:.1}% | 53.6% |",
+                fig.mean_ram_reduction_pct()
+            );
+            Ok(())
+        }
+        Some("cost-table") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/cost"));
+            let fig = experiments::fig6::run(&out, workload_from(args)?, compute_from(args))?;
+            println!("{}", fig.render_cost());
+            Ok(())
+        }
+        Some("sweep") => {
+            let dim = args.str_or("dim", "rate");
+            let out = std::path::PathBuf::from(args.str_or("out", "results/sweeps"));
+            let requests = args.u64_or("requests", 2_000)?;
+            let sweep = experiments::sweep::run(&dim, &out, requests, compute_from(args))?;
+            println!("{}", sweep.render());
+            Ok(())
+        }
+        Some("experiment") => {
+            let kind = PlatformKind::parse(&args.str_or("platform", "tiny"))?;
+            let app = args.str_or("app", "iot");
+            let fusion = !args.has("vanilla");
+            let result =
+                experiments::run_one(kind, &app, fusion, workload_from(args)?, compute_from(args))?;
+            println!("{}: {}", result.label(), result.report.summary());
+            println!(
+                "  RAM mean {:.0} MiB, {} merges, {} final instances, {} inline calls",
+                result.ram_mean_mb,
+                result.merges.len(),
+                result.final_instances,
+                result.inline_calls
+            );
+            Ok(())
+        }
+        Some("apps") => {
+            if let Some(name) = args.flag("graph") {
+                let app = apps::by_name(name)?;
+                println!("{}", app.to_dot());
+            } else {
+                println!("available applications:");
+                for name in apps::APP_NAMES {
+                    let app = apps::by_name(name)?;
+                    println!(
+                        "  {:<6} {} functions, entry `{}`, fusion groups: {:?}",
+                        name,
+                        app.len(),
+                        app.entry,
+                        app.sync_fusion_groups()
+                    );
+                }
+            }
+            Ok(())
+        }
+        Some("validate-artifacts") => {
+            let dir = args.str_or("dir", "artifacts");
+            let set = runtime::ArtifactSet::load(&dir)?;
+            let results = set.validate(1e-4)?;
+            let mut all_ok = true;
+            println!("cross-layer parity (rust/PJRT vs python golden):");
+            for v in &results {
+                println!(
+                    "  {:>16}: max |err| = {:.2e}  {}",
+                    v.name,
+                    v.max_abs_err,
+                    if v.ok { "OK" } else { "FAIL" }
+                );
+                all_ok &= v.ok;
+            }
+            if !all_ok {
+                return Err(provuse::Error::Runtime("artifact validation failed".into()));
+            }
+            println!("{} artifacts OK", results.len());
+            Ok(())
+        }
+        Some("serve") => {
+            let kind = PlatformKind::parse(&args.str_or("platform", "tiny"))?;
+            let app = apps::by_name(&args.str_or("app", "iot"))?;
+            let port = args.u64_or("port", 8080)? as u16;
+            let scale = args.f64_or("scale", 1.0)?;
+            let mut config = PlatformConfig::of_kind(kind)
+                .with_compute(if args.has("no-compute") {
+                    ComputeMode::Disabled
+                } else {
+                    ComputeMode::Live
+                })
+                .scale_latency(scale);
+            if args.has("vanilla") {
+                config = config.vanilla();
+            }
+            provuse::httpfront::serve(app, config, port, None)
+        }
+        Some("dump-config") => {
+            let kind = PlatformKind::parse(&args.str_or("platform", "tiny"))?;
+            println!("{}", PlatformConfig::of_kind(kind).to_json().to_string());
+            Ok(())
+        }
+        Some(other) => Err(provuse::Error::Config(format!("unknown command `{other}`"))),
+        None => {
+            println!(
+                "provuse — platform-side function fusion (paper reproduction)\n\n\
+                 usage: provuse <command> [flags]\n\n\
+                 commands:\n\
+                 \x20 figure5              paper Fig. 5 (IOT/tinyFaaS latency series)\n\
+                 \x20 figure6              paper Fig. 6 + §5.2 latency table\n\
+                 \x20 ram-table            §5.2 RAM reductions\n\
+                 \x20 cost-table           TAB-COST: double-billing elimination in $\n\
+                 \x20 sweep --dim D        ablations (rate|hop|policy|depth|arrival)\n\
+                 \x20 experiment           one custom run (--platform, --app, --vanilla)\n\
+                 \x20 apps [--graph APP]   app list / DOT call graphs (Figs. 3-4)\n\
+                 \x20 validate-artifacts   PJRT vs python golden parity\n\
+                 \x20 serve --port P       real HTTP front end (live PJRT compute)\n\
+                 \x20 dump-config          print calibration JSON\n\n\
+                 common flags: --requests N --rate R --seed S --live --no-compute --out DIR"
+            );
+            Ok(())
+        }
+    }
+}

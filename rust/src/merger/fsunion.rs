@@ -1,0 +1,151 @@
+//! Collision-preserving filesystem union (paper §3):
+//!
+//! > "To prevent file overwrites caused by colliding function names, the
+//! > Merger preserves the original identifiers of each function instance
+//! > while copying them into the shared file system."
+//!
+//! Shared platform layers (`/runtime/...`, `/platform/...`) with identical
+//! digests are deduplicated; everything under `/app/` is kept per-function.
+//! Genuine digest conflicts on a shared path are resolved by namespacing
+//! the conflicting copy under `/merged/<tag>/...` so no input file is lost.
+
+use crate::containerd::{FileEntry, FsManifest};
+
+/// Union the filesystems of instances being merged.
+/// `parts` = (instance tag, manifest) in merge order.
+pub fn union_namespaced(parts: &[(String, FsManifest)]) -> FsManifest {
+    let mut out: Vec<FileEntry> = Vec::new();
+
+    for (tag, manifest) in parts {
+        for entry in manifest.entries() {
+            match out.iter().find(|e| e.path == entry.path) {
+                None => out.push(entry.clone()),
+                Some(existing) if existing.digest == entry.digest => {
+                    // identical shared layer (runtime, handler shim): dedup
+                }
+                Some(_) => {
+                    // same path, different contents: preserve under a
+                    // namespaced copy instead of overwriting
+                    out.push(FileEntry {
+                        path: format!("/merged/{tag}{}", entry.path),
+                        size_kb: entry.size_kb,
+                        digest: entry.digest,
+                    });
+                }
+            }
+        }
+    }
+    FsManifest::new(out)
+}
+
+/// Check that every input file is reachable in the union — either at its
+/// original path with the same digest, or under the `/merged/<tag>` prefix.
+/// (The property the paper's collision-preservation rule guarantees; used
+/// by tests and by the Merger's post-union assertion.)
+pub fn union_preserves(parts: &[(String, FsManifest)], union: &FsManifest) -> bool {
+    for (tag, manifest) in parts {
+        for entry in manifest.entries() {
+            let direct = union.get(&entry.path).map(|e| e.digest == entry.digest);
+            let namespaced = union
+                .get(&format!("/merged/{tag}{}", entry.path))
+                .map(|e| e.digest == entry.digest);
+            if direct != Some(true) && namespaced != Some(true) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(tag: &str, files: &[(&str, u64, u64)]) -> (String, FsManifest) {
+        (
+            tag.to_string(),
+            FsManifest::new(
+                files
+                    .iter()
+                    .map(|(p, s, d)| FileEntry {
+                        path: p.to_string(),
+                        size_kb: *s,
+                        digest: *d,
+                    })
+                    .collect(),
+            ),
+        )
+    }
+
+    #[test]
+    fn disjoint_functions_union_cleanly() {
+        let a = part("i1", &[("/runtime/py", 100, 1), ("/app/a/main.py", 5, 10)]);
+        let b = part("i2", &[("/runtime/py", 100, 1), ("/app/b/main.py", 7, 20)]);
+        let u = union_namespaced(&[a.clone(), b.clone()]);
+        assert_eq!(u.len(), 3); // runtime deduped
+        assert!(u.contains_path("/app/a/main.py"));
+        assert!(u.contains_path("/app/b/main.py"));
+        assert!(union_preserves(&[a, b], &u));
+    }
+
+    #[test]
+    fn colliding_paths_are_preserved_not_overwritten() {
+        let a = part("i1", &[("/app/shared/config.json", 1, 111)]);
+        let b = part("i2", &[("/app/shared/config.json", 1, 222)]);
+        let u = union_namespaced(&[a.clone(), b.clone()]);
+        assert_eq!(u.len(), 2);
+        assert_eq!(u.get("/app/shared/config.json").unwrap().digest, 111);
+        assert_eq!(u.get("/merged/i2/app/shared/config.json").unwrap().digest, 222);
+        assert!(union_preserves(&[a, b], &u));
+    }
+
+    #[test]
+    fn real_function_manifests_union() {
+        let a = ("i1".to_string(), FsManifest::function_code("alpha", 50));
+        let b = ("i2".to_string(), FsManifest::function_code("beta", 60));
+        let u = union_namespaced(&[a.clone(), b.clone()]);
+        // 2 shared layers + 2 files per function
+        assert_eq!(u.len(), 6);
+        assert!(union_preserves(&[a, b], &u));
+    }
+
+    #[test]
+    fn union_is_idempotent_for_identical_parts() {
+        let a = ("i1".to_string(), FsManifest::function_code("x", 10));
+        let u = union_namespaced(&[a.clone(), a.clone()]);
+        assert_eq!(u, a.1);
+    }
+
+    #[test]
+    fn three_way_union_preserves_all() {
+        let parts = vec![
+            part("i1", &[("/app/f/cfg", 1, 1), ("/app/f/main.py", 2, 2)]),
+            part("i2", &[("/app/f/cfg", 1, 3), ("/app/g/main.py", 2, 4)]),
+            part("i3", &[("/app/f/cfg", 1, 5), ("/app/h/main.py", 2, 6)]),
+        ];
+        let u = union_namespaced(&parts);
+        assert!(union_preserves(&parts, &u));
+        assert!(u.contains_path("/merged/i2/app/f/cfg"));
+        assert!(u.contains_path("/merged/i3/app/f/cfg"));
+    }
+
+    #[test]
+    fn property_union_always_preserves() {
+        crate::util::prop::check("fsunion preserves all inputs", 200, |g| {
+            let n_parts = g.usize(1, 4);
+            let parts: Vec<(String, FsManifest)> = (0..n_parts)
+                .map(|i| {
+                    let files = g.vec(12, |g| FileEntry {
+                        // small path space to force collisions
+                        path: format!("/app/{}/f{}", g.ident(2), g.usize(0, 3)),
+                        size_kb: g.usize(1, 100) as u64,
+                        digest: g.usize(0, 6) as u64,
+                    });
+                    (format!("i{i}"), FsManifest::new(files))
+                })
+                .collect();
+            let u = union_namespaced(&parts);
+            assert!(union_preserves(&parts, &u), "parts={parts:?}\nunion={u:?}");
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! The Merger (paper §3): consolidates independently deployed function
+//! instances into a single container.
+//!
+//! Pipeline per fusion request: resolve instances → export filesystems →
+//! collision-preserving union → build fused image → deploy → health gate →
+//! atomic route cutover → drain originals → terminate.  Failures at any
+//! stage roll back (never-routed instances are torn down, the pair goes on
+//! cooldown) and the platform keeps serving from the originals.
+
+pub mod fsunion;
+
+use std::rc::Rc;
+
+use crate::config::PlatformConfig;
+use crate::containerd::{ContainerRuntime, Instance};
+use crate::error::{Error, Result};
+use crate::exec;
+use crate::exec::channel::Receiver;
+use crate::fusion::{admit_group, FusionRequest, Observer};
+use crate::gateway::Gateway;
+use crate::metrics::{MergeEvent, Recorder};
+use crate::platform::deployer::Deployer;
+
+/// Everything the Merger needs from the platform.
+pub struct MergerCtx {
+    pub config: Rc<PlatformConfig>,
+    pub containers: ContainerRuntime,
+    pub gateway: Gateway,
+    pub observer: Rc<Observer>,
+    pub metrics: Recorder,
+    pub deployer: Deployer,
+}
+
+/// The Merger service: processes fusion requests sequentially (one merge in
+/// flight at a time, matching the serialized merge events of paper Fig. 5).
+pub struct Merger {
+    ctx: MergerCtx,
+}
+
+impl Merger {
+    pub fn new(ctx: MergerCtx) -> Self {
+        Merger { ctx }
+    }
+
+    /// Service loop; ends when all request senders are dropped.
+    pub async fn run(self, mut rx: Receiver<FusionRequest>) {
+        while let Some(req) = rx.recv().await {
+            if let Err(err) = self.handle(&req).await {
+                self.ctx.metrics.bump("fusion_aborted");
+                self.ctx.observer.fusion_failed(&req.caller, &req.callee);
+                // The platform keeps serving from the original instances.
+                let _ = err;
+            }
+        }
+    }
+
+    /// One merge. Public for targeted tests.
+    pub async fn handle(&self, req: &FusionRequest) -> Result<()> {
+        let ctx = &self.ctx;
+        ctx.metrics.bump("fusion_requests");
+
+        // 1. resolve both endpoints to their *current* instances (either may
+        //    already be a fused instance -> transitive growth)
+        let a = ctx.gateway.resolve(&req.caller)?;
+        let b = ctx.gateway.resolve(&req.callee)?;
+        if a.id() == b.id() {
+            ctx.metrics.bump("fusion_already_colocated");
+            return Ok(());
+        }
+        let policy = ctx.observer.policy();
+        if !policy.transitive && (a.functions().len() > 1 || b.functions().len() > 1) {
+            return Err(Error::FusionAborted("transitive growth disabled".into()));
+        }
+        let group_size = a.functions().len() + b.functions().len();
+        admit_group(policy, group_size)?;
+
+        let t_start = exec::now();
+
+        // 2. export + union filesystems (collision-preserving)
+        let fs_a = ctx.containers.export_fs(&a)?;
+        let fs_b = ctx.containers.export_fs(&b)?;
+        let parts = vec![(a.id().to_string(), fs_a), (b.id().to_string(), fs_b)];
+        let merged = fsunion::union_namespaced(&parts);
+        debug_assert!(fsunion::union_preserves(&parts, &merged));
+
+        // 3. build the fused image (charged build latency; may fail)
+        let mut functions = a.functions().to_vec();
+        functions.extend(b.functions().iter().cloned());
+        let image = ctx.containers.build_image(merged, functions.clone()).await?;
+
+        // 4. deploy (platform-flavored: direct or reconciler-gated)
+        let fused = ctx.deployer.launch(image).await?;
+
+        // 5. health gate: N consecutive successes before any traffic cutover
+        self.await_healthy(&fused).await.inspect_err(|_| {
+            // roll back the never-routed instance
+            let _ = fused.begin_drain();
+            let _ = ctx.containers.terminate(&fused);
+        })?;
+
+        // 6. atomic route cutover for every hosted function
+        let names: Vec<String> = functions.iter().map(|(n, _)| n.clone()).collect();
+        ctx.gateway.swap_routes(&names, Rc::clone(&fused))?;
+        let now = exec::now();
+        ctx.metrics.record_merge(MergeEvent {
+            t_ms: ctx.metrics.rel_now_ms(),
+            functions: names,
+            duration_ms: now.duration_since(t_start).as_secs_f64() * 1e3,
+        });
+        ctx.metrics.bump("fusions_completed");
+        ctx.observer.fusion_succeeded(&req.caller, &req.callee);
+
+        // 7. drain + terminate the originals off the merge loop ("stopped
+        //    and deleted as soon as they are no longer processing requests")
+        for old in [a, b] {
+            old.begin_drain()?;
+            let containers = ctx.containers.clone();
+            let metrics = ctx.metrics.clone();
+            exec::spawn(async move {
+                old.drained().await;
+                if containers.terminate(&old).is_ok() {
+                    metrics.bump("instances_reclaimed");
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Poll health checks until `health_checks_required` consecutive passes
+    /// or the deadline (4x boot + 5s) expires.
+    async fn await_healthy(&self, inst: &Rc<Instance>) -> Result<()> {
+        let lat = &self.ctx.config.latency;
+        let deadline_ms =
+            exec::now().as_millis_f64() + lat.boot_ms * 4.0 + 5_000.0;
+        let mut passes = 0u32;
+        loop {
+            exec::sleep_ms(lat.health_interval_ms).await;
+            if self.ctx.containers.health_check(inst) {
+                passes += 1;
+                if passes >= lat.health_checks_required {
+                    return Ok(());
+                }
+            } else {
+                passes = 0;
+            }
+            if exec::now().as_millis_f64() > deadline_ms {
+                self.ctx.metrics.bump("fusion_health_timeouts");
+                return Err(Error::HealthTimeout(inst.id().0));
+            }
+        }
+    }
+}

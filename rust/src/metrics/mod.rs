@@ -1,0 +1,262 @@
+//! Metrics recorder: request latencies, RAM time series, merge events, and
+//! named counters — everything the paper's evaluation section reports.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::util::stats::Quantiles;
+
+/// One completed request.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySample {
+    /// virtual time the request arrived at the gateway (ms since start)
+    pub t_ms: f64,
+    /// end-to-end latency (ms)
+    pub latency_ms: f64,
+}
+
+/// One RAM ledger sample.
+#[derive(Debug, Clone, Copy)]
+pub struct RamSample {
+    pub t_ms: f64,
+    /// total platform RAM across live instances (MiB)
+    pub total_mb: f64,
+    /// number of live (booting/healthy/draining) instances
+    pub instances: usize,
+}
+
+/// One completed merge (a vertical line in the paper's Fig. 5).
+#[derive(Debug, Clone)]
+pub struct MergeEvent {
+    /// virtual time the fused instance went healthy + routed (ms)
+    pub t_ms: f64,
+    /// functions hosted by the new fused instance
+    pub functions: Vec<String>,
+    /// wall (virtual) duration of the merge pipeline (ms)
+    pub duration_ms: f64,
+}
+
+/// Shared, single-threaded metrics sink (cheap `Rc` handle).
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Rc<RecorderInner>,
+}
+
+#[derive(Default)]
+struct RecorderInner {
+    latencies: RefCell<Vec<LatencySample>>,
+    ram: RefCell<Vec<RamSample>>,
+    merges: RefCell<Vec<MergeEvent>>,
+    counters: RefCell<BTreeMap<&'static str, u64>>,
+    /// absolute virtual-time (ms) all recorded timestamps are relative to
+    epoch_ms: std::cell::Cell<f64>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Anchor the time base at the current executor instant (set once, when
+    /// the platform finishes deploying, so latency / RAM / merge series all
+    /// share one clock).
+    pub fn set_epoch_now(&self) {
+        self.inner.epoch_ms.set(crate::exec::now().as_millis_f64());
+    }
+
+    /// Milliseconds since the epoch (requires a running executor).
+    pub fn rel_now_ms(&self) -> f64 {
+        crate::exec::now().as_millis_f64() - self.inner.epoch_ms.get()
+    }
+
+    pub fn record_latency(&self, t_ms: f64, latency_ms: f64) {
+        self.inner.latencies.borrow_mut().push(LatencySample { t_ms, latency_ms });
+    }
+
+    pub fn record_ram(&self, t_ms: f64, total_mb: f64, instances: usize) {
+        self.inner.ram.borrow_mut().push(RamSample { t_ms, total_mb, instances });
+    }
+
+    pub fn record_merge(&self, event: MergeEvent) {
+        self.inner.merges.borrow_mut().push(event);
+    }
+
+    pub fn bump(&self, name: &'static str) {
+        *self.inner.counters.borrow_mut().entry(name).or_insert(0) += 1;
+    }
+
+    pub fn counter(&self, name: &'static str) -> u64 {
+        self.inner.counters.borrow().get(name).copied().unwrap_or(0)
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    pub fn latencies(&self) -> Vec<LatencySample> {
+        self.inner.latencies.borrow().clone()
+    }
+
+    pub fn ram_series(&self) -> Vec<RamSample> {
+        self.inner.ram.borrow().clone()
+    }
+
+    pub fn merges(&self) -> Vec<MergeEvent> {
+        self.inner.merges.borrow().clone()
+    }
+
+    pub fn request_count(&self) -> usize {
+        self.inner.latencies.borrow().len()
+    }
+
+    /// Quantiles over all request latencies.
+    pub fn latency_quantiles(&self) -> Quantiles {
+        Quantiles::from_samples(
+            self.inner.latencies.borrow().iter().map(|s| s.latency_ms).collect(),
+        )
+    }
+
+    /// Quantiles over requests arriving in `[from_ms, to_ms)` — used to
+    /// separate pre-merge and post-merge phases (paper Fig. 5 analysis).
+    pub fn latency_quantiles_window(&self, from_ms: f64, to_ms: f64) -> Quantiles {
+        Quantiles::from_samples(
+            self.inner
+                .latencies
+                .borrow()
+                .iter()
+                .filter(|s| s.t_ms >= from_ms && s.t_ms < to_ms)
+                .map(|s| s.latency_ms)
+                .collect(),
+        )
+    }
+
+    /// Time-weighted mean of the RAM series (MiB).
+    pub fn ram_mean_mb(&self) -> f64 {
+        let ram = self.inner.ram.borrow();
+        if ram.len() < 2 {
+            return ram.first().map(|s| s.total_mb).unwrap_or(f64::NAN);
+        }
+        let mut weighted = 0.0;
+        let mut span = 0.0;
+        for pair in ram.windows(2) {
+            let dt = pair[1].t_ms - pair[0].t_ms;
+            weighted += pair[0].total_mb * dt;
+            span += dt;
+        }
+        if span <= 0.0 { ram[0].total_mb } else { weighted / span }
+    }
+
+    /// Steady-state RAM: time-weighted mean over the tail of the run
+    /// (after `from_ms`).
+    pub fn ram_mean_mb_after(&self, from_ms: f64) -> f64 {
+        let ram: Vec<RamSample> = self
+            .inner
+            .ram
+            .borrow()
+            .iter()
+            .copied()
+            .filter(|s| s.t_ms >= from_ms)
+            .collect();
+        if ram.len() < 2 {
+            return ram.first().map(|s| s.total_mb).unwrap_or(f64::NAN);
+        }
+        let mut weighted = 0.0;
+        let mut span = 0.0;
+        for pair in ram.windows(2) {
+            let dt = pair[1].t_ms - pair[0].t_ms;
+            weighted += pair[0].total_mb * dt;
+            span += dt;
+        }
+        weighted / span
+    }
+
+    /// CSV export of the latency time series (`t_ms,latency_ms`).
+    pub fn latency_csv(&self) -> String {
+        let mut out = String::from("t_ms,latency_ms\n");
+        for s in self.inner.latencies.borrow().iter() {
+            out.push_str(&format!("{:.3},{:.3}\n", s.t_ms, s.latency_ms));
+        }
+        out
+    }
+
+    /// CSV export of the RAM series (`t_ms,total_mb,instances`).
+    pub fn ram_csv(&self) -> String {
+        let mut out = String::from("t_ms,total_mb,instances\n");
+        for s in self.inner.ram.borrow().iter() {
+            out.push_str(&format!("{:.3},{:.3},{}\n", s.t_ms, s.total_mb, s.instances));
+        }
+        out
+    }
+
+    /// CSV export of merge events (`t_ms,duration_ms,functions`).
+    pub fn merges_csv(&self) -> String {
+        let mut out = String::from("t_ms,duration_ms,functions\n");
+        for m in self.inner.merges.borrow().iter() {
+            out.push_str(&format!(
+                "{:.3},{:.3},{}\n",
+                m.t_ms,
+                m.duration_ms,
+                m.functions.join("+")
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_and_windows() {
+        let r = Recorder::new();
+        for i in 0..100 {
+            // first half slow (100ms), second half fast (50ms)
+            let lat = if i < 50 { 100.0 } else { 50.0 };
+            r.record_latency(i as f64 * 10.0, lat);
+        }
+        assert_eq!(r.request_count(), 100);
+        let pre = r.latency_quantiles_window(0.0, 500.0);
+        let post = r.latency_quantiles_window(500.0, 1e9);
+        assert_eq!(pre.median(), 100.0);
+        assert_eq!(post.median(), 50.0);
+    }
+
+    #[test]
+    fn ram_time_weighted_mean() {
+        let r = Recorder::new();
+        // 100 MB for 10ms, then 50 MB for 30ms -> (1000 + 1500)/40 = 62.5
+        r.record_ram(0.0, 100.0, 2);
+        r.record_ram(10.0, 50.0, 1);
+        r.record_ram(40.0, 50.0, 1);
+        assert!((r.ram_mean_mb() - 62.5).abs() < 1e-9);
+        assert!((r.ram_mean_mb_after(10.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counters() {
+        let r = Recorder::new();
+        r.bump("merge_requests");
+        r.bump("merge_requests");
+        assert_eq!(r.counter("merge_requests"), 2);
+        assert_eq!(r.counter("nope"), 0);
+    }
+
+    #[test]
+    fn csv_headers() {
+        let r = Recorder::new();
+        r.record_latency(1.0, 2.0);
+        r.record_ram(1.0, 3.0, 1);
+        r.record_merge(MergeEvent { t_ms: 5.0, functions: vec!["a".into(), "b".into()], duration_ms: 7.0 });
+        assert!(r.latency_csv().starts_with("t_ms,latency_ms\n1.000,2.000"));
+        assert!(r.ram_csv().contains("1.000,3.000,1"));
+        assert!(r.merges_csv().contains("a+b"));
+    }
+
+    #[test]
+    fn clone_shares_state() {
+        let r = Recorder::new();
+        let r2 = r.clone();
+        r2.record_latency(0.0, 1.0);
+        assert_eq!(r.request_count(), 1);
+    }
+}

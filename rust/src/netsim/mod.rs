@@ -1,0 +1,152 @@
+//! Network fabric model: calibrated latency sampling for every hop type the
+//! platform charges on the request path.
+//!
+//! This replaces the paper's 2-VM / 10 Gbit/s testbed (DESIGN.md
+//! substitution #2).  Each sampler returns a duration in virtual-time
+//! milliseconds; the caller charges it with `exec::sleep_ms`.  All sampling
+//! is deterministic per seed.
+
+use std::cell::RefCell;
+
+use crate::config::LatencyParams;
+use crate::util::rng::Rng;
+
+/// Where a hop's latency sample is drawn from (for per-hop accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Hop {
+    /// client -> gateway admission + route lookup
+    Gateway,
+    /// Kubernetes Service VIP indirection (zero-cost on tiny)
+    ServiceIndirection,
+    /// one-way instance-to-instance network traversal
+    Network,
+    /// handler dispatch (entry-point shim)
+    Dispatch,
+    /// fused same-process call
+    Inline,
+}
+
+/// Latency fabric: samples per-hop costs from the calibrated distributions.
+pub struct Fabric {
+    params: LatencyParams,
+    rng: RefCell<Rng>,
+}
+
+impl Fabric {
+    pub fn new(params: LatencyParams, seed: u64) -> Self {
+        Fabric { params, rng: RefCell::new(Rng::new(seed ^ 0xFAB1C)) }
+    }
+
+    pub fn params(&self) -> &LatencyParams {
+        &self.params
+    }
+
+    /// Sample the latency (ms) of one `hop`.
+    pub fn sample(&self, hop: Hop) -> f64 {
+        let p = &self.params;
+        let mut rng = self.rng.borrow_mut();
+        let v = match hop {
+            Hop::Gateway => rng.normal_ms(p.gateway_ms, p.gateway_ms * 0.1),
+            Hop::ServiceIndirection => {
+                if p.service_indirection_ms <= 0.0 {
+                    0.0
+                } else {
+                    rng.normal_ms(p.service_indirection_ms, p.service_indirection_ms * 0.15)
+                }
+            }
+            Hop::Network => rng.lognormal(p.net_hop_ms, p.net_sigma),
+            Hop::Dispatch => rng.normal_ms(p.dispatch_ms, p.dispatch_sigma),
+            Hop::Inline => p.inline_call_ms,
+        };
+        v.max(0.0)
+    }
+
+    /// Serialization + deserialization cost (ms) for a payload of
+    /// `payload_bytes` (charged once per remote call, sender+receiver).
+    pub fn serialize_cost(&self, payload_bytes: usize) -> f64 {
+        let p = &self.params;
+        p.serialize_base_ms + p.serialize_per_kb_ms * (payload_bytes as f64 / 1024.0)
+    }
+
+    /// Total modeled cost (ms) of a remote invocation envelope: gateway +
+    /// (service) + network + serialization.  Dispatch is charged separately
+    /// by the receiving handler.
+    pub fn remote_call_envelope(&self, payload_bytes: usize) -> f64 {
+        self.sample(Hop::Gateway)
+            + self.sample(Hop::ServiceIndirection)
+            + self.sample(Hop::Network)
+            + self.serialize_cost(payload_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn fabric(kind_kube: bool) -> Fabric {
+        let c = if kind_kube { PlatformConfig::kube() } else { PlatformConfig::tiny() };
+        Fabric::new(c.latency, 42)
+    }
+
+    #[test]
+    fn samples_are_positive_and_finite() {
+        let f = fabric(false);
+        for hop in [Hop::Gateway, Hop::Network, Hop::Dispatch, Hop::Inline] {
+            for _ in 0..1000 {
+                let v = f.sample(hop);
+                assert!(v.is_finite() && v >= 0.0, "{hop:?}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_has_no_service_indirection() {
+        let f = fabric(false);
+        for _ in 0..100 {
+            assert_eq!(f.sample(Hop::ServiceIndirection), 0.0);
+        }
+        let k = fabric(true);
+        let mean: f64 =
+            (0..1000).map(|_| k.sample(Hop::ServiceIndirection)).sum::<f64>() / 1000.0;
+        assert!((mean - 6.0).abs() < 0.5, "mean {mean}");
+    }
+
+    #[test]
+    fn network_median_matches_calibration() {
+        let f = fabric(false);
+        let expected = PlatformConfig::tiny().latency.net_hop_ms;
+        let mut v: Vec<f64> = (0..4001).map(|_| f.sample(Hop::Network)).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = v[v.len() / 2];
+        assert!((med - expected).abs() < 0.15 * expected, "median {med}");
+    }
+
+    #[test]
+    fn inline_is_orders_cheaper_than_remote() {
+        let f = fabric(false);
+        let inline: f64 = (0..100).map(|_| f.sample(Hop::Inline)).sum::<f64>();
+        let remote: f64 = (0..100).map(|_| f.remote_call_envelope(8192)).sum::<f64>();
+        assert!(remote > 20.0 * inline, "remote {remote} vs inline {inline}");
+    }
+
+    #[test]
+    fn serialization_scales_with_size() {
+        let f = fabric(false);
+        let per_kb = PlatformConfig::tiny().latency.serialize_per_kb_ms;
+        let small = f.serialize_cost(1024);
+        let big = f.serialize_cost(1024 * 1024);
+        assert!(big > small);
+        assert!((big - small - per_kb * 1023.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = PlatformConfig::tiny();
+        let a = Fabric::new(c.latency.clone(), 9);
+        let b = Fabric::new(c.latency.clone(), 9);
+        for _ in 0..100 {
+            assert_eq!(a.sample(Hop::Network), b.sample(Hop::Network));
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Platform-flavored instance deployment.
+//!
+//! tinyFaaS launches containers directly; Kubernetes goes through the
+//! declarative machinery — a Deployment object is reconciled into a pod on
+//! the controller's next loop iteration.  The reconciler-gated path charges
+//! that control-loop delay (paper §2.1: orchestration frameworks trade
+//! "additional architectural complexity and runtime overhead" for features).
+
+use std::rc::Rc;
+
+use crate::containerd::{ContainerRuntime, ImageId, Instance};
+use crate::error::Result;
+use crate::exec;
+
+/// Instance deployment strategy.
+#[derive(Clone)]
+pub enum Deployer {
+    /// tinyFaaS: start the container immediately.
+    Direct { containers: ContainerRuntime },
+    /// Kubernetes: the launch takes effect on the next reconcile tick
+    /// (ticks at multiples of `interval_ms` on the virtual clock).
+    Reconciled { containers: ContainerRuntime, interval_ms: f64 },
+}
+
+impl Deployer {
+    pub fn direct(containers: ContainerRuntime) -> Self {
+        Deployer::Direct { containers }
+    }
+
+    pub fn reconciled(containers: ContainerRuntime, interval_ms: f64) -> Self {
+        assert!(interval_ms > 0.0, "reconcile interval must be positive");
+        Deployer::Reconciled { containers, interval_ms }
+    }
+
+    /// Launch an instance of `image` under this strategy.  The returned
+    /// instance is `Booting`; the caller health-gates it.
+    pub async fn launch(&self, image: ImageId) -> Result<Rc<Instance>> {
+        match self {
+            Deployer::Direct { containers } => containers.launch(image),
+            Deployer::Reconciled { containers, interval_ms } => {
+                // wait for the next control-loop tick
+                let now = exec::now().as_millis_f64();
+                let next_tick = (now / interval_ms).floor() * interval_ms + interval_ms;
+                exec::sleep_ms(next_tick - now).await;
+                containers.launch(image)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::containerd::FsManifest;
+    use crate::exec::{now, run_virtual, sleep_ms};
+
+    fn rt() -> (ContainerRuntime, ImageId) {
+        let rt = ContainerRuntime::new(Rc::new(PlatformConfig::kube()));
+        let img = rt.register_image(FsManifest::function_code("a", 1), vec![("a".into(), 9.0)]);
+        (rt, img)
+    }
+
+    #[test]
+    fn direct_launch_is_immediate() {
+        run_virtual(async {
+            let (rt, img) = rt();
+            let t0 = now().as_millis_f64();
+            let _inst = Deployer::direct(rt).launch(img).await.unwrap();
+            assert_eq!(now().as_millis_f64(), t0);
+        });
+    }
+
+    #[test]
+    fn reconciled_launch_waits_for_tick() {
+        run_virtual(async {
+            let (rt, img) = rt();
+            let dep = Deployer::reconciled(rt, 500.0);
+            sleep_ms(120.0).await;
+            let _inst = dep.launch(img).await.unwrap();
+            assert_eq!(now().as_millis_f64(), 500.0);
+            // exactly on a tick boundary -> next tick
+            let (rt2, img2) = super::tests::rt();
+            let dep2 = Deployer::reconciled(rt2, 500.0);
+            let _ = dep2; // silence unused in this scope
+            let _ = img2;
+        });
+    }
+
+    #[test]
+    fn reconciled_on_boundary_goes_to_next_tick() {
+        run_virtual(async {
+            let (rt, img) = rt();
+            let dep = Deployer::reconciled(rt, 250.0);
+            sleep_ms(250.0).await; // exactly at a tick
+            let _inst = dep.launch(img).await.unwrap();
+            assert_eq!(now().as_millis_f64(), 500.0);
+        });
+    }
+}

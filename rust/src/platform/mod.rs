@@ -1,0 +1,243 @@
+//! Platform assembly: wires gateway, container runtime, fabric, handlers,
+//! fusion observer, Merger, and the RAM sampler into a deployable FaaS
+//! platform.  Two flavors (paper §4): [`PlatformKind::Tiny`] (direct
+//! deployment, lean fabric) and [`PlatformKind::Kube`] (Service
+//! indirection, reconciler-gated deployment, heavier fabric).
+
+pub mod deployer;
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use crate::apps::AppSpec;
+use crate::billing::BillingLedger;
+use crate::config::{ComputeMode, PlatformConfig, PlatformKind};
+use crate::containerd::{ContainerRuntime, FsManifest, InstanceState};
+use crate::error::Result;
+use crate::exec;
+use crate::exec::channel::mpsc;
+use crate::exec::SimInstant;
+use crate::fusion::Observer;
+use crate::gateway::Gateway;
+use crate::handler::Dispatcher;
+use crate::merger::{Merger, MergerCtx};
+use crate::metrics::Recorder;
+use crate::netsim::Fabric;
+use crate::runtime::{ArtifactSet, ComputeService};
+
+use deployer::Deployer;
+
+/// A running FaaS platform hosting one application.
+pub struct Platform {
+    pub config: Rc<PlatformConfig>,
+    pub app: AppSpec,
+    pub containers: ContainerRuntime,
+    pub gateway: Gateway,
+    pub metrics: Recorder,
+    pub observer: Rc<Observer>,
+    pub billing: BillingLedger,
+    dispatcher: Dispatcher,
+    start: SimInstant,
+    sampler_stop: Rc<Cell<bool>>,
+}
+
+impl Platform {
+    /// Deploy `app` on a platform assembled from `config`: one instance per
+    /// function, all routes installed, Merger + RAM sampler running.
+    /// Resolves when every initial instance is healthy.
+    pub async fn deploy(app: AppSpec, config: PlatformConfig) -> Result<Rc<Platform>> {
+        let config = Rc::new(config);
+        let containers = ContainerRuntime::new(Rc::clone(&config));
+        let gateway = Gateway::new();
+        let metrics = Recorder::new();
+        let fabric = Fabric::new(config.latency.clone(), config.seed);
+
+        let compute = match config.compute {
+            ComputeMode::Disabled => ComputeService::disabled(),
+            mode => ComputeService::new(ArtifactSet::cached(&config.artifacts_dir)?, mode),
+        };
+
+        // fusion plumbing
+        let (fusion_tx, fusion_rx) = mpsc();
+        let observer = Rc::new(Observer::new(config.fusion.clone(), &app, fusion_tx));
+
+        // initial deployment: one image + instance per function
+        let mut instances = Vec::new();
+        for f in app.functions() {
+            let image = containers.register_image(
+                FsManifest::function_code(&f.name, f.code_kb),
+                vec![(f.name.clone(), f.code_mb)],
+            );
+            let inst = containers.launch(image)?;
+            gateway.set_route(&f.name, Rc::clone(&inst));
+            instances.push(inst);
+        }
+        // wait for the fleet to boot
+        loop {
+            if instances.iter().all(|i| i.state() == InstanceState::Healthy) {
+                break;
+            }
+            exec::sleep_ms(config.latency.health_interval_ms).await;
+        }
+        // all recorded series share this epoch (deploy-complete instant)
+        metrics.set_epoch_now();
+
+        let billing = BillingLedger::new();
+        let dispatcher = Dispatcher::new(
+            app.clone(),
+            Rc::clone(&config),
+            fabric,
+            gateway.clone(),
+            compute,
+            Rc::clone(&observer),
+            metrics.clone(),
+            billing.clone(),
+        );
+
+        // platform-flavored deployer for fused instances
+        let dep = match config.kind {
+            PlatformKind::Tiny => Deployer::direct(containers.clone()),
+            PlatformKind::Kube => {
+                Deployer::reconciled(containers.clone(), config.latency.reconcile_interval_ms)
+            }
+        };
+
+        // Merger service
+        let merger = Merger::new(MergerCtx {
+            config: Rc::clone(&config),
+            containers: containers.clone(),
+            gateway: gateway.clone(),
+            observer: Rc::clone(&observer),
+            metrics: metrics.clone(),
+            deployer: dep,
+        });
+        exec::spawn(merger.run(fusion_rx));
+
+        // RAM sampler
+        let sampler_stop = Rc::new(Cell::new(false));
+        {
+            let stop = Rc::clone(&sampler_stop);
+            let containers = containers.clone();
+            let metrics = metrics.clone();
+            let interval = config.ram.sample_interval_ms;
+            exec::spawn(async move {
+                while !stop.get() {
+                    let t = metrics.rel_now_ms();
+                    metrics.record_ram(t, containers.total_ram_mb(), containers.live_count());
+                    exec::sleep_ms(interval).await;
+                }
+            });
+        }
+
+        Ok(Rc::new(Platform {
+            config,
+            app,
+            containers,
+            gateway,
+            metrics,
+            observer,
+            billing,
+            dispatcher,
+            start: exec::now(),
+            sampler_stop,
+        }))
+    }
+
+    /// Invoke the application's entry function with `payload`.
+    pub async fn invoke(&self, payload: Vec<f32>) -> Result<Vec<f32>> {
+        self.dispatcher.invoke(&self.app.entry.clone(), payload).await
+    }
+
+    /// Invoke an arbitrary function (targeted tests / custom clients).
+    pub async fn invoke_function(&self, function: &str, payload: Vec<f32>) -> Result<Vec<f32>> {
+        self.dispatcher.invoke(function, payload).await
+    }
+
+    /// Expected request payload length (f32 count).
+    pub fn payload_len(&self) -> usize {
+        self.dispatcher.payload_len()
+    }
+
+    /// Virtual time the platform finished deploying.
+    pub fn start(&self) -> SimInstant {
+        self.start
+    }
+
+    /// Milliseconds of virtual time since deployment finished.
+    pub fn elapsed_ms(&self) -> f64 {
+        exec::now().duration_since(self.start).as_secs_f64() * 1e3
+    }
+
+    /// Stop background tasks (sampler). The Merger loop ends when the
+    /// platform (and its fusion sender) is dropped.
+    pub fn shutdown(&self) {
+        self.sampler_stop.set(true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::exec::run_virtual;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::tiny().with_compute(ComputeMode::Disabled)
+    }
+
+    #[test]
+    fn deploy_boots_one_instance_per_function() {
+        run_virtual(async {
+            let p = Platform::deploy(apps::tree(), cfg()).await.unwrap();
+            assert_eq!(p.containers.live_count(), 7);
+            assert_eq!(p.gateway.len(), 7);
+            assert_eq!(p.gateway.distinct_instances(), 7);
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn invoke_returns_response() {
+        run_virtual(async {
+            let p = Platform::deploy(apps::chain(3), cfg().vanilla()).await.unwrap();
+            let payload = vec![0.5f32; p.payload_len()];
+            let out = p.invoke(payload).await.unwrap();
+            assert_eq!(out.len(), 64);
+            assert!(out.iter().all(|v| v.is_finite()));
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn vanilla_never_merges() {
+        run_virtual(async {
+            let p = Platform::deploy(apps::chain(3), cfg().vanilla()).await.unwrap();
+            for _ in 0..20 {
+                let payload = vec![0.1f32; p.payload_len()];
+                p.invoke(payload).await.unwrap();
+            }
+            exec::sleep_ms(30_000.0).await;
+            assert_eq!(p.metrics.merges().len(), 0);
+            assert_eq!(p.containers.live_count(), 3);
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn fusion_converges_chain_to_one_instance() {
+        run_virtual(async {
+            let p = Platform::deploy(apps::chain(3), cfg()).await.unwrap();
+            for _ in 0..30 {
+                let payload = vec![0.1f32; p.payload_len()];
+                p.invoke(payload).await.unwrap();
+                exec::sleep_ms(1_000.0).await;
+            }
+            exec::sleep_ms(60_000.0).await;
+            assert!(p.metrics.merges().len() >= 2, "merges: {:?}", p.metrics.merges());
+            assert_eq!(p.gateway.distinct_instances(), 1);
+            // originals reclaimed
+            assert_eq!(p.containers.live_count(), 1);
+            p.shutdown();
+        });
+    }
+}

@@ -1,0 +1,96 @@
+//! Criterion-style micro-bench harness (no `criterion` offline): warmup,
+//! timed iterations, mean/p50/p99 report.  Used by the `cargo bench`
+//! targets (`harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats::Quantiles;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns)
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones and
+/// print a criterion-like row.  Returns the stats for programmatic use.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let q = Quantiles::from_samples(samples);
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: q.mean(),
+        p50_ns: q.median(),
+        p99_ns: q.p99(),
+    };
+    println!("{}", result.row());
+    result
+}
+
+/// Time a single long-running closure (experiment regenerations).
+pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let value = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{name:<44} completed in {secs:.2} s (wall)");
+    (value, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 2, 50, || 1 + 1);
+        assert_eq!(r.iters, 50);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

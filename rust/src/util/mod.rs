@@ -1,0 +1,10 @@
+//! Substrate utilities built in-repo (the offline crate set has no rand /
+//! serde / proptest): deterministic RNG, statistics, JSON, and a mini
+//! property-testing harness.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,169 @@
+//! Mini property-testing harness (no `proptest` offline).
+//!
+//! Runs a property over many seeded random cases; on failure it retries the
+//! failing case with progressively "smaller" generator budgets
+//! (shrinking-lite) and reports the seed so the case can be replayed
+//! deterministically:
+//!
+//! ```no_run
+//! use provuse::util::prop::{check, Gen};
+//! check("sum is commutative", 256, |g| {
+//!     let a = g.int(0, 1000);
+//!     let b = g.int(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case value source handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// scale in (0, 1]: shrink passes re-run failing seeds with smaller scale
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Gen { rng: Rng::new(seed), scale }
+    }
+
+    /// Integer in `[lo, hi]` (inclusive); range shrinks toward `lo`.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.scale).max(0.0) as u64 + 1;
+        lo + self.rng.below(span) as i64
+    }
+
+    /// Usize in `[lo, hi]` (inclusive).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let hi = lo + (hi - lo) * self.scale;
+        self.rng.range_f64(lo, hi.max(lo + f64::MIN_POSITIVE))
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick an element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+
+    /// Vector of values from a per-element closure; length in `[0, max_len]`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(0, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Lowercase identifier of length `[1, max_len]`.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let n = self.usize(1, max_len.max(1));
+        (0..n)
+            .map(|_| (b'a' + self.rng.below(26) as u8) as char)
+            .collect()
+    }
+
+    /// Raw access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` seeded cases; panics with the failing seed.
+/// Honors `PROP_SEED` (replay one case) and `PROP_CASES` env overrides.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PROP_SEED must be a u64");
+        let mut g = Gen::new(seed, 1.0);
+        prop(&mut g);
+        return;
+    }
+    let cases = std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    let base = fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 1.0);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            // shrinking-lite: replay the same seed at smaller scales and
+            // report the smallest scale that still fails.
+            let mut failing_scale = 1.0;
+            for scale in [0.5, 0.25, 0.1, 0.05] {
+                let shrunk = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, scale);
+                    prop(&mut g);
+                });
+                if shrunk.is_err() {
+                    failing_scale = scale;
+                }
+            }
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed (case {i}, PROP_SEED={seed}, \
+                 min failing scale {failing_scale}): {msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 64, |g| {
+            let a = g.int(0, 100);
+            let b = g.int(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 8, |g| {
+            let v = g.int(0, 10);
+            assert!(v > 100, "v={v}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("ranges", 128, |g| {
+            let v = g.int(-5, 5);
+            assert!((-5..=5).contains(&v));
+            let u = g.usize(2, 4);
+            assert!((2..=4).contains(&u));
+            let f = g.f64(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+            let s = g.ident(8);
+            assert!(!s.is_empty() && s.len() <= 8);
+        });
+    }
+}

@@ -1,0 +1,264 @@
+//! Statistics substrate: online summaries, quantiles, and a log-bucketed
+//! latency histogram (no external crates available offline).
+
+/// Online mean/variance/min/max accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact quantiles over a stored sample set (fine at experiment scale).
+#[derive(Debug, Clone, Default)]
+pub struct Quantiles {
+    sorted: Vec<f64>,
+}
+
+impl Quantiles {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        samples.retain(|x| x.is_finite());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Quantiles { sorted: samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Quantile by linear interpolation; `q` in `[0, 1]`.
+    pub fn q(&self, q: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let pos = q * (self.sorted.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            self.sorted[lo]
+        } else {
+            let frac = pos - lo as f64;
+            self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.q(0.5)
+    }
+    pub fn p95(&self) -> f64 {
+        self.q(0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        self.q(0.99)
+    }
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            f64::NAN
+        } else {
+            self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+        }
+    }
+}
+
+/// Log2-bucketed histogram for hot-path timing (constant memory, ~7%
+/// relative resolution with 4 sub-buckets per octave).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// bucket counts; index = octave * SUB + sub-bucket
+    counts: Vec<u64>,
+    unit_ns: f64,
+    total: u64,
+    sum: f64,
+}
+
+const SUB: usize = 8;
+const OCTAVES: usize = 40;
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram { counts: vec![0; SUB * OCTAVES], unit_ns: 1.0, total: 0, sum: 0.0 }
+    }
+
+    fn index(&self, v: f64) -> usize {
+        if v < self.unit_ns {
+            return 0;
+        }
+        let l = (v / self.unit_ns).log2();
+        let idx = (l * SUB as f64) as usize;
+        idx.min(self.counts.len() - 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        let idx = self.index(v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { f64::NAN } else { self.sum / self.total as f64 }
+    }
+
+    /// Approximate quantile (upper edge of the containing bucket).
+    pub fn q(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.unit_ns * 2f64.powf((i + 1) as f64 / SUB as f64);
+            }
+        }
+        f64::NAN
+    }
+}
+
+/// Convenience: format milliseconds human-readably.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms.is_nan() {
+        "n/a".into()
+    } else if ms < 1.0 {
+        format!("{:.3} ms", ms)
+    } else if ms < 1000.0 {
+        format!("{:.1} ms", ms)
+    } else {
+        format!("{:.2} s", ms / 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_empty_is_nan() {
+        assert!(Summary::new().mean().is_nan());
+    }
+
+    #[test]
+    fn quantiles_exact() {
+        let q = Quantiles::from_samples((1..=100).map(|i| i as f64).collect());
+        assert!((q.median() - 50.5).abs() < 1e-9);
+        assert!((q.q(0.0) - 1.0).abs() < 1e-9);
+        assert!((q.q(1.0) - 100.0).abs() < 1e-9);
+        assert!((q.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn quantiles_single() {
+        let q = Quantiles::from_samples(vec![7.0]);
+        assert_eq!(q.median(), 7.0);
+        assert_eq!(q.p99(), 7.0);
+    }
+
+    #[test]
+    fn quantile_monotone() {
+        let mut v = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..1000 {
+            v.push(rng.lognormal(10.0, 1.0));
+        }
+        let q = Quantiles::from_samples(v);
+        let mut last = f64::NEG_INFINITY;
+        for i in 0..=20 {
+            let cur = q.q(i as f64 / 20.0);
+            assert!(cur >= last);
+            last = cur;
+        }
+    }
+
+    #[test]
+    fn log_histogram_quantile_accuracy() {
+        let mut h = LogHistogram::new();
+        let mut exact = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(21);
+        for _ in 0..50_000 {
+            let v = rng.lognormal(1e6, 0.8); // ~1ms in ns
+            h.record(v);
+            exact.push(v);
+        }
+        let q = Quantiles::from_samples(exact);
+        for p in [0.5, 0.9, 0.99] {
+            let approx = h.q(p);
+            let truth = q.q(p);
+            let rel = (approx - truth).abs() / truth;
+            assert!(rel < 0.15, "p{p}: approx {approx} vs {truth}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_ignores_garbage() {
+        let mut h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(-5.0);
+        assert_eq!(h.count(), 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Arrival processes for the workload generator.
+//!
+//! The paper uses a constant rate (k6 `constant-arrival-rate`); the
+//! ablation harness additionally exercises Poisson arrivals and
+//! on/off bursts (the "bursty workloads" the paper's discussion motivates
+//! pre-warming for).
+
+use crate::util::rng::Rng;
+
+/// How request start times are laid out.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// Exactly `i / rate` seconds (the paper's workload).
+    Constant,
+    /// Poisson process: exponential inter-arrival gaps with mean `1/rate`.
+    Poisson,
+    /// On/off square wave: `burst_factor x rate` during the first half of
+    /// every `period_s`, idle during the second half (mean rate preserved).
+    Burst { period_s: f64, burst_factor: f64 },
+}
+
+impl Arrival {
+    pub fn parse(s: &str) -> Option<Arrival> {
+        match s {
+            "constant" => Some(Arrival::Constant),
+            "poisson" => Some(Arrival::Poisson),
+            "burst" => Some(Arrival::Burst { period_s: 20.0, burst_factor: 2.0 }),
+            _ => None,
+        }
+    }
+
+    /// Generate the arrival timestamps (ms) of `n` requests at mean
+    /// `rate_rps`, deterministically from `seed`.
+    pub fn schedule(&self, n: u64, rate_rps: f64, seed: u64) -> Vec<f64> {
+        assert!(rate_rps > 0.0);
+        match self {
+            Arrival::Constant => {
+                (0..n).map(|i| i as f64 * 1_000.0 / rate_rps).collect()
+            }
+            Arrival::Poisson => {
+                let mut rng = Rng::new(seed ^ 0xA881);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exponential(rate_rps) * 1_000.0;
+                        t
+                    })
+                    .collect()
+            }
+            Arrival::Burst { period_s, burst_factor } => {
+                // active during [k*P, k*P + P/2) at burst_factor*rate; the
+                // fraction of requests per period is unchanged (mean rate
+                // preserved) because we compress each period's quota into
+                // its active half.
+                let period_ms = period_s * 1_000.0;
+                let per_period = (rate_rps * period_s).max(1.0);
+                let active_rate = rate_rps * burst_factor;
+                let active_ms = per_period / active_rate * 1_000.0;
+                (0..n)
+                    .map(|i| {
+                        let k = (i as f64 / per_period).floor();
+                        let j = i as f64 - k * per_period;
+                        k * period_ms + j / per_period * active_ms.min(period_ms)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_evenly_spaced() {
+        let s = Arrival::Constant.schedule(5, 10.0, 0);
+        assert_eq!(s, vec![0.0, 100.0, 200.0, 300.0, 400.0]);
+    }
+
+    #[test]
+    fn poisson_mean_rate_close() {
+        let n = 20_000;
+        let s = Arrival::Poisson.schedule(n, 5.0, 42);
+        assert!(s.windows(2).all(|w| w[1] >= w[0]), "must be sorted");
+        let span_s = s.last().unwrap() / 1_000.0;
+        let measured = n as f64 / span_s;
+        assert!((measured - 5.0).abs() < 0.2, "rate {measured}");
+    }
+
+    #[test]
+    fn poisson_deterministic_per_seed() {
+        assert_eq!(
+            Arrival::Poisson.schedule(100, 5.0, 1),
+            Arrival::Poisson.schedule(100, 5.0, 1)
+        );
+        assert_ne!(
+            Arrival::Poisson.schedule(100, 5.0, 1),
+            Arrival::Poisson.schedule(100, 5.0, 2)
+        );
+    }
+
+    #[test]
+    fn burst_compresses_into_active_window() {
+        let arr = Arrival::Burst { period_s: 10.0, burst_factor: 2.0 };
+        let s = arr.schedule(100, 5.0, 0); // 50 per period, active 5s
+        // first period's requests all inside [0, 5s)
+        for &t in &s[..50] {
+            assert!(t < 5_000.0, "{t}");
+        }
+        // second period starts at 10s
+        assert!(s[50] >= 10_000.0);
+        // mean rate preserved: 100 requests within ~20s
+        assert!(*s.last().unwrap() < 20_000.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert!(matches!(Arrival::parse("poisson"), Some(Arrival::Poisson)));
+        assert!(matches!(Arrival::parse("burst"), Some(Arrival::Burst { .. })));
+        assert!(Arrival::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,182 @@
+//! k6-like workload generator (paper §5.1): constant-rate open-loop HTTP
+//! load with per-request latency capture.
+//!
+//! Arrivals are scheduled on the virtual clock at exactly `i / rate`
+//! seconds (open loop: a slow platform does not slow the arrival process),
+//! payloads are seeded per request index, and every completion is recorded
+//! in the platform's [`Recorder`].
+
+pub mod arrivals;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+pub use arrivals::Arrival;
+
+use crate::config::WorkloadConfig;
+use crate::error::Result;
+use crate::exec;
+use crate::platform::Platform;
+use crate::util::rng::Rng;
+use crate::util::stats::Quantiles;
+
+/// Outcome of one workload run.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub issued: u64,
+    pub ok: u64,
+    pub failed: u64,
+    /// end-to-end latency quantiles over successful requests (ms)
+    pub latency: Quantiles,
+    /// virtual duration of the run (ms)
+    pub duration_ms: f64,
+}
+
+impl WorkloadReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests ({} ok, {} failed) in {:.1}s: median {:.1} ms, mean {:.1} ms, p95 {:.1} ms, p99 {:.1} ms",
+            self.issued,
+            self.ok,
+            self.failed,
+            self.duration_ms / 1e3,
+            self.latency.median(),
+            self.latency.mean(),
+            self.latency.p95(),
+            self.latency.p99(),
+        )
+    }
+}
+
+/// Deterministic per-request payload (seeded by workload seed + index).
+pub fn request_payload(seed: u64, index: u64, len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15).fork(index);
+    let mut payload = vec![0.0f32; len];
+    rng.fill_normal_f32(&mut payload);
+    payload
+}
+
+/// Drive `cfg` against `platform` with the paper's constant-rate arrivals.
+pub async fn run(platform: Rc<Platform>, cfg: WorkloadConfig) -> Result<WorkloadReport> {
+    run_with_arrival(platform, cfg, Arrival::Constant).await
+}
+
+/// Drive `cfg` against `platform` under an explicit [`Arrival`] process;
+/// records latencies into `platform.metrics` and returns a report.
+pub async fn run_with_arrival(
+    platform: Rc<Platform>,
+    cfg: WorkloadConfig,
+    arrival: Arrival,
+) -> Result<WorkloadReport> {
+    let start = exec::now();
+    let payload_len = platform.payload_len();
+    let ok = Rc::new(RefCell::new(0u64));
+    let failed = Rc::new(RefCell::new(0u64));
+    let latencies = Rc::new(RefCell::new(Vec::with_capacity(cfg.requests as usize)));
+    let schedule = arrival.schedule(cfg.requests, cfg.rate_rps, cfg.seed);
+
+    let mut handles = Vec::with_capacity(cfg.requests as usize);
+    for i in 0..cfg.requests {
+        // open-loop arrivals: a slow platform does not slow the schedule
+        let target_ms = schedule[i as usize];
+        let elapsed_ms = exec::now().duration_since(start).as_secs_f64() * 1e3;
+        if target_ms > elapsed_ms {
+            exec::sleep_ms(target_ms - elapsed_ms).await;
+        }
+
+        let payload = request_payload(cfg.seed, i, payload_len);
+        let platform = Rc::clone(&platform);
+        let ok = Rc::clone(&ok);
+        let failed = Rc::clone(&failed);
+        let latencies = Rc::clone(&latencies);
+        let timeout_ms = cfg.timeout_ms;
+        handles.push(exec::spawn(async move {
+            let t0 = exec::now();
+            let arrival_ms = platform.metrics.rel_now_ms();
+            let result = exec::timeout(
+                std::time::Duration::from_nanos((timeout_ms * 1e6) as u64),
+                platform.invoke(payload),
+            )
+            .await;
+            let latency_ms = exec::now().duration_since(t0).as_secs_f64() * 1e3;
+            match result {
+                Ok(Ok(_)) => {
+                    *ok.borrow_mut() += 1;
+                    latencies.borrow_mut().push(latency_ms);
+                    platform.metrics.record_latency(arrival_ms, latency_ms);
+                }
+                Ok(Err(_)) | Err(_) => {
+                    *failed.borrow_mut() += 1;
+                    platform.metrics.bump("request_failures");
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.await;
+    }
+
+    let duration_ms = exec::now().duration_since(start).as_secs_f64() * 1e3;
+    let report = WorkloadReport {
+        issued: cfg.requests,
+        ok: *ok.borrow(),
+        failed: *failed.borrow(),
+        latency: Quantiles::from_samples(latencies.borrow().clone()),
+        duration_ms,
+    };
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::config::{ComputeMode, PlatformConfig};
+    use crate::exec::run_virtual;
+
+    #[test]
+    fn payloads_are_deterministic_and_distinct() {
+        let a = request_payload(1, 0, 128);
+        let b = request_payload(1, 0, 128);
+        let c = request_payload(1, 1, 128);
+        let d = request_payload(2, 0, 128);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn open_loop_timing_and_all_requests_complete() {
+        run_virtual(async {
+            let cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled).vanilla();
+            let p = crate::platform::Platform::deploy(apps::chain(2), cfg).await.unwrap();
+            let report = run(
+                Rc::clone(&p),
+                WorkloadConfig { requests: 40, rate_rps: 10.0, seed: 3, timeout_ms: 60_000.0 },
+            )
+            .await
+            .unwrap();
+            assert_eq!(report.issued, 40);
+            assert_eq!(report.ok, 40);
+            assert_eq!(report.failed, 0);
+            // open loop: last arrival at 3.9s, so the run spans at least that
+            assert!(report.duration_ms >= 3_900.0, "{}", report.duration_ms);
+            assert!(report.latency.median() > 0.0);
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn summary_formats() {
+        let r = WorkloadReport {
+            issued: 10,
+            ok: 9,
+            failed: 1,
+            latency: Quantiles::from_samples(vec![1.0, 2.0, 3.0]),
+            duration_ms: 1000.0,
+        };
+        let s = r.summary();
+        assert!(s.contains("9 ok"));
+        assert!(s.contains("1 failed"));
+    }
+}

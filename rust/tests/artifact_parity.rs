@@ -1,0 +1,97 @@
+//! Cross-layer parity: the Rust/PJRT execution of every AOT artifact must
+//! reproduce the python/JAX goldens bit-for-bit (well, to fp32 tolerance).
+//!
+//! Requires `make artifacts`; tests self-skip when the directory is absent
+//! so `cargo test` works in a fresh checkout.
+
+use provuse::config::ComputeMode;
+use provuse::runtime::{ArtifactSet, ComputeService};
+
+fn artifacts() -> Option<std::rc::Rc<ArtifactSet>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(ArtifactSet::cached("artifacts").expect("artifact load failed"))
+}
+
+#[test]
+fn every_body_matches_python_golden() {
+    let Some(set) = artifacts() else { return };
+    let results = set.validate(1e-4).unwrap();
+    assert_eq!(results.len(), 10, "expected 10 compute bodies");
+    for v in &results {
+        assert!(
+            v.ok,
+            "{}: rust/PJRT diverges from python golden by {:.2e}",
+            v.name, v.max_abs_err
+        );
+    }
+}
+
+#[test]
+fn execution_is_deterministic() {
+    let Some(set) = artifacts() else { return };
+    for name in set.names() {
+        let input = set.golden_input(name).unwrap().to_vec();
+        let a = set.execute(name, &input).unwrap();
+        let b = set.execute(name, &input).unwrap();
+        assert_eq!(a, b, "{name} nondeterministic");
+        assert_eq!(a.len(), set.batch * set.out_dim);
+        assert!(a.iter().all(|v| v.is_finite()), "{name} produced non-finite output");
+    }
+}
+
+#[test]
+fn outputs_are_input_sensitive() {
+    let Some(set) = artifacts() else { return };
+    for name in set.names() {
+        let input = set.golden_input(name).unwrap().to_vec();
+        let mut perturbed = input.clone();
+        for v in perturbed.iter_mut() {
+            *v += 0.37;
+        }
+        let a = set.execute(name, &input).unwrap();
+        let b = set.execute(name, &perturbed).unwrap();
+        assert_ne!(a, b, "{name} ignores its input");
+    }
+}
+
+#[test]
+fn wrong_input_length_is_rejected() {
+    let Some(set) = artifacts() else { return };
+    let err = set.execute("tree_light", &[0.0; 7]);
+    assert!(err.is_err());
+    let err = set.execute("no_such_body", &vec![0.0; set.batch * set.in_dim]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn replay_mode_matches_live_mode_outputs() {
+    let Some(set) = artifacts() else { return };
+    let live = ComputeService::new(std::rc::Rc::clone(&set), ComputeMode::Live);
+    let replay = ComputeService::new(set.clone(), ComputeMode::Replay);
+    // replay returns the load-time execution of the golden input; live on
+    // the same golden input must agree exactly
+    for name in set.names() {
+        let golden = set.golden_input(name).unwrap().to_vec();
+        let (a, live_ms) = live.run(name, &golden).unwrap();
+        let (b, replay_ms) = replay.run(name, &golden).unwrap();
+        assert_eq!(a, b, "{name}: live vs replay outputs differ");
+        assert!(live_ms > 0.0);
+        assert!(replay_ms > 0.0, "{name}: profiled duration must be positive");
+    }
+}
+
+#[test]
+fn profiled_durations_reflect_body_cost() {
+    let Some(set) = artifacts() else { return };
+    // tree_heavy (4 chained 256x256 matmul layers) must profile slower
+    // than tree_light (one streaming-stats kernel)
+    let heavy = set.profile_ms("tree_heavy").unwrap();
+    let light = set.profile_ms("tree_light").unwrap();
+    assert!(
+        heavy > light,
+        "tree_heavy ({heavy} ms) should out-cost tree_light ({light} ms)"
+    );
+}

@@ -1,0 +1,96 @@
+//! Billing semantics: fusion must eliminate double billing (paper §2.3,
+//! §6 — "mitigates redundant billing effects that arise from chained
+//! invocations in fine-grained FaaS pricing models").
+
+use std::rc::Rc;
+
+use provuse::apps;
+use provuse::billing::CostModel;
+use provuse::config::{ComputeMode, PlatformConfig, WorkloadConfig};
+use provuse::exec::{self, run_virtual};
+use provuse::platform::Platform;
+use provuse::workload;
+
+fn fast_cfg() -> PlatformConfig {
+    let mut cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled);
+    cfg.latency.image_build_ms = 200.0;
+    cfg.latency.boot_ms = 100.0;
+    cfg.fusion.min_observations = 1;
+    cfg
+}
+
+fn run_bill(fusion: bool, requests: u64) -> (provuse::billing::Bill, u64) {
+    run_virtual(async move {
+        let mut cfg = fast_cfg();
+        if !fusion {
+            cfg = cfg.vanilla();
+        }
+        let p = Platform::deploy(apps::iot(), cfg).await.unwrap();
+        let wl = WorkloadConfig { requests, rate_rps: 10.0, seed: 7, timeout_ms: 60_000.0 };
+        let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(20_000.0).await;
+        assert_eq!(report.failed, 0);
+        let bill = p.billing.bill();
+        p.shutdown();
+        (bill, report.ok)
+    })
+}
+
+#[test]
+fn vanilla_bills_every_function_invocation() {
+    let (bill, ok) = run_bill(false, 50);
+    // IOT issues 15 billed invocations per request: entry + parse +
+    // validate + 3 analyses + 3 aggregate calls (one per analysis) +
+    // 3 async persists + 3 notifies
+    assert_eq!(bill.invocations, 15 * ok);
+    assert!(bill.gb_seconds > 0.0);
+}
+
+#[test]
+fn fusion_eliminates_double_billing() {
+    let n = 200;
+    let (vanilla, _) = run_bill(false, n);
+    let (fused, _) = run_bill(true, n);
+
+    // fewer billed invocations: inlined calls are not metered
+    assert!(
+        fused.invocations < vanilla.invocations,
+        "fused {} !< vanilla {}",
+        fused.invocations,
+        vanilla.invocations
+    );
+    // and strictly fewer GiB-seconds: no caller is billed while blocking
+    // on a colocated callee
+    assert!(
+        fused.gb_seconds < 0.7 * vanilla.gb_seconds,
+        "fused {:.1} GB-s !< 70% of vanilla {:.1} GB-s",
+        fused.gb_seconds,
+        vanilla.gb_seconds
+    );
+    // dollars follow
+    let m = CostModel::default();
+    assert!(fused.cost(&m) < vanilla.cost(&m));
+}
+
+#[test]
+fn steady_state_fused_iot_bills_four_invocations_per_request() {
+    // after convergence: one billed arrival for the sync group's entry plus
+    // three async persist arrivals (aggregate executes once per analysis);
+    // notify is inlined inside the persist+notify group — not billed
+    run_virtual(async {
+        let p = Platform::deploy(apps::iot(), fast_cfg()).await.unwrap();
+        // converge first
+        let wl = WorkloadConfig { requests: 60, rate_rps: 10.0, seed: 1, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(30_000.0).await;
+        assert_eq!(p.gateway.distinct_instances(), 2);
+
+        let before = p.billing.bill().invocations;
+        let payload = workload::request_payload(5, 0, p.payload_len());
+        p.invoke(payload).await.unwrap();
+        exec::sleep_ms(10_000.0).await; // let async branch finish
+        let after = p.billing.bill().invocations;
+        assert_eq!(after - before, 4, "steady-state IOT request bills exactly 4 invocations");
+        p.shutdown();
+    });
+}

@@ -1,0 +1,125 @@
+//! Failure injection: the merge pipeline must roll back cleanly and the
+//! platform must keep serving from the original instances.
+
+use std::rc::Rc;
+
+use provuse::apps;
+use provuse::config::{ComputeMode, PlatformConfig, WorkloadConfig};
+use provuse::exec::{self, run_virtual};
+use provuse::platform::Platform;
+use provuse::workload;
+
+fn fast_cfg() -> PlatformConfig {
+    let mut cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled);
+    cfg.latency.image_build_ms = 300.0;
+    cfg.latency.boot_ms = 150.0;
+    cfg.fusion.min_observations = 1;
+    cfg.fusion.cooldown_ms = 2_000.0;
+    cfg
+}
+
+#[test]
+fn build_failure_rolls_back_and_retries_after_cooldown() {
+    run_virtual(async {
+        let p = Platform::deploy(apps::chain(2), fast_cfg()).await.unwrap();
+        p.containers.inject_build_failures(1);
+
+        // trigger fusion; the first build fails
+        let wl = WorkloadConfig { requests: 10, rate_rps: 10.0, seed: 1, timeout_ms: 60_000.0 };
+        let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(report.failed, 0, "requests must survive a failed merge");
+        exec::sleep_ms(1_000.0).await;
+        assert_eq!(p.metrics.merges().len(), 0);
+        assert_eq!(p.metrics.counter("fusion_aborted"), 1);
+        // both originals still serving
+        assert_eq!(p.gateway.distinct_instances(), 2);
+        assert_eq!(p.containers.live_count(), 2);
+
+        // after the cooldown, new observations re-request and succeed
+        exec::sleep_ms(2_500.0).await;
+        let wl = WorkloadConfig { requests: 10, rate_rps: 10.0, seed: 2, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(10_000.0).await;
+        assert_eq!(p.metrics.merges().len(), 1, "retry after cooldown must fuse");
+        assert_eq!(p.gateway.distinct_instances(), 1);
+        p.shutdown();
+    });
+}
+
+#[test]
+fn health_timeout_aborts_and_tears_down_the_orphan() {
+    run_virtual(async {
+        let p = Platform::deploy(apps::chain(2), fast_cfg()).await.unwrap();
+        // the fused instance will boot forever
+        p.containers.inject_boot_hangs(1);
+
+        let wl = WorkloadConfig { requests: 10, rate_rps: 10.0, seed: 3, timeout_ms: 60_000.0 };
+        let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(report.failed, 0);
+        // health deadline = 4x boot + 5s; wait it out
+        exec::sleep_ms(20_000.0).await;
+        assert_eq!(p.metrics.counter("fusion_health_timeouts"), 1);
+        assert_eq!(p.metrics.merges().len(), 0);
+        // the hung instance must not linger in the RAM ledger
+        assert_eq!(p.containers.live_count(), 2);
+        assert_eq!(p.gateway.distinct_instances(), 2);
+        p.shutdown();
+    });
+}
+
+#[test]
+fn requests_in_flight_during_cutover_complete_on_old_instances() {
+    run_virtual(async {
+        let mut cfg = fast_cfg();
+        cfg.fusion.min_observations = 2;
+        let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+
+        // long steady stream so cutovers happen under load
+        let wl = WorkloadConfig { requests: 300, rate_rps: 40.0, seed: 4, timeout_ms: 60_000.0 };
+        let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(report.failed, 0);
+        exec::sleep_ms(20_000.0).await;
+
+        // every pre-merge instance was drained to zero before termination
+        // (ContainerRuntime::terminate errors otherwise and the drain task
+        // retries forever -> live_count would stay high)
+        assert_eq!(p.containers.live_count(), 1);
+        assert_eq!(p.metrics.counter("instances_reclaimed") as usize, 2 * p.metrics.merges().len());
+        p.shutdown();
+    });
+}
+
+#[test]
+fn max_group_size_stops_transitive_growth() {
+    run_virtual(async {
+        let mut cfg = fast_cfg();
+        cfg.fusion.max_group_size = 2;
+        let p = Platform::deploy(apps::chain(4), cfg).await.unwrap();
+        let wl = WorkloadConfig { requests: 120, rate_rps: 20.0, seed: 5, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(20_000.0).await;
+
+        for (_, inst) in p.gateway.snapshot() {
+            assert!(inst.functions().len() <= 2, "group size cap violated");
+        }
+        // s0+s1 and s2+s3 pair up -> 2 instances
+        assert_eq!(p.gateway.distinct_instances(), 2);
+        p.shutdown();
+    });
+}
+
+#[test]
+fn disabled_transitive_growth_caps_at_pairs() {
+    run_virtual(async {
+        let mut cfg = fast_cfg();
+        cfg.fusion.transitive = false;
+        let p = Platform::deploy(apps::chain(4), cfg).await.unwrap();
+        let wl = WorkloadConfig { requests: 120, rate_rps: 20.0, seed: 6, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(20_000.0).await;
+        for (_, inst) in p.gateway.snapshot() {
+            assert!(inst.functions().len() <= 2);
+        }
+        p.shutdown();
+    });
+}

@@ -1,0 +1,101 @@
+//! Live-TCP integration: the HTTP front end serving a real platform on a
+//! real socket (real clock), exercised by an in-process HTTP client.
+//! Latencies are scaled down so the whole test runs in a few seconds.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use provuse::apps;
+use provuse::config::{ComputeMode, PlatformConfig};
+
+const PORT: u16 = 28417;
+
+fn http(method: &str, path: &str, body: &str) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(("127.0.0.1", PORT))?;
+    stream.set_read_timeout(Some(Duration::from_secs(20)))?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reader = BufReader::new(stream);
+    let mut status = String::new();
+    reader.read_line(&mut status)?;
+    let code = status.split_whitespace().nth(1).unwrap_or("0").parse().unwrap_or(0);
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        if line.trim().is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok((code, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn wait_up() {
+    for _ in 0..300 {
+        if http("GET", "/healthz", "").map(|(c, _)| c == 200).unwrap_or(false) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("http front end did not come up");
+}
+
+#[test]
+fn http_front_end_serves_invokes_metrics_routes_and_shuts_down() {
+    let server = std::thread::spawn(|| {
+        let mut config = PlatformConfig::tiny()
+            .with_compute(ComputeMode::Disabled)
+            .scale_latency(0.02);
+        config.fusion.min_observations = 1;
+        provuse::httpfront::serve(apps::chain(3), config, PORT, None).unwrap();
+    });
+    wait_up();
+
+    // entry invocations (empty body -> seeded payload)
+    for i in 0..4 {
+        let (code, body) = http("POST", "/invoke", "").unwrap();
+        assert_eq!(code, 200, "request {i}: {body}");
+        assert!(body.contains("\"latency_ms\""));
+        assert!(body.contains("\"output\""));
+    }
+
+    // targeted function invocation with an explicit payload
+    let (code, body) = http("POST", "/invoke/s1", "[1.0, 2.0, 3.0]").unwrap();
+    assert_eq!(code, 200, "{body}");
+
+    // unknown function -> 500 with an error payload
+    let (code, body) = http("POST", "/invoke/ghost", "").unwrap();
+    assert_eq!(code, 500);
+    assert!(body.contains("error"));
+
+    // unknown path -> 404
+    let (code, _) = http("GET", "/nope", "").unwrap();
+    assert_eq!(code, 404);
+
+    // metrics reflect the served traffic
+    let (code, metrics) = http("GET", "/metrics", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(metrics.contains("\"requests\""), "{metrics}");
+    assert!(metrics.contains("\"median_ms\""));
+
+    // routing table lists every function
+    let (code, routes) = http("GET", "/routes", "").unwrap();
+    assert_eq!(code, 200);
+    for f in ["s0", "s1", "s2"] {
+        assert!(routes.contains(f), "{routes}");
+    }
+
+    // clean shutdown
+    let (code, _) = http("POST", "/shutdown", "").unwrap();
+    assert_eq!(code, 200);
+    server.join().unwrap();
+}

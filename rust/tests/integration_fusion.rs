@@ -1,0 +1,242 @@
+//! Integration: end-to-end fusion semantics on virtual time.
+//!
+//! These tests run the whole stack (gateway -> handler -> merger ->
+//! containerd) with compute disabled so they are independent of
+//! `make artifacts`; cross-layer numeric tests live in artifact_parity.rs.
+
+use std::rc::Rc;
+
+use provuse::apps::{self, AppSpec};
+use provuse::config::{ComputeMode, PlatformConfig, PlatformKind, WorkloadConfig};
+use provuse::exec::{self, run_virtual};
+use provuse::platform::Platform;
+use provuse::workload::{self, request_payload};
+
+fn fast_merge(mut cfg: PlatformConfig) -> PlatformConfig {
+    cfg.latency.image_build_ms = 300.0;
+    cfg.latency.boot_ms = 150.0;
+    cfg.fusion.min_observations = 1;
+    cfg.compute = ComputeMode::Disabled;
+    cfg
+}
+
+/// Collect the platform's responses for `n` seeded requests, serially.
+async fn responses(platform: &Rc<Platform>, n: u64, gap_ms: f64) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    for i in 0..n {
+        let payload = request_payload(99, i, platform.payload_len());
+        out.push(platform.invoke(payload).await.expect("invoke failed"));
+        exec::sleep_ms(gap_ms).await;
+    }
+    out
+}
+
+#[test]
+fn responses_identical_vanilla_vs_fused_across_merge() {
+    // THE correctness property of function fusion: consolidation must not
+    // change observable behavior, including during the merge window.
+    for app in [apps::tree(), apps::iot(), apps::chain(5)] {
+        let vanilla: Vec<Vec<f32>> = run_virtual({
+            let app = app.clone();
+            async move {
+                let p = Platform::deploy(app, fast_merge(PlatformConfig::tiny()).vanilla())
+                    .await
+                    .unwrap();
+                let r = responses(&p, 40, 200.0).await;
+                p.shutdown();
+                r
+            }
+        });
+        let fused: Vec<Vec<f32>> = run_virtual({
+            let app = app.clone();
+            async move {
+                let p = Platform::deploy(app, fast_merge(PlatformConfig::tiny()))
+                    .await
+                    .unwrap();
+                let r = responses(&p, 40, 200.0).await;
+                assert!(!p.metrics.merges().is_empty(), "fusion never happened");
+                p.shutdown();
+                r
+            }
+        });
+        assert_eq!(vanilla, fused, "app `{}` changed responses under fusion", app.name);
+    }
+}
+
+#[test]
+fn no_request_fails_during_merges() {
+    run_virtual(async {
+        let p = Platform::deploy(apps::iot(), fast_merge(PlatformConfig::tiny()))
+            .await
+            .unwrap();
+        let wl = WorkloadConfig { requests: 500, rate_rps: 50.0, seed: 3, timeout_ms: 60_000.0 };
+        let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.ok, 500);
+        assert!(p.metrics.merges().len() >= 5);
+        p.shutdown();
+    });
+}
+
+#[test]
+fn convergence_matches_theoretical_fusion_groups() {
+    for (app, kind) in [
+        (apps::tree(), PlatformKind::Tiny),
+        (apps::iot(), PlatformKind::Tiny),
+        (apps::tree(), PlatformKind::Kube),
+        (apps::iot(), PlatformKind::Kube),
+    ] {
+        run_virtual(async move {
+            let groups = app.sync_fusion_groups();
+            let cfg = fast_merge(PlatformConfig::of_kind(kind));
+            let p = Platform::deploy(app, cfg).await.unwrap();
+            let wl =
+                WorkloadConfig { requests: 200, rate_rps: 20.0, seed: 8, timeout_ms: 60_000.0 };
+            workload::run(Rc::clone(&p), wl).await.unwrap();
+            exec::sleep_ms(30_000.0).await;
+
+            // routing must realize exactly the sync-component partition
+            let expected_instances = groups.len();
+            assert_eq!(
+                p.gateway.distinct_instances(),
+                expected_instances,
+                "{}/{}",
+                p.app.name,
+                kind.name()
+            );
+            for group in &groups {
+                let first = p.gateway.resolve(&group[0]).unwrap();
+                for f in group {
+                    assert_eq!(
+                        p.gateway.resolve(f).unwrap().id(),
+                        first.id(),
+                        "group member {f} not colocated"
+                    );
+                }
+                let mut hosted: Vec<String> =
+                    first.functions().iter().map(|(f, _)| f.clone()).collect();
+                hosted.sort();
+                assert_eq!(&hosted, group, "instance hosts wrong function set");
+            }
+            p.shutdown();
+        });
+    }
+}
+
+#[test]
+fn originals_reclaimed_and_ram_drops_to_steady_state() {
+    run_virtual(async {
+        let p = Platform::deploy(apps::tree(), fast_merge(PlatformConfig::tiny()))
+            .await
+            .unwrap();
+        let ram_before = p.containers.total_ram_mb();
+        let wl = WorkloadConfig { requests: 150, rate_rps: 20.0, seed: 5, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(30_000.0).await; // drains settle
+
+        // steady state: one instance per fusion group, zero in-flight
+        let groups = p.app.sync_fusion_groups();
+        assert_eq!(p.containers.live_count(), groups.len());
+        let ram = &p.config.ram;
+        let code_total: f64 = p.app.functions().map(|f| f.code_mb).sum();
+        let expected = ram.base_instance_mb * groups.len() as f64 + code_total;
+        let actual = p.containers.total_ram_mb();
+        assert!(
+            (actual - expected).abs() < 1e-6,
+            "steady-state RAM {actual} != expected {expected}"
+        );
+        assert!(ram_before > actual);
+        p.shutdown();
+    });
+}
+
+#[test]
+fn merge_events_are_ordered_and_fusion_reduces_post_merge_latency() {
+    run_virtual(async {
+        let p = Platform::deploy(apps::chain(4), fast_merge(PlatformConfig::tiny()))
+            .await
+            .unwrap();
+        let wl = WorkloadConfig { requests: 400, rate_rps: 20.0, seed: 6, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(10_000.0).await;
+
+        let merges = p.metrics.merges();
+        assert!(merges.len() >= 3);
+        // events strictly ordered in time, durations positive
+        for w in merges.windows(2) {
+            assert!(w[0].t_ms < w[1].t_ms);
+        }
+        for m in &merges {
+            assert!(m.duration_ms > 0.0);
+            assert!(m.functions.len() >= 2);
+        }
+        // paper Fig. 5 shape: post-merge median < pre-merge median
+        let last = merges.last().unwrap().t_ms;
+        let pre = p.metrics.latency_quantiles_window(0.0, merges[0].t_ms);
+        let post = p.metrics.latency_quantiles_window(last, f64::INFINITY);
+        assert!(
+            post.median() < pre.median(),
+            "post {} !< pre {}",
+            post.median(),
+            pre.median()
+        );
+        p.shutdown();
+    });
+}
+
+#[test]
+fn async_only_app_sees_no_latency_benefit() {
+    // paper §6: "fully asynchronous workloads may see limited to no benefit"
+    let app = AppSpec::builder("async_only")
+        .function("a").entry().busy_ms(50.0).async_call("b").done()
+        .function("b").busy_ms(80.0).async_call("c").done()
+        .function("c").busy_ms(60.0).done()
+        .build()
+        .unwrap();
+    let run = |fusion: bool| {
+        let app = app.clone();
+        run_virtual(async move {
+            let mut cfg = fast_merge(PlatformConfig::tiny());
+            if !fusion {
+                cfg = cfg.vanilla();
+            }
+            let p = Platform::deploy(app, cfg).await.unwrap();
+            let wl =
+                WorkloadConfig { requests: 100, rate_rps: 20.0, seed: 2, timeout_ms: 60_000.0 };
+            let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+            let merges = p.metrics.merges().len();
+            p.shutdown();
+            (report.latency.median(), merges)
+        })
+    };
+    let (vanilla_ms, _) = run(false);
+    let (fused_ms, merges) = run(true);
+    assert_eq!(merges, 0, "async edges must never trigger fusion");
+    assert!((vanilla_ms - fused_ms).abs() / vanilla_ms < 0.02);
+}
+
+#[test]
+fn kube_deploys_slower_but_converges_the_same() {
+    let converge = |kind: PlatformKind| {
+        run_virtual(async move {
+            let p = Platform::deploy(apps::chain(3), fast_merge(PlatformConfig::of_kind(kind)))
+                .await
+                .unwrap();
+            let wl =
+                WorkloadConfig { requests: 60, rate_rps: 10.0, seed: 4, timeout_ms: 60_000.0 };
+            workload::run(Rc::clone(&p), wl).await.unwrap();
+            exec::sleep_ms(30_000.0).await;
+            let last_merge =
+                p.metrics.merges().iter().map(|m| m.t_ms).fold(0.0f64, f64::max);
+            let n = p.gateway.distinct_instances();
+            p.shutdown();
+            (last_merge, n)
+        })
+    };
+    let (tiny_t, tiny_n) = converge(PlatformKind::Tiny);
+    let (kube_t, kube_n) = converge(PlatformKind::Kube);
+    assert_eq!(tiny_n, 1);
+    assert_eq!(kube_n, 1);
+    // reconciler gating + slower boots: kube merges land later
+    assert!(kube_t > tiny_t, "kube {kube_t} !> tiny {tiny_t}");
+}

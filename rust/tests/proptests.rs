@@ -1,0 +1,196 @@
+//! Property-based tests over platform invariants (mini-harness in
+//! `util::prop`; replay any failure with PROP_SEED=<seed>).
+
+use std::rc::Rc;
+
+use provuse::apps::{AppSpec, CallMode, CallSpec, FunctionSpec};
+use provuse::config::{ComputeMode, PlatformConfig, PlatformKind, WorkloadConfig};
+use provuse::exec::run_virtual;
+use provuse::platform::Platform;
+use provuse::util::prop::{check, Gen};
+use provuse::workload::{self, request_payload};
+
+/// Random DAG application: forward-only edges keep it acyclic by
+/// construction; random sync/async modes and 1-2 trust domains.
+fn random_app(g: &mut Gen) -> AppSpec {
+    let n = g.usize(2, 7);
+    let domains = ["alpha", "beta"];
+    let n_domains = g.usize(1, 2);
+    let mut functions = Vec::new();
+    for i in 0..n {
+        let mut calls = Vec::new();
+        for j in (i + 1)..n {
+            if g.f64(0.0, 1.0) < 0.45 {
+                calls.push(CallSpec {
+                    target: format!("f{j}"),
+                    mode: if g.bool() { CallMode::Sync } else { CallMode::Async },
+                    scale: g.f64(0.5, 1.5) as f32,
+                });
+            }
+        }
+        functions.push(FunctionSpec {
+            name: format!("f{i}"),
+            body: None,
+            busy_ms: g.f64(5.0, 60.0),
+            code_mb: g.f64(4.0, 24.0),
+            code_kb: g.usize(16, 256) as u64,
+            trust_domain: domains[g.usize(0, n_domains - 1)].into(),
+            calls,
+        });
+    }
+    AppSpec::new("prop", "f0", functions).expect("forward-edge DAG is always valid")
+}
+
+fn fast_cfg(g: &mut Gen, kind: PlatformKind) -> PlatformConfig {
+    let mut cfg = PlatformConfig::of_kind(kind).with_compute(ComputeMode::Disabled);
+    cfg.latency.image_build_ms = g.f64(50.0, 500.0);
+    cfg.latency.boot_ms = g.f64(50.0, 300.0);
+    cfg.fusion.min_observations = g.usize(1, 3) as u32;
+    cfg.seed = g.rng().next_u64();
+    cfg
+}
+
+#[test]
+fn prop_fusion_never_changes_responses() {
+    // For ANY app DAG and ANY platform flavor, enabling fusion must not
+    // change a single response byte.
+    check("fusion preserves responses", 20, |g| {
+        let app = random_app(g);
+        let kind = *g.choose(&[PlatformKind::Tiny, PlatformKind::Kube]);
+        let cfg = fast_cfg(g, kind);
+        let n_requests = g.usize(5, 15) as u64;
+        let seed = g.rng().next_u64();
+
+        let collect = |fusion: bool| {
+            let app = app.clone();
+            let mut cfg = cfg.clone();
+            if !fusion {
+                cfg = cfg.vanilla();
+            }
+            run_virtual(async move {
+                let p = Platform::deploy(app, cfg).await.unwrap();
+                let mut outs = Vec::new();
+                for i in 0..n_requests {
+                    let payload = request_payload(seed, i, p.payload_len());
+                    outs.push(p.invoke(payload).await.unwrap());
+                    provuse::exec::sleep_ms(150.0).await;
+                }
+                p.shutdown();
+                outs
+            })
+        };
+        assert_eq!(collect(false), collect(true));
+    });
+}
+
+#[test]
+fn prop_no_failures_and_partition_invariant() {
+    // After any run: every function routes to exactly one live instance,
+    // every instance's hosted set is internally consistent with the
+    // routing table, and no requests were dropped.
+    check("routing partition invariant", 16, |g| {
+        let app = random_app(g);
+        let kind = *g.choose(&[PlatformKind::Tiny, PlatformKind::Kube]);
+        let cfg = fast_cfg(g, kind);
+        let wl = WorkloadConfig {
+            requests: g.usize(20, 80) as u64,
+            rate_rps: g.f64(5.0, 50.0),
+            seed: g.rng().next_u64(),
+            timeout_ms: 120_000.0,
+        };
+        run_virtual(async move {
+            let p = Platform::deploy(app, cfg).await.unwrap();
+            let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+            assert_eq!(report.failed, 0, "dropped requests");
+            provuse::exec::sleep_ms(25_000.0).await;
+
+            let snapshot = p.gateway.snapshot();
+            for (function, inst) in &snapshot {
+                assert!(inst.state().is_live(), "{function} routed to dead instance");
+                assert!(
+                    inst.hosts(function),
+                    "{function} routed to instance not hosting it"
+                );
+            }
+            // trust domains never mix inside one instance
+            for (_, inst) in &snapshot {
+                let domains: std::collections::HashSet<&str> = inst
+                    .functions()
+                    .iter()
+                    .map(|(f, _)| p.app.function(f).unwrap().trust_domain.as_str())
+                    .collect();
+                assert!(domains.len() <= 1, "trust domains mixed: {domains:?}");
+            }
+            // fused groups never exceed the theoretical sync components
+            let components = p.app.sync_fusion_groups();
+            for (_, inst) in &snapshot {
+                if inst.functions().len() > 1 {
+                    let hosted: std::collections::BTreeSet<&str> =
+                        inst.functions().iter().map(|(f, _)| f.as_str()).collect();
+                    let within_one_component = components.iter().any(|c| {
+                        hosted.iter().all(|f| c.iter().any(|m| m == f))
+                    });
+                    assert!(within_one_component, "fused across sync components: {hosted:?}");
+                }
+            }
+            p.shutdown();
+        });
+    });
+}
+
+#[test]
+fn prop_ram_ledger_conservation() {
+    // At quiescence the ledger equals base * instances + total code, no
+    // matter what merge history happened.
+    check("ram ledger conservation", 12, |g| {
+        let app = random_app(g);
+        let cfg = fast_cfg(g, PlatformKind::Tiny);
+        let wl = WorkloadConfig {
+            requests: g.usize(15, 50) as u64,
+            rate_rps: 20.0,
+            seed: g.rng().next_u64(),
+            timeout_ms: 120_000.0,
+        };
+        run_virtual(async move {
+            let p = Platform::deploy(app, cfg).await.unwrap();
+            workload::run(Rc::clone(&p), wl).await.unwrap();
+            provuse::exec::sleep_ms(30_000.0).await;
+
+            let code_total: f64 = p.app.functions().map(|f| f.code_mb).sum();
+            let expected = p.config.ram.base_instance_mb * p.containers.live_count() as f64
+                + code_total;
+            let actual = p.containers.total_ram_mb();
+            assert!(
+                (actual - expected).abs() < 1e-6,
+                "ledger {actual} != {expected} ({} instances)",
+                p.containers.live_count()
+            );
+        });
+    });
+}
+
+#[test]
+fn prop_merge_monotonically_reduces_instances() {
+    // Each completed merge reduces distinct routed instances by >= 1 and
+    // the instance count never increases at quiescence.
+    check("instance count monotone", 12, |g| {
+        let app = random_app(g);
+        let cfg = fast_cfg(g, PlatformKind::Tiny);
+        run_virtual(async move {
+            let p = Platform::deploy(app, cfg).await.unwrap();
+            let initial = p.gateway.distinct_instances();
+            let wl = WorkloadConfig {
+                requests: 60,
+                rate_rps: 20.0,
+                seed: 1,
+                timeout_ms: 120_000.0,
+            };
+            workload::run(Rc::clone(&p), wl).await.unwrap();
+            provuse::exec::sleep_ms(30_000.0).await;
+            let merges = p.metrics.merges().len();
+            let now = p.gateway.distinct_instances();
+            assert_eq!(now, initial - merges, "each merge must remove exactly one instance");
+            p.shutdown();
+        });
+    });
+}

@@ -116,7 +116,7 @@ fn main() {
     }
 
     // PJRT compute bodies (the L1/L2 layers from the request path's view)
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    if provuse::xla::PJRT_AVAILABLE && std::path::Path::new("artifacts/manifest.json").exists() {
         println!("\n== L1/L2 PJRT compute (per-invocation, CPU) ==");
         let set = ArtifactSet::cached("artifacts").unwrap();
         for name in set.names() {
@@ -132,7 +132,9 @@ fn main() {
     // end-to-end single request, virtual time (full platform, replay)
     {
         println!("\n== end-to-end (virtual-clock wall cost per simulated request) ==");
-        let compute = if std::path::Path::new("artifacts/manifest.json").exists() {
+        let compute = if provuse::xla::PJRT_AVAILABLE
+            && std::path::Path::new("artifacts/manifest.json").exists()
+        {
             ComputeMode::Replay
         } else {
             ComputeMode::Disabled

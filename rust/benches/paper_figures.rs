@@ -22,11 +22,11 @@ fn workload() -> WorkloadConfig {
 }
 
 fn compute() -> ComputeMode {
-    // Replay keeps bench timing deterministic; artifacts must exist.
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    // Replay keeps bench timing deterministic; needs real PJRT + artifacts.
+    if provuse::xla::PJRT_AVAILABLE && std::path::Path::new("artifacts/manifest.json").exists() {
         ComputeMode::Replay
     } else {
-        eprintln!("WARNING: artifacts/ missing, benching with compute disabled");
+        eprintln!("WARNING: PJRT/artifacts unavailable, benching with compute disabled");
         ComputeMode::Disabled
     }
 }

@@ -107,6 +107,21 @@ pub struct FusionParams {
     pub respect_trust_domains: bool,
     /// upper bound on functions per fused instance (0 = unlimited)
     pub max_group_size: usize,
+    /// feedback controller master switch: allow splitting fused groups
+    /// back apart (Fusionize-style closed loop; false = fuse-once)
+    pub defusion: bool,
+    /// RAM cap per fused instance (MiB); a group exceeding it is split
+    /// (0 = unlimited, RAM-triggered defusion disabled)
+    pub max_group_ram_mb: f64,
+    /// p95 latency regression vs the group's pre-fusion baseline that
+    /// triggers defusion, as a fraction (0.5 = split when the trailing
+    /// window p95 exceeds baseline x 1.5; <= 0 disables the check)
+    pub split_p95_regression: f64,
+    /// consecutive feedback windows a violation must persist before a
+    /// split is requested (hysteresis against transient spikes)
+    pub split_hysteresis_windows: u32,
+    /// controller evaluation interval (virtual ms; <= 0 disables the loop)
+    pub feedback_interval_ms: f64,
 }
 
 /// Complete platform assembly configuration.
@@ -226,6 +241,11 @@ impl FusionParams {
             transitive: true,
             respect_trust_domains: true,
             max_group_size: 0,
+            defusion: true,
+            max_group_ram_mb: 0.0,
+            split_p95_regression: 0.5,
+            split_hysteresis_windows: 3,
+            feedback_interval_ms: 5_000.0,
         }
     }
 
@@ -302,6 +322,14 @@ impl PlatformConfig {
                     ("cooldown_ms", Json::Num(f.cooldown_ms)),
                     ("transitive", Json::Bool(f.transitive)),
                     ("max_group_size", Json::Num(f.max_group_size as f64)),
+                    ("defusion", Json::Bool(f.defusion)),
+                    ("max_group_ram_mb", Json::Num(f.max_group_ram_mb)),
+                    ("split_p95_regression", Json::Num(f.split_p95_regression)),
+                    (
+                        "split_hysteresis_windows",
+                        Json::Num(f.split_hysteresis_windows as f64),
+                    ),
+                    ("feedback_interval_ms", Json::Num(f.feedback_interval_ms)),
                 ]),
             ),
         ])
@@ -345,5 +373,19 @@ mod tests {
             v.get("latency_ms").unwrap().get("service_indirection").unwrap().as_f64().unwrap()
                 > 0.0
         );
+        let fusion = v.get("fusion").unwrap();
+        assert!(fusion.get("defusion").is_ok());
+        assert_eq!(fusion.get("max_group_ram_mb").unwrap().as_f64().unwrap(), 0.0);
+        assert!(fusion.get("feedback_interval_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn default_policy_has_defusion_armed_but_ram_cap_off() {
+        let p = FusionParams::default_enabled();
+        assert!(p.defusion);
+        assert_eq!(p.max_group_ram_mb, 0.0);
+        assert!(p.split_p95_regression > 0.0);
+        assert!(p.split_hysteresis_windows >= 1);
+        assert!(p.feedback_interval_ms > 0.0);
     }
 }

@@ -1,24 +1,23 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! zero-dependency build has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
+
+use crate::xla;
 
 /// Errors produced by the Provuse platform and its substrates.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A function name was not found in the routing table.
-    #[error("no route for function `{0}`")]
     NoRoute(String),
 
     /// An instance id did not resolve to a live instance.
-    #[error("unknown instance `{0}`")]
     UnknownInstance(u64),
 
     /// An image id did not resolve to a stored image.
-    #[error("unknown image `{0}`")]
     UnknownImage(u64),
 
     /// Lifecycle transition not allowed from the current state.
-    #[error("invalid lifecycle transition for instance {instance}: {from} -> {to}")]
     BadTransition {
         instance: u64,
         from: &'static str,
@@ -26,39 +25,73 @@ pub enum Error {
     },
 
     /// The merger declined or aborted a fusion.
-    #[error("fusion aborted: {0}")]
     FusionAborted(String),
 
+    /// The merger declined or aborted a defusion (split).
+    SplitAborted(String),
+
     /// Health checks did not pass within the deadline.
-    #[error("health check timeout for instance {0}")]
     HealthTimeout(u64),
 
     /// Artifact loading / PJRT failure.
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// Compute body unknown to the artifact set.
-    #[error("unknown compute body `{0}`")]
     UnknownBody(String),
 
     /// JSON parse error (hand-rolled parser in `util::json`).
-    #[error("json: {0}")]
     Json(String),
 
     /// Configuration problem.
-    #[error("config: {0}")]
     Config(String),
 
     /// Request failed (dropped, instance terminated mid-flight, ...).
-    #[error("request failed: {0}")]
     Request(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// I/O error (experiment output files, HTTP front end).
+    Io(std::io::Error),
 
-    /// Error bubbled up from the `xla` crate.
-    #[error("xla: {0}")]
+    /// Error bubbled up from the `xla` layer.
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::NoRoute(name) => write!(f, "no route for function `{name}`"),
+            Error::UnknownInstance(id) => write!(f, "unknown instance `{id}`"),
+            Error::UnknownImage(id) => write!(f, "unknown image `{id}`"),
+            Error::BadTransition { instance, from, to } => write!(
+                f,
+                "invalid lifecycle transition for instance {instance}: {from} -> {to}"
+            ),
+            Error::FusionAborted(msg) => write!(f, "fusion aborted: {msg}"),
+            Error::SplitAborted(msg) => write!(f, "split aborted: {msg}"),
+            Error::HealthTimeout(id) => write!(f, "health check timeout for instance {id}"),
+            Error::Runtime(msg) => write!(f, "runtime: {msg}"),
+            Error::UnknownBody(name) => write!(f, "unknown compute body `{name}`"),
+            Error::Json(msg) => write!(f, "json: {msg}"),
+            Error::Config(msg) => write!(f, "config: {msg}"),
+            Error::Request(msg) => write!(f, "request failed: {msg}"),
+            Error::Io(err) => write!(f, "{err}"),
+            Error::Xla(msg) => write!(f, "xla: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(err) => Some(err),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -68,3 +101,32 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        assert_eq!(Error::NoRoute("f".into()).to_string(), "no route for function `f`");
+        assert_eq!(
+            Error::BadTransition { instance: 3, from: "Healthy", to: "Terminated" }.to_string(),
+            "invalid lifecycle transition for instance 3: Healthy -> Terminated"
+        );
+        assert_eq!(Error::SplitAborted("x".into()).to_string(), "split aborted: x");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let err: Error = io.into();
+        assert!(err.to_string().contains("gone"));
+        assert!(std::error::Error::source(&err).is_some());
+    }
+
+    #[test]
+    fn xla_errors_convert() {
+        let err: Error = crate::xla::Error("boom".into()).into();
+        assert_eq!(err.to_string(), "xla: boom");
+    }
+}

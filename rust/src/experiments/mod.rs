@@ -10,9 +10,11 @@
 //! | TAB-LAT | §5.2 median latencies        | [`fig6`] (table form) |
 //! | TAB-RAM | §5.2 RAM reductions          | [`fig6`] (RAM columns)|
 //! | ABL-*   | ours: rate/hop/policy sweeps | [`sweep`]             |
+//! | FIG7    | ours: fuse ∧ split feedback  | [`fig7`]              |
 
 pub mod fig5;
 pub mod fig6;
+pub mod fig7;
 pub mod sweep;
 
 use std::rc::Rc;
@@ -22,7 +24,7 @@ use crate::billing::Bill;
 use crate::config::{ComputeMode, PlatformConfig, PlatformKind, WorkloadConfig};
 use crate::error::Result;
 use crate::exec::{Executor, Mode};
-use crate::metrics::{LatencySample, MergeEvent, RamSample};
+use crate::metrics::{LatencySample, MergeEvent, RamSample, SplitEvent};
 use crate::platform::Platform;
 use crate::workload::{self, WorkloadReport};
 
@@ -36,6 +38,7 @@ pub struct RunResult {
     pub latency_series: Vec<LatencySample>,
     pub ram_series: Vec<RamSample>,
     pub merges: Vec<MergeEvent>,
+    pub splits: Vec<SplitEvent>,
     /// time-weighted mean platform RAM over the whole run (MiB)
     pub ram_mean_mb: f64,
     /// instances alive at the end of the run
@@ -96,6 +99,7 @@ pub fn run_custom(
             latency_series: m.latencies(),
             ram_series: m.ram_series(),
             merges: m.merges(),
+            splits: m.splits(),
             ram_mean_mb: m.ram_mean_mb(),
             final_instances: platform.containers.live_count(),
             inline_calls: m.counter("inline_calls"),

@@ -80,6 +80,7 @@ fn run_arrival(
             latency_series: m.latencies(),
             ram_series: m.ram_series(),
             merges: m.merges(),
+            splits: m.splits(),
             ram_mean_mb: m.ram_mean_mb(),
             final_instances: platform.containers.live_count(),
             inline_calls: m.counter("inline_calls"),

@@ -1,12 +1,23 @@
-//! Fusion decision layer: the call-graph observation store and the
-//! admission policy.
+//! Fusion decision layer: call-graph observation store, admission policy,
+//! and the **feedback-driven defusion controller**.
 //!
 //! The Function Handler reports every *remote synchronous* call it observes
 //! (paper §3: detected via blocking outbound sockets).  Once a (caller,
 //! callee) pair crosses the observation threshold — and passes trust-domain,
-//! cooldown, and group-size checks — a [`FusionRequest`] is emitted to the
-//! Merger.  The observer also maintains the empirically discovered call
-//! graph, which `provuse apps --observed` can dump.
+//! cooldown, and group-size checks — a [`FusionRequest::Fuse`] is emitted to
+//! the Merger.
+//!
+//! Fusion is no longer one-way: the platform's controller loop periodically
+//! hands the Observer a [`GroupSample`] per live fused instance (RAM
+//! attribution + trailing-window p95), and the Observer closes the loop à la
+//! Fusionize/Fusionize++: a group that exceeds the configured RAM cap
+//! (`FusionParams::max_group_ram_mb`) or regresses p95 latency past the
+//! hysteresis threshold for `split_hysteresis_windows` consecutive windows
+//! gets a [`FusionRequest::Split`].  After a completed split every pair in
+//! the group enters cooldown so fuse ∧ split cannot flap.
+//!
+//! The observer also maintains the empirically discovered call graph, which
+//! `provuse apps --observed` can dump.
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, HashSet};
@@ -17,14 +28,53 @@ use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::Sender;
 
-/// A request for the Merger to fuse the instances hosting two functions.
+/// A request for the Merger: either consolidate two functions' instances or
+/// break a fused group back apart.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct FusionRequest {
-    pub caller: String,
-    pub callee: String,
+pub enum FusionRequest {
+    /// Fuse the instances hosting `caller` and `callee`.
+    Fuse { caller: String, callee: String },
+    /// Split the fused instance hosting exactly `functions` (sorted) back
+    /// into one instance per function.
+    Split {
+        functions: Vec<String>,
+        reason: SplitReason,
+    },
 }
 
-/// Shared observation store + policy gate.
+/// Which policy violation triggered a defusion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitReason {
+    /// The group's RAM footprint exceeded `max_group_ram_mb`.
+    RamCap,
+    /// The group's trailing-window p95 regressed past the pre-fusion
+    /// baseline by more than `split_p95_regression`.
+    LatencyRegression,
+}
+
+impl SplitReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SplitReason::RamCap => "ram_cap",
+            SplitReason::LatencyRegression => "latency_regression",
+        }
+    }
+}
+
+/// One controller observation of a live fused group (produced by the
+/// platform's feedback loop each `feedback_interval_ms`).
+#[derive(Debug, Clone)]
+pub struct GroupSample {
+    /// sorted function names hosted by the fused instance
+    pub functions: Vec<String>,
+    /// instantaneous RAM of the fused instance (MiB)
+    pub ram_mb: f64,
+    /// p95 end-to-end latency over the trailing feedback window (ms);
+    /// NaN when the window had too few samples to be meaningful
+    pub window_p95_ms: f64,
+}
+
+/// Shared observation store + policy gate + defusion feedback state.
 pub struct Observer {
     policy: FusionParams,
     /// fn name -> trust domain (from the app spec)
@@ -41,6 +91,41 @@ struct ObserverState {
     requested: HashSet<(String, String)>,
     /// virtual-time (ms) before which a pair may not be re-requested
     cooldown_until: HashMap<(String, String), f64>,
+    /// feedback accounting per live fused group (key: sorted functions)
+    groups: BTreeMap<Vec<String>, GroupFeedback>,
+}
+
+/// Per-group controller state.
+struct GroupFeedback {
+    /// p95 over the regime *before* this group (or its earliest fused
+    /// ancestor) was created; NaN = unknown (latency check disabled)
+    baseline_p95_ms: f64,
+    /// virtual time (ms) the baseline was captured — earliest wins when
+    /// groups grow transitively, keeping the baseline anchored to the
+    /// closest-to-vanilla regime
+    recorded_at_ms: f64,
+    /// consecutive feedback windows over the RAM cap
+    ram_strikes: u32,
+    /// consecutive feedback windows past the latency-regression threshold
+    latency_strikes: u32,
+    /// a split request is in flight for this group
+    split_pending: bool,
+    /// virtual time (ms) before which no new split may be requested
+    /// (set after a failed/aborted split)
+    retry_after_ms: f64,
+}
+
+impl GroupFeedback {
+    fn new(baseline_p95_ms: f64, recorded_at_ms: f64) -> Self {
+        GroupFeedback {
+            baseline_p95_ms,
+            recorded_at_ms,
+            ram_strikes: 0,
+            latency_strikes: 0,
+            split_pending: false,
+            retry_after_ms: 0.0,
+        }
+    }
 }
 
 impl Observer {
@@ -57,7 +142,7 @@ impl Observer {
     }
 
     /// Record one observed remote synchronous call; may emit a
-    /// [`FusionRequest`] if the policy admits the pair.
+    /// [`FusionRequest::Fuse`] if the policy admits the pair.
     pub fn observe_sync_call(&self, caller: &str, callee: &str) {
         let key = (caller.to_string(), callee.to_string());
         let mut s = self.state.borrow_mut();
@@ -89,7 +174,7 @@ impl Observer {
         s.requested.insert(key.clone());
         drop(s);
         // Receiver gone (merger shut down) is benign: fusion simply stops.
-        let _ = self.tx.send(FusionRequest { caller: key.0, callee: key.1 });
+        let _ = self.tx.send(FusionRequest::Fuse { caller: key.0, callee: key.1 });
     }
 
     /// Merger feedback: the pair's fusion failed — re-allow after cooldown.
@@ -101,11 +186,137 @@ impl Observer {
             .insert(key, exec::now().as_millis_f64() + self.policy.cooldown_ms);
     }
 
-    /// Merger feedback: the pair is now colocated; further observations of
-    /// this pair are inline calls and will not be reported anyway.
-    pub fn fusion_succeeded(&self, caller: &str, callee: &str) {
-        let key = (caller.to_string(), callee.to_string());
-        self.state.borrow_mut().requested.insert(key);
+    /// Merger feedback: the pair is now colocated in the fused instance
+    /// hosting `group`, whose pre-fusion p95 was `baseline_p95_ms` (NaN =
+    /// too few samples; latency-triggered defusion stays disarmed).
+    ///
+    /// Further observations of the pair are inline calls and will not be
+    /// reported anyway; the group enters feedback tracking.
+    pub fn fusion_succeeded(
+        &self,
+        caller: &str,
+        callee: &str,
+        group: &[String],
+        baseline_p95_ms: f64,
+    ) {
+        let now = exec::now().as_millis_f64();
+        let mut s = self.state.borrow_mut();
+        s.requested.insert((caller.to_string(), callee.to_string()));
+
+        let mut key: Vec<String> = group.to_vec();
+        key.sort();
+        // Transitive growth subsumes existing subgroups; inherit the
+        // earliest baseline (closest to the vanilla regime).
+        let mut baseline = baseline_p95_ms;
+        let mut recorded = now;
+        let subsumed: Vec<Vec<String>> = s
+            .groups
+            .keys()
+            .filter(|k| k.iter().all(|f| key.contains(f)))
+            .cloned()
+            .collect();
+        for k in subsumed {
+            if let Some(old) = s.groups.remove(&k) {
+                if old.baseline_p95_ms.is_finite() && old.recorded_at_ms < recorded {
+                    recorded = old.recorded_at_ms;
+                    baseline = old.baseline_p95_ms;
+                }
+            }
+        }
+        s.groups.insert(key, GroupFeedback::new(baseline, recorded));
+    }
+
+    /// Controller tick: evaluate every live fused group against the defusion
+    /// policy; emits [`FusionRequest::Split`] once a violation has persisted
+    /// for `split_hysteresis_windows` consecutive windows.
+    pub fn feedback(&self, samples: &[GroupSample]) {
+        if !self.policy.enabled || !self.policy.defusion {
+            return;
+        }
+        let now = exec::now().as_millis_f64();
+        let hysteresis = self.policy.split_hysteresis_windows.max(1);
+        let mut s = self.state.borrow_mut();
+        for sample in samples {
+            let mut key = sample.functions.clone();
+            key.sort();
+            let g = s
+                .groups
+                .entry(key.clone())
+                .or_insert_with(|| GroupFeedback::new(f64::NAN, now));
+            if g.split_pending || now < g.retry_after_ms {
+                continue;
+            }
+            let over_ram =
+                self.policy.max_group_ram_mb > 0.0 && sample.ram_mb > self.policy.max_group_ram_mb;
+            g.ram_strikes = if over_ram { g.ram_strikes + 1 } else { 0 };
+            let regressed = self.policy.split_p95_regression > 0.0
+                && g.baseline_p95_ms.is_finite()
+                && sample.window_p95_ms.is_finite()
+                && sample.window_p95_ms
+                    > g.baseline_p95_ms * (1.0 + self.policy.split_p95_regression);
+            g.latency_strikes = if regressed { g.latency_strikes + 1 } else { 0 };
+
+            let reason = if g.ram_strikes >= hysteresis {
+                Some(SplitReason::RamCap)
+            } else if g.latency_strikes >= hysteresis {
+                Some(SplitReason::LatencyRegression)
+            } else {
+                None
+            };
+            if let Some(reason) = reason {
+                g.split_pending = true;
+                g.ram_strikes = 0;
+                g.latency_strikes = 0;
+                let _ = self.tx.send(FusionRequest::Split { functions: key, reason });
+            }
+        }
+    }
+
+    /// Merger feedback: the group was split back into per-function
+    /// instances.  Every pair inside the group enters cooldown so the next
+    /// observations cannot immediately re-fuse it (anti-flapping).
+    pub fn split_succeeded(&self, functions: &[String]) {
+        let now = exec::now().as_millis_f64();
+        let mut s = self.state.borrow_mut();
+        let mut key: Vec<String> = functions.to_vec();
+        key.sort();
+        s.groups.remove(&key);
+        for a in functions {
+            for b in functions {
+                if a == b {
+                    continue;
+                }
+                let pair = (a.clone(), b.clone());
+                s.requested.remove(&pair);
+                s.cooldown_until.insert(pair, now + self.policy.cooldown_ms);
+            }
+        }
+    }
+
+    /// Merger feedback: the split failed/aborted — the fused instance keeps
+    /// serving; retry no sooner than one cooldown from now.
+    pub fn split_failed(&self, functions: &[String]) {
+        let now = exec::now().as_millis_f64();
+        let mut s = self.state.borrow_mut();
+        let mut key: Vec<String> = functions.to_vec();
+        key.sort();
+        if let Some(g) = s.groups.get_mut(&key) {
+            g.split_pending = false;
+            g.retry_after_ms = now + self.policy.cooldown_ms;
+        }
+    }
+
+    /// Pre-fusion p95 baseline tracked for a fused group (test/report
+    /// introspection); NaN when unknown or untracked.
+    pub fn group_baseline_p95(&self, functions: &[String]) -> f64 {
+        let mut key: Vec<String> = functions.to_vec();
+        key.sort();
+        self.state
+            .borrow()
+            .groups
+            .get(&key)
+            .map(|g| g.baseline_p95_ms)
+            .unwrap_or(f64::NAN)
     }
 
     /// Observation count of a pair.
@@ -149,6 +360,18 @@ mod tests {
         (Observer::new(policy, &app, tx), rx)
     }
 
+    fn fuse(caller: &str, callee: &str) -> FusionRequest {
+        FusionRequest::Fuse { caller: caller.into(), callee: callee.into() }
+    }
+
+    fn sample(functions: &[&str], ram_mb: f64, p95: f64) -> GroupSample {
+        GroupSample {
+            functions: functions.iter().map(|s| s.to_string()).collect(),
+            ram_mb,
+            window_p95_ms: p95,
+        }
+    }
+
     #[test]
     fn threshold_gates_requests() {
         run_virtual(async {
@@ -157,10 +380,7 @@ mod tests {
             obs.observe_sync_call("a", "b");
             assert!(rx.try_recv().is_none(), "below threshold");
             obs.observe_sync_call("a", "b");
-            assert_eq!(
-                rx.try_recv(),
-                Some(FusionRequest { caller: "a".into(), callee: "b".into() })
-            );
+            assert_eq!(rx.try_recv(), Some(fuse("a", "b")));
             // no duplicate request
             obs.observe_sync_call("a", "b");
             assert!(rx.try_recv().is_none());
@@ -235,6 +455,157 @@ mod tests {
             assert_eq!(g[0].0, ("a".into(), "b".into()));
             assert_eq!(g[0].1, 2);
             assert_eq!(g[1].0, ("b".into(), "d".into()));
+        });
+    }
+
+    // -- defusion controller --------------------------------------------------
+
+    fn defusion_policy() -> FusionParams {
+        let mut p = FusionParams::default_enabled();
+        p.max_group_ram_mb = 100.0;
+        p.split_hysteresis_windows = 2;
+        p.split_p95_regression = 0.5;
+        p
+    }
+
+    #[test]
+    fn ram_cap_violation_splits_after_hysteresis() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(defusion_policy());
+            let group = ["a".to_string(), "b".to_string()];
+            obs.fusion_succeeded("a", "b", &group, 400.0);
+            // one strike: not yet
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            assert!(rx.try_recv().is_none());
+            // second consecutive strike: split
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            assert_eq!(
+                rx.try_recv(),
+                Some(FusionRequest::Split {
+                    functions: vec!["a".into(), "b".into()],
+                    reason: SplitReason::RamCap,
+                })
+            );
+            // pending split suppresses duplicates
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            assert!(rx.try_recv().is_none());
+        });
+    }
+
+    #[test]
+    fn transient_spike_resets_hysteresis() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(defusion_policy());
+            obs.fusion_succeeded("a", "b", &["a".to_string(), "b".to_string()], 400.0);
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            obs.feedback(&[sample(&["a", "b"], 90.0, f64::NAN)]); // back under cap
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            assert!(rx.try_recv().is_none(), "strikes must reset on recovery");
+        });
+    }
+
+    #[test]
+    fn latency_regression_splits_and_respects_baseline() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(defusion_policy());
+            obs.fusion_succeeded("a", "b", &["a".to_string(), "b".to_string()], 200.0);
+            // improved latency: no split
+            obs.feedback(&[sample(&["a", "b"], 50.0, 150.0)]);
+            obs.feedback(&[sample(&["a", "b"], 50.0, 150.0)]);
+            assert!(rx.try_recv().is_none());
+            // regression past 200 * 1.5 = 300 for two windows: split
+            obs.feedback(&[sample(&["a", "b"], 50.0, 320.0)]);
+            obs.feedback(&[sample(&["a", "b"], 50.0, 310.0)]);
+            assert_eq!(
+                rx.try_recv(),
+                Some(FusionRequest::Split {
+                    functions: vec!["a".into(), "b".into()],
+                    reason: SplitReason::LatencyRegression,
+                })
+            );
+        });
+    }
+
+    #[test]
+    fn split_success_cools_pairs_down_preventing_flap() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(defusion_policy());
+            for _ in 0..3 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert_eq!(rx.try_recv(), Some(fuse("a", "b")));
+            obs.fusion_succeeded("a", "b", &["a".to_string(), "b".to_string()], 400.0);
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            assert!(matches!(rx.try_recv(), Some(FusionRequest::Split { .. })));
+            obs.split_succeeded(&["a".to_string(), "b".to_string()]);
+            // immediately re-observed: cooldown must block re-fusion
+            obs.observe_sync_call("a", "b");
+            assert!(rx.try_recv().is_none(), "fuse->split->fuse flap");
+            // after the cooldown the pair may fuse again
+            crate::exec::sleep_ms(10_001.0).await;
+            obs.observe_sync_call("a", "b");
+            assert_eq!(rx.try_recv(), Some(fuse("a", "b")));
+        });
+    }
+
+    #[test]
+    fn split_failure_backs_off_before_retry() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(defusion_policy());
+            let group = ["a".to_string(), "b".to_string()];
+            obs.fusion_succeeded("a", "b", &group, 400.0);
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            assert!(matches!(rx.try_recv(), Some(FusionRequest::Split { .. })));
+            obs.split_failed(&group);
+            // still violating, but inside the retry backoff
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            assert!(rx.try_recv().is_none());
+            crate::exec::sleep_ms(10_001.0).await;
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            obs.feedback(&[sample(&["a", "b"], 150.0, f64::NAN)]);
+            assert!(matches!(rx.try_recv(), Some(FusionRequest::Split { .. })));
+        });
+    }
+
+    #[test]
+    fn defusion_disabled_never_splits() {
+        run_virtual(async {
+            let mut p = defusion_policy();
+            p.defusion = false;
+            let (obs, mut rx) = observer(p);
+            obs.fusion_succeeded("a", "b", &["a".to_string(), "b".to_string()], 400.0);
+            for _ in 0..10 {
+                obs.feedback(&[sample(&["a", "b"], 500.0, 10_000.0)]);
+            }
+            assert!(rx.try_recv().is_none());
+        });
+    }
+
+    #[test]
+    fn transitive_growth_inherits_earliest_baseline() {
+        run_virtual(async {
+            let (obs, _rx) = observer(defusion_policy());
+            obs.fusion_succeeded("a", "b", &["a".to_string(), "b".to_string()], 400.0);
+            crate::exec::sleep_ms(1_000.0).await;
+            // group grows; the fresh (post-fusion, faster) baseline must NOT
+            // replace the original pre-fusion one
+            obs.fusion_succeeded(
+                "b",
+                "c",
+                &["a".to_string(), "b".to_string(), "c".to_string()],
+                250.0,
+            );
+            let b = obs.group_baseline_p95(&[
+                "a".to_string(),
+                "b".to_string(),
+                "c".to_string(),
+            ]);
+            assert_eq!(b, 400.0);
+            // subsumed subgroup is gone
+            assert!(obs.group_baseline_p95(&["a".to_string(), "b".to_string()]).is_nan());
         });
     }
 }

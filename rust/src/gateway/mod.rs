@@ -54,6 +54,23 @@ impl Gateway {
         Ok(())
     }
 
+    /// Atomically install a set of `(function, instance)` routes — the
+    /// split pipeline's cutover, where every function returns to its own
+    /// instance.  Either all routes change or none.
+    pub fn swap_routes_multi(&self, routes: &[(String, Rc<Instance>)]) -> Result<()> {
+        let mut table = self.inner.routes.borrow_mut();
+        for (f, _) in routes {
+            if !table.contains_key(f) {
+                return Err(Error::NoRoute(f.clone()));
+            }
+        }
+        for (f, inst) in routes {
+            table.insert(f.clone(), Rc::clone(inst));
+        }
+        self.inner.version.set(self.inner.version.get() + 1);
+        Ok(())
+    }
+
     /// Resolve a function to its current instance.
     pub fn resolve(&self, function: &str) -> Result<Rc<Instance>> {
         self.inner
@@ -157,5 +174,31 @@ mod tests {
         assert_eq!(snap.len(), 2);
         assert_eq!(snap[0].0, "a");
         assert_eq!(snap[1].0, "b");
+    }
+
+    #[test]
+    fn swap_multi_is_all_or_nothing() {
+        let (_rt, gw, ia, ib) = setup();
+        // fuse both routes onto one instance first
+        gw.swap_routes(&["a".into(), "b".into()], Rc::clone(&ia)).unwrap();
+        assert_eq!(gw.distinct_instances(), 1);
+        let v0 = gw.version();
+
+        // unknown function -> nothing changes
+        let err = gw.swap_routes_multi(&[
+            ("a".into(), Rc::clone(&ia)),
+            ("ghost".into(), Rc::clone(&ib)),
+        ]);
+        assert!(err.is_err());
+        assert_eq!(gw.version(), v0);
+        assert_eq!(gw.resolve("b").unwrap().id(), ia.id());
+
+        // split cutover: each function back to its own instance
+        gw.swap_routes_multi(&[("a".into(), Rc::clone(&ia)), ("b".into(), Rc::clone(&ib))])
+            .unwrap();
+        assert_eq!(gw.version(), v0 + 1);
+        assert_eq!(gw.resolve("a").unwrap().id(), ia.id());
+        assert_eq!(gw.resolve("b").unwrap().id(), ib.id());
+        assert_eq!(gw.distinct_instances(), 2);
     }
 }

@@ -39,5 +39,6 @@ pub mod platform;
 pub mod runtime;
 pub mod util;
 pub mod workload;
+pub mod xla;
 
 pub use error::{Error, Result};

@@ -56,6 +56,27 @@ fn compute_from(args: &Args) -> ComputeMode {
     }
 }
 
+/// Apply the fusion/defusion policy flags shared by `experiment` and
+/// `serve` to a platform config (`figure7` maps the subset that makes
+/// sense for its fixed scenario onto `Fig7Params` itself).
+fn apply_fusion_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
+    let f = &mut config.fusion;
+    f.min_observations = args.u32_or("min-observations", f.min_observations)?;
+    f.cooldown_ms = args.f64_or("cooldown-ms", f.cooldown_ms)?;
+    f.max_group_size = args.u64_or("max-group-size", f.max_group_size as u64)? as usize;
+    f.max_group_ram_mb = args.f64_or("max-group-ram", f.max_group_ram_mb)?;
+    f.split_p95_regression = args.f64_or("split-regression", f.split_p95_regression)?;
+    f.split_hysteresis_windows = args.u32_or("hysteresis", f.split_hysteresis_windows)?;
+    f.feedback_interval_ms = args.f64_or("feedback-interval-ms", f.feedback_interval_ms)?;
+    if args.has("no-defusion") {
+        f.defusion = false;
+    }
+    if args.has("no-transitive") {
+        f.transitive = false;
+    }
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("figure5") => {
@@ -70,6 +91,43 @@ fn dispatch(args: &Args) -> Result<()> {
             let fig = experiments::fig6::run(&out, workload_from(args)?, compute_from(args))?;
             println!("{}", fig.render());
             println!("outputs written to {}", out.display());
+            Ok(())
+        }
+        Some("figure7") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/fig7"));
+            let mut p = if args.has("smoke") {
+                experiments::fig7::Fig7Params::smoke()
+            } else {
+                experiments::fig7::Fig7Params::paper_scale()
+            };
+            p.compute = compute_from(args);
+            p.seed = args.u64_or("seed", p.seed)?;
+            p.calm_rps = args.f64_or("calm-rps", p.calm_rps)?;
+            p.pressure_rps = args.f64_or("pressure-rps", p.pressure_rps)?;
+            p.max_group_ram_mb = args.f64_or("max-group-ram", p.max_group_ram_mb)?;
+            p.split_p95_regression =
+                args.f64_or("split-regression", p.split_p95_regression)?;
+            p.cooldown_ms = args.f64_or("cooldown-ms", p.cooldown_ms)?;
+            p.feedback_interval_ms =
+                args.f64_or("feedback-interval-ms", p.feedback_interval_ms)?;
+            p.hysteresis = args.u32_or("hysteresis", p.hysteresis)?;
+            p.min_observations = args.u32_or("min-observations", p.min_observations)?;
+            for flag in ["no-defusion", "no-transitive", "max-group-size"] {
+                if args.has(flag) {
+                    return Err(provuse::Error::Config(format!(
+                        "--{flag} is not applicable to figure7 (the scenario needs \
+                         defusion + transitive growth); use `experiment` instead"
+                    )));
+                }
+            }
+            let fig = experiments::fig7::run(&out, p)?;
+            println!("{}", fig.render());
+            println!("outputs written to {}", out.display());
+            if !fig.passed() {
+                return Err(provuse::Error::Runtime(
+                    "FIG7 feedback-loop checks failed".into(),
+                ));
+            }
             Ok(())
         }
         Some("ram-table") => {
@@ -111,15 +169,19 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("experiment") => {
             let kind = PlatformKind::parse(&args.str_or("platform", "tiny"))?;
-            let app = args.str_or("app", "iot");
-            let fusion = !args.has("vanilla");
-            let result =
-                experiments::run_one(kind, &app, fusion, workload_from(args)?, compute_from(args))?;
+            let app = provuse::apps::by_name(&args.str_or("app", "iot"))?;
+            let mut config = PlatformConfig::of_kind(kind).with_compute(compute_from(args));
+            apply_fusion_flags(args, &mut config)?;
+            if args.has("vanilla") {
+                config = config.vanilla();
+            }
+            let result = experiments::run_custom(app, config, workload_from(args)?)?;
             println!("{}: {}", result.label(), result.report.summary());
             println!(
-                "  RAM mean {:.0} MiB, {} merges, {} final instances, {} inline calls",
+                "  RAM mean {:.0} MiB, {} merges, {} splits, {} final instances, {} inline calls",
                 result.ram_mean_mb,
                 result.merges.len(),
+                result.splits.len(),
                 result.final_instances,
                 result.inline_calls
             );
@@ -177,6 +239,7 @@ fn dispatch(args: &Args) -> Result<()> {
                     ComputeMode::Live
                 })
                 .scale_latency(scale);
+            apply_fusion_flags(args, &mut config)?;
             if args.has("vanilla") {
                 config = config.vanilla();
             }
@@ -195,6 +258,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  commands:\n\
                  \x20 figure5              paper Fig. 5 (IOT/tinyFaaS latency series)\n\
                  \x20 figure6              paper Fig. 6 + §5.2 latency table\n\
+                 \x20 figure7 [--smoke]    ours: feedback loop (fuse, RAM-cap split, re-fuse)\n\
                  \x20 ram-table            §5.2 RAM reductions\n\
                  \x20 cost-table           TAB-COST: double-billing elimination in $\n\
                  \x20 sweep --dim D        ablations (rate|hop|policy|depth|arrival)\n\
@@ -203,7 +267,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20 validate-artifacts   PJRT vs python golden parity\n\
                  \x20 serve --port P       real HTTP front end (live PJRT compute)\n\
                  \x20 dump-config          print calibration JSON\n\n\
-                 common flags: --requests N --rate R --seed S --live --no-compute --out DIR"
+                 common flags: --requests N --rate R --seed S --live --no-compute --out DIR\n\
+                 policy flags: --min-observations N --cooldown-ms MS --max-group-size N\n\
+                 \x20             --max-group-ram MB --split-regression F --hysteresis N\n\
+                 \x20             --feedback-interval-ms MS --no-defusion --no-transitive"
             );
             Ok(())
         }

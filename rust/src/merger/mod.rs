@@ -1,18 +1,26 @@
 //! The Merger (paper §3): consolidates independently deployed function
-//! instances into a single container.
+//! instances into a single container — and, closing the feedback loop,
+//! breaks regressing groups back apart (see [`split`]).
 //!
-//! Pipeline per fusion request: resolve instances → export filesystems →
+//! Fuse pipeline per request: resolve instances → export filesystems →
 //! collision-preserving union → build fused image → deploy → health gate →
 //! atomic route cutover → drain originals → terminate.  Failures at any
 //! stage roll back (never-routed instances are torn down, the pair goes on
 //! cooldown) and the platform keeps serving from the originals.
+//!
+//! Split pipeline (defusion) per request: re-deploy the original
+//! per-function instances from their retained images → health gate →
+//! atomic route cutover back → drain and terminate the fused instance →
+//! cooldown the pairs in the Observer so fuse ∧ split cannot flap.
 
 pub mod fsunion;
+pub mod split;
 
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::config::PlatformConfig;
-use crate::containerd::{ContainerRuntime, Instance};
+use crate::containerd::{ContainerRuntime, ImageId, Instance};
 use crate::error::{Error, Result};
 use crate::exec;
 use crate::exec::channel::Receiver;
@@ -29,6 +37,9 @@ pub struct MergerCtx {
     pub observer: Rc<Observer>,
     pub metrics: Recorder,
     pub deployer: Deployer,
+    /// Retained single-function images from the initial deployment — the
+    /// artifact sets the split pipeline re-deploys originals from.
+    pub originals: Rc<BTreeMap<String, ImageId>>,
 }
 
 /// The Merger service: processes fusion requests sequentially (one merge in
@@ -45,24 +56,40 @@ impl Merger {
     /// Service loop; ends when all request senders are dropped.
     pub async fn run(self, mut rx: Receiver<FusionRequest>) {
         while let Some(req) = rx.recv().await {
-            if let Err(err) = self.handle(&req).await {
-                self.ctx.metrics.bump("fusion_aborted");
-                self.ctx.observer.fusion_failed(&req.caller, &req.callee);
-                // The platform keeps serving from the original instances.
-                let _ = err;
+            self.process(req).await;
+        }
+    }
+
+    /// Handle one request with failure feedback to the Observer.  The
+    /// platform keeps serving from the pre-request topology on any error.
+    pub async fn process(&self, req: FusionRequest) {
+        match req {
+            FusionRequest::Fuse { caller, callee } => {
+                if let Err(err) = self.handle_fuse(&caller, &callee).await {
+                    self.ctx.metrics.bump("fusion_aborted");
+                    self.ctx.observer.fusion_failed(&caller, &callee);
+                    let _ = err;
+                }
+            }
+            FusionRequest::Split { functions, reason } => {
+                if let Err(err) = self.handle_split(&functions, reason).await {
+                    self.ctx.metrics.bump("split_aborted");
+                    self.ctx.observer.split_failed(&functions);
+                    let _ = err;
+                }
             }
         }
     }
 
     /// One merge. Public for targeted tests.
-    pub async fn handle(&self, req: &FusionRequest) -> Result<()> {
+    pub async fn handle_fuse(&self, caller: &str, callee: &str) -> Result<()> {
         let ctx = &self.ctx;
         ctx.metrics.bump("fusion_requests");
 
         // 1. resolve both endpoints to their *current* instances (either may
         //    already be a fused instance -> transitive growth)
-        let a = ctx.gateway.resolve(&req.caller)?;
-        let b = ctx.gateway.resolve(&req.callee)?;
+        let a = ctx.gateway.resolve(caller)?;
+        let b = ctx.gateway.resolve(callee)?;
         if a.id() == b.id() {
             ctx.metrics.bump("fusion_already_colocated");
             return Ok(());
@@ -93,42 +120,61 @@ impl Merger {
 
         // 5. health gate: N consecutive successes before any traffic cutover
         self.await_healthy(&fused).await.inspect_err(|_| {
+            ctx.metrics.bump("fusion_health_timeouts");
             // roll back the never-routed instance
             let _ = fused.begin_drain();
             let _ = ctx.containers.terminate(&fused);
         })?;
 
-        // 6. atomic route cutover for every hosted function
+        // 6. capture the pre-fusion latency regime for the feedback
+        //    controller, then atomically swap routes for every hosted
+        //    function.  A trailing window (not all-time) keeps the baseline
+        //    anchored to the regime right before this cutover, so re-fusions
+        //    after a split aren't judged against stale history.
+        let baseline_p95_ms = {
+            let now_ms = ctx.metrics.rel_now_ms();
+            let lookback = (ctx.observer.policy().feedback_interval_ms * 10.0).max(10_000.0);
+            ctx.metrics.p95_window(
+                (now_ms - lookback).max(0.0),
+                now_ms,
+                crate::metrics::MIN_WINDOW_SAMPLES,
+            )
+        };
         let names: Vec<String> = functions.iter().map(|(n, _)| n.clone()).collect();
         ctx.gateway.swap_routes(&names, Rc::clone(&fused))?;
         let now = exec::now();
         ctx.metrics.record_merge(MergeEvent {
             t_ms: ctx.metrics.rel_now_ms(),
-            functions: names,
+            functions: names.clone(),
             duration_ms: now.duration_since(t_start).as_secs_f64() * 1e3,
         });
         ctx.metrics.bump("fusions_completed");
-        ctx.observer.fusion_succeeded(&req.caller, &req.callee);
+        ctx.observer.fusion_succeeded(caller, callee, &names, baseline_p95_ms);
 
         // 7. drain + terminate the originals off the merge loop ("stopped
         //    and deleted as soon as they are no longer processing requests")
         for old in [a, b] {
             old.begin_drain()?;
-            let containers = ctx.containers.clone();
-            let metrics = ctx.metrics.clone();
-            exec::spawn(async move {
-                old.drained().await;
-                if containers.terminate(&old).is_ok() {
-                    metrics.bump("instances_reclaimed");
-                }
-            });
+            self.reclaim_when_drained(old);
         }
         Ok(())
     }
 
+    /// Terminate `old` once its in-flight requests have drained (detached).
+    pub(crate) fn reclaim_when_drained(&self, old: Rc<Instance>) {
+        let containers = self.ctx.containers.clone();
+        let metrics = self.ctx.metrics.clone();
+        exec::spawn(async move {
+            old.drained().await;
+            if containers.terminate(&old).is_ok() {
+                metrics.bump("instances_reclaimed");
+            }
+        });
+    }
+
     /// Poll health checks until `health_checks_required` consecutive passes
     /// or the deadline (4x boot + 5s) expires.
-    async fn await_healthy(&self, inst: &Rc<Instance>) -> Result<()> {
+    pub(crate) async fn await_healthy(&self, inst: &Rc<Instance>) -> Result<()> {
         let lat = &self.ctx.config.latency;
         let deadline_ms =
             exec::now().as_millis_f64() + lat.boot_ms * 4.0 + 5_000.0;
@@ -144,7 +190,6 @@ impl Merger {
                 passes = 0;
             }
             if exec::now().as_millis_f64() > deadline_ms {
-                self.ctx.metrics.bump("fusion_health_timeouts");
                 return Err(Error::HealthTimeout(inst.id().0));
             }
         }

@@ -1,0 +1,134 @@
+//! Defusion: the reverse Merger pipeline (feedback-driven splitting).
+//!
+//! When the controller decides a fused group regressed — RAM over
+//! `max_group_ram_mb` or p95 past the hysteresis threshold — the Merger
+//! re-deploys the group's functions from their **retained original
+//! images** (no image build: the initial per-function artifacts were never
+//! discarded), health-gates every replacement, atomically cuts the routes
+//! back over, and drains + terminates the fused instance.
+//!
+//! Failure at any stage rolls back: the never-routed replacements are torn
+//! down, the fused instance keeps serving, and the group re-enters cooldown
+//! (`Observer::split_failed`), so a flaky split can never drop a request.
+
+use std::rc::Rc;
+
+use crate::containerd::Instance;
+use crate::error::{Error, Result};
+use crate::exec;
+use crate::fusion::SplitReason;
+use crate::metrics::SplitEvent;
+
+use super::Merger;
+
+impl Merger {
+    /// One split. Public for targeted tests.
+    ///
+    /// `functions` is the sorted function set the controller sampled; the
+    /// split is aborted as stale when the live topology no longer matches
+    /// (e.g. a racing transitive merge grew the group in the meantime).
+    pub async fn handle_split(&self, functions: &[String], reason: SplitReason) -> Result<()> {
+        let ctx = &self.ctx;
+        ctx.metrics.bump("split_requests");
+
+        if functions.len() < 2 {
+            return Err(Error::SplitAborted("group has fewer than two functions".into()));
+        }
+
+        // 1. resolve the fused instance and check the sampled membership is
+        //    still the live topology
+        let fused = ctx.gateway.resolve(&functions[0])?;
+        let mut hosted: Vec<String> =
+            fused.functions().iter().map(|(n, _)| n.clone()).collect();
+        hosted.sort();
+        let mut expected: Vec<String> = functions.to_vec();
+        expected.sort();
+        if hosted != expected {
+            return Err(Error::SplitAborted(format!(
+                "stale group: sampled [{}] but instance {} hosts [{}]",
+                expected.join("+"),
+                fused.id(),
+                hosted.join("+")
+            )));
+        }
+        for f in &expected {
+            if ctx.gateway.resolve(f)?.id() != fused.id() {
+                return Err(Error::SplitAborted(format!(
+                    "stale group: `{f}` no longer routed to instance {}",
+                    fused.id()
+                )));
+            }
+        }
+
+        let t_start = exec::now();
+
+        // 2. re-deploy one instance per function from its retained original
+        //    image, then health-gate all of them before any traffic moves
+        let fresh = self.deploy_originals(&expected).await?;
+
+        // 3. atomic cutover: every function back to its own instance
+        let routes: Vec<(String, Rc<Instance>)> = expected
+            .iter()
+            .cloned()
+            .zip(fresh.iter().map(Rc::clone))
+            .collect();
+        ctx.gateway.swap_routes_multi(&routes).inspect_err(|_| self.rollback(&fresh))?;
+
+        let now = exec::now();
+        ctx.metrics.record_split(SplitEvent {
+            t_ms: ctx.metrics.rel_now_ms(),
+            functions: expected.clone(),
+            duration_ms: now.duration_since(t_start).as_secs_f64() * 1e3,
+            reason,
+        });
+        ctx.metrics.bump("splits_completed");
+        ctx.observer.split_succeeded(&expected);
+
+        // 4. drain + terminate the fused instance off the merge loop
+        fused.begin_drain()?;
+        self.reclaim_when_drained(fused);
+        Ok(())
+    }
+
+    /// Launch a replacement instance per function and wait until every one
+    /// is healthy.  Any failure tears down all replacements and bubbles the
+    /// error (the fused instance was never un-routed, so it keeps serving).
+    async fn deploy_originals(&self, functions: &[String]) -> Result<Vec<Rc<Instance>>> {
+        let ctx = &self.ctx;
+        let mut fresh: Vec<Rc<Instance>> = Vec::with_capacity(functions.len());
+        for f in functions {
+            let image = match ctx.originals.get(f) {
+                Some(id) => *id,
+                None => {
+                    self.rollback(&fresh);
+                    return Err(Error::SplitAborted(format!(
+                        "no retained original image for `{f}`"
+                    )));
+                }
+            };
+            match ctx.deployer.launch(image).await {
+                Ok(inst) => fresh.push(inst),
+                Err(err) => {
+                    self.rollback(&fresh);
+                    return Err(err);
+                }
+            }
+        }
+        for inst in &fresh {
+            if let Err(err) = self.await_healthy(inst).await {
+                ctx.metrics.bump("split_health_timeouts");
+                self.rollback(&fresh);
+                return Err(err);
+            }
+        }
+        Ok(fresh)
+    }
+
+    /// Tear down never-routed replacement instances.
+    fn rollback(&self, fresh: &[Rc<Instance>]) {
+        for inst in fresh {
+            let _ = inst.begin_drain();
+            let _ = self.ctx.containers.terminate(inst);
+        }
+    }
+}

@@ -1,11 +1,19 @@
-//! Metrics recorder: request latencies, RAM time series, merge events, and
-//! named counters — everything the paper's evaluation section reports.
+//! Metrics recorder: request latencies, RAM time series (platform-wide and
+//! per fused group), merge/split events, and named counters — everything
+//! the paper's evaluation section reports plus the feedback controller's
+//! observability surface.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
+use crate::fusion::SplitReason;
 use crate::util::stats::Quantiles;
+
+/// Minimum samples a latency window needs before its p95 is considered
+/// meaningful (shared by the feedback controller's window checks and the
+/// merger's baseline capture).
+pub const MIN_WINDOW_SAMPLES: usize = 5;
 
 /// One completed request.
 #[derive(Debug, Clone, Copy)]
@@ -37,6 +45,31 @@ pub struct MergeEvent {
     pub duration_ms: f64,
 }
 
+/// One completed defusion: a fused group broken back into per-function
+/// instances by the feedback controller (FIG7).
+#[derive(Debug, Clone)]
+pub struct SplitEvent {
+    /// virtual time the per-function routes were cut back over (ms)
+    pub t_ms: f64,
+    /// functions the group hosted (sorted)
+    pub functions: Vec<String>,
+    /// wall (virtual) duration of the split pipeline (ms)
+    pub duration_ms: f64,
+    /// which policy violation triggered the split
+    pub reason: SplitReason,
+}
+
+/// One RAM attribution sample for a live fused group (the controller's
+/// per-group view, recorded every feedback tick).
+#[derive(Debug, Clone)]
+pub struct GroupRamSample {
+    pub t_ms: f64,
+    /// `+`-joined sorted function names identifying the group
+    pub group: String,
+    /// instantaneous RAM of the fused instance (MiB)
+    pub ram_mb: f64,
+}
+
 /// Shared, single-threaded metrics sink (cheap `Rc` handle).
 #[derive(Clone, Default)]
 pub struct Recorder {
@@ -47,7 +80,9 @@ pub struct Recorder {
 struct RecorderInner {
     latencies: RefCell<Vec<LatencySample>>,
     ram: RefCell<Vec<RamSample>>,
+    group_ram: RefCell<Vec<GroupRamSample>>,
     merges: RefCell<Vec<MergeEvent>>,
+    splits: RefCell<Vec<SplitEvent>>,
     counters: RefCell<BTreeMap<&'static str, u64>>,
     /// absolute virtual-time (ms) all recorded timestamps are relative to
     epoch_ms: std::cell::Cell<f64>,
@@ -78,8 +113,16 @@ impl Recorder {
         self.inner.ram.borrow_mut().push(RamSample { t_ms, total_mb, instances });
     }
 
+    pub fn record_group_ram(&self, t_ms: f64, group: String, ram_mb: f64) {
+        self.inner.group_ram.borrow_mut().push(GroupRamSample { t_ms, group, ram_mb });
+    }
+
     pub fn record_merge(&self, event: MergeEvent) {
         self.inner.merges.borrow_mut().push(event);
+    }
+
+    pub fn record_split(&self, event: SplitEvent) {
+        self.inner.splits.borrow_mut().push(event);
     }
 
     pub fn bump(&self, name: &'static str) {
@@ -102,6 +145,25 @@ impl Recorder {
 
     pub fn merges(&self) -> Vec<MergeEvent> {
         self.inner.merges.borrow().clone()
+    }
+
+    pub fn splits(&self) -> Vec<SplitEvent> {
+        self.inner.splits.borrow().clone()
+    }
+
+    pub fn group_ram_series(&self) -> Vec<GroupRamSample> {
+        self.inner.group_ram.borrow().clone()
+    }
+
+    /// RAM attribution samples of one fused group (`+`-joined sorted names).
+    pub fn group_ram_for(&self, group: &str) -> Vec<GroupRamSample> {
+        self.inner
+            .group_ram
+            .borrow()
+            .iter()
+            .filter(|s| s.group == group)
+            .cloned()
+            .collect()
     }
 
     pub fn request_count(&self) -> usize {
@@ -127,6 +189,13 @@ impl Recorder {
                 .map(|s| s.latency_ms)
                 .collect(),
         )
+    }
+
+    /// p95 over requests arriving in `[from_ms, to_ms)`, or NaN when the
+    /// window holds fewer than `min_n` samples.
+    pub fn p95_window(&self, from_ms: f64, to_ms: f64, min_n: usize) -> f64 {
+        let q = self.latency_quantiles_window(from_ms, to_ms);
+        if q.len() >= min_n { q.p95() } else { f64::NAN }
     }
 
     /// Time-weighted mean of the RAM series (MiB).
@@ -200,6 +269,30 @@ impl Recorder {
         }
         out
     }
+
+    /// CSV export of split events (`t_ms,duration_ms,reason,functions`).
+    pub fn splits_csv(&self) -> String {
+        let mut out = String::from("t_ms,duration_ms,reason,functions\n");
+        for s in self.inner.splits.borrow().iter() {
+            out.push_str(&format!(
+                "{:.3},{:.3},{},{}\n",
+                s.t_ms,
+                s.duration_ms,
+                s.reason.name(),
+                s.functions.join("+")
+            ));
+        }
+        out
+    }
+
+    /// CSV export of the per-group RAM attribution (`t_ms,group,ram_mb`).
+    pub fn group_ram_csv(&self) -> String {
+        let mut out = String::from("t_ms,group,ram_mb\n");
+        for s in self.inner.group_ram.borrow().iter() {
+            out.push_str(&format!("{:.3},{},{:.3}\n", s.t_ms, s.group, s.ram_mb));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -250,6 +343,26 @@ mod tests {
         assert!(r.latency_csv().starts_with("t_ms,latency_ms\n1.000,2.000"));
         assert!(r.ram_csv().contains("1.000,3.000,1"));
         assert!(r.merges_csv().contains("a+b"));
+    }
+
+    #[test]
+    fn split_events_and_group_ram_recorded() {
+        let r = Recorder::new();
+        r.record_split(SplitEvent {
+            t_ms: 9.0,
+            functions: vec!["a".into(), "b".into()],
+            duration_ms: 2.0,
+            reason: SplitReason::RamCap,
+        });
+        r.record_group_ram(4.0, "a+b".into(), 120.5);
+        r.record_group_ram(5.0, "c+d".into(), 80.0);
+        assert_eq!(r.splits().len(), 1);
+        assert_eq!(r.splits()[0].reason, SplitReason::RamCap);
+        assert!(r.splits_csv().contains("ram_cap"));
+        assert!(r.splits_csv().contains("a+b"));
+        assert_eq!(r.group_ram_series().len(), 2);
+        assert_eq!(r.group_ram_for("a+b").len(), 1);
+        assert!(r.group_ram_csv().contains("4.000,a+b,120.500"));
     }
 
     #[test]

@@ -7,17 +7,18 @@
 pub mod deployer;
 
 use std::cell::Cell;
+use std::collections::{BTreeMap, HashSet};
 use std::rc::Rc;
 
 use crate::apps::AppSpec;
 use crate::billing::BillingLedger;
 use crate::config::{ComputeMode, PlatformConfig, PlatformKind};
-use crate::containerd::{ContainerRuntime, FsManifest, InstanceState};
+use crate::containerd::{ContainerRuntime, FsManifest, ImageId, Instance, InstanceState};
 use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::mpsc;
 use crate::exec::SimInstant;
-use crate::fusion::Observer;
+use crate::fusion::{GroupSample, Observer};
 use crate::gateway::Gateway;
 use crate::handler::Dispatcher;
 use crate::merger::{Merger, MergerCtx};
@@ -26,6 +27,19 @@ use crate::netsim::Fabric;
 use crate::runtime::{ArtifactSet, ComputeService};
 
 use deployer::Deployer;
+
+/// Distinct live fused instances (two or more hosted functions) in a
+/// routing table — the defusion controller's sampling domain.
+pub fn fused_groups_of(gateway: &Gateway) -> Vec<Rc<Instance>> {
+    let mut seen = HashSet::new();
+    let mut out = Vec::new();
+    for (_, inst) in gateway.snapshot() {
+        if inst.functions().len() >= 2 && seen.insert(inst.id()) {
+            out.push(inst);
+        }
+    }
+    out
+}
 
 /// A running FaaS platform hosting one application.
 pub struct Platform {
@@ -39,6 +53,8 @@ pub struct Platform {
     dispatcher: Dispatcher,
     start: SimInstant,
     sampler_stop: Rc<Cell<bool>>,
+    /// retained single-function images (the split pipeline's redeploy source)
+    originals: Rc<BTreeMap<String, ImageId>>,
 }
 
 impl Platform {
@@ -61,17 +77,22 @@ impl Platform {
         let (fusion_tx, fusion_rx) = mpsc();
         let observer = Rc::new(Observer::new(config.fusion.clone(), &app, fusion_tx));
 
-        // initial deployment: one image + instance per function
+        // initial deployment: one image + instance per function; the images
+        // are retained for the lifetime of the platform so the defusion
+        // pipeline can always redeploy originals
         let mut instances = Vec::new();
+        let mut originals = BTreeMap::new();
         for f in app.functions() {
             let image = containers.register_image(
                 FsManifest::function_code(&f.name, f.code_kb),
                 vec![(f.name.clone(), f.code_mb)],
             );
+            originals.insert(f.name.clone(), image);
             let inst = containers.launch(image)?;
             gateway.set_route(&f.name, Rc::clone(&inst));
             instances.push(inst);
         }
+        let originals = Rc::new(originals);
         // wait for the fleet to boot
         loop {
             if instances.iter().all(|i| i.state() == InstanceState::Healthy) {
@@ -110,6 +131,7 @@ impl Platform {
             observer: Rc::clone(&observer),
             metrics: metrics.clone(),
             deployer: dep,
+            originals: Rc::clone(&originals),
         });
         exec::spawn(merger.run(fusion_rx));
 
@@ -129,6 +151,47 @@ impl Platform {
             });
         }
 
+        // Defusion controller: every feedback interval, attribute RAM to
+        // each live fused group and hand the samples (plus the trailing
+        // latency window's p95) to the Observer, which closes the loop by
+        // emitting Split requests for regressing groups.
+        if config.fusion.enabled
+            && config.fusion.defusion
+            && config.fusion.feedback_interval_ms > 0.0
+        {
+            let stop = Rc::clone(&sampler_stop);
+            let gateway = gateway.clone();
+            let metrics = metrics.clone();
+            let observer = Rc::clone(&observer);
+            let interval = config.fusion.feedback_interval_ms;
+            exec::spawn(async move {
+                while !stop.get() {
+                    exec::sleep_ms(interval).await;
+                    if stop.get() {
+                        break;
+                    }
+                    let t = metrics.rel_now_ms();
+                    let mut samples = Vec::new();
+                    for inst in fused_groups_of(&gateway) {
+                        let mut functions: Vec<String> =
+                            inst.functions().iter().map(|(n, _)| n.clone()).collect();
+                        functions.sort();
+                        let ram_mb = inst.ram_mb();
+                        metrics.record_group_ram(t, functions.join("+"), ram_mb);
+                        let window_p95_ms = metrics.p95_window(
+                            t - interval,
+                            t,
+                            crate::metrics::MIN_WINDOW_SAMPLES,
+                        );
+                        samples.push(GroupSample { functions, ram_mb, window_p95_ms });
+                    }
+                    if !samples.is_empty() {
+                        observer.feedback(&samples);
+                    }
+                }
+            });
+        }
+
         Ok(Rc::new(Platform {
             config,
             app,
@@ -140,6 +203,7 @@ impl Platform {
             dispatcher,
             start: exec::now(),
             sampler_stop,
+            originals,
         }))
     }
 
@@ -156,6 +220,31 @@ impl Platform {
     /// Expected request payload length (f32 count).
     pub fn payload_len(&self) -> usize {
         self.dispatcher.payload_len()
+    }
+
+    /// Retained original image for `function` (the defusion redeploy
+    /// source); None for functions the app does not define.
+    pub fn original_image(&self, function: &str) -> Option<ImageId> {
+        self.originals.get(function).copied()
+    }
+
+    /// Live group membership: the functions colocated with `function`
+    /// (sorted; a single-element vec means the function is unfused).
+    pub fn group_members(&self, function: &str) -> Vec<String> {
+        match self.gateway.resolve(function) {
+            Ok(inst) => {
+                let mut v: Vec<String> =
+                    inst.functions().iter().map(|(n, _)| n.clone()).collect();
+                v.sort();
+                v
+            }
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Distinct live fused instances (more than one hosted function).
+    pub fn fused_groups(&self) -> Vec<Rc<Instance>> {
+        fused_groups_of(&self.gateway)
     }
 
     /// Virtual time the platform finished deploying.
@@ -219,6 +308,35 @@ mod tests {
             exec::sleep_ms(30_000.0).await;
             assert_eq!(p.metrics.merges().len(), 0);
             assert_eq!(p.containers.live_count(), 3);
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn controller_attributes_group_ram_and_exposes_membership() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.latency.image_build_ms = 300.0;
+            cfg.latency.boot_ms = 150.0;
+            cfg.fusion.min_observations = 1;
+            cfg.fusion.feedback_interval_ms = 1_000.0;
+            let p = Platform::deploy(apps::chain(2), cfg).await.unwrap();
+            for _ in 0..5 {
+                let payload = vec![0.1f32; p.payload_len()];
+                p.invoke(payload).await.unwrap();
+                exec::sleep_ms(500.0).await;
+            }
+            exec::sleep_ms(20_000.0).await;
+            assert_eq!(p.group_members("s0"), vec!["s0".to_string(), "s1".to_string()]);
+            assert_eq!(p.fused_groups().len(), 1);
+            assert!(p.original_image("s0").is_some());
+            assert!(p.original_image("nope").is_none());
+            // the controller attributed RAM to the fused group every tick
+            let series = p.metrics.group_ram_for("s0+s1");
+            assert!(!series.is_empty(), "no group RAM attribution recorded");
+            assert!(series.iter().all(|s| s.ram_mb > 0.0));
+            // healthy group under default policy: no splits
+            assert!(p.metrics.splits().is_empty());
             p.shutdown();
         });
     }

@@ -14,6 +14,7 @@ use std::time::Instant;
 use crate::config::ComputeMode;
 use crate::error::{Error, Result};
 use crate::util::json::Json;
+use crate::xla;
 
 /// One compiled compute body.
 struct Body {

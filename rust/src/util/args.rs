@@ -65,6 +65,15 @@ impl Args {
         }
     }
 
+    pub fn u32_or(&self, name: &str, default: u32) -> Result<u32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.flag(name) {
             None => Ok(default),
@@ -116,6 +125,14 @@ mod tests {
     fn bad_numbers_error() {
         let a = parse("cmd --n abc");
         assert!(a.u64_or("n", 1).is_err());
+        assert!(a.u32_or("n", 1).is_err());
         assert!(a.f64_or("n", 1.0).is_err());
+    }
+
+    #[test]
+    fn u32_flag_parses_with_default() {
+        let a = parse("cmd --hysteresis 4");
+        assert_eq!(a.u32_or("hysteresis", 1).unwrap(), 4);
+        assert_eq!(a.u32_or("absent", 2).unwrap(), 2);
     }
 }

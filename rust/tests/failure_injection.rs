@@ -90,6 +90,101 @@ fn requests_in_flight_during_cutover_complete_on_old_instances() {
 }
 
 #[test]
+fn boot_hang_mid_split_rolls_back_to_fused_instance_then_retries() {
+    // A replacement instance that never gets healthy must abort the split:
+    // the fused instance keeps serving (zero drops), the orphans are torn
+    // down, the group re-enters cooldown, and the next attempt succeeds.
+    run_virtual(async {
+        let mut cfg = fast_cfg();
+        // chain(2) idle fused RAM = 58 + 2 x 12 = 82 MiB: an 80 MiB cap
+        // violates deterministically, traffic or not. First controller
+        // ticks at 4 s and 8 s -> first split request at t = 8 s, well
+        // after the hang is injected below.
+        cfg.fusion.max_group_ram_mb = 80.0;
+        cfg.fusion.feedback_interval_ms = 4_000.0;
+        cfg.fusion.split_hysteresis_windows = 2;
+        let p = Platform::deploy(apps::chain(2), cfg).await.unwrap();
+
+        // fuse under a little traffic (merge completes ~1.4 s)
+        let wl = WorkloadConfig { requests: 10, rate_rps: 10.0, seed: 31, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(2_000.0).await;
+        assert_eq!(p.gateway.distinct_instances(), 1, "fusion must complete first");
+
+        // the next instance launch (the split's first replacement) hangs
+        p.containers.inject_boot_hangs(1);
+
+        // serve straight through the failed split attempt:
+        // split request at 8 s, health deadline 4 x 150 ms + 5 s -> rollback
+        // at ~13.6 s; this workload spans ~3 s to ~13 s
+        let wl =
+            WorkloadConfig { requests: 200, rate_rps: 20.0, seed: 32, timeout_ms: 60_000.0 };
+        let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(report.failed, 0, "requests must survive the aborted split");
+        exec::sleep_ms(2_000.0).await;
+
+        // first attempt aborted and rolled back: still fused, orphans gone
+        assert_eq!(p.metrics.counter("split_aborted"), 1);
+        assert_eq!(p.metrics.counter("split_health_timeouts"), 1);
+        assert!(p.metrics.splits().is_empty());
+        assert_eq!(p.gateway.distinct_instances(), 1);
+        assert_eq!(p.containers.live_count(), 1, "hung replacement must be torn down");
+
+        // cooldown (2 s after the ~13.6 s rollback), then strikes at the
+        // 16 s and 20 s ticks -> the retry succeeds
+        exec::sleep_ms(10_000.0).await;
+        assert_eq!(p.metrics.splits().len(), 1, "retry after cooldown must split");
+        assert_eq!(p.metrics.counter("splits_completed"), 1);
+        assert_eq!(p.gateway.distinct_instances(), 2);
+        assert_eq!(p.containers.live_count(), 2);
+        // merge reclaimed 2 originals, the successful split reclaimed the
+        // fused instance
+        assert_eq!(p.metrics.counter("instances_reclaimed"), 3);
+        p.shutdown();
+    });
+}
+
+#[test]
+fn stale_split_request_aborts_without_touching_routes() {
+    // A Split whose sampled membership no longer matches the live topology
+    // (e.g. the group grew transitively in the meantime) must abort cleanly.
+    run_virtual(async {
+        let mut cfg = fast_cfg();
+        cfg.fusion.feedback_interval_ms = 0.0; // controller off: drive by hand
+        let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+        let wl = WorkloadConfig { requests: 20, rate_rps: 10.0, seed: 33, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(10_000.0).await;
+        assert_eq!(p.gateway.distinct_instances(), 1);
+
+        // sampled a pair, but the live instance hosts all three functions
+        let merger = provuse::merger::Merger::new(provuse::merger::MergerCtx {
+            config: Rc::clone(&p.config),
+            containers: p.containers.clone(),
+            gateway: p.gateway.clone(),
+            observer: Rc::clone(&p.observer),
+            metrics: p.metrics.clone(),
+            deployer: provuse::platform::deployer::Deployer::direct(p.containers.clone()),
+            originals: Rc::new(
+                ["s0", "s1", "s2"]
+                    .iter()
+                    .filter_map(|f| p.original_image(f).map(|img| (f.to_string(), img)))
+                    .collect(),
+            ),
+        });
+        let stale = vec!["s0".to_string(), "s1".to_string()];
+        let err = merger
+            .handle_split(&stale, provuse::fusion::SplitReason::RamCap)
+            .await;
+        assert!(err.is_err(), "stale split must abort");
+        assert_eq!(p.gateway.distinct_instances(), 1, "routes untouched");
+        assert_eq!(p.containers.live_count(), 1);
+        assert!(p.metrics.splits().is_empty());
+        p.shutdown();
+    });
+}
+
+#[test]
 fn max_group_size_stops_transitive_growth() {
     run_virtual(async {
         let mut cfg = fast_cfg();

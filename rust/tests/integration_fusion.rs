@@ -185,6 +185,115 @@ fn merge_events_are_ordered_and_fusion_reduces_post_merge_latency() {
 }
 
 #[test]
+fn ram_cap_split_restores_per_function_routing_with_zero_drops() {
+    // The full defusion loop on a live platform: converge to one fused
+    // instance under calm load, then blow past the RAM cap under pressure;
+    // the controller must split back to per-function instances without
+    // dropping a single request.
+    run_virtual(async {
+        let mut cfg = fast_merge(PlatformConfig::tiny());
+        cfg.fusion.max_group_ram_mb = 100.0; // chain(3) idle fused = 94 MiB
+        cfg.fusion.feedback_interval_ms = 1_000.0;
+        cfg.fusion.split_hysteresis_windows = 2;
+        cfg.fusion.cooldown_ms = 60_000.0; // no re-fusion inside this test
+        let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+
+        // calm phase: fuse
+        let wl = WorkloadConfig { requests: 30, rate_rps: 10.0, seed: 21, timeout_ms: 60_000.0 };
+        let calm = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(calm.failed, 0);
+        exec::sleep_ms(5_000.0).await;
+        assert_eq!(p.gateway.distinct_instances(), 1, "chain must fuse first");
+        assert!(p.metrics.splits().is_empty());
+
+        // pressure phase: in-flight working sets push the group over the cap
+        let wl =
+            WorkloadConfig { requests: 1_200, rate_rps: 60.0, seed: 22, timeout_ms: 60_000.0 };
+        let pressure = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(pressure.failed, 0, "requests must survive the split cutover");
+        exec::sleep_ms(10_000.0).await;
+
+        let splits = p.metrics.splits();
+        assert_eq!(splits.len(), 1, "exactly one corrective split: {splits:?}");
+        assert_eq!(splits[0].reason, provuse::fusion::SplitReason::RamCap);
+        assert_eq!(splits[0].functions, vec!["s0".to_string(), "s1".into(), "s2".into()]);
+
+        // routing is back to one instance per function, fused original gone
+        assert_eq!(p.gateway.distinct_instances(), 3);
+        assert_eq!(p.containers.live_count(), 3);
+        for f in ["s0", "s1", "s2"] {
+            let inst = p.gateway.resolve(f).unwrap();
+            assert_eq!(inst.functions().len(), 1, "`{f}` must be alone again");
+            assert!(inst.hosts(f));
+        }
+        // 2 merges reclaimed 2 originals each; the split reclaimed the
+        // fused instance
+        assert_eq!(p.metrics.merges().len(), 2);
+        assert_eq!(p.metrics.counter("instances_reclaimed"), 5);
+        // cooldown holds: no re-fusion happened inside this test window
+        assert!(p
+            .metrics
+            .merges()
+            .iter()
+            .all(|m| m.t_ms < splits[0].t_ms));
+        p.shutdown();
+    });
+}
+
+#[test]
+fn defusion_disabled_keeps_group_fused_under_pressure() {
+    run_virtual(async {
+        let mut cfg = fast_merge(PlatformConfig::tiny());
+        cfg.fusion.max_group_ram_mb = 100.0;
+        cfg.fusion.feedback_interval_ms = 1_000.0;
+        cfg.fusion.split_hysteresis_windows = 2;
+        cfg.fusion.defusion = false; // fuse-once, like the original paper
+        let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+        let wl = WorkloadConfig { requests: 30, rate_rps: 10.0, seed: 23, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(5_000.0).await;
+        assert_eq!(p.gateway.distinct_instances(), 1);
+        let wl =
+            WorkloadConfig { requests: 600, rate_rps: 60.0, seed: 24, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(5_000.0).await;
+        assert!(p.metrics.splits().is_empty(), "defusion=false must never split");
+        assert_eq!(p.gateway.distinct_instances(), 1);
+        p.shutdown();
+    });
+}
+
+#[test]
+fn responses_identical_across_split_cutover() {
+    // Defusion is behavior-preserving, same as fusion: responses across the
+    // fuse -> split -> serve sequence must equal a vanilla deployment's.
+    let vanilla: Vec<Vec<f32>> = run_virtual(async {
+        let p = Platform::deploy(apps::chain(2), fast_merge(PlatformConfig::tiny()).vanilla())
+            .await
+            .unwrap();
+        let r = responses(&p, 30, 400.0).await;
+        p.shutdown();
+        r
+    });
+    let cycled: Vec<Vec<f32>> = run_virtual(async {
+        let mut cfg = fast_merge(PlatformConfig::tiny());
+        // chain(2) idle fused RAM is 82 MiB: an 80 MiB cap guarantees a
+        // deterministic split shortly after fusion, traffic or not
+        cfg.fusion.max_group_ram_mb = 80.0;
+        cfg.fusion.feedback_interval_ms = 2_000.0;
+        cfg.fusion.split_hysteresis_windows = 2;
+        cfg.fusion.cooldown_ms = 60_000.0;
+        let p = Platform::deploy(apps::chain(2), cfg).await.unwrap();
+        let r = responses(&p, 30, 400.0).await; // spans fuse AND split
+        assert!(!p.metrics.merges().is_empty(), "fusion never happened");
+        assert!(!p.metrics.splits().is_empty(), "split never happened");
+        p.shutdown();
+        r
+    });
+    assert_eq!(vanilla, cycled, "split cutover changed responses");
+}
+
+#[test]
 fn async_only_app_sees_no_latency_benefit() {
     // paper §6: "fully asynchronous workloads may see limited to no benefit"
     let app = AppSpec::builder("async_only")

@@ -62,6 +62,30 @@ pub fn iot() -> AppSpec {
     .expect("iot app is statically valid")
 }
 
+/// The ROADMAP's IOT-app *variant* for the FIG7 eviction scenario: two
+/// fused groups where one member (`model`, a 400 MiB ML-dependency
+/// function) dominates its group's RAM and — under direct per-route
+/// pressure — its bill, so a cost-model controller should shed exactly it
+/// while the second group (`persist` → `notify`) stays fused.
+///
+/// Graph: ingest →sync model →sync refine; refine →async persist →sync
+/// notify.  Sync components: {ingest, model, refine} and {notify, persist}.
+pub fn iot_heavy() -> AppSpec {
+    use CallMode::*;
+    AppSpec::new(
+        "iot-heavy",
+        "ingest",
+        vec![
+            f("ingest", "parse", 25.0, 10.0, vec![("model", Sync)]),
+            f("model", "temperature", 70.0, 400.0, vec![("refine", Sync)]),
+            f("refine", "aggregate", 25.0, 12.0, vec![("persist", Async)]),
+            f("persist", "persist", 30.0, 14.0, vec![("notify", Sync)]),
+            f("notify", "notify", 10.0, 8.0, vec![]),
+        ],
+    )
+    .expect("iot-heavy app is statically valid")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,6 +129,26 @@ mod tests {
     #[test]
     fn every_function_has_a_body() {
         for f in iot().functions() {
+            assert!(f.body.is_some(), "{} missing body", f.name);
+        }
+    }
+
+    #[test]
+    fn iot_heavy_has_two_groups_and_a_dominant_member() {
+        let app = iot_heavy();
+        assert_eq!(app.entry, "ingest");
+        let groups = app.sync_fusion_groups();
+        assert_eq!(groups.len(), 2);
+        assert!(groups.contains(&vec!["ingest".into(), "model".into(), "refine".into()]));
+        assert!(groups.contains(&vec!["notify".into(), "persist".into()]));
+        // `model` dominates its group's code RAM (the eviction target)
+        let model_mb = app.function("model").unwrap().code_mb;
+        let rest_mb: f64 = ["ingest", "refine"]
+            .iter()
+            .map(|n| app.function(n).unwrap().code_mb)
+            .sum();
+        assert!(model_mb > 5.0 * rest_mb);
+        for f in app.functions() {
             assert!(f.body.is_some(), "{} missing body", f.name);
         }
     }

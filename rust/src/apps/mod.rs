@@ -11,7 +11,7 @@ pub mod iot;
 pub mod tree;
 
 pub use chain::chain;
-pub use iot::iot;
+pub use iot::{iot, iot_heavy};
 pub use spec::{AppBuilder, AppSpec, CallMode, CallSpec, FnBuilder, FunctionSpec};
 pub use tree::tree;
 
@@ -22,12 +22,13 @@ pub fn by_name(name: &str) -> Result<AppSpec> {
     match name {
         "tree" => Ok(tree()),
         "iot" => Ok(iot()),
+        "iot-heavy" => Ok(iot_heavy()),
         "chain" => Ok(chain(6)),
         other => Err(Error::Config(format!(
-            "unknown app `{other}` (available: tree, iot, chain)"
+            "unknown app `{other}` (available: tree, iot, iot-heavy, chain)"
         ))),
     }
 }
 
 /// All benchmark app names.
-pub const APP_NAMES: &[&str] = &["tree", "iot", "chain"];
+pub const APP_NAMES: &[&str] = &["tree", "iot", "iot-heavy", "chain"];

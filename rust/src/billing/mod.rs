@@ -16,6 +16,8 @@ use crate::metrics::Recorder;
 /// One billed invocation.
 #[derive(Debug, Clone)]
 pub struct BillingEvent {
+    /// virtual time the invocation completed (ms since the metrics epoch)
+    pub t_ms: f64,
     pub function: String,
     /// billed duration (ms): dispatch + execution incl. blocking waits
     pub duration_ms: f64,
@@ -107,6 +109,25 @@ impl BillingLedger {
             .sum()
     }
 
+    /// Billed GiB-seconds attributed to `function` by invocations that
+    /// completed inside `[from_ms, to_ms)` — the trailing-window signal the
+    /// defusion cost model scores groups with.
+    ///
+    /// Events are recorded at completion time, so the ledger is sorted by
+    /// `t_ms`; a binary search bounds the controller's per-tick work to the
+    /// trailing window instead of the whole run's history.
+    pub fn gb_seconds_window(&self, function: &str, from_ms: f64, to_ms: f64) -> f64 {
+        let borrowed = self.events.borrow();
+        let events: &[BillingEvent] = &borrowed;
+        let start = events.partition_point(|e| e.t_ms < from_ms);
+        events[start..]
+            .iter()
+            .take_while(|e| e.t_ms < to_ms)
+            .filter(|e| e.function == function)
+            .map(|e| e.gb_seconds())
+            .sum()
+    }
+
     pub fn attach_summary(&self, metrics: &Recorder) {
         let bill = self.bill();
         for _ in 0..bill.invocations {
@@ -119,18 +140,19 @@ impl BillingLedger {
 mod tests {
     use super::*;
 
+    fn ev(t_ms: f64, function: &str, duration_ms: f64, alloc_gb: f64) -> BillingEvent {
+        BillingEvent { t_ms, function: function.into(), duration_ms, alloc_gb }
+    }
+
     #[test]
     fn gb_seconds_math() {
-        let e = BillingEvent { function: "f".into(), duration_ms: 2_000.0, alloc_gb: 0.5 };
+        let e = ev(0.0, "f", 2_000.0, 0.5);
         assert!((e.gb_seconds() - 1.0).abs() < 1e-12);
     }
 
     #[test]
     fn bill_cost() {
-        let events = vec![
-            BillingEvent { function: "a".into(), duration_ms: 1_000.0, alloc_gb: 1.0 },
-            BillingEvent { function: "b".into(), duration_ms: 500.0, alloc_gb: 2.0 },
-        ];
+        let events = vec![ev(1.0, "a", 1_000.0, 1.0), ev(2.0, "b", 500.0, 2.0)];
         let bill = Bill::from_events(&events);
         assert_eq!(bill.invocations, 2);
         assert!((bill.gb_seconds - 2.0).abs() < 1e-12);
@@ -143,11 +165,25 @@ mod tests {
     #[test]
     fn ledger_per_function_attribution() {
         let l = BillingLedger::new();
-        l.record(BillingEvent { function: "a".into(), duration_ms: 1_000.0, alloc_gb: 1.0 });
-        l.record(BillingEvent { function: "a".into(), duration_ms: 1_000.0, alloc_gb: 1.0 });
-        l.record(BillingEvent { function: "b".into(), duration_ms: 1_000.0, alloc_gb: 0.25 });
+        l.record(ev(10.0, "a", 1_000.0, 1.0));
+        l.record(ev(20.0, "a", 1_000.0, 1.0));
+        l.record(ev(30.0, "b", 1_000.0, 0.25));
         assert!((l.gb_seconds_for("a") - 2.0).abs() < 1e-12);
         assert!((l.gb_seconds_for("b") - 0.25).abs() < 1e-12);
         assert_eq!(l.bill().invocations, 3);
+    }
+
+    #[test]
+    fn windowed_attribution_slices_by_completion_time() {
+        let l = BillingLedger::new();
+        l.record(ev(10.0, "a", 1_000.0, 1.0));
+        l.record(ev(50.0, "a", 1_000.0, 1.0));
+        l.record(ev(50.0, "b", 1_000.0, 1.0));
+        l.record(ev(90.0, "a", 1_000.0, 1.0));
+        assert!((l.gb_seconds_window("a", 40.0, 80.0) - 1.0).abs() < 1e-12);
+        assert!((l.gb_seconds_window("a", 0.0, 100.0) - 3.0).abs() < 1e-12);
+        // window bounds are [from, to)
+        assert!((l.gb_seconds_window("a", 0.0, 90.0) - 2.0).abs() < 1e-12);
+        assert_eq!(l.gb_seconds_window("ghost", 0.0, 100.0), 0.0);
     }
 }

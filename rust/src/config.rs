@@ -92,6 +92,66 @@ pub struct RamParams {
     pub sample_interval_ms: f64,
 }
 
+/// Which objective the defusion controller optimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitPolicyKind {
+    /// PR 1 behavior: two independent thresholds (RAM cap + p95 regression)
+    /// with hysteresis, whole-group splits only.
+    Threshold,
+    /// Cost-model-driven (Konflux-style): one weighted objective over
+    /// latency regression x RAM pressure x billed GiB-seconds; groups over
+    /// `evict_threshold` shed their heaviest member (partial split).
+    CostModel,
+}
+
+impl SplitPolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SplitPolicyKind::Threshold => "threshold",
+            SplitPolicyKind::CostModel => "cost",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threshold" | "false" => Ok(SplitPolicyKind::Threshold),
+            "cost" | "cost-model" | "true" => Ok(SplitPolicyKind::CostModel),
+            other => Err(Error::Config(format!(
+                "unknown split policy `{other}` (available: threshold, cost)"
+            ))),
+        }
+    }
+}
+
+/// Cost-model weights and thresholds (used when `split_policy` is
+/// [`SplitPolicyKind::CostModel`]; see `fusion::cost`).
+#[derive(Debug, Clone)]
+pub struct CostParams {
+    /// weight on the group's p95 regression vs its pre-fusion baseline
+    pub w_latency: f64,
+    /// weight on the group's RAM pressure (RAM / reference)
+    pub w_ram: f64,
+    /// weight on the group's billed GiB-seconds per wall second
+    pub w_gbs: f64,
+    /// objective value above which the controller evicts the group's
+    /// heaviest function (<= 0 disables cost-driven defusion)
+    pub evict_threshold: f64,
+    /// RAM normalization scale (MiB) when `max_group_ram_mb` is 0
+    pub ram_ref_mb: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            w_latency: 1.0,
+            w_ram: 1.0,
+            w_gbs: 1.0,
+            evict_threshold: 2.0,
+            ram_ref_mb: 256.0,
+        }
+    }
+}
+
 /// Fusion policy knobs (paper §3: Merger admission).
 #[derive(Debug, Clone)]
 pub struct FusionParams {
@@ -122,6 +182,10 @@ pub struct FusionParams {
     pub split_hysteresis_windows: u32,
     /// controller evaluation interval (virtual ms; <= 0 disables the loop)
     pub feedback_interval_ms: f64,
+    /// which defusion objective the controller runs
+    pub split_policy: SplitPolicyKind,
+    /// cost-model weights (only read under `SplitPolicyKind::CostModel`)
+    pub cost: CostParams,
 }
 
 /// Complete platform assembly configuration.
@@ -246,6 +310,8 @@ impl FusionParams {
             split_p95_regression: 0.5,
             split_hysteresis_windows: 3,
             feedback_interval_ms: 5_000.0,
+            split_policy: SplitPolicyKind::Threshold,
+            cost: CostParams::default(),
         }
     }
 
@@ -330,6 +396,17 @@ impl PlatformConfig {
                         Json::Num(f.split_hysteresis_windows as f64),
                     ),
                     ("feedback_interval_ms", Json::Num(f.feedback_interval_ms)),
+                    ("split_policy", Json::str(f.split_policy.name())),
+                    (
+                        "cost",
+                        Json::obj(vec![
+                            ("w_latency", Json::Num(f.cost.w_latency)),
+                            ("w_ram", Json::Num(f.cost.w_ram)),
+                            ("w_gbs", Json::Num(f.cost.w_gbs)),
+                            ("evict_threshold", Json::Num(f.cost.evict_threshold)),
+                            ("ram_ref_mb", Json::Num(f.cost.ram_ref_mb)),
+                        ]),
+                    ),
                 ]),
             ),
         ])
@@ -377,6 +454,26 @@ mod tests {
         assert!(fusion.get("defusion").is_ok());
         assert_eq!(fusion.get("max_group_ram_mb").unwrap().as_f64().unwrap(), 0.0);
         assert!(fusion.get("feedback_interval_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn split_policy_parses_and_defaults_to_threshold() {
+        assert_eq!(FusionParams::default_enabled().split_policy, SplitPolicyKind::Threshold);
+        assert_eq!(SplitPolicyKind::parse("cost").unwrap(), SplitPolicyKind::CostModel);
+        assert_eq!(SplitPolicyKind::parse("true").unwrap(), SplitPolicyKind::CostModel);
+        assert_eq!(SplitPolicyKind::parse("threshold").unwrap(), SplitPolicyKind::Threshold);
+        assert!(SplitPolicyKind::parse("greedy").is_err());
+    }
+
+    #[test]
+    fn cost_params_serialize() {
+        let j = PlatformConfig::tiny().to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        let fusion = v.get("fusion").unwrap();
+        assert_eq!(fusion.get("split_policy").unwrap().as_str().unwrap(), "threshold");
+        let cost = fusion.get("cost").unwrap();
+        assert!(cost.get("evict_threshold").unwrap().as_f64().unwrap() > 0.0);
+        assert!(cost.get("w_ram").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Instance lifecycle state machine + per-instance RAM accounting.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 use super::image::{Image, ImageId};
@@ -50,6 +50,10 @@ pub struct Instance {
     image: Rc<Image>,
     config: Rc<PlatformConfig>,
     state: Cell<InstanceState>,
+    /// functions actively served: the image's hosted set minus members the
+    /// defusion controller evicted (a fused group "shrinks in place" — the
+    /// instance keeps running while an evicted function's code is unloaded)
+    active: RefCell<Vec<(String, f64)>>,
     /// in-flight request gauge (awaitable for drain)
     inflight: Gauge,
     /// lifetime request count (merge observability)
@@ -58,11 +62,13 @@ pub struct Instance {
 
 impl Instance {
     pub(crate) fn new(id: InstanceId, image: Rc<Image>, config: Rc<PlatformConfig>) -> Self {
+        let active = RefCell::new(image.functions.clone());
         Instance {
             id,
             image,
             config,
             state: Cell::new(InstanceState::Booting),
+            active,
             inflight: Gauge::new(),
             served: Cell::new(0),
         }
@@ -76,13 +82,42 @@ impl Instance {
         self.image.id
     }
 
-    /// Functions hosted by this instance (name, code MiB).
-    pub fn functions(&self) -> &[(String, f64)] {
-        &self.image.functions
+    /// Functions actively served by this instance (name, code MiB).  Starts
+    /// as the image's hosted set; shrinks when members are evicted.
+    pub fn functions(&self) -> Vec<(String, f64)> {
+        self.active.borrow().clone()
+    }
+
+    /// Number of actively served functions (allocation-free: the hot
+    /// controller/gateway paths only need the count).
+    pub fn fn_count(&self) -> usize {
+        self.active.borrow().len()
     }
 
     pub fn hosts(&self, function: &str) -> bool {
-        self.image.hosts(function)
+        self.active.borrow().iter().any(|(n, _)| n == function)
+    }
+
+    /// Stop serving `function` and unload its code (the partial-split
+    /// pipeline's "shrink in place" step; the route must already point at
+    /// the replacement instance).  Refuses to empty the instance — a group
+    /// down to one member takes the whole-group split path instead.
+    pub fn evict_function(&self, function: &str) -> Result<()> {
+        let mut active = self.active.borrow_mut();
+        let Some(pos) = active.iter().position(|(n, _)| n == function) else {
+            return Err(Error::SplitAborted(format!(
+                "instance {} does not actively host `{function}`",
+                self.id
+            )));
+        };
+        if active.len() <= 1 {
+            return Err(Error::SplitAborted(format!(
+                "evicting `{function}` would empty instance {}",
+                self.id
+            )));
+        }
+        active.remove(pos);
+        Ok(())
     }
 
     pub fn state(&self) -> InstanceState {
@@ -97,22 +132,27 @@ impl Instance {
         self.served.get()
     }
 
-    /// Static memory allocation (MiB) a provider would bill this instance
-    /// at: base runtime + hosted code (no transient working sets).
-    pub fn alloc_mb(&self) -> f64 {
-        self.config.ram.base_instance_mb + self.image.code_ram_mb()
+    /// Code + dependency RAM of the actively served functions (MiB).
+    fn active_code_mb(&self) -> f64 {
+        self.active.borrow().iter().map(|(_, mb)| mb).sum()
     }
 
-    /// RAM footprint (MiB): base runtime + hosted code + in-flight working
+    /// Static memory allocation (MiB) a provider would bill this instance
+    /// at: base runtime + active code (no transient working sets).
+    pub fn alloc_mb(&self) -> f64 {
+        self.config.ram.base_instance_mb + self.active_code_mb()
+    }
+
+    /// RAM footprint (MiB): base runtime + active code + in-flight working
     /// sets.  Fusion saves the `(N-1) * base` term — the paper's §5.2 RAM
-    /// reduction.
+    /// reduction — and an eviction sheds the evicted function's code.
     pub fn ram_mb(&self) -> f64 {
         if !self.state.get().is_live() {
             return 0.0;
         }
         let r = &self.config.ram;
         r.base_instance_mb
-            + self.image.code_ram_mb()
+            + self.active_code_mb()
             + self.inflight.value() as f64 * r.working_per_request_mb
     }
 
@@ -187,6 +227,16 @@ mod tests {
         Instance::new(InstanceId(1), image, config)
     }
 
+    fn fused_instance() -> Instance {
+        let config = Rc::new(PlatformConfig::tiny());
+        let image = Rc::new(Image {
+            id: ImageId(2),
+            manifest: FsManifest::function_code("ab", 10),
+            functions: vec![("a".into(), 9.0), ("b".into(), 30.0)],
+        });
+        Instance::new(InstanceId(2), image, config)
+    }
+
     #[test]
     fn lifecycle_happy_path() {
         let i = instance();
@@ -237,6 +287,32 @@ mod tests {
         i.request_finished();
         assert_eq!(i.ram_mb(), idle);
         assert_eq!(i.served(), 2);
+    }
+
+    #[test]
+    fn evict_shrinks_active_set_and_sheds_code_ram() {
+        let i = fused_instance();
+        i.mark_healthy();
+        assert!(i.hosts("a") && i.hosts("b"));
+        let before = i.ram_mb();
+        i.evict_function("b").unwrap();
+        assert!(!i.hosts("b"));
+        assert!(i.hosts("a"));
+        assert_eq!(i.functions().len(), 1);
+        // the evicted function's 30 MiB of code is unloaded
+        assert!((before - i.ram_mb() - 30.0).abs() < 1e-12);
+        assert!((i.alloc_mb() - (58.0 + 9.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evict_rejects_unknown_and_refuses_to_empty() {
+        let i = fused_instance();
+        i.mark_healthy();
+        assert!(i.evict_function("ghost").is_err());
+        i.evict_function("a").unwrap();
+        // sole remaining member must stay
+        assert!(i.evict_function("b").is_err());
+        assert!(i.hosts("b"));
     }
 
     #[test]

@@ -1,66 +1,110 @@
-//! FIG7 (ours) — the feedback loop the paper's fuse-once pipeline lacks:
-//! a phase-shifted workload drives **fusion under calm load**, then a
-//! memory-pressure phase pushes the fused group past its RAM cap and the
-//! controller **defuses** it (a [`SplitEvent`]), latency returns to the
-//! pre-fusion baseline, and after the pressure lifts (and the anti-flap
-//! cooldown expires) the platform **re-fuses** and converges again.
+//! FIG7 (ours) — the feedback loop the paper's fuse-once pipeline lacks,
+//! in two scenarios selected by [`Fig7App`]:
 //!
-//! Three phases on one live platform, all on the virtual clock and fully
-//! deterministic per seed:
+//! * **Chain** (PR 1): a phase-shifted workload drives **fusion under calm
+//!   load**, a memory-pressure phase pushes the fused chain past its RAM
+//!   cap and the threshold controller **defuses** it whole (a
+//!   [`SplitEvent`]), latency returns to the pre-fusion baseline, and after
+//!   the pressure lifts the platform **re-fuses**.
+//! * **Iot** (this PR, the ROADMAP's IoT-app variant): two fused groups
+//!   under **asymmetric pressure**.  The `iot-heavy` app fuses into
+//!   {ingest, model, refine} and {persist, notify}; the pressure phase
+//!   hammers the `model` route directly, the **cost-model** controller
+//!   scores the hot group past `evict_threshold` and sheds exactly its
+//!   heaviest member (an [`EvictEvent`]: `model` leaves, the remainder
+//!   stays fused), while the cool group never splits.
 //!
-//! 1. `calm`     — low rate; the chain fuses into one instance.
-//! 2. `pressure` — high rate; per-request working sets blow the fused
-//!    group past `max_group_ram_mb` → hysteresis strikes → split.
-//! 3. `relief`   — low rate again; the cooldown expires and the pair
-//!    re-fuses with no further splits (no flapping).
+//! Both scenarios run three phases on one live platform, all on the
+//! virtual clock and fully deterministic per seed.
 
 use std::path::Path;
 use std::rc::Rc;
 
 use super::write_output;
 use crate::apps;
-use crate::config::{ComputeMode, PlatformConfig, WorkloadConfig};
+use crate::config::{ComputeMode, PlatformConfig, SplitPolicyKind, WorkloadConfig};
 use crate::error::Result;
 use crate::exec::{self, Executor, Mode};
 use crate::fusion::SplitReason;
 use crate::metrics::{
-    GroupRamSample, LatencySample, MergeEvent, RamSample, SplitEvent, MIN_WINDOW_SAMPLES,
+    EvictEvent, FnRamSample, GroupRamSample, LatencySample, MergeEvent, RamSample, SplitEvent,
+    MIN_WINDOW_SAMPLES,
 };
 use crate::platform::Platform;
 use crate::util::stats::Quantiles;
-use crate::workload::{self, WorkloadReport};
+use crate::workload::{self, Arrival, WorkloadReport};
+
+/// Which FIG7 scenario to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fig7App {
+    /// PR 1: chain(4) under memory pressure, threshold policy, whole split.
+    Chain,
+    /// iot-heavy under asymmetric per-route pressure, cost-model policy,
+    /// heaviest-member eviction.
+    Iot,
+}
+
+impl Fig7App {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fig7App::Chain => "chain",
+            Fig7App::Iot => "iot",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "chain" => Ok(Fig7App::Chain),
+            "iot" | "iot-heavy" => Ok(Fig7App::Iot),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown figure7 app `{other}` (available: chain, iot)"
+            ))),
+        }
+    }
+}
 
 /// FIG7 knobs (one struct so the CLI, the bench harness, and the smoke
 /// test share the same driver).
 #[derive(Debug, Clone, Copy)]
 pub struct Fig7Params {
-    /// rate of the calm and relief phases (rps)
+    pub app: Fig7App,
+    /// rate of the calm and relief phases (rps); in the Iot scenario the
+    /// entry route stays at this rate through every phase
     pub calm_rps: f64,
-    /// rate of the memory-pressure phase (rps)
+    /// Chain: entry rate of the memory-pressure phase.  Iot: rate of the
+    /// *direct* `model`-route workload during the pressure phase.
     pub pressure_rps: f64,
     pub phase_a_secs: f64,
     pub phase_b_secs: f64,
     pub phase_c_secs: f64,
     pub seed: u64,
     pub compute: ComputeMode,
-    /// RAM cap for fused groups (MiB)
+    /// Chain: RAM cap for fused groups.  Iot: the cost model's RAM
+    /// reference scale (MiB).
     pub max_group_ram_mb: f64,
-    /// p95 regression fraction that also triggers defusion
+    /// p95 regression fraction that also triggers defusion (threshold
+    /// policy only)
     pub split_p95_regression: f64,
-    /// anti-flap cooldown; sized to outlast the remaining pressure phase
+    /// anti-flap cooldown; sized to outlast the remaining run
     pub cooldown_ms: f64,
     pub feedback_interval_ms: f64,
     pub hysteresis: u32,
     pub min_observations: u32,
     pub image_build_ms: f64,
     pub boot_ms: f64,
+    /// cost-model objective threshold (Iot scenario)
+    pub evict_threshold: f64,
+    pub w_latency: f64,
+    pub w_ram: f64,
+    pub w_gbs: f64,
 }
 
 impl Fig7Params {
-    /// Full-scale run (the shipped FIG7 numbers): 60 s per phase with the
-    /// calibrated tinyFaaS merge latencies.
+    /// Full-scale chain run (the shipped FIG7 numbers): 60 s per phase with
+    /// the calibrated tinyFaaS merge latencies.
     pub fn paper_scale() -> Self {
         Fig7Params {
+            app: Fig7App::Chain,
             calm_rps: 2.0,
             pressure_rps: 60.0,
             phase_a_secs: 60.0,
@@ -79,10 +123,14 @@ impl Fig7Params {
             min_observations: 8,
             image_build_ms: 4_000.0,
             boot_ms: 1_200.0,
+            evict_threshold: 2.0,
+            w_latency: 1.0,
+            w_ram: 1.0,
+            w_gbs: 1.0,
         }
     }
 
-    /// Scaled-down variant for `cargo test` / the CI smoke job.
+    /// Scaled-down chain variant for `cargo test` / the CI smoke job.
     pub fn smoke() -> Self {
         Fig7Params {
             phase_a_secs: 15.0,
@@ -95,6 +143,47 @@ impl Fig7Params {
             ..Self::paper_scale()
         }
     }
+
+    /// Full-scale Iot eviction scenario (`provuse figure7 --app iot`).
+    pub fn iot_paper_scale() -> Self {
+        Fig7Params {
+            app: Fig7App::Iot,
+            calm_rps: 2.0,
+            pressure_rps: 40.0,
+            // iot-heavy fused hot group: 58 base + 422 code = 480 MiB; the
+            // 600 MiB reference keeps the RAM term ~0.8 so the billed-GiB-s
+            // term (asymmetric pressure) is what crosses the threshold
+            max_group_ram_mb: 600.0,
+            cooldown_ms: 240_000.0,
+            evict_threshold: 2.0,
+            ..Self::paper_scale()
+        }
+    }
+
+    /// Scaled-down Iot variant for `cargo test` / the CI smoke job.
+    pub fn iot_smoke() -> Self {
+        Fig7Params {
+            phase_a_secs: 20.0,
+            phase_b_secs: 30.0,
+            phase_c_secs: 20.0,
+            cooldown_ms: 90_000.0,
+            feedback_interval_ms: 2_000.0,
+            min_observations: 5,
+            image_build_ms: 300.0,
+            boot_ms: 150.0,
+            ..Self::iot_paper_scale()
+        }
+    }
+
+    /// Params for `app` at full or smoke scale.
+    pub fn for_app(app: Fig7App, smoke: bool) -> Self {
+        match (app, smoke) {
+            (Fig7App::Chain, false) => Self::paper_scale(),
+            (Fig7App::Chain, true) => Self::smoke(),
+            (Fig7App::Iot, false) => Self::iot_paper_scale(),
+            (Fig7App::Iot, true) => Self::iot_smoke(),
+        }
+    }
 }
 
 /// One acceptance check of the feedback loop.
@@ -105,18 +194,26 @@ pub struct Check {
     pub detail: String,
 }
 
+/// Group membership probes captured at the end of each phase (Iot
+/// scenario): `(probe function, sorted members of its instance)`.
+pub type TopologySnap = Vec<(String, Vec<String>)>;
+
 /// Output of the FIG7 experiment.
 pub struct Fig7 {
     pub params: Fig7Params,
     pub merges: Vec<MergeEvent>,
     pub splits: Vec<SplitEvent>,
+    pub evicts: Vec<EvictEvent>,
     pub latency: Vec<LatencySample>,
     pub ram: Vec<RamSample>,
     pub group_ram: Vec<GroupRamSample>,
+    pub fn_ram: Vec<FnRamSample>,
     /// (phase label, workload report), in order
     pub reports: Vec<(&'static str, WorkloadReport)>,
     /// virtual time each phase finished draining (ms since epoch)
     pub phase_end_ms: Vec<f64>,
+    /// per-phase topology probes (Iot scenario; empty for Chain)
+    pub phase_snaps: Vec<TopologySnap>,
     pub final_distinct_instances: usize,
     pub final_live_instances: usize,
 }
@@ -146,13 +243,27 @@ impl Fig7 {
         self.splits.first()
     }
 
+    pub fn first_evict(&self) -> Option<&EvictEvent> {
+        self.evicts.first()
+    }
+
     /// p95 of requests arriving after the split cutover, while the
-    /// pressure phase is still running.
+    /// pressure phase is still running (Chain scenario).
     pub fn post_split_p95_ms(&self) -> f64 {
         match (self.first_split(), self.phase_end_ms.get(1)) {
             (Some(s), Some(&end_b)) => self.p95_window(s.t_ms, end_b, 30),
             _ => f64::NAN,
         }
+    }
+
+    /// p95 of the relief phase's entry-route traffic (Iot scenario: the
+    /// clean post-evict regime, no direct-route requests mixed in).
+    pub fn relief_p95_ms(&self) -> f64 {
+        self.reports
+            .iter()
+            .find(|(label, _)| *label == "relief")
+            .map(|(_, r)| r.latency.p95())
+            .unwrap_or(f64::NAN)
     }
 
     /// p95 of the fused steady state in the calm phase (reporting).
@@ -165,8 +276,16 @@ impl Fig7 {
         }
     }
 
-    /// The acceptance checklist for the full feedback loop.
+    /// The acceptance checklist for the configured scenario.
     pub fn checks(&self) -> Vec<Check> {
+        match self.params.app {
+            Fig7App::Chain => self.checks_chain(),
+            Fig7App::Iot => self.checks_iot(),
+        }
+    }
+
+    /// PR 1's whole-group feedback-loop checklist (threshold policy).
+    fn checks_chain(&self) -> Vec<Check> {
         let mut out = Vec::new();
         let end_a = self.phase_end_ms.first().copied().unwrap_or(f64::NAN);
 
@@ -239,6 +358,12 @@ impl Fig7 {
         });
 
         out.push(Check {
+            label: "threshold policy never evicts",
+            pass: self.evicts.is_empty(),
+            detail: format!("{} evict events", self.evicts.len()),
+        });
+
+        out.push(Check {
             label: "re-fused and converged after relief",
             pass: self.final_distinct_instances == 1 && self.final_live_instances == 1,
             detail: format!(
@@ -247,8 +372,147 @@ impl Fig7 {
             ),
         });
 
-        let all_served = self.reports.iter().all(|(_, r)| r.failed == 0);
+        out.push(self.zero_drops_check());
+        out
+    }
+
+    /// The Iot eviction checklist: asymmetric pressure must evict exactly
+    /// the hot group's heaviest member and leave everything else fused.
+    fn checks_iot(&self) -> Vec<Check> {
+        let mut out = Vec::new();
+        let end_a = self.phase_end_ms.first().copied().unwrap_or(f64::NAN);
+        let end_b = self.phase_end_ms.get(1).copied().unwrap_or(f64::NAN);
+
+        let hot = vec!["ingest".to_string(), "model".into(), "refine".into()];
+        let cool = vec!["notify".to_string(), "persist".into()];
+        let remainder = vec!["ingest".to_string(), "refine".into()];
+
+        let calm_ok = self
+            .phase_snaps
+            .first()
+            .map(|snap| {
+                members_of(snap, "ingest") == Some(&hot)
+                    && members_of(snap, "persist") == Some(&cool)
+            })
+            .unwrap_or(false);
         out.push(Check {
+            label: "both groups fused under calm load",
+            pass: calm_ok,
+            detail: format!(
+                "after calm: ingest -> {:?}, persist -> {:?}",
+                self.phase_snaps.first().and_then(|s| members_of(s, "ingest")),
+                self.phase_snaps.first().and_then(|s| members_of(s, "persist"))
+            ),
+        });
+
+        let evict_ok = self.evicts.len() == 1
+            && self
+                .first_evict()
+                .map(|e| {
+                    e.function == "model"
+                        && e.group == hot
+                        && e.reason == SplitReason::CostModel
+                        && e.t_ms > end_a
+                        && e.t_ms < end_b
+                })
+                .unwrap_or(false);
+        out.push(Check {
+            label: "exactly one eviction: the hot group sheds its heaviest member",
+            pass: evict_ok,
+            detail: match self.first_evict() {
+                Some(e) => format!(
+                    "{} evict(s); evicted `{}` from [{}] at t={:.1}s, reason {}",
+                    self.evicts.len(),
+                    e.function,
+                    e.group.join("+"),
+                    e.t_ms / 1e3,
+                    e.reason.name()
+                ),
+                None => "no evict event".into(),
+            },
+        });
+
+        let pressure_ok = self
+            .phase_snaps
+            .get(1)
+            .map(|snap| {
+                members_of(snap, "ingest") == Some(&remainder)
+                    && members_of(snap, "model").map(|m| m.as_slice())
+                        == Some(&["model".to_string()][..])
+                    && members_of(snap, "persist") == Some(&cool)
+            })
+            .unwrap_or(false);
+        out.push(Check {
+            label: "remainder stays fused, evicted member serves alone",
+            pass: pressure_ok,
+            detail: format!(
+                "after pressure: ingest -> {:?}, model -> {:?}, persist -> {:?}",
+                self.phase_snaps.get(1).and_then(|s| members_of(s, "ingest")),
+                self.phase_snaps.get(1).and_then(|s| members_of(s, "model")),
+                self.phase_snaps.get(1).and_then(|s| members_of(s, "persist"))
+            ),
+        });
+
+        out.push(Check {
+            label: "the cool group never splits or evicts",
+            pass: self.splits.is_empty()
+                && !self.evicts.iter().any(|e| e.group.contains(&"persist".to_string())),
+            detail: format!(
+                "{} split events, {} evict events",
+                self.splits.len(),
+                self.evicts.len()
+            ),
+        });
+
+        // One-sided recovery: the evicted topology must not cost more than
+        // 10% over the pre-fusion regime (it is usually *faster*, since the
+        // remainder is still fused).
+        let base = self.baseline_p95_ms();
+        let post = self.relief_p95_ms();
+        let recovered = base.is_finite() && post.is_finite() && post <= 1.10 * base;
+        out.push(Check {
+            label: "post-evict p95 recovers to within 10% of the pre-fusion baseline",
+            pass: recovered,
+            detail: format!("baseline {base:.1} ms vs post-evict relief {post:.1} ms"),
+        });
+
+        let no_flap = match self.first_evict() {
+            Some(e) => {
+                let barrier = e.t_ms + self.params.cooldown_ms;
+                self.merges.iter().all(|m| m.t_ms < e.t_ms || m.t_ms >= barrier)
+            }
+            None => false,
+        };
+        out.push(Check {
+            label: "no re-fusion of the evicted member within one cooldown window",
+            pass: no_flap,
+            detail: format!(
+                "cooldown {:.0}s; merges at [{}]",
+                self.params.cooldown_ms / 1e3,
+                self.merges
+                    .iter()
+                    .map(|m| format!("{:.1}s", m.t_ms / 1e3))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        });
+
+        out.push(Check {
+            label: "final topology: two fused groups + the evicted singleton",
+            pass: self.final_distinct_instances == 3 && self.final_live_instances == 3,
+            detail: format!(
+                "{} routed instances, {} live",
+                self.final_distinct_instances, self.final_live_instances
+            ),
+        });
+
+        out.push(self.zero_drops_check());
+        out
+    }
+
+    fn zero_drops_check(&self) -> Check {
+        let all_served = self.reports.iter().all(|(_, r)| r.failed == 0);
+        Check {
             label: "zero dropped requests across all phases",
             pass: all_served,
             detail: self
@@ -257,8 +521,7 @@ impl Fig7 {
                 .map(|(l, r)| format!("{l}: {}/{} ok", r.ok, r.issued))
                 .collect::<Vec<_>>()
                 .join(", "),
-        });
-        out
+        }
     }
 
     pub fn passed(&self) -> bool {
@@ -267,15 +530,25 @@ impl Fig7 {
 
     pub fn render(&self) -> String {
         let mut out = String::new();
-        out.push_str("FIG7: feedback-driven defusion (fuse under calm load, split under memory pressure)\n");
+        match self.params.app {
+            Fig7App::Chain => out.push_str(
+                "FIG7/chain: feedback-driven defusion (fuse under calm load, split under memory pressure)\n",
+            ),
+            Fig7App::Iot => out.push_str(
+                "FIG7/iot: cost-model partial defusion (two groups, asymmetric pressure, heaviest member evicted)\n",
+            ),
+        }
         for (label, report) in &self.reports {
-            out.push_str(&format!("  {label:<9}: {}\n", report.summary()));
+            out.push_str(&format!("  {label:<15}: {}\n", report.summary()));
         }
         out.push_str(&format!(
-            "  regimes   : baseline p95 {:.1} ms -> fused p95 {:.1} ms -> post-split p95 {:.1} ms\n",
+            "  regimes   : baseline p95 {:.1} ms -> fused p95 {:.1} ms -> post-correction p95 {:.1} ms\n",
             self.baseline_p95_ms(),
             self.fused_p95_ms(),
-            self.post_split_p95_ms()
+            match self.params.app {
+                Fig7App::Chain => self.post_split_p95_ms(),
+                Fig7App::Iot => self.relief_p95_ms(),
+            }
         ));
         out.push_str(&format!(
             "  merges    : {} at t = [{}]\n",
@@ -295,6 +568,17 @@ impl Fig7 {
                 .collect::<Vec<_>>()
                 .join(", ")
         ));
+        out.push_str(&format!(
+            "  evicts    : {} at t = [{}]\n",
+            self.evicts.len(),
+            self.evicts
+                .iter()
+                .map(|e| {
+                    format!("{:.1}s ({} from {})", e.t_ms / 1e3, e.function, e.group.join("+"))
+                })
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
         for c in self.checks() {
             out.push_str(&format!(
                 "  [{}] {} — {}\n",
@@ -307,9 +591,20 @@ impl Fig7 {
     }
 }
 
+fn members_of<'a>(snap: &'a TopologySnap, probe: &str) -> Option<&'a Vec<String>> {
+    snap.iter().find(|(f, _)| f == probe).map(|(_, members)| members)
+}
+
+fn snapshot(platform: &Platform, probes: &[&str]) -> TopologySnap {
+    probes
+        .iter()
+        .map(|p| (p.to_string(), platform.group_members(p)))
+        .collect()
+}
+
 /// Run FIG7 and write its CSVs + summary into `out_dir`.
 pub fn run(out_dir: &Path, params: Fig7Params) -> Result<Fig7> {
-    let fig = Executor::new(Mode::Virtual).block_on(async move {
+    let (fig, series_csvs) = Executor::new(Mode::Virtual).block_on(async move {
         let mut cfg = PlatformConfig::tiny().with_compute(params.compute).with_seed(params.seed);
         cfg.latency.image_build_ms = params.image_build_ms;
         cfg.latency.boot_ms = params.boot_ms;
@@ -319,67 +614,125 @@ pub fn run(out_dir: &Path, params: Fig7Params) -> Result<Fig7> {
         cfg.fusion.split_p95_regression = params.split_p95_regression;
         cfg.fusion.feedback_interval_ms = params.feedback_interval_ms;
         cfg.fusion.split_hysteresis_windows = params.hysteresis;
+        if params.app == Fig7App::Iot {
+            cfg.fusion.split_policy = SplitPolicyKind::CostModel;
+            cfg.fusion.cost.evict_threshold = params.evict_threshold;
+            cfg.fusion.cost.w_latency = params.w_latency;
+            cfg.fusion.cost.w_ram = params.w_ram;
+            cfg.fusion.cost.w_gbs = params.w_gbs;
+        }
 
-        let platform = Platform::deploy(apps::chain(4), cfg).await?;
-        let phases: [(&'static str, f64, f64); 3] = [
-            ("calm", params.calm_rps, params.phase_a_secs),
-            ("pressure", params.pressure_rps, params.phase_b_secs),
-            ("relief", params.calm_rps, params.phase_c_secs),
-        ];
-        let mut reports = Vec::new();
+        let app = match params.app {
+            Fig7App::Chain => apps::chain(4),
+            Fig7App::Iot => apps::iot_heavy(),
+        };
+        let platform = Platform::deploy(app, cfg).await?;
+        let mut reports: Vec<(&'static str, WorkloadReport)> = Vec::new();
         let mut phase_end_ms = Vec::new();
-        for (i, (label, rate, secs)) in phases.iter().enumerate() {
-            let wl = WorkloadConfig {
-                requests: (rate * secs).round() as u64,
-                rate_rps: *rate,
-                seed: params.seed.wrapping_add(i as u64),
-                timeout_ms: 120_000.0,
-            };
-            let report = workload::run(Rc::clone(&platform), wl).await?;
-            reports.push((*label, report));
+        let mut phase_snaps = Vec::new();
+        let probes: &[&str] = &["ingest", "model", "persist"];
+
+        let phases: [(&'static str, f64); 3] = [
+            ("calm", params.phase_a_secs),
+            ("pressure", params.phase_b_secs),
+            ("relief", params.phase_c_secs),
+        ];
+        for (i, (label, secs)) in phases.iter().enumerate() {
+            match params.app {
+                Fig7App::Chain => {
+                    // PR 1 shape: the entry rate itself shifts between phases
+                    let rate = if *label == "pressure" {
+                        params.pressure_rps
+                    } else {
+                        params.calm_rps
+                    };
+                    let wl = WorkloadConfig {
+                        requests: (rate * secs).round() as u64,
+                        rate_rps: rate,
+                        seed: params.seed.wrapping_add(i as u64),
+                        timeout_ms: 120_000.0,
+                    };
+                    let report = workload::run(Rc::clone(&platform), wl).await?;
+                    reports.push((*label, report));
+                }
+                Fig7App::Iot => {
+                    // entry traffic stays calm in every phase; pressure adds
+                    // a concurrent direct workload on the `model` route
+                    let entry_wl = WorkloadConfig {
+                        requests: (params.calm_rps * secs).round() as u64,
+                        rate_rps: params.calm_rps,
+                        seed: params.seed.wrapping_add(i as u64),
+                        timeout_ms: 120_000.0,
+                    };
+                    if *label == "pressure" {
+                        let direct_wl = WorkloadConfig {
+                            requests: (params.pressure_rps * secs).round() as u64,
+                            rate_rps: params.pressure_rps,
+                            seed: params.seed.wrapping_add(0x5EED + i as u64),
+                            timeout_ms: 120_000.0,
+                        };
+                        let entry = exec::spawn(workload::run(Rc::clone(&platform), entry_wl));
+                        let direct = exec::spawn(workload::run_targeted(
+                            Rc::clone(&platform),
+                            direct_wl,
+                            Arrival::Constant,
+                            Some("model"),
+                        ));
+                        reports.push(("pressure", entry.await?));
+                        reports.push(("pressure-direct", direct.await?));
+                    } else {
+                        let report = workload::run(Rc::clone(&platform), entry_wl).await?;
+                        reports.push((*label, report));
+                    }
+                }
+            }
+            // let in-flight pipelines land before probing the topology
+            exec::sleep_ms(2_000.0).await;
             phase_end_ms.push(platform.metrics.rel_now_ms());
+            if params.app == Fig7App::Iot {
+                phase_snaps.push(snapshot(&platform, probes));
+            }
         }
         // let drains / re-fusions settle before the final topology snapshot
         exec::sleep_ms(10_000.0).await;
         platform.shutdown();
 
         let m = &platform.metrics;
-        Ok::<Fig7, crate::error::Error>(Fig7 {
+        // series CSVs come straight from the Recorder's canonical exporters
+        // (one format definition; fig7 adds only the combined event timeline)
+        let series_csvs: Vec<(&'static str, String)> = vec![
+            ("fig7_latency.csv", m.latency_csv()),
+            ("fig7_ram.csv", m.ram_csv()),
+            ("fig7_group_ram.csv", m.group_ram_csv()),
+            ("fig7_fn_ram.csv", m.fn_ram_csv()),
+            ("fig7_fn_latency.csv", m.fn_latency_csv()),
+        ];
+        let fig = Fig7 {
             params,
             merges: m.merges(),
             splits: m.splits(),
+            evicts: m.evicts(),
             latency: m.latencies(),
             ram: m.ram_series(),
             group_ram: m.group_ram_series(),
+            fn_ram: m.fn_ram_series(),
             reports,
             phase_end_ms,
+            phase_snaps,
             final_distinct_instances: platform.gateway.distinct_instances(),
             final_live_instances: platform.containers.live_count(),
-        })
+        };
+        Ok::<(Fig7, Vec<(&'static str, String)>), crate::error::Error>((fig, series_csvs))
     })?;
 
-    let mut latency_csv = String::from("t_ms,latency_ms\n");
-    for s in &fig.latency {
-        latency_csv.push_str(&format!("{:.3},{:.3}\n", s.t_ms, s.latency_ms));
+    for (name, contents) in &series_csvs {
+        write_output(&out_dir.join(name), contents)?;
     }
-    write_output(&out_dir.join("fig7_latency.csv"), &latency_csv)?;
 
-    let mut ram_csv = String::from("t_ms,total_mb,instances\n");
-    for s in &fig.ram {
-        ram_csv.push_str(&format!("{:.3},{:.3},{}\n", s.t_ms, s.total_mb, s.instances));
-    }
-    write_output(&out_dir.join("fig7_ram.csv"), &ram_csv)?;
-
-    let mut group_csv = String::from("t_ms,group,ram_mb\n");
-    for s in &fig.group_ram {
-        group_csv.push_str(&format!("{:.3},{},{:.3}\n", s.t_ms, s.group, s.ram_mb));
-    }
-    write_output(&out_dir.join("fig7_group_ram.csv"), &group_csv)?;
-
-    let mut events_csv = String::from("t_ms,event,duration_ms,reason,functions\n");
+    let mut events_csv = String::from("t_ms,event,duration_ms,reason,function,functions\n");
     for m in &fig.merges {
         events_csv.push_str(&format!(
-            "{:.3},merge,{:.3},,{}\n",
+            "{:.3},merge,{:.3},,,{}\n",
             m.t_ms,
             m.duration_ms,
             m.functions.join("+")
@@ -387,11 +740,21 @@ pub fn run(out_dir: &Path, params: Fig7Params) -> Result<Fig7> {
     }
     for s in &fig.splits {
         events_csv.push_str(&format!(
-            "{:.3},split,{:.3},{},{}\n",
+            "{:.3},split,{:.3},{},,{}\n",
             s.t_ms,
             s.duration_ms,
             s.reason.name(),
             s.functions.join("+")
+        ));
+    }
+    for e in &fig.evicts {
+        events_csv.push_str(&format!(
+            "{:.3},evict,{:.3},{},{},{}\n",
+            e.t_ms,
+            e.duration_ms,
+            e.reason.name(),
+            e.function,
+            e.group.join("+")
         ));
     }
     write_output(&out_dir.join("fig7_events.csv"), &events_csv)?;
@@ -427,6 +790,51 @@ mod tests {
         assert!(dir.join("fig7_events.csv").exists());
         assert!(dir.join("fig7_group_ram.csv").exists());
         assert!(dir.join("fig7_summary.txt").exists());
+    }
+
+    #[test]
+    fn fig7_iot_eviction_scenario_at_smoke_scale() {
+        let dir = std::env::temp_dir().join("provuse_fig7_iot_test");
+        let fig = run(&dir, Fig7Params::iot_smoke()).unwrap();
+        for c in fig.checks() {
+            assert!(c.pass, "{} — {}\n{}", c.label, c.detail, fig.render());
+        }
+        // the eviction shed real RAM: the hot group's attributed RAM drops
+        // by ~the model function's 400 MiB code footprint
+        let evict = fig.first_evict().unwrap();
+        let hot_before = fig
+            .group_ram
+            .iter()
+            .filter(|s| s.group == "ingest+model+refine" && s.t_ms < evict.t_ms)
+            .map(|s| s.ram_mb)
+            .fold(f64::NAN, f64::max);
+        let remainder_after = fig
+            .group_ram
+            .iter()
+            .filter(|s| s.group == "ingest+refine" && s.t_ms > evict.t_ms)
+            .map(|s| s.ram_mb)
+            .fold(f64::NAN, f64::max);
+        assert!(
+            hot_before.is_finite() && remainder_after.is_finite(),
+            "missing group RAM attribution around the eviction"
+        );
+        assert!(
+            hot_before - remainder_after > 300.0,
+            "eviction shed only {:.0} MiB",
+            hot_before - remainder_after
+        );
+        // per-function attribution flagged `model` as the RAM hog
+        let model_share = fig
+            .fn_ram
+            .iter()
+            .filter(|s| s.group == "ingest+model+refine" && s.function == "model")
+            .map(|s| s.ram_mb)
+            .fold(f64::NAN, f64::max);
+        assert!(model_share > 400.0, "model attribution {model_share}");
+        assert!(dir.join("fig7_fn_ram.csv").exists());
+        let events = std::fs::read_to_string(dir.join("fig7_events.csv")).unwrap();
+        assert!(events.contains("evict"));
+        assert!(events.contains("cost_model"));
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Cost-model-driven defusion objective (Konflux-style: grouping as an
+//! explicit cost optimization instead of threshold-tripping).
+//!
+//! A fused group is scored with one weighted objective:
+//!
+//! ```text
+//! score = w_latency * max(0, window_p95 / baseline_p95 - 1)
+//!       + w_ram     * ram_mb / ram_reference
+//!       + w_gbs     * billed GiB-seconds per wall second
+//! ```
+//!
+//! Every term is non-negative and monotone: more RAM, a worse p95, or a
+//! larger bill can never *lower* the score.  When the score stays above
+//! `evict_threshold` for the configured hysteresis, the controller sheds
+//! the group's **heaviest** member — the function with the largest share of
+//! the group's attributed RAM, handler latency, and billed GiB-seconds —
+//! with ties broken deterministically toward the lexicographically smallest
+//! name.
+//!
+//! The RAM reference is `max_group_ram_mb` when set (the cap doubles as the
+//! pressure scale), else `CostParams::ram_ref_mb`.  The billed term uses
+//! the provider price sheet in [`crate::billing::CostModel`] only for
+//! reporting; the score keeps raw GiB-seconds per second so weights stay
+//! O(1) human-tunable.
+
+use crate::config::FusionParams;
+
+use super::{FnAttribution, GroupSample};
+
+/// The weighted defusion objective (see module docs).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    w_latency: f64,
+    w_ram: f64,
+    w_gbs: f64,
+    evict_threshold: f64,
+    ram_ref_mb: f64,
+}
+
+impl CostModel {
+    /// Build from the fusion policy; resolves the RAM reference scale.
+    pub fn from_params(p: &FusionParams) -> Self {
+        let ram_ref_mb = if p.max_group_ram_mb > 0.0 {
+            p.max_group_ram_mb
+        } else {
+            p.cost.ram_ref_mb.max(f64::MIN_POSITIVE)
+        };
+        CostModel {
+            w_latency: p.cost.w_latency,
+            w_ram: p.cost.w_ram,
+            w_gbs: p.cost.w_gbs,
+            evict_threshold: p.cost.evict_threshold,
+            ram_ref_mb,
+        }
+    }
+
+    /// Whether cost-driven defusion is armed at all.
+    pub fn armed(&self) -> bool {
+        self.evict_threshold > 0.0
+    }
+
+    pub fn evict_threshold(&self) -> f64 {
+        self.evict_threshold
+    }
+
+    /// The group objective.  `baseline_p95_ms` is the group's pre-fusion
+    /// regime (NaN disarms the latency term, exactly like the threshold
+    /// policy's regression check).
+    pub fn group_score(&self, sample: &GroupSample, baseline_p95_ms: f64) -> f64 {
+        let latency = if baseline_p95_ms.is_finite()
+            && baseline_p95_ms > 0.0
+            && sample.window_p95_ms.is_finite()
+        {
+            (sample.window_p95_ms / baseline_p95_ms - 1.0).max(0.0)
+        } else {
+            0.0
+        };
+        let ram = sample.ram_mb.max(0.0) / self.ram_ref_mb;
+        let gbs_rate = if sample.window_s > 0.0 {
+            sample.per_fn.iter().map(|f| f.gb_seconds.max(0.0)).sum::<f64>() / sample.window_s
+        } else {
+            0.0
+        };
+        self.w_latency * latency + self.w_ram * ram + self.w_gbs * gbs_rate
+    }
+
+    /// Per-function heaviness: each member's share of the group's
+    /// attributed RAM, handler p95, and billed GiB-seconds, weighted like
+    /// the group objective.  Sorted heaviest-first; equal scores order by
+    /// function name (deterministic tie-break).
+    pub fn fn_scores(&self, sample: &GroupSample) -> Vec<(String, f64)> {
+        let ram_total: f64 = sample.per_fn.iter().map(|f| f.ram_mb.max(0.0)).sum();
+        let lat_total: f64 = sample.per_fn.iter().map(|f| finite_or_zero(f.p95_ms)).sum();
+        let gbs_total: f64 = sample.per_fn.iter().map(|f| f.gb_seconds.max(0.0)).sum();
+        let mut scores: Vec<(String, f64)> = sample
+            .per_fn
+            .iter()
+            .map(|f| {
+                let score = self.w_ram * share(f.ram_mb.max(0.0), ram_total)
+                    + self.w_latency * share(finite_or_zero(f.p95_ms), lat_total)
+                    + self.w_gbs * share(f.gb_seconds.max(0.0), gbs_total);
+                (f.function.clone(), score)
+            })
+            .collect();
+        scores.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+        });
+        scores
+    }
+
+    /// The member an eviction should shed (None for empty attribution).
+    pub fn heaviest(&self, sample: &GroupSample) -> Option<String> {
+        self.fn_scores(sample).into_iter().next().map(|(name, _)| name)
+    }
+}
+
+fn share(value: f64, total: f64) -> f64 {
+    if total > 0.0 { value / total } else { 0.0 }
+}
+
+fn finite_or_zero(v: f64) -> f64 {
+    if v.is_finite() { v.max(0.0) } else { 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SplitPolicyKind;
+    use crate::util::prop::check;
+
+    fn model(ram_cap: f64) -> CostModel {
+        let mut p = FusionParams::default_enabled();
+        p.split_policy = SplitPolicyKind::CostModel;
+        p.max_group_ram_mb = ram_cap;
+        CostModel::from_params(&p)
+    }
+
+    fn sample(ram_mb: f64, p95: f64, per_fn: Vec<FnAttribution>) -> GroupSample {
+        GroupSample {
+            functions: per_fn.iter().map(|f| f.function.clone()).collect(),
+            ram_mb,
+            window_p95_ms: p95,
+            window_s: 2.0,
+            per_fn,
+        }
+    }
+
+    fn attr(function: &str, ram_mb: f64, p95_ms: f64, gb_seconds: f64) -> FnAttribution {
+        FnAttribution { function: function.into(), ram_mb, p95_ms, gb_seconds }
+    }
+
+    #[test]
+    fn score_is_monotone_in_ram_and_p95() {
+        // Property (ISSUE 2): more RAM or a higher window p95 never lowers
+        // the split score, for any weights and any baseline.
+        check("cost score monotone", 256, |g| {
+            let mut p = FusionParams::default_enabled();
+            p.split_policy = SplitPolicyKind::CostModel;
+            p.max_group_ram_mb = g.f64(50.0, 1_000.0);
+            p.cost.w_latency = g.f64(0.0, 4.0);
+            p.cost.w_ram = g.f64(0.0, 4.0);
+            p.cost.w_gbs = g.f64(0.0, 4.0);
+            let m = CostModel::from_params(&p);
+            let baseline = g.f64(10.0, 1_000.0);
+            let ram = g.f64(0.0, 2_000.0);
+            let p95 = g.f64(1.0, 5_000.0);
+            let gbs = g.f64(0.0, 10.0);
+            let base = sample(ram, p95, vec![attr("a", ram, p95, gbs)]);
+            let score = m.group_score(&base, baseline);
+            assert!(score.is_finite() && score >= 0.0);
+
+            let more_ram = sample(ram + g.f64(0.0, 500.0), p95, base.per_fn.clone());
+            assert!(
+                m.group_score(&more_ram, baseline) >= score,
+                "more RAM lowered the score"
+            );
+            let worse_p95 = sample(ram, p95 + g.f64(0.0, 2_000.0), base.per_fn.clone());
+            assert!(
+                m.group_score(&worse_p95, baseline) >= score,
+                "worse p95 lowered the score"
+            );
+        });
+    }
+
+    #[test]
+    fn latency_term_disarmed_without_a_baseline() {
+        let m = model(100.0);
+        let s = sample(100.0, 10_000.0, vec![]);
+        // NaN baseline -> only the RAM term remains (100/100 = 1.0)
+        assert!((m.group_score(&s, f64::NAN) - 1.0).abs() < 1e-12);
+        // improved latency clamps to zero rather than crediting the group
+        assert!((m.group_score(&sample(100.0, 50.0, vec![]), 100.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gbs_term_is_a_rate_over_the_window() {
+        let m = model(1e9); // RAM term ~ 0
+        let s = sample(
+            0.0,
+            f64::NAN,
+            vec![attr("a", 0.0, f64::NAN, 3.0), attr("b", 0.0, f64::NAN, 1.0)],
+        );
+        // 4 GiB-s over a 2 s window = 2.0
+        assert!((m.group_score(&s, f64::NAN) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ram_reference_falls_back_when_cap_unset() {
+        let mut p = FusionParams::default_enabled();
+        p.split_policy = SplitPolicyKind::CostModel;
+        p.max_group_ram_mb = 0.0;
+        p.cost.ram_ref_mb = 512.0;
+        let m = CostModel::from_params(&p);
+        assert!((m.group_score(&sample(512.0, f64::NAN, vec![]), f64::NAN) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heaviest_picks_dominant_member() {
+        let m = model(200.0);
+        let s = sample(
+            400.0,
+            f64::NAN,
+            vec![
+                attr("light", 40.0, 10.0, 0.1),
+                attr("heavy", 320.0, 90.0, 2.0),
+                attr("mid", 40.0, 20.0, 0.2),
+            ],
+        );
+        assert_eq!(m.heaviest(&s).as_deref(), Some("heavy"));
+        let scores = m.fn_scores(&s);
+        assert_eq!(scores[0].0, "heavy");
+        assert!(scores[0].1 > scores[1].1);
+    }
+
+    #[test]
+    fn heaviest_ties_break_toward_smallest_name() {
+        let m = model(200.0);
+        // identical attribution -> deterministic lexicographic winner
+        let s = sample(
+            100.0,
+            f64::NAN,
+            vec![attr("zeta", 50.0, 30.0, 1.0), attr("alpha", 50.0, 30.0, 1.0)],
+        );
+        assert_eq!(m.heaviest(&s).as_deref(), Some("alpha"));
+        // all-zero attribution (e.g. an idle window) is still deterministic
+        let idle = sample(
+            100.0,
+            f64::NAN,
+            vec![attr("b", 0.0, f64::NAN, 0.0), attr("a", 0.0, f64::NAN, 0.0)],
+        );
+        assert_eq!(m.heaviest(&idle).as_deref(), Some("a"));
+        assert_eq!(m.heaviest(&sample(1.0, f64::NAN, vec![])), None);
+    }
+
+    #[test]
+    fn disarmed_below_zero_threshold() {
+        let mut p = FusionParams::default_enabled();
+        p.cost.evict_threshold = 0.0;
+        assert!(!CostModel::from_params(&p).armed());
+        p.cost.evict_threshold = 2.0;
+        assert!(CostModel::from_params(&p).armed());
+    }
+}

@@ -16,21 +16,30 @@
 //! gets a [`FusionRequest::Split`].  After a completed split every pair in
 //! the group enters cooldown so fuse ∧ split cannot flap.
 //!
+//! With [`crate::config::SplitPolicyKind::CostModel`] the two-threshold
+//! check is replaced by a single weighted objective (see [`cost`]) over
+//! per-function attribution, and a violating group sheds only its
+//! **heaviest** member via [`FusionRequest::Evict`] — a partial split.
+//!
 //! The observer also maintains the empirically discovered call graph, which
 //! `provuse apps --observed` can dump.
+
+pub mod cost;
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, HashSet};
 
 use crate::apps::AppSpec;
-use crate::config::FusionParams;
+use crate::config::{FusionParams, SplitPolicyKind};
 use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::Sender;
 
-/// A request for the Merger: either consolidate two functions' instances or
-/// break a fused group back apart.
-#[derive(Debug, Clone, PartialEq, Eq)]
+use cost::CostModel;
+
+/// A request for the Merger: consolidate two functions' instances, break a
+/// fused group back apart, or evict a single member from a fused group.
+#[derive(Debug, Clone, PartialEq)]
 pub enum FusionRequest {
     /// Fuse the instances hosting `caller` and `callee`.
     Fuse { caller: String, callee: String },
@@ -38,6 +47,14 @@ pub enum FusionRequest {
     /// into one instance per function.
     Split {
         functions: Vec<String>,
+        reason: SplitReason,
+    },
+    /// Partial split: redeploy only `function` from its original image and
+    /// shrink the fused instance hosting exactly `functions` (sorted) in
+    /// place — the remainder of the group stays fused.
+    Evict {
+        functions: Vec<String>,
+        function: String,
         reason: SplitReason,
     },
 }
@@ -50,6 +67,8 @@ pub enum SplitReason {
     /// The group's trailing-window p95 regressed past the pre-fusion
     /// baseline by more than `split_p95_regression`.
     LatencyRegression,
+    /// The cost model's weighted objective crossed `evict_threshold`.
+    CostModel,
 }
 
 impl SplitReason {
@@ -57,13 +76,31 @@ impl SplitReason {
         match self {
             SplitReason::RamCap => "ram_cap",
             SplitReason::LatencyRegression => "latency_regression",
+            SplitReason::CostModel => "cost_model",
         }
     }
 }
 
+/// Per-function attribution inside one fused group, gathered by the
+/// platform's controller tick (handler latency series + RAM shares + the
+/// billing ledger's trailing window).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FnAttribution {
+    pub function: String,
+    /// attributed RAM (MiB): code footprint + an equal share of the base
+    /// runtime and in-flight working sets; group members sum to the
+    /// instance's RAM
+    pub ram_mb: f64,
+    /// p95 handler self-time over the trailing window (ms); NaN when the
+    /// window had too few samples
+    pub p95_ms: f64,
+    /// billed GiB-seconds attributed to this function in the window
+    pub gb_seconds: f64,
+}
+
 /// One controller observation of a live fused group (produced by the
 /// platform's feedback loop each `feedback_interval_ms`).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GroupSample {
     /// sorted function names hosted by the fused instance
     pub functions: Vec<String>,
@@ -72,6 +109,12 @@ pub struct GroupSample {
     /// p95 end-to-end latency over the trailing feedback window (ms);
     /// NaN when the window had too few samples to be meaningful
     pub window_p95_ms: f64,
+    /// trailing window length (seconds) the per-function attribution was
+    /// gathered over
+    pub window_s: f64,
+    /// per-function attribution (empty under the threshold policy, which
+    /// only needs the group aggregates)
+    pub per_fn: Vec<FnAttribution>,
 }
 
 /// Shared observation store + policy gate + defusion feedback state.
@@ -108,7 +151,11 @@ struct GroupFeedback {
     ram_strikes: u32,
     /// consecutive feedback windows past the latency-regression threshold
     latency_strikes: u32,
-    /// a split request is in flight for this group
+    /// consecutive feedback windows over the cost model's evict threshold
+    cost_strikes: u32,
+    /// most recent cost-model objective value (NaN until the first tick)
+    last_score: f64,
+    /// a split/evict request is in flight for this group
     split_pending: bool,
     /// virtual time (ms) before which no new split may be requested
     /// (set after a failed/aborted split)
@@ -122,6 +169,8 @@ impl GroupFeedback {
             recorded_at_ms,
             ram_strikes: 0,
             latency_strikes: 0,
+            cost_strikes: 0,
+            last_score: f64::NAN,
             split_pending: false,
             retry_after_ms: 0.0,
         }
@@ -227,12 +276,29 @@ impl Observer {
     }
 
     /// Controller tick: evaluate every live fused group against the defusion
-    /// policy; emits [`FusionRequest::Split`] once a violation has persisted
-    /// for `split_hysteresis_windows` consecutive windows.
+    /// policy once a violation has persisted for `split_hysteresis_windows`
+    /// consecutive windows.
+    ///
+    /// * [`SplitPolicyKind::Threshold`] — PR 1 semantics, preserved verbatim:
+    ///   RAM cap / p95 regression each tracked independently, whole-group
+    ///   [`FusionRequest::Split`] on violation.
+    /// * [`SplitPolicyKind::CostModel`] — one weighted objective (see
+    ///   [`cost::CostModel`]); a violating group of three or more sheds its
+    ///   heaviest member via [`FusionRequest::Evict`], a violating pair is
+    ///   split whole (evicting from a pair and splitting it are the same
+    ///   topology change, minus a pointlessly oversized instance).
     pub fn feedback(&self, samples: &[GroupSample]) {
         if !self.policy.enabled || !self.policy.defusion {
             return;
         }
+        match self.policy.split_policy {
+            SplitPolicyKind::Threshold => self.feedback_threshold(samples),
+            SplitPolicyKind::CostModel => self.feedback_cost(samples),
+        }
+    }
+
+    /// PR 1's two-threshold policy (the `Threshold` fallback).
+    fn feedback_threshold(&self, samples: &[GroupSample]) {
         let now = exec::now().as_millis_f64();
         let hysteresis = self.policy.split_hysteresis_windows.max(1);
         let mut s = self.state.borrow_mut();
@@ -272,6 +338,49 @@ impl Observer {
         }
     }
 
+    /// Cost-model policy: weighted objective + heaviest-member eviction.
+    fn feedback_cost(&self, samples: &[GroupSample]) {
+        let model = CostModel::from_params(&self.policy);
+        if !model.armed() {
+            return;
+        }
+        let now = exec::now().as_millis_f64();
+        let hysteresis = self.policy.split_hysteresis_windows.max(1);
+        let mut s = self.state.borrow_mut();
+        for sample in samples {
+            let mut key = sample.functions.clone();
+            key.sort();
+            let g = s
+                .groups
+                .entry(key.clone())
+                .or_insert_with(|| GroupFeedback::new(f64::NAN, now));
+            let score = model.group_score(sample, g.baseline_p95_ms);
+            g.last_score = score;
+            if g.split_pending || now < g.retry_after_ms {
+                continue;
+            }
+            g.cost_strikes = if score >= model.evict_threshold() {
+                g.cost_strikes + 1
+            } else {
+                0
+            };
+            if g.cost_strikes < hysteresis {
+                continue;
+            }
+            g.split_pending = true;
+            g.cost_strikes = 0;
+            let request = match model.heaviest(sample) {
+                Some(function) if key.len() > 2 => FusionRequest::Evict {
+                    functions: key,
+                    function,
+                    reason: SplitReason::CostModel,
+                },
+                _ => FusionRequest::Split { functions: key, reason: SplitReason::CostModel },
+            };
+            let _ = self.tx.send(request);
+        }
+    }
+
     /// Merger feedback: the group was split back into per-function
     /// instances.  Every pair inside the group enters cooldown so the next
     /// observations cannot immediately re-fuse it (anti-flapping).
@@ -304,6 +413,68 @@ impl Observer {
             g.split_pending = false;
             g.retry_after_ms = now + self.policy.cooldown_ms;
         }
+    }
+
+    /// Merger feedback: `evicted` left the group and serves from its own
+    /// instance; the remainder keeps its feedback history under the shrunk
+    /// key.  Only the **evicted pairs** — (evicted, member) both ways —
+    /// enter cooldown, so the surviving group is unaffected and the evicted
+    /// function cannot be re-absorbed before the pressure verdict settles.
+    pub fn evict_succeeded(&self, functions: &[String], evicted: &str) {
+        let now = exec::now().as_millis_f64();
+        let mut s = self.state.borrow_mut();
+        let mut key: Vec<String> = functions.to_vec();
+        key.sort();
+        let old = s.groups.remove(&key);
+        let mut remaining = key;
+        remaining.retain(|f| f != evicted);
+        for member in &remaining {
+            for pair in [
+                (evicted.to_string(), member.clone()),
+                (member.clone(), evicted.to_string()),
+            ] {
+                s.requested.remove(&pair);
+                s.cooldown_until.insert(pair, now + self.policy.cooldown_ms);
+            }
+        }
+        if remaining.len() >= 2 {
+            let mut g = match old {
+                Some(old) => GroupFeedback::new(old.baseline_p95_ms, old.recorded_at_ms),
+                None => GroupFeedback::new(f64::NAN, now),
+            };
+            g.last_score = f64::NAN;
+            s.groups.insert(remaining, g);
+        }
+    }
+
+    /// Merger feedback: the eviction failed/aborted — the fused instance
+    /// keeps serving the whole group; retry after one cooldown.
+    pub fn evict_failed(&self, functions: &[String]) {
+        self.split_failed(functions);
+    }
+
+    /// Whether a (caller, callee) pair is currently inside a cooldown
+    /// window (test/property introspection).
+    pub fn pair_in_cooldown(&self, caller: &str, callee: &str) -> bool {
+        self.state
+            .borrow()
+            .cooldown_until
+            .get(&(caller.to_string(), callee.to_string()))
+            .map(|&until| exec::now().as_millis_f64() < until)
+            .unwrap_or(false)
+    }
+
+    /// Most recent cost-model objective for a fused group (NaN when
+    /// untracked or before the first cost-policy tick).
+    pub fn group_score(&self, functions: &[String]) -> f64 {
+        let mut key: Vec<String> = functions.to_vec();
+        key.sort();
+        self.state
+            .borrow()
+            .groups
+            .get(&key)
+            .map(|g| g.last_score)
+            .unwrap_or(f64::NAN)
     }
 
     /// Pre-fusion p95 baseline tracked for a fused group (test/report
@@ -369,6 +540,26 @@ mod tests {
             functions: functions.iter().map(|s| s.to_string()).collect(),
             ram_mb,
             window_p95_ms: p95,
+            window_s: 5.0,
+            per_fn: Vec::new(),
+        }
+    }
+
+    fn attr(function: &str, ram_mb: f64, p95_ms: f64, gb_seconds: f64) -> FnAttribution {
+        FnAttribution { function: function.into(), ram_mb, p95_ms, gb_seconds }
+    }
+
+    fn attributed_sample(
+        functions: &[&str],
+        ram_mb: f64,
+        per_fn: Vec<FnAttribution>,
+    ) -> GroupSample {
+        GroupSample {
+            functions: functions.iter().map(|s| s.to_string()).collect(),
+            ram_mb,
+            window_p95_ms: f64::NAN,
+            window_s: 5.0,
+            per_fn,
         }
     }
 
@@ -581,6 +772,150 @@ mod tests {
                 obs.feedback(&[sample(&["a", "b"], 500.0, 10_000.0)]);
             }
             assert!(rx.try_recv().is_none());
+        });
+    }
+
+    // -- cost-model policy ----------------------------------------------------
+
+    fn cost_policy(evict_threshold: f64) -> FusionParams {
+        let mut p = FusionParams::default_enabled();
+        p.split_policy = crate::config::SplitPolicyKind::CostModel;
+        p.split_hysteresis_windows = 2;
+        p.max_group_ram_mb = 200.0; // the cost model's RAM reference
+        p.cost.evict_threshold = evict_threshold;
+        p
+    }
+
+    #[test]
+    fn cost_policy_evicts_heaviest_from_large_group_after_hysteresis() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(cost_policy(1.0));
+            let group = ["a".to_string(), "b".to_string(), "c".to_string()];
+            obs.fusion_succeeded("a", "b", &group, 300.0);
+            // RAM term alone: 400 / 200 = 2.0 >= threshold 1.0
+            let heavy = || {
+                attributed_sample(
+                    &["a", "b", "c"],
+                    400.0,
+                    vec![
+                        attr("a", 50.0, f64::NAN, 0.1),
+                        attr("b", 300.0, f64::NAN, 2.0),
+                        attr("c", 50.0, f64::NAN, 0.1),
+                    ],
+                )
+            };
+            obs.feedback(&[heavy()]);
+            assert!(rx.try_recv().is_none(), "hysteresis must hold the first strike");
+            assert!(obs.group_score(&group) >= 1.0);
+            obs.feedback(&[heavy()]);
+            assert_eq!(
+                rx.try_recv(),
+                Some(FusionRequest::Evict {
+                    functions: vec!["a".into(), "b".into(), "c".into()],
+                    function: "b".into(),
+                    reason: SplitReason::CostModel,
+                })
+            );
+            // pending eviction suppresses duplicates
+            obs.feedback(&[heavy()]);
+            assert!(rx.try_recv().is_none());
+        });
+    }
+
+    #[test]
+    fn cost_policy_splits_pairs_whole() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(cost_policy(1.0));
+            obs.fusion_succeeded("a", "b", &["a".to_string(), "b".to_string()], 300.0);
+            let hot = || {
+                attributed_sample(
+                    &["a", "b"],
+                    400.0,
+                    vec![attr("a", 100.0, f64::NAN, 0.5), attr("b", 300.0, f64::NAN, 1.5)],
+                )
+            };
+            obs.feedback(&[hot()]);
+            obs.feedback(&[hot()]);
+            assert_eq!(
+                rx.try_recv(),
+                Some(FusionRequest::Split {
+                    functions: vec!["a".into(), "b".into()],
+                    reason: SplitReason::CostModel,
+                })
+            );
+        });
+    }
+
+    #[test]
+    fn cost_policy_below_threshold_never_fires() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(cost_policy(1_000.0));
+            obs.fusion_succeeded("a", "b", &["a".to_string(), "b".to_string()], 300.0);
+            for _ in 0..10 {
+                obs.feedback(&[sample(&["a", "b"], 400.0, f64::NAN)]);
+            }
+            assert!(rx.try_recv().is_none());
+        });
+    }
+
+    #[test]
+    fn evict_cools_only_the_evicted_pairs_and_keeps_remainder_tracked() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(cost_policy(1.0));
+            let group = ["a".to_string(), "b".to_string(), "c".to_string()];
+            obs.fusion_succeeded("a", "b", &group, 321.0);
+            obs.evict_succeeded(&group, "b");
+            // evicted pairs (both directions) are cooling down
+            assert!(obs.pair_in_cooldown("b", "a"));
+            assert!(obs.pair_in_cooldown("a", "b"));
+            assert!(obs.pair_in_cooldown("b", "c"));
+            assert!(obs.pair_in_cooldown("c", "b"));
+            // the surviving pair is NOT penalized
+            assert!(!obs.pair_in_cooldown("a", "c"));
+            assert!(!obs.pair_in_cooldown("c", "a"));
+            // the shrunk group keeps its baseline under the new key
+            assert_eq!(obs.group_baseline_p95(&["a".to_string(), "c".to_string()]), 321.0);
+            assert!(obs.group_baseline_p95(&group).is_nan(), "old key must be gone");
+            // re-observation of an evicted pair is blocked until cooldown ends
+            obs.observe_sync_call("a", "b");
+            obs.observe_sync_call("a", "b");
+            obs.observe_sync_call("a", "b");
+            assert!(rx.try_recv().is_none(), "evicted pair re-fused during cooldown");
+            crate::exec::sleep_ms(10_001.0).await;
+            obs.observe_sync_call("a", "b");
+            assert!(rx.try_recv().is_some());
+        });
+    }
+
+    #[test]
+    fn evict_failure_backs_off_like_split_failure() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(cost_policy(1.0));
+            let group = ["a".to_string(), "b".to_string(), "c".to_string()];
+            obs.fusion_succeeded("a", "b", &group, 300.0);
+            let hot = || {
+                attributed_sample(
+                    &["a", "b", "c"],
+                    400.0,
+                    vec![
+                        attr("a", 50.0, f64::NAN, 0.0),
+                        attr("b", 300.0, f64::NAN, 0.0),
+                        attr("c", 50.0, f64::NAN, 0.0),
+                    ],
+                )
+            };
+            obs.feedback(&[hot()]);
+            obs.feedback(&[hot()]);
+            assert!(matches!(rx.try_recv(), Some(FusionRequest::Evict { .. })));
+            obs.evict_failed(&group);
+            // still violating, but inside the retry backoff
+            obs.feedback(&[hot()]);
+            obs.feedback(&[hot()]);
+            assert!(rx.try_recv().is_none());
+            crate::exec::sleep_ms(10_001.0).await;
+            obs.feedback(&[hot()]);
+            obs.feedback(&[hot()]);
+            assert!(matches!(rx.try_recv(), Some(FusionRequest::Evict { .. })));
         });
     }
 

@@ -146,8 +146,10 @@ mod tests {
     #[test]
     fn swap_is_all_or_nothing() {
         let (rt, gw, _ia, ib) = setup();
-        let fused_img =
-            rt.register_image(FsManifest::function_code("ab", 1), vec![("a".into(), 9.0), ("b".into(), 9.0)]);
+        let fused_img = rt.register_image(
+            FsManifest::function_code("ab", 1),
+            vec![("a".into(), 9.0), ("b".into(), 9.0)],
+        );
         let fused = crate::exec::run_virtual({
             let rt = rt.clone();
             async move { rt.launch(fused_img).unwrap() }

@@ -154,6 +154,7 @@ impl Dispatcher {
             // instance allocation, *including* time blocked on sync calls —
             // the double-billing the paper's fusion eliminates.
             d.billing.record(BillingEvent {
+                t_ms: d.metrics.rel_now_ms(),
                 function,
                 duration_ms: exec::now().duration_since(bill_start).as_secs_f64() * 1e3,
                 alloc_gb: inst.alloc_mb() / 1024.0,
@@ -190,8 +191,13 @@ impl Dispatcher {
                 Some(body) => d.compute.run(body, &input)?,
                 None => d.compute.run("", &input)?, // orchestration-only fold
             };
-            exec::sleep_ms(upfront_ms + compute_ms + spec.busy_ms).await;
+            let self_ms = upfront_ms + compute_ms + spec.busy_ms;
+            exec::sleep_ms(self_ms).await;
             d.metrics.bump("invocations");
+            // per-function handler attribution: the self time (hop + compute
+            // + busy, no child waits) gives interior functions of a fused
+            // group their own latency series for the defusion cost model
+            d.metrics.record_fn_latency(d.metrics.rel_now_ms(), function.clone(), self_ms);
 
             // --- outbound calls ------------------------------------------------
             // Sync calls are issued concurrently and joined in spec order

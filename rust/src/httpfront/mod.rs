@@ -49,7 +49,12 @@ enum FrontReply {
 
 /// Serve `app` on `config` at `127.0.0.1:port`.  Blocks until
 /// `POST /shutdown` (or `max_requests` invocations, if set).
-pub fn serve(app: AppSpec, config: PlatformConfig, port: u16, max_requests: Option<u64>) -> Result<()> {
+pub fn serve(
+    app: AppSpec,
+    config: PlatformConfig,
+    port: u16,
+    max_requests: Option<u64>,
+) -> Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", port))?;
     let actual_port = listener.local_addr()?.port();
     eprintln!("provuse: serving on http://127.0.0.1:{actual_port}");

@@ -13,7 +13,7 @@
 //! provuse dump-config         print platform calibration as JSON
 //! ```
 
-use provuse::config::{ComputeMode, PlatformConfig, PlatformKind, WorkloadConfig};
+use provuse::config::{ComputeMode, PlatformConfig, PlatformKind, SplitPolicyKind, WorkloadConfig};
 use provuse::error::Result;
 use provuse::util::args::Args;
 use provuse::{apps, experiments, runtime};
@@ -68,6 +68,16 @@ fn apply_fusion_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
     f.split_p95_regression = args.f64_or("split-regression", f.split_p95_regression)?;
     f.split_hysteresis_windows = args.u32_or("hysteresis", f.split_hysteresis_windows)?;
     f.feedback_interval_ms = args.f64_or("feedback-interval-ms", f.feedback_interval_ms)?;
+    // `--cost-model` alone switches the controller objective; it also
+    // accepts an explicit value (`--cost-model threshold` to force PR 1
+    // semantics from a wrapper script)
+    if let Some(policy) = args.flag("cost-model") {
+        f.split_policy = SplitPolicyKind::parse(policy)?;
+    }
+    f.cost.evict_threshold = args.f64_or("evict-threshold", f.cost.evict_threshold)?;
+    f.cost.w_latency = args.f64_or("w-latency", f.cost.w_latency)?;
+    f.cost.w_ram = args.f64_or("w-ram", f.cost.w_ram)?;
+    f.cost.w_gbs = args.f64_or("w-gbs", f.cost.w_gbs)?;
     if args.has("no-defusion") {
         f.defusion = false;
     }
@@ -95,11 +105,8 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("figure7") => {
             let out = std::path::PathBuf::from(args.str_or("out", "results/fig7"));
-            let mut p = if args.has("smoke") {
-                experiments::fig7::Fig7Params::smoke()
-            } else {
-                experiments::fig7::Fig7Params::paper_scale()
-            };
+            let app = experiments::fig7::Fig7App::parse(&args.str_or("app", "chain"))?;
+            let mut p = experiments::fig7::Fig7Params::for_app(app, args.has("smoke"));
             p.compute = compute_from(args);
             p.seed = args.u64_or("seed", p.seed)?;
             p.calm_rps = args.f64_or("calm-rps", p.calm_rps)?;
@@ -112,11 +119,15 @@ fn dispatch(args: &Args) -> Result<()> {
                 args.f64_or("feedback-interval-ms", p.feedback_interval_ms)?;
             p.hysteresis = args.u32_or("hysteresis", p.hysteresis)?;
             p.min_observations = args.u32_or("min-observations", p.min_observations)?;
-            for flag in ["no-defusion", "no-transitive", "max-group-size"] {
+            p.evict_threshold = args.f64_or("evict-threshold", p.evict_threshold)?;
+            p.w_latency = args.f64_or("w-latency", p.w_latency)?;
+            p.w_ram = args.f64_or("w-ram", p.w_ram)?;
+            p.w_gbs = args.f64_or("w-gbs", p.w_gbs)?;
+            for flag in ["no-defusion", "no-transitive", "max-group-size", "cost-model"] {
                 if args.has(flag) {
                     return Err(provuse::Error::Config(format!(
-                        "--{flag} is not applicable to figure7 (the scenario needs \
-                         defusion + transitive growth); use `experiment` instead"
+                        "--{flag} is not applicable to figure7 (each scenario fixes its \
+                         own policy); use `experiment` instead"
                     )));
                 }
             }
@@ -258,7 +269,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  commands:\n\
                  \x20 figure5              paper Fig. 5 (IOT/tinyFaaS latency series)\n\
                  \x20 figure6              paper Fig. 6 + §5.2 latency table\n\
-                 \x20 figure7 [--smoke]    ours: feedback loop (fuse, RAM-cap split, re-fuse)\n\
+                 \x20 figure7 [--smoke]    ours: feedback loop; --app chain (RAM-cap split,\n\
+                 \x20   [--app chain|iot]  re-fuse) or --app iot (cost-model partial defusion:\n\
+                 \x20                      asymmetric pressure evicts the heaviest function)\n\
                  \x20 ram-table            §5.2 RAM reductions\n\
                  \x20 cost-table           TAB-COST: double-billing elimination in $\n\
                  \x20 sweep --dim D        ablations (rate|hop|policy|depth|arrival)\n\
@@ -270,7 +283,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  common flags: --requests N --rate R --seed S --live --no-compute --out DIR\n\
                  policy flags: --min-observations N --cooldown-ms MS --max-group-size N\n\
                  \x20             --max-group-ram MB --split-regression F --hysteresis N\n\
-                 \x20             --feedback-interval-ms MS --no-defusion --no-transitive"
+                 \x20             --feedback-interval-ms MS --no-defusion --no-transitive\n\
+                 cost model  : --cost-model [threshold|cost] --evict-threshold F\n\
+                 \x20             --w-latency F --w-ram F --w-gbs F"
             );
             Ok(())
         }

@@ -78,6 +78,13 @@ impl Merger {
                     let _ = err;
                 }
             }
+            FusionRequest::Evict { functions, function, reason } => {
+                if let Err(err) = self.handle_evict(&functions, &function, reason).await {
+                    self.ctx.metrics.bump("evict_aborted");
+                    self.ctx.observer.evict_failed(&functions);
+                    let _ = err;
+                }
+            }
         }
     }
 
@@ -95,11 +102,10 @@ impl Merger {
             return Ok(());
         }
         let policy = ctx.observer.policy();
-        if !policy.transitive && (a.functions().len() > 1 || b.functions().len() > 1) {
+        if !policy.transitive && (a.fn_count() > 1 || b.fn_count() > 1) {
             return Err(Error::FusionAborted("transitive growth disabled".into()));
         }
-        let group_size = a.functions().len() + b.functions().len();
-        admit_group(policy, group_size)?;
+        admit_group(policy, a.fn_count() + b.fn_count())?;
 
         let t_start = exec::now();
 
@@ -111,8 +117,8 @@ impl Merger {
         debug_assert!(fsunion::union_preserves(&parts, &merged));
 
         // 3. build the fused image (charged build latency; may fail)
-        let mut functions = a.functions().to_vec();
-        functions.extend(b.functions().iter().cloned());
+        let mut functions = a.functions();
+        functions.extend(b.functions());
         let image = ctx.containers.build_image(merged, functions.clone()).await?;
 
         // 4. deploy (platform-flavored: direct or reconciler-gated)

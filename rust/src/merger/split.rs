@@ -10,6 +10,12 @@
 //! Failure at any stage rolls back: the never-routed replacements are torn
 //! down, the fused instance keeps serving, and the group re-enters cooldown
 //! (`Observer::split_failed`), so a flaky split can never drop a request.
+//!
+//! The **partial-split** pipeline ([`Merger::handle_evict`]) is the same
+//! machinery scoped to one member: redeploy only the evicted function's
+//! original image, health-gate it, atomically re-route just its edges, and
+//! shrink the fused instance in place (the remainder keeps serving and
+//! never stops).  Only the evicted pairs enter cooldown.
 
 use std::rc::Rc;
 
@@ -17,27 +23,21 @@ use crate::containerd::Instance;
 use crate::error::{Error, Result};
 use crate::exec;
 use crate::fusion::SplitReason;
-use crate::metrics::SplitEvent;
+use crate::metrics::{EvictEvent, SplitEvent};
 
 use super::Merger;
 
 impl Merger {
-    /// One split. Public for targeted tests.
-    ///
-    /// `functions` is the sorted function set the controller sampled; the
-    /// split is aborted as stale when the live topology no longer matches
-    /// (e.g. a racing transitive merge grew the group in the meantime).
-    pub async fn handle_split(&self, functions: &[String], reason: SplitReason) -> Result<()> {
-        let ctx = &self.ctx;
-        ctx.metrics.bump("split_requests");
-
+    /// Resolve the live fused instance hosting the sampled `functions` and
+    /// verify the sampled membership is still the live topology: the
+    /// instance's active set equals the (sorted) sample and every member
+    /// still routes to it.  Shared staleness gate of the split and evict
+    /// pipelines; returns `(fused instance, sorted membership)`.
+    fn resolve_live_group(&self, functions: &[String]) -> Result<(Rc<Instance>, Vec<String>)> {
         if functions.len() < 2 {
             return Err(Error::SplitAborted("group has fewer than two functions".into()));
         }
-
-        // 1. resolve the fused instance and check the sampled membership is
-        //    still the live topology
-        let fused = ctx.gateway.resolve(&functions[0])?;
+        let fused = self.ctx.gateway.resolve(&functions[0])?;
         let mut hosted: Vec<String> =
             fused.functions().iter().map(|(n, _)| n.clone()).collect();
         hosted.sort();
@@ -52,13 +52,28 @@ impl Merger {
             )));
         }
         for f in &expected {
-            if ctx.gateway.resolve(f)?.id() != fused.id() {
+            if self.ctx.gateway.resolve(f)?.id() != fused.id() {
                 return Err(Error::SplitAborted(format!(
                     "stale group: `{f}` no longer routed to instance {}",
                     fused.id()
                 )));
             }
         }
+        Ok((fused, expected))
+    }
+
+    /// One split. Public for targeted tests.
+    ///
+    /// `functions` is the sorted function set the controller sampled; the
+    /// split is aborted as stale when the live topology no longer matches
+    /// (e.g. a racing transitive merge grew the group in the meantime).
+    pub async fn handle_split(&self, functions: &[String], reason: SplitReason) -> Result<()> {
+        let ctx = &self.ctx;
+        ctx.metrics.bump("split_requests");
+
+        // 1. resolve the fused instance and check the sampled membership is
+        //    still the live topology
+        let (fused, expected) = self.resolve_live_group(functions)?;
 
         let t_start = exec::now();
 
@@ -87,6 +102,110 @@ impl Merger {
         // 4. drain + terminate the fused instance off the merge loop
         fused.begin_drain()?;
         self.reclaim_when_drained(fused);
+        Ok(())
+    }
+
+    /// One partial split. Public for targeted tests.
+    ///
+    /// `functions` is the sorted group the controller sampled and
+    /// `function` the member it chose to shed.  Stale topology (a racing
+    /// transitive merge, a function already re-routed) aborts before any
+    /// resource is committed; a failed redeploy rolls back with the fused
+    /// instance untouched, so the group is restored intact and no request
+    /// is ever dropped.
+    pub async fn handle_evict(
+        &self,
+        functions: &[String],
+        function: &str,
+        reason: SplitReason,
+    ) -> Result<()> {
+        let ctx = &self.ctx;
+        ctx.metrics.bump("evict_requests");
+
+        if !functions.iter().any(|f| f == function) {
+            return Err(Error::SplitAborted(format!(
+                "`{function}` is not a member of [{}]",
+                functions.join("+")
+            )));
+        }
+
+        // 1. resolve the fused instance and check the sampled membership is
+        //    still the live topology
+        let (fused, expected) = self.resolve_live_group(functions)?;
+
+        let t_start = exec::now();
+
+        // 2. redeploy only the evicted function from its retained original
+        //    image and health-gate it before any traffic moves
+        let image = match ctx.originals.get(function) {
+            Some(id) => *id,
+            None => {
+                return Err(Error::SplitAborted(format!(
+                    "no retained original image for `{function}`"
+                )))
+            }
+        };
+        let fresh = ctx.deployer.launch(image).await?;
+        self.await_healthy(&fresh).await.inspect_err(|_| {
+            ctx.metrics.bump("evict_health_timeouts");
+            self.rollback(std::slice::from_ref(&fresh));
+        })?;
+
+        // 3. the launch + health gate awaited: re-check the topology so a
+        //    racing pipeline cannot have invalidated the plan while we
+        //    waited (nothing is committed yet — abort tears down only the
+        //    never-routed replacement)
+        for f in &expected {
+            let routed = match ctx.gateway.resolve(f) {
+                Ok(inst) => inst,
+                Err(err) => {
+                    self.rollback(std::slice::from_ref(&fresh));
+                    return Err(err);
+                }
+            };
+            if routed.id() != fused.id() {
+                self.rollback(std::slice::from_ref(&fresh));
+                return Err(Error::SplitAborted(format!(
+                    "group changed during redeploy: `{f}` moved off instance {}",
+                    fused.id()
+                )));
+            }
+        }
+        if !fused.hosts(function) {
+            self.rollback(std::slice::from_ref(&fresh));
+            return Err(Error::SplitAborted(format!(
+                "group changed during redeploy: instance {} no longer hosts `{function}`",
+                fused.id()
+            )));
+        }
+
+        // 4. atomic cutover of just the evicted function's route
+        ctx.gateway
+            .swap_routes_multi(&[(function.to_string(), Rc::clone(&fresh))])
+            .inspect_err(|_| self.rollback(std::slice::from_ref(&fresh)))?;
+
+        // 5. shrink the fused group in place: the instance keeps serving the
+        //    remaining members and unloads the evicted function's code (its
+        //    in-flight requests finish on the old instance — zero drops).
+        //    Should the shrink fail despite the re-check above, undo the
+        //    cutover so the topology never ends with two active hosts.
+        if let Err(err) = fused.evict_function(function) {
+            let _ = ctx
+                .gateway
+                .swap_routes_multi(&[(function.to_string(), Rc::clone(&fused))]);
+            self.rollback(std::slice::from_ref(&fresh));
+            return Err(err);
+        }
+
+        ctx.metrics.record_evict(EvictEvent {
+            t_ms: ctx.metrics.rel_now_ms(),
+            group: expected.clone(),
+            function: function.to_string(),
+            duration_ms: exec::now().duration_since(t_start).as_secs_f64() * 1e3,
+            reason,
+        });
+        ctx.metrics.bump("evictions_completed");
+        ctx.observer.evict_succeeded(&expected, function);
         Ok(())
     }
 

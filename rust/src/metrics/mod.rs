@@ -70,6 +70,49 @@ pub struct GroupRamSample {
     pub ram_mb: f64,
 }
 
+/// One per-function handler latency observation, emitted by the Function
+/// Handler on every invocation (remote or inlined).  This is the signal
+/// that gives *interior* functions of a fused group their own latency
+/// series — the entry-route e2e p95 alone cannot attribute blame.
+#[derive(Debug, Clone)]
+pub struct FnSample {
+    /// virtual time the handler finished the function body (ms since epoch)
+    pub t_ms: f64,
+    pub function: String,
+    /// handler self time: dispatch/inline charge + compute + busy time,
+    /// excluding time blocked on outbound calls (ms)
+    pub handler_ms: f64,
+}
+
+/// One per-function RAM attribution inside a fused instance (code footprint
+/// plus an equal share of the base runtime + in-flight working sets),
+/// recorded by the controller every feedback tick.
+#[derive(Debug, Clone)]
+pub struct FnRamSample {
+    pub t_ms: f64,
+    /// `+`-joined sorted names of the hosting group
+    pub group: String,
+    pub function: String,
+    /// attributed RAM (MiB); group members sum to the instance's RAM
+    pub ram_mb: f64,
+}
+
+/// One completed partial split: a single function evicted from a fused
+/// group onto its own redeployed instance while the remainder stays fused.
+#[derive(Debug, Clone)]
+pub struct EvictEvent {
+    /// virtual time the evicted function's route was cut over (ms)
+    pub t_ms: f64,
+    /// group membership before the eviction (sorted)
+    pub group: Vec<String>,
+    /// the function that left the group
+    pub function: String,
+    /// wall (virtual) duration of the evict pipeline (ms)
+    pub duration_ms: f64,
+    /// which policy violation triggered the eviction
+    pub reason: SplitReason,
+}
+
 /// Shared, single-threaded metrics sink (cheap `Rc` handle).
 #[derive(Clone, Default)]
 pub struct Recorder {
@@ -81,8 +124,11 @@ struct RecorderInner {
     latencies: RefCell<Vec<LatencySample>>,
     ram: RefCell<Vec<RamSample>>,
     group_ram: RefCell<Vec<GroupRamSample>>,
+    fn_latencies: RefCell<Vec<FnSample>>,
+    fn_ram: RefCell<Vec<FnRamSample>>,
     merges: RefCell<Vec<MergeEvent>>,
     splits: RefCell<Vec<SplitEvent>>,
+    evicts: RefCell<Vec<EvictEvent>>,
     counters: RefCell<BTreeMap<&'static str, u64>>,
     /// absolute virtual-time (ms) all recorded timestamps are relative to
     epoch_ms: std::cell::Cell<f64>,
@@ -117,12 +163,24 @@ impl Recorder {
         self.inner.group_ram.borrow_mut().push(GroupRamSample { t_ms, group, ram_mb });
     }
 
+    pub fn record_fn_latency(&self, t_ms: f64, function: String, handler_ms: f64) {
+        self.inner.fn_latencies.borrow_mut().push(FnSample { t_ms, function, handler_ms });
+    }
+
+    pub fn record_fn_ram(&self, t_ms: f64, group: String, function: String, ram_mb: f64) {
+        self.inner.fn_ram.borrow_mut().push(FnRamSample { t_ms, group, function, ram_mb });
+    }
+
     pub fn record_merge(&self, event: MergeEvent) {
         self.inner.merges.borrow_mut().push(event);
     }
 
     pub fn record_split(&self, event: SplitEvent) {
         self.inner.splits.borrow_mut().push(event);
+    }
+
+    pub fn record_evict(&self, event: EvictEvent) {
+        self.inner.evicts.borrow_mut().push(event);
     }
 
     pub fn bump(&self, name: &'static str) {
@@ -151,8 +209,42 @@ impl Recorder {
         self.inner.splits.borrow().clone()
     }
 
+    pub fn evicts(&self) -> Vec<EvictEvent> {
+        self.inner.evicts.borrow().clone()
+    }
+
     pub fn group_ram_series(&self) -> Vec<GroupRamSample> {
         self.inner.group_ram.borrow().clone()
+    }
+
+    pub fn fn_latency_series(&self) -> Vec<FnSample> {
+        self.inner.fn_latencies.borrow().clone()
+    }
+
+    pub fn fn_ram_series(&self) -> Vec<FnRamSample> {
+        self.inner.fn_ram.borrow().clone()
+    }
+
+    /// p95 of one function's handler latencies over `[from_ms, to_ms)`, or
+    /// NaN when the window holds fewer than `min_n` samples — the per-route
+    /// signal the cost model attributes blame with.
+    ///
+    /// `fn_latencies` is appended at completion time, so it is sorted by
+    /// `t_ms`; a binary search bounds the controller's per-tick work to the
+    /// trailing window instead of the whole run's history.
+    pub fn fn_p95_window(&self, function: &str, from_ms: f64, to_ms: f64, min_n: usize) -> f64 {
+        let borrowed = self.inner.fn_latencies.borrow();
+        let series: &[FnSample] = &borrowed;
+        let start = series.partition_point(|s| s.t_ms < from_ms);
+        let q = Quantiles::from_samples(
+            series[start..]
+                .iter()
+                .take_while(|s| s.t_ms < to_ms)
+                .filter(|s| s.function == function)
+                .map(|s| s.handler_ms)
+                .collect(),
+        );
+        if q.len() >= min_n { q.p95() } else { f64::NAN }
     }
 
     /// RAM attribution samples of one fused group (`+`-joined sorted names).
@@ -293,6 +385,27 @@ impl Recorder {
         }
         out
     }
+
+    /// CSV export of per-function handler latencies (`t_ms,function,handler_ms`).
+    pub fn fn_latency_csv(&self) -> String {
+        let mut out = String::from("t_ms,function,handler_ms\n");
+        for s in self.inner.fn_latencies.borrow().iter() {
+            out.push_str(&format!("{:.3},{},{:.3}\n", s.t_ms, s.function, s.handler_ms));
+        }
+        out
+    }
+
+    /// CSV export of per-function RAM attribution (`t_ms,group,function,ram_mb`).
+    pub fn fn_ram_csv(&self) -> String {
+        let mut out = String::from("t_ms,group,function,ram_mb\n");
+        for s in self.inner.fn_ram.borrow().iter() {
+            out.push_str(&format!(
+                "{:.3},{},{},{:.3}\n",
+                s.t_ms, s.group, s.function, s.ram_mb
+            ));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -339,7 +452,11 @@ mod tests {
         let r = Recorder::new();
         r.record_latency(1.0, 2.0);
         r.record_ram(1.0, 3.0, 1);
-        r.record_merge(MergeEvent { t_ms: 5.0, functions: vec!["a".into(), "b".into()], duration_ms: 7.0 });
+        r.record_merge(MergeEvent {
+            t_ms: 5.0,
+            functions: vec!["a".into(), "b".into()],
+            duration_ms: 7.0,
+        });
         assert!(r.latency_csv().starts_with("t_ms,latency_ms\n1.000,2.000"));
         assert!(r.ram_csv().contains("1.000,3.000,1"));
         assert!(r.merges_csv().contains("a+b"));
@@ -363,6 +480,42 @@ mod tests {
         assert_eq!(r.group_ram_series().len(), 2);
         assert_eq!(r.group_ram_for("a+b").len(), 1);
         assert!(r.group_ram_csv().contains("4.000,a+b,120.500"));
+    }
+
+    #[test]
+    fn fn_attribution_series_and_windows() {
+        let r = Recorder::new();
+        for i in 0..10 {
+            r.record_fn_latency(i as f64 * 100.0, "hot".into(), 200.0);
+            r.record_fn_latency(i as f64 * 100.0, "cool".into(), 10.0);
+        }
+        r.record_fn_ram(50.0, "cool+hot".into(), "hot".into(), 120.0);
+        assert_eq!(r.fn_latency_series().len(), 20);
+        assert_eq!(r.fn_ram_series().len(), 1);
+        // per-function windows are independent
+        assert_eq!(r.fn_p95_window("hot", 0.0, 1_000.0, 5), 200.0);
+        assert_eq!(r.fn_p95_window("cool", 0.0, 1_000.0, 5), 10.0);
+        // too few samples in a narrow window -> NaN
+        assert!(r.fn_p95_window("hot", 0.0, 250.0, 5).is_nan());
+        assert!(r.fn_p95_window("ghost", 0.0, 1_000.0, 1).is_nan());
+        assert!(r.fn_latency_csv().contains("hot,200.000"));
+        assert!(r.fn_ram_csv().contains("cool+hot,hot,120.000"));
+    }
+
+    #[test]
+    fn evict_events_recorded() {
+        let r = Recorder::new();
+        r.record_evict(EvictEvent {
+            t_ms: 12.0,
+            group: vec!["a".into(), "b".into(), "c".into()],
+            function: "b".into(),
+            duration_ms: 3.0,
+            reason: SplitReason::CostModel,
+        });
+        assert_eq!(r.evicts().len(), 1);
+        assert_eq!(r.evicts()[0].function, "b");
+        assert_eq!(r.evicts()[0].reason, SplitReason::CostModel);
+        assert_eq!(r.evicts()[0].group.join("+"), "a+b+c");
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::mpsc;
 use crate::exec::SimInstant;
-use crate::fusion::{GroupSample, Observer};
+use crate::fusion::{FnAttribution, GroupSample, Observer};
 use crate::gateway::Gateway;
 use crate::handler::Dispatcher;
 use crate::merger::{Merger, MergerCtx};
@@ -34,11 +34,70 @@ pub fn fused_groups_of(gateway: &Gateway) -> Vec<Rc<Instance>> {
     let mut seen = HashSet::new();
     let mut out = Vec::new();
     for (_, inst) in gateway.snapshot() {
-        if inst.functions().len() >= 2 && seen.insert(inst.id()) {
+        if inst.fn_count() >= 2 && seen.insert(inst.id()) {
             out.push(inst);
         }
     }
     out
+}
+
+/// Check the routing invariants any quiescent topology must satisfy, no
+/// matter what Fuse/Split/Evict history produced it:
+///
+/// 1. every app function has exactly one route, to a **live** instance
+///    that actively hosts it;
+/// 2. no function is served by two instances — the live instances' active
+///    hosting sets are pairwise disjoint;
+/// 3. the routing table is a bijection onto the live instances: every live
+///    instance is routed to and every routed instance is live.
+///
+/// Returns a description of the first violation (the property suite's
+/// and mutation checks' shared oracle).  Call only after drains settle —
+/// mid-pipeline topologies legitimately hold originals that are still
+/// draining.
+pub fn routing_invariants(platform: &Platform) -> std::result::Result<(), String> {
+    let snapshot = platform.gateway.snapshot();
+    for f in platform.app.functions() {
+        if !snapshot.iter().any(|(name, _)| name == &f.name) {
+            return Err(format!("function `{}` has no route", f.name));
+        }
+    }
+    for (function, inst) in &snapshot {
+        if !inst.state().is_live() {
+            return Err(format!("`{function}` routed to dead instance {}", inst.id()));
+        }
+        if !inst.hosts(function) {
+            return Err(format!(
+                "`{function}` routed to instance {} which does not actively host it",
+                inst.id()
+            ));
+        }
+    }
+    let mut owner: BTreeMap<String, u64> = BTreeMap::new();
+    let mut seen = HashSet::new();
+    for (_, inst) in &snapshot {
+        if !seen.insert(inst.id()) {
+            continue;
+        }
+        for (f, _) in inst.functions() {
+            if let Some(prev) = owner.insert(f.clone(), inst.id().0) {
+                if prev != inst.id().0 {
+                    return Err(format!(
+                        "`{f}` actively hosted by two live instances ({prev} and {})",
+                        inst.id().0
+                    ));
+                }
+            }
+        }
+    }
+    let live = platform.containers.live_count();
+    let routed = platform.gateway.distinct_instances();
+    if routed != live {
+        return Err(format!(
+            "routing table covers {routed} distinct instances but {live} are live"
+        ));
+    }
+    Ok(())
 }
 
 /// A running FaaS platform hosting one application.
@@ -151,10 +210,11 @@ impl Platform {
             });
         }
 
-        // Defusion controller: every feedback interval, attribute RAM to
-        // each live fused group and hand the samples (plus the trailing
-        // latency window's p95) to the Observer, which closes the loop by
-        // emitting Split requests for regressing groups.
+        // Defusion controller: every feedback interval, attribute RAM (group
+        // and per-function), per-function handler p95s, and the billing
+        // ledger's trailing window to each live fused group, then hand the
+        // samples to the Observer, which closes the loop by emitting
+        // Split/Evict requests for regressing groups.
         if config.fusion.enabled
             && config.fusion.defusion
             && config.fusion.feedback_interval_ms > 0.0
@@ -163,6 +223,8 @@ impl Platform {
             let gateway = gateway.clone();
             let metrics = metrics.clone();
             let observer = Rc::clone(&observer);
+            let billing = billing.clone();
+            let entry = app.entry.clone();
             let interval = config.fusion.feedback_interval_ms;
             exec::spawn(async move {
                 while !stop.get() {
@@ -171,19 +233,56 @@ impl Platform {
                         break;
                     }
                     let t = metrics.rel_now_ms();
+                    let from = t - interval;
                     let mut samples = Vec::new();
                     for inst in fused_groups_of(&gateway) {
+                        let hosted = inst.functions();
                         let mut functions: Vec<String> =
-                            inst.functions().iter().map(|(n, _)| n.clone()).collect();
+                            hosted.iter().map(|(n, _)| n.clone()).collect();
                         functions.sort();
+                        let group_key = functions.join("+");
                         let ram_mb = inst.ram_mb();
-                        metrics.record_group_ram(t, functions.join("+"), ram_mb);
-                        let window_p95_ms = metrics.p95_window(
-                            t - interval,
-                            t,
-                            crate::metrics::MIN_WINDOW_SAMPLES,
-                        );
-                        samples.push(GroupSample { functions, ram_mb, window_p95_ms });
+                        metrics.record_group_ram(t, group_key.clone(), ram_mb);
+                        // The e2e latency window is an *entry-route* signal:
+                        // attributing it to every group would let one group's
+                        // regression raise every other group's score (the
+                        // blunt-signal gap this controller exists to close).
+                        // Interior groups get NaN — their latency signal is
+                        // the per-function handler series below.
+                        let window_p95_ms = if functions.iter().any(|f| *f == entry) {
+                            metrics.p95_window(from, t, crate::metrics::MIN_WINDOW_SAMPLES)
+                        } else {
+                            f64::NAN
+                        };
+                        // per-function attribution: code footprint + an
+                        // equal share of everything the code does not
+                        // explain (base runtime + in-flight working sets),
+                        // so the members sum to the instance's RAM
+                        let code_total: f64 = hosted.iter().map(|(_, mb)| mb).sum();
+                        let overhead = (ram_mb - code_total).max(0.0) / hosted.len() as f64;
+                        let mut per_fn = Vec::with_capacity(hosted.len());
+                        for (name, code_mb) in &hosted {
+                            let fn_ram = code_mb + overhead;
+                            metrics.record_fn_ram(t, group_key.clone(), name.clone(), fn_ram);
+                            per_fn.push(FnAttribution {
+                                function: name.clone(),
+                                ram_mb: fn_ram,
+                                p95_ms: metrics.fn_p95_window(
+                                    name,
+                                    from,
+                                    t,
+                                    crate::metrics::MIN_WINDOW_SAMPLES,
+                                ),
+                                gb_seconds: billing.gb_seconds_window(name, from, t),
+                            });
+                        }
+                        samples.push(GroupSample {
+                            functions,
+                            ram_mb,
+                            window_p95_ms,
+                            window_s: interval / 1e3,
+                            per_fn,
+                        });
                     }
                     if !samples.is_empty() {
                         observer.feedback(&samples);
@@ -335,8 +434,30 @@ mod tests {
             let series = p.metrics.group_ram_for("s0+s1");
             assert!(!series.is_empty(), "no group RAM attribution recorded");
             assert!(series.iter().all(|s| s.ram_mb > 0.0));
-            // healthy group under default policy: no splits
+            // ... and to each member: per-function shares sum to the group
+            let fn_ram = p.metrics.fn_ram_series();
+            assert!(!fn_ram.is_empty(), "no per-function RAM attribution recorded");
+            let t0 = series[0].t_ms;
+            let share_sum: f64 = fn_ram
+                .iter()
+                .filter(|s| s.t_ms == t0 && s.group == "s0+s1")
+                .map(|s| s.ram_mb)
+                .sum();
+            assert!(
+                (share_sum - series[0].ram_mb).abs() < 1e-9,
+                "per-function shares {share_sum} != group RAM {}",
+                series[0].ram_mb
+            );
+            // the handler emitted a latency sample per function invocation
+            let fn_lat = p.metrics.fn_latency_series();
+            assert!(fn_lat.iter().any(|s| s.function == "s0"));
+            assert!(fn_lat.iter().any(|s| s.function == "s1"));
+            assert!(fn_lat.iter().all(|s| s.handler_ms > 0.0));
+            // healthy group under default policy: no splits, no evictions
             assert!(p.metrics.splits().is_empty());
+            assert!(p.metrics.evicts().is_empty());
+            // the quiescent topology satisfies the routing invariants
+            routing_invariants(&p).unwrap();
             p.shutdown();
         });
     }

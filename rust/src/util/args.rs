@@ -135,4 +135,14 @@ mod tests {
         assert_eq!(a.u32_or("hysteresis", 1).unwrap(), 4);
         assert_eq!(a.u32_or("absent", 2).unwrap(), 2);
     }
+
+    #[test]
+    fn valueless_flag_reads_as_true_for_policy_switches() {
+        // `--cost-model` alone must surface as the value "true", which
+        // `config::SplitPolicyKind::parse` accepts as the CostModel policy
+        let a = parse("cmd --cost-model");
+        assert_eq!(a.flag("cost-model"), Some("true"));
+        let b = parse("cmd --cost-model threshold");
+        assert_eq!(b.flag("cost-model"), Some("threshold"));
+    }
 }

@@ -28,6 +28,14 @@ impl Gen {
         Gen { rng: Rng::new(seed), scale }
     }
 
+    /// Stand-alone full-scale generator from an explicit seed — for
+    /// properties that must move value generation into a `'static` future
+    /// (derive the seed from the enclosing case's `Gen` so replays stay
+    /// deterministic).
+    pub fn replay(seed: u64) -> Self {
+        Gen::new(seed, 1.0)
+    }
+
     /// Integer in `[lo, hi]` (inclusive); range shrinks toward `lo`.
     pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
         assert!(lo <= hi);
@@ -56,6 +64,35 @@ impl Gen {
         &items[self.rng.below(items.len() as u64) as usize]
     }
 
+    /// Pick an index with probability proportional to `weights[i]` — the
+    /// op-mix selector for interleaving properties.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        assert!(!weights.is_empty());
+        let total: f64 = weights.iter().filter(|w| **w > 0.0).sum();
+        if total <= 0.0 {
+            return 0;
+        }
+        let mut x = self.rng.range_f64(0.0, total);
+        for (i, w) in weights.iter().enumerate() {
+            if *w <= 0.0 {
+                continue;
+            }
+            if x < *w {
+                return i;
+            }
+            x -= *w;
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle (deterministic per seed).
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.rng.below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+
     /// Vector of values from a per-element closure; length in `[0, max_len]`.
     pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
         let n = self.usize(0, max_len);
@@ -77,7 +114,10 @@ impl Gen {
 }
 
 /// Run `prop` over `cases` seeded cases; panics with the failing seed.
-/// Honors `PROP_SEED` (replay one case) and `PROP_CASES` env overrides.
+/// Honors `PROP_SEED` (replay one case), `PROP_CASES` (case count), and
+/// `PROP_SALT` (entropy mixed into every case seed, so scheduled CI runs
+/// explore *new* cases instead of replaying the same deterministic set;
+/// a reported `PROP_SEED` still replays exactly regardless of salt).
 pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
     if let Ok(seed) = std::env::var("PROP_SEED") {
         let seed: u64 = seed.parse().expect("PROP_SEED must be a u64");
@@ -89,7 +129,11 @@ pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUn
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(cases);
-    let base = fnv1a(name.as_bytes());
+    let salt: u64 = std::env::var("PROP_SALT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let base = fnv1a(name.as_bytes()) ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
     for i in 0..cases {
         let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
         let result = std::panic::catch_unwind(|| {
@@ -150,6 +194,31 @@ mod tests {
         check("always fails", 8, |g| {
             let v = g.int(0, 10);
             assert!(v > 100, "v={v}");
+        });
+    }
+
+    #[test]
+    fn weighted_respects_zero_and_dominant_weights() {
+        check("weighted picks", 64, |g| {
+            // a zero-weight arm is never picked
+            for _ in 0..50 {
+                let i = g.weighted(&[1.0, 0.0, 3.0]);
+                assert_ne!(i, 1);
+                assert!(i < 3);
+            }
+            // a single positive arm is always picked
+            assert_eq!(g.weighted(&[0.0, 5.0, 0.0]), 1);
+        });
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        check("shuffle permutes", 64, |g| {
+            let mut v: Vec<i64> = (0..20).collect();
+            g.shuffle(&mut v);
+            let mut sorted = v.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..20).collect::<Vec<i64>>());
         });
     }
 

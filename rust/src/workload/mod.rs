@@ -68,6 +68,21 @@ pub async fn run_with_arrival(
     cfg: WorkloadConfig,
     arrival: Arrival,
 ) -> Result<WorkloadReport> {
+    run_targeted(platform, cfg, arrival, None).await
+}
+
+/// Like [`run_with_arrival`], but aimed at an explicit `target` function
+/// instead of the app's entry — the lever for asymmetric per-route
+/// pressure (e.g. hammering one interior member of a fused group).
+pub async fn run_targeted(
+    platform: Rc<Platform>,
+    cfg: WorkloadConfig,
+    arrival: Arrival,
+    target: Option<&str>,
+) -> Result<WorkloadReport> {
+    let function: Rc<String> = Rc::new(
+        target.map(str::to_string).unwrap_or_else(|| platform.app.entry.clone()),
+    );
     let start = exec::now();
     let payload_len = platform.payload_len();
     let ok = Rc::new(RefCell::new(0u64));
@@ -86,6 +101,7 @@ pub async fn run_with_arrival(
 
         let payload = request_payload(cfg.seed, i, payload_len);
         let platform = Rc::clone(&platform);
+        let function = Rc::clone(&function);
         let ok = Rc::clone(&ok);
         let failed = Rc::clone(&failed);
         let latencies = Rc::clone(&latencies);
@@ -95,7 +111,7 @@ pub async fn run_with_arrival(
             let arrival_ms = platform.metrics.rel_now_ms();
             let result = exec::timeout(
                 std::time::Duration::from_nanos((timeout_ms * 1e6) as u64),
-                platform.invoke(payload),
+                platform.invoke_function(&function, payload),
             )
             .await;
             let latency_ms = exec::now().duration_since(t0).as_secs_f64() * 1e3;
@@ -162,6 +178,28 @@ mod tests {
             // open loop: last arrival at 3.9s, so the run spans at least that
             assert!(report.duration_ms >= 3_900.0, "{}", report.duration_ms);
             assert!(report.latency.median() > 0.0);
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn targeted_run_hits_an_interior_function() {
+        run_virtual(async {
+            let cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled).vanilla();
+            let p = crate::platform::Platform::deploy(apps::chain(3), cfg).await.unwrap();
+            let report = run_targeted(
+                Rc::clone(&p),
+                WorkloadConfig { requests: 10, rate_rps: 10.0, seed: 4, timeout_ms: 60_000.0 },
+                Arrival::Constant,
+                Some("s2"),
+            )
+            .await
+            .unwrap();
+            assert_eq!(report.failed, 0);
+            // s2 is the chain tail: only it executed, never s0/s1
+            let fn_lat = p.metrics.fn_latency_series();
+            assert!(fn_lat.iter().all(|s| s.function == "s2"), "{fn_lat:?}");
+            assert_eq!(fn_lat.len(), 10);
             p.shutdown();
         });
     }

@@ -145,6 +145,133 @@ fn boot_hang_mid_split_rolls_back_to_fused_instance_then_retries() {
 }
 
 #[test]
+fn boot_hang_mid_evict_rolls_back_group_intact_with_zero_drops() {
+    // ISSUE 2 satellite: inject a boot hang on the evicted function's
+    // redeploy.  The eviction must abort with the fused group restored
+    // intact — routes untouched, no member unloaded, the orphan replacement
+    // torn down — and traffic served straight through the failed attempt
+    // must not drop a single request.  A later retry succeeds and shrinks
+    // the group in place.
+    run_virtual(async {
+        let mut cfg = fast_cfg();
+        cfg.fusion.feedback_interval_ms = 0.0; // drive the pipeline by hand
+        let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+
+        // fuse the whole chain first
+        let wl = WorkloadConfig { requests: 20, rate_rps: 10.0, seed: 41, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(10_000.0).await;
+        assert_eq!(p.gateway.distinct_instances(), 1, "fusion must complete first");
+
+        let merger = provuse::merger::Merger::new(provuse::merger::MergerCtx {
+            config: Rc::clone(&p.config),
+            containers: p.containers.clone(),
+            gateway: p.gateway.clone(),
+            observer: Rc::clone(&p.observer),
+            metrics: p.metrics.clone(),
+            deployer: provuse::platform::deployer::Deployer::direct(p.containers.clone()),
+            originals: Rc::new(
+                ["s0", "s1", "s2"]
+                    .iter()
+                    .filter_map(|f| p.original_image(f).map(|img| (f.to_string(), img)))
+                    .collect(),
+            ),
+        });
+        let group = vec!["s0".to_string(), "s1".into(), "s2".into()];
+
+        // the replacement instance for the evicted function hangs booting;
+        // serve traffic straight through the doomed attempt (health
+        // deadline = 4 x 150 ms + 5 s, workload spans ~5 s)
+        p.containers.inject_boot_hangs(1);
+        let traffic = exec::spawn(workload::run(
+            Rc::clone(&p),
+            WorkloadConfig { requests: 100, rate_rps: 20.0, seed: 42, timeout_ms: 60_000.0 },
+        ));
+        merger
+            .process(provuse::fusion::FusionRequest::Evict {
+                functions: group.clone(),
+                function: "s1".into(),
+                reason: provuse::fusion::SplitReason::CostModel,
+            })
+            .await;
+        let report = traffic.await.unwrap();
+        assert_eq!(report.failed, 0, "requests must survive the aborted eviction");
+
+        // rolled back: group intact, orphan torn down, nothing unloaded
+        assert_eq!(p.metrics.counter("evict_aborted"), 1);
+        assert_eq!(p.metrics.counter("evict_health_timeouts"), 1);
+        assert!(p.metrics.evicts().is_empty());
+        assert_eq!(p.gateway.distinct_instances(), 1);
+        assert_eq!(p.containers.live_count(), 1, "hung replacement must be torn down");
+        let fused = p.gateway.resolve("s1").unwrap();
+        assert!(fused.hosts("s0") && fused.hosts("s1") && fused.hosts("s2"));
+        provuse::platform::routing_invariants(&p).unwrap();
+
+        // the retry succeeds: s1 leaves, the remainder stays fused in place
+        let retry = merger.handle_evict(&group, "s1", provuse::fusion::SplitReason::CostModel);
+        retry.await.unwrap();
+        assert_eq!(p.metrics.evicts().len(), 1);
+        assert_eq!(p.metrics.counter("evictions_completed"), 1);
+        assert_eq!(p.gateway.distinct_instances(), 2);
+        assert_eq!(p.containers.live_count(), 2);
+        assert_eq!(p.group_members("s0"), vec!["s0".to_string(), "s2".into()]);
+        assert_eq!(p.group_members("s1"), vec!["s1".to_string()]);
+        // only the evicted pairs are on cooldown
+        assert!(p.observer.pair_in_cooldown("s1", "s0"));
+        assert!(p.observer.pair_in_cooldown("s2", "s1"));
+        assert!(!p.observer.pair_in_cooldown("s0", "s2"));
+        provuse::platform::routing_invariants(&p).unwrap();
+        p.shutdown();
+    });
+}
+
+#[test]
+fn stale_evict_request_aborts_without_touching_routes() {
+    // An Evict whose sampled membership no longer matches the live
+    // topology, or that names a non-member, must abort cleanly.
+    run_virtual(async {
+        let mut cfg = fast_cfg();
+        cfg.fusion.feedback_interval_ms = 0.0;
+        let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+        let wl = WorkloadConfig { requests: 20, rate_rps: 10.0, seed: 43, timeout_ms: 60_000.0 };
+        workload::run(Rc::clone(&p), wl).await.unwrap();
+        exec::sleep_ms(10_000.0).await;
+        assert_eq!(p.gateway.distinct_instances(), 1);
+
+        let merger = provuse::merger::Merger::new(provuse::merger::MergerCtx {
+            config: Rc::clone(&p.config),
+            containers: p.containers.clone(),
+            gateway: p.gateway.clone(),
+            observer: Rc::clone(&p.observer),
+            metrics: p.metrics.clone(),
+            deployer: provuse::platform::deployer::Deployer::direct(p.containers.clone()),
+            originals: Rc::new(
+                ["s0", "s1", "s2"]
+                    .iter()
+                    .filter_map(|f| p.original_image(f).map(|img| (f.to_string(), img)))
+                    .collect(),
+            ),
+        });
+        // sampled a pair, but the live instance hosts all three
+        let stale = vec!["s0".to_string(), "s1".into()];
+        let err = merger
+            .handle_evict(&stale, "s1", provuse::fusion::SplitReason::CostModel)
+            .await;
+        assert!(err.is_err(), "stale evict must abort");
+        // the named function is not a member of the sampled group
+        let full = vec!["s0".to_string(), "s1".into(), "s2".into()];
+        let err = merger
+            .handle_evict(&full, "ghost", provuse::fusion::SplitReason::CostModel)
+            .await;
+        assert!(err.is_err(), "non-member evict must abort");
+        assert_eq!(p.gateway.distinct_instances(), 1, "routes untouched");
+        assert_eq!(p.containers.live_count(), 1);
+        assert!(p.metrics.evicts().is_empty());
+        p.shutdown();
+    });
+}
+
+#[test]
 fn stale_split_request_aborts_without_touching_routes() {
     // A Split whose sampled membership no longer matches the live topology
     // (e.g. the group grew transitively in the meantime) must abort cleanly.

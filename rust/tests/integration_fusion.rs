@@ -294,6 +294,51 @@ fn responses_identical_across_split_cutover() {
 }
 
 #[test]
+fn cost_model_controller_evicts_then_splits_under_tiny_threshold() {
+    // End-to-end cost-policy loop on a live platform, no hand-driving: a
+    // tiny evict threshold keeps every fused chain(3) group over budget, so
+    // the controller first evicts the heaviest member from the full group
+    // (all-equal attribution ties break lexicographically -> s0), then the
+    // surviving pair is over budget too and — being a pair — is split
+    // whole.  Long cooldowns + no further traffic keep the end state
+    // fully defused.
+    run_virtual(async {
+        let mut cfg = fast_merge(PlatformConfig::tiny());
+        cfg.fusion.split_policy = provuse::config::SplitPolicyKind::CostModel;
+        cfg.fusion.cost.evict_threshold = 0.1; // any fused group violates
+        cfg.fusion.feedback_interval_ms = 1_000.0;
+        cfg.fusion.split_hysteresis_windows = 5; // let fusion converge first
+        cfg.fusion.cooldown_ms = 120_000.0;
+        let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+
+        let wl = WorkloadConfig { requests: 20, rate_rps: 10.0, seed: 51, timeout_ms: 60_000.0 };
+        let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(report.failed, 0);
+        exec::sleep_ms(35_000.0).await;
+
+        let evicts = p.metrics.evicts();
+        assert_eq!(evicts.len(), 1, "exactly one eviction: {evicts:?}");
+        assert_eq!(evicts[0].function, "s0", "deterministic heaviest pick");
+        assert_eq!(
+            evicts[0].group,
+            vec!["s0".to_string(), "s1".into(), "s2".into()]
+        );
+        assert_eq!(evicts[0].reason, provuse::fusion::SplitReason::CostModel);
+        let splits = p.metrics.splits();
+        assert_eq!(splits.len(), 1, "the surviving pair splits whole: {splits:?}");
+        assert_eq!(splits[0].functions, vec!["s1".to_string(), "s2".into()]);
+        assert_eq!(splits[0].reason, provuse::fusion::SplitReason::CostModel);
+        assert!(splits[0].t_ms > evicts[0].t_ms);
+
+        // fully defused end state, all invariants intact
+        assert_eq!(p.gateway.distinct_instances(), 3);
+        assert_eq!(p.containers.live_count(), 3);
+        provuse::platform::routing_invariants(&p).unwrap();
+        p.shutdown();
+    });
+}
+
+#[test]
 fn async_only_app_sees_no_latency_benefit() {
     // paper §6: "fully asynchronous workloads may see limited to no benefit"
     let app = AppSpec::builder("async_only")

@@ -1,12 +1,16 @@
 //! Property-based tests over platform invariants (mini-harness in
 //! `util::prop`; replay any failure with PROP_SEED=<seed>).
 
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use provuse::apps::{AppSpec, CallMode, CallSpec, FunctionSpec};
 use provuse::config::{ComputeMode, PlatformConfig, PlatformKind, WorkloadConfig};
+use provuse::containerd::ImageId;
 use provuse::exec::run_virtual;
-use provuse::platform::Platform;
+use provuse::fusion::SplitReason;
+use provuse::merger::{Merger, MergerCtx};
+use provuse::platform::{deployer::Deployer, routing_invariants, Platform};
 use provuse::util::prop::{check, Gen};
 use provuse::workload::{self, request_payload};
 
@@ -124,9 +128,10 @@ fn prop_no_failures_and_partition_invariant() {
             // fused groups never exceed the theoretical sync components
             let components = p.app.sync_fusion_groups();
             for (_, inst) in &snapshot {
-                if inst.functions().len() > 1 {
+                let fns = inst.functions();
+                if fns.len() > 1 {
                     let hosted: std::collections::BTreeSet<&str> =
-                        inst.functions().iter().map(|(f, _)| f.as_str()).collect();
+                        fns.iter().map(|(f, _)| f.as_str()).collect();
                     let within_one_component = components.iter().any(|c| {
                         hosted.iter().all(|f| c.iter().any(|m| m == f))
                     });
@@ -166,6 +171,157 @@ fn prop_ram_ledger_conservation() {
                 p.containers.live_count()
             );
         });
+    });
+}
+
+/// A Merger handle over an existing platform's context, so a test can
+/// drive Fuse/Split/Evict pipelines explicitly (same pattern as the
+/// stale-split test in failure_injection.rs).
+fn manual_merger(p: &Rc<Platform>) -> Merger {
+    let originals: BTreeMap<String, ImageId> = p
+        .app
+        .functions()
+        .filter_map(|f| p.original_image(&f.name).map(|img| (f.name.clone(), img)))
+        .collect();
+    Merger::new(MergerCtx {
+        config: Rc::clone(&p.config),
+        containers: p.containers.clone(),
+        gateway: p.gateway.clone(),
+        observer: Rc::clone(&p.observer),
+        metrics: p.metrics.clone(),
+        deployer: Deployer::direct(p.containers.clone()),
+        originals: Rc::new(originals),
+    })
+}
+
+/// Sorted member list of the fused group hosting `probe`'s instance.
+fn sorted_members(inst: &provuse::containerd::Instance) -> Vec<String> {
+    let mut fns: Vec<String> = inst.functions().iter().map(|(n, _)| n.clone()).collect();
+    fns.sort();
+    fns
+}
+
+#[test]
+fn prop_fuse_split_evict_interleavings_preserve_invariants() {
+    // ISSUE 2 tentpole property: after ANY random interleaving of Fuse /
+    // Split / Evict pipeline runs (with traffic woven through) over random
+    // DAG apps, the routing table remains a bijection onto the live
+    // instances, no function is served by two instances, and every evicted
+    // pair is in cooldown.  Pipelines run through the real Merger against a
+    // live platform; aborted ops (stale groups etc.) are part of the space.
+    check("fuse/split/evict interleaving invariants", 64, |g| {
+        let app = random_app(g);
+        let kind = *g.choose(&[PlatformKind::Tiny, PlatformKind::Kube]);
+        let mut cfg = fast_cfg(g, kind);
+        cfg.fusion.feedback_interval_ms = 0.0; // controller off: ops driven by hand
+        let ops = g.usize(4, 10);
+        let op_seed = g.rng().next_u64();
+        run_virtual(async move {
+            // vanilla platform: the in-platform merger stays idle, so the
+            // manual pipeline runs below are the only topology mutations
+            // (the real system serializes pipelines the same way)
+            let p = Platform::deploy(app, cfg.vanilla()).await.unwrap();
+            let merger = manual_merger(&p);
+            let mut g = Gen::replay(op_seed);
+            let sync_edges: Vec<(String, String)> = p
+                .app
+                .functions()
+                .flat_map(|f| {
+                    f.calls
+                        .iter()
+                        .filter(|c| c.mode == CallMode::Sync)
+                        .map(|c| (f.name.clone(), c.target.clone()))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            for _ in 0..ops {
+                match g.weighted(&[3.0, 3.0, 2.0, 2.0]) {
+                    0 => {
+                        // traffic (entry route; exercises inline + remote paths)
+                        let wl = WorkloadConfig {
+                            requests: g.usize(5, 15) as u64,
+                            rate_rps: 20.0,
+                            seed: g.rng().next_u64(),
+                            timeout_ms: 120_000.0,
+                        };
+                        let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+                        assert_eq!(report.failed, 0, "dropped requests");
+                    }
+                    1 => {
+                        // fuse a random sync pair (may abort: already
+                        // colocated after a previous fuse — fine)
+                        if !sync_edges.is_empty() {
+                            let (caller, callee) = g.choose(&sync_edges).clone();
+                            let _ = merger.handle_fuse(&caller, &callee).await;
+                        }
+                    }
+                    2 => {
+                        // split a random live fused group whole
+                        let groups = p.fused_groups();
+                        if !groups.is_empty() {
+                            let fns = sorted_members(g.choose(&groups));
+                            let _ = merger.handle_split(&fns, SplitReason::RamCap).await;
+                        }
+                    }
+                    3 => {
+                        // evict a random member of a random fused group
+                        let groups = p.fused_groups();
+                        if !groups.is_empty() {
+                            let fns = sorted_members(g.choose(&groups));
+                            let victim = g.choose(&fns).clone();
+                            if merger
+                                .handle_evict(&fns, &victim, SplitReason::CostModel)
+                                .await
+                                .is_ok()
+                            {
+                                // every evicted pair is in cooldown, both
+                                // directions; surviving pairs are not
+                                for other in fns.iter().filter(|f| **f != victim) {
+                                    assert!(
+                                        p.observer.pair_in_cooldown(&victim, other),
+                                        "evicted pair ({victim}, {other}) not cooling"
+                                    );
+                                    assert!(
+                                        p.observer.pair_in_cooldown(other, &victim),
+                                        "evicted pair ({other}, {victim}) not cooling"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+                provuse::exec::sleep_ms(g.f64(100.0, 2_000.0)).await;
+            }
+            provuse::exec::sleep_ms(25_000.0).await; // drains settle
+            if let Err(violation) = routing_invariants(&p) {
+                panic!("invariant violated after interleaving: {violation}");
+            }
+            p.shutdown();
+        });
+    });
+}
+
+#[test]
+fn broken_route_swap_is_caught_by_invariants() {
+    // Mutation check (ISSUE 2 acceptance): a deliberately broken route
+    // swap — the bug class the atomic-cutover code exists to prevent —
+    // must be caught by the invariant oracle the property suite uses.
+    run_virtual(async {
+        let cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled).vanilla();
+        let p = Platform::deploy(provuse::apps::chain(2), cfg).await.unwrap();
+        routing_invariants(&p).expect("fresh deployment must satisfy the invariants");
+        // simulate a buggy cutover: point s0 at s1's instance, which does
+        // not host it
+        let wrong = p.gateway.resolve("s1").unwrap();
+        p.gateway.set_route("s0", wrong);
+        let violation = routing_invariants(&p)
+            .expect_err("broken route swap must violate the invariants");
+        assert!(
+            violation.contains("does not actively host"),
+            "unexpected violation message: {violation}"
+        );
+        p.shutdown();
     });
 }
 

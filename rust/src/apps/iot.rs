@@ -12,7 +12,7 @@
 //! aggregate} and {persist, notify}.  busy-time calibration targets the
 //! paper's vanilla median of ~807 ms (DESIGN.md §5).
 
-use super::spec::{AppSpec, CallMode, CallSpec, FunctionSpec};
+use super::spec::{AppSpec, CallMode, FunctionSpec};
 
 fn f(
     name: &str,
@@ -21,18 +21,7 @@ fn f(
     code_mb: f64,
     calls: Vec<(&str, CallMode)>,
 ) -> FunctionSpec {
-    FunctionSpec {
-        name: name.into(),
-        body: Some(body.into()),
-        busy_ms,
-        code_mb,
-        code_kb: (code_mb * 28.0) as u64,
-        trust_domain: "iot".into(),
-        calls: calls
-            .into_iter()
-            .map(|(t, mode)| CallSpec { target: t.into(), mode, scale: 1.0 })
-            .collect(),
-    }
+    FunctionSpec::calibrated(name, body, busy_ms, code_mb, "iot", calls)
 }
 
 /// Build the IOT application.

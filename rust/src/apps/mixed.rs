@@ -1,0 +1,91 @@
+//! The MIXED application — the merge-side admission planner's proving
+//! ground (FIG7 `--app mixed`).  Three independent sync pairs in one trust
+//! domain, each a distinct admission verdict when driven by per-route
+//! workloads:
+//!
+//! * **light pair** `light_api →sync light_fmt` — hot and cheap: the
+//!   caller spends most of its wall clock double-billed on the hop, both
+//!   functions are small.  A cost-aware planner must **fuse** it.
+//! * **heavy pair** `heavy_api →sync heavy_model` — just as hot, but the
+//!   callee carries a 400 MiB ML dependency stack: the predicted fused
+//!   working set alone makes the group an immediate eviction candidate
+//!   under the defusion cost model.  A cost-aware planner must **refuse**
+//!   it even though its observation count crosses the threshold, where the
+//!   observation-count policy fuses it and then fuse→evict flaps.
+//! * **cold pair** `cold_api →sync cold_fmt` — cheap but nearly idle: the
+//!   predicted benefit never covers the RAM penalty, so it stays unfused
+//!   even after (slowly) crossing the observation threshold.
+//!
+//! The `router` entry is deliberately disconnected from the pairs (no
+//! sync/async edges): each pair's traffic comes from targeted per-route
+//! workloads (`workload::run_targeted`), keeping the three verdicts
+//! independent.
+
+use super::spec::{AppSpec, CallMode, FunctionSpec};
+
+fn f(
+    name: &str,
+    body: &str,
+    busy_ms: f64,
+    code_mb: f64,
+    calls: Vec<(&str, CallMode)>,
+) -> FunctionSpec {
+    FunctionSpec::calibrated(name, body, busy_ms, code_mb, "mixed", calls)
+}
+
+/// Build the MIXED application.
+pub fn mixed() -> AppSpec {
+    use CallMode::*;
+    AppSpec::new(
+        "mixed",
+        "router",
+        vec![
+            f("router", "parse", 10.0, 8.0, vec![]),
+            f("light_api", "parse", 20.0, 10.0, vec![("light_fmt", Sync)]),
+            f("light_fmt", "aggregate", 30.0, 9.0, vec![]),
+            f("heavy_api", "parse", 20.0, 10.0, vec![("heavy_model", Sync)]),
+            f("heavy_model", "temperature", 60.0, 400.0, vec![]),
+            f("cold_api", "parse", 15.0, 10.0, vec![("cold_fmt", Sync)]),
+            f("cold_fmt", "aggregate", 15.0, 9.0, vec![]),
+        ],
+    )
+    .expect("mixed app is statically valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_pairs_and_a_disconnected_router() {
+        let app = mixed();
+        assert_eq!(app.entry, "router");
+        assert_eq!(app.len(), 7);
+        assert!(app.function("router").unwrap().calls.is_empty());
+        let groups = app.sync_fusion_groups();
+        assert_eq!(groups.len(), 4);
+        assert!(groups.contains(&vec!["light_api".into(), "light_fmt".into()]));
+        assert!(groups.contains(&vec!["heavy_api".into(), "heavy_model".into()]));
+        assert!(groups.contains(&vec!["cold_api".into(), "cold_fmt".into()]));
+        assert!(groups.contains(&vec!["router".into()]));
+    }
+
+    #[test]
+    fn heavy_callee_dominates_its_pair_ram() {
+        let app = mixed();
+        let model_mb = app.function("heavy_model").unwrap().code_mb;
+        let api_mb = app.function("heavy_api").unwrap().code_mb;
+        assert!(model_mb > 20.0 * api_mb, "heavy callee must dwarf its caller");
+        // the light and cold pairs stay far under the heavy callee
+        for name in ["light_api", "light_fmt", "cold_api", "cold_fmt"] {
+            assert!(app.function(name).unwrap().code_mb < 20.0);
+        }
+    }
+
+    #[test]
+    fn every_function_has_a_body() {
+        for f in mixed().functions() {
+            assert!(f.body.is_some(), "{} missing body", f.name);
+        }
+    }
+}

@@ -3,32 +3,59 @@
 //! * [`tree`] — Fusionize++ TREE (Fig. 4): minimal fusion use case.
 //! * [`iot`] — Fusionize++ IOT (Fig. 3): realistic sensor pipeline.
 //! * [`chain`] — an N-stage sequential chain used by the ablation sweeps.
+//! * [`mixed`] — three independent pairs (light/heavy/cold) for the
+//!   merge-admission planner scenario.
 
 mod spec;
 
 pub mod chain;
 pub mod iot;
+pub mod mixed;
 pub mod tree;
 
 pub use chain::chain;
 pub use iot::{iot, iot_heavy};
+pub use mixed::mixed;
 pub use spec::{AppBuilder, AppSpec, CallMode, CallSpec, FnBuilder, FunctionSpec};
 pub use tree::tree;
 
 use crate::error::{Error, Result};
 
-/// Look an application up by CLI name.
+/// Look an application up by CLI name.  The error string is derived from
+/// [`APP_NAMES`], so the advertised list can never drift from the matches
+/// (enforced by `by_name_accepts_every_app_name` below).
 pub fn by_name(name: &str) -> Result<AppSpec> {
     match name {
         "tree" => Ok(tree()),
         "iot" => Ok(iot()),
         "iot-heavy" => Ok(iot_heavy()),
         "chain" => Ok(chain(6)),
+        "mixed" => Ok(mixed()),
         other => Err(Error::Config(format!(
-            "unknown app `{other}` (available: tree, iot, iot-heavy, chain)"
+            "unknown app `{other}` (available: {})",
+            APP_NAMES.join(", ")
         ))),
     }
 }
 
 /// All benchmark app names.
-pub const APP_NAMES: &[&str] = &["tree", "iot", "iot-heavy", "chain"];
+pub const APP_NAMES: &[&str] = &["tree", "iot", "iot-heavy", "chain", "mixed"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_accepts_every_app_name() {
+        // the list and the matcher can never drift again: every advertised
+        // name must resolve, and the error must advertise every name
+        for name in APP_NAMES {
+            let app = by_name(name).unwrap_or_else(|e| panic!("APP_NAMES lists `{name}`: {e}"));
+            assert!(!app.is_empty());
+        }
+        let err = by_name("no-such-app").unwrap_err().to_string();
+        for name in APP_NAMES {
+            assert!(err.contains(name), "error string omits `{name}`: {err}");
+        }
+    }
+}

@@ -53,6 +53,33 @@ pub struct FunctionSpec {
     pub calls: Vec<CallSpec>,
 }
 
+impl FunctionSpec {
+    /// Calibrated constructor shared by the benchmark apps (iot, mixed):
+    /// image size on disk follows the code footprint at the seed
+    /// calibration's 28 KiB-per-MiB ratio.
+    pub(crate) fn calibrated(
+        name: &str,
+        body: &str,
+        busy_ms: f64,
+        code_mb: f64,
+        trust_domain: &str,
+        calls: Vec<(&str, CallMode)>,
+    ) -> FunctionSpec {
+        FunctionSpec {
+            name: name.into(),
+            body: Some(body.into()),
+            busy_ms,
+            code_mb,
+            code_kb: (code_mb * 28.0) as u64,
+            trust_domain: trust_domain.into(),
+            calls: calls
+                .into_iter()
+                .map(|(t, mode)| CallSpec { target: t.into(), mode, scale: 1.0 })
+                .collect(),
+        }
+    }
+}
+
 /// A composed FaaS application.
 #[derive(Debug, Clone)]
 pub struct AppSpec {

@@ -128,6 +128,23 @@ impl BillingLedger {
             .sum()
     }
 
+    /// Billed wall milliseconds attributed to `function` by invocations
+    /// completing inside `[from_ms, to_ms)` — duration *including* blocked
+    /// sync waits.  Together with the handler's windowed self-time this
+    /// yields the caller's double-billed blocked time, the merge planner's
+    /// hop-savings signal (see `fusion::cost::CostModel::predict_merge`).
+    pub fn billed_ms_window(&self, function: &str, from_ms: f64, to_ms: f64) -> f64 {
+        let borrowed = self.events.borrow();
+        let events: &[BillingEvent] = &borrowed;
+        let start = events.partition_point(|e| e.t_ms < from_ms);
+        events[start..]
+            .iter()
+            .take_while(|e| e.t_ms < to_ms)
+            .filter(|e| e.function == function)
+            .map(|e| e.duration_ms)
+            .sum()
+    }
+
     pub fn attach_summary(&self, metrics: &Recorder) {
         let bill = self.bill();
         for _ in 0..bill.invocations {
@@ -185,5 +202,19 @@ mod tests {
         // window bounds are [from, to)
         assert!((l.gb_seconds_window("a", 0.0, 90.0) - 2.0).abs() < 1e-12);
         assert_eq!(l.gb_seconds_window("ghost", 0.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn windowed_billed_duration_slices_by_completion_time() {
+        let l = BillingLedger::new();
+        l.record(ev(10.0, "a", 100.0, 1.0));
+        l.record(ev(50.0, "a", 300.0, 0.5));
+        l.record(ev(50.0, "b", 700.0, 1.0));
+        l.record(ev(90.0, "a", 500.0, 1.0));
+        assert!((l.billed_ms_window("a", 0.0, 100.0) - 900.0).abs() < 1e-12);
+        // [from, to) bounds; alloc does not affect the duration sum
+        assert!((l.billed_ms_window("a", 40.0, 90.0) - 300.0).abs() < 1e-12);
+        assert!((l.billed_ms_window("b", 0.0, 100.0) - 700.0).abs() < 1e-12);
+        assert_eq!(l.billed_ms_window("ghost", 0.0, 100.0), 0.0);
     }
 }

@@ -123,6 +123,43 @@ impl SplitPolicyKind {
     }
 }
 
+/// Which objective gates fusion *admission* (the merge side of the loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergePolicyKind {
+    /// Seed behavior: a pair is fused once its sync-call observation count
+    /// crosses `min_observations` — call frequency is the whole signal.
+    ObservationCount,
+    /// Cost-aware admission planner (Fusionize/Konflux-style): candidate
+    /// pairs are scored with `fusion::cost::CostModel::predict_merge` over
+    /// windowed per-function signals (self-times, RAM attribution, billed
+    /// GiB-seconds) and fused only when the predicted net benefit clears
+    /// `CostParams::merge_threshold` — and never when the predicted fused
+    /// working set alone would make the group an immediate eviction
+    /// candidate (fuse -> evict churn).
+    CostModel,
+}
+
+impl MergePolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MergePolicyKind::ObservationCount => "observation-count",
+            MergePolicyKind::CostModel => "cost",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "observation-count" | "observations" | "count" | "false" => {
+                Ok(MergePolicyKind::ObservationCount)
+            }
+            "cost" | "cost-model" | "true" => Ok(MergePolicyKind::CostModel),
+            other => Err(Error::Config(format!(
+                "unknown merge policy `{other}` (available: observation-count, cost)"
+            ))),
+        }
+    }
+}
+
 /// Cost-model weights and thresholds (used when `split_policy` is
 /// [`SplitPolicyKind::CostModel`]; see `fusion::cost`).
 #[derive(Debug, Clone)]
@@ -138,6 +175,13 @@ pub struct CostParams {
     pub evict_threshold: f64,
     /// RAM normalization scale (MiB) when `max_group_ram_mb` is 0
     pub ram_ref_mb: f64,
+    /// predicted net benefit a candidate pair must clear before the merge
+    /// planner admits it (only read under [`MergePolicyKind::CostModel`];
+    /// 0 = fuse whenever benefit covers the RAM penalty)
+    pub merge_threshold: f64,
+    /// multiplicative hill-climb step the auto-tuner applies to the merge
+    /// weights on post-fuse regret (only read when `auto_tune` is on)
+    pub tune_step: f64,
 }
 
 impl Default for CostParams {
@@ -148,6 +192,8 @@ impl Default for CostParams {
             w_gbs: 1.0,
             evict_threshold: 2.0,
             ram_ref_mb: 256.0,
+            merge_threshold: 0.0,
+            tune_step: 0.25,
         }
     }
 }
@@ -184,7 +230,14 @@ pub struct FusionParams {
     pub feedback_interval_ms: f64,
     /// which defusion objective the controller runs
     pub split_policy: SplitPolicyKind,
-    /// cost-model weights (only read under `SplitPolicyKind::CostModel`)
+    /// which admission objective gates `FusionRequest::Fuse` emission
+    pub merge_policy: MergePolicyKind,
+    /// hill-climb the merge weights online from post-fuse regret (a fuse
+    /// that is evicted/split within one cooldown of its cutover penalizes
+    /// the weights that admitted it)
+    pub auto_tune: bool,
+    /// cost-model weights (read under `SplitPolicyKind::CostModel` and/or
+    /// `MergePolicyKind::CostModel`)
     pub cost: CostParams,
 }
 
@@ -311,6 +364,8 @@ impl FusionParams {
             split_hysteresis_windows: 3,
             feedback_interval_ms: 5_000.0,
             split_policy: SplitPolicyKind::Threshold,
+            merge_policy: MergePolicyKind::ObservationCount,
+            auto_tune: false,
             cost: CostParams::default(),
         }
     }
@@ -397,6 +452,8 @@ impl PlatformConfig {
                     ),
                     ("feedback_interval_ms", Json::Num(f.feedback_interval_ms)),
                     ("split_policy", Json::str(f.split_policy.name())),
+                    ("merge_policy", Json::str(f.merge_policy.name())),
+                    ("auto_tune", Json::Bool(f.auto_tune)),
                     (
                         "cost",
                         Json::obj(vec![
@@ -405,6 +462,8 @@ impl PlatformConfig {
                             ("w_gbs", Json::Num(f.cost.w_gbs)),
                             ("evict_threshold", Json::Num(f.cost.evict_threshold)),
                             ("ram_ref_mb", Json::Num(f.cost.ram_ref_mb)),
+                            ("merge_threshold", Json::Num(f.cost.merge_threshold)),
+                            ("tune_step", Json::Num(f.cost.tune_step)),
                         ]),
                     ),
                 ]),
@@ -474,6 +533,35 @@ mod tests {
         let cost = fusion.get("cost").unwrap();
         assert!(cost.get("evict_threshold").unwrap().as_f64().unwrap() > 0.0);
         assert!(cost.get("w_ram").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn merge_policy_parses_and_defaults_to_observation_count() {
+        let p = FusionParams::default_enabled();
+        assert_eq!(p.merge_policy, MergePolicyKind::ObservationCount);
+        assert!(!p.auto_tune);
+        assert_eq!(
+            MergePolicyKind::parse("observation-count").unwrap(),
+            MergePolicyKind::ObservationCount
+        );
+        assert_eq!(MergePolicyKind::parse("cost").unwrap(), MergePolicyKind::CostModel);
+        assert_eq!(MergePolicyKind::parse("true").unwrap(), MergePolicyKind::CostModel);
+        assert!(MergePolicyKind::parse("vibes").is_err());
+    }
+
+    #[test]
+    fn merge_planner_knobs_serialize() {
+        let j = PlatformConfig::tiny().to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        let fusion = v.get("fusion").unwrap();
+        assert_eq!(
+            fusion.get("merge_policy").unwrap().as_str().unwrap(),
+            "observation-count"
+        );
+        assert!(fusion.get("auto_tune").is_ok());
+        let cost = fusion.get("cost").unwrap();
+        assert_eq!(cost.get("merge_threshold").unwrap().as_f64().unwrap(), 0.0);
+        assert!(cost.get("tune_step").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

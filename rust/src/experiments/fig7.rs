@@ -6,15 +6,25 @@
 //!   cap and the threshold controller **defuses** it whole (a
 //!   [`SplitEvent`]), latency returns to the pre-fusion baseline, and after
 //!   the pressure lifts the platform **re-fuses**.
-//! * **Iot** (this PR, the ROADMAP's IoT-app variant): two fused groups
+//! * **Iot** (PR 2, the ROADMAP's IoT-app variant): two fused groups
 //!   under **asymmetric pressure**.  The `iot-heavy` app fuses into
 //!   {ingest, model, refine} and {persist, notify}; the pressure phase
 //!   hammers the `model` route directly, the **cost-model** controller
 //!   scores the hot group past `evict_threshold` and sheds exactly its
 //!   heaviest member (an [`EvictEvent`]: `model` leaves, the remainder
 //!   stays fused), while the cool group never splits.
+//! * **Mixed** (this PR): the merge-side **admission planner**.  Three
+//!   independent pairs under steady per-route traffic: the hot light pair
+//!   must be admitted and fused, the equally hot heavy pair must be
+//!   *refused* (its predicted fused working set alone makes it an
+//!   immediate eviction candidate — zero defusion events for it), and the
+//!   cold pair stays unfused even after crossing the observation
+//!   threshold.  With `--merge-policy observation-count` the same run is
+//!   the **negative control**: the heavy pair fuses, is torn apart by the
+//!   defusion cost model, and re-fuses after cooldown — the fuse→evict
+//!   flap the planner exists to prevent.
 //!
-//! Both scenarios run three phases on one live platform, all on the
+//! Every scenario runs three phases on one live platform, all on the
 //! virtual clock and fully deterministic per seed.
 
 use std::path::Path;
@@ -22,13 +32,15 @@ use std::rc::Rc;
 
 use super::write_output;
 use crate::apps;
-use crate::config::{ComputeMode, PlatformConfig, SplitPolicyKind, WorkloadConfig};
+use crate::config::{
+    ComputeMode, MergePolicyKind, PlatformConfig, SplitPolicyKind, WorkloadConfig,
+};
 use crate::error::Result;
 use crate::exec::{self, Executor, Mode};
 use crate::fusion::SplitReason;
 use crate::metrics::{
-    EvictEvent, FnRamSample, GroupRamSample, LatencySample, MergeEvent, RamSample, SplitEvent,
-    MIN_WINDOW_SAMPLES,
+    AdmissionSample, EvictEvent, FnRamSample, GroupRamSample, LatencySample, MergeEvent,
+    RamSample, RegretSample, SplitEvent, MIN_WINDOW_SAMPLES,
 };
 use crate::platform::Platform;
 use crate::util::stats::Quantiles;
@@ -42,6 +54,10 @@ pub enum Fig7App {
     /// iot-heavy under asymmetric per-route pressure, cost-model policy,
     /// heaviest-member eviction.
     Iot,
+    /// mixed (light/heavy/cold pairs) under steady per-route traffic,
+    /// cost-aware merge admission; observation-count is the negative
+    /// control.
+    Mixed,
 }
 
 impl Fig7App {
@@ -49,6 +65,7 @@ impl Fig7App {
         match self {
             Fig7App::Chain => "chain",
             Fig7App::Iot => "iot",
+            Fig7App::Mixed => "mixed",
         }
     }
 
@@ -56,8 +73,9 @@ impl Fig7App {
         match s {
             "chain" => Ok(Fig7App::Chain),
             "iot" | "iot-heavy" => Ok(Fig7App::Iot),
+            "mixed" => Ok(Fig7App::Mixed),
             other => Err(crate::error::Error::Config(format!(
-                "unknown figure7 app `{other}` (available: chain, iot)"
+                "unknown figure7 app `{other}` (available: chain, iot, mixed)"
             ))),
         }
     }
@@ -92,11 +110,21 @@ pub struct Fig7Params {
     pub min_observations: u32,
     pub image_build_ms: f64,
     pub boot_ms: f64,
-    /// cost-model objective threshold (Iot scenario)
+    /// cost-model objective threshold (Iot/Mixed scenarios)
     pub evict_threshold: f64,
     pub w_latency: f64,
     pub w_ram: f64,
     pub w_gbs: f64,
+    /// which admission objective gates Fuse emission (Mixed scenario: the
+    /// planner by default, observation-count as the negative control)
+    pub merge_policy: MergePolicyKind,
+    /// predicted net benefit a pair must clear to be admitted
+    pub merge_threshold: f64,
+    /// hill-climb the merge weights from post-fuse regret
+    pub auto_tune: bool,
+    /// Mixed: rate of the cold pair's route (slowly crosses the
+    /// observation threshold but never pays for itself)
+    pub cold_rps: f64,
 }
 
 impl Fig7Params {
@@ -127,6 +155,10 @@ impl Fig7Params {
             w_latency: 1.0,
             w_ram: 1.0,
             w_gbs: 1.0,
+            merge_policy: MergePolicyKind::ObservationCount,
+            merge_threshold: 0.0,
+            auto_tune: false,
+            cold_rps: 0.0,
         }
     }
 
@@ -175,6 +207,44 @@ impl Fig7Params {
         }
     }
 
+    /// Full-scale Mixed admission-planner scenario
+    /// (`provuse figure7 --app mixed`).
+    pub fn mixed_paper_scale() -> Self {
+        Fig7Params {
+            app: Fig7App::Mixed,
+            // entry (router) traffic; the pairs are driven per-route
+            calm_rps: 2.0,
+            // rate of BOTH hot routes (light_api, heavy_api), every phase
+            pressure_rps: 10.0,
+            // crosses min_observations ~40 s in, but never pays for itself
+            cold_rps: 0.2,
+            // the cost model's RAM reference: light pair predicts ~0.5,
+            // heavy pair ~2.06 — past the evict threshold, so the planner's
+            // churn gate refuses it outright
+            max_group_ram_mb: 256.0,
+            evict_threshold: 2.0,
+            merge_policy: MergePolicyKind::CostModel,
+            merge_threshold: 0.0,
+            // short cooldown on purpose: the observation-count negative
+            // control must fuse -> defuse -> re-fuse within one run
+            cooldown_ms: 20_000.0,
+            feedback_interval_ms: 2_000.0,
+            ..Self::paper_scale()
+        }
+    }
+
+    /// Scaled-down Mixed variant for `cargo test` / the CI smoke job.
+    pub fn mixed_smoke() -> Self {
+        Fig7Params {
+            phase_a_secs: 25.0,
+            phase_b_secs: 25.0,
+            phase_c_secs: 25.0,
+            image_build_ms: 300.0,
+            boot_ms: 150.0,
+            ..Self::mixed_paper_scale()
+        }
+    }
+
     /// Params for `app` at full or smoke scale.
     pub fn for_app(app: Fig7App, smoke: bool) -> Self {
         match (app, smoke) {
@@ -182,6 +252,8 @@ impl Fig7Params {
             (Fig7App::Chain, true) => Self::smoke(),
             (Fig7App::Iot, false) => Self::iot_paper_scale(),
             (Fig7App::Iot, true) => Self::iot_smoke(),
+            (Fig7App::Mixed, false) => Self::mixed_paper_scale(),
+            (Fig7App::Mixed, true) => Self::mixed_smoke(),
         }
     }
 }
@@ -208,6 +280,12 @@ pub struct Fig7 {
     pub ram: Vec<RamSample>,
     pub group_ram: Vec<GroupRamSample>,
     pub fn_ram: Vec<FnRamSample>,
+    /// merge-admission evaluations (empty under observation-count)
+    pub admissions: Vec<AdmissionSample>,
+    /// auto-tune regrets (weight trajectory)
+    pub regrets: Vec<RegretSample>,
+    /// final sync-call observation counts per (caller, callee)
+    pub pair_observations: Vec<((String, String), u64)>,
     /// (phase label, workload report), in order
     pub reports: Vec<(&'static str, WorkloadReport)>,
     /// virtual time each phase finished draining (ms since epoch)
@@ -281,6 +359,7 @@ impl Fig7 {
         match self.params.app {
             Fig7App::Chain => self.checks_chain(),
             Fig7App::Iot => self.checks_iot(),
+            Fig7App::Mixed => self.checks_mixed(),
         }
     }
 
@@ -510,6 +589,179 @@ impl Fig7 {
         out
     }
 
+    /// Whether any merge event fused `function` with anything.
+    fn ever_merged(&self, function: &str) -> bool {
+        self.merges.iter().any(|m| m.functions.iter().any(|f| f == function))
+    }
+
+    /// Defusion events (splits + evicts) touching `function`.
+    fn defusions_of(&self, function: &str) -> usize {
+        self.splits.iter().filter(|s| s.functions.iter().any(|f| f == function)).count()
+            + self.evicts.iter().filter(|e| e.group.iter().any(|f| f == function)).count()
+    }
+
+    fn observation_count(&self, caller: &str, callee: &str) -> u64 {
+        self.pair_observations
+            .iter()
+            .find(|((a, b), _)| a == caller && b == callee)
+            .map(|(_, n)| *n)
+            .unwrap_or(0)
+    }
+
+    /// The Mixed checklist: admission planner by default, the
+    /// observation-count negative control otherwise.
+    fn checks_mixed(&self) -> Vec<Check> {
+        match self.params.merge_policy {
+            MergePolicyKind::CostModel => self.checks_mixed_planner(),
+            MergePolicyKind::ObservationCount => self.checks_mixed_negative_control(),
+        }
+    }
+
+    /// Positive scenario: the planner admits exactly the pair that pays
+    /// for itself and nothing ever needs to be defused.
+    fn checks_mixed_planner(&self) -> Vec<Check> {
+        let mut out = Vec::new();
+        let light = vec!["light_api".to_string(), "light_fmt".into()];
+
+        let light_fused = self
+            .phase_snaps
+            .last()
+            .map(|snap| members_of(snap, "light_api") == Some(&light))
+            .unwrap_or(false);
+        out.push(Check {
+            label: "hot light pair is admitted and fused",
+            pass: light_fused && self.ever_merged("light_fmt"),
+            detail: format!(
+                "final light_api -> {:?}, {} merges",
+                self.phase_snaps.last().and_then(|s| members_of(s, "light_api")),
+                self.merges.len()
+            ),
+        });
+
+        let heavy_obs = self.observation_count("heavy_api", "heavy_model");
+        let heavy_refused = !self.ever_merged("heavy_model")
+            && heavy_obs >= self.params.min_observations as u64;
+        out.push(Check {
+            label: "hot heavy pair crosses the observation threshold yet is refused",
+            pass: heavy_refused,
+            detail: format!(
+                "{} observations (threshold {}), final heavy_api -> {:?}",
+                heavy_obs,
+                self.params.min_observations,
+                self.phase_snaps.last().and_then(|s| members_of(s, "heavy_api"))
+            ),
+        });
+
+        let heavy_verdicts: Vec<&AdmissionSample> = self
+            .admissions
+            .iter()
+            .filter(|a| a.caller == "heavy_api" && a.callee == "heavy_model")
+            .collect();
+        out.push(Check {
+            label: "the refusal is the planner's: every heavy evaluation scored negative",
+            pass: !heavy_verdicts.is_empty()
+                && heavy_verdicts.iter().all(|a| !a.admitted && a.score < 0.0),
+            detail: format!(
+                "{} evaluations, scores [{}]",
+                heavy_verdicts.len(),
+                heavy_verdicts
+                    .iter()
+                    .take(4)
+                    .map(|a| format!("{:.2}", a.score))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        });
+
+        let cold_obs = self.observation_count("cold_api", "cold_fmt");
+        out.push(Check {
+            label: "cold pair crosses the observation threshold yet stays unfused",
+            pass: !self.ever_merged("cold_api")
+                && cold_obs >= self.params.min_observations as u64,
+            detail: format!(
+                "{} observations (threshold {}), final cold_api -> {:?}",
+                cold_obs,
+                self.params.min_observations,
+                self.phase_snaps.last().and_then(|s| members_of(s, "cold_api"))
+            ),
+        });
+
+        out.push(Check {
+            label: "zero defusion events: nothing the planner admitted needed taking back",
+            pass: self.splits.is_empty() && self.evicts.is_empty(),
+            detail: format!(
+                "{} split events, {} evict events",
+                self.splits.len(),
+                self.evicts.len()
+            ),
+        });
+
+        out.push(Check {
+            label: "exactly one merge: the light pair, once",
+            pass: self.merges.len() == 1,
+            detail: format!(
+                "merges: [{}]",
+                self.merges
+                    .iter()
+                    .map(|m| m.functions.join("+"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        });
+
+        out.push(self.zero_drops_check());
+        out
+    }
+
+    /// Negative control: the seed's observation-count admission fuses the
+    /// heavy pair and the defusion controller has to keep taking it back —
+    /// the churn the planner eliminates.
+    fn checks_mixed_negative_control(&self) -> Vec<Check> {
+        let mut out = Vec::new();
+        let heavy_merges = self
+            .merges
+            .iter()
+            .filter(|m| m.functions.iter().any(|f| f == "heavy_model"))
+            .count();
+
+        out.push(Check {
+            label: "observation-count admission fuses the heavy pair",
+            pass: heavy_merges >= 1,
+            detail: format!("{heavy_merges} heavy merges"),
+        });
+
+        let heavy_defusions = self.defusions_of("heavy_model");
+        let heavy_splits = self
+            .splits
+            .iter()
+            .filter(|s| s.functions.iter().any(|f| f == "heavy_model"))
+            .count();
+        out.push(Check {
+            label: "the defusion cost model takes the heavy group back apart",
+            pass: heavy_defusions >= 1,
+            detail: format!(
+                "{heavy_splits} split events, {} evict events touching heavy_model",
+                heavy_defusions - heavy_splits
+            ),
+        });
+
+        out.push(Check {
+            label: "the heavy pair re-fuses after cooldown: fuse -> defuse flap demonstrated",
+            pass: heavy_merges >= 2 && heavy_defusions >= 1,
+            detail: format!("{heavy_merges} heavy merges, {heavy_defusions} heavy defusions"),
+        });
+
+        let light_defusions = self.defusions_of("light_api");
+        out.push(Check {
+            label: "the light pair fuses and stays fused",
+            pass: self.ever_merged("light_fmt") && light_defusions == 0,
+            detail: format!("{light_defusions} defusions touching light_api"),
+        });
+
+        out.push(self.zero_drops_check());
+        out
+    }
+
     fn zero_drops_check(&self) -> Check {
         let all_served = self.reports.iter().all(|(_, r)| r.failed == 0);
         Check {
@@ -537,6 +789,10 @@ impl Fig7 {
             Fig7App::Iot => out.push_str(
                 "FIG7/iot: cost-model partial defusion (two groups, asymmetric pressure, heaviest member evicted)\n",
             ),
+            Fig7App::Mixed => out.push_str(&format!(
+                "FIG7/mixed: merge-side admission planner (light/heavy/cold pairs, --merge-policy {})\n",
+                self.params.merge_policy.name()
+            )),
         }
         for (label, report) in &self.reports {
             out.push_str(&format!("  {label:<15}: {}\n", report.summary()));
@@ -548,6 +804,8 @@ impl Fig7 {
             match self.params.app {
                 Fig7App::Chain => self.post_split_p95_ms(),
                 Fig7App::Iot => self.relief_p95_ms(),
+                // no correction phase by design: the planner refused upfront
+                Fig7App::Mixed => f64::NAN,
             }
         ));
         out.push_str(&format!(
@@ -579,6 +837,15 @@ impl Fig7 {
                 .collect::<Vec<_>>()
                 .join(", ")
         ));
+        if self.params.app == Fig7App::Mixed {
+            let admitted = self.admissions.iter().filter(|a| a.admitted).count();
+            out.push_str(&format!(
+                "  admission : {} evaluations ({} admitted), {} regrets\n",
+                self.admissions.len(),
+                admitted,
+                self.regrets.len()
+            ));
+        }
         for c in self.checks() {
             out.push_str(&format!(
                 "  [{}] {} — {}\n",
@@ -614,23 +881,30 @@ pub fn run(out_dir: &Path, params: Fig7Params) -> Result<Fig7> {
         cfg.fusion.split_p95_regression = params.split_p95_regression;
         cfg.fusion.feedback_interval_ms = params.feedback_interval_ms;
         cfg.fusion.split_hysteresis_windows = params.hysteresis;
-        if params.app == Fig7App::Iot {
+        if params.app == Fig7App::Iot || params.app == Fig7App::Mixed {
             cfg.fusion.split_policy = SplitPolicyKind::CostModel;
             cfg.fusion.cost.evict_threshold = params.evict_threshold;
             cfg.fusion.cost.w_latency = params.w_latency;
             cfg.fusion.cost.w_ram = params.w_ram;
             cfg.fusion.cost.w_gbs = params.w_gbs;
         }
+        cfg.fusion.merge_policy = params.merge_policy;
+        cfg.fusion.auto_tune = params.auto_tune;
+        cfg.fusion.cost.merge_threshold = params.merge_threshold;
 
         let app = match params.app {
             Fig7App::Chain => apps::chain(4),
             Fig7App::Iot => apps::iot_heavy(),
+            Fig7App::Mixed => apps::mixed(),
         };
         let platform = Platform::deploy(app, cfg).await?;
         let mut reports: Vec<(&'static str, WorkloadReport)> = Vec::new();
         let mut phase_end_ms = Vec::new();
         let mut phase_snaps = Vec::new();
-        let probes: &[&str] = &["ingest", "model", "persist"];
+        let probes: &[&str] = match params.app {
+            Fig7App::Mixed => &["light_api", "heavy_api", "cold_api"],
+            _ => &["ingest", "model", "persist"],
+        };
 
         let phases: [(&'static str, f64); 3] = [
             ("calm", params.phase_a_secs),
@@ -685,11 +959,47 @@ pub fn run(out_dir: &Path, params: Fig7Params) -> Result<Fig7> {
                         reports.push((*label, report));
                     }
                 }
+                Fig7App::Mixed => {
+                    // steady per-route traffic in EVERY phase — the three
+                    // verdicts come from predicted cost, not phase shifts:
+                    // entry (router) at calm_rps, both hot routes at
+                    // pressure_rps, the cold route at cold_rps
+                    let wl = |rate: f64, salt: u64| WorkloadConfig {
+                        requests: (rate * secs).round() as u64,
+                        rate_rps: rate,
+                        seed: params.seed.wrapping_add(salt).wrapping_add(i as u64),
+                        timeout_ms: 120_000.0,
+                    };
+                    let entry =
+                        exec::spawn(workload::run(Rc::clone(&platform), wl(params.calm_rps, 0)));
+                    let light = exec::spawn(workload::run_targeted(
+                        Rc::clone(&platform),
+                        wl(params.pressure_rps, 0x11),
+                        Arrival::Constant,
+                        Some("light_api"),
+                    ));
+                    let heavy = exec::spawn(workload::run_targeted(
+                        Rc::clone(&platform),
+                        wl(params.pressure_rps, 0x22),
+                        Arrival::Constant,
+                        Some("heavy_api"),
+                    ));
+                    let cold = exec::spawn(workload::run_targeted(
+                        Rc::clone(&platform),
+                        wl(params.cold_rps, 0x33),
+                        Arrival::Constant,
+                        Some("cold_api"),
+                    ));
+                    reports.push(("entry", entry.await?));
+                    reports.push(("light", light.await?));
+                    reports.push(("heavy", heavy.await?));
+                    reports.push(("cold", cold.await?));
+                }
             }
             // let in-flight pipelines land before probing the topology
             exec::sleep_ms(2_000.0).await;
             phase_end_ms.push(platform.metrics.rel_now_ms());
-            if params.app == Fig7App::Iot {
+            if params.app != Fig7App::Chain {
                 phase_snaps.push(snapshot(&platform, probes));
             }
         }
@@ -706,6 +1016,8 @@ pub fn run(out_dir: &Path, params: Fig7Params) -> Result<Fig7> {
             ("fig7_group_ram.csv", m.group_ram_csv()),
             ("fig7_fn_ram.csv", m.fn_ram_csv()),
             ("fig7_fn_latency.csv", m.fn_latency_csv()),
+            ("fig7_admissions.csv", m.admissions_csv()),
+            ("fig7_regrets.csv", m.regrets_csv()),
         ];
         let fig = Fig7 {
             params,
@@ -716,6 +1028,9 @@ pub fn run(out_dir: &Path, params: Fig7Params) -> Result<Fig7> {
             ram: m.ram_series(),
             group_ram: m.group_ram_series(),
             fn_ram: m.fn_ram_series(),
+            admissions: m.admissions(),
+            regrets: m.regrets(),
+            pair_observations: platform.observer.observed_graph(),
             reports,
             phase_end_ms,
             phase_snaps,
@@ -835,6 +1150,49 @@ mod tests {
         let events = std::fs::read_to_string(dir.join("fig7_events.csv")).unwrap();
         assert!(events.contains("evict"));
         assert!(events.contains("cost_model"));
+    }
+
+    #[test]
+    fn fig7_mixed_admission_planner_at_smoke_scale() {
+        let dir = std::env::temp_dir().join("provuse_fig7_mixed_test");
+        let fig = run(&dir, Fig7Params::mixed_smoke()).unwrap();
+        for c in fig.checks() {
+            assert!(c.pass, "{} — {}\n{}", c.label, c.detail, fig.render());
+        }
+        // the light pair was scored and admitted on a positive prediction
+        assert!(
+            fig.admissions
+                .iter()
+                .any(|a| a.caller == "light_api" && a.callee == "light_fmt" && a.admitted),
+            "no admitted light evaluation: {:?}",
+            fig.admissions
+        );
+        // no regrets: nothing the planner admitted was ever taken back
+        assert!(fig.regrets.is_empty(), "{:?}", fig.regrets);
+        assert!(dir.join("fig7_admissions.csv").exists());
+        let admissions = std::fs::read_to_string(dir.join("fig7_admissions.csv")).unwrap();
+        assert!(admissions.contains("heavy_api,heavy_model"));
+        assert!(admissions.contains("false"), "no refusal rows exported");
+    }
+
+    #[test]
+    fn fig7_mixed_negative_control_flaps_under_observation_count() {
+        let mut p = Fig7Params::mixed_smoke();
+        p.merge_policy = crate::config::MergePolicyKind::ObservationCount;
+        let dir = std::env::temp_dir().join("provuse_fig7_mixed_neg_test");
+        let fig = run(&dir, p).unwrap();
+        for c in fig.checks() {
+            assert!(c.pass, "{} — {}\n{}", c.label, c.detail, fig.render());
+        }
+        // the flap costs real work the planner avoids: heavy merges >= 2
+        let heavy_merges = fig
+            .merges
+            .iter()
+            .filter(|m| m.functions.iter().any(|f| f == "heavy_model"))
+            .count();
+        assert!(heavy_merges >= 2, "merges: {:?}", fig.merges);
+        // observation-count admission never consults the planner
+        assert!(fig.admissions.is_empty(), "{:?}", fig.admissions);
     }
 
     #[test]

@@ -1,5 +1,10 @@
-//! Cost-model-driven defusion objective (Konflux-style: grouping as an
-//! explicit cost optimization instead of threshold-tripping).
+//! Cost-model-driven fusion objectives (Konflux-style: grouping as an
+//! explicit cost optimization instead of threshold-tripping) — both the
+//! *split* side (score live fused groups, shed the heaviest member) and,
+//! since the merge-side planner, the *admission* side
+//! ([`CostModel::predict_merge`]: score candidate pairs before any fuse is
+//! requested, so pairs that would be immediate eviction candidates are
+//! never fused at all).
 //!
 //! A fused group is scored with one weighted objective:
 //!
@@ -23,9 +28,57 @@
 //! reporting; the score keeps raw GiB-seconds per second so weights stay
 //! O(1) human-tunable.
 
-use crate::config::FusionParams;
+use crate::config::{CostParams, FusionParams};
 
 use super::{FnAttribution, GroupSample};
+
+/// Windowed standalone signals for one *routed* function, fused or not —
+/// the raw material of merge-side admission.  Gathered by the platform's
+/// controller tick every feedback interval from already-collected series:
+/// the handler's `FnSample` self-times, the tick's RAM attribution, and the
+/// billing ledger's trailing window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FnSignals {
+    pub function: String,
+    /// attributed RAM (MiB): the whole instance for a singleton, the
+    /// function's `fn_ram` share inside a fused group
+    pub ram_mb: f64,
+    /// p95 handler self-time over the window (ms); NaN = too few samples
+    pub p95_ms: f64,
+    /// billed GiB-seconds attributed to this function in the window
+    pub gb_seconds: f64,
+    /// billed wall milliseconds in the window (*including* time blocked on
+    /// outbound sync calls — the double-billed waits, §2.3)
+    pub billed_ms: f64,
+    /// summed handler self-time milliseconds in the window (dispatch +
+    /// compute + busy, *excluding* blocked waits)
+    pub self_ms: f64,
+    /// window length (seconds)
+    pub window_s: f64,
+}
+
+/// One merge-admission verdict (kept for telemetry and regret attribution).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MergeDecision {
+    /// net predicted benefit: `w_latency * lat + w_gbs * gbs - w_ram * ram`
+    pub score: f64,
+    pub admit: bool,
+    /// predicted hop-latency savings: the caller's double-billed blocked
+    /// seconds per wall second (billed minus self time), which fusion
+    /// inlines away
+    pub lat_term: f64,
+    /// the callee's separately billed GiB-seconds per wall second — the
+    /// double billing an inlined call eliminates entirely
+    pub gbs_term: f64,
+    /// predicted fused working set over the RAM reference (caller + callee
+    /// attributed RAM; slightly pessimistic — the shared base runtime is
+    /// counted twice — which errs on the side of refusing)
+    pub ram_term: f64,
+    /// true when the RAM penalty alone already crosses the defusion
+    /// objective's evict threshold: fusing would create an immediate
+    /// eviction candidate, so the pair is refused regardless of benefit
+    pub churn_gated: bool,
+}
 
 /// The weighted defusion objective (see module docs).
 #[derive(Debug, Clone)]
@@ -111,6 +164,149 @@ impl CostModel {
     /// The member an eviction should shed (None for empty attribution).
     pub fn heaviest(&self, sample: &GroupSample) -> Option<String> {
         self.fn_scores(sample).into_iter().next().map(|(name, _)| name)
+    }
+
+    /// Override the three weights (the auto-tuner's hook: admission runs on
+    /// the *current* hill-climbed weights, not the configured priors).
+    pub fn with_weights(mut self, w_latency: f64, w_ram: f64, w_gbs: f64) -> Self {
+        self.w_latency = w_latency;
+        self.w_ram = w_ram;
+        self.w_gbs = w_gbs;
+        self
+    }
+
+    /// Merge-side admission objective: predict whether fusing
+    /// (`caller`, `callee`) pays for itself.
+    ///
+    /// ```text
+    /// benefit = w_latency * caller blocked-time rate   (hops inlined away)
+    ///         + w_gbs     * callee billed GiB-s rate   (double billing gone)
+    /// penalty = w_ram     * (caller_ram + callee_ram) / ram_reference
+    /// score   = benefit - penalty;  admit iff score >= merge_threshold
+    /// ```
+    ///
+    /// The blocked-time rate is measured, not modeled: the billing ledger
+    /// charges the caller's full duration *including* sync waits while the
+    /// handler's self-time series excludes them, so `billed - self` per
+    /// wall second is exactly the double-billed hop time fusion eliminates.
+    /// (It aggregates waits on *all* of the caller's callees — an upper
+    /// bound on what fusing this one pair recovers.)
+    ///
+    /// Churn gate: when cost-driven defusion is armed, a pair whose RAM
+    /// penalty alone (`w_ram * ram_term`, a lower bound on the post-fuse
+    /// group score) already crosses `evict_threshold` is refused outright —
+    /// fusing it would create an immediate eviction candidate and the
+    /// fuse -> evict -> cooldown -> fuse churn the planner exists to prevent.
+    pub fn predict_merge(
+        &self,
+        caller: &FnSignals,
+        callee: &FnSignals,
+        merge_threshold: f64,
+    ) -> MergeDecision {
+        let lat_term = if caller.window_s > 0.0 {
+            (caller.billed_ms - caller.self_ms).max(0.0) / (caller.window_s * 1e3)
+        } else {
+            0.0
+        };
+        let gbs_term = if callee.window_s > 0.0 {
+            callee.gb_seconds.max(0.0) / callee.window_s
+        } else {
+            0.0
+        };
+        let ram_term = (caller.ram_mb.max(0.0) + callee.ram_mb.max(0.0)) / self.ram_ref_mb;
+        let score = self.w_latency * lat_term + self.w_gbs * gbs_term - self.w_ram * ram_term;
+        let churn_gated = self.armed() && self.w_ram * ram_term >= self.evict_threshold;
+        MergeDecision {
+            score,
+            admit: !churn_gated && score >= merge_threshold,
+            lat_term,
+            gbs_term,
+            ram_term,
+            churn_gated,
+        }
+    }
+}
+
+/// Online hill-climb over the three merge weights, driven by post-fuse
+/// regret.  An admitted fuse that the defusion controller evicts or splits
+/// within one cooldown of its cutover means admission mis-priced it: the
+/// RAM penalty weight steps up and the benefit weights step down, the
+/// direction that would have refused that fuse.  A fuse that survives its
+/// cooldown decays the weights a fraction of the way back toward the
+/// configured priors, so transient bad luck cannot skew them permanently.
+///
+/// Known limitation (see ROADMAP): the step is a uniform multiplicative
+/// nudge — there is no per-term credit assignment, so a regret caused
+/// purely by a latency mis-prediction still raises the RAM weight.
+#[derive(Debug, Clone)]
+pub struct AutoTuner {
+    pub w_latency: f64,
+    pub w_ram: f64,
+    pub w_gbs: f64,
+    prior_latency: f64,
+    prior_ram: f64,
+    prior_gbs: f64,
+    step: f64,
+    regrets: u64,
+}
+
+/// Weight clamp bounds: keep every weight strictly positive and within two
+/// orders of magnitude of 1 so a pathological regret streak cannot disarm
+/// a term forever.
+const TUNE_MIN_W: f64 = 0.01;
+const TUNE_MAX_W: f64 = 100.0;
+
+impl AutoTuner {
+    pub fn new(p: &CostParams) -> Self {
+        AutoTuner {
+            w_latency: p.w_latency,
+            w_ram: p.w_ram,
+            w_gbs: p.w_gbs,
+            prior_latency: p.w_latency,
+            prior_ram: p.w_ram,
+            prior_gbs: p.w_gbs,
+            step: p.tune_step.max(0.0),
+            regrets: 0,
+        }
+    }
+
+    pub fn weights(&self) -> (f64, f64, f64) {
+        (self.w_latency, self.w_ram, self.w_gbs)
+    }
+
+    pub fn regrets(&self) -> u64 {
+        self.regrets
+    }
+
+    /// An admitted fuse was defused within one cooldown of its cutover.
+    pub fn on_regret(&mut self) {
+        self.regrets += 1;
+        let up = 1.0 + self.step;
+        self.w_ram = (self.w_ram * up).clamp(TUNE_MIN_W, TUNE_MAX_W);
+        self.w_latency = (self.w_latency / up).clamp(TUNE_MIN_W, TUNE_MAX_W);
+        self.w_gbs = (self.w_gbs / up).clamp(TUNE_MIN_W, TUNE_MAX_W);
+    }
+
+    /// An admitted fuse outlived its cooldown without being defused: decay
+    /// a tenth of the remaining distance back toward the configured priors.
+    pub fn on_survival(&mut self) {
+        self.pull_toward_priors(0.1);
+    }
+
+    /// Per-feedback-window decay (1% of the remaining distance to the
+    /// priors).  This is the recovery path survivals cannot provide: after
+    /// a regret streak has pushed `w_ram` high enough that the churn gate
+    /// refuses *every* candidate, nothing is ever admitted again, so no
+    /// survival would ever fire — without a time-based pull the tuner
+    /// would lock fusion out for the rest of the run.
+    pub fn on_window(&mut self) {
+        self.pull_toward_priors(0.01);
+    }
+
+    fn pull_toward_priors(&mut self, pull: f64) {
+        self.w_latency += (self.prior_latency - self.w_latency) * pull;
+        self.w_ram += (self.prior_ram - self.w_ram) * pull;
+        self.w_gbs += (self.prior_gbs - self.w_gbs) * pull;
     }
 }
 
@@ -250,6 +446,193 @@ mod tests {
         );
         assert_eq!(m.heaviest(&idle).as_deref(), Some("a"));
         assert_eq!(m.heaviest(&sample(1.0, f64::NAN, vec![])), None);
+    }
+
+    // -- merge-side admission planner -----------------------------------------
+
+    fn signals(function: &str, ram_mb: f64, billed_ms: f64, self_ms: f64, gbs: f64) -> FnSignals {
+        FnSignals {
+            function: function.into(),
+            ram_mb,
+            p95_ms: f64::NAN,
+            gb_seconds: gbs,
+            billed_ms,
+            self_ms,
+            window_s: 2.0,
+        }
+    }
+
+    #[test]
+    fn predict_merge_admits_hot_light_pair_and_refuses_heavy_pair() {
+        let m = model(256.0); // evict_threshold = 2.0 (default)
+        // light hot pair: caller blocked 1.6 s over a 2 s window, callee
+        // bill small, combined RAM well under the reference
+        let light = m.predict_merge(
+            &signals("a", 70.0, 2_000.0, 400.0, 0.1),
+            &signals("b", 70.0, 0.0, 0.0, 0.1),
+            0.0,
+        );
+        assert!(light.admit, "{light:?}");
+        assert!(!light.churn_gated);
+        assert!((light.lat_term - 0.8).abs() < 1e-12);
+        assert!((light.gbs_term - 0.05).abs() < 1e-12);
+        // heavy pair: callee RAM alone pushes the predicted working set
+        // past the evict threshold -> churn-gated even though the benefit
+        // terms are large
+        let heavy = m.predict_merge(
+            &signals("a", 70.0, 2_000.0, 100.0, 0.1),
+            &signals("big", 460.0, 0.0, 0.0, 2.0),
+            0.0,
+        );
+        assert!(!heavy.admit, "{heavy:?}");
+        assert!(heavy.churn_gated, "refusal must be the churn gate");
+    }
+
+    #[test]
+    fn predict_merge_refuses_cold_pair_on_threshold() {
+        let m = model(256.0);
+        // almost no traffic: benefit ~ 0, penalty ~ 0.55 -> score < 0
+        let cold = m.predict_merge(
+            &signals("a", 70.0, 20.0, 15.0, 0.001),
+            &signals("b", 70.0, 0.0, 0.0, 0.001),
+            0.0,
+        );
+        assert!(!cold.admit, "{cold:?}");
+        assert!(!cold.churn_gated, "cold refusal is the score, not the churn gate");
+        assert!(cold.score < 0.0);
+    }
+
+    #[test]
+    fn predict_merge_blocked_time_clamps_and_weights_apply() {
+        let m = model(256.0).with_weights(2.0, 0.0, 0.0);
+        // self > billed (e.g. inline-dominated window) clamps to zero
+        let d = m.predict_merge(
+            &signals("a", 70.0, 100.0, 500.0, 0.0),
+            &signals("b", 70.0, 0.0, 0.0, 4.0),
+            0.0,
+        );
+        assert_eq!(d.lat_term, 0.0);
+        // w_gbs = 0 silences the bill term; w_ram = 0 removes the penalty
+        assert_eq!(d.score, 0.0);
+        assert!(d.admit);
+        // degenerate window disables the rate terms instead of dividing by 0
+        let z = m.predict_merge(
+            &FnSignals { window_s: 0.0, ..signals("a", 70.0, 100.0, 0.0, 1.0) },
+            &FnSignals { window_s: 0.0, ..signals("b", 70.0, 0.0, 0.0, 1.0) },
+            0.0,
+        );
+        assert_eq!(z.lat_term, 0.0);
+        assert_eq!(z.gbs_term, 0.0);
+    }
+
+    #[test]
+    fn predict_merge_score_is_monotone() {
+        // More caller blocked time or callee bill never lowers the score;
+        // more RAM never raises it.
+        check("merge score monotone", 256, |g| {
+            let mut p = FusionParams::default_enabled();
+            p.max_group_ram_mb = g.f64(50.0, 1_000.0);
+            p.cost.w_latency = g.f64(0.0, 4.0);
+            p.cost.w_ram = g.f64(0.0, 4.0);
+            p.cost.w_gbs = g.f64(0.0, 4.0);
+            let m = CostModel::from_params(&p);
+            let caller = FnSignals {
+                function: "a".into(),
+                ram_mb: g.f64(0.0, 1_000.0),
+                p95_ms: f64::NAN,
+                gb_seconds: g.f64(0.0, 5.0),
+                billed_ms: g.f64(0.0, 10_000.0),
+                self_ms: g.f64(0.0, 5_000.0),
+                window_s: g.f64(0.5, 10.0),
+            };
+            let callee = FnSignals {
+                function: "b".into(),
+                ram_mb: g.f64(0.0, 1_000.0),
+                p95_ms: f64::NAN,
+                gb_seconds: g.f64(0.0, 5.0),
+                billed_ms: 0.0,
+                self_ms: 0.0,
+                window_s: caller.window_s,
+            };
+            let base = m.predict_merge(&caller, &callee, 0.0);
+            assert!(base.score.is_finite());
+
+            let busier = FnSignals {
+                billed_ms: caller.billed_ms + g.f64(0.0, 5_000.0),
+                ..caller.clone()
+            };
+            assert!(
+                m.predict_merge(&busier, &callee, 0.0).score >= base.score,
+                "more blocked time lowered the merge score"
+            );
+            let pricier = FnSignals {
+                gb_seconds: callee.gb_seconds + g.f64(0.0, 5.0),
+                ..callee.clone()
+            };
+            assert!(
+                m.predict_merge(&caller, &pricier, 0.0).score >= base.score,
+                "a bigger callee bill lowered the merge score"
+            );
+            let fatter = FnSignals { ram_mb: callee.ram_mb + g.f64(0.0, 500.0), ..callee.clone() };
+            assert!(
+                m.predict_merge(&caller, &fatter, 0.0).score <= base.score,
+                "more RAM raised the merge score"
+            );
+        });
+    }
+
+    #[test]
+    fn auto_tuner_regret_raises_ram_weight_and_survival_decays_back() {
+        let p = CostParams::default();
+        let mut t = AutoTuner::new(&p);
+        assert_eq!(t.weights(), (1.0, 1.0, 1.0));
+        t.on_regret();
+        let (wl, wr, wg) = t.weights();
+        assert!(wr > 1.0, "regret must raise the RAM penalty weight");
+        assert!(wl < 1.0 && wg < 1.0, "regret must lower the benefit weights");
+        assert_eq!(t.regrets(), 1);
+        // survivals pull monotonically back toward the priors
+        for _ in 0..100 {
+            t.on_survival();
+        }
+        let (wl2, wr2, wg2) = t.weights();
+        assert!((wl2 - 1.0).abs() < 1e-3 && (wr2 - 1.0).abs() < 1e-3 && (wg2 - 1.0).abs() < 1e-3);
+        assert_eq!(t.regrets(), 1, "survival must not erase the regret count");
+    }
+
+    #[test]
+    fn auto_tuner_window_decay_recovers_from_a_lockout_streak() {
+        // After a regret streak pushes w_ram past the point where the
+        // churn gate refuses everything, no fuse is ever admitted, so no
+        // survival can fire — only the per-window decay can bring the
+        // weights back toward the priors.
+        let p = CostParams::default();
+        let mut t = AutoTuner::new(&p);
+        for _ in 0..8 {
+            t.on_regret();
+        }
+        let (_, locked_ram, _) = t.weights();
+        assert!(locked_ram > 2.0, "streak must have inflated w_ram: {locked_ram}");
+        for _ in 0..1_000 {
+            t.on_window();
+        }
+        let (wl, wr, wg) = t.weights();
+        assert!((wr - 1.0).abs() < 1e-2, "window decay must recover w_ram: {wr}");
+        assert!((wl - 1.0).abs() < 1e-2 && (wg - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn auto_tuner_weights_stay_clamped_under_regret_streaks() {
+        let mut p = CostParams::default();
+        p.tune_step = 10.0;
+        let mut t = AutoTuner::new(&p);
+        for _ in 0..50 {
+            t.on_regret();
+        }
+        let (wl, wr, wg) = t.weights();
+        assert!(wl >= 0.01 && wg >= 0.01, "benefit weights must not hit zero");
+        assert!(wr <= 100.0, "RAM weight must stay bounded");
+        assert_eq!(t.regrets(), 50);
     }
 
     #[test]

@@ -21,6 +21,18 @@
 //! per-function attribution, and a violating group sheds only its
 //! **heaviest** member via [`FusionRequest::Evict`] — a partial split.
 //!
+//! Admission is symmetric since the merge-side planner
+//! ([`crate::config::MergePolicyKind::CostModel`]): past the observation
+//! threshold a candidate pair is *scored* with
+//! [`cost::CostModel::predict_merge`] over the latest per-function window
+//! signals the platform tick feeds in via [`Observer::update_fn_signals`],
+//! and the Fuse request is emitted only when the predicted net benefit
+//! clears `merge_threshold` — refused pairs are re-scored every window as
+//! traffic evolves.  With `auto_tune` on, an admitted fuse that the
+//! defusion controller takes back apart within one cooldown of its cutover
+//! is a **regret**: the [`cost::AutoTuner`] hill-climbs the three weights
+//! the way that would have refused it.
+//!
 //! The observer also maintains the empirically discovered call graph, which
 //! `provuse apps --observed` can dump.
 
@@ -30,12 +42,15 @@ use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, HashSet};
 
 use crate::apps::AppSpec;
-use crate::config::{FusionParams, SplitPolicyKind};
+use crate::config::{FusionParams, MergePolicyKind, SplitPolicyKind};
 use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::Sender;
+use crate::metrics::{AdmissionSample, Recorder, RegretSample};
 
-use cost::CostModel;
+pub use cost::{FnSignals, MergeDecision};
+
+use cost::{AutoTuner, CostModel};
 
 /// A request for the Merger: consolidate two functions' instances, break a
 /// fused group back apart, or evict a single member from a fused group.
@@ -124,6 +139,9 @@ pub struct Observer {
     trust: HashMap<String, String>,
     state: RefCell<ObserverState>,
     tx: Sender<FusionRequest>,
+    /// admission/regret telemetry sink (the platform's recorder; a private
+    /// one in stand-alone tests)
+    metrics: Recorder,
 }
 
 #[derive(Default)]
@@ -136,6 +154,35 @@ struct ObserverState {
     cooldown_until: HashMap<(String, String), f64>,
     /// feedback accounting per live fused group (key: sorted functions)
     groups: BTreeMap<Vec<String>, GroupFeedback>,
+    /// latest windowed per-function signals (merge planner input, set by
+    /// the platform tick each feedback window)
+    fn_signals: HashMap<String, FnSignals>,
+    /// bumped on every signals update; each pair is re-scored at most once
+    /// per version (hot pairs observe thousands of calls per window)
+    signals_version: u64,
+    /// per-pair admission memo: (version scored at, verdict)
+    admission_memo: HashMap<(String, String), (u64, bool)>,
+    /// most recent admission score per pair (introspection)
+    admission_scores: HashMap<(String, String), f64>,
+    /// cost-admitted fuses awaiting the regret verdict
+    pending_fuses: HashMap<(String, String), PendingFuse>,
+    /// total defusion-within-cooldown regrets observed
+    regret_count: u64,
+    /// online weight tuner (Some only under CostModel merge policy with
+    /// auto_tune on)
+    tuner: Option<AutoTuner>,
+}
+
+/// A cost-admitted fuse awaiting its regret verdict.
+#[derive(Debug, Clone, Copy)]
+struct PendingFuse {
+    /// admission time, replaced by the cutover instant once the merge
+    /// completes — the regret window runs from the cutover, not from the
+    /// admission (the pipeline's queue/build/boot time is not the
+    /// planner's fault)
+    at_ms: f64,
+    /// the merge pipeline confirmed the cutover (`fusion_succeeded`)
+    cutover: bool,
 }
 
 /// Per-group controller state.
@@ -179,11 +226,26 @@ impl GroupFeedback {
 
 impl Observer {
     pub fn new(policy: FusionParams, app: &AppSpec, tx: Sender<FusionRequest>) -> Self {
+        Self::with_metrics(policy, app, tx, Recorder::new())
+    }
+
+    /// Like [`Observer::new`], but admission scores and auto-tune regrets
+    /// land in the platform's shared recorder instead of a private one.
+    pub fn with_metrics(
+        policy: FusionParams,
+        app: &AppSpec,
+        tx: Sender<FusionRequest>,
+        metrics: Recorder,
+    ) -> Self {
         let trust = app
             .functions()
             .map(|f| (f.name.clone(), f.trust_domain.clone()))
             .collect();
-        Observer { policy, trust, state: RefCell::new(ObserverState::default()), tx }
+        let mut state = ObserverState::default();
+        if policy.merge_policy == MergePolicyKind::CostModel && policy.auto_tune {
+            state.tuner = Some(AutoTuner::new(&policy.cost));
+        }
+        Observer { policy, trust, state: RefCell::new(state), tx, metrics }
     }
 
     pub fn policy(&self) -> &FusionParams {
@@ -220,10 +282,165 @@ impl Observer {
                 return;
             }
         }
+        // merge-side admission planner: past the observation threshold the
+        // pair must also *pay for itself* under the predicted cost
+        // objective (refusals are not final — the pair is re-scored once
+        // per feedback window as its signals evolve)
+        if self.policy.merge_policy == MergePolicyKind::CostModel
+            && !self.admit_merge(&mut s, caller, callee)
+        {
+            return;
+        }
         s.requested.insert(key.clone());
         drop(s);
         // Receiver gone (merger shut down) is benign: fusion simply stops.
         let _ = self.tx.send(FusionRequest::Fuse { caller: key.0, callee: key.1 });
+    }
+
+    /// Score one candidate pair against the latest window signals; memoized
+    /// per signals version so hot pairs cost one evaluation per window.
+    fn admit_merge(&self, s: &mut ObserverState, caller: &str, callee: &str) -> bool {
+        let key = (caller.to_string(), callee.to_string());
+        if let Some(&(version, verdict)) = s.admission_memo.get(&key) {
+            if version == s.signals_version {
+                return verdict;
+            }
+        }
+        let version = s.signals_version;
+        let caller_sig = s.fn_signals.get(caller).cloned();
+        let callee_sig = s.fn_signals.get(callee).cloned();
+        let (Some(caller_sig), Some(callee_sig)) = (caller_sig, callee_sig) else {
+            // the controller tick has not produced signals yet: refuse for
+            // now, the next window re-scores
+            s.admission_memo.insert(key, (version, false));
+            return false;
+        };
+        let (w_latency, w_ram, w_gbs) = match &s.tuner {
+            Some(t) => t.weights(),
+            None => (self.policy.cost.w_latency, self.policy.cost.w_ram, self.policy.cost.w_gbs),
+        };
+        let model = CostModel::from_params(&self.policy).with_weights(w_latency, w_ram, w_gbs);
+        let decision =
+            model.predict_merge(&caller_sig, &callee_sig, self.policy.cost.merge_threshold);
+        self.metrics.record_admission(AdmissionSample {
+            t_ms: self.metrics.rel_now_ms(),
+            caller: caller.to_string(),
+            callee: callee.to_string(),
+            score: decision.score,
+            admitted: decision.admit,
+        });
+        s.admission_scores.insert(key.clone(), decision.score);
+        s.admission_memo.insert(key.clone(), (version, decision.admit));
+        if decision.admit {
+            s.pending_fuses.insert(
+                key,
+                PendingFuse { at_ms: exec::now().as_millis_f64(), cutover: false },
+            );
+        }
+        decision.admit
+    }
+
+    /// Platform tick input: fresh windowed signals for every routed
+    /// function, fused or not.  Doubles as the regret clock: cost-admitted
+    /// fuses that outlived one cooldown without being defused count as
+    /// survivals and decay the tuned weights back toward the priors.
+    pub fn update_fn_signals(&self, signals: Vec<FnSignals>) {
+        let now = exec::now().as_millis_f64();
+        let mut s = self.state.borrow_mut();
+        s.signals_version += 1;
+        s.fn_signals = signals.into_iter().map(|f| (f.function.clone(), f)).collect();
+        // time-based recovery: a regret streak that locks admission out
+        // would otherwise never see a survival to decay the weights back
+        if let Some(t) = s.tuner.as_mut() {
+            t.on_window();
+        }
+        let cooldown = self.policy.cooldown_ms;
+        let expired: Vec<((String, String), PendingFuse)> = s
+            .pending_fuses
+            .iter()
+            .filter(|(_, p)| {
+                // survivals count from the CUTOVER; an admission whose
+                // pipeline never confirmed (aborted as already-colocated,
+                // or still queued for pathologically long) gets no verdict
+                // and is pruned after a generous horizon
+                (p.cutover && now - p.at_ms > cooldown)
+                    || (!p.cutover && now - p.at_ms > 10.0 * cooldown)
+            })
+            .map(|(k, p)| (k.clone(), *p))
+            .collect();
+        for (key, pending) in expired {
+            s.pending_fuses.remove(&key);
+            if pending.cutover {
+                if let Some(t) = s.tuner.as_mut() {
+                    t.on_survival();
+                }
+            }
+        }
+    }
+
+    /// Regret scan after a completed defusion of `functions`: every
+    /// cost-admitted pair the defusion tears apart — both members in the
+    /// group and, for an eviction, one of them the evicted function —
+    /// within one cooldown of its fuse penalizes the weights that admitted
+    /// it (`evicted = None` means a whole-group split).
+    fn note_defusion_regrets(
+        &self,
+        s: &mut ObserverState,
+        functions: &[String],
+        evicted: Option<&str>,
+    ) {
+        if self.policy.merge_policy != MergePolicyKind::CostModel {
+            return;
+        }
+        let now = exec::now().as_millis_f64();
+        let affected: Vec<((String, String), PendingFuse)> = s
+            .pending_fuses
+            .iter()
+            .filter(|((a, b), _)| {
+                functions.iter().any(|f| f == a)
+                    && functions.iter().any(|f| f == b)
+                    && evicted.map(|e| a == e || b == e).unwrap_or(true)
+            })
+            .map(|(k, p)| (k.clone(), *p))
+            .collect();
+        for (key, pending) in affected {
+            s.pending_fuses.remove(&key);
+            if !pending.cutover {
+                // this admission's own pipeline never confirmed a cutover
+                // (e.g. aborted as already-colocated): no verdict either way
+                continue;
+            }
+            if now - pending.at_ms > self.policy.cooldown_ms {
+                // a defusion this long after the fuse is pressure drift,
+                // not an admission mistake
+                if let Some(t) = s.tuner.as_mut() {
+                    t.on_survival();
+                }
+                continue;
+            }
+            s.regret_count += 1;
+            let (w_latency, w_ram, w_gbs) = match s.tuner.as_mut() {
+                Some(t) => {
+                    t.on_regret();
+                    t.weights()
+                }
+                // regret is telemetry even without the tuner: record the
+                // (unchanged) configured weights
+                None => (
+                    self.policy.cost.w_latency,
+                    self.policy.cost.w_ram,
+                    self.policy.cost.w_gbs,
+                ),
+            };
+            self.metrics.record_regret(RegretSample {
+                t_ms: self.metrics.rel_now_ms(),
+                caller: key.0.clone(),
+                callee: key.1.clone(),
+                w_latency,
+                w_ram,
+                w_gbs,
+            });
+        }
     }
 
     /// Merger feedback: the pair's fusion failed — re-allow after cooldown.
@@ -231,6 +448,8 @@ impl Observer {
         let key = (caller.to_string(), callee.to_string());
         let mut s = self.state.borrow_mut();
         s.requested.remove(&key);
+        // never fused: the admission gets no regret/survival verdict
+        s.pending_fuses.remove(&key);
         s.cooldown_until
             .insert(key, exec::now().as_millis_f64() + self.policy.cooldown_ms);
     }
@@ -251,6 +470,13 @@ impl Observer {
         let now = exec::now().as_millis_f64();
         let mut s = self.state.borrow_mut();
         s.requested.insert((caller.to_string(), callee.to_string()));
+        // the regret window runs from the cutover, not the admission (the
+        // fuse pipeline's queue/build/boot time is not the planner's fault)
+        let pair = (caller.to_string(), callee.to_string());
+        if let Some(pending) = s.pending_fuses.get_mut(&pair) {
+            pending.at_ms = now;
+            pending.cutover = true;
+        }
 
         let mut key: Vec<String> = group.to_vec();
         key.sort();
@@ -387,6 +613,7 @@ impl Observer {
     pub fn split_succeeded(&self, functions: &[String]) {
         let now = exec::now().as_millis_f64();
         let mut s = self.state.borrow_mut();
+        self.note_defusion_regrets(&mut s, functions, None);
         let mut key: Vec<String> = functions.to_vec();
         key.sort();
         s.groups.remove(&key);
@@ -423,6 +650,7 @@ impl Observer {
     pub fn evict_succeeded(&self, functions: &[String], evicted: &str) {
         let now = exec::now().as_millis_f64();
         let mut s = self.state.borrow_mut();
+        self.note_defusion_regrets(&mut s, functions, Some(evicted));
         let mut key: Vec<String> = functions.to_vec();
         key.sort();
         let old = s.groups.remove(&key);
@@ -462,6 +690,36 @@ impl Observer {
             .get(&(caller.to_string(), callee.to_string()))
             .map(|&until| exec::now().as_millis_f64() < until)
             .unwrap_or(false)
+    }
+
+    /// Most recent merge-admission score for a pair (NaN before any
+    /// evaluation, or under the observation-count merge policy).
+    pub fn admission_score(&self, caller: &str, callee: &str) -> f64 {
+        self.state
+            .borrow()
+            .admission_scores
+            .get(&(caller.to_string(), callee.to_string()))
+            .copied()
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Current merge weights: the auto-tuner's hill-climbed values when it
+    /// is armed, the configured priors otherwise.
+    pub fn merge_weights(&self) -> (f64, f64, f64) {
+        match &self.state.borrow().tuner {
+            Some(t) => t.weights(),
+            None => (
+                self.policy.cost.w_latency,
+                self.policy.cost.w_ram,
+                self.policy.cost.w_gbs,
+            ),
+        }
+    }
+
+    /// Total post-fuse regrets (admitted fuses defused within one cooldown
+    /// of their cutover) observed so far.
+    pub fn regret_count(&self) -> u64 {
+        self.state.borrow().regret_count
     }
 
     /// Most recent cost-model objective for a fused group (NaN when
@@ -916,6 +1174,154 @@ mod tests {
             obs.feedback(&[hot()]);
             obs.feedback(&[hot()]);
             assert!(matches!(rx.try_recv(), Some(FusionRequest::Evict { .. })));
+        });
+    }
+
+    // -- merge-side admission planner -----------------------------------------
+
+    fn merge_cost_policy() -> FusionParams {
+        let mut p = FusionParams::default_enabled();
+        p.merge_policy = crate::config::MergePolicyKind::CostModel;
+        p.max_group_ram_mb = 256.0; // RAM reference + cap
+        p.cost.evict_threshold = 2.0;
+        p.cost.merge_threshold = 0.0;
+        p
+    }
+
+    fn sig(function: &str, ram_mb: f64, billed_ms: f64, self_ms: f64, gbs: f64) -> FnSignals {
+        FnSignals {
+            function: function.into(),
+            ram_mb,
+            p95_ms: f64::NAN,
+            gb_seconds: gbs,
+            billed_ms,
+            self_ms,
+            window_s: 2.0,
+        }
+    }
+
+    #[test]
+    fn cost_admission_refuses_until_signals_exist_then_admits_profitable_pair() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(merge_cost_policy());
+            // past the observation threshold but no window signals yet
+            for _ in 0..5 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert!(rx.try_recv().is_none(), "admitted without any signals");
+            // first window: hot light pair (caller mostly blocked)
+            obs.update_fn_signals(vec![
+                sig("a", 70.0, 2_000.0, 400.0, 0.1),
+                sig("b", 70.0, 0.0, 0.0, 0.1),
+            ]);
+            obs.observe_sync_call("a", "b");
+            assert_eq!(rx.try_recv(), Some(fuse("a", "b")));
+            assert!(obs.admission_score("a", "b") > 0.0);
+        });
+    }
+
+    #[test]
+    fn cost_admission_refuses_heavy_pair_despite_observation_count() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(merge_cost_policy());
+            obs.update_fn_signals(vec![
+                sig("a", 70.0, 2_000.0, 100.0, 0.1),
+                // callee alone pushes the predicted fused set past the
+                // evict threshold: churn-gated
+                sig("b", 460.0, 0.0, 0.0, 2.0),
+            ]);
+            for _ in 0..50 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert!(rx.try_recv().is_none(), "heavy pair must be refused admission");
+            assert_eq!(obs.count("a", "b"), 50);
+            // a later window in which the callee slimmed down flips the verdict
+            obs.update_fn_signals(vec![
+                sig("a", 70.0, 2_000.0, 400.0, 0.1),
+                sig("b", 70.0, 0.0, 0.0, 0.1),
+            ]);
+            obs.observe_sync_call("a", "b");
+            assert_eq!(rx.try_recv(), Some(fuse("a", "b")));
+        });
+    }
+
+    #[test]
+    fn cost_admission_refuses_cold_pair_below_merge_threshold() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(merge_cost_policy());
+            // barely any traffic: benefit ~ 0, RAM penalty dominates
+            obs.update_fn_signals(vec![
+                sig("a", 70.0, 20.0, 15.0, 0.001),
+                sig("b", 70.0, 0.0, 0.0, 0.001),
+            ]);
+            for _ in 0..10 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert!(rx.try_recv().is_none());
+            assert!(obs.admission_score("a", "b") < 0.0);
+        });
+    }
+
+    #[test]
+    fn observation_count_policy_is_the_untouched_default() {
+        run_virtual(async {
+            // default_enabled -> ObservationCount: no signals ever needed
+            let (obs, mut rx) = observer(FusionParams::default_enabled());
+            for _ in 0..3 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert_eq!(rx.try_recv(), Some(fuse("a", "b")));
+            assert!(obs.admission_score("a", "b").is_nan());
+        });
+    }
+
+    #[test]
+    fn auto_tune_regret_raises_ram_weight_after_fuse_then_split_inside_cooldown() {
+        run_virtual(async {
+            let mut p = merge_cost_policy();
+            p.auto_tune = true;
+            let (obs, mut rx) = observer(p);
+            obs.update_fn_signals(vec![
+                sig("a", 70.0, 2_000.0, 400.0, 0.1),
+                sig("b", 70.0, 0.0, 0.0, 0.1),
+            ]);
+            for _ in 0..3 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert_eq!(rx.try_recv(), Some(fuse("a", "b")));
+            let group = ["a".to_string(), "b".to_string()];
+            obs.fusion_succeeded("a", "b", &group, 300.0);
+            // defused 2 s after the cutover: well inside the cooldown
+            crate::exec::sleep_ms(2_000.0).await;
+            obs.split_succeeded(&group);
+            assert_eq!(obs.regret_count(), 1);
+            let (w_latency, w_ram, w_gbs) = obs.merge_weights();
+            assert!(w_ram > 1.0, "regret must raise the RAM penalty weight");
+            assert!(w_latency < 1.0 && w_gbs < 1.0);
+        });
+    }
+
+    #[test]
+    fn fuse_surviving_the_cooldown_is_not_a_regret() {
+        run_virtual(async {
+            let mut p = merge_cost_policy();
+            p.auto_tune = true;
+            let (obs, mut rx) = observer(p);
+            obs.update_fn_signals(vec![
+                sig("a", 70.0, 2_000.0, 400.0, 0.1),
+                sig("b", 70.0, 0.0, 0.0, 0.1),
+            ]);
+            for _ in 0..3 {
+                obs.observe_sync_call("a", "b");
+            }
+            assert!(rx.try_recv().is_some());
+            let group = ["a".to_string(), "b".to_string()];
+            obs.fusion_succeeded("a", "b", &group, 300.0);
+            // outlive the 10 s default cooldown, then defuse
+            crate::exec::sleep_ms(11_000.0).await;
+            obs.split_succeeded(&group);
+            assert_eq!(obs.regret_count(), 0);
+            assert_eq!(obs.merge_weights(), (1.0, 1.0, 1.0));
         });
     }
 

@@ -13,7 +13,9 @@
 //! provuse dump-config         print platform calibration as JSON
 //! ```
 
-use provuse::config::{ComputeMode, PlatformConfig, PlatformKind, SplitPolicyKind, WorkloadConfig};
+use provuse::config::{
+    ComputeMode, MergePolicyKind, PlatformConfig, PlatformKind, SplitPolicyKind, WorkloadConfig,
+};
 use provuse::error::Result;
 use provuse::util::args::Args;
 use provuse::{apps, experiments, runtime};
@@ -74,6 +76,15 @@ fn apply_fusion_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
     if let Some(policy) = args.flag("cost-model") {
         f.split_policy = SplitPolicyKind::parse(policy)?;
     }
+    // `--merge-policy cost` switches admission to the merge-side planner;
+    // `--merge-policy observation-count` forces the seed behavior
+    if let Some(policy) = args.flag("merge-policy") {
+        f.merge_policy = MergePolicyKind::parse(policy)?;
+    }
+    f.cost.merge_threshold = args.f64_or("merge-threshold", f.cost.merge_threshold)?;
+    if args.has("auto-tune") {
+        f.auto_tune = true;
+    }
     f.cost.evict_threshold = args.f64_or("evict-threshold", f.cost.evict_threshold)?;
     f.cost.w_latency = args.f64_or("w-latency", f.cost.w_latency)?;
     f.cost.w_ram = args.f64_or("w-ram", f.cost.w_ram)?;
@@ -123,6 +134,16 @@ fn dispatch(args: &Args) -> Result<()> {
             p.w_latency = args.f64_or("w-latency", p.w_latency)?;
             p.w_ram = args.f64_or("w-ram", p.w_ram)?;
             p.w_gbs = args.f64_or("w-gbs", p.w_gbs)?;
+            // mixed scenario: `--merge-policy observation-count` runs the
+            // fuse->defuse flap negative control
+            if let Some(policy) = args.flag("merge-policy") {
+                p.merge_policy = MergePolicyKind::parse(policy)?;
+            }
+            p.merge_threshold = args.f64_or("merge-threshold", p.merge_threshold)?;
+            if args.has("auto-tune") {
+                p.auto_tune = true;
+            }
+            p.cold_rps = args.f64_or("cold-rps", p.cold_rps)?;
             for flag in ["no-defusion", "no-transitive", "max-group-size", "cost-model"] {
                 if args.has(flag) {
                     return Err(provuse::Error::Config(format!(
@@ -270,8 +291,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20 figure5              paper Fig. 5 (IOT/tinyFaaS latency series)\n\
                  \x20 figure6              paper Fig. 6 + §5.2 latency table\n\
                  \x20 figure7 [--smoke]    ours: feedback loop; --app chain (RAM-cap split,\n\
-                 \x20   [--app chain|iot]  re-fuse) or --app iot (cost-model partial defusion:\n\
-                 \x20                      asymmetric pressure evicts the heaviest function)\n\
+                 \x20   [--app chain|iot|  re-fuse), --app iot (cost-model partial defusion),\n\
+                 \x20    mixed]            or --app mixed (merge-side admission planner;\n\
+                 \x20                      --merge-policy observation-count = flap control)\n\
                  \x20 ram-table            §5.2 RAM reductions\n\
                  \x20 cost-table           TAB-COST: double-billing elimination in $\n\
                  \x20 sweep --dim D        ablations (rate|hop|policy|depth|arrival)\n\
@@ -285,7 +307,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20             --max-group-ram MB --split-regression F --hysteresis N\n\
                  \x20             --feedback-interval-ms MS --no-defusion --no-transitive\n\
                  cost model  : --cost-model [threshold|cost] --evict-threshold F\n\
-                 \x20             --w-latency F --w-ram F --w-gbs F"
+                 \x20             --w-latency F --w-ram F --w-gbs F\n\
+                 merge side  : --merge-policy [observation-count|cost] --merge-threshold F\n\
+                 \x20             --auto-tune (hill-climb weights on post-fuse regret)"
             );
             Ok(())
         }

@@ -106,6 +106,21 @@ impl Merger {
             return Err(Error::FusionAborted("transitive growth disabled".into()));
         }
         admit_group(policy, a.fn_count() + b.fn_count())?;
+        // Anti-flap: the observed pair was cooldown-checked at admission,
+        // but either endpoint may meanwhile be fused with third parties —
+        // a transitive merge must not reunite ANY pair a recent defusion
+        // put on cooldown before that cooldown expires.
+        for (x, _) in a.functions() {
+            for (y, _) in b.functions() {
+                if ctx.observer.pair_in_cooldown(&x, &y)
+                    || ctx.observer.pair_in_cooldown(&y, &x)
+                {
+                    return Err(Error::FusionAborted(format!(
+                        "pair ({x}, {y}) is cooling down after a defusion"
+                    )));
+                }
+            }
+        }
 
         let t_start = exec::now();
 

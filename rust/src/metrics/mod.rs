@@ -97,6 +97,59 @@ pub struct FnRamSample {
     pub ram_mb: f64,
 }
 
+/// One merge-admission evaluation by the cost-aware planner (recorded each
+/// time a candidate pair is re-scored against fresh window signals).
+#[derive(Debug, Clone)]
+pub struct AdmissionSample {
+    pub t_ms: f64,
+    pub caller: String,
+    pub callee: String,
+    /// predicted net benefit (see `fusion::cost::CostModel::predict_merge`)
+    pub score: f64,
+    pub admitted: bool,
+}
+
+/// One auto-tune regret: a cost-admitted fuse was evicted/split within one
+/// cooldown of its cutover; the sample records the weights *after* the
+/// hill-climb step so the series doubles as the weight trajectory.
+#[derive(Debug, Clone)]
+pub struct RegretSample {
+    pub t_ms: f64,
+    pub caller: String,
+    pub callee: String,
+    pub w_latency: f64,
+    pub w_ram: f64,
+    pub w_gbs: f64,
+}
+
+/// Attribute a fused instance's RAM to its members: each function keeps its
+/// code footprint and receives a share of everything the code does not
+/// explain (base runtime + in-flight working sets); shares sum to
+/// `total_mb` whenever it covers the members' code footprints (always true
+/// for a live instance).  `members` is `(function, code_mb)`.
+///
+/// `in_flight` is the per-member in-flight request count the overhead share
+/// *should* be weighted by (ROADMAP: working-set RAM by in-flight
+/// ownership).  The platform does not yet track ownership per member, so
+/// today the parameter is ignored and the overhead is split **equally** —
+/// see the `#[should_panic]` tripwire test below, which must be flipped to
+/// a plain assertion when weighting lands.
+pub fn attribute_ram(
+    total_mb: f64,
+    members: &[(String, f64)],
+    _in_flight: &[u64],
+) -> Vec<(String, f64)> {
+    if members.is_empty() {
+        return Vec::new();
+    }
+    let code_total: f64 = members.iter().map(|(_, mb)| mb).sum();
+    let overhead = (total_mb - code_total).max(0.0) / members.len() as f64;
+    members
+        .iter()
+        .map(|(name, code_mb)| (name.clone(), code_mb + overhead))
+        .collect()
+}
+
 /// One completed partial split: a single function evicted from a fused
 /// group onto its own redeployed instance while the remainder stays fused.
 #[derive(Debug, Clone)]
@@ -129,6 +182,8 @@ struct RecorderInner {
     merges: RefCell<Vec<MergeEvent>>,
     splits: RefCell<Vec<SplitEvent>>,
     evicts: RefCell<Vec<EvictEvent>>,
+    admissions: RefCell<Vec<AdmissionSample>>,
+    regrets: RefCell<Vec<RegretSample>>,
     counters: RefCell<BTreeMap<&'static str, u64>>,
     /// absolute virtual-time (ms) all recorded timestamps are relative to
     epoch_ms: std::cell::Cell<f64>,
@@ -183,6 +238,14 @@ impl Recorder {
         self.inner.evicts.borrow_mut().push(event);
     }
 
+    pub fn record_admission(&self, sample: AdmissionSample) {
+        self.inner.admissions.borrow_mut().push(sample);
+    }
+
+    pub fn record_regret(&self, sample: RegretSample) {
+        self.inner.regrets.borrow_mut().push(sample);
+    }
+
     pub fn bump(&self, name: &'static str) {
         *self.inner.counters.borrow_mut().entry(name).or_insert(0) += 1;
     }
@@ -225,6 +288,14 @@ impl Recorder {
         self.inner.fn_ram.borrow().clone()
     }
 
+    pub fn admissions(&self) -> Vec<AdmissionSample> {
+        self.inner.admissions.borrow().clone()
+    }
+
+    pub fn regrets(&self) -> Vec<RegretSample> {
+        self.inner.regrets.borrow().clone()
+    }
+
     /// p95 of one function's handler latencies over `[from_ms, to_ms)`, or
     /// NaN when the window holds fewer than `min_n` samples — the per-route
     /// signal the cost model attributes blame with.
@@ -245,6 +316,22 @@ impl Recorder {
                 .collect(),
         );
         if q.len() >= min_n { q.p95() } else { f64::NAN }
+    }
+
+    /// Summed handler self-time (ms) of one function over `[from_ms,
+    /// to_ms)` — with the billing ledger's windowed duration this yields
+    /// the caller's blocked (double-billed) time, the merge planner's
+    /// hop-savings signal.  Same binary-search bound as [`Self::fn_p95_window`].
+    pub fn fn_self_ms_window(&self, function: &str, from_ms: f64, to_ms: f64) -> f64 {
+        let borrowed = self.inner.fn_latencies.borrow();
+        let series: &[FnSample] = &borrowed;
+        let start = series.partition_point(|s| s.t_ms < from_ms);
+        series[start..]
+            .iter()
+            .take_while(|s| s.t_ms < to_ms)
+            .filter(|s| s.function == function)
+            .map(|s| s.handler_ms)
+            .sum()
     }
 
     /// RAM attribution samples of one fused group (`+`-joined sorted names).
@@ -406,6 +493,32 @@ impl Recorder {
         }
         out
     }
+
+    /// CSV export of merge-admission evaluations
+    /// (`t_ms,caller,callee,score,admitted`).
+    pub fn admissions_csv(&self) -> String {
+        let mut out = String::from("t_ms,caller,callee,score,admitted\n");
+        for s in self.inner.admissions.borrow().iter() {
+            out.push_str(&format!(
+                "{:.3},{},{},{:.4},{}\n",
+                s.t_ms, s.caller, s.callee, s.score, s.admitted
+            ));
+        }
+        out
+    }
+
+    /// CSV export of auto-tune regrets + post-step weights
+    /// (`t_ms,caller,callee,w_latency,w_ram,w_gbs`).
+    pub fn regrets_csv(&self) -> String {
+        let mut out = String::from("t_ms,caller,callee,w_latency,w_ram,w_gbs\n");
+        for s in self.inner.regrets.borrow().iter() {
+            out.push_str(&format!(
+                "{:.3},{},{},{:.4},{:.4},{:.4}\n",
+                s.t_ms, s.caller, s.callee, s.w_latency, s.w_ram, s.w_gbs
+            ));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -524,5 +637,95 @@ mod tests {
         let r2 = r.clone();
         r2.record_latency(0.0, 1.0);
         assert_eq!(r.request_count(), 1);
+    }
+
+    #[test]
+    fn admission_and_regret_series_recorded() {
+        let r = Recorder::new();
+        r.record_admission(AdmissionSample {
+            t_ms: 5.0,
+            caller: "a".into(),
+            callee: "b".into(),
+            score: 0.42,
+            admitted: true,
+        });
+        r.record_admission(AdmissionSample {
+            t_ms: 7.0,
+            caller: "a".into(),
+            callee: "big".into(),
+            score: -1.5,
+            admitted: false,
+        });
+        r.record_regret(RegretSample {
+            t_ms: 30.0,
+            caller: "a".into(),
+            callee: "b".into(),
+            w_latency: 0.8,
+            w_ram: 1.25,
+            w_gbs: 0.8,
+        });
+        assert_eq!(r.admissions().len(), 2);
+        assert!(r.admissions()[1].score < 0.0 && !r.admissions()[1].admitted);
+        assert_eq!(r.regrets().len(), 1);
+        assert!(r.admissions_csv().contains("5.000,a,b,0.4200,true"));
+        assert!(r.admissions_csv().contains("a,big,-1.5000,false"));
+        assert!(r.regrets_csv().contains("30.000,a,b,0.8000,1.2500,0.8000"));
+    }
+
+    #[test]
+    fn fn_self_ms_window_sums_only_the_window() {
+        let r = Recorder::new();
+        for i in 0..10 {
+            r.record_fn_latency(i as f64 * 100.0, "hot".into(), 20.0);
+            r.record_fn_latency(i as f64 * 100.0, "cool".into(), 5.0);
+        }
+        assert_eq!(r.fn_self_ms_window("hot", 0.0, 1_000.0), 200.0);
+        // [from, to) bounds, per-function filter, empty windows
+        assert_eq!(r.fn_self_ms_window("hot", 0.0, 500.0), 100.0);
+        assert_eq!(r.fn_self_ms_window("cool", 300.0, 600.0), 15.0);
+        assert_eq!(r.fn_self_ms_window("ghost", 0.0, 1_000.0), 0.0);
+    }
+
+    // -- working-set RAM attribution (ISSUE 3 satellite) ----------------------
+
+    fn members(specs: &[(&str, f64)]) -> Vec<(String, f64)> {
+        specs.iter().map(|(n, mb)| (n.to_string(), *mb)).collect()
+    }
+
+    #[test]
+    fn attribute_ram_splits_overhead_equally_and_sums_to_total() {
+        // Documented current behavior: each member keeps its code footprint
+        // and the unexplained remainder (base runtime + in-flight working
+        // sets) is split EQUALLY, regardless of who owns the in-flight
+        // requests.
+        let shares = attribute_ram(100.0, &members(&[("a", 10.0), ("b", 30.0)]), &[]);
+        assert_eq!(shares.len(), 2);
+        assert_eq!(shares[0], ("a".to_string(), 40.0)); // 10 + 60/2
+        assert_eq!(shares[1], ("b".to_string(), 60.0)); // 30 + 60/2
+        let sum: f64 = shares.iter().map(|(_, mb)| mb).sum();
+        assert!((sum - 100.0).abs() < 1e-12);
+        // code exceeding the measured total never attributes negative RAM
+        let tight = attribute_ram(30.0, &members(&[("a", 20.0), ("b", 20.0)]), &[]);
+        assert_eq!(tight[0].1, 20.0);
+        assert_eq!(tight[1].1, 20.0);
+        assert!(attribute_ram(50.0, &[], &[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "in-flight-weighted attribution not yet implemented")]
+    fn attribute_ram_in_flight_weighting_is_still_todo() {
+        // ROADMAP (PR 2 remainder): working-set RAM should follow in-flight
+        // ownership — a member holding 9 of 10 in-flight requests should be
+        // attributed more of the overhead than an idle one.  Today the
+        // in_flight parameter is ignored, so this tripwire fails; when
+        // weighting lands, flip it to a plain assertion (and delete the
+        // `#[should_panic]`).
+        let shares = attribute_ram(100.0, &members(&[("busy", 10.0), ("idle", 10.0)]), &[9, 1]);
+        assert!(
+            shares[0].1 > shares[1].1,
+            "in-flight-weighted attribution not yet implemented: busy={} idle={}",
+            shares[0].1,
+            shares[1].1
+        );
     }
 }

@@ -12,13 +12,13 @@ use std::rc::Rc;
 
 use crate::apps::AppSpec;
 use crate::billing::BillingLedger;
-use crate::config::{ComputeMode, PlatformConfig, PlatformKind};
+use crate::config::{ComputeMode, MergePolicyKind, PlatformConfig, PlatformKind};
 use crate::containerd::{ContainerRuntime, FsManifest, ImageId, Instance, InstanceState};
 use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::mpsc;
 use crate::exec::SimInstant;
-use crate::fusion::{FnAttribution, GroupSample, Observer};
+use crate::fusion::{FnAttribution, FnSignals, GroupSample, Observer};
 use crate::gateway::Gateway;
 use crate::handler::Dispatcher;
 use crate::merger::{Merger, MergerCtx};
@@ -121,6 +121,21 @@ impl Platform {
     /// function, all routes installed, Merger + RAM sampler running.
     /// Resolves when every initial instance is healthy.
     pub async fn deploy(app: AppSpec, config: PlatformConfig) -> Result<Rc<Platform>> {
+        // The merge planner's only signal source is the controller tick: a
+        // disabled tick would silently refuse every candidate forever
+        // (admit_merge never sees window signals), so reject the config
+        // instead of shipping a platform that quietly never fuses.
+        if config.fusion.enabled
+            && config.fusion.merge_policy == MergePolicyKind::CostModel
+            && config.fusion.feedback_interval_ms <= 0.0
+        {
+            return Err(crate::error::Error::Config(
+                "merge-policy `cost` needs a positive --feedback-interval-ms: \
+                 the admission planner scores pairs from controller-tick window \
+                 signals"
+                    .into(),
+            ));
+        }
         let config = Rc::new(config);
         let containers = ContainerRuntime::new(Rc::clone(&config));
         let gateway = Gateway::new();
@@ -132,9 +147,15 @@ impl Platform {
             mode => ComputeService::new(ArtifactSet::cached(&config.artifacts_dir)?, mode),
         };
 
-        // fusion plumbing
+        // fusion plumbing (the shared recorder receives the merge planner's
+        // admission scores + auto-tune regrets)
         let (fusion_tx, fusion_rx) = mpsc();
-        let observer = Rc::new(Observer::new(config.fusion.clone(), &app, fusion_tx));
+        let observer = Rc::new(Observer::with_metrics(
+            config.fusion.clone(),
+            &app,
+            fusion_tx,
+            metrics.clone(),
+        ));
 
         // initial deployment: one image + instance per function; the images
         // are retained for the lifetime of the platform so the defusion
@@ -210,14 +231,18 @@ impl Platform {
             });
         }
 
-        // Defusion controller: every feedback interval, attribute RAM (group
-        // and per-function), per-function handler p95s, and the billing
-        // ledger's trailing window to each live fused group, then hand the
-        // samples to the Observer, which closes the loop by emitting
-        // Split/Evict requests for regressing groups.
+        // Controller loop: every feedback interval, attribute RAM (group and
+        // per-function), per-function handler p95s, and the billing ledger's
+        // trailing window.  Fused groups feed the *defusion* side
+        // (Observer::feedback -> Split/Evict); every routed function —
+        // fused or not — additionally feeds the *merge planner*
+        // (Observer::update_fn_signals -> cost-aware Fuse admission), so
+        // the loop also runs when defusion is off but the cost-model merge
+        // policy needs its window signals.
         if config.fusion.enabled
-            && config.fusion.defusion
             && config.fusion.feedback_interval_ms > 0.0
+            && (config.fusion.defusion
+                || config.fusion.merge_policy == MergePolicyKind::CostModel)
         {
             let stop = Rc::clone(&sampler_stop);
             let gateway = gateway.clone();
@@ -234,7 +259,11 @@ impl Platform {
                     }
                     let t = metrics.rel_now_ms();
                     let from = t - interval;
+                    let window_s = interval / 1e3;
                     let mut samples = Vec::new();
+                    // per-function RAM shares inside fused groups, reused by
+                    // the merge-planner signals below
+                    let mut fused_ram_share: BTreeMap<String, f64> = BTreeMap::new();
                     for inst in fused_groups_of(&gateway) {
                         let hosted = inst.functions();
                         let mut functions: Vec<String> =
@@ -254,19 +283,17 @@ impl Platform {
                         } else {
                             f64::NAN
                         };
-                        // per-function attribution: code footprint + an
-                        // equal share of everything the code does not
-                        // explain (base runtime + in-flight working sets),
-                        // so the members sum to the instance's RAM
-                        let code_total: f64 = hosted.iter().map(|(_, mb)| mb).sum();
-                        let overhead = (ram_mb - code_total).max(0.0) / hosted.len() as f64;
-                        let mut per_fn = Vec::with_capacity(hosted.len());
-                        for (name, code_mb) in &hosted {
-                            let fn_ram = code_mb + overhead;
-                            metrics.record_fn_ram(t, group_key.clone(), name.clone(), fn_ram);
+                        // per-function attribution (equal-share overhead;
+                        // see metrics::attribute_ram): members sum to the
+                        // instance's RAM
+                        let shares = crate::metrics::attribute_ram(ram_mb, &hosted, &[]);
+                        let mut per_fn = Vec::with_capacity(shares.len());
+                        for (name, fn_ram) in &shares {
+                            metrics.record_fn_ram(t, group_key.clone(), name.clone(), *fn_ram);
+                            fused_ram_share.insert(name.clone(), *fn_ram);
                             per_fn.push(FnAttribution {
                                 function: name.clone(),
-                                ram_mb: fn_ram,
+                                ram_mb: *fn_ram,
                                 p95_ms: metrics.fn_p95_window(
                                     name,
                                     from,
@@ -280,10 +307,35 @@ impl Platform {
                             functions,
                             ram_mb,
                             window_p95_ms,
-                            window_s: interval / 1e3,
+                            window_s,
                             per_fn,
                         });
                     }
+                    // merge planner input: window signals for EVERY routed
+                    // function (a singleton's attributed RAM is its whole
+                    // instance — what fusing it would actually add)
+                    let mut signals = Vec::new();
+                    for (function, inst) in gateway.snapshot() {
+                        let ram_mb = fused_ram_share
+                            .get(&function)
+                            .copied()
+                            .unwrap_or_else(|| inst.ram_mb());
+                        signals.push(FnSignals {
+                            function: function.clone(),
+                            ram_mb,
+                            p95_ms: metrics.fn_p95_window(
+                                &function,
+                                from,
+                                t,
+                                crate::metrics::MIN_WINDOW_SAMPLES,
+                            ),
+                            gb_seconds: billing.gb_seconds_window(&function, from, t),
+                            billed_ms: billing.billed_ms_window(&function, from, t),
+                            self_ms: metrics.fn_self_ms_window(&function, from, t),
+                            window_s,
+                        });
+                    }
+                    observer.update_fn_signals(signals);
                     if !samples.is_empty() {
                         observer.feedback(&samples);
                     }
@@ -457,6 +509,60 @@ mod tests {
             assert!(p.metrics.splits().is_empty());
             assert!(p.metrics.evicts().is_empty());
             // the quiescent topology satisfies the routing invariants
+            routing_invariants(&p).unwrap();
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn cost_merge_policy_without_a_feedback_tick_is_rejected() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.fusion.merge_policy = MergePolicyKind::CostModel;
+            cfg.fusion.feedback_interval_ms = 0.0;
+            let err = Platform::deploy(apps::chain(2), cfg).await.unwrap_err();
+            assert!(
+                err.to_string().contains("feedback-interval-ms"),
+                "unexpected error: {err}"
+            );
+        });
+    }
+
+    #[test]
+    fn cost_merge_policy_fuses_profitable_pair_from_real_signals() {
+        run_virtual(async {
+            // defusion OFF: the controller loop must still run purely for
+            // the merge planner's window signals
+            let mut cfg = cfg();
+            cfg.latency.image_build_ms = 300.0;
+            cfg.latency.boot_ms = 150.0;
+            cfg.fusion.min_observations = 3;
+            cfg.fusion.defusion = false;
+            cfg.fusion.merge_policy = MergePolicyKind::CostModel;
+            cfg.fusion.feedback_interval_ms = 1_000.0;
+            let p = Platform::deploy(apps::chain(2), cfg).await.unwrap();
+            // hot traffic: 20 rps keeps the caller blocked most of the wall
+            // clock, so the predicted hop savings dwarf the RAM penalty
+            let wl = crate::config::WorkloadConfig {
+                requests: 100,
+                rate_rps: 20.0,
+                seed: 5,
+                timeout_ms: 60_000.0,
+            };
+            crate::workload::run(Rc::clone(&p), wl).await.unwrap();
+            exec::sleep_ms(20_000.0).await;
+            assert_eq!(
+                p.group_members("s0"),
+                vec!["s0".to_string(), "s1".to_string()],
+                "profitable hot pair must be admitted and fused"
+            );
+            // the planner's telemetry surfaced in the shared recorder
+            let admissions = p.metrics.admissions();
+            assert!(
+                admissions.iter().any(|a| a.caller == "s0" && a.callee == "s1" && a.admitted),
+                "no admitted evaluation recorded: {admissions:?}"
+            );
+            assert!(p.observer.admission_score("s0", "s1").is_finite());
             routing_invariants(&p).unwrap();
             p.shutdown();
         });

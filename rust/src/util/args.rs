@@ -145,4 +145,20 @@ mod tests {
         let b = parse("cmd --cost-model threshold");
         assert_eq!(b.flag("cost-model"), Some("threshold"));
     }
+
+    #[test]
+    fn merge_planner_flags_parse() {
+        // the merge-side planner's CLI surface: `--merge-policy` takes a
+        // value (or "true" alone, which MergePolicyKind::parse maps to the
+        // cost planner), `--auto-tune` is a boolean switch, and
+        // `--merge-threshold` is a plain number
+        let a = parse("experiment --merge-policy cost --merge-threshold 0.25 --auto-tune");
+        assert_eq!(a.flag("merge-policy"), Some("cost"));
+        assert_eq!(a.f64_or("merge-threshold", 0.0).unwrap(), 0.25);
+        assert!(a.has("auto-tune"));
+        let b = parse("experiment --merge-policy observation-count");
+        assert_eq!(b.flag("merge-policy"), Some("observation-count"));
+        let c = parse("experiment --merge-policy");
+        assert_eq!(c.flag("merge-policy"), Some("true"));
+    }
 }

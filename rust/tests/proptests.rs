@@ -5,7 +5,9 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use provuse::apps::{AppSpec, CallMode, CallSpec, FunctionSpec};
-use provuse::config::{ComputeMode, PlatformConfig, PlatformKind, WorkloadConfig};
+use provuse::config::{
+    ComputeMode, MergePolicyKind, PlatformConfig, PlatformKind, SplitPolicyKind, WorkloadConfig,
+};
 use provuse::containerd::ImageId;
 use provuse::exec::run_virtual;
 use provuse::fusion::SplitReason;
@@ -296,6 +298,127 @@ fn prop_fuse_split_evict_interleavings_preserve_invariants() {
             provuse::exec::sleep_ms(25_000.0).await; // drains settle
             if let Err(violation) = routing_invariants(&p) {
                 panic!("invariant violated after interleaving: {violation}");
+            }
+            p.shutdown();
+        });
+    });
+}
+
+#[test]
+fn prop_controller_loop_fuzz_preserves_invariants_and_never_flaps() {
+    // ISSUE 3 satellite (ROADMAP: "fuzz the controller loop itself"): the
+    // REAL controller tick — not hand-driven pipelines — runs at a
+    // randomized feedback interval under a randomized policy mix (split
+    // threshold vs cost model, merge observation-count vs cost planner,
+    // auto-tune on/off) while entry + targeted per-route traffic races it.
+    // Afterwards: `routing_invariants` holds, no request was dropped, and
+    // no pair that a defusion tore apart was re-fused within one cooldown
+    // of that defusion (the anti-flap contract).
+    check("controller loop fuzz", 10, |g| {
+        let app = random_app(g);
+        let kind = *g.choose(&[PlatformKind::Tiny, PlatformKind::Kube]);
+        let mut cfg = fast_cfg(g, kind);
+        cfg.fusion.feedback_interval_ms = g.f64(300.0, 2_500.0);
+        cfg.fusion.split_hysteresis_windows = g.usize(1, 3) as u32;
+        cfg.fusion.cooldown_ms = g.f64(4_000.0, 15_000.0);
+        cfg.fusion.max_group_ram_mb = g.f64(60.0, 250.0);
+        cfg.fusion.split_p95_regression = g.f64(0.2, 1.5);
+        cfg.fusion.split_policy = if g.bool() {
+            SplitPolicyKind::CostModel
+        } else {
+            SplitPolicyKind::Threshold
+        };
+        cfg.fusion.cost.evict_threshold = g.f64(0.5, 3.0);
+        if g.bool() {
+            cfg.fusion.merge_policy = MergePolicyKind::CostModel;
+            cfg.fusion.cost.merge_threshold = g.f64(-0.5, 0.5);
+            cfg.fusion.auto_tune = g.bool();
+        }
+        let n_targeted = g.usize(1, 3);
+        let wl_seed = g.rng().next_u64();
+        let targeted_rps = g.f64(5.0, 40.0);
+        let entry_requests = g.usize(30, 120) as u64;
+        run_virtual(async move {
+            let p = Platform::deploy(app, cfg).await.unwrap();
+            let names: Vec<String> =
+                p.app.functions().map(|f| f.name.clone()).collect();
+            let mut g = Gen::replay(wl_seed);
+            let mut handles = Vec::new();
+            handles.push(provuse::exec::spawn(workload::run(
+                Rc::clone(&p),
+                WorkloadConfig {
+                    requests: entry_requests,
+                    rate_rps: g.f64(5.0, 30.0),
+                    seed: g.rng().next_u64(),
+                    timeout_ms: 120_000.0,
+                },
+            )));
+            for _ in 0..n_targeted {
+                let target = g.choose(&names).clone();
+                let wl = WorkloadConfig {
+                    requests: g.usize(20, 100) as u64,
+                    rate_rps: targeted_rps,
+                    seed: g.rng().next_u64(),
+                    timeout_ms: 120_000.0,
+                };
+                let p2 = Rc::clone(&p);
+                handles.push(provuse::exec::spawn(async move {
+                    workload::run_targeted(
+                        p2,
+                        wl,
+                        provuse::workload::Arrival::Constant,
+                        Some(target.as_str()),
+                    )
+                    .await
+                }));
+            }
+            for h in handles {
+                let report = h.await.unwrap();
+                assert_eq!(report.failed, 0, "dropped requests under the controller");
+            }
+            // let every in-flight pipeline and drain settle
+            provuse::exec::sleep_ms(30_000.0).await;
+            if let Err(violation) = routing_invariants(&p) {
+                panic!("invariant violated under the live controller: {violation}");
+            }
+            // anti-flap oracle over the full event timeline: for every
+            // defusion, no merge re-joins one of its torn-apart pairs
+            // within one cooldown.  A split tears every pair apart; an
+            // evict tears only the (evicted, member) pairs.
+            let cooldown = p.config.fusion.cooldown_ms;
+            let merges = p.metrics.merges();
+            let mut torn: Vec<(f64, String, String)> = Vec::new();
+            for s in p.metrics.splits() {
+                for a in &s.functions {
+                    for b in &s.functions {
+                        if a < b {
+                            torn.push((s.t_ms, a.clone(), b.clone()));
+                        }
+                    }
+                }
+            }
+            for e in p.metrics.evicts() {
+                for m in e.group.iter().filter(|f| **f != e.function) {
+                    let (a, b) = if *m < e.function {
+                        (m.clone(), e.function.clone())
+                    } else {
+                        (e.function.clone(), m.clone())
+                    };
+                    torn.push((e.t_ms, a, b));
+                }
+            }
+            for (t, a, b) in &torn {
+                for m in &merges {
+                    let rejoined = m.functions.iter().any(|f| f == a)
+                        && m.functions.iter().any(|f| f == b);
+                    if rejoined && m.t_ms > *t && m.t_ms < *t + cooldown {
+                        panic!(
+                            "fuse->defuse->fuse flap: ({a}, {b}) defused at {t:.0} ms \
+                             re-merged at {:.0} ms inside the {cooldown:.0} ms cooldown",
+                            m.t_ms
+                        );
+                    }
+                }
             }
             p.shutdown();
         });

@@ -1,0 +1,280 @@
+//! Live instance migration: move a serving instance to another node with
+//! zero dropped requests.
+//!
+//! Pipeline per migration (the Merger cutover contract, re-targeted):
+//!
+//! 1. resolve the live instance through the gateway and verify the
+//!    sampled membership still matches the live topology (staleness gate —
+//!    a racing fuse/split/evict aborts the migration, never corrupts it);
+//! 2. capacity-check the target node (a migration that would breach the
+//!    target's RAM capacity is refused up front);
+//! 3. launch the same image on the target node and shrink its active set
+//!    to match the source (an earlier eviction must not resurrect);
+//! 4. health-gate the replacement before any traffic moves;
+//! 5. re-verify the topology (the boot wait yielded), then atomically
+//!    swap every hosted function's route to the replacement;
+//! 6. drain the source and terminate it once its in-flight requests
+//!    finish — a request routed before the swap completes on the source.
+//!
+//! Failure at any stage rolls back: the never-routed replacement is torn
+//! down and the source keeps serving.
+
+use std::rc::Rc;
+
+use crate::config::PlatformConfig;
+use crate::containerd::Instance;
+use crate::error::{Error, Result};
+use crate::exec;
+use crate::gateway::Gateway;
+use crate::metrics::{MigrationEvent, Recorder};
+use crate::platform::deployer::Deployer;
+
+use super::{Cluster, NodeId};
+
+/// Live-migration engine (cheaply clonable).
+#[derive(Clone)]
+pub struct Migrator {
+    cluster: Cluster,
+    /// platform-flavored launcher: a Kube migration pays the same
+    /// reconcile-tick delay as every other pipeline's replacement launch
+    deployer: Deployer,
+    gateway: Gateway,
+    metrics: Recorder,
+    config: Rc<PlatformConfig>,
+}
+
+impl Migrator {
+    pub fn new(
+        cluster: Cluster,
+        deployer: Deployer,
+        gateway: Gateway,
+        metrics: Recorder,
+        config: Rc<PlatformConfig>,
+    ) -> Self {
+        Migrator { cluster, deployer, gateway, metrics, config }
+    }
+
+    /// Move the live instance hosting exactly `functions` (any order) to
+    /// node `to`.  Returns the replacement instance.  `reason` lands in
+    /// the migration event ("node_pressure", "fusion_colocation", ...).
+    pub async fn migrate(
+        &self,
+        functions: &[String],
+        to: NodeId,
+        reason: &'static str,
+    ) -> Result<Rc<Instance>> {
+        self.metrics.bump("migration_requests");
+        let (source, expected) = self.resolve_live(functions)?;
+        let from = self.cluster.node_of(source.id()).ok_or_else(|| {
+            Error::MigrationAborted(format!("instance {} has no node assignment", source.id()))
+        })?;
+        if from == to {
+            return Err(Error::MigrationAborted(format!(
+                "migration of [{}] is a no-op: already on {to}",
+                expected.join("+")
+            )));
+        }
+        // capacity gate: the replacement lands with the source's current
+        // footprint (its in-flight working sets drain on the source, so
+        // this slightly over-reserves — erring toward refusal)
+        let target = self.cluster.node(to)?;
+        if !target.fits(source.ram_mb()) {
+            self.metrics.bump("migration_refused_capacity");
+            return Err(Error::MigrationAborted(format!(
+                "migrating [{}] ({:.0} MiB) would breach {to}'s capacity \
+                 ({:.0} MiB headroom)",
+                expected.join("+"),
+                source.ram_mb(),
+                target.headroom_mb()
+            )));
+        }
+
+        let t_start = exec::now();
+
+        // launch the replacement from the source's image on the target
+        // (through the platform-flavored deployer) and mirror the source's
+        // *active* set (evicted members stay evicted)
+        let fresh = self.deployer.launch(source.image(), to).await?;
+        for (f, _) in fresh.functions() {
+            if !source.hosts(&f) {
+                fresh.evict_function(&f)?;
+            }
+        }
+
+        self.await_healthy(&fresh).await.inspect_err(|_| {
+            self.metrics.bump("migration_health_timeouts");
+            self.rollback(&fresh);
+        })?;
+
+        // the boot wait yielded: re-verify before committing
+        for f in &expected {
+            let routed = match self.gateway.resolve(f) {
+                Ok(inst) => inst,
+                Err(err) => {
+                    self.rollback(&fresh);
+                    return Err(err);
+                }
+            };
+            if routed.id() != source.id() {
+                self.rollback(&fresh);
+                return Err(Error::MigrationAborted(format!(
+                    "topology changed during migration: `{f}` moved off instance {}",
+                    source.id()
+                )));
+            }
+        }
+
+        // atomic cutover, then drain the source off the pipeline
+        self.gateway
+            .swap_routes(&expected, Rc::clone(&fresh))
+            .inspect_err(|_| self.rollback(&fresh))?;
+        self.metrics.record_migration(MigrationEvent {
+            t_ms: self.metrics.rel_now_ms(),
+            functions: expected.clone(),
+            from,
+            to,
+            duration_ms: exec::now().duration_since(t_start).as_secs_f64() * 1e3,
+            reason,
+        });
+        self.metrics.bump("migrations_completed");
+        source.begin_drain()?;
+        crate::containerd::reclaim_when_drained(
+            self.cluster.control(),
+            self.metrics.clone(),
+            source,
+        );
+        Ok(fresh)
+    }
+
+    /// Resolve the live instance hosting exactly `functions` (sorted) —
+    /// the same staleness gate as the Merger's defusion pipelines.
+    fn resolve_live(&self, functions: &[String]) -> Result<(Rc<Instance>, Vec<String>)> {
+        if functions.is_empty() {
+            return Err(Error::MigrationAborted("migration needs at least one function".into()));
+        }
+        let source = self.gateway.resolve(&functions[0])?;
+        let mut hosted: Vec<String> =
+            source.functions().iter().map(|(n, _)| n.clone()).collect();
+        hosted.sort();
+        let mut expected: Vec<String> = functions.to_vec();
+        expected.sort();
+        if hosted != expected {
+            return Err(Error::MigrationAborted(format!(
+                "stale migration: sampled [{}] but instance {} hosts [{}]",
+                expected.join("+"),
+                source.id(),
+                hosted.join("+")
+            )));
+        }
+        for f in &expected {
+            if self.gateway.resolve(f)?.id() != source.id() {
+                return Err(Error::MigrationAborted(format!(
+                    "stale migration: `{f}` no longer routed to instance {}",
+                    source.id()
+                )));
+            }
+        }
+        Ok((source, expected))
+    }
+
+    /// The shared pre-cutover health gate (see
+    /// [`crate::containerd::await_healthy`]).
+    async fn await_healthy(&self, inst: &Rc<Instance>) -> Result<()> {
+        crate::containerd::await_healthy(&self.config.latency, inst).await
+    }
+
+    /// Tear down a never-routed replacement.
+    fn rollback(&self, fresh: &Rc<Instance>) {
+        let _ = fresh.begin_drain();
+        let _ = self.cluster.control().terminate(fresh);
+        self.metrics.bump("migrations_rolled_back");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::containerd::{FsManifest, InstanceState};
+    use crate::exec::run_virtual;
+
+    fn setup(nodes: usize, capacity: f64) -> (Migrator, Rc<Instance>) {
+        let mut cfg = PlatformConfig::tiny();
+        cfg.cluster.nodes = nodes;
+        cfg.cluster.node_capacity_mb = capacity;
+        cfg.latency.boot_ms = 150.0;
+        let cfg = Rc::new(cfg);
+        let cluster = Cluster::new(&cfg);
+        let gateway = Gateway::new();
+        let metrics = Recorder::new();
+        let img = cluster
+            .control()
+            .register_image(FsManifest::function_code("a", 16), vec![("a".into(), 9.0)]);
+        let inst = cluster.launch_on(NodeId(0), img).unwrap();
+        gateway.set_route("a", Rc::clone(&inst));
+        let deployer = Deployer::direct(cluster.clone());
+        (Migrator::new(cluster, deployer, gateway, metrics, cfg), inst)
+    }
+
+    #[test]
+    fn migration_moves_route_and_drains_source() {
+        run_virtual(async {
+            let (m, source) = setup(2, 0.0);
+            crate::exec::sleep_ms(1_000.0).await;
+            source.request_started_for("a"); // in-flight across the cutover
+            let fresh =
+                m.migrate(&["a".to_string()], NodeId(1), "test").await.unwrap();
+            assert_eq!(m.cluster.node_of(fresh.id()), Some(NodeId(1)));
+            assert_eq!(m.gateway.resolve("a").unwrap().id(), fresh.id());
+            // the source drains, then terminates; the in-flight request
+            // holds it in Draining until it finishes
+            assert_eq!(source.state(), InstanceState::Draining);
+            source.request_finished_for("a");
+            crate::exec::sleep_ms(500.0).await;
+            assert_eq!(source.state(), InstanceState::Terminated);
+            assert_eq!(m.metrics.migrations().len(), 1);
+            assert_eq!(m.metrics.migrations()[0].from, NodeId(0));
+            assert_eq!(m.metrics.migrations()[0].to, NodeId(1));
+        });
+    }
+
+    #[test]
+    fn migration_to_same_node_and_unknown_group_abort() {
+        run_virtual(async {
+            let (m, _source) = setup(2, 0.0);
+            crate::exec::sleep_ms(1_000.0).await;
+            assert!(m.migrate(&["a".to_string()], NodeId(0), "test").await.is_err());
+            assert!(m.migrate(&["ghost".to_string()], NodeId(1), "test").await.is_err());
+            assert!(m.metrics.migrations().is_empty());
+        });
+    }
+
+    #[test]
+    fn migration_refused_when_target_capacity_would_breach() {
+        run_virtual(async {
+            let (m, source) = setup(2, 60.0); // instance is 67 MiB > 60
+            crate::exec::sleep_ms(1_000.0).await;
+            let err = m.migrate(&["a".to_string()], NodeId(1), "test").await.unwrap_err();
+            assert!(err.to_string().contains("capacity"), "{err}");
+            // the source never stopped serving
+            assert_eq!(source.state(), InstanceState::Healthy);
+            assert_eq!(m.gateway.resolve("a").unwrap().id(), source.id());
+        });
+    }
+
+    #[test]
+    fn boot_hang_rolls_back_without_touching_the_source() {
+        run_virtual(async {
+            let (m, source) = setup(2, 0.0);
+            crate::exec::sleep_ms(1_000.0).await;
+            m.cluster.node(NodeId(1)).unwrap().containers().inject_boot_hangs(1);
+            let err = m.migrate(&["a".to_string()], NodeId(1), "test").await;
+            assert!(err.is_err());
+            assert_eq!(source.state(), InstanceState::Healthy);
+            assert_eq!(m.gateway.resolve("a").unwrap().id(), source.id());
+            assert_eq!(m.metrics.counter("migrations_rolled_back"), 1);
+            // the hung replacement was reclaimed: only the source lives
+            assert_eq!(m.cluster.live_count(), 1);
+        });
+    }
+}

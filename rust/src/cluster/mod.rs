@@ -1,0 +1,241 @@
+//! Multi-node cluster substrate: per-node container runtimes behind one
+//! image registry, placement-aware scheduling, and live instance
+//! migration.
+//!
+//! The paper's second implementation targets Kubernetes precisely because
+//! provider-managed FaaS runs on a fleet of nodes — and fusion interacts
+//! with placement: an inline (fused) call is only possible when caller and
+//! callee share a process, which first requires sharing a **node**.  This
+//! module adds that missing dimension:
+//!
+//! * [`Node`] — one machine: its own [`ContainerRuntime`] (instances,
+//!   lifecycle, fault injection) with a RAM capacity, sharing the
+//!   cluster-wide [`crate::containerd::ImageStore`] so any node can pull
+//!   any image.
+//! * [`Cluster`] — the fleet: node lookup, instance→node assignment,
+//!   aggregate RAM/instance accounting (the single-node seed platform is a
+//!   one-node cluster, bit-for-bit).
+//! * [`Scheduler`] — pluggable placement ([`PlacementPolicy`]): bin-pack,
+//!   spread, or fusion-affinity (co-locate statically predicted sync
+//!   fusion groups so fusing them never needs a migration).
+//! * [`Migrator`] — moves a live instance between nodes with the same
+//!   safety contract as the Merger pipelines: deploy on target → health
+//!   gate → atomic route cutover → drain source, rollback on any failure,
+//!   zero dropped requests.
+
+mod migrate;
+mod scheduler;
+
+pub use migrate::Migrator;
+pub use scheduler::Scheduler;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::config::PlatformConfig;
+use crate::containerd::{ContainerRuntime, ImageId, Instance, InstanceId};
+use crate::error::{Error, Result};
+
+/// Unique node identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u64);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "node-{}", self.0)
+    }
+}
+
+/// One cluster node: a container runtime with a RAM capacity.
+pub struct Node {
+    id: NodeId,
+    /// RAM capacity (MiB); 0 = uncapped
+    capacity_mb: f64,
+    containers: ContainerRuntime,
+}
+
+impl Node {
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    pub fn capacity_mb(&self) -> f64 {
+        self.capacity_mb
+    }
+
+    /// This node's container runtime (instances + fault injection).
+    pub fn containers(&self) -> &ContainerRuntime {
+        &self.containers
+    }
+
+    /// RAM in use across this node's live instances (MiB).
+    pub fn ram_mb(&self) -> f64 {
+        self.containers.total_ram_mb()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.containers.live_count()
+    }
+
+    /// Remaining capacity (MiB); infinite when uncapped.
+    pub fn headroom_mb(&self) -> f64 {
+        if self.capacity_mb <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.capacity_mb - self.ram_mb()
+        }
+    }
+
+    /// Whether an additional `ram_mb` MiB would still fit under capacity.
+    pub fn fits(&self, ram_mb: f64) -> bool {
+        self.headroom_mb() >= ram_mb
+    }
+}
+
+/// Handle to the node fleet (cheaply clonable).
+#[derive(Clone)]
+pub struct Cluster {
+    inner: Rc<ClusterInner>,
+}
+
+struct ClusterInner {
+    nodes: Vec<Rc<Node>>,
+    /// instance → node (entries persist past termination; lookups are only
+    /// ever made for live instances)
+    assignments: RefCell<HashMap<InstanceId, NodeId>>,
+}
+
+impl Cluster {
+    /// Build the fleet described by `config.cluster`: `nodes.max(1)` nodes,
+    /// each with its own instance registry, all sharing one image store.
+    pub fn new(config: &Rc<PlatformConfig>) -> Cluster {
+        let n = config.cluster.nodes.max(1);
+        let capacity = config.cluster.node_capacity_mb;
+        let mut nodes = Vec::with_capacity(n);
+        let first = ContainerRuntime::new(Rc::clone(config));
+        let store = first.image_store();
+        nodes.push(Rc::new(Node { id: NodeId(0), capacity_mb: capacity, containers: first }));
+        for i in 1..n {
+            nodes.push(Rc::new(Node {
+                id: NodeId(i as u64),
+                capacity_mb: capacity,
+                containers: ContainerRuntime::with_images(Rc::clone(config), Rc::clone(&store)),
+            }));
+        }
+        Cluster {
+            inner: Rc::new(ClusterInner { nodes, assignments: RefCell::new(HashMap::new()) }),
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.inner.nodes.len()
+    }
+
+    pub fn nodes(&self) -> Vec<Rc<Node>> {
+        self.inner.nodes.clone()
+    }
+
+    pub fn node(&self, id: NodeId) -> Result<Rc<Node>> {
+        self.inner
+            .nodes
+            .get(id.0 as usize)
+            .cloned()
+            .ok_or_else(|| Error::Config(format!("unknown node `{id}`")))
+    }
+
+    /// The control-plane runtime handle (node 0).  Image registration and
+    /// builds go through the shared store, so any node's handle serves;
+    /// this one is also what a single-node platform exposes as *the*
+    /// runtime.
+    pub fn control(&self) -> ContainerRuntime {
+        self.inner.nodes[0].containers.clone()
+    }
+
+    /// Launch an instance of `image` on `node` and record the assignment.
+    pub fn launch_on(&self, node: NodeId, image: ImageId) -> Result<Rc<Instance>> {
+        let n = self.node(node)?;
+        let inst = n.containers.launch(image)?;
+        self.inner.assignments.borrow_mut().insert(inst.id(), node);
+        Ok(inst)
+    }
+
+    /// Which node hosts `instance` (None for unknown/foreign instances).
+    pub fn node_of(&self, instance: InstanceId) -> Option<NodeId> {
+        self.inner.assignments.borrow().get(&instance).copied()
+    }
+
+    /// Total RAM across every node's live instances (MiB).
+    pub fn total_ram_mb(&self) -> f64 {
+        self.inner.nodes.iter().map(|n| n.ram_mb()).sum()
+    }
+
+    /// Live instances across the whole fleet.
+    pub fn live_count(&self) -> usize {
+        self.inner.nodes.iter().map(|n| n.live_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::containerd::FsManifest;
+    use crate::exec::{self, run_virtual};
+
+    fn cluster_of(n: usize, capacity: f64) -> (Cluster, ImageId) {
+        let mut cfg = PlatformConfig::tiny();
+        cfg.cluster.nodes = n;
+        cfg.cluster.node_capacity_mb = capacity;
+        let cluster = Cluster::new(&Rc::new(cfg));
+        let img = cluster
+            .control()
+            .register_image(FsManifest::function_code("a", 16), vec![("a".into(), 9.0)]);
+        (cluster, img)
+    }
+
+    #[test]
+    fn fleet_shape_and_aggregates() {
+        run_virtual(async {
+            let (cluster, img) = cluster_of(3, 0.0);
+            assert_eq!(cluster.node_count(), 3);
+            let i0 = cluster.launch_on(NodeId(0), img).unwrap();
+            let i2 = cluster.launch_on(NodeId(2), img).unwrap();
+            exec::sleep_ms(2_000.0).await;
+            assert_eq!(cluster.node_of(i0.id()), Some(NodeId(0)));
+            assert_eq!(cluster.node_of(i2.id()), Some(NodeId(2)));
+            assert_eq!(cluster.live_count(), 2);
+            // aggregate == sum of per-node ledgers (2 x (58 base + 9 code))
+            let per_node: f64 = cluster.nodes().iter().map(|n| n.ram_mb()).sum();
+            assert!((cluster.total_ram_mb() - per_node).abs() < 1e-9);
+            assert!((per_node - 2.0 * 67.0).abs() < 1e-9);
+            assert!(cluster.node(NodeId(7)).is_err());
+        });
+    }
+
+    #[test]
+    fn headroom_and_fits_respect_capacity() {
+        run_virtual(async {
+            let (cluster, img) = cluster_of(2, 100.0);
+            let node = cluster.node(NodeId(0)).unwrap();
+            assert_eq!(node.headroom_mb(), 100.0);
+            assert!(node.fits(67.0));
+            let _i = cluster.launch_on(NodeId(0), img).unwrap();
+            exec::sleep_ms(2_000.0).await;
+            assert!((node.headroom_mb() - 33.0).abs() < 1e-9);
+            assert!(!node.fits(67.0));
+            // uncapped nodes have infinite headroom
+            let (uncapped, _) = cluster_of(1, 0.0);
+            assert!(uncapped.node(NodeId(0)).unwrap().headroom_mb().is_infinite());
+        });
+    }
+
+    #[test]
+    fn single_node_cluster_wraps_the_seed_runtime() {
+        let (cluster, img) = cluster_of(1, 0.0);
+        assert_eq!(cluster.node_count(), 1);
+        // the control handle IS node 0's runtime: images registered through
+        // either are visible to both
+        assert!(cluster.control().image(img).is_ok());
+        assert!(cluster.node(NodeId(0)).unwrap().containers().image(img).is_ok());
+    }
+}

@@ -1,0 +1,249 @@
+//! Placement-aware scheduling: which node a fresh instance lands on.
+//!
+//! Three policies ([`crate::config::PlacementPolicy`]):
+//!
+//! * **bin-pack** — fill the most-loaded node that still fits.  Minimizes
+//!   nodes in use (a consolidation-first provider), at the price of
+//!   hot-spotting.
+//! * **spread** — always pick the node with the most headroom.  The
+//!   classic availability default — and the negative control for fusion:
+//!   it maximizes cross-node sync hops.
+//! * **fusion-affinity** — the policy the fusion planner wants: the app's
+//!   statically predicted sync fusion groups ([`AppSpec::sync_fusion_groups`])
+//!   are placed as *units* (spread across nodes like `spread`, but members
+//!   always together), so the Merger never has to migrate to co-locate.
+//!   A group too big for any node degrades gracefully to per-function
+//!   spread.
+
+use std::collections::BTreeMap;
+
+use crate::apps::AppSpec;
+use crate::config::{PlacementPolicy, RamParams};
+use crate::error::{Error, Result};
+
+use super::{Cluster, NodeId};
+
+/// Placement engine over a [`Cluster`] (cheaply clonable).
+#[derive(Clone)]
+pub struct Scheduler {
+    policy: PlacementPolicy,
+    cluster: Cluster,
+}
+
+impl Scheduler {
+    pub fn new(policy: PlacementPolicy, cluster: Cluster) -> Self {
+        Scheduler { policy, cluster }
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// Choose a node for one fresh instance needing `ram_mb` MiB, against
+    /// the *live* per-node load (the same [`Scheduler::pick`] kernel the
+    /// deployment planner uses, fed live ledgers instead of planned ones;
+    /// fusion-affinity places singletons like `Spread` — the affinity
+    /// special-casing is in [`Scheduler::place_app`]).  Errors when no
+    /// node has the headroom (the caller surfaces it as an aborted
+    /// pipeline, never a drop).
+    pub fn place(&self, ram_mb: f64) -> Result<NodeId> {
+        let nodes = self.cluster.nodes();
+        let capacities: Vec<f64> = nodes.iter().map(|n| n.capacity_mb()).collect();
+        let loads: Vec<f64> = nodes.iter().map(|n| n.ram_mb()).collect();
+        Self::pick(self.policy, &capacities, &loads, ram_mb)
+            .map(|i| NodeId(i as u64))
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "no node can fit {ram_mb:.0} MiB under the {} policy",
+                    self.policy.name()
+                ))
+            })
+    }
+
+    /// Plan the initial deployment of an entire app: function → node.
+    /// Runs against *planned* (not live) load, since nothing is launched
+    /// yet.  Errors when any function fits on no node.
+    pub fn place_app(&self, app: &AppSpec, ram: &RamParams) -> Result<BTreeMap<String, NodeId>> {
+        let nodes = self.cluster.nodes();
+        let capacities: Vec<f64> = nodes.iter().map(|n| n.capacity_mb()).collect();
+        let mut planned = vec![0.0f64; nodes.len()];
+        let mut plan = BTreeMap::new();
+
+        // placement units: sync fusion groups under fusion-affinity (each
+        // group one unit), singleton functions otherwise
+        let units: Vec<Vec<String>> = match self.policy {
+            PlacementPolicy::FusionAffinity => app.sync_fusion_groups(),
+            _ => app.functions().map(|f| vec![f.name.clone()]).collect(),
+        };
+
+        for unit in units {
+            let unit_mb: f64 = unit
+                .iter()
+                .map(|f| Self::estimate_mb(app, ram, f))
+                .sum();
+            match Self::pick(self.policy, &capacities, &planned, unit_mb) {
+                Some(node) => {
+                    planned[node] += unit_mb;
+                    for f in unit {
+                        plan.insert(f, NodeId(node as u64));
+                    }
+                }
+                None if unit.len() > 1 => {
+                    // the whole group fits nowhere: degrade to per-function
+                    // spread rather than refusing to deploy
+                    for f in unit {
+                        let mb = Self::estimate_mb(app, ram, &f);
+                        let node = Self::pick(PlacementPolicy::Spread, &capacities, &planned, mb)
+                            .ok_or_else(|| {
+                                Error::Config(format!(
+                                    "no node can fit `{f}` ({mb:.0} MiB) at deployment"
+                                ))
+                            })?;
+                        planned[node] += mb;
+                        plan.insert(f, NodeId(node as u64));
+                    }
+                }
+                None => {
+                    return Err(Error::Config(format!(
+                        "no node can fit `{}` ({unit_mb:.0} MiB) at deployment",
+                        unit.join("+")
+                    )));
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Idle footprint estimate of a singleton instance of `function`.
+    fn estimate_mb(app: &AppSpec, ram: &RamParams, function: &str) -> f64 {
+        let code = app.function(function).map(|f| f.code_mb).unwrap_or(ram.per_function_mb);
+        ram.base_instance_mb + code
+    }
+
+    /// The one placement kernel (deployment planning over *planned* loads,
+    /// live placement over ledger loads): index of the chosen node, None
+    /// if none fits.  BinPack fills the most-loaded fitting node, the
+    /// others take the most headroom; ties go to the lowest id.
+    fn pick(
+        policy: PlacementPolicy,
+        capacities: &[f64],
+        planned: &[f64],
+        need_mb: f64,
+    ) -> Option<usize> {
+        let fits =
+            |i: usize| capacities[i] <= 0.0 || planned[i] + need_mb <= capacities[i];
+        let candidates = (0..planned.len()).filter(|&i| fits(i));
+        match policy {
+            PlacementPolicy::BinPack => candidates.max_by(|&a, &b| {
+                planned[a]
+                    .partial_cmp(&planned[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.cmp(&a))
+            }),
+            PlacementPolicy::Spread | PlacementPolicy::FusionAffinity => {
+                candidates.min_by(|&a, &b| {
+                    planned[a]
+                        .partial_cmp(&planned[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::config::PlatformConfig;
+    use crate::exec::run_virtual;
+    use std::rc::Rc;
+
+    fn scheduler(n: usize, capacity: f64, policy: PlacementPolicy) -> Scheduler {
+        let mut cfg = PlatformConfig::tiny();
+        cfg.cluster.nodes = n;
+        cfg.cluster.node_capacity_mb = capacity;
+        cfg.cluster.placement = policy;
+        Scheduler::new(policy, Cluster::new(&Rc::new(cfg)))
+    }
+
+    #[test]
+    fn bin_pack_fills_one_node_first() {
+        let s = scheduler(3, 0.0, PlacementPolicy::BinPack);
+        let ram = PlatformConfig::tiny().ram;
+        let plan = s.place_app(&apps::chain(4), &ram).unwrap();
+        // uncapped bin-pack puts everything on node 0
+        assert!(plan.values().all(|&n| n == NodeId(0)), "{plan:?}");
+    }
+
+    #[test]
+    fn spread_balances_across_nodes() {
+        let s = scheduler(3, 0.0, PlacementPolicy::Spread);
+        let ram = PlatformConfig::tiny().ram;
+        let plan = s.place_app(&apps::chain(6), &ram).unwrap();
+        // 6 equal functions over 3 nodes -> 2 per node
+        for node in 0..3 {
+            let count = plan.values().filter(|&&n| n == NodeId(node)).count();
+            assert_eq!(count, 2, "{plan:?}");
+        }
+    }
+
+    #[test]
+    fn fusion_affinity_keeps_sync_groups_whole() {
+        let s = scheduler(3, 0.0, PlacementPolicy::FusionAffinity);
+        let ram = PlatformConfig::tiny().ram;
+        // iot-heavy: {ingest, model, refine} and {notify, persist}
+        let plan = s.place_app(&apps::iot_heavy(), &ram).unwrap();
+        assert_eq!(plan["ingest"], plan["model"]);
+        assert_eq!(plan["model"], plan["refine"]);
+        assert_eq!(plan["notify"], plan["persist"]);
+        // the two groups spread onto different nodes
+        assert_ne!(plan["ingest"], plan["persist"], "{plan:?}");
+    }
+
+    #[test]
+    fn fusion_affinity_degrades_to_spread_when_a_group_cannot_fit() {
+        // chain(4) group needs 4 x (58 + 12) = 280 MiB; cap at 200 forces
+        // the per-function fallback, which spreads 70 MiB singletons
+        let s = scheduler(2, 200.0, PlacementPolicy::FusionAffinity);
+        let ram = PlatformConfig::tiny().ram;
+        let plan = s.place_app(&apps::chain(4), &ram).unwrap();
+        let on0 = plan.values().filter(|&&n| n == NodeId(0)).count();
+        let on1 = plan.values().filter(|&&n| n == NodeId(1)).count();
+        assert_eq!(on0 + on1, 4);
+        assert!(on0 > 0 && on1 > 0, "fallback must still use both nodes: {plan:?}");
+    }
+
+    #[test]
+    fn place_errors_when_nothing_fits() {
+        run_virtual(async {
+            let s = scheduler(2, 50.0, PlacementPolicy::Spread);
+            assert!(s.place(80.0).is_err());
+            assert!(s.place(40.0).is_ok());
+        });
+    }
+
+    #[test]
+    fn live_placement_tracks_actual_load() {
+        run_virtual(async {
+            let s = scheduler(2, 0.0, PlacementPolicy::Spread);
+            let cluster = s.cluster.clone();
+            let img = cluster
+                .control()
+                .register_image(crate::containerd::FsManifest::function_code("a", 8), vec![(
+                    "a".into(),
+                    9.0,
+                )]);
+            // empty cluster: lowest id wins
+            assert_eq!(s.place(10.0).unwrap(), NodeId(0));
+            let _i = cluster.launch_on(NodeId(0), img).unwrap();
+            crate::exec::sleep_ms(2_000.0).await;
+            // node 0 now carries 67 MiB -> spread prefers node 1,
+            // bin-pack (same cluster) prefers node 0
+            assert_eq!(s.place(10.0).unwrap(), NodeId(1));
+            let packer = Scheduler::new(PlacementPolicy::BinPack, cluster);
+            assert_eq!(packer.place(10.0).unwrap(), NodeId(0));
+        });
+    }
+}

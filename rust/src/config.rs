@@ -57,6 +57,13 @@ pub struct LatencyParams {
     pub net_hop_ms: f64,
     /// lognormal sigma of network latency
     pub net_sigma: f64,
+    /// median *additional* one-way latency of a hop that crosses node
+    /// boundaries (east-west fabric; 0 disables the surcharge).  Same-node
+    /// remote calls pay only `net_hop_ms` (veth/loopback), so a single-node
+    /// cluster reproduces the seed latencies exactly.
+    pub cross_node_ms: f64,
+    /// lognormal sigma of the cross-node surcharge
+    pub cross_node_sigma: f64,
     /// envelope (de)serialization fixed cost per remote call
     pub serialize_base_ms: f64,
     /// (de)serialization per-KiB cost
@@ -90,6 +97,64 @@ pub struct RamParams {
     pub working_per_request_mb: f64,
     /// RAM ledger sampling interval
     pub sample_interval_ms: f64,
+}
+
+/// How the cluster scheduler places fresh instances onto nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Fill the most-loaded node that still fits (minimize nodes in use).
+    BinPack,
+    /// Place on the node with the most headroom (balance load).
+    Spread,
+    /// Spread *sync fusion groups* as units: functions that the call graph
+    /// says will fuse are co-located up front, so fusion never needs a
+    /// migration; distinct groups balance across nodes like `Spread`.
+    FusionAffinity,
+}
+
+impl PlacementPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::BinPack => "bin-pack",
+            PlacementPolicy::Spread => "spread",
+            PlacementPolicy::FusionAffinity => "fusion-affinity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "bin-pack" | "binpack" | "pack" => Ok(PlacementPolicy::BinPack),
+            "spread" => Ok(PlacementPolicy::Spread),
+            "fusion-affinity" | "affinity" => Ok(PlacementPolicy::FusionAffinity),
+            other => Err(Error::Config(format!(
+                "unknown placement policy `{other}` (available: bin-pack, spread, \
+                 fusion-affinity)"
+            ))),
+        }
+    }
+}
+
+/// Multi-node cluster shape (`nodes = 1` reproduces the single-host seed
+/// platform exactly: no cross-node hops, no capacity pressure, no
+/// migrations).
+#[derive(Debug, Clone)]
+pub struct ClusterParams {
+    /// number of nodes (each wraps its own container runtime)
+    pub nodes: usize,
+    /// per-node RAM capacity (MiB); 0 = uncapped (no node-pressure control)
+    pub node_capacity_mb: f64,
+    /// how fresh instances are assigned to nodes
+    pub placement: PlacementPolicy,
+}
+
+impl Default for ClusterParams {
+    fn default() -> Self {
+        ClusterParams {
+            nodes: 1,
+            node_capacity_mb: 0.0,
+            placement: PlacementPolicy::BinPack,
+        }
+    }
 }
 
 /// Which objective the defusion controller optimizes.
@@ -248,6 +313,7 @@ pub struct PlatformConfig {
     pub latency: LatencyParams,
     pub ram: RamParams,
     pub fusion: FusionParams,
+    pub cluster: ClusterParams,
     pub compute: ComputeMode,
     /// directory containing `manifest.json` + HLO artifacts
     pub artifacts_dir: String,
@@ -264,6 +330,8 @@ impl PlatformConfig {
                 service_indirection_ms: 0.0,
                 net_hop_ms: 2.0,
                 net_sigma: 0.25,
+                cross_node_ms: 12.0,
+                cross_node_sigma: 0.25,
                 serialize_base_ms: 1.5,
                 serialize_per_kb_ms: 0.06,
                 dispatch_ms: 45.0,
@@ -282,6 +350,7 @@ impl PlatformConfig {
                 sample_interval_ms: 1_000.0,
             },
             fusion: FusionParams::default_enabled(),
+            cluster: ClusterParams::default(),
             compute: ComputeMode::Replay,
             artifacts_dir: "artifacts".into(),
             seed: 7,
@@ -296,6 +365,8 @@ impl PlatformConfig {
         c.latency.service_indirection_ms = 6.0;
         c.latency.net_hop_ms = 2.5;
         c.latency.net_sigma = 0.30;
+        c.latency.cross_node_ms = 14.0;
+        c.latency.cross_node_sigma = 0.30;
         c.latency.boot_ms = 2_800.0;
         c.latency.reconcile_interval_ms = 500.0;
         c.ram.base_instance_mb = 72.0;
@@ -333,6 +404,7 @@ impl PlatformConfig {
             &mut l.gateway_ms,
             &mut l.service_indirection_ms,
             &mut l.net_hop_ms,
+            &mut l.cross_node_ms,
             &mut l.serialize_base_ms,
             &mut l.serialize_per_kb_ms,
             &mut l.dispatch_ms,
@@ -406,9 +478,18 @@ impl PlatformConfig {
         let l = &self.latency;
         let r = &self.ram;
         let f = &self.fusion;
+        let c = &self.cluster;
         Json::obj(vec![
             ("platform", Json::str(self.kind.name())),
             ("seed", Json::Num(self.seed as f64)),
+            (
+                "cluster",
+                Json::obj(vec![
+                    ("nodes", Json::Num(c.nodes as f64)),
+                    ("node_capacity_mb", Json::Num(c.node_capacity_mb)),
+                    ("placement", Json::str(c.placement.name())),
+                ]),
+            ),
             (
                 "latency_ms",
                 Json::obj(vec![
@@ -416,6 +497,8 @@ impl PlatformConfig {
                     ("service_indirection", Json::Num(l.service_indirection_ms)),
                     ("net_hop", Json::Num(l.net_hop_ms)),
                     ("net_sigma", Json::Num(l.net_sigma)),
+                    ("cross_node", Json::Num(l.cross_node_ms)),
+                    ("cross_node_sigma", Json::Num(l.cross_node_sigma)),
                     ("serialize_base", Json::Num(l.serialize_base_ms)),
                     ("serialize_per_kb", Json::Num(l.serialize_per_kb_ms)),
                     ("dispatch", Json::Num(l.dispatch_ms)),
@@ -562,6 +645,47 @@ mod tests {
         let cost = fusion.get("cost").unwrap();
         assert_eq!(cost.get("merge_threshold").unwrap().as_f64().unwrap(), 0.0);
         assert!(cost.get("tune_step").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn cluster_defaults_to_single_uncapped_node() {
+        let c = PlatformConfig::tiny();
+        assert_eq!(c.cluster.nodes, 1);
+        assert_eq!(c.cluster.node_capacity_mb, 0.0);
+        assert_eq!(c.cluster.placement, PlacementPolicy::BinPack);
+        assert!(c.latency.cross_node_ms > c.latency.net_hop_ms);
+    }
+
+    #[test]
+    fn placement_policy_parses() {
+        assert_eq!(PlacementPolicy::parse("bin-pack").unwrap(), PlacementPolicy::BinPack);
+        assert_eq!(PlacementPolicy::parse("spread").unwrap(), PlacementPolicy::Spread);
+        assert_eq!(
+            PlacementPolicy::parse("fusion-affinity").unwrap(),
+            PlacementPolicy::FusionAffinity
+        );
+        assert_eq!(
+            PlacementPolicy::parse("affinity").unwrap(),
+            PlacementPolicy::FusionAffinity
+        );
+        assert!(PlacementPolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn cluster_knobs_serialize() {
+        let mut c = PlatformConfig::tiny();
+        c.cluster.nodes = 3;
+        c.cluster.node_capacity_mb = 512.0;
+        c.cluster.placement = PlacementPolicy::FusionAffinity;
+        let j = c.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        let cl = v.get("cluster").unwrap();
+        assert_eq!(cl.get("nodes").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(cl.get("node_capacity_mb").unwrap().as_f64().unwrap(), 512.0);
+        assert_eq!(cl.get("placement").unwrap().as_str().unwrap(), "fusion-affinity");
+        assert!(
+            v.get("latency_ms").unwrap().get("cross_node").unwrap().as_f64().unwrap() > 0.0
+        );
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Instance lifecycle state machine + per-instance RAM accounting.
 
 use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use super::image::{Image, ImageId};
@@ -56,6 +57,10 @@ pub struct Instance {
     active: RefCell<Vec<(String, f64)>>,
     /// in-flight request gauge (awaitable for drain)
     inflight: Gauge,
+    /// per-function in-flight ownership (remote arrivals only; inlined
+    /// child calls ride their caller's request) — the weighting signal for
+    /// `metrics::attribute_ram`
+    fn_inflight: RefCell<BTreeMap<String, i64>>,
     /// lifetime request count (merge observability)
     served: Cell<u64>,
 }
@@ -70,6 +75,7 @@ impl Instance {
             state: Cell::new(InstanceState::Booting),
             active,
             inflight: Gauge::new(),
+            fn_inflight: RefCell::new(BTreeMap::new()),
             served: Cell::new(0),
         }
     }
@@ -165,6 +171,28 @@ impl Instance {
 
     pub fn request_finished(&self) {
         self.inflight.sub(1);
+    }
+
+    /// Like [`Instance::request_started`], attributing the in-flight slot
+    /// to `function` (the remote arrival's target) so the controller can
+    /// weight working-set RAM by in-flight ownership.
+    pub fn request_started_for(&self, function: &str) {
+        self.request_started();
+        *self.fn_inflight.borrow_mut().entry(function.to_string()).or_insert(0) += 1;
+    }
+
+    /// Companion to [`Instance::request_started_for`].
+    pub fn request_finished_for(&self, function: &str) {
+        self.request_finished();
+        if let Some(n) = self.fn_inflight.borrow_mut().get_mut(function) {
+            *n = (*n - 1).max(0);
+        }
+    }
+
+    /// In-flight requests currently attributed to `function` (0 when the
+    /// function never received an attributed arrival).
+    pub fn fn_inflight(&self, function: &str) -> u64 {
+        self.fn_inflight.borrow().get(function).copied().unwrap_or(0).max(0) as u64
     }
 
     /// Await zero in-flight requests (merge drain step).
@@ -287,6 +315,27 @@ mod tests {
         i.request_finished();
         assert_eq!(i.ram_mb(), idle);
         assert_eq!(i.served(), 2);
+    }
+
+    #[test]
+    fn fn_inflight_tracks_per_function_ownership() {
+        let i = fused_instance();
+        i.mark_healthy();
+        i.request_started_for("a");
+        i.request_started_for("a");
+        i.request_started_for("b");
+        assert_eq!(i.fn_inflight("a"), 2);
+        assert_eq!(i.fn_inflight("b"), 1);
+        assert_eq!(i.fn_inflight("ghost"), 0);
+        assert_eq!(i.inflight(), 3, "attributed starts must feed the drain gauge");
+        i.request_finished_for("a");
+        i.request_finished_for("b");
+        // per-function over-finishing clamps at zero instead of going
+        // negative (the gauge itself stays balanced: 3 starts, 3 finishes)
+        i.request_finished_for("b");
+        assert_eq!(i.fn_inflight("a"), 1);
+        assert_eq!(i.fn_inflight("b"), 0);
+        assert_eq!(i.inflight(), 0);
     }
 
     #[test]

@@ -24,6 +24,34 @@ use crate::exec;
 /// Functions hosted by an image: (function name, code+deps footprint MiB).
 pub type HostedFunctions = Vec<(String, f64)>;
 
+/// Content-addressed image registry.  One store may back several
+/// [`ContainerRuntime`]s: a multi-node cluster shares images (any node can
+/// pull any image) while each node keeps its own instance registry.  The
+/// store also allocates **cluster-unique** instance ids, so instances on
+/// different nodes can never alias in the routing table or the invariant
+/// oracles.
+pub struct ImageStore {
+    images: RefCell<HashMap<ImageId, Rc<Image>>>,
+    next_image: Cell<u64>,
+    next_instance: Cell<u64>,
+}
+
+impl ImageStore {
+    pub fn new() -> Self {
+        ImageStore {
+            images: RefCell::new(HashMap::new()),
+            next_image: Cell::new(1),
+            next_instance: Cell::new(1),
+        }
+    }
+}
+
+impl Default for ImageStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Handle to the simulated container runtime (cheaply clonable).
 #[derive(Clone)]
 pub struct ContainerRuntime {
@@ -32,10 +60,8 @@ pub struct ContainerRuntime {
 
 struct RuntimeInner {
     config: Rc<PlatformConfig>,
-    images: RefCell<HashMap<ImageId, Rc<Image>>>,
+    images: Rc<ImageStore>,
     instances: RefCell<HashMap<InstanceId, Rc<Instance>>>,
-    next_image: Cell<u64>,
-    next_instance: Cell<u64>,
     /// fault injection: number of upcoming builds that must fail
     failing_builds: Cell<u32>,
     /// fault injection: number of upcoming launches that never get healthy
@@ -44,17 +70,28 @@ struct RuntimeInner {
 
 impl ContainerRuntime {
     pub fn new(config: Rc<PlatformConfig>) -> Self {
+        Self::with_images(config, Rc::new(ImageStore::new()))
+    }
+
+    /// A runtime sharing `images` with other runtimes (per-node runtimes of
+    /// one cluster all see the same registry, and the store also allocates
+    /// the instance ids, so they stay unique across every sharing runtime).
+    pub fn with_images(config: Rc<PlatformConfig>, images: Rc<ImageStore>) -> Self {
         ContainerRuntime {
             inner: Rc::new(RuntimeInner {
                 config,
-                images: RefCell::new(HashMap::new()),
+                images,
                 instances: RefCell::new(HashMap::new()),
-                next_image: Cell::new(1),
-                next_instance: Cell::new(1),
                 failing_builds: Cell::new(0),
                 hanging_boots: Cell::new(0),
             }),
         }
+    }
+
+    /// The image registry backing this runtime (share it with
+    /// [`ContainerRuntime::with_images`] to model a cluster-wide registry).
+    pub fn image_store(&self) -> Rc<ImageStore> {
+        Rc::clone(&self.inner.images)
     }
 
     // -- images --------------------------------------------------------------
@@ -62,10 +99,11 @@ impl ContainerRuntime {
     /// Register a pre-built image (initial function deployment artifacts
     /// exist before the experiment starts; no build cost).
     pub fn register_image(&self, manifest: FsManifest, functions: HostedFunctions) -> ImageId {
-        let id = ImageId(self.inner.next_image.get());
-        self.inner.next_image.set(id.0 + 1);
+        let store = &self.inner.images;
+        let id = ImageId(store.next_image.get());
+        store.next_image.set(id.0 + 1);
         let image = Rc::new(Image { id, manifest, functions });
-        self.inner.images.borrow_mut().insert(id, image);
+        store.images.borrow_mut().insert(id, image);
         id
     }
 
@@ -87,6 +125,7 @@ impl ContainerRuntime {
     pub fn image(&self, id: ImageId) -> Result<Rc<Image>> {
         self.inner
             .images
+            .images
             .borrow()
             .get(&id)
             .cloned()
@@ -106,8 +145,8 @@ impl ContainerRuntime {
     /// calibrated boot latency (or never, under injected boot hangs).
     pub fn launch(&self, image_id: ImageId) -> Result<Rc<Instance>> {
         let image = self.image(image_id)?;
-        let id = InstanceId(self.inner.next_instance.get());
-        self.inner.next_instance.set(id.0 + 1);
+        let id = InstanceId(self.inner.images.next_instance.get());
+        self.inner.images.next_instance.set(id.0 + 1);
         let instance = Rc::new(Instance::new(id, image, self.inner.config.clone()));
         self.inner.instances.borrow_mut().insert(id, Rc::clone(&instance));
 
@@ -185,6 +224,46 @@ impl ContainerRuntime {
     pub fn inject_boot_hangs(&self, n: u32) {
         self.inner.hanging_boots.set(self.inner.hanging_boots.get() + n);
     }
+}
+
+/// Poll `inst` until `health_checks_required` consecutive healthy checks or
+/// the deadline (4x boot + 5 s) expires — the shared health gate every
+/// traffic-moving pipeline (fuse, split, evict, migration) runs before a
+/// cutover, so a deadline tuning can never diverge between them.
+pub async fn await_healthy(latency: &crate::config::LatencyParams, inst: &Instance) -> Result<()> {
+    let deadline_ms = exec::now().as_millis_f64() + latency.boot_ms * 4.0 + 5_000.0;
+    let mut passes = 0u32;
+    loop {
+        exec::sleep_ms(latency.health_interval_ms).await;
+        if inst.state() == InstanceState::Healthy {
+            passes += 1;
+            if passes >= latency.health_checks_required {
+                return Ok(());
+            }
+        } else {
+            passes = 0;
+        }
+        if exec::now().as_millis_f64() > deadline_ms {
+            return Err(Error::HealthTimeout(inst.id().0));
+        }
+    }
+}
+
+/// Detached reclaim: terminate `old` once its in-flight requests drain and
+/// bump `instances_reclaimed` — the shared tail of the fuse, split, and
+/// migration pipelines ("stopped and deleted as soon as they are no longer
+/// processing requests").
+pub fn reclaim_when_drained(
+    containers: ContainerRuntime,
+    metrics: crate::metrics::Recorder,
+    old: Rc<Instance>,
+) {
+    exec::spawn(async move {
+        old.drained().await;
+        if containers.terminate(&old).is_ok() {
+            metrics.bump("instances_reclaimed");
+        }
+    });
 }
 
 #[cfg(test)]
@@ -284,6 +363,69 @@ mod tests {
             assert!(rt.terminate(&inst).is_err());
             inst.request_finished();
             assert!(rt.terminate(&inst).is_ok());
+        });
+    }
+
+    #[test]
+    fn await_healthy_gates_and_times_out() {
+        run_virtual(async {
+            let rt = runtime();
+            let latency = PlatformConfig::tiny().latency;
+            let img = rt.register_image(manifest_for("a"), vec![("a".into(), 9.0)]);
+            let inst = rt.launch(img).unwrap();
+            let t0 = now().as_millis_f64();
+            await_healthy(&latency, &inst).await.unwrap();
+            // healthy at boot (1200 ms); the 250 ms polling grid passes its
+            // second consecutive check at 1500 ms
+            assert_eq!(now().as_millis_f64() - t0, 1_500.0);
+            // a hung boot exhausts the 4x boot + 5 s deadline
+            rt.inject_boot_hangs(1);
+            let hung = rt.launch(img).unwrap();
+            assert!(await_healthy(&latency, &hung).await.is_err());
+        });
+    }
+
+    #[test]
+    fn reclaim_when_drained_waits_for_inflight() {
+        run_virtual(async {
+            let rt = runtime();
+            let metrics = crate::metrics::Recorder::new();
+            let img = rt.register_image(manifest_for("a"), vec![("a".into(), 9.0)]);
+            let inst = rt.launch(img).unwrap();
+            exec::sleep_ms(1_500.0).await;
+            inst.request_started();
+            inst.begin_drain().unwrap();
+            reclaim_when_drained(rt.clone(), metrics.clone(), Rc::clone(&inst));
+            exec::sleep_ms(500.0).await;
+            assert_eq!(inst.state(), InstanceState::Draining, "must wait for in-flight");
+            inst.request_finished();
+            exec::sleep_ms(100.0).await;
+            assert_eq!(inst.state(), InstanceState::Terminated);
+            assert_eq!(metrics.counter("instances_reclaimed"), 1);
+        });
+    }
+
+    #[test]
+    fn shared_image_store_spans_runtimes_and_keeps_instance_ids_unique() {
+        run_virtual(async {
+            // two "nodes": independent instance registries, one image store
+            let node_a = runtime();
+            let node_b = ContainerRuntime::with_images(
+                Rc::new(PlatformConfig::tiny()),
+                node_a.image_store(),
+            );
+            let img = node_a.register_image(manifest_for("a"), vec![("a".into(), 9.0)]);
+            // the image registered on node A is pullable on node B
+            let ia = node_a.launch(img).unwrap();
+            let ib = node_b.launch(img).unwrap();
+            // instance ids are cluster-unique, not per-node
+            assert_ne!(ia.id(), ib.id());
+            // instance registries stay per-node
+            assert!(node_a.instance(ia.id()).is_ok());
+            assert!(node_a.instance(ib.id()).is_err());
+            assert!(node_b.instance(ib.id()).is_ok());
+            assert_eq!(node_a.live_count(), 1);
+            assert_eq!(node_b.live_count(), 1);
         });
     }
 

@@ -30,6 +30,9 @@ pub enum Error {
     /// The merger declined or aborted a defusion (split).
     SplitAborted(String),
 
+    /// The migrator declined or aborted a live migration.
+    MigrationAborted(String),
+
     /// Health checks did not pass within the deadline.
     HealthTimeout(u64),
 
@@ -67,6 +70,7 @@ impl fmt::Display for Error {
             ),
             Error::FusionAborted(msg) => write!(f, "fusion aborted: {msg}"),
             Error::SplitAborted(msg) => write!(f, "split aborted: {msg}"),
+            Error::MigrationAborted(msg) => write!(f, "migration aborted: {msg}"),
             Error::HealthTimeout(id) => write!(f, "health check timeout for instance {id}"),
             Error::Runtime(msg) => write!(f, "runtime: {msg}"),
             Error::UnknownBody(name) => write!(f, "unknown compute body `{name}`"),

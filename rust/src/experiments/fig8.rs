@@ -1,0 +1,808 @@
+//! FIG8 (ours) — the cluster subsystem end to end, in two self-checked
+//! scenarios selected by `--placement`:
+//!
+//! * **fusion-affinity** (default; also accepts bin-pack): placement,
+//!   fusion, and the node-pressure controller on one multi-node platform.
+//!   Three phases on the virtual clock:
+//!   1. *calm* — the affinity scheduler co-locates the app's hot sync
+//!      group at deploy, so fusion proceeds with **zero co-location
+//!      migrations**; the group converges to one fused instance.
+//!   2. *pressure* — a targeted workload inflates the fused group past its
+//!      RAM cap; the defusion controller splits it, the per-function
+//!      replacements re-inflate the **node** past its capacity, and the
+//!      node-pressure controller resolves with **exactly one** migration
+//!      (or, when nothing movable fits, one eviction/split) — zero
+//!      dropped requests throughout.
+//!   3. *relief* — traffic calms; every node ends under capacity and the
+//!      anti-flap cooldowns keep the topology quiet.
+//! * **spread** — the measured negative control: the same app deployed
+//!   spread-across-nodes with fusion off, against a single-node reference
+//!   run with identical traffic.  Cross-node sync hops pay the east-west
+//!   surcharge, and the checklist requires the spread p95 to exceed the
+//!   single-node p95 by at least one `cross_node_ms` — the latency the
+//!   fusion-affinity scheduler exists to avoid.
+//!
+//! `--app chain` (default) is the calibrated scenario CI runs; `iot` and
+//! `mixed` reuse their FIG7 apps with best-effort capacity defaults.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use super::write_output;
+use crate::apps;
+use crate::cluster::NodeId;
+use crate::config::{
+    ComputeMode, MergePolicyKind, PlacementPolicy, PlatformConfig, SplitPolicyKind,
+    WorkloadConfig,
+};
+use crate::error::Result;
+use crate::exec::{self, Executor, Mode};
+use crate::fusion::SplitReason;
+use crate::metrics::{
+    EvictEvent, LatencySample, MergeEvent, MigrationEvent, NodeRamSample, SplitEvent,
+};
+use crate::platform::Platform;
+use crate::workload::{self, Arrival, WorkloadReport};
+
+pub use super::fig7::Check;
+
+/// Which application FIG8 drives (reusing the FIG7 benchmark apps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fig8App {
+    Chain,
+    Iot,
+    Mixed,
+}
+
+impl Fig8App {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fig8App::Chain => "chain",
+            Fig8App::Iot => "iot",
+            Fig8App::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "chain" => Ok(Fig8App::Chain),
+            "iot" | "iot-heavy" => Ok(Fig8App::Iot),
+            "mixed" => Ok(Fig8App::Mixed),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown figure8 app `{other}` (available: chain, iot, mixed)"
+            ))),
+        }
+    }
+
+    fn spec(&self) -> apps::AppSpec {
+        match self {
+            Fig8App::Chain => apps::chain(4),
+            Fig8App::Iot => apps::iot_heavy(),
+            Fig8App::Mixed => apps::mixed(),
+        }
+    }
+
+    /// The function the pressure workload targets — the entry of the
+    /// app's hot sync group.
+    fn hot_probe(&self) -> &'static str {
+        match self {
+            Fig8App::Chain => "s0",
+            Fig8App::Iot => "ingest",
+            Fig8App::Mixed => "heavy_api",
+        }
+    }
+
+    /// The statically predicted hot sync group (sorted).
+    fn hot_group(&self) -> Vec<String> {
+        let spec = self.spec();
+        let probe = self.hot_probe();
+        spec.sync_fusion_groups()
+            .into_iter()
+            .find(|g| g.iter().any(|f| f == probe))
+            .unwrap_or_else(|| vec![probe.to_string()])
+    }
+}
+
+/// FIG8 knobs (one struct shared by the CLI, tests, and CI smoke).
+#[derive(Debug, Clone, Copy)]
+pub struct Fig8Params {
+    pub app: Fig8App,
+    pub nodes: usize,
+    pub placement: PlacementPolicy,
+    /// per-node RAM capacity (MiB) in the affinity scenario (the spread
+    /// control runs uncapped: it measures latency, not pressure)
+    pub node_capacity_mb: f64,
+    /// fused-group RAM cap (`max_group_ram_mb`): the pressure phase's
+    /// defusion trigger
+    pub group_ram_cap_mb: f64,
+    pub calm_rps: f64,
+    /// rate of the targeted hot-route workload during the pressure phase
+    pub pressure_rps: f64,
+    pub phase_a_secs: f64,
+    pub phase_b_secs: f64,
+    pub phase_c_secs: f64,
+    pub seed: u64,
+    pub compute: ComputeMode,
+    /// sized to outlast the run from the split onward (anti-flap)
+    pub cooldown_ms: f64,
+    pub feedback_interval_ms: f64,
+    pub hysteresis: u32,
+    pub min_observations: u32,
+    pub image_build_ms: f64,
+    pub boot_ms: f64,
+    pub cross_node_ms: f64,
+}
+
+impl Fig8Params {
+    /// Full-scale chain scenario (`provuse figure8`).
+    ///
+    /// Capacity calibration (chain(4), tiny RAM model): four singletons
+    /// idle at 4 x (58 + 12) = 280 MiB, the fused group at 106 MiB.  The
+    /// 310 MiB node capacity admits the co-located unfused group with
+    /// headroom for calm working sets, while the post-split pressure
+    /// regime (280 MiB + tens of in-flight working sets) overshoots it;
+    /// the 115 MiB group cap admits the fused group under calm load and
+    /// trips under pressure (the FIG7 calibration).
+    pub fn paper_scale() -> Self {
+        Fig8Params {
+            app: Fig8App::Chain,
+            nodes: 3,
+            placement: PlacementPolicy::FusionAffinity,
+            node_capacity_mb: 310.0,
+            group_ram_cap_mb: 115.0,
+            calm_rps: 2.0,
+            pressure_rps: 60.0,
+            phase_a_secs: 60.0,
+            phase_b_secs: 60.0,
+            phase_c_secs: 60.0,
+            seed: 8,
+            compute: ComputeMode::Disabled,
+            cooldown_ms: 180_000.0,
+            feedback_interval_ms: 2_000.0,
+            hysteresis: 2,
+            min_observations: 8,
+            image_build_ms: 4_000.0,
+            boot_ms: 1_200.0,
+            cross_node_ms: 12.0,
+        }
+    }
+
+    /// Scaled-down chain variant for `cargo test` / the CI smoke job.
+    pub fn smoke() -> Self {
+        Fig8Params {
+            phase_a_secs: 15.0,
+            phase_b_secs: 30.0,
+            phase_c_secs: 15.0,
+            cooldown_ms: 60_000.0,
+            feedback_interval_ms: 1_000.0,
+            image_build_ms: 300.0,
+            boot_ms: 150.0,
+            ..Self::paper_scale()
+        }
+    }
+
+    /// Best-effort defaults for `app` (chain is the calibrated scenario;
+    /// iot/mixed reuse their FIG7 apps and may need explicit capacities).
+    pub fn for_app(app: Fig8App, smoke: bool) -> Self {
+        let base = if smoke { Self::smoke() } else { Self::paper_scale() };
+        match app {
+            Fig8App::Chain => base,
+            // iot-heavy hot group: 68 + 458 + 70 = 596 MiB unfused,
+            // 536 MiB fused
+            Fig8App::Iot => Fig8Params {
+                app,
+                node_capacity_mb: 660.0,
+                group_ram_cap_mb: 560.0,
+                pressure_rps: 40.0,
+                ..base
+            },
+            // mixed heavy pair: 526 MiB unfused, 468 MiB fused
+            Fig8App::Mixed => Fig8Params {
+                app,
+                node_capacity_mb: 545.0,
+                group_ram_cap_mb: 480.0,
+                pressure_rps: 40.0,
+                min_observations: 3,
+                ..base
+            },
+        }
+    }
+}
+
+/// The spread negative control's paired measurement.
+#[derive(Debug, Clone)]
+pub struct SpreadControl {
+    pub spread_p95_ms: f64,
+    pub single_p95_ms: f64,
+    /// distinct nodes the hot group landed on under spread
+    pub spread_nodes_used: usize,
+    pub spread_cross_calls: u64,
+    pub single_cross_calls: u64,
+    pub spread_failed: u64,
+    pub single_failed: u64,
+}
+
+/// Output of the FIG8 experiment.
+pub struct Fig8 {
+    pub params: Fig8Params,
+    pub merges: Vec<MergeEvent>,
+    pub splits: Vec<SplitEvent>,
+    pub evicts: Vec<EvictEvent>,
+    pub migrations: Vec<MigrationEvent>,
+    pub node_ram: Vec<NodeRamSample>,
+    pub latency: Vec<LatencySample>,
+    pub reports: Vec<(&'static str, WorkloadReport)>,
+    pub phase_end_ms: Vec<f64>,
+    /// node of each hot-group member right after deploy
+    pub deploy_nodes: Vec<(String, Option<NodeId>)>,
+    /// (node, ram, capacity) at the end of the run
+    pub final_node_ram: Vec<(NodeId, f64, f64)>,
+    pub cross_node_calls: u64,
+    pub final_distinct_instances: usize,
+    /// present only under `--placement spread`
+    pub control: Option<SpreadControl>,
+    /// canonical Recorder exports captured before the platform dropped
+    /// (one format definition — see `Recorder::latency_csv` /
+    /// `Recorder::node_ram_csv`)
+    latency_csv: String,
+    node_ram_csv: String,
+}
+
+impl Fig8 {
+    fn hot_group(&self) -> Vec<String> {
+        self.params.app.hot_group()
+    }
+
+    pub fn first_split(&self) -> Option<&SplitEvent> {
+        self.splits.first()
+    }
+
+    /// Migrations the node-pressure controller ordered (co-location moves
+    /// are a different reason and counted separately).
+    pub fn pressure_migrations(&self) -> Vec<&MigrationEvent> {
+        self.migrations.iter().filter(|m| m.reason == "node_pressure").collect()
+    }
+
+    /// Splits the group-cap defusion controller ordered (the calibrated
+    /// pressure-phase trigger), as opposed to node-pressure fallbacks.
+    fn group_cap_splits(&self) -> Vec<&SplitEvent> {
+        self.splits.iter().filter(|s| s.reason != SplitReason::NodePressure).collect()
+    }
+
+    /// Splits the node-pressure controller fell back to when nothing
+    /// movable fit anywhere — a valid pressure resolution.
+    fn pressure_splits(&self) -> Vec<&SplitEvent> {
+        self.splits.iter().filter(|s| s.reason == SplitReason::NodePressure).collect()
+    }
+
+    pub fn colocation_migrations(&self) -> Vec<&MigrationEvent> {
+        self.migrations.iter().filter(|m| m.reason == "fusion_colocation").collect()
+    }
+
+    pub fn checks(&self) -> Vec<Check> {
+        match &self.control {
+            Some(control) => self.checks_spread(control),
+            None => self.checks_affinity(),
+        }
+    }
+
+    fn checks_affinity(&self) -> Vec<Check> {
+        let mut out = Vec::new();
+        let end_a = self.phase_end_ms.first().copied().unwrap_or(f64::NAN);
+        let end_b = self.phase_end_ms.get(1).copied().unwrap_or(f64::NAN);
+
+        let home = self.deploy_nodes.first().and_then(|(_, n)| *n);
+        let colocated = home.is_some()
+            && self.deploy_nodes.iter().all(|(_, n)| *n == home)
+            && self.deploy_nodes.len() == self.hot_group().len();
+        out.push(Check {
+            label: "hot sync group co-located at deploy",
+            pass: colocated,
+            detail: format!(
+                "{:?}",
+                self.deploy_nodes
+                    .iter()
+                    .map(|(f, n)| format!("{f}@{}", n.map(|n| n.to_string()).unwrap_or_default()))
+                    .collect::<Vec<_>>()
+            ),
+        });
+
+        let fused_in_calm =
+            self.merges.first().map(|m| m.t_ms < end_a).unwrap_or(false);
+        out.push(Check {
+            label: "hot group fuses under calm load with zero co-location migrations",
+            pass: fused_in_calm && self.colocation_migrations().is_empty(),
+            detail: format!(
+                "{} merges (first at t={:.1}s), {} co-location migrations",
+                self.merges.len(),
+                self.merges.first().map(|m| m.t_ms / 1e3).unwrap_or(f64::NAN),
+                self.colocation_migrations().len()
+            ),
+        });
+
+        let split_ok = self.group_cap_splits().len() == 1
+            && self
+                .group_cap_splits()
+                .first()
+                .map(|s| s.reason == SplitReason::RamCap && s.t_ms > end_a && s.t_ms < end_b)
+                .unwrap_or(false);
+        out.push(Check {
+            label: "pressure trips the group RAM cap exactly once",
+            pass: split_ok,
+            detail: match self.first_split() {
+                Some(s) => format!(
+                    "{} split(s); first [{}] at t={:.1}s, reason {}",
+                    self.splits.len(),
+                    s.functions.join("+"),
+                    s.t_ms / 1e3,
+                    s.reason.name()
+                ),
+                None => "no split event".into(),
+            },
+        });
+
+        // the node-pressure controller's resolution is a migration, an
+        // eviction, or — when nothing movable fits anywhere — its split
+        // fallback; any one of them, exactly once
+        let resolutions = self.pressure_migrations().len()
+            + self.evicts.len()
+            + self.pressure_splits().len();
+        out.push(Check {
+            label: "node pressure resolves with exactly one migration-or-defusion",
+            pass: resolutions == 1,
+            detail: format!(
+                "{} pressure migration(s) [{}], {} evict(s), {} node-pressure split(s)",
+                self.pressure_migrations().len(),
+                self.pressure_migrations()
+                    .iter()
+                    .map(|m| format!("{}->{} at {:.1}s", m.from, m.to, m.t_ms / 1e3))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                self.evicts.len(),
+                self.pressure_splits().len()
+            ),
+        });
+
+        let capped_ok = self
+            .final_node_ram
+            .iter()
+            .all(|(_, ram, cap)| *cap <= 0.0 || ram <= cap);
+        out.push(Check {
+            label: "every node ends under its RAM capacity",
+            pass: capped_ok,
+            detail: format!(
+                "[{}]",
+                self.final_node_ram
+                    .iter()
+                    .map(|(n, ram, cap)| format!("{n}: {ram:.0}/{cap:.0} MiB"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        });
+
+        // cooldowns hold from the split on, so the run must end split
+        // apart: one routed instance per hot-group member (plus any
+        // functions outside the group)
+        let no_reflap = match self.first_split() {
+            Some(s) => self.merges.iter().all(|m| m.t_ms < s.t_ms),
+            None => false,
+        } && self.final_distinct_instances >= self.hot_group().len();
+        out.push(Check {
+            label: "no re-fusion or further moves after the corrective action",
+            pass: no_reflap && resolutions <= 1,
+            detail: format!(
+                "merges at [{}]; {} final routed instances",
+                self.merges
+                    .iter()
+                    .map(|m| format!("{:.1}s", m.t_ms / 1e3))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                self.final_distinct_instances
+            ),
+        });
+
+        out.push(self.zero_drops_check());
+        out
+    }
+
+    fn checks_spread(&self, control: &SpreadControl) -> Vec<Check> {
+        let mut out = Vec::new();
+        out.push(Check {
+            label: "spread placement lands the hot group on multiple nodes",
+            pass: control.spread_nodes_used >= 2,
+            detail: format!(
+                "{} distinct nodes for {:?}",
+                control.spread_nodes_used,
+                self.hot_group()
+            ),
+        });
+        out.push(Check {
+            label: "cross-node hops occur under spread and never on one node",
+            pass: control.spread_cross_calls > 0 && control.single_cross_calls == 0,
+            detail: format!(
+                "spread {} cross-node calls, single-node {}",
+                control.spread_cross_calls, control.single_cross_calls
+            ),
+        });
+        let gap = control.spread_p95_ms - control.single_p95_ms;
+        out.push(Check {
+            label: "cross-node placement is visible in p95",
+            pass: gap.is_finite() && gap >= self.params.cross_node_ms,
+            detail: format!(
+                "spread p95 {:.1} ms vs single-node p95 {:.1} ms (gap {:.1} >= {:.1})",
+                control.spread_p95_ms, control.single_p95_ms, gap, self.params.cross_node_ms
+            ),
+        });
+        out.push(Check {
+            label: "zero dropped requests in both runs",
+            pass: control.spread_failed == 0 && control.single_failed == 0,
+            detail: format!(
+                "spread {} failed, single-node {} failed",
+                control.spread_failed, control.single_failed
+            ),
+        });
+        out
+    }
+
+    fn zero_drops_check(&self) -> Check {
+        let all_served = self.reports.iter().all(|(_, r)| r.failed == 0);
+        Check {
+            label: "zero dropped requests across all phases",
+            pass: all_served,
+            detail: self
+                .reports
+                .iter()
+                .map(|(l, r)| format!("{l}: {}/{} ok", r.ok, r.issued))
+                .collect::<Vec<_>>()
+                .join(", "),
+        }
+    }
+
+    pub fn passed(&self) -> bool {
+        self.checks().iter().all(|c| c.pass)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "FIG8/{}: cluster subsystem ({} nodes, {} placement)\n",
+            self.params.app.name(),
+            self.params.nodes,
+            self.params.placement.name()
+        ));
+        for (label, report) in &self.reports {
+            out.push_str(&format!("  {label:<15}: {}\n", report.summary()));
+        }
+        if let Some(control) = &self.control {
+            out.push_str(&format!(
+                "  control   : spread p95 {:.1} ms vs single-node p95 {:.1} ms ({} cross-node calls)\n",
+                control.spread_p95_ms, control.single_p95_ms, control.spread_cross_calls
+            ));
+        } else {
+            out.push_str(&format!(
+                "  events    : {} merges, {} splits, {} evicts, {} migrations ({} for co-location)\n",
+                self.merges.len(),
+                self.splits.len(),
+                self.evicts.len(),
+                self.migrations.len(),
+                self.colocation_migrations().len()
+            ));
+            out.push_str(&format!(
+                "  cross-node: {} calls over the whole run\n",
+                self.cross_node_calls
+            ));
+        }
+        for c in self.checks() {
+            out.push_str(&format!(
+                "  [{}] {} — {}\n",
+                if c.pass { "PASS" } else { "FAIL" },
+                c.label,
+                c.detail
+            ));
+        }
+        out
+    }
+}
+
+fn base_config(p: &Fig8Params, placement: PlacementPolicy, nodes: usize) -> PlatformConfig {
+    let mut cfg = PlatformConfig::tiny().with_compute(p.compute).with_seed(p.seed);
+    cfg.cluster.nodes = nodes;
+    cfg.cluster.placement = placement;
+    cfg.latency.image_build_ms = p.image_build_ms;
+    cfg.latency.boot_ms = p.boot_ms;
+    cfg.latency.cross_node_ms = p.cross_node_ms;
+    cfg.fusion.min_observations = p.min_observations;
+    cfg.fusion.cooldown_ms = p.cooldown_ms;
+    cfg.fusion.max_group_ram_mb = p.group_ram_cap_mb;
+    cfg.fusion.feedback_interval_ms = p.feedback_interval_ms;
+    cfg.fusion.split_hysteresis_windows = p.hysteresis;
+    cfg.fusion.split_policy = SplitPolicyKind::Threshold;
+    cfg.fusion.merge_policy = MergePolicyKind::ObservationCount;
+    cfg
+}
+
+/// Run FIG8 and write its CSVs + summary into `out_dir`.
+pub fn run(out_dir: &Path, params: Fig8Params) -> Result<Fig8> {
+    if params.nodes < 2 {
+        return Err(crate::error::Error::Config(
+            "figure8 needs --nodes >= 2 (the cluster scenario is the point)".into(),
+        ));
+    }
+    let fig = match params.placement {
+        PlacementPolicy::Spread => run_spread_control(params)?,
+        _ => run_affinity(params)?,
+    };
+
+    write_output(&out_dir.join("fig8_latency.csv"), &fig.latency_csv)?;
+    write_output(&out_dir.join("fig8_node_ram.csv"), &fig.node_ram_csv)?;
+    let mut events = String::from("t_ms,event,duration_ms,detail,functions\n");
+    for m in &fig.merges {
+        events.push_str(&format!(
+            "{:.3},merge,{:.3},,{}\n",
+            m.t_ms,
+            m.duration_ms,
+            m.functions.join("+")
+        ));
+    }
+    for s in &fig.splits {
+        events.push_str(&format!(
+            "{:.3},split,{:.3},{},{}\n",
+            s.t_ms,
+            s.duration_ms,
+            s.reason.name(),
+            s.functions.join("+")
+        ));
+    }
+    for e in &fig.evicts {
+        events.push_str(&format!(
+            "{:.3},evict,{:.3},{},{}\n",
+            e.t_ms,
+            e.duration_ms,
+            e.reason.name(),
+            e.group.join("+")
+        ));
+    }
+    for m in &fig.migrations {
+        events.push_str(&format!(
+            "{:.3},migrate,{:.3},{} {}->{},{}\n",
+            m.t_ms,
+            m.duration_ms,
+            m.reason,
+            m.from,
+            m.to,
+            m.functions.join("+")
+        ));
+    }
+    write_output(&out_dir.join("fig8_events.csv"), &events)?;
+    write_output(&out_dir.join("fig8_summary.txt"), &fig.render())?;
+    Ok(fig)
+}
+
+/// The three-phase fusion-affinity (or bin-pack) scenario.
+fn run_affinity(params: Fig8Params) -> Result<Fig8> {
+    Executor::new(Mode::Virtual).block_on(async move {
+        let mut cfg = base_config(&params, params.placement, params.nodes);
+        cfg.cluster.node_capacity_mb = params.node_capacity_mb;
+        let app = params.app.spec();
+        let hot_group = params.app.hot_group();
+        let hot_probe = params.app.hot_probe();
+
+        let platform = Platform::deploy(app, cfg).await?;
+        let deploy_nodes: Vec<(String, Option<NodeId>)> = hot_group
+            .iter()
+            .map(|f| (f.clone(), platform.node_of_function(f)))
+            .collect();
+
+        let mut reports: Vec<(&'static str, WorkloadReport)> = Vec::new();
+        let mut phase_end_ms = Vec::new();
+        let phases: [(&'static str, f64); 3] = [
+            ("calm", params.phase_a_secs),
+            ("pressure", params.phase_b_secs),
+            ("relief", params.phase_c_secs),
+        ];
+        for (i, (label, secs)) in phases.iter().enumerate() {
+            let entry_wl = WorkloadConfig {
+                requests: (params.calm_rps * secs).round() as u64,
+                rate_rps: params.calm_rps,
+                seed: params.seed.wrapping_add(i as u64),
+                timeout_ms: 120_000.0,
+            };
+            if *label == "pressure" {
+                let hot_wl = WorkloadConfig {
+                    requests: (params.pressure_rps * secs).round() as u64,
+                    rate_rps: params.pressure_rps,
+                    seed: params.seed.wrapping_add(0x8EED + i as u64),
+                    timeout_ms: 120_000.0,
+                };
+                let entry = exec::spawn(workload::run(Rc::clone(&platform), entry_wl));
+                let hot = exec::spawn(workload::run_targeted(
+                    Rc::clone(&platform),
+                    hot_wl,
+                    Arrival::Constant,
+                    Some(hot_probe),
+                ));
+                reports.push(("pressure", entry.await?));
+                reports.push(("pressure-hot", hot.await?));
+            } else {
+                reports.push((*label, workload::run(Rc::clone(&platform), entry_wl).await?));
+            }
+            // let in-flight pipelines land before the phase probe
+            exec::sleep_ms(2_000.0).await;
+            phase_end_ms.push(platform.metrics.rel_now_ms());
+        }
+        // let drains and the pressure resolution settle
+        exec::sleep_ms(10_000.0).await;
+        platform.shutdown();
+
+        let final_node_ram: Vec<(NodeId, f64, f64)> = platform
+            .cluster
+            .nodes()
+            .iter()
+            .map(|n| (n.id(), n.ram_mb(), n.capacity_mb()))
+            .collect();
+        let m = &platform.metrics;
+        Ok(Fig8 {
+            params,
+            merges: m.merges(),
+            splits: m.splits(),
+            evicts: m.evicts(),
+            migrations: m.migrations(),
+            node_ram: m.node_ram_series(),
+            latency: m.latencies(),
+            reports,
+            phase_end_ms,
+            deploy_nodes,
+            final_node_ram,
+            cross_node_calls: m.counter("cross_node_calls"),
+            final_distinct_instances: platform.gateway.distinct_instances(),
+            control: None,
+            latency_csv: m.latency_csv(),
+            node_ram_csv: m.node_ram_csv(),
+        })
+    })
+}
+
+/// The spread negative control: spread-vanilla vs single-node-vanilla on
+/// identical traffic; the p95 gap is the measured cross-node cost.
+fn run_spread_control(params: Fig8Params) -> Result<Fig8> {
+    // identical open-loop traffic for both runs (same seed, same schedule)
+    let wl = WorkloadConfig {
+        requests: (params.calm_rps * (params.phase_a_secs + params.phase_b_secs)).round()
+            as u64,
+        rate_rps: params.calm_rps,
+        seed: params.seed,
+        timeout_ms: 120_000.0,
+    };
+
+    let spread = Executor::new(Mode::Virtual).block_on({
+        let wl = wl.clone();
+        async move {
+            // uncapped + vanilla: this run measures placement latency only
+            let cfg = base_config(&params, PlacementPolicy::Spread, params.nodes).vanilla();
+            let app = params.app.spec();
+            let hot_group = params.app.hot_group();
+            let platform = Platform::deploy(app, cfg).await?;
+            let deploy_nodes: Vec<(String, Option<NodeId>)> = hot_group
+                .iter()
+                .map(|f| (f.clone(), platform.node_of_function(f)))
+                .collect();
+            let report = workload::run(Rc::clone(&platform), wl).await?;
+            exec::sleep_ms(5_000.0).await;
+            platform.shutdown();
+            let m = &platform.metrics;
+            Ok::<_, crate::error::Error>((
+                deploy_nodes,
+                report,
+                m.latencies(),
+                m.node_ram_series(),
+                m.counter("cross_node_calls"),
+                m.latency_csv(),
+                m.node_ram_csv(),
+            ))
+        }
+    })?;
+
+    let single = Executor::new(Mode::Virtual).block_on(async move {
+        let cfg = base_config(&params, PlacementPolicy::BinPack, 1).vanilla();
+        let platform = Platform::deploy(params.app.spec(), cfg).await?;
+        let report = workload::run(Rc::clone(&platform), wl).await?;
+        exec::sleep_ms(5_000.0).await;
+        platform.shutdown();
+        let cross = platform.metrics.counter("cross_node_calls");
+        Ok::<_, crate::error::Error>((report, cross))
+    })?;
+
+    let (deploy_nodes, spread_report, latency, node_ram, spread_cross, latency_csv, node_ram_csv) =
+        spread;
+    let (single_report, single_cross) = single;
+    let spread_nodes_used = {
+        let mut nodes: Vec<Option<NodeId>> =
+            deploy_nodes.iter().map(|(_, n)| *n).collect();
+        nodes.sort();
+        nodes.dedup();
+        nodes.len()
+    };
+    let control = SpreadControl {
+        spread_p95_ms: spread_report.latency.p95(),
+        single_p95_ms: single_report.latency.p95(),
+        spread_nodes_used,
+        spread_cross_calls: spread_cross,
+        single_cross_calls: single_cross,
+        spread_failed: spread_report.failed,
+        single_failed: single_report.failed,
+    };
+    Ok(Fig8 {
+        params,
+        merges: Vec::new(),
+        splits: Vec::new(),
+        evicts: Vec::new(),
+        migrations: Vec::new(),
+        node_ram,
+        latency,
+        reports: vec![("spread", spread_report), ("single-node", single_report)],
+        phase_end_ms: Vec::new(),
+        deploy_nodes,
+        final_node_ram: Vec::new(),
+        cross_node_calls: spread_cross,
+        final_distinct_instances: 0,
+        control: Some(control),
+        latency_csv,
+        node_ram_csv,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_affinity_cluster_scenario_at_smoke_scale() {
+        let dir = std::env::temp_dir().join("provuse_fig8_test");
+        let fig = run(&dir, Fig8Params::smoke()).unwrap();
+        for c in fig.checks() {
+            assert!(c.pass, "{} — {}\n{}", c.label, c.detail, fig.render());
+        }
+        // the corrective action was a pressure migration (the empty
+        // neighbor nodes can absorb a chain singleton), and it genuinely
+        // moved an instance off the packed node
+        let pressure = fig.pressure_migrations();
+        assert_eq!(pressure.len(), 1, "{:?}", fig.migrations);
+        assert_ne!(pressure[0].from, pressure[0].to);
+        // the node-pressure episode is visible in the per-node series:
+        // some tick saw the home node over its capacity
+        let home = fig.deploy_nodes[0].1.unwrap();
+        assert!(
+            fig.node_ram
+                .iter()
+                .any(|s| s.node == home && s.capacity_mb > 0.0 && s.ram_mb > s.capacity_mb),
+            "no over-capacity tick recorded for {home}"
+        );
+        assert!(dir.join("fig8_events.csv").exists());
+        assert!(dir.join("fig8_node_ram.csv").exists());
+        let events = std::fs::read_to_string(dir.join("fig8_events.csv")).unwrap();
+        assert!(events.contains("migrate"));
+        assert!(events.contains("node_pressure"));
+    }
+
+    #[test]
+    fn fig8_spread_negative_control_at_smoke_scale() {
+        let mut p = Fig8Params::smoke();
+        p.placement = PlacementPolicy::Spread;
+        let dir = std::env::temp_dir().join("provuse_fig8_spread_test");
+        let fig = run(&dir, p).unwrap();
+        for c in fig.checks() {
+            assert!(c.pass, "{} — {}\n{}", c.label, c.detail, fig.render());
+        }
+        let control = fig.control.as_ref().unwrap();
+        assert!(control.spread_p95_ms > control.single_p95_ms);
+        assert!(dir.join("fig8_summary.txt").exists());
+    }
+
+    #[test]
+    fn fig8_rejects_single_node() {
+        let mut p = Fig8Params::smoke();
+        p.nodes = 1;
+        let dir = std::env::temp_dir().join("provuse_fig8_reject");
+        assert!(run(&dir, p).is_err());
+    }
+}

@@ -11,10 +11,12 @@
 //! | TAB-RAM | §5.2 RAM reductions          | [`fig6`] (RAM columns)|
 //! | ABL-*   | ours: rate/hop/policy sweeps | [`sweep`]             |
 //! | FIG7    | ours: fuse ∧ split feedback  | [`fig7`]              |
+//! | FIG8    | ours: multi-node cluster     | [`fig8`]              |
 
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod fig8;
 pub mod sweep;
 
 use std::rc::Rc;

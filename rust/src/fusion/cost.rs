@@ -28,6 +28,7 @@
 //! reporting; the score keeps raw GiB-seconds per second so weights stay
 //! O(1) human-tunable.
 
+use crate::cluster::NodeId;
 use crate::config::{CostParams, FusionParams};
 
 use super::{FnAttribution, GroupSample};
@@ -55,6 +56,42 @@ pub struct FnSignals {
     pub self_ms: f64,
     /// window length (seconds)
     pub window_s: f64,
+    /// node hosting the function's instance (None on single-node
+    /// platforms and in non-cluster tests: treated as co-located)
+    pub node: Option<NodeId>,
+}
+
+/// Placement context of one merge-admission evaluation: everything the
+/// cluster layer knows that the windowed signals alone cannot express.
+/// [`MergeContext::local`] is the single-node identity (share 1, already
+/// co-located, nothing to migrate, no capacity bound).
+#[derive(Debug, Clone, Copy)]
+pub struct MergeContext {
+    /// the callee's fraction of the caller's observed outbound sync calls
+    /// (the caller's blocked time aggregates waits on *all* callees, so
+    /// fusing one pair recovers only this share of it)
+    pub callee_share: f64,
+    /// caller and callee instances already share a node
+    pub colocated: bool,
+    /// predicted one-off cost (ms) of migrating the callee to the
+    /// caller's node first (0 when co-located)
+    pub migration_ms: f64,
+    /// headroom left on the caller's node after the callee moves over
+    /// (MiB); negative = the co-location would breach node capacity, so
+    /// the pair is churn-gated exactly like a RAM-pressure refusal
+    pub target_headroom_mb: f64,
+}
+
+impl MergeContext {
+    /// Single-node / co-located identity context.
+    pub fn local() -> Self {
+        MergeContext {
+            callee_share: 1.0,
+            colocated: true,
+            migration_ms: 0.0,
+            target_headroom_mb: f64::INFINITY,
+        }
+    }
 }
 
 /// One merge-admission verdict (kept for telemetry and regret attribution).
@@ -74,9 +111,14 @@ pub struct MergeDecision {
     /// attributed RAM; slightly pessimistic — the shared base runtime is
     /// counted twice — which errs on the side of refusing)
     pub ram_term: f64,
+    /// amortized co-location cost: the predicted migration milliseconds
+    /// spread over the feedback window (0 for co-located pairs)
+    pub mig_term: f64,
     /// true when the RAM penalty alone already crosses the defusion
-    /// objective's evict threshold: fusing would create an immediate
-    /// eviction candidate, so the pair is refused regardless of benefit
+    /// objective's evict threshold — or the co-location would breach the
+    /// target node's capacity: fusing would create an immediate
+    /// eviction/pressure candidate, so the pair is refused regardless of
+    /// benefit
     pub churn_gated: bool,
 }
 
@@ -179,9 +221,10 @@ impl CostModel {
     /// (`caller`, `callee`) pays for itself.
     ///
     /// ```text
-    /// benefit = w_latency * caller blocked-time rate   (hops inlined away)
+    /// benefit = w_latency * caller blocked-time rate * callee share
     ///         + w_gbs     * callee billed GiB-s rate   (double billing gone)
     /// penalty = w_ram     * (caller_ram + callee_ram) / ram_reference
+    ///         + w_latency * migration_ms / window_ms   (co-location, amortized)
     /// score   = benefit - penalty;  admit iff score >= merge_threshold
     /// ```
     ///
@@ -189,22 +232,34 @@ impl CostModel {
     /// charges the caller's full duration *including* sync waits while the
     /// handler's self-time series excludes them, so `billed - self` per
     /// wall second is exactly the double-billed hop time fusion eliminates.
-    /// (It aggregates waits on *all* of the caller's callees — an upper
-    /// bound on what fusing this one pair recovers.)
+    /// It aggregates waits on *all* of the caller's callees, so the term is
+    /// scaled by `ctx.callee_share` — the callee's observed fraction of the
+    /// caller's outbound sync calls — instead of pricing the full blocked
+    /// time against every candidate (the multi-callee upper bound the
+    /// ROADMAP flagged).
     ///
-    /// Churn gate: when cost-driven defusion is armed, a pair whose RAM
-    /// penalty alone (`w_ram * ram_term`, a lower bound on the post-fuse
-    /// group score) already crosses `evict_threshold` is refused outright —
-    /// fusing it would create an immediate eviction candidate and the
-    /// fuse -> evict -> cooldown -> fuse churn the planner exists to prevent.
+    /// Cluster pricing: a pair on different nodes must first migrate; the
+    /// predicted migration cost is amortized over the feedback window and
+    /// charged in the latency dimension (`mig_term`), so a hot pair
+    /// swallows it while a lukewarm one keeps waiting.
+    ///
+    /// Churn gates (either refuses outright): when cost-driven defusion is
+    /// armed, a pair whose RAM penalty alone (`w_ram * ram_term`, a lower
+    /// bound on the post-fuse group score) already crosses
+    /// `evict_threshold` — fusing it would create an immediate eviction
+    /// candidate; and a pair whose co-location would leave negative
+    /// headroom on the target node — fusing it would manufacture the node
+    /// pressure the cluster controller exists to relieve.
     pub fn predict_merge(
         &self,
         caller: &FnSignals,
         callee: &FnSignals,
         merge_threshold: f64,
+        ctx: &MergeContext,
     ) -> MergeDecision {
+        let share = ctx.callee_share.clamp(0.0, 1.0);
         let lat_term = if caller.window_s > 0.0 {
-            (caller.billed_ms - caller.self_ms).max(0.0) / (caller.window_s * 1e3)
+            share * (caller.billed_ms - caller.self_ms).max(0.0) / (caller.window_s * 1e3)
         } else {
             0.0
         };
@@ -213,15 +268,23 @@ impl CostModel {
         } else {
             0.0
         };
+        let mig_term = if ctx.colocated || caller.window_s <= 0.0 {
+            0.0
+        } else {
+            ctx.migration_ms.max(0.0) / (caller.window_s * 1e3)
+        };
         let ram_term = (caller.ram_mb.max(0.0) + callee.ram_mb.max(0.0)) / self.ram_ref_mb;
-        let score = self.w_latency * lat_term + self.w_gbs * gbs_term - self.w_ram * ram_term;
-        let churn_gated = self.armed() && self.w_ram * ram_term >= self.evict_threshold;
+        let score = self.w_latency * (lat_term - mig_term) + self.w_gbs * gbs_term
+            - self.w_ram * ram_term;
+        let churn_gated = (self.armed() && self.w_ram * ram_term >= self.evict_threshold)
+            || ctx.target_headroom_mb < 0.0;
         MergeDecision {
             score,
             admit: !churn_gated && score >= merge_threshold,
             lat_term,
             gbs_term,
             ram_term,
+            mig_term,
             churn_gated,
         }
     }
@@ -459,23 +522,27 @@ mod tests {
             billed_ms,
             self_ms,
             window_s: 2.0,
+            node: None,
         }
     }
 
     #[test]
     fn predict_merge_admits_hot_light_pair_and_refuses_heavy_pair() {
         let m = model(256.0); // evict_threshold = 2.0 (default)
+        let ctx = MergeContext::local();
         // light hot pair: caller blocked 1.6 s over a 2 s window, callee
         // bill small, combined RAM well under the reference
         let light = m.predict_merge(
             &signals("a", 70.0, 2_000.0, 400.0, 0.1),
             &signals("b", 70.0, 0.0, 0.0, 0.1),
             0.0,
+            &ctx,
         );
         assert!(light.admit, "{light:?}");
         assert!(!light.churn_gated);
         assert!((light.lat_term - 0.8).abs() < 1e-12);
         assert!((light.gbs_term - 0.05).abs() < 1e-12);
+        assert_eq!(light.mig_term, 0.0);
         // heavy pair: callee RAM alone pushes the predicted working set
         // past the evict threshold -> churn-gated even though the benefit
         // terms are large
@@ -483,6 +550,7 @@ mod tests {
             &signals("a", 70.0, 2_000.0, 100.0, 0.1),
             &signals("big", 460.0, 0.0, 0.0, 2.0),
             0.0,
+            &ctx,
         );
         assert!(!heavy.admit, "{heavy:?}");
         assert!(heavy.churn_gated, "refusal must be the churn gate");
@@ -496,6 +564,7 @@ mod tests {
             &signals("a", 70.0, 20.0, 15.0, 0.001),
             &signals("b", 70.0, 0.0, 0.0, 0.001),
             0.0,
+            &MergeContext::local(),
         );
         assert!(!cold.admit, "{cold:?}");
         assert!(!cold.churn_gated, "cold refusal is the score, not the churn gate");
@@ -503,13 +572,77 @@ mod tests {
     }
 
     #[test]
+    fn predict_merge_scales_blocked_time_by_callee_share() {
+        // ISSUE 4 satellite: a caller with several callees must not price
+        // its whole blocked time against each of them.
+        let m = model(1e9).with_weights(1.0, 0.0, 0.0); // latency term only
+        let caller = signals("a", 70.0, 2_000.0, 400.0, 0.0);
+        let callee = signals("b", 70.0, 0.0, 0.0, 0.0);
+        let sole = m.predict_merge(&caller, &callee, 0.0, &MergeContext::local());
+        let half = m.predict_merge(
+            &caller,
+            &callee,
+            0.0,
+            &MergeContext { callee_share: 0.5, ..MergeContext::local() },
+        );
+        assert!((sole.lat_term - 0.8).abs() < 1e-12);
+        assert!((half.lat_term - 0.4).abs() < 1e-12, "{half:?}");
+        assert!((half.score - sole.score / 2.0).abs() < 1e-12);
+        // out-of-range shares clamp instead of inflating the benefit
+        let wild = m.predict_merge(
+            &caller,
+            &callee,
+            0.0,
+            &MergeContext { callee_share: 7.0, ..MergeContext::local() },
+        );
+        assert!((wild.lat_term - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predict_merge_prices_migration_and_gates_on_target_capacity() {
+        let m = model(1e9).with_weights(1.0, 0.0, 0.0);
+        let caller = signals("a", 70.0, 2_000.0, 400.0, 0.0);
+        let callee = signals("b", 70.0, 0.0, 0.0, 0.0);
+        // cross-node pair: a 1 s predicted migration amortized over the
+        // 2 s window costs 0.5 in the latency dimension
+        let cross = MergeContext {
+            callee_share: 1.0,
+            colocated: false,
+            migration_ms: 1_000.0,
+            target_headroom_mb: 100.0,
+        };
+        let d = m.predict_merge(&caller, &callee, 0.0, &cross);
+        assert!((d.mig_term - 0.5).abs() < 1e-12, "{d:?}");
+        assert!((d.score - 0.3).abs() < 1e-12, "benefit 0.8 - migration 0.5");
+        assert!(d.admit);
+        // the same pair is refused when the hop is not worth the move
+        let lukewarm = m.predict_merge(
+            &signals("a", 70.0, 500.0, 400.0, 0.0),
+            &callee,
+            0.0,
+            &cross,
+        );
+        assert!(lukewarm.score < 0.0 && !lukewarm.admit, "{lukewarm:?}");
+        // negative target headroom churn-gates regardless of benefit
+        let breach = m.predict_merge(
+            &caller,
+            &callee,
+            0.0,
+            &MergeContext { target_headroom_mb: -1.0, ..cross },
+        );
+        assert!(breach.churn_gated && !breach.admit, "{breach:?}");
+    }
+
+    #[test]
     fn predict_merge_blocked_time_clamps_and_weights_apply() {
         let m = model(256.0).with_weights(2.0, 0.0, 0.0);
+        let ctx = MergeContext::local();
         // self > billed (e.g. inline-dominated window) clamps to zero
         let d = m.predict_merge(
             &signals("a", 70.0, 100.0, 500.0, 0.0),
             &signals("b", 70.0, 0.0, 0.0, 4.0),
             0.0,
+            &ctx,
         );
         assert_eq!(d.lat_term, 0.0);
         // w_gbs = 0 silences the bill term; w_ram = 0 removes the penalty
@@ -520,9 +653,11 @@ mod tests {
             &FnSignals { window_s: 0.0, ..signals("a", 70.0, 100.0, 0.0, 1.0) },
             &FnSignals { window_s: 0.0, ..signals("b", 70.0, 0.0, 0.0, 1.0) },
             0.0,
+            &ctx,
         );
         assert_eq!(z.lat_term, 0.0);
         assert_eq!(z.gbs_term, 0.0);
+        assert_eq!(z.mig_term, 0.0);
     }
 
     #[test]
@@ -536,6 +671,12 @@ mod tests {
             p.cost.w_ram = g.f64(0.0, 4.0);
             p.cost.w_gbs = g.f64(0.0, 4.0);
             let m = CostModel::from_params(&p);
+            let ctx = MergeContext {
+                callee_share: g.f64(0.0, 1.0),
+                colocated: g.bool(),
+                migration_ms: g.f64(0.0, 5_000.0),
+                target_headroom_mb: g.f64(0.0, 1_000.0),
+            };
             let caller = FnSignals {
                 function: "a".into(),
                 ram_mb: g.f64(0.0, 1_000.0),
@@ -544,6 +685,7 @@ mod tests {
                 billed_ms: g.f64(0.0, 10_000.0),
                 self_ms: g.f64(0.0, 5_000.0),
                 window_s: g.f64(0.5, 10.0),
+                node: None,
             };
             let callee = FnSignals {
                 function: "b".into(),
@@ -553,8 +695,9 @@ mod tests {
                 billed_ms: 0.0,
                 self_ms: 0.0,
                 window_s: caller.window_s,
+                node: None,
             };
-            let base = m.predict_merge(&caller, &callee, 0.0);
+            let base = m.predict_merge(&caller, &callee, 0.0, &ctx);
             assert!(base.score.is_finite());
 
             let busier = FnSignals {
@@ -562,7 +705,7 @@ mod tests {
                 ..caller.clone()
             };
             assert!(
-                m.predict_merge(&busier, &callee, 0.0).score >= base.score,
+                m.predict_merge(&busier, &callee, 0.0, &ctx).score >= base.score,
                 "more blocked time lowered the merge score"
             );
             let pricier = FnSignals {
@@ -570,13 +713,31 @@ mod tests {
                 ..callee.clone()
             };
             assert!(
-                m.predict_merge(&caller, &pricier, 0.0).score >= base.score,
+                m.predict_merge(&caller, &pricier, 0.0, &ctx).score >= base.score,
                 "a bigger callee bill lowered the merge score"
             );
             let fatter = FnSignals { ram_mb: callee.ram_mb + g.f64(0.0, 500.0), ..callee.clone() };
             assert!(
-                m.predict_merge(&caller, &fatter, 0.0).score <= base.score,
+                m.predict_merge(&caller, &fatter, 0.0, &ctx).score <= base.score,
                 "more RAM raised the merge score"
+            );
+            // a larger callee share never lowers the score; a pricier
+            // migration never raises it
+            let keener = MergeContext {
+                callee_share: (ctx.callee_share + g.f64(0.0, 1.0)).min(1.0),
+                ..ctx
+            };
+            assert!(
+                m.predict_merge(&caller, &callee, 0.0, &keener).score >= base.score,
+                "a larger callee share lowered the merge score"
+            );
+            let farther = MergeContext {
+                migration_ms: ctx.migration_ms + g.f64(0.0, 5_000.0),
+                ..ctx
+            };
+            assert!(
+                m.predict_merge(&caller, &callee, 0.0, &farther).score <= base.score,
+                "a pricier migration raised the merge score"
             );
         });
     }

@@ -42,18 +42,20 @@ use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, HashSet};
 
 use crate::apps::AppSpec;
+use crate::cluster::NodeId;
 use crate::config::{FusionParams, MergePolicyKind, SplitPolicyKind};
 use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::Sender;
 use crate::metrics::{AdmissionSample, Recorder, RegretSample};
 
-pub use cost::{FnSignals, MergeDecision};
+pub use cost::{FnSignals, MergeContext, MergeDecision};
 
 use cost::{AutoTuner, CostModel};
 
 /// A request for the Merger: consolidate two functions' instances, break a
-/// fused group back apart, or evict a single member from a fused group.
+/// fused group back apart, evict a single member from a fused group, or
+/// move an instance to another node.
 #[derive(Debug, Clone, PartialEq)]
 pub enum FusionRequest {
     /// Fuse the instances hosting `caller` and `callee`.
@@ -72,6 +74,10 @@ pub enum FusionRequest {
         function: String,
         reason: SplitReason,
     },
+    /// Live-migrate the instance hosting exactly `functions` (sorted) to
+    /// node `to` — the node-pressure controller's cheaper alternative to
+    /// defusing (no image build, the fusion wins survive the move).
+    Migrate { functions: Vec<String>, to: NodeId },
 }
 
 /// Which policy violation triggered a defusion.
@@ -84,6 +90,9 @@ pub enum SplitReason {
     LatencyRegression,
     /// The cost model's weighted objective crossed `evict_threshold`.
     CostModel,
+    /// The hosting node exceeded its RAM capacity and no migration target
+    /// could absorb any of its instances.
+    NodePressure,
 }
 
 impl SplitReason {
@@ -92,8 +101,32 @@ impl SplitReason {
             SplitReason::RamCap => "ram_cap",
             SplitReason::LatencyRegression => "latency_regression",
             SplitReason::CostModel => "cost_model",
+            SplitReason::NodePressure => "node_pressure",
         }
     }
+}
+
+/// One node's load in the controller's latest cluster view (merge-planner
+/// input: prices cross-node co-location and its capacity gate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeLoad {
+    pub node: NodeId,
+    pub ram_mb: f64,
+    /// capacity (MiB); 0 = uncapped
+    pub capacity_mb: f64,
+}
+
+/// One controller observation of a node (produced every feedback tick on
+/// capped multi-node clusters): aggregate pressure plus the healthy
+/// instances that are candidates for relief.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSample {
+    pub node: NodeId,
+    pub ram_mb: f64,
+    /// capacity (MiB); 0 = uncapped (never pressured)
+    pub capacity_mb: f64,
+    /// healthy instances on the node: (sorted active functions, ram MiB)
+    pub instances: Vec<(Vec<String>, f64)>,
 }
 
 /// Per-function attribution inside one fused group, gathered by the
@@ -157,6 +190,20 @@ struct ObserverState {
     /// latest windowed per-function signals (merge planner input, set by
     /// the platform tick each feedback window)
     fn_signals: HashMap<String, FnSignals>,
+    /// latest per-node loads (merge planner's placement context; empty on
+    /// single-node platforms — every pair is then treated as co-located)
+    node_loads: Vec<NodeLoad>,
+    /// predicted one-off migration cost (ms) the platform derived from its
+    /// boot + health-gate calibration
+    migration_est_ms: f64,
+    /// consecutive feedback windows each node spent over capacity
+    node_strikes: HashMap<u64, u32>,
+    /// per-node backoff after a completed/failed pressure resolution
+    node_retry_after_ms: HashMap<u64, f64>,
+    /// pressure migrations in flight: sorted group -> source node
+    pending_migrations: HashMap<Vec<String>, u64>,
+    /// groups that recently migrated (anti ping-pong): group -> until (ms)
+    migrate_cooldown_until: HashMap<Vec<String>, f64>,
     /// bumped on every signals update; each pair is re-scored at most once
     /// per version (hot pairs observe thousands of calls per window)
     signals_version: u64,
@@ -320,8 +367,9 @@ impl Observer {
             None => (self.policy.cost.w_latency, self.policy.cost.w_ram, self.policy.cost.w_gbs),
         };
         let model = CostModel::from_params(&self.policy).with_weights(w_latency, w_ram, w_gbs);
+        let ctx = self.merge_context(s, &caller_sig, &callee_sig, caller, callee);
         let decision =
-            model.predict_merge(&caller_sig, &callee_sig, self.policy.cost.merge_threshold);
+            model.predict_merge(&caller_sig, &callee_sig, self.policy.cost.merge_threshold, &ctx);
         self.metrics.record_admission(AdmissionSample {
             t_ms: self.metrics.rel_now_ms(),
             caller: caller.to_string(),
@@ -338,6 +386,78 @@ impl Observer {
             );
         }
         decision.admit
+    }
+
+    /// Placement context for one admission evaluation: the callee's share
+    /// of the caller's observed outbound sync calls (satellite of ISSUE 4:
+    /// stop pricing the caller's whole blocked time against every callee)
+    /// plus the cluster-side co-location facts — already colocated, or the
+    /// predicted migration cost and the target node's post-move headroom.
+    fn merge_context(
+        &self,
+        s: &ObserverState,
+        caller_sig: &FnSignals,
+        callee_sig: &FnSignals,
+        caller: &str,
+        callee: &str,
+    ) -> MergeContext {
+        // The share denominator counts only callees that are still REMOTE:
+        // a callee already fused with the caller stopped being observed
+        // (its calls are inline), but its historical counts would sit in
+        // the denominator forever and underprice every later pair — while
+        // the blocked-time rate this share scales is a trailing-window
+        // signal that only ever contains the remaining remote waits.
+        let caller_group: Option<&Vec<String>> =
+            s.groups.keys().find(|k| k.iter().any(|f| f == caller));
+        let outbound: u64 = s
+            .counts
+            .iter()
+            .filter(|((a, b), _)| {
+                a == caller
+                    && !caller_group
+                        .map(|g| g.iter().any(|f| f == b))
+                        .unwrap_or(false)
+            })
+            .map(|(_, n)| *n)
+            .sum();
+        let pair = s.counts.get(&(caller.to_string(), callee.to_string())).copied().unwrap_or(0);
+        let callee_share = if outbound > 0 { pair as f64 / outbound as f64 } else { 1.0 };
+        let (colocated, target_headroom_mb) = match (caller_sig.node, callee_sig.node) {
+            (Some(a), Some(b)) if a != b => {
+                // moving the callee's instance onto the caller's node adds
+                // the callee's attributed RAM there
+                let headroom = s
+                    .node_loads
+                    .iter()
+                    .find(|l| l.node == a)
+                    .map(|l| {
+                        if l.capacity_mb <= 0.0 {
+                            f64::INFINITY
+                        } else {
+                            l.capacity_mb - l.ram_mb - callee_sig.ram_mb.max(0.0)
+                        }
+                    })
+                    .unwrap_or(f64::INFINITY);
+                (false, headroom)
+            }
+            // same node, or no cluster view (single-node legacy)
+            _ => (true, f64::INFINITY),
+        };
+        MergeContext {
+            callee_share,
+            colocated,
+            migration_ms: if colocated { 0.0 } else { s.migration_est_ms },
+            target_headroom_mb,
+        }
+    }
+
+    /// Platform tick input on multi-node clusters: per-node loads and the
+    /// calibrated one-off migration cost estimate, refreshed every
+    /// feedback window alongside the function signals.
+    pub fn update_cluster_view(&self, loads: Vec<NodeLoad>, migration_est_ms: f64) {
+        let mut s = self.state.borrow_mut();
+        s.node_loads = loads;
+        s.migration_est_ms = migration_est_ms;
     }
 
     /// Platform tick input: fresh windowed signals for every routed
@@ -605,6 +725,158 @@ impl Observer {
             };
             let _ = self.tx.send(request);
         }
+    }
+
+    /// Controller tick on capped multi-node clusters: evaluate every node
+    /// against its RAM capacity.  A node over capacity for
+    /// `split_hysteresis_windows` consecutive windows gets **one**
+    /// corrective action, preferring the cheap one:
+    ///
+    /// 1. **Migrate** — the largest instance that fits on another node is
+    ///    moved there ([`FusionRequest::Migrate`]): no image work, fusion
+    ///    wins survive, the pressure relief equals the instance footprint.
+    /// 2. **Defuse** — when nothing movable fits anywhere, the node's
+    ///    largest fused group is split ([`SplitReason::NodePressure`]),
+    ///    shedding working sets the slow way.
+    ///
+    /// After a resolution (either kind, success or failure) the node backs
+    /// off one cooldown before being re-evaluated, and a migrated group
+    /// will not be re-migrated within a cooldown — the anti-ping-pong
+    /// counterpart of the fuse/split anti-flap contract.
+    pub fn node_feedback(&self, samples: &[NodeSample]) {
+        if !self.policy.enabled {
+            return;
+        }
+        let now = exec::now().as_millis_f64();
+        let hysteresis = self.policy.split_hysteresis_windows.max(1);
+        let mut s = self.state.borrow_mut();
+        for sample in samples {
+            let node = sample.node.0;
+            let over = sample.capacity_mb > 0.0 && sample.ram_mb > sample.capacity_mb;
+            if !over {
+                s.node_strikes.insert(node, 0);
+                continue;
+            }
+            if s.pending_migrations.values().any(|&n| n == node) {
+                continue;
+            }
+            if s.node_retry_after_ms.get(&node).map(|&t| now < t).unwrap_or(false) {
+                continue;
+            }
+            let strikes = s.node_strikes.entry(node).or_insert(0);
+            *strikes += 1;
+            if *strikes < hysteresis {
+                continue;
+            }
+
+            // candidates, largest footprint first (one move, most relief)
+            let mut candidates: Vec<&(Vec<String>, f64)> = sample.instances.iter().collect();
+            candidates.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+            });
+            let migration = candidates.iter().find_map(|(fns, ram)| {
+                if s.migrate_cooldown_until.get(fns).map(|&t| now < t).unwrap_or(false) {
+                    return None;
+                }
+                // a group whose defusion is already queued will be gone by
+                // the time a Migrate reaches the serialized Merger — the
+                // staleness abort would burn this node's retry budget for
+                // nothing, so skip it and let the split do the relieving
+                if s.groups.get(fns).map(|g| g.split_pending).unwrap_or(false) {
+                    return None;
+                }
+                // best target: the other node with the most headroom that
+                // still fits this instance
+                samples
+                    .iter()
+                    .filter(|other| other.node.0 != node)
+                    .map(|other| {
+                        let headroom = if other.capacity_mb <= 0.0 {
+                            f64::INFINITY
+                        } else {
+                            other.capacity_mb - other.ram_mb
+                        };
+                        (other.node, headroom)
+                    })
+                    .filter(|(_, headroom)| *headroom >= *ram)
+                    .max_by(|a, b| {
+                        a.1.partial_cmp(&b.1)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(b.0.cmp(&a.0))
+                    })
+                    .map(|(to, _)| (fns.clone(), to))
+            });
+
+            if let Some((functions, to)) = migration {
+                s.node_strikes.insert(node, 0);
+                s.pending_migrations.insert(functions.clone(), node);
+                let _ = self.tx.send(FusionRequest::Migrate { functions, to });
+                continue;
+            }
+
+            // nothing movable fits anywhere: defuse the largest fused group
+            let fused = candidates.iter().find(|(fns, _)| fns.len() >= 2);
+            match fused {
+                Some((fns, _)) if self.policy.defusion => {
+                    let key = fns.clone();
+                    let g = s
+                        .groups
+                        .entry(key.clone())
+                        .or_insert_with(|| GroupFeedback::new(f64::NAN, now));
+                    if g.split_pending || now < g.retry_after_ms {
+                        continue;
+                    }
+                    g.split_pending = true;
+                    s.node_strikes.insert(node, 0);
+                    s.node_retry_after_ms.insert(node, now + self.policy.cooldown_ms);
+                    let _ = self.tx.send(FusionRequest::Split {
+                        functions: key,
+                        reason: SplitReason::NodePressure,
+                    });
+                }
+                _ => {
+                    // singleton-only node with nowhere to move: back off
+                    // instead of re-scoring a hopeless node every window
+                    s.node_strikes.insert(node, 0);
+                    s.node_retry_after_ms.insert(node, now + self.policy.cooldown_ms);
+                }
+            }
+        }
+    }
+
+    /// Merger feedback: the pressure migration of `functions` completed.
+    /// The source node and the migrated group both enter cooldown so one
+    /// over-capacity episode resolves with exactly one corrective action.
+    pub fn migrate_succeeded(&self, functions: &[String]) {
+        let now = exec::now().as_millis_f64();
+        let mut s = self.state.borrow_mut();
+        let mut key: Vec<String> = functions.to_vec();
+        key.sort();
+        if let Some(node) = s.pending_migrations.remove(&key) {
+            s.node_retry_after_ms.insert(node, now + self.policy.cooldown_ms);
+            s.node_strikes.insert(node, 0);
+        }
+        s.migrate_cooldown_until.insert(key, now + self.policy.cooldown_ms);
+    }
+
+    /// Merger feedback: the pressure migration failed/aborted — the source
+    /// keeps serving; the node backs off one cooldown before retrying.
+    pub fn migrate_failed(&self, functions: &[String]) {
+        let now = exec::now().as_millis_f64();
+        let mut s = self.state.borrow_mut();
+        let mut key: Vec<String> = functions.to_vec();
+        key.sort();
+        if let Some(node) = s.pending_migrations.remove(&key) {
+            s.node_retry_after_ms.insert(node, now + self.policy.cooldown_ms);
+        }
+    }
+
+    /// Whether a pressure migration is currently in flight for `functions`
+    /// (test/property introspection).
+    pub fn migration_pending(&self, functions: &[String]) -> bool {
+        let mut key: Vec<String> = functions.to_vec();
+        key.sort();
+        self.state.borrow().pending_migrations.contains_key(&key)
     }
 
     /// Merger feedback: the group was split back into per-function
@@ -1197,6 +1469,7 @@ mod tests {
             billed_ms,
             self_ms,
             window_s: 2.0,
+            node: None,
         }
     }
 
@@ -1272,6 +1545,188 @@ mod tests {
             }
             assert_eq!(rx.try_recv(), Some(fuse("a", "b")));
             assert!(obs.admission_score("a", "b").is_nan());
+        });
+    }
+
+    #[test]
+    fn cost_admission_scales_blocked_time_by_observed_callee_share() {
+        run_virtual(async {
+            // ISSUE 4 satellite (ROADMAP multi-callee bound): caller `a`
+            // splits its sync calls evenly between b and c, so each pair
+            // recovers only ~half the caller's measured blocked time.  The
+            // caller is blocked 1.6 s of a 2 s window (rate 0.8); with the
+            // old all-callees pricing each score would be ~0.72, with the
+            // share scaling it must land well below 0.5.
+            let (obs, mut rx) = observer(merge_cost_policy());
+            obs.update_fn_signals(vec![
+                sig("a", 10.0, 2_000.0, 400.0, 0.0),
+                sig("b", 10.0, 0.0, 0.0, 0.0),
+                sig("c", 10.0, 0.0, 0.0, 0.0),
+            ]);
+            for _ in 0..5 {
+                obs.observe_sync_call("a", "b");
+                obs.observe_sync_call("a", "c");
+            }
+            assert!(rx.try_recv().is_some(), "half-share hot pairs still admit at 0");
+            assert!(rx.try_recv().is_some());
+            for callee in ["b", "c"] {
+                let score = obs.admission_score("a", callee);
+                assert!(
+                    score.is_finite() && score < 0.5,
+                    "a->{callee} score {score} looks like the unscaled blocked-time rate"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn cost_admission_share_ignores_callees_already_fused_with_the_caller() {
+        run_virtual(async {
+            // `a` historically called b and c equally, so at threshold 0.5
+            // neither pair clears admission on its half share (~0.32).
+            // Once (a, b) is fused — a->b is inline — a's remaining
+            // windowed blocked time is all c waits: the share denominator
+            // must drop b's stale counts, or (a, c) stays underpriced
+            // forever.
+            let mut p = merge_cost_policy();
+            p.cost.merge_threshold = 0.5;
+            let (obs, mut rx) = observer(p);
+            obs.update_fn_signals(vec![
+                sig("a", 10.0, 2_000.0, 400.0, 0.0),
+                sig("b", 10.0, 0.0, 0.0, 0.0),
+                sig("c", 10.0, 0.0, 0.0, 0.0),
+            ]);
+            for _ in 0..5 {
+                obs.observe_sync_call("a", "b");
+                obs.observe_sync_call("a", "c");
+            }
+            assert!(rx.try_recv().is_none(), "half shares must not clear threshold 0.5");
+            // (a, b) fuses anyway (e.g. an operator action): the Observer
+            // learns the group, and the next window re-scores (a, c) with
+            // c owning the whole remote share -> the FULL blocked rate
+            // (0.8) minus the RAM penalty clears the threshold
+            obs.fusion_succeeded("a", "b", &["a".to_string(), "b".to_string()], 300.0);
+            obs.update_fn_signals(vec![
+                sig("a", 10.0, 2_000.0, 400.0, 0.0),
+                sig("c", 10.0, 0.0, 0.0, 0.0),
+            ]);
+            obs.observe_sync_call("a", "c");
+            assert_eq!(rx.try_recv(), Some(fuse("a", "c")));
+            let score = obs.admission_score("a", "c");
+            assert!(
+                score > 0.6,
+                "score {score} still priced against the fused callee's stale counts"
+            );
+        });
+    }
+
+    #[test]
+    fn node_pressure_prefers_migration_and_resolves_exactly_once() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(defusion_policy());
+            let over = || NodeSample {
+                node: NodeId(0),
+                ram_mb: 350.0,
+                capacity_mb: 300.0,
+                instances: vec![
+                    (vec!["a".to_string(), "b".to_string()], 180.0),
+                    (vec!["c".to_string()], 90.0),
+                ],
+            };
+            let idle = || NodeSample {
+                node: NodeId(1),
+                ram_mb: 20.0,
+                capacity_mb: 300.0,
+                instances: vec![(vec!["d".to_string()], 20.0)],
+            };
+            // hysteresis = 1 in defusion_policy? no: split_hysteresis_windows
+            // is 2 there — first strike holds
+            obs.node_feedback(&[over(), idle()]);
+            assert!(rx.try_recv().is_none(), "hysteresis must hold the first strike");
+            obs.node_feedback(&[over(), idle()]);
+            // the largest instance fits on node 1 -> migrate, not split
+            assert_eq!(
+                rx.try_recv(),
+                Some(FusionRequest::Migrate {
+                    functions: vec!["a".into(), "b".into()],
+                    to: NodeId(1),
+                })
+            );
+            assert!(obs.migration_pending(&["a".to_string(), "b".to_string()]));
+            // still over while the migration is pending: no second action
+            obs.node_feedback(&[over(), idle()]);
+            obs.node_feedback(&[over(), idle()]);
+            assert!(rx.try_recv().is_none(), "pending migration must gate the node");
+            // completion puts the node AND the group on cooldown
+            obs.migrate_succeeded(&["a".to_string(), "b".to_string()]);
+            obs.node_feedback(&[over(), idle()]);
+            obs.node_feedback(&[over(), idle()]);
+            assert!(rx.try_recv().is_none(), "resolved node must back off one cooldown");
+            // after the cooldown the node is eligible again
+            crate::exec::sleep_ms(10_001.0).await;
+            obs.node_feedback(&[over(), idle()]);
+            obs.node_feedback(&[over(), idle()]);
+            assert!(matches!(rx.try_recv(), Some(FusionRequest::Migrate { .. })));
+        });
+    }
+
+    #[test]
+    fn node_pressure_falls_back_to_defusion_when_nothing_fits() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(defusion_policy());
+            // node 1 has no headroom for either instance -> the largest
+            // fused group on the hot node is split instead
+            let over = || NodeSample {
+                node: NodeId(0),
+                ram_mb: 350.0,
+                capacity_mb: 300.0,
+                instances: vec![
+                    (vec!["a".to_string(), "b".to_string()], 180.0),
+                    (vec!["c".to_string()], 90.0),
+                ],
+            };
+            let full = || NodeSample {
+                node: NodeId(1),
+                ram_mb: 290.0,
+                capacity_mb: 300.0,
+                instances: vec![(vec!["d".to_string()], 290.0)],
+            };
+            obs.node_feedback(&[over(), full()]);
+            obs.node_feedback(&[over(), full()]);
+            assert_eq!(
+                rx.try_recv(),
+                Some(FusionRequest::Split {
+                    functions: vec!["a".into(), "b".into()],
+                    reason: SplitReason::NodePressure,
+                })
+            );
+            // pending split + node backoff suppress duplicates
+            obs.node_feedback(&[over(), full()]);
+            obs.node_feedback(&[over(), full()]);
+            assert!(rx.try_recv().is_none());
+        });
+    }
+
+    #[test]
+    fn node_under_capacity_or_uncapped_never_pressures() {
+        run_virtual(async {
+            let (obs, mut rx) = observer(defusion_policy());
+            let fine = NodeSample {
+                node: NodeId(0),
+                ram_mb: 250.0,
+                capacity_mb: 300.0,
+                instances: vec![(vec!["a".to_string()], 250.0)],
+            };
+            let uncapped = NodeSample {
+                node: NodeId(1),
+                ram_mb: 9_000.0,
+                capacity_mb: 0.0,
+                instances: vec![(vec!["b".to_string()], 9_000.0)],
+            };
+            for _ in 0..5 {
+                obs.node_feedback(&[fine.clone(), uncapped.clone()]);
+            }
+            assert!(rx.try_recv().is_none());
         });
     }
 

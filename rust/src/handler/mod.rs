@@ -16,6 +16,7 @@ use std::rc::Rc;
 
 use crate::apps::{AppSpec, CallMode};
 use crate::billing::{BillingEvent, BillingLedger};
+use crate::cluster::{Cluster, NodeId};
 use crate::config::PlatformConfig;
 use crate::containerd::{Instance, InstanceState};
 use crate::error::{Error, Result};
@@ -45,6 +46,7 @@ struct DispatcherInner {
     config: Rc<PlatformConfig>,
     fabric: Fabric,
     gateway: Gateway,
+    cluster: Cluster,
     compute: ComputeService,
     observer: Rc<Observer>,
     metrics: Recorder,
@@ -60,6 +62,7 @@ impl Dispatcher {
         config: Rc<PlatformConfig>,
         fabric: Fabric,
         gateway: Gateway,
+        cluster: Cluster,
         compute: ComputeService,
         observer: Rc<Observer>,
         metrics: Recorder,
@@ -75,6 +78,7 @@ impl Dispatcher {
                 config,
                 fabric,
                 gateway,
+                cluster,
                 compute,
                 observer,
                 metrics,
@@ -95,16 +99,22 @@ impl Dispatcher {
     }
 
     /// Client-facing invocation of `function` through the full remote path.
+    /// External clients have no node: the cross-node surcharge never
+    /// applies to ingress, so single-node latencies match the seed exactly.
     pub async fn invoke(&self, function: &str, payload: Vec<f32>) -> Result<Vec<f32>> {
-        self.invoke_remote(function.to_string(), payload, 0).await
+        self.invoke_remote(function.to_string(), payload, 0, None).await
     }
 
     /// Full remote invocation: gateway -> (service) -> network -> handler.
+    /// `from_node` is the calling instance's node (None for external
+    /// clients); a hop whose endpoints live on different nodes pays the
+    /// east-west [`Hop::CrossNode`] surcharge each way.
     fn invoke_remote(
         &self,
         function: String,
         payload: Vec<f32>,
         depth: u32,
+        from_node: Option<NodeId>,
     ) -> LocalBoxFuture<Result<Vec<f32>>> {
         let this = self.clone();
         Box::pin(async move {
@@ -116,16 +126,26 @@ impl Dispatcher {
             // at routing time: once the gateway has committed this request
             // to an instance, a draining original must wait for it
             // ("stopped and deleted as soon as they are no longer
-            // processing requests", paper §3).
+            // processing requests", paper §3).  The slot is attributed to
+            // the target function (working-set RAM by in-flight ownership).
             let gateway_ms = d.fabric.sample(Hop::Gateway);
             let inst = d.gateway.resolve(&function)?;
-            inst.request_started();
+            inst.request_started_for(&function);
+            let crossed = match (from_node, d.cluster.node_of(inst.id())) {
+                (Some(from), Some(to)) => from != to,
+                _ => false,
+            };
+            if crossed {
+                d.metrics.bump("cross_node_calls");
+            }
 
-            // gateway + (kube) service indirection + network + request
-            // serialization, charged as one timer (perf: §Perf L3-3)
+            // gateway + (kube) service indirection + network (+ cross-node
+            // surcharge) + request serialization, charged as one timer
+            // (perf: §Perf L3-3)
             let env_ms = gateway_ms
                 + d.fabric.sample(Hop::ServiceIndirection)
                 + d.fabric.sample(Hop::Network)
+                + if crossed { d.fabric.sample(Hop::CrossNode) } else { 0.0 }
                 + d.fabric.serialize_cost(payload.len() * 4);
             exec::sleep_ms(env_ms).await;
 
@@ -134,7 +154,7 @@ impl Dispatcher {
                 exec::sleep_ms(d.config.latency.health_interval_ms).await;
             }
             if inst.state() == InstanceState::Terminated {
-                inst.request_finished();
+                inst.request_finished_for(&function);
                 return Err(Error::Request(format!(
                     "instance {} terminated before dispatch",
                     inst.id()
@@ -149,7 +169,7 @@ impl Dispatcher {
             let result = this
                 .execute_function(Rc::clone(&inst), function.clone(), payload, depth, dispatch_ms)
                 .await;
-            inst.request_finished();
+            inst.request_finished_for(&function);
             // One billed invocation per remote arrival (§2.3): duration x
             // instance allocation, *including* time blocked on sync calls —
             // the double-billing the paper's fusion eliminates.
@@ -161,9 +181,11 @@ impl Dispatcher {
             });
             let out = result?;
 
-            // response path: serialization + network back to the caller
-            let back_ms =
-                d.fabric.serialize_cost(out.len() * 4) + d.fabric.sample(Hop::Network);
+            // response path: serialization + network (+ the cross-node
+            // surcharge again) back to the caller
+            let back_ms = d.fabric.serialize_cost(out.len() * 4)
+                + d.fabric.sample(Hop::Network)
+                + if crossed { d.fabric.sample(Hop::CrossNode) } else { 0.0 };
             exec::sleep_ms(back_ms).await;
             Ok(out)
         })
@@ -224,7 +246,12 @@ impl Dispatcher {
                     // remote sync call: THE fusion signal (paper §3)
                     d.metrics.bump("remote_sync_calls");
                     d.observer.observe_sync_call(&function, &call.target);
-                    this.invoke_remote(call.target.clone(), child_payload, depth + 1)
+                    this.invoke_remote(
+                        call.target.clone(),
+                        child_payload,
+                        depth + 1,
+                        d.cluster.node_of(inst.id()),
+                    )
                 };
                 sync_handles.push(exec::spawn(fut));
             }
@@ -263,8 +290,11 @@ impl Dispatcher {
                         }
                     });
                 } else {
+                    let my_node = d.cluster.node_of(inst.id());
                     exec::spawn(async move {
-                        let r = this2.invoke_remote(target, child_payload, depth + 1).await;
+                        let r = this2
+                            .invoke_remote(target, child_payload, depth + 1, my_node)
+                            .await;
                         if r.is_err() {
                             this2.inner.metrics.bump("async_failures");
                         }

@@ -89,7 +89,7 @@ pub fn serve(
             "provuse: deployed `{}` ({} functions, {} instances)",
             platform.app.name,
             platform.app.len(),
-            platform.containers.live_count()
+            platform.cluster.live_count()
         );
         while let Some(msg) = rx.recv().await {
             let Some(req) = msg else { break }; // shutdown sentinel
@@ -183,8 +183,8 @@ fn metrics_json(platform: &Platform) -> String {
         ("median_ms", Json::Num(q.median())),
         ("p95_ms", Json::Num(q.p95())),
         ("p99_ms", Json::Num(q.p99())),
-        ("ram_mb", Json::Num(platform.containers.total_ram_mb())),
-        ("instances", Json::Num(platform.containers.live_count() as f64)),
+        ("ram_mb", Json::Num(platform.cluster.total_ram_mb())),
+        ("instances", Json::Num(platform.cluster.live_count() as f64)),
         ("merges", Json::Num(merges.len() as f64)),
         (
             "merged_functions",

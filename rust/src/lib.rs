@@ -23,6 +23,7 @@
 
 pub mod apps;
 pub mod billing;
+pub mod cluster;
 pub mod config;
 pub mod containerd;
 pub mod error;

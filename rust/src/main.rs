@@ -14,7 +14,8 @@
 //! ```
 
 use provuse::config::{
-    ComputeMode, MergePolicyKind, PlatformConfig, PlatformKind, SplitPolicyKind, WorkloadConfig,
+    ComputeMode, MergePolicyKind, PlacementPolicy, PlatformConfig, PlatformKind,
+    SplitPolicyKind, WorkloadConfig,
 };
 use provuse::error::Result;
 use provuse::util::args::Args;
@@ -98,6 +99,19 @@ fn apply_fusion_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
     Ok(())
 }
 
+/// Apply the cluster flags shared by `experiment`, `serve`, and `figure8`.
+fn apply_cluster_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
+    let c = &mut config.cluster;
+    c.nodes = args.u64_or("nodes", c.nodes as u64)? as usize;
+    c.node_capacity_mb = args.f64_or("node-capacity", c.node_capacity_mb)?;
+    if let Some(policy) = args.flag("placement") {
+        c.placement = PlacementPolicy::parse(policy)?;
+    }
+    config.latency.cross_node_ms =
+        args.f64_or("cross-node-ms", config.latency.cross_node_ms)?;
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("figure5") => {
@@ -162,6 +176,36 @@ fn dispatch(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        Some("figure8") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/fig8"));
+            let app = experiments::fig8::Fig8App::parse(&args.str_or("app", "chain"))?;
+            let mut p = experiments::fig8::Fig8Params::for_app(app, args.has("smoke"));
+            p.compute = compute_from(args);
+            p.seed = args.u64_or("seed", p.seed)?;
+            p.nodes = args.u64_or("nodes", p.nodes as u64)? as usize;
+            if let Some(policy) = args.flag("placement") {
+                p.placement = PlacementPolicy::parse(policy)?;
+            }
+            p.node_capacity_mb = args.f64_or("node-capacity", p.node_capacity_mb)?;
+            p.group_ram_cap_mb = args.f64_or("max-group-ram", p.group_ram_cap_mb)?;
+            p.calm_rps = args.f64_or("calm-rps", p.calm_rps)?;
+            p.pressure_rps = args.f64_or("pressure-rps", p.pressure_rps)?;
+            p.cooldown_ms = args.f64_or("cooldown-ms", p.cooldown_ms)?;
+            p.feedback_interval_ms =
+                args.f64_or("feedback-interval-ms", p.feedback_interval_ms)?;
+            p.hysteresis = args.u32_or("hysteresis", p.hysteresis)?;
+            p.min_observations = args.u32_or("min-observations", p.min_observations)?;
+            p.cross_node_ms = args.f64_or("cross-node-ms", p.cross_node_ms)?;
+            let fig = experiments::fig8::run(&out, p)?;
+            println!("{}", fig.render());
+            println!("outputs written to {}", out.display());
+            if !fig.passed() {
+                return Err(provuse::Error::Runtime(
+                    "FIG8 cluster checks failed".into(),
+                ));
+            }
+            Ok(())
+        }
         Some("ram-table") => {
             let out = std::path::PathBuf::from(args.str_or("out", "results/ram"));
             let fig = experiments::fig6::run(&out, workload_from(args)?, compute_from(args))?;
@@ -204,6 +248,7 @@ fn dispatch(args: &Args) -> Result<()> {
             let app = provuse::apps::by_name(&args.str_or("app", "iot"))?;
             let mut config = PlatformConfig::of_kind(kind).with_compute(compute_from(args));
             apply_fusion_flags(args, &mut config)?;
+            apply_cluster_flags(args, &mut config)?;
             if args.has("vanilla") {
                 config = config.vanilla();
             }
@@ -272,6 +317,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 })
                 .scale_latency(scale);
             apply_fusion_flags(args, &mut config)?;
+            apply_cluster_flags(args, &mut config)?;
             if args.has("vanilla") {
                 config = config.vanilla();
             }
@@ -294,6 +340,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20   [--app chain|iot|  re-fuse), --app iot (cost-model partial defusion),\n\
                  \x20    mixed]            or --app mixed (merge-side admission planner;\n\
                  \x20                      --merge-policy observation-count = flap control)\n\
+                 \x20 figure8 [--smoke]    ours: multi-node cluster (--nodes N,\n\
+                 \x20   [--placement P]    fusion-affinity co-location + node-pressure\n\
+                 \x20                      migration; --placement spread = measured\n\
+                 \x20                      cross-node negative control)\n\
                  \x20 ram-table            §5.2 RAM reductions\n\
                  \x20 cost-table           TAB-COST: double-billing elimination in $\n\
                  \x20 sweep --dim D        ablations (rate|hop|policy|depth|arrival)\n\
@@ -309,7 +359,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  cost model  : --cost-model [threshold|cost] --evict-threshold F\n\
                  \x20             --w-latency F --w-ram F --w-gbs F\n\
                  merge side  : --merge-policy [observation-count|cost] --merge-threshold F\n\
-                 \x20             --auto-tune (hill-climb weights on post-fuse regret)"
+                 \x20             --auto-tune (hill-climb weights on post-fuse regret)\n\
+                 cluster     : --nodes N --placement [bin-pack|spread|fusion-affinity]\n\
+                 \x20             --node-capacity MB --cross-node-ms MS"
             );
             Ok(())
         }

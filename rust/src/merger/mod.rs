@@ -19,6 +19,7 @@ pub mod split;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
+use crate::cluster::{Cluster, Migrator, NodeId, Scheduler};
 use crate::config::PlatformConfig;
 use crate::containerd::{ContainerRuntime, ImageId, Instance};
 use crate::error::{Error, Result};
@@ -33,6 +34,8 @@ use crate::platform::deployer::Deployer;
 pub struct MergerCtx {
     pub config: Rc<PlatformConfig>,
     pub containers: ContainerRuntime,
+    pub cluster: Cluster,
+    pub scheduler: Scheduler,
     pub gateway: Gateway,
     pub observer: Rc<Observer>,
     pub metrics: Recorder,
@@ -85,7 +88,30 @@ impl Merger {
                     let _ = err;
                 }
             }
+            FusionRequest::Migrate { functions, to } => {
+                match self.migrator().migrate(&functions, to, "node_pressure").await {
+                    Ok(_) => self.ctx.observer.migrate_succeeded(&functions),
+                    Err(err) => {
+                        self.ctx.metrics.bump("migration_aborted");
+                        self.ctx.observer.migrate_failed(&functions);
+                        let _ = err;
+                    }
+                }
+            }
         }
+    }
+
+    /// Migration engine over this Merger's platform context (sharing the
+    /// platform-flavored deployer, so a Kube migration pays the same
+    /// reconcile-tick delay as every other pipeline's launch).
+    pub fn migrator(&self) -> Migrator {
+        Migrator::new(
+            self.ctx.cluster.clone(),
+            self.ctx.deployer.clone(),
+            self.ctx.gateway.clone(),
+            self.ctx.metrics.clone(),
+            Rc::clone(&self.ctx.config),
+        )
     }
 
     /// One merge. Public for targeted tests.
@@ -124,22 +150,44 @@ impl Merger {
 
         let t_start = exec::now();
 
-        // 2. export + union filesystems (collision-preserving)
+        // 2. co-location precondition: an inline call needs a shared
+        //    process, which first needs a shared node.  When the endpoints
+        //    live apart, migrate the callee's instance to the caller's
+        //    node before any image work — the cost planner already priced
+        //    this move (`MergeContext::migration_ms`) and capacity-gated
+        //    it, and the migrator re-checks capacity regardless (the
+        //    observation-count policy has no planner to do it for it).
+        let target_node = ctx.cluster.node_of(a.id()).unwrap_or(NodeId(0));
+        let b = match ctx.cluster.node_of(b.id()) {
+            Some(node_b) if node_b != target_node => {
+                let fns: Vec<String> =
+                    b.functions().iter().map(|(n, _)| n.clone()).collect();
+                let fresh =
+                    self.migrator().migrate(&fns, target_node, "fusion_colocation").await?;
+                ctx.metrics.bump("fusion_colocation_migrations");
+                fresh
+            }
+            _ => b,
+        };
+
+        // 3. export + union filesystems (collision-preserving)
         let fs_a = ctx.containers.export_fs(&a)?;
         let fs_b = ctx.containers.export_fs(&b)?;
         let parts = vec![(a.id().to_string(), fs_a), (b.id().to_string(), fs_b)];
         let merged = fsunion::union_namespaced(&parts);
         debug_assert!(fsunion::union_preserves(&parts, &merged));
 
-        // 3. build the fused image (charged build latency; may fail)
+        // 4. build the fused image (charged build latency; may fail)
         let mut functions = a.functions();
         functions.extend(b.functions());
         let image = ctx.containers.build_image(merged, functions.clone()).await?;
 
-        // 4. deploy (platform-flavored: direct or reconciler-gated)
-        let fused = ctx.deployer.launch(image).await?;
+        // 5. deploy on the caller's node (platform-flavored: direct or
+        //    reconciler-gated) — the fused instance inherits the placement
+        //    the co-location step just established
+        let fused = ctx.deployer.launch(image, target_node).await?;
 
-        // 5. health gate: N consecutive successes before any traffic cutover
+        // 6. health gate: N consecutive successes before any traffic cutover
         self.await_healthy(&fused).await.inspect_err(|_| {
             ctx.metrics.bump("fusion_health_timeouts");
             // roll back the never-routed instance
@@ -147,7 +195,7 @@ impl Merger {
             let _ = ctx.containers.terminate(&fused);
         })?;
 
-        // 6. capture the pre-fusion latency regime for the feedback
+        // 7. capture the pre-fusion latency regime for the feedback
         //    controller, then atomically swap routes for every hosted
         //    function.  A trailing window (not all-time) keeps the baseline
         //    anchored to the regime right before this cutover, so re-fusions
@@ -172,7 +220,7 @@ impl Merger {
         ctx.metrics.bump("fusions_completed");
         ctx.observer.fusion_succeeded(caller, callee, &names, baseline_p95_ms);
 
-        // 7. drain + terminate the originals off the merge loop ("stopped
+        // 8. drain + terminate the originals off the merge loop ("stopped
         //    and deleted as soon as they are no longer processing requests")
         for old in [a, b] {
             old.begin_drain()?;
@@ -181,38 +229,19 @@ impl Merger {
         Ok(())
     }
 
-    /// Terminate `old` once its in-flight requests have drained (detached).
+    /// Terminate `old` once its in-flight requests have drained (detached;
+    /// delegates to the shared pipeline tail in [`crate::containerd`]).
     pub(crate) fn reclaim_when_drained(&self, old: Rc<Instance>) {
-        let containers = self.ctx.containers.clone();
-        let metrics = self.ctx.metrics.clone();
-        exec::spawn(async move {
-            old.drained().await;
-            if containers.terminate(&old).is_ok() {
-                metrics.bump("instances_reclaimed");
-            }
-        });
+        crate::containerd::reclaim_when_drained(
+            self.ctx.containers.clone(),
+            self.ctx.metrics.clone(),
+            old,
+        );
     }
 
-    /// Poll health checks until `health_checks_required` consecutive passes
-    /// or the deadline (4x boot + 5s) expires.
+    /// The shared pre-cutover health gate (see
+    /// [`crate::containerd::await_healthy`]).
     pub(crate) async fn await_healthy(&self, inst: &Rc<Instance>) -> Result<()> {
-        let lat = &self.ctx.config.latency;
-        let deadline_ms =
-            exec::now().as_millis_f64() + lat.boot_ms * 4.0 + 5_000.0;
-        let mut passes = 0u32;
-        loop {
-            exec::sleep_ms(lat.health_interval_ms).await;
-            if self.ctx.containers.health_check(inst) {
-                passes += 1;
-                if passes >= lat.health_checks_required {
-                    return Ok(());
-                }
-            } else {
-                passes = 0;
-            }
-            if exec::now().as_millis_f64() > deadline_ms {
-                return Err(Error::HealthTimeout(inst.id().0));
-            }
-        }
+        crate::containerd::await_healthy(&self.ctx.config.latency, inst).await
     }
 }

@@ -19,7 +19,8 @@
 
 use std::rc::Rc;
 
-use crate::containerd::Instance;
+use crate::cluster::NodeId;
+use crate::containerd::{ImageId, Instance};
 use crate::error::{Error, Result};
 use crate::exec;
 use crate::fusion::SplitReason;
@@ -78,8 +79,13 @@ impl Merger {
         let t_start = exec::now();
 
         // 2. re-deploy one instance per function from its retained original
-        //    image, then health-gate all of them before any traffic moves
-        let fresh = self.deploy_originals(&expected).await?;
+        //    image, then health-gate all of them before any traffic moves.
+        //    Replacements stay on the group's home node (single-node
+        //    semantics preserved) — except a node-pressure split, whose
+        //    entire point is shedding that node, so each replacement goes
+        //    wherever the scheduler finds headroom.
+        let home = self.ctx.cluster.node_of(fused.id());
+        let fresh = self.deploy_originals(&expected, reason, home).await?;
 
         // 3. atomic cutover: every function back to its own instance
         let routes: Vec<(String, Rc<Instance>)> = expected
@@ -145,7 +151,11 @@ impl Merger {
                 )))
             }
         };
-        let fresh = ctx.deployer.launch(image).await?;
+        // the evicted member returns to its own instance on the group's
+        // home node (the defusion objective already priced its RAM there;
+        // rebalancing across nodes is the pressure controller's job)
+        let home = ctx.cluster.node_of(fused.id()).unwrap_or(NodeId(0));
+        let fresh = ctx.deployer.launch(image, home).await?;
         self.await_healthy(&fresh).await.inspect_err(|_| {
             ctx.metrics.bump("evict_health_timeouts");
             self.rollback(std::slice::from_ref(&fresh));
@@ -212,7 +222,12 @@ impl Merger {
     /// Launch a replacement instance per function and wait until every one
     /// is healthy.  Any failure tears down all replacements and bubbles the
     /// error (the fused instance was never un-routed, so it keeps serving).
-    async fn deploy_originals(&self, functions: &[String]) -> Result<Vec<Rc<Instance>>> {
+    async fn deploy_originals(
+        &self,
+        functions: &[String],
+        reason: SplitReason,
+        home: Option<NodeId>,
+    ) -> Result<Vec<Rc<Instance>>> {
         let ctx = &self.ctx;
         let mut fresh: Vec<Rc<Instance>> = Vec::with_capacity(functions.len());
         for f in functions {
@@ -225,7 +240,14 @@ impl Merger {
                     )));
                 }
             };
-            match ctx.deployer.launch(image).await {
+            let node = match self.replacement_node(image, reason, home) {
+                Ok(node) => node,
+                Err(err) => {
+                    self.rollback(&fresh);
+                    return Err(err);
+                }
+            };
+            match ctx.deployer.launch(image, node).await {
                 Ok(inst) => fresh.push(inst),
                 Err(err) => {
                     self.rollback(&fresh);
@@ -241,6 +263,30 @@ impl Merger {
             }
         }
         Ok(fresh)
+    }
+
+    /// Node a split replacement deploys to: the group's home node, except
+    /// under node pressure, where the scheduler places each replacement
+    /// wherever the cluster has headroom (that split exists to shed the
+    /// home node).
+    fn replacement_node(
+        &self,
+        image: ImageId,
+        reason: SplitReason,
+        home: Option<NodeId>,
+    ) -> Result<NodeId> {
+        if reason != SplitReason::NodePressure {
+            return Ok(home.unwrap_or(NodeId(0)));
+        }
+        let code_mb: f64 = self
+            .ctx
+            .containers
+            .image(image)?
+            .functions
+            .iter()
+            .map(|(_, mb)| mb)
+            .sum();
+        self.ctx.scheduler.place(self.ctx.config.ram.base_instance_mb + code_mb)
     }
 
     /// Tear down never-routed replacement instances.

@@ -7,6 +7,7 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
+use crate::cluster::NodeId;
 use crate::fusion::SplitReason;
 use crate::util::stats::Quantiles;
 
@@ -32,6 +33,36 @@ pub struct RamSample {
     pub total_mb: f64,
     /// number of live (booting/healthy/draining) instances
     pub instances: usize,
+}
+
+/// One per-node RAM ledger sample (cluster mode; single-node platforms
+/// record one series for node-0 that mirrors the platform series).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeRamSample {
+    pub t_ms: f64,
+    pub node: NodeId,
+    /// RAM across the node's live instances (MiB)
+    pub ram_mb: f64,
+    /// the node's capacity (MiB; 0 = uncapped) — recorded so the CSV is
+    /// self-describing for pressure plots
+    pub capacity_mb: f64,
+    pub instances: usize,
+}
+
+/// One completed live migration: an instance moved between nodes with an
+/// atomic route cutover (FIG8).
+#[derive(Debug, Clone)]
+pub struct MigrationEvent {
+    /// virtual time the replacement took over the routes (ms)
+    pub t_ms: f64,
+    /// functions the migrated instance actively hosts (sorted)
+    pub functions: Vec<String>,
+    pub from: NodeId,
+    pub to: NodeId,
+    /// wall (virtual) duration of the migration pipeline (ms)
+    pub duration_ms: f64,
+    /// why the platform moved it ("node_pressure", "fusion_colocation")
+    pub reason: &'static str,
 }
 
 /// One completed merge (a vertical line in the paper's Fig. 5).
@@ -128,25 +159,38 @@ pub struct RegretSample {
 /// `total_mb` whenever it covers the members' code footprints (always true
 /// for a live instance).  `members` is `(function, code_mb)`.
 ///
-/// `in_flight` is the per-member in-flight request count the overhead share
-/// *should* be weighted by (ROADMAP: working-set RAM by in-flight
-/// ownership).  The platform does not yet track ownership per member, so
-/// today the parameter is ignored and the overhead is split **equally** —
-/// see the `#[should_panic]` tripwire test below, which must be flipped to
-/// a plain assertion when weighting lands.
+/// `in_flight` is the per-member in-flight request count (index-aligned
+/// with `members`; the platform samples `Instance::fn_inflight` at each
+/// controller tick).  When any member holds in-flight requests, the
+/// overhead is split **proportionally to ownership** — the member serving
+/// 9 of 10 in-flight requests owns 90% of the working sets.  An idle
+/// window (all zeros) or a mismatched slice falls back to the equal share,
+/// so the pre-weighting behavior is the degenerate case, not a separate
+/// code path.
 pub fn attribute_ram(
     total_mb: f64,
     members: &[(String, f64)],
-    _in_flight: &[u64],
+    in_flight: &[u64],
 ) -> Vec<(String, f64)> {
     if members.is_empty() {
         return Vec::new();
     }
     let code_total: f64 = members.iter().map(|(_, mb)| mb).sum();
-    let overhead = (total_mb - code_total).max(0.0) / members.len() as f64;
+    let overhead = (total_mb - code_total).max(0.0);
+    let total_in_flight: u64 =
+        if in_flight.len() == members.len() { in_flight.iter().sum() } else { 0 };
+    let equal = 1.0 / members.len() as f64;
     members
         .iter()
-        .map(|(name, code_mb)| (name.clone(), code_mb + overhead))
+        .enumerate()
+        .map(|(i, (name, code_mb))| {
+            let weight = if total_in_flight > 0 {
+                in_flight[i] as f64 / total_in_flight as f64
+            } else {
+                equal
+            };
+            (name.clone(), code_mb + overhead * weight)
+        })
         .collect()
 }
 
@@ -176,6 +220,8 @@ pub struct Recorder {
 struct RecorderInner {
     latencies: RefCell<Vec<LatencySample>>,
     ram: RefCell<Vec<RamSample>>,
+    node_ram: RefCell<Vec<NodeRamSample>>,
+    migrations: RefCell<Vec<MigrationEvent>>,
     group_ram: RefCell<Vec<GroupRamSample>>,
     fn_latencies: RefCell<Vec<FnSample>>,
     fn_ram: RefCell<Vec<FnRamSample>>,
@@ -212,6 +258,14 @@ impl Recorder {
 
     pub fn record_ram(&self, t_ms: f64, total_mb: f64, instances: usize) {
         self.inner.ram.borrow_mut().push(RamSample { t_ms, total_mb, instances });
+    }
+
+    pub fn record_node_ram(&self, sample: NodeRamSample) {
+        self.inner.node_ram.borrow_mut().push(sample);
+    }
+
+    pub fn record_migration(&self, event: MigrationEvent) {
+        self.inner.migrations.borrow_mut().push(event);
     }
 
     pub fn record_group_ram(&self, t_ms: f64, group: String, ram_mb: f64) {
@@ -262,6 +316,14 @@ impl Recorder {
 
     pub fn ram_series(&self) -> Vec<RamSample> {
         self.inner.ram.borrow().clone()
+    }
+
+    pub fn node_ram_series(&self) -> Vec<NodeRamSample> {
+        self.inner.node_ram.borrow().clone()
+    }
+
+    pub fn migrations(&self) -> Vec<MigrationEvent> {
+        self.inner.migrations.borrow().clone()
     }
 
     pub fn merges(&self) -> Vec<MergeEvent> {
@@ -431,6 +493,37 @@ impl Recorder {
         let mut out = String::from("t_ms,total_mb,instances\n");
         for s in self.inner.ram.borrow().iter() {
             out.push_str(&format!("{:.3},{:.3},{}\n", s.t_ms, s.total_mb, s.instances));
+        }
+        out
+    }
+
+    /// CSV export of the per-node RAM series
+    /// (`t_ms,node,ram_mb,capacity_mb,instances`).
+    pub fn node_ram_csv(&self) -> String {
+        let mut out = String::from("t_ms,node,ram_mb,capacity_mb,instances\n");
+        for s in self.inner.node_ram.borrow().iter() {
+            out.push_str(&format!(
+                "{:.3},{},{:.3},{:.3},{}\n",
+                s.t_ms, s.node, s.ram_mb, s.capacity_mb, s.instances
+            ));
+        }
+        out
+    }
+
+    /// CSV export of migration events
+    /// (`t_ms,duration_ms,from,to,reason,functions`).
+    pub fn migrations_csv(&self) -> String {
+        let mut out = String::from("t_ms,duration_ms,from,to,reason,functions\n");
+        for m in self.inner.migrations.borrow().iter() {
+            out.push_str(&format!(
+                "{:.3},{:.3},{},{},{},{}\n",
+                m.t_ms,
+                m.duration_ms,
+                m.from,
+                m.to,
+                m.reason,
+                m.functions.join("+")
+            ));
         }
         out
     }
@@ -632,6 +725,34 @@ mod tests {
     }
 
     #[test]
+    fn node_ram_and_migration_series_recorded() {
+        let r = Recorder::new();
+        r.record_node_ram(NodeRamSample {
+            t_ms: 3.0,
+            node: NodeId(1),
+            ram_mb: 140.5,
+            capacity_mb: 300.0,
+            instances: 2,
+        });
+        r.record_migration(MigrationEvent {
+            t_ms: 8.0,
+            functions: vec!["a".into(), "b".into()],
+            from: NodeId(1),
+            to: NodeId(2),
+            duration_ms: 450.0,
+            reason: "node_pressure",
+        });
+        assert_eq!(r.node_ram_series().len(), 1);
+        assert_eq!(r.node_ram_series()[0].node, NodeId(1));
+        assert_eq!(r.migrations().len(), 1);
+        assert_eq!(r.migrations()[0].to, NodeId(2));
+        assert!(r.node_ram_csv().contains("3.000,node-1,140.500,300.000,2"));
+        assert!(r
+            .migrations_csv()
+            .contains("8.000,450.000,node-1,node-2,node_pressure,a+b"));
+    }
+
+    #[test]
     fn clone_shares_state() {
         let r = Recorder::new();
         let r2 = r.clone();
@@ -712,20 +833,34 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "in-flight-weighted attribution not yet implemented")]
-    fn attribute_ram_in_flight_weighting_is_still_todo() {
-        // ROADMAP (PR 2 remainder): working-set RAM should follow in-flight
-        // ownership — a member holding 9 of 10 in-flight requests should be
-        // attributed more of the overhead than an idle one.  Today the
-        // in_flight parameter is ignored, so this tripwire fails; when
-        // weighting lands, flip it to a plain assertion (and delete the
-        // `#[should_panic]`).
+    fn attribute_ram_weights_overhead_by_in_flight_ownership() {
+        // The flipped PR 3 tripwire (ROADMAP: working-set RAM by in-flight
+        // ownership): a member holding 9 of 10 in-flight requests is
+        // attributed 90% of the unexplained overhead.
         let shares = attribute_ram(100.0, &members(&[("busy", 10.0), ("idle", 10.0)]), &[9, 1]);
         assert!(
             shares[0].1 > shares[1].1,
-            "in-flight-weighted attribution not yet implemented: busy={} idle={}",
+            "in-flight-weighted attribution regressed: busy={} idle={}",
             shares[0].1,
             shares[1].1
         );
+        // overhead = 100 - 20 = 80: busy gets 10 + 72, idle gets 10 + 8
+        assert!((shares[0].1 - 82.0).abs() < 1e-12);
+        assert!((shares[1].1 - 18.0).abs() < 1e-12);
+        let sum: f64 = shares.iter().map(|(_, mb)| mb).sum();
+        assert!((sum - 100.0).abs() < 1e-12, "weighting must preserve the total");
+    }
+
+    #[test]
+    fn attribute_ram_falls_back_to_equal_share_when_idle_or_unaligned() {
+        // all-idle window: equal share
+        let idle = attribute_ram(100.0, &members(&[("a", 10.0), ("b", 30.0)]), &[0, 0]);
+        assert_eq!(idle[0].1, 40.0);
+        assert_eq!(idle[1].1, 60.0);
+        // a mismatched slice (e.g. a caller without ownership data) also
+        // degrades to the equal share instead of panicking
+        let unaligned = attribute_ram(100.0, &members(&[("a", 10.0), ("b", 30.0)]), &[5]);
+        assert_eq!(unaligned[0].1, 40.0);
+        assert_eq!(unaligned[1].1, 60.0);
     }
 }

@@ -20,6 +20,9 @@ pub enum Hop {
     ServiceIndirection,
     /// one-way instance-to-instance network traversal
     Network,
+    /// additional east-west surcharge when a hop crosses node boundaries
+    /// (zero for co-located instances and single-node platforms)
+    CrossNode,
     /// handler dispatch (entry-point shim)
     Dispatch,
     /// fused same-process call
@@ -55,6 +58,13 @@ impl Fabric {
                 }
             }
             Hop::Network => rng.lognormal(p.net_hop_ms, p.net_sigma),
+            Hop::CrossNode => {
+                if p.cross_node_ms <= 0.0 {
+                    0.0
+                } else {
+                    rng.lognormal(p.cross_node_ms, p.cross_node_sigma)
+                }
+            }
             Hop::Dispatch => rng.normal_ms(p.dispatch_ms, p.dispatch_sigma),
             Hop::Inline => p.inline_call_ms,
         };
@@ -120,6 +130,21 @@ mod tests {
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let med = v[v.len() / 2];
         assert!((med - expected).abs() < 0.15 * expected, "median {med}");
+    }
+
+    #[test]
+    fn cross_node_surcharge_dwarfs_the_local_hop() {
+        let f = fabric(false);
+        let local: f64 = (0..500).map(|_| f.sample(Hop::Network)).sum::<f64>() / 500.0;
+        let cross: f64 = (0..500).map(|_| f.sample(Hop::CrossNode)).sum::<f64>() / 500.0;
+        assert!(cross > 3.0 * local, "cross {cross} vs local {local}");
+        // a zeroed surcharge disables cross-node pricing entirely
+        let mut p = PlatformConfig::tiny().latency;
+        p.cross_node_ms = 0.0;
+        let z = Fabric::new(p, 1);
+        for _ in 0..100 {
+            assert_eq!(z.sample(Hop::CrossNode), 0.0);
+        }
     }
 
     #[test]

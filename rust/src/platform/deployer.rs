@@ -5,10 +5,15 @@
 //! the controller's next loop iteration.  The reconciler-gated path charges
 //! that control-loop delay (paper §2.1: orchestration frameworks trade
 //! "additional architectural complexity and runtime overhead" for features).
+//!
+//! Since the cluster subsystem, every launch targets an explicit node (a
+//! single-node platform always targets node 0): the kubelet analogy — the
+//! scheduler picks the node, the deployer realizes the pod there.
 
 use std::rc::Rc;
 
-use crate::containerd::{ContainerRuntime, ImageId, Instance};
+use crate::cluster::{Cluster, NodeId};
+use crate::containerd::{ImageId, Instance};
 use crate::error::Result;
 use crate::exec;
 
@@ -16,33 +21,33 @@ use crate::exec;
 #[derive(Clone)]
 pub enum Deployer {
     /// tinyFaaS: start the container immediately.
-    Direct { containers: ContainerRuntime },
+    Direct { cluster: Cluster },
     /// Kubernetes: the launch takes effect on the next reconcile tick
     /// (ticks at multiples of `interval_ms` on the virtual clock).
-    Reconciled { containers: ContainerRuntime, interval_ms: f64 },
+    Reconciled { cluster: Cluster, interval_ms: f64 },
 }
 
 impl Deployer {
-    pub fn direct(containers: ContainerRuntime) -> Self {
-        Deployer::Direct { containers }
+    pub fn direct(cluster: Cluster) -> Self {
+        Deployer::Direct { cluster }
     }
 
-    pub fn reconciled(containers: ContainerRuntime, interval_ms: f64) -> Self {
+    pub fn reconciled(cluster: Cluster, interval_ms: f64) -> Self {
         assert!(interval_ms > 0.0, "reconcile interval must be positive");
-        Deployer::Reconciled { containers, interval_ms }
+        Deployer::Reconciled { cluster, interval_ms }
     }
 
-    /// Launch an instance of `image` under this strategy.  The returned
-    /// instance is `Booting`; the caller health-gates it.
-    pub async fn launch(&self, image: ImageId) -> Result<Rc<Instance>> {
+    /// Launch an instance of `image` on `node` under this strategy.  The
+    /// returned instance is `Booting`; the caller health-gates it.
+    pub async fn launch(&self, image: ImageId, node: NodeId) -> Result<Rc<Instance>> {
         match self {
-            Deployer::Direct { containers } => containers.launch(image),
-            Deployer::Reconciled { containers, interval_ms } => {
+            Deployer::Direct { cluster } => cluster.launch_on(node, image),
+            Deployer::Reconciled { cluster, interval_ms } => {
                 // wait for the next control-loop tick
                 let now = exec::now().as_millis_f64();
                 let next_tick = (now / interval_ms).floor() * interval_ms + interval_ms;
                 exec::sleep_ms(next_tick - now).await;
-                containers.launch(image)
+                cluster.launch_on(node, image)
             }
         }
     }
@@ -55,45 +60,46 @@ mod tests {
     use crate::containerd::FsManifest;
     use crate::exec::{now, run_virtual, sleep_ms};
 
-    fn rt() -> (ContainerRuntime, ImageId) {
-        let rt = ContainerRuntime::new(Rc::new(PlatformConfig::kube()));
-        let img = rt.register_image(FsManifest::function_code("a", 1), vec![("a".into(), 9.0)]);
-        (rt, img)
+    fn cluster() -> (Cluster, ImageId) {
+        let mut cfg = PlatformConfig::kube();
+        cfg.cluster.nodes = 2;
+        let cluster = Cluster::new(&Rc::new(cfg));
+        let img = cluster
+            .control()
+            .register_image(FsManifest::function_code("a", 1), vec![("a".into(), 9.0)]);
+        (cluster, img)
     }
 
     #[test]
-    fn direct_launch_is_immediate() {
+    fn direct_launch_is_immediate_and_lands_on_the_node() {
         run_virtual(async {
-            let (rt, img) = rt();
+            let (cluster, img) = cluster();
             let t0 = now().as_millis_f64();
-            let _inst = Deployer::direct(rt).launch(img).await.unwrap();
+            let inst =
+                Deployer::direct(cluster.clone()).launch(img, NodeId(1)).await.unwrap();
             assert_eq!(now().as_millis_f64(), t0);
+            assert_eq!(cluster.node_of(inst.id()), Some(NodeId(1)));
         });
     }
 
     #[test]
     fn reconciled_launch_waits_for_tick() {
         run_virtual(async {
-            let (rt, img) = rt();
-            let dep = Deployer::reconciled(rt, 500.0);
+            let (cluster, img) = cluster();
+            let dep = Deployer::reconciled(cluster, 500.0);
             sleep_ms(120.0).await;
-            let _inst = dep.launch(img).await.unwrap();
+            let _inst = dep.launch(img, NodeId(0)).await.unwrap();
             assert_eq!(now().as_millis_f64(), 500.0);
-            // exactly on a tick boundary -> next tick
-            let (rt2, img2) = super::tests::rt();
-            let dep2 = Deployer::reconciled(rt2, 500.0);
-            let _ = dep2; // silence unused in this scope
-            let _ = img2;
         });
     }
 
     #[test]
     fn reconciled_on_boundary_goes_to_next_tick() {
         run_virtual(async {
-            let (rt, img) = rt();
-            let dep = Deployer::reconciled(rt, 250.0);
+            let (cluster, img) = cluster();
+            let dep = Deployer::reconciled(cluster, 250.0);
             sleep_ms(250.0).await; // exactly at a tick
-            let _inst = dep.launch(img).await.unwrap();
+            let _inst = dep.launch(img, NodeId(0)).await.unwrap();
             assert_eq!(now().as_millis_f64(), 500.0);
         });
     }

@@ -12,17 +12,18 @@ use std::rc::Rc;
 
 use crate::apps::AppSpec;
 use crate::billing::BillingLedger;
+use crate::cluster::{Cluster, NodeId, Scheduler};
 use crate::config::{ComputeMode, MergePolicyKind, PlatformConfig, PlatformKind};
 use crate::containerd::{ContainerRuntime, FsManifest, ImageId, Instance, InstanceState};
 use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::mpsc;
 use crate::exec::SimInstant;
-use crate::fusion::{FnAttribution, FnSignals, GroupSample, Observer};
+use crate::fusion::{FnAttribution, FnSignals, GroupSample, NodeLoad, NodeSample, Observer};
 use crate::gateway::Gateway;
 use crate::handler::Dispatcher;
 use crate::merger::{Merger, MergerCtx};
-use crate::metrics::Recorder;
+use crate::metrics::{NodeRamSample, Recorder};
 use crate::netsim::Fabric;
 use crate::runtime::{ArtifactSet, ComputeService};
 
@@ -90,7 +91,7 @@ pub fn routing_invariants(platform: &Platform) -> std::result::Result<(), String
             }
         }
     }
-    let live = platform.containers.live_count();
+    let live = platform.cluster.live_count();
     let routed = platform.gateway.distinct_instances();
     if routed != live {
         return Err(format!(
@@ -104,7 +105,10 @@ pub fn routing_invariants(platform: &Platform) -> std::result::Result<(), String
 pub struct Platform {
     pub config: Rc<PlatformConfig>,
     pub app: AppSpec,
+    /// node-0's runtime — *the* runtime on a single-node platform; on a
+    /// multi-node cluster use [`Platform::cluster`] for fleet-wide views
     pub containers: ContainerRuntime,
+    pub cluster: Cluster,
     pub gateway: Gateway,
     pub metrics: Recorder,
     pub observer: Rc<Observer>,
@@ -137,7 +141,9 @@ impl Platform {
             ));
         }
         let config = Rc::new(config);
-        let containers = ContainerRuntime::new(Rc::clone(&config));
+        let cluster = Cluster::new(&config);
+        let scheduler = Scheduler::new(config.cluster.placement, cluster.clone());
+        let containers = cluster.control();
         let gateway = Gateway::new();
         let metrics = Recorder::new();
         let fabric = Fabric::new(config.latency.clone(), config.seed);
@@ -157,9 +163,12 @@ impl Platform {
             metrics.clone(),
         ));
 
-        // initial deployment: one image + instance per function; the images
-        // are retained for the lifetime of the platform so the defusion
-        // pipeline can always redeploy originals
+        // initial deployment: one image + instance per function, each
+        // placed by the scheduler's policy (bin-pack / spread /
+        // fusion-affinity; a single-node cluster maps everything to
+        // node 0).  The images are retained for the lifetime of the
+        // platform so the defusion pipeline can always redeploy originals.
+        let placement = scheduler.place_app(&app, &config.ram)?;
         let mut instances = Vec::new();
         let mut originals = BTreeMap::new();
         for f in app.functions() {
@@ -168,7 +177,8 @@ impl Platform {
                 vec![(f.name.clone(), f.code_mb)],
             );
             originals.insert(f.name.clone(), image);
-            let inst = containers.launch(image)?;
+            let node = placement.get(&f.name).copied().unwrap_or(NodeId(0));
+            let inst = cluster.launch_on(node, image)?;
             gateway.set_route(&f.name, Rc::clone(&inst));
             instances.push(inst);
         }
@@ -189,6 +199,7 @@ impl Platform {
             Rc::clone(&config),
             fabric,
             gateway.clone(),
+            cluster.clone(),
             compute,
             Rc::clone(&observer),
             metrics.clone(),
@@ -197,9 +208,9 @@ impl Platform {
 
         // platform-flavored deployer for fused instances
         let dep = match config.kind {
-            PlatformKind::Tiny => Deployer::direct(containers.clone()),
+            PlatformKind::Tiny => Deployer::direct(cluster.clone()),
             PlatformKind::Kube => {
-                Deployer::reconciled(containers.clone(), config.latency.reconcile_interval_ms)
+                Deployer::reconciled(cluster.clone(), config.latency.reconcile_interval_ms)
             }
         };
 
@@ -207,6 +218,8 @@ impl Platform {
         let merger = Merger::new(MergerCtx {
             config: Rc::clone(&config),
             containers: containers.clone(),
+            cluster: cluster.clone(),
+            scheduler: scheduler.clone(),
             gateway: gateway.clone(),
             observer: Rc::clone(&observer),
             metrics: metrics.clone(),
@@ -215,17 +228,27 @@ impl Platform {
         });
         exec::spawn(merger.run(fusion_rx));
 
-        // RAM sampler
+        // RAM sampler: the platform-wide series plus one series per node
+        // (on a single-node platform the node-0 series mirrors the total)
         let sampler_stop = Rc::new(Cell::new(false));
         {
             let stop = Rc::clone(&sampler_stop);
-            let containers = containers.clone();
+            let cluster = cluster.clone();
             let metrics = metrics.clone();
             let interval = config.ram.sample_interval_ms;
             exec::spawn(async move {
                 while !stop.get() {
                     let t = metrics.rel_now_ms();
-                    metrics.record_ram(t, containers.total_ram_mb(), containers.live_count());
+                    metrics.record_ram(t, cluster.total_ram_mb(), cluster.live_count());
+                    for node in cluster.nodes() {
+                        metrics.record_node_ram(NodeRamSample {
+                            t_ms: t,
+                            node: node.id(),
+                            ram_mb: node.ram_mb(),
+                            capacity_mb: node.capacity_mb(),
+                            instances: node.live_count(),
+                        });
+                    }
                     exec::sleep_ms(interval).await;
                 }
             });
@@ -238,19 +261,29 @@ impl Platform {
         // fused or not — additionally feeds the *merge planner*
         // (Observer::update_fn_signals -> cost-aware Fuse admission), so
         // the loop also runs when defusion is off but the cost-model merge
-        // policy needs its window signals.
+        // policy needs its window signals.  On capped multi-node clusters
+        // the same tick drives the *node pressure* controller
+        // (Observer::node_feedback -> Migrate, or Split as the fallback).
+        let pressure_managed =
+            cluster.node_count() > 1 && config.cluster.node_capacity_mb > 0.0;
         if config.fusion.enabled
             && config.fusion.feedback_interval_ms > 0.0
             && (config.fusion.defusion
-                || config.fusion.merge_policy == MergePolicyKind::CostModel)
+                || config.fusion.merge_policy == MergePolicyKind::CostModel
+                || pressure_managed)
         {
             let stop = Rc::clone(&sampler_stop);
             let gateway = gateway.clone();
             let metrics = metrics.clone();
             let observer = Rc::clone(&observer);
             let billing = billing.clone();
+            let cluster = cluster.clone();
             let entry = app.entry.clone();
             let interval = config.fusion.feedback_interval_ms;
+            // predicted one-off co-location cost the merge planner amortizes
+            let migration_est_ms = config.latency.boot_ms
+                + config.latency.health_interval_ms
+                    * config.latency.health_checks_required as f64;
             exec::spawn(async move {
                 while !stop.get() {
                     exec::sleep_ms(interval).await;
@@ -283,10 +316,14 @@ impl Platform {
                         } else {
                             f64::NAN
                         };
-                        // per-function attribution (equal-share overhead;
-                        // see metrics::attribute_ram): members sum to the
+                        // per-function attribution weighted by in-flight
+                        // ownership (equal share when idle; see
+                        // metrics::attribute_ram): members sum to the
                         // instance's RAM
-                        let shares = crate::metrics::attribute_ram(ram_mb, &hosted, &[]);
+                        let in_flight: Vec<u64> =
+                            hosted.iter().map(|(n, _)| inst.fn_inflight(n)).collect();
+                        let shares =
+                            crate::metrics::attribute_ram(ram_mb, &hosted, &in_flight);
                         let mut per_fn = Vec::with_capacity(shares.len());
                         for (name, fn_ram) in &shares {
                             metrics.record_fn_ram(t, group_key.clone(), name.clone(), *fn_ram);
@@ -333,7 +370,50 @@ impl Platform {
                             billed_ms: billing.billed_ms_window(&function, from, t),
                             self_ms: metrics.fn_self_ms_window(&function, from, t),
                             window_s,
+                            node: cluster.node_of(inst.id()),
                         });
+                    }
+                    // cluster view: per-node loads price cross-node
+                    // co-location in the merge planner, and capped nodes
+                    // feed the pressure controller
+                    if cluster.node_count() > 1 {
+                        let loads: Vec<NodeLoad> = cluster
+                            .nodes()
+                            .iter()
+                            .map(|n| NodeLoad {
+                                node: n.id(),
+                                ram_mb: n.ram_mb(),
+                                capacity_mb: n.capacity_mb(),
+                            })
+                            .collect();
+                        observer.update_cluster_view(loads, migration_est_ms);
+                        if pressure_managed {
+                            let node_samples: Vec<NodeSample> = cluster
+                                .nodes()
+                                .iter()
+                                .map(|n| NodeSample {
+                                    node: n.id(),
+                                    ram_mb: n.ram_mb(),
+                                    capacity_mb: n.capacity_mb(),
+                                    instances: n
+                                        .containers()
+                                        .live_instances()
+                                        .iter()
+                                        .filter(|i| i.state() == InstanceState::Healthy)
+                                        .map(|i| {
+                                            let mut fns: Vec<String> = i
+                                                .functions()
+                                                .iter()
+                                                .map(|(f, _)| f.clone())
+                                                .collect();
+                                            fns.sort();
+                                            (fns, i.ram_mb())
+                                        })
+                                        .collect(),
+                                })
+                                .collect();
+                            observer.node_feedback(&node_samples);
+                        }
                     }
                     observer.update_fn_signals(signals);
                     if !samples.is_empty() {
@@ -347,6 +427,7 @@ impl Platform {
             config,
             app,
             containers,
+            cluster,
             gateway,
             metrics,
             observer,
@@ -396,6 +477,11 @@ impl Platform {
     /// Distinct live fused instances (more than one hosted function).
     pub fn fused_groups(&self) -> Vec<Rc<Instance>> {
         fused_groups_of(&self.gateway)
+    }
+
+    /// Which node currently serves `function` (None when unrouted).
+    pub fn node_of_function(&self, function: &str) -> Option<NodeId> {
+        self.gateway.resolve(function).ok().and_then(|inst| self.cluster.node_of(inst.id()))
     }
 
     /// Virtual time the platform finished deploying.
@@ -564,6 +650,111 @@ mod tests {
             );
             assert!(p.observer.admission_score("s0", "s1").is_finite());
             routing_invariants(&p).unwrap();
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn multi_node_affinity_colocates_the_sync_group() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.cluster.nodes = 3;
+            cfg.cluster.placement = crate::config::PlacementPolicy::FusionAffinity;
+            let p = Platform::deploy(apps::chain(4), cfg.vanilla()).await.unwrap();
+            assert_eq!(p.cluster.node_count(), 3);
+            assert_eq!(p.cluster.live_count(), 4);
+            let home = p.node_of_function("s0").expect("s0 must have a node");
+            for f in ["s1", "s2", "s3"] {
+                assert_eq!(p.node_of_function(f), Some(home), "{f} off the group node");
+            }
+            // co-located chain: remote hops never cross nodes
+            let payload = vec![0.1f32; p.payload_len()];
+            p.invoke(payload).await.unwrap();
+            assert_eq!(p.metrics.counter("cross_node_calls"), 0);
+            routing_invariants(&p).unwrap();
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn multi_node_spread_pays_cross_node_hops_single_node_does_not() {
+        run_virtual(async {
+            let mut spread = cfg();
+            spread.cluster.nodes = 3;
+            spread.cluster.placement = crate::config::PlacementPolicy::Spread;
+            let p = Platform::deploy(apps::chain(3), spread.vanilla()).await.unwrap();
+            // 3 functions over 3 nodes: every interior hop crosses
+            let nodes: std::collections::HashSet<_> =
+                ["s0", "s1", "s2"].iter().map(|f| p.node_of_function(f).unwrap()).collect();
+            assert_eq!(nodes.len(), 3, "spread must use all three nodes");
+            let payload = vec![0.1f32; p.payload_len()];
+            p.invoke(payload).await.unwrap();
+            assert_eq!(p.metrics.counter("cross_node_calls"), 2, "s0->s1 and s1->s2");
+            p.shutdown();
+
+            let single = Platform::deploy(apps::chain(3), cfg().vanilla()).await.unwrap();
+            let payload = vec![0.1f32; single.payload_len()];
+            single.invoke(payload).await.unwrap();
+            assert_eq!(single.metrics.counter("cross_node_calls"), 0);
+            single.shutdown();
+        });
+    }
+
+    #[test]
+    fn cross_node_fusion_migrates_to_colocate_first() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.cluster.nodes = 2;
+            cfg.cluster.placement = crate::config::PlacementPolicy::Spread;
+            cfg.latency.image_build_ms = 300.0;
+            cfg.latency.boot_ms = 150.0;
+            cfg.fusion.min_observations = 1;
+            let p = Platform::deploy(apps::chain(2), cfg).await.unwrap();
+            assert_ne!(
+                p.node_of_function("s0"),
+                p.node_of_function("s1"),
+                "spread must start the pair apart"
+            );
+            for _ in 0..5 {
+                let payload = vec![0.1f32; p.payload_len()];
+                p.invoke(payload).await.unwrap();
+                exec::sleep_ms(500.0).await;
+            }
+            exec::sleep_ms(20_000.0).await;
+            // fused into one instance on one node, via a co-location move
+            assert_eq!(p.group_members("s0"), vec!["s0".to_string(), "s1".to_string()]);
+            assert_eq!(p.gateway.distinct_instances(), 1);
+            let migrations = p.metrics.migrations();
+            assert_eq!(migrations.len(), 1, "{migrations:?}");
+            assert_eq!(migrations[0].reason, "fusion_colocation");
+            assert_eq!(p.metrics.counter("fusion_colocation_migrations"), 1);
+            // post-fusion the whole chain is inline: no cross-node calls
+            let before = p.metrics.counter("cross_node_calls");
+            let payload = vec![0.1f32; p.payload_len()];
+            p.invoke(payload).await.unwrap();
+            assert_eq!(p.metrics.counter("cross_node_calls"), before);
+            routing_invariants(&p).unwrap();
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn controller_records_per_node_ram_series() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.cluster.nodes = 2;
+            cfg.cluster.node_capacity_mb = 500.0;
+            let p = Platform::deploy(apps::chain(2), cfg.vanilla()).await.unwrap();
+            exec::sleep_ms(5_000.0).await;
+            let series = p.metrics.node_ram_series();
+            assert!(series.iter().any(|s| s.node == crate::cluster::NodeId(0)));
+            assert!(series.iter().any(|s| s.node == crate::cluster::NodeId(1)));
+            assert!(series.iter().all(|s| s.capacity_mb == 500.0));
+            // the per-node split sums to the platform series at each tick
+            let total = p.metrics.ram_series();
+            let t0 = total[0].t_ms;
+            let node_sum: f64 = series.iter().filter(|s| s.t_ms == t0).map(|s| s.ram_mb).sum();
+            assert!((node_sum - total[0].total_mb).abs() < 1e-9);
             p.shutdown();
         });
     }

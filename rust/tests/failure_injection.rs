@@ -166,10 +166,15 @@ fn boot_hang_mid_evict_rolls_back_group_intact_with_zero_drops() {
         let merger = provuse::merger::Merger::new(provuse::merger::MergerCtx {
             config: Rc::clone(&p.config),
             containers: p.containers.clone(),
+            cluster: p.cluster.clone(),
+            scheduler: provuse::cluster::Scheduler::new(
+                p.config.cluster.placement,
+                p.cluster.clone(),
+            ),
             gateway: p.gateway.clone(),
             observer: Rc::clone(&p.observer),
             metrics: p.metrics.clone(),
-            deployer: provuse::platform::deployer::Deployer::direct(p.containers.clone()),
+            deployer: provuse::platform::deployer::Deployer::direct(p.cluster.clone()),
             originals: Rc::new(
                 ["s0", "s1", "s2"]
                     .iter()
@@ -241,10 +246,15 @@ fn stale_evict_request_aborts_without_touching_routes() {
         let merger = provuse::merger::Merger::new(provuse::merger::MergerCtx {
             config: Rc::clone(&p.config),
             containers: p.containers.clone(),
+            cluster: p.cluster.clone(),
+            scheduler: provuse::cluster::Scheduler::new(
+                p.config.cluster.placement,
+                p.cluster.clone(),
+            ),
             gateway: p.gateway.clone(),
             observer: Rc::clone(&p.observer),
             metrics: p.metrics.clone(),
-            deployer: provuse::platform::deployer::Deployer::direct(p.containers.clone()),
+            deployer: provuse::platform::deployer::Deployer::direct(p.cluster.clone()),
             originals: Rc::new(
                 ["s0", "s1", "s2"]
                     .iter()
@@ -288,10 +298,15 @@ fn stale_split_request_aborts_without_touching_routes() {
         let merger = provuse::merger::Merger::new(provuse::merger::MergerCtx {
             config: Rc::clone(&p.config),
             containers: p.containers.clone(),
+            cluster: p.cluster.clone(),
+            scheduler: provuse::cluster::Scheduler::new(
+                p.config.cluster.placement,
+                p.cluster.clone(),
+            ),
             gateway: p.gateway.clone(),
             observer: Rc::clone(&p.observer),
             metrics: p.metrics.clone(),
-            deployer: provuse::platform::deployer::Deployer::direct(p.containers.clone()),
+            deployer: provuse::platform::deployer::Deployer::direct(p.cluster.clone()),
             originals: Rc::new(
                 ["s0", "s1", "s2"]
                     .iter()

@@ -5,10 +5,12 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use provuse::apps::{AppSpec, CallMode, CallSpec, FunctionSpec};
+use provuse::cluster::{Migrator, NodeId, Scheduler};
 use provuse::config::{
-    ComputeMode, MergePolicyKind, PlatformConfig, PlatformKind, SplitPolicyKind, WorkloadConfig,
+    ComputeMode, MergePolicyKind, PlacementPolicy, PlatformConfig, PlatformKind,
+    SplitPolicyKind, WorkloadConfig,
 };
-use provuse::containerd::ImageId;
+use provuse::containerd::{ImageId, InstanceState};
 use provuse::exec::run_virtual;
 use provuse::fusion::SplitReason;
 use provuse::merger::{Merger, MergerCtx};
@@ -188,10 +190,12 @@ fn manual_merger(p: &Rc<Platform>) -> Merger {
     Merger::new(MergerCtx {
         config: Rc::clone(&p.config),
         containers: p.containers.clone(),
+        cluster: p.cluster.clone(),
+        scheduler: Scheduler::new(p.config.cluster.placement, p.cluster.clone()),
         gateway: p.gateway.clone(),
         observer: Rc::clone(&p.observer),
         metrics: p.metrics.clone(),
-        deployer: Deployer::direct(p.containers.clone()),
+        deployer: Deployer::direct(p.cluster.clone()),
         originals: Rc::new(originals),
     })
 }
@@ -419,6 +423,138 @@ fn prop_controller_loop_fuzz_preserves_invariants_and_never_flaps() {
                         );
                     }
                 }
+            }
+            p.shutdown();
+        });
+    });
+}
+
+#[test]
+fn prop_cluster_invariants_hold_across_placements_and_migrations() {
+    // ISSUE 4 satellite: for ANY node count, placement policy, capacity
+    // regime, and traffic, with random fuse + migrate pipelines woven
+    // through (driven serially against a vanilla platform, the way the
+    // real Merger serializes them, while open-loop entry traffic races
+    // every cutover):
+    //   * the routing invariants hold at quiescence;
+    //   * no request is ever dropped — in particular none routed to a
+    //     draining migration source;
+    //   * total cluster RAM accounting equals the sum of the per-node
+    //     ledgers, and every routed instance has a node assignment.
+    check("cluster placement + migration invariants", 10, |g| {
+        let app = random_app(g);
+        let mut cfg = fast_cfg(g, PlatformKind::Tiny);
+        cfg.cluster.nodes = g.usize(1, 4);
+        cfg.cluster.placement = *g.choose(&[
+            PlacementPolicy::BinPack,
+            PlacementPolicy::Spread,
+            PlacementPolicy::FusionAffinity,
+        ]);
+        // generous capacity (or uncapped) so the initial placement always
+        // fits; individual migrations may still be refused — that's part
+        // of the space
+        cfg.cluster.node_capacity_mb = if g.bool() { 0.0 } else { g.f64(700.0, 2_000.0) };
+        let ops = g.usize(3, 8);
+        let op_seed = g.rng().next_u64();
+        let wl = WorkloadConfig {
+            requests: g.usize(30, 90) as u64,
+            rate_rps: g.f64(5.0, 25.0),
+            seed: g.rng().next_u64(),
+            timeout_ms: 120_000.0,
+        };
+        run_virtual(async move {
+            // vanilla: the in-platform merger stays idle, so the serial
+            // manual pipelines below are the only topology mutations
+            let p = Platform::deploy(app, cfg.vanilla()).await.unwrap();
+            let n_nodes = p.cluster.node_count();
+            for (f, inst) in p.gateway.snapshot() {
+                assert!(
+                    p.cluster.node_of(inst.id()).is_some(),
+                    "`{f}` deployed without a node assignment"
+                );
+            }
+            let merger = manual_merger(&p);
+            let migrator = Migrator::new(
+                p.cluster.clone(),
+                Deployer::direct(p.cluster.clone()),
+                p.gateway.clone(),
+                p.metrics.clone(),
+                Rc::clone(&p.config),
+            );
+            let names: Vec<String> = p.app.functions().map(|f| f.name.clone()).collect();
+            let sync_edges: Vec<(String, String)> = p
+                .app
+                .functions()
+                .flat_map(|f| {
+                    f.calls
+                        .iter()
+                        .filter(|c| c.mode == CallMode::Sync)
+                        .map(|c| (f.name.clone(), c.target.clone()))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+
+            // entry traffic races every pipeline below (open loop)
+            let traffic = provuse::exec::spawn(workload::run(Rc::clone(&p), wl));
+
+            let mut g = Gen::replay(op_seed);
+            for _ in 0..ops {
+                provuse::exec::sleep_ms(g.f64(200.0, 2_500.0)).await;
+                if g.bool() && !sync_edges.is_empty() {
+                    // fuse a random sync pair — on a multi-node cluster
+                    // this may itself run a co-location migration; aborts
+                    // (already colocated, capacity) are part of the space
+                    let (caller, callee) = g.choose(&sync_edges).clone();
+                    let _ = merger.handle_fuse(&caller, &callee).await;
+                } else {
+                    // migrate the live group of a random function to a
+                    // random node
+                    let probe = g.choose(&names).clone();
+                    let group = p.group_members(&probe);
+                    let to = NodeId(g.usize(0, n_nodes - 1) as u64);
+                    match migrator.migrate(&group, to, "prop").await {
+                        Ok(fresh) => {
+                            assert_eq!(p.cluster.node_of(fresh.id()), Some(to));
+                            // the cutover was atomic: every member routes
+                            // to the replacement, never the draining source
+                            for f in &group {
+                                assert_eq!(
+                                    p.gateway.resolve(f).unwrap().id(),
+                                    fresh.id(),
+                                    "`{f}` still routed to the migration source"
+                                );
+                            }
+                        }
+                        Err(_) => {} // no-op/stale/capacity refusals are fine
+                    }
+                }
+            }
+            let report = traffic.await.unwrap();
+            assert_eq!(report.failed, 0, "dropped requests under cluster churn");
+            provuse::exec::sleep_ms(30_000.0).await; // drains settle
+
+            if let Err(violation) = routing_invariants(&p) {
+                panic!("invariant violated on the cluster: {violation}");
+            }
+            // per-node accounting sums exactly to the cluster ledger
+            let node_ram: f64 = p.cluster.nodes().iter().map(|n| n.ram_mb()).sum();
+            assert!(
+                (node_ram - p.cluster.total_ram_mb()).abs() < 1e-6,
+                "per-node RAM {node_ram} != cluster total {}",
+                p.cluster.total_ram_mb()
+            );
+            let node_count: usize = p.cluster.nodes().iter().map(|n| n.live_count()).sum();
+            assert_eq!(node_count, p.cluster.live_count());
+            // at quiescence every route points at a healthy, node-assigned
+            // instance (a draining source still routed would show up here)
+            for (f, inst) in p.gateway.snapshot() {
+                assert_eq!(
+                    inst.state(),
+                    InstanceState::Healthy,
+                    "`{f}` routed to a {} instance",
+                    inst.state().name()
+                );
+                assert!(p.cluster.node_of(inst.id()).is_some());
             }
             p.shutdown();
         });

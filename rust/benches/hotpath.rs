@@ -2,8 +2,17 @@
 //! and the merge pipeline's CPU work (DESIGN.md §Perf: the gateway+handler
 //! CPU overhead must be microseconds so the *modeled* hop costs dominate,
 //! as in the paper's testbed).
+//!
+//! ISSUE 5 additions: a counting global allocator proves `gateway::resolve`
+//! performs **zero heap allocations per call**, and the controller-tick
+//! signal computation (`fn_p95_window` + `fn_self_ms_window` for every
+//! routed function) is benchmarked against a faithful replica of the
+//! pre-refactor path (scan + filter + collect + sort over the whole
+//! interleaved history) with a hard `>= 5x` speedup assertion.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use provuse::apps;
 use provuse::config::{ComputeMode, PlatformConfig, WorkloadConfig};
@@ -11,12 +20,80 @@ use provuse::containerd::{ContainerRuntime, FsManifest};
 use provuse::exec::{run_virtual, Executor, Mode};
 use provuse::gateway::Gateway;
 use provuse::merger::fsunion;
+use provuse::metrics::{Recorder, MIN_WINDOW_SAMPLES};
 use provuse::platform::Platform;
 use provuse::runtime::ArtifactSet;
 use provuse::util::bench::bench;
+use provuse::util::intern::Sym;
 use provuse::util::json::Json;
 use provuse::util::rng::Rng;
+use provuse::util::stats::Quantiles;
 use provuse::workload::{self, request_payload};
+
+/// Counting allocator: lets the bench assert a code path never touches the
+/// heap (the ISSUE 5 `gateway::resolve` acceptance criterion).
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// The seed tree's `FnSample` shape + window math, replicated verbatim so
+/// the before/after comparison stays honest as the real code evolves.
+struct LegacyFnSample {
+    t_ms: f64,
+    function: String,
+    handler_ms: f64,
+}
+
+fn legacy_fn_p95_window(
+    series: &[LegacyFnSample],
+    function: &str,
+    from_ms: f64,
+    to_ms: f64,
+    min_n: usize,
+) -> f64 {
+    let start = series.partition_point(|s| s.t_ms < from_ms);
+    let q = Quantiles::from_samples(
+        series[start..]
+            .iter()
+            .take_while(|s| s.t_ms < to_ms)
+            .filter(|s| s.function == function)
+            .map(|s| s.handler_ms)
+            .collect(),
+    );
+    if q.len() >= min_n { q.p95() } else { f64::NAN }
+}
+
+fn legacy_fn_self_ms_window(
+    series: &[LegacyFnSample],
+    function: &str,
+    from_ms: f64,
+    to_ms: f64,
+) -> f64 {
+    let start = series.partition_point(|s| s.t_ms < from_ms);
+    series[start..]
+        .iter()
+        .take_while(|s| s.t_ms < to_ms)
+        .filter(|s| s.function == function)
+        .map(|s| s.handler_ms)
+        .sum()
+}
 
 fn main() {
     println!("== L3 hot-path microbenches ==");
@@ -37,12 +114,95 @@ fn main() {
         bench("gateway::resolve (64 routes)", 1_000, 100_000, || {
             gw.resolve("fn42").unwrap()
         });
+        let hot = Sym::intern("fn42");
+        bench("gateway::resolve_sym (64 routes)", 1_000, 100_000, || {
+            gw.resolve_sym(hot).unwrap()
+        });
+        // ISSUE 5 acceptance: zero heap allocations per resolve call
+        let before = ALLOCATIONS.load(Ordering::Relaxed);
+        for _ in 0..10_000 {
+            std::hint::black_box(gw.resolve("fn42").unwrap());
+            std::hint::black_box(gw.resolve_sym(hot).unwrap());
+        }
+        let allocs = ALLOCATIONS.load(Ordering::Relaxed) - before;
+        println!("gateway::resolve allocations over 20k calls: {allocs}");
+        assert_eq!(allocs, 0, "gateway::resolve must not allocate per call");
         let names: Vec<String> = (0..8).map(|i| format!("fn{i}")).collect();
         let mut flip = false;
         bench("gateway::swap_routes (8 functions)", 1_000, 50_000, || {
             flip = !flip;
             gw.swap_routes(&names, Rc::clone(if flip { &inst_b } else { &inst_a })).unwrap()
         });
+    }
+
+    // controller-tick signal computation: pre-refactor (scan the whole
+    // interleaved history per function) vs the interned windowed shards
+    {
+        const FNS: usize = 16;
+        const RATE_PER_S: usize = 2_000; // samples/s across all functions
+        const SECS: usize = 120;
+        const WINDOW_MS: f64 = 5_000.0;
+        let names: Vec<String> = (0..FNS).map(|i| format!("sigfn{i}")).collect();
+        let syms: Vec<Sym> = names.iter().map(|n| Sym::intern(n)).collect();
+        let mut legacy: Vec<LegacyFnSample> = Vec::with_capacity(RATE_PER_S * SECS);
+        let recorder = Recorder::new();
+        let mut rng = Rng::new(9);
+        for i in 0..(RATE_PER_S * SECS) {
+            let t_ms = i as f64 * (1_000.0 / RATE_PER_S as f64);
+            let f = i % FNS;
+            let v = rng.lognormal(25.0, 0.4);
+            legacy.push(LegacyFnSample { t_ms, function: names[f].clone(), handler_ms: v });
+            recorder.record_fn_latency(t_ms, syms[f], v);
+        }
+        let to = (SECS * 1_000) as f64;
+        let from = to - WINDOW_MS;
+        // correctness first: both paths agree on every window signal
+        for name in &names {
+            let a = legacy_fn_p95_window(&legacy, name, from, to, MIN_WINDOW_SAMPLES);
+            let b = recorder.fn_p95_window(name, from, to, MIN_WINDOW_SAMPLES);
+            assert_eq!(a.to_bits(), b.to_bits(), "p95 mismatch for {name}");
+            let a = legacy_fn_self_ms_window(&legacy, name, from, to);
+            let b = recorder.fn_self_ms_window(name, from, to);
+            assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "self-ms mismatch for {name}");
+        }
+        let old = bench(
+            &format!("controller tick signals, pre-refactor ({FNS} fns)"),
+            20,
+            300,
+            || {
+                let mut acc = 0.0;
+                for name in &names {
+                    let p = legacy_fn_p95_window(&legacy, name, from, to, MIN_WINDOW_SAMPLES);
+                    if p.is_finite() {
+                        acc += p;
+                    }
+                    acc += legacy_fn_self_ms_window(&legacy, name, from, to);
+                }
+                acc
+            },
+        );
+        let new = bench(
+            &format!("controller tick signals, windowed shards ({FNS} fns)"),
+            20,
+            300,
+            || {
+                let mut acc = 0.0;
+                for name in &names {
+                    let p = recorder.fn_p95_window(name, from, to, MIN_WINDOW_SAMPLES);
+                    if p.is_finite() {
+                        acc += p;
+                    }
+                    acc += recorder.fn_self_ms_window(name, from, to);
+                }
+                acc
+            },
+        );
+        let speedup = old.mean_ns / new.mean_ns;
+        println!("controller-tick signal speedup: {speedup:.1}x (acceptance: >= 5x)");
+        assert!(
+            speedup >= 5.0,
+            "windowed signal computation must be >= 5x the pre-refactor path, got {speedup:.1}x"
+        );
     }
 
     // merger fs union

@@ -12,13 +12,16 @@
 //! evaluated against a provider-style [`CostModel`].
 
 use crate::metrics::Recorder;
+use crate::util::intern::Sym;
 
-/// One billed invocation.
-#[derive(Debug, Clone)]
+/// One billed invocation.  The function is an interned [`Sym`] (ISSUE 5):
+/// the handler records one event per remote arrival, so a `String` here
+/// was one heap allocation per request.
+#[derive(Debug, Clone, Copy)]
 pub struct BillingEvent {
     /// virtual time the invocation completed (ms since the metrics epoch)
     pub t_ms: f64,
-    pub function: String,
+    pub function: Sym,
     /// billed duration (ms): dispatch + execution incl. blocking waits
     pub duration_ms: f64,
     /// memory allocation of the serving instance (GiB)
@@ -80,6 +83,11 @@ impl Bill {
 #[derive(Clone, Default)]
 pub struct BillingLedger {
     events: std::rc::Rc<std::cell::RefCell<Vec<BillingEvent>>>,
+    /// retention horizon (ms); 0 = keep every event (seed behavior).  Set
+    /// by [`BillingLedger::windowed`] so a million-request run's ledger is
+    /// bounded like the windowed metrics recorder — one event per remote
+    /// arrival is otherwise O(requests) memory.
+    retention_ms: std::rc::Rc<std::cell::Cell<f64>>,
 }
 
 impl BillingLedger {
@@ -87,8 +95,36 @@ impl BillingLedger {
         Self::default()
     }
 
+    /// Bounded ledger: events older than `retention_ms` behind the newest
+    /// event are pruned (amortized — the buffer spans at most twice the
+    /// horizon).  Trailing-window queries inside the horizon are unchanged;
+    /// whole-run aggregates ([`Self::bill`], [`Self::gb_seconds_for`])
+    /// cover only the retained span.
+    pub fn windowed(retention_ms: f64) -> Self {
+        let ledger = Self::default();
+        ledger.retention_ms.set(retention_ms.max(0.0));
+        ledger
+    }
+
     pub fn record(&self, event: BillingEvent) {
-        self.events.borrow_mut().push(event);
+        let mut events = self.events.borrow_mut();
+        let retention = self.retention_ms.get();
+        if retention > 0.0 {
+            if let Some(first) = events.first() {
+                if event.t_ms - first.t_ms > 2.0 * retention {
+                    let cutoff = event.t_ms - retention;
+                    let cut = events.partition_point(|e| e.t_ms < cutoff);
+                    events.drain(..cut);
+                }
+            }
+        }
+        events.push(event);
+    }
+
+    /// Approximate ledger heap footprint (bytes) — included in the FIG9
+    /// bounded-telemetry self-check alongside `Recorder::approx_bytes`.
+    pub fn approx_bytes(&self) -> usize {
+        self.events.borrow().capacity() * std::mem::size_of::<BillingEvent>()
     }
 
     pub fn events(&self) -> Vec<BillingEvent> {
@@ -99,8 +135,16 @@ impl BillingLedger {
         Bill::from_events(&self.events.borrow())
     }
 
-    /// Billed GiB-seconds attributed to one function name.
+    /// Billed GiB-seconds attributed to one function name (lookup, not
+    /// intern: a query for an unknown name must not grow the leaked table).
     pub fn gb_seconds_for(&self, function: &str) -> f64 {
+        match Sym::lookup(function) {
+            Some(sym) => self.gb_seconds_for_sym(sym),
+            None => 0.0,
+        }
+    }
+
+    pub fn gb_seconds_for_sym(&self, function: Sym) -> f64 {
         self.events
             .borrow()
             .iter()
@@ -117,6 +161,15 @@ impl BillingLedger {
     /// `t_ms`; a binary search bounds the controller's per-tick work to the
     /// trailing window instead of the whole run's history.
     pub fn gb_seconds_window(&self, function: &str, from_ms: f64, to_ms: f64) -> f64 {
+        match Sym::lookup(function) {
+            Some(sym) => self.gb_seconds_window_sym(sym, from_ms, to_ms),
+            None => 0.0,
+        }
+    }
+
+    /// [`Self::gb_seconds_window`] for callers already holding a [`Sym`]
+    /// (the controller tick).
+    pub fn gb_seconds_window_sym(&self, function: Sym, from_ms: f64, to_ms: f64) -> f64 {
         let borrowed = self.events.borrow();
         let events: &[BillingEvent] = &borrowed;
         let start = events.partition_point(|e| e.t_ms < from_ms);
@@ -134,6 +187,14 @@ impl BillingLedger {
     /// yields the caller's double-billed blocked time, the merge planner's
     /// hop-savings signal (see `fusion::cost::CostModel::predict_merge`).
     pub fn billed_ms_window(&self, function: &str, from_ms: f64, to_ms: f64) -> f64 {
+        match Sym::lookup(function) {
+            Some(sym) => self.billed_ms_window_sym(sym, from_ms, to_ms),
+            None => 0.0,
+        }
+    }
+
+    /// [`Self::billed_ms_window`] for callers already holding a [`Sym`].
+    pub fn billed_ms_window_sym(&self, function: Sym, from_ms: f64, to_ms: f64) -> f64 {
         let borrowed = self.events.borrow();
         let events: &[BillingEvent] = &borrowed;
         let start = events.partition_point(|e| e.t_ms < from_ms);
@@ -158,7 +219,7 @@ mod tests {
     use super::*;
 
     fn ev(t_ms: f64, function: &str, duration_ms: f64, alloc_gb: f64) -> BillingEvent {
-        BillingEvent { t_ms, function: function.into(), duration_ms, alloc_gb }
+        BillingEvent { t_ms, function: Sym::intern(function), duration_ms, alloc_gb }
     }
 
     #[test]
@@ -188,6 +249,30 @@ mod tests {
         assert!((l.gb_seconds_for("a") - 2.0).abs() < 1e-12);
         assert!((l.gb_seconds_for("b") - 0.25).abs() < 1e-12);
         assert_eq!(l.bill().invocations, 3);
+    }
+
+    #[test]
+    fn windowed_ledger_prunes_but_keeps_the_horizon() {
+        let l = BillingLedger::windowed(1_000.0);
+        for i in 0..10_000u64 {
+            l.record(ev(i as f64, "a", 10.0, 1.0));
+        }
+        let retained = l.events();
+        // bounded: at most ~2x the horizon (2000 events at 1 per ms)
+        assert!(retained.len() <= 2_001, "retained {} events", retained.len());
+        // everything inside one horizon behind the newest event survives
+        let newest = retained.last().unwrap().t_ms;
+        assert_eq!(newest, 9_999.0);
+        assert!(retained.first().unwrap().t_ms <= newest - 1_000.0);
+        // trailing-window queries are unaffected
+        assert!((l.billed_ms_window("a", 9_000.0, 10_000.0) - 10_000.0).abs() < 1e-9);
+        assert!(l.approx_bytes() > 0);
+        // unbounded default keeps everything
+        let full = BillingLedger::new();
+        for i in 0..5_000u64 {
+            full.record(ev(i as f64, "a", 10.0, 1.0));
+        }
+        assert_eq!(full.events().len(), 5_000);
     }
 
     #[test]

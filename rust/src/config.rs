@@ -4,6 +4,7 @@
 //! paper's claims.
 
 use crate::error::{Error, Result};
+use crate::metrics::RecordingConfig;
 use crate::util::json::Json;
 
 /// Which FaaS platform flavor to assemble (paper §4: tinyFaaS + Kubernetes).
@@ -315,6 +316,9 @@ pub struct PlatformConfig {
     pub fusion: FusionParams,
     pub cluster: ClusterParams,
     pub compute: ComputeMode,
+    /// telemetry retention (full = seed-exact CSVs; windowed = bounded
+    /// recorder memory for scale runs) + windowed shard shape
+    pub recording: RecordingConfig,
     /// directory containing `manifest.json` + HLO artifacts
     pub artifacts_dir: String,
     pub seed: u64,
@@ -352,6 +356,7 @@ impl PlatformConfig {
             fusion: FusionParams::default_enabled(),
             cluster: ClusterParams::default(),
             compute: ComputeMode::Replay,
+            recording: RecordingConfig::default(),
             artifacts_dir: "artifacts".into(),
             seed: 7,
         }
@@ -396,6 +401,12 @@ impl PlatformConfig {
         self
     }
 
+    /// Set the telemetry recording level (shard shape keeps its default).
+    pub fn with_recording(mut self, level: crate::metrics::RecordingLevel) -> Self {
+        self.recording.level = level;
+        self
+    }
+
     /// Uniformly scale every latency parameter (e.g. 0.1 for a snappy
     /// real-time demo of the live HTTP gateway).
     pub fn scale_latency(mut self, factor: f64) -> Self {
@@ -422,6 +433,14 @@ impl PlatformConfig {
 }
 
 impl FusionParams {
+    /// Trailing window the merger's baseline-p95 capture looks back over
+    /// before a cutover.  Windowed telemetry retention is sized from this
+    /// same number (`Platform::deploy`), so the baseline query is always
+    /// answered exactly — change it here and both sites follow.
+    pub fn baseline_lookback_ms(&self) -> f64 {
+        (self.feedback_interval_ms * 10.0).max(10_000.0)
+    }
+
     pub fn default_enabled() -> Self {
         FusionParams {
             enabled: true,
@@ -482,6 +501,14 @@ impl PlatformConfig {
         Json::obj(vec![
             ("platform", Json::str(self.kind.name())),
             ("seed", Json::Num(self.seed as f64)),
+            (
+                "recording",
+                Json::obj(vec![
+                    ("level", Json::str(self.recording.level.name())),
+                    ("bucket_ms", Json::Num(self.recording.bucket_ms)),
+                    ("buckets", Json::Num(self.recording.buckets as f64)),
+                ]),
+            ),
             (
                 "cluster",
                 Json::obj(vec![
@@ -645,6 +672,20 @@ mod tests {
         let cost = fusion.get("cost").unwrap();
         assert_eq!(cost.get("merge_threshold").unwrap().as_f64().unwrap(), 0.0);
         assert!(cost.get("tune_step").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn recording_defaults_to_full_and_serializes() {
+        let c = PlatformConfig::tiny();
+        assert_eq!(c.recording.level, crate::metrics::RecordingLevel::Full);
+        assert!(c.recording.retention_ms() >= 60_000.0);
+        let j = c.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        let rec = v.get("recording").unwrap();
+        assert_eq!(rec.get("level").unwrap().as_str().unwrap(), "full");
+        assert!(rec.get("bucket_ms").unwrap().as_f64().unwrap() > 0.0);
+        let w = c.with_recording(crate::metrics::RecordingLevel::Windowed);
+        assert_eq!(w.recording.level, crate::metrics::RecordingLevel::Windowed);
     }
 
     #[test]

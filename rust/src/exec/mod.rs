@@ -23,6 +23,7 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::future::Future;
 use std::pin::Pin;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::task::{Context, Poll, Waker};
 use std::time::{Duration, Instant};
@@ -75,17 +76,71 @@ impl WakeQueue {
     }
 }
 
+/// Executor-instance ids let thread-local wake entries survive (unlikely
+/// but legal) nested `block_on` calls without cross-talk.
+static NEXT_EXEC_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// exec id of the executor currently running `block_on` on this thread
+    /// (0 = none).
+    static ACTIVE_EXEC: Cell<u64> = const { Cell::new(0) };
+    /// Virtual-mode ready list (ISSUE 5 satellite): `(exec_id, task_id)`
+    /// wakeups taken without the `Mutex<VecDeque>` + condvar round trip.
+    /// In `Mode::Virtual` every wake happens on the executor thread itself
+    /// (timers fire inside `advance_idle`, tasks wake tasks mid-poll), so
+    /// the thread-safe queue only pays for contention that cannot exist.
+    static LOCAL_READY: RefCell<Vec<(u64, u64)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Drain this executor's entries from the thread-local ready list into
+/// `buf`, preserving entries of any other (nested) executor.
+fn drain_local_ready(exec_id: u64, buf: &mut Vec<u64>) {
+    LOCAL_READY.with(|q| {
+        let mut q = q.borrow_mut();
+        if q.is_empty() {
+            return;
+        }
+        if q.iter().all(|&(e, _)| e == exec_id) {
+            buf.extend(q.drain(..).map(|(_, id)| id));
+        } else {
+            let mut i = 0;
+            while i < q.len() {
+                if q[i].0 == exec_id {
+                    buf.push(q.remove(i).1);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    });
+}
+
 struct TaskWaker {
     id: u64,
+    exec_id: u64,
+    /// take the thread-local fast path when woken on the owning executor's
+    /// thread (set only in `Mode::Virtual`; `Mode::Real` keeps the
+    /// thread-safe queue so external I/O threads park/wake correctly)
+    fast_local: bool,
     queue: Arc<WakeQueue>,
+}
+
+impl TaskWaker {
+    fn wake_id(&self) {
+        if self.fast_local && ACTIVE_EXEC.with(|c| c.get()) == self.exec_id {
+            LOCAL_READY.with(|q| q.borrow_mut().push((self.exec_id, self.id)));
+        } else {
+            self.queue.push(self.id);
+        }
+    }
 }
 
 impl std::task::Wake for TaskWaker {
     fn wake(self: Arc<Self>) {
-        self.queue.push(self.id);
+        self.wake_id();
     }
     fn wake_by_ref(self: &Arc<Self>) {
-        self.queue.push(self.id);
+        self.wake_id();
     }
 }
 
@@ -126,6 +181,7 @@ struct TaskEntry {
 
 struct Inner {
     mode: Mode,
+    exec_id: u64,
     now_ns: Cell<u64>,
     real_anchor: Instant,
     next_task_id: Cell<u64>,
@@ -161,6 +217,7 @@ impl Executor {
         Executor {
             inner: Rc::new(Inner {
                 mode,
+                exec_id: NEXT_EXEC_ID.fetch_add(1, Ordering::Relaxed),
                 now_ns: Cell::new(0),
                 real_anchor: Instant::now(),
                 next_task_id: Cell::new(1),
@@ -186,8 +243,9 @@ impl Executor {
         let root_id = self.inner.spawn_inner(async move {
             *result2.borrow_mut() = Some(root.await);
         });
-        self.inner.wake_queue.push(root_id);
+        self.inner.wake_task(root_id);
 
+        let fast_local = self.inner.mode == Mode::Virtual;
         let mut ready: Vec<u64> = Vec::new();
         loop {
             // move freshly spawned tasks into the task table
@@ -198,6 +256,8 @@ impl Executor {
                     for (id, future) in incoming.drain(..) {
                         let waker = Waker::from(Arc::new(TaskWaker {
                             id,
+                            exec_id: self.inner.exec_id,
+                            fast_local,
                             queue: Arc::clone(&self.inner.wake_queue),
                         }));
                         tasks.insert(id, TaskEntry { future, waker });
@@ -207,6 +267,7 @@ impl Executor {
 
             ready.clear();
             self.inner.wake_queue.drain_into(&mut ready);
+            drain_local_ready(self.inner.exec_id, &mut ready);
             let mut polled_any = false;
             for &id in ready.iter() {
                 let entry = self.inner.tasks.borrow_mut().remove(&id);
@@ -247,18 +308,33 @@ impl Executor {
 
 struct CurrentGuard {
     prev: Option<Rc<Inner>>,
+    prev_exec: u64,
+    exec_id: u64,
 }
 
 impl CurrentGuard {
     fn install(inner: Rc<Inner>) -> Self {
+        let exec_id = inner.exec_id;
         let prev = CURRENT.with(|c| c.borrow_mut().replace(inner));
-        CurrentGuard { prev }
+        let prev_exec = ACTIVE_EXEC.with(|c| c.replace(exec_id));
+        CurrentGuard { prev, prev_exec, exec_id }
     }
 }
 
 impl Drop for CurrentGuard {
     fn drop(&mut self) {
         CURRENT.with(|c| *c.borrow_mut() = self.prev.take());
+        let prev_exec = self.prev_exec;
+        let exec_id = self.exec_id;
+        ACTIVE_EXEC.with(|c| c.set(prev_exec));
+        // purge this executor's leftover local wakeups (tasks that were
+        // still pending when the root finished); try_borrow so an unwind
+        // mid-push cannot double-panic
+        let _ = LOCAL_READY.try_with(|q| {
+            if let Ok(mut q) = q.try_borrow_mut() {
+                q.retain(|&(e, _)| e != exec_id);
+            }
+        });
     }
 }
 
@@ -276,6 +352,18 @@ impl Remote {
 }
 
 impl Inner {
+    /// Enqueue a wakeup for `id`, taking the virtual-mode thread-local
+    /// fast path when running on this executor's own thread.
+    fn wake_task(&self, id: u64) {
+        if self.mode == Mode::Virtual
+            && ACTIVE_EXEC.with(|c| c.get()) == self.exec_id
+        {
+            LOCAL_READY.with(|q| q.borrow_mut().push((self.exec_id, id)));
+        } else {
+            self.wake_queue.push(id);
+        }
+    }
+
     fn current_now(&self) -> SimInstant {
         match self.mode {
             Mode::Virtual => SimInstant(self.now_ns.get()),
@@ -390,7 +478,7 @@ pub fn spawn<T: 'static>(fut: impl Future<Output = T> + 'static) -> JoinHandle<T
                 w.wake();
             }
         });
-        inner.wake_queue.push(id);
+        inner.wake_task(id);
         id
     });
     JoinHandle { state, id }
@@ -650,6 +738,28 @@ mod tests {
             // an immediately-ready future wins over a zero timeout
             let r = timeout(Duration::from_millis(0), async { 1u8 }).await;
             assert_eq!(r, Ok(1));
+        });
+    }
+
+    #[test]
+    fn nested_virtual_executors_do_not_cross_wake() {
+        // The thread-local ready list tags entries with the executor id:
+        // an inner block_on must neither steal nor drop the outer
+        // executor's pending wakeups.
+        run_virtual(async {
+            let h = spawn(async {
+                sleep_ms(5.0).await;
+                7u32
+            });
+            let inner = Executor::new(Mode::Virtual).block_on(async {
+                let a = spawn(async {
+                    sleep_ms(1.0).await;
+                    1u32
+                });
+                a.await + 1
+            });
+            assert_eq!(inner, 2);
+            assert_eq!(h.await, 7);
         });
     }
 

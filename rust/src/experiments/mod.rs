@@ -12,11 +12,13 @@
 //! | ABL-*   | ours: rate/hop/policy sweeps | [`sweep`]             |
 //! | FIG7    | ours: fuse ∧ split feedback  | [`fig7`]              |
 //! | FIG8    | ours: multi-node cluster     | [`fig8`]              |
+//! | FIG9    | ours: telemetry @ 10⁶ reqs   | [`fig9`]              |
 
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod fig9;
 pub mod sweep;
 
 use std::rc::Rc;

@@ -30,6 +30,7 @@
 
 use crate::cluster::NodeId;
 use crate::config::{CostParams, FusionParams};
+use crate::util::intern::Sym;
 
 use super::{FnAttribution, GroupSample};
 
@@ -40,7 +41,8 @@ use super::{FnAttribution, GroupSample};
 /// billing ledger's trailing window.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FnSignals {
-    pub function: String,
+    /// interned function name (ISSUE 5: no `String` per window record)
+    pub function: Sym,
     /// attributed RAM (MiB): the whole instance for a singleton, the
     /// function's `fn_ram` share inside a fused group
     pub ram_mb: f64,
@@ -515,7 +517,7 @@ mod tests {
 
     fn signals(function: &str, ram_mb: f64, billed_ms: f64, self_ms: f64, gbs: f64) -> FnSignals {
         FnSignals {
-            function: function.into(),
+            function: Sym::intern(function),
             ram_mb,
             p95_ms: f64::NAN,
             gb_seconds: gbs,

@@ -48,6 +48,7 @@ use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::Sender;
 use crate::metrics::{AdmissionSample, Recorder, RegretSample};
+use crate::util::intern::Sym;
 
 pub use cost::{FnSignals, MergeContext, MergeDecision};
 
@@ -166,10 +167,15 @@ pub struct GroupSample {
 }
 
 /// Shared observation store + policy gate + defusion feedback state.
+///
+/// Pair-keyed state is interned (ISSUE 5): `observe_sync_call` runs once
+/// per remote sync call — the hottest fusion-layer path — and with
+/// `(Sym, Sym)` keys the per-call bookkeeping is a map probe on two
+/// `u32`s, no `String` clones.
 pub struct Observer {
     policy: FusionParams,
     /// fn name -> trust domain (from the app spec)
-    trust: HashMap<String, String>,
+    trust: HashMap<Sym, String>,
     state: RefCell<ObserverState>,
     tx: Sender<FusionRequest>,
     /// admission/regret telemetry sink (the platform's recorder; a private
@@ -180,16 +186,16 @@ pub struct Observer {
 #[derive(Default)]
 struct ObserverState {
     /// sync-call observation counts per (caller, callee)
-    counts: BTreeMap<(String, String), u64>,
+    counts: BTreeMap<(Sym, Sym), u64>,
     /// pairs already submitted to the merger (suppress duplicates)
-    requested: HashSet<(String, String)>,
+    requested: HashSet<(Sym, Sym)>,
     /// virtual-time (ms) before which a pair may not be re-requested
-    cooldown_until: HashMap<(String, String), f64>,
+    cooldown_until: HashMap<(Sym, Sym), f64>,
     /// feedback accounting per live fused group (key: sorted functions)
     groups: BTreeMap<Vec<String>, GroupFeedback>,
     /// latest windowed per-function signals (merge planner input, set by
     /// the platform tick each feedback window)
-    fn_signals: HashMap<String, FnSignals>,
+    fn_signals: HashMap<Sym, FnSignals>,
     /// latest per-node loads (merge planner's placement context; empty on
     /// single-node platforms — every pair is then treated as co-located)
     node_loads: Vec<NodeLoad>,
@@ -208,11 +214,11 @@ struct ObserverState {
     /// per version (hot pairs observe thousands of calls per window)
     signals_version: u64,
     /// per-pair admission memo: (version scored at, verdict)
-    admission_memo: HashMap<(String, String), (u64, bool)>,
+    admission_memo: HashMap<(Sym, Sym), (u64, bool)>,
     /// most recent admission score per pair (introspection)
-    admission_scores: HashMap<(String, String), f64>,
+    admission_scores: HashMap<(Sym, Sym), f64>,
     /// cost-admitted fuses awaiting the regret verdict
-    pending_fuses: HashMap<(String, String), PendingFuse>,
+    pending_fuses: HashMap<(Sym, Sym), PendingFuse>,
     /// total defusion-within-cooldown regrets observed
     regret_count: u64,
     /// online weight tuner (Some only under CostModel merge policy with
@@ -286,7 +292,7 @@ impl Observer {
     ) -> Self {
         let trust = app
             .functions()
-            .map(|f| (f.name.clone(), f.trust_domain.clone()))
+            .map(|f| (Sym::intern(&f.name), f.trust_domain.clone()))
             .collect();
         let mut state = ObserverState::default();
         if policy.merge_policy == MergePolicyKind::CostModel && policy.auto_tune {
@@ -300,12 +306,20 @@ impl Observer {
     }
 
     /// Record one observed remote synchronous call; may emit a
-    /// [`FusionRequest::Fuse`] if the policy admits the pair.
+    /// [`FusionRequest::Fuse`] if the policy admits the pair.  String
+    /// convenience wrapper over [`Observer::observe_sync_call_sym`].
     pub fn observe_sync_call(&self, caller: &str, callee: &str) {
-        let key = (caller.to_string(), callee.to_string());
+        self.observe_sync_call_sym(Sym::intern(caller), Sym::intern(callee));
+    }
+
+    /// The interned hot path the Function Handler calls once per remote
+    /// sync call: all bookkeeping is `(Sym, Sym)`-keyed, no allocation at
+    /// steady state.
+    pub fn observe_sync_call_sym(&self, caller: Sym, callee: Sym) {
+        let key = (caller, callee);
         let mut s = self.state.borrow_mut();
         let count = {
-            let c = s.counts.entry(key.clone()).or_insert(0);
+            let c = s.counts.entry(key).or_insert(0);
             *c += 1;
             *c
         };
@@ -324,7 +338,7 @@ impl Observer {
             }
         }
         if self.policy.respect_trust_domains {
-            let (ta, tb) = (self.trust.get(caller), self.trust.get(callee));
+            let (ta, tb) = (self.trust.get(&caller), self.trust.get(&callee));
             if ta.is_none() || tb.is_none() || ta != tb {
                 return;
             }
@@ -338,24 +352,27 @@ impl Observer {
         {
             return;
         }
-        s.requested.insert(key.clone());
+        s.requested.insert(key);
         drop(s);
         // Receiver gone (merger shut down) is benign: fusion simply stops.
-        let _ = self.tx.send(FusionRequest::Fuse { caller: key.0, callee: key.1 });
+        let _ = self.tx.send(FusionRequest::Fuse {
+            caller: caller.as_str().to_string(),
+            callee: callee.as_str().to_string(),
+        });
     }
 
     /// Score one candidate pair against the latest window signals; memoized
     /// per signals version so hot pairs cost one evaluation per window.
-    fn admit_merge(&self, s: &mut ObserverState, caller: &str, callee: &str) -> bool {
-        let key = (caller.to_string(), callee.to_string());
+    fn admit_merge(&self, s: &mut ObserverState, caller: Sym, callee: Sym) -> bool {
+        let key = (caller, callee);
         if let Some(&(version, verdict)) = s.admission_memo.get(&key) {
             if version == s.signals_version {
                 return verdict;
             }
         }
         let version = s.signals_version;
-        let caller_sig = s.fn_signals.get(caller).cloned();
-        let callee_sig = s.fn_signals.get(callee).cloned();
+        let caller_sig = s.fn_signals.get(&caller).cloned();
+        let callee_sig = s.fn_signals.get(&callee).cloned();
         let (Some(caller_sig), Some(callee_sig)) = (caller_sig, callee_sig) else {
             // the controller tick has not produced signals yet: refuse for
             // now, the next window re-scores
@@ -372,13 +389,13 @@ impl Observer {
             model.predict_merge(&caller_sig, &callee_sig, self.policy.cost.merge_threshold, &ctx);
         self.metrics.record_admission(AdmissionSample {
             t_ms: self.metrics.rel_now_ms(),
-            caller: caller.to_string(),
-            callee: callee.to_string(),
+            caller: caller.as_str().to_string(),
+            callee: callee.as_str().to_string(),
             score: decision.score,
             admitted: decision.admit,
         });
-        s.admission_scores.insert(key.clone(), decision.score);
-        s.admission_memo.insert(key.clone(), (version, decision.admit));
+        s.admission_scores.insert(key, decision.score);
+        s.admission_memo.insert(key, (version, decision.admit));
         if decision.admit {
             s.pending_fuses.insert(
                 key,
@@ -398,8 +415,8 @@ impl Observer {
         s: &ObserverState,
         caller_sig: &FnSignals,
         callee_sig: &FnSignals,
-        caller: &str,
-        callee: &str,
+        caller: Sym,
+        callee: Sym,
     ) -> MergeContext {
         // The share denominator counts only callees that are still REMOTE:
         // a callee already fused with the caller stopped being observed
@@ -407,20 +424,24 @@ impl Observer {
         // the denominator forever and underprice every later pair — while
         // the blocked-time rate this share scales is a trailing-window
         // signal that only ever contains the remaining remote waits.
-        let caller_group: Option<&Vec<String>> =
-            s.groups.keys().find(|k| k.iter().any(|f| f == caller));
+        let caller_name = caller.as_str();
+        // interned once up front: the counts loop below must compare plain
+        // integers, not take the interner lock per entry
+        let caller_group: Option<Vec<Sym>> = s
+            .groups
+            .keys()
+            .find(|k| k.iter().any(|f| f == caller_name))
+            .map(|g| g.iter().map(|f| Sym::intern(f)).collect());
         let outbound: u64 = s
             .counts
             .iter()
             .filter(|((a, b), _)| {
-                a == caller
-                    && !caller_group
-                        .map(|g| g.iter().any(|f| f == b))
-                        .unwrap_or(false)
+                *a == caller
+                    && !caller_group.as_ref().map(|g| g.contains(b)).unwrap_or(false)
             })
             .map(|(_, n)| *n)
             .sum();
-        let pair = s.counts.get(&(caller.to_string(), callee.to_string())).copied().unwrap_or(0);
+        let pair = s.counts.get(&(caller, callee)).copied().unwrap_or(0);
         let callee_share = if outbound > 0 { pair as f64 / outbound as f64 } else { 1.0 };
         let (colocated, target_headroom_mb) = match (caller_sig.node, callee_sig.node) {
             (Some(a), Some(b)) if a != b => {
@@ -468,14 +489,14 @@ impl Observer {
         let now = exec::now().as_millis_f64();
         let mut s = self.state.borrow_mut();
         s.signals_version += 1;
-        s.fn_signals = signals.into_iter().map(|f| (f.function.clone(), f)).collect();
+        s.fn_signals = signals.into_iter().map(|f| (f.function, f)).collect();
         // time-based recovery: a regret streak that locks admission out
         // would otherwise never see a survival to decay the weights back
         if let Some(t) = s.tuner.as_mut() {
             t.on_window();
         }
         let cooldown = self.policy.cooldown_ms;
-        let expired: Vec<((String, String), PendingFuse)> = s
+        let expired: Vec<((Sym, Sym), PendingFuse)> = s
             .pending_fuses
             .iter()
             .filter(|(_, p)| {
@@ -486,7 +507,7 @@ impl Observer {
                 (p.cutover && now - p.at_ms > cooldown)
                     || (!p.cutover && now - p.at_ms > 10.0 * cooldown)
             })
-            .map(|(k, p)| (k.clone(), *p))
+            .map(|(k, p)| (*k, *p))
             .collect();
         for (key, pending) in expired {
             s.pending_fuses.remove(&key);
@@ -513,15 +534,18 @@ impl Observer {
             return;
         }
         let now = exec::now().as_millis_f64();
-        let affected: Vec<((String, String), PendingFuse)> = s
+        // interned once: pending-fuse filtering compares integers
+        let fn_syms: Vec<Sym> = functions.iter().map(|f| Sym::intern(f)).collect();
+        let evicted_sym = evicted.map(Sym::intern);
+        let affected: Vec<((Sym, Sym), PendingFuse)> = s
             .pending_fuses
             .iter()
             .filter(|((a, b), _)| {
-                functions.iter().any(|f| f == a)
-                    && functions.iter().any(|f| f == b)
-                    && evicted.map(|e| a == e || b == e).unwrap_or(true)
+                fn_syms.contains(a)
+                    && fn_syms.contains(b)
+                    && evicted_sym.map(|e| *a == e || *b == e).unwrap_or(true)
             })
-            .map(|(k, p)| (k.clone(), *p))
+            .map(|(k, p)| (*k, *p))
             .collect();
         for (key, pending) in affected {
             s.pending_fuses.remove(&key);
@@ -554,8 +578,8 @@ impl Observer {
             };
             self.metrics.record_regret(RegretSample {
                 t_ms: self.metrics.rel_now_ms(),
-                caller: key.0.clone(),
-                callee: key.1.clone(),
+                caller: key.0.as_str().to_string(),
+                callee: key.1.as_str().to_string(),
                 w_latency,
                 w_ram,
                 w_gbs,
@@ -565,7 +589,7 @@ impl Observer {
 
     /// Merger feedback: the pair's fusion failed — re-allow after cooldown.
     pub fn fusion_failed(&self, caller: &str, callee: &str) {
-        let key = (caller.to_string(), callee.to_string());
+        let key = (Sym::intern(caller), Sym::intern(callee));
         let mut s = self.state.borrow_mut();
         s.requested.remove(&key);
         // never fused: the admission gets no regret/survival verdict
@@ -589,10 +613,10 @@ impl Observer {
     ) {
         let now = exec::now().as_millis_f64();
         let mut s = self.state.borrow_mut();
-        s.requested.insert((caller.to_string(), callee.to_string()));
+        let pair = (Sym::intern(caller), Sym::intern(callee));
+        s.requested.insert(pair);
         // the regret window runs from the cutover, not the admission (the
         // fuse pipeline's queue/build/boot time is not the planner's fault)
-        let pair = (caller.to_string(), callee.to_string());
         if let Some(pending) = s.pending_fuses.get_mut(&pair) {
             pending.at_ms = now;
             pending.cutover = true;
@@ -894,7 +918,7 @@ impl Observer {
                 if a == b {
                     continue;
                 }
-                let pair = (a.clone(), b.clone());
+                let pair = (Sym::intern(a), Sym::intern(b));
                 s.requested.remove(&pair);
                 s.cooldown_until.insert(pair, now + self.policy.cooldown_ms);
             }
@@ -928,11 +952,10 @@ impl Observer {
         let old = s.groups.remove(&key);
         let mut remaining = key;
         remaining.retain(|f| f != evicted);
+        let evicted_sym = Sym::intern(evicted);
         for member in &remaining {
-            for pair in [
-                (evicted.to_string(), member.clone()),
-                (member.clone(), evicted.to_string()),
-            ] {
+            let member_sym = Sym::intern(member);
+            for pair in [(evicted_sym, member_sym), (member_sym, evicted_sym)] {
                 s.requested.remove(&pair);
                 s.cooldown_until.insert(pair, now + self.policy.cooldown_ms);
             }
@@ -959,7 +982,7 @@ impl Observer {
         self.state
             .borrow()
             .cooldown_until
-            .get(&(caller.to_string(), callee.to_string()))
+            .get(&(Sym::intern(caller), Sym::intern(callee)))
             .map(|&until| exec::now().as_millis_f64() < until)
             .unwrap_or(false)
     }
@@ -970,7 +993,7 @@ impl Observer {
         self.state
             .borrow()
             .admission_scores
-            .get(&(caller.to_string(), callee.to_string()))
+            .get(&(Sym::intern(caller), Sym::intern(callee)))
             .copied()
             .unwrap_or(f64::NAN)
     }
@@ -1025,14 +1048,22 @@ impl Observer {
         self.state
             .borrow()
             .counts
-            .get(&(caller.to_string(), callee.to_string()))
+            .get(&(Sym::intern(caller), Sym::intern(callee)))
             .copied()
             .unwrap_or(0)
     }
 
-    /// The empirically observed call graph, sorted.
+    /// The empirically observed call graph, sorted by name.
     pub fn observed_graph(&self) -> Vec<((String, String), u64)> {
-        self.state.borrow().counts.iter().map(|(k, v)| (k.clone(), *v)).collect()
+        let mut v: Vec<((String, String), u64)> = self
+            .state
+            .borrow()
+            .counts
+            .iter()
+            .map(|((a, b), n)| ((a.as_str().to_string(), b.as_str().to_string()), *n))
+            .collect();
+        v.sort();
+        v
     }
 }
 

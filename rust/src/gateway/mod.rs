@@ -5,6 +5,11 @@
 //! in the API gateway"; on Kubernetes the equivalent is a Service backend
 //! update (paper §4).  Both reduce to the same primitive: swap a set of
 //! routes so no request ever observes a half-updated table.
+//!
+//! Routes are keyed by interned [`Sym`]s (ISSUE 5): `resolve_sym` is a
+//! hash probe + `Rc` bump — zero heap allocations per call — and the
+//! string-typed entry points intern once (allocation-free for any name
+//! seen before) so existing callers keep working unchanged.
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -12,6 +17,7 @@ use std::rc::Rc;
 
 use crate::containerd::Instance;
 use crate::error::{Error, Result};
+use crate::util::intern::Sym;
 
 /// Routing table handle (cheaply clonable, single-threaded interior
 /// mutability).
@@ -22,7 +28,7 @@ pub struct Gateway {
 
 #[derive(Default)]
 struct GatewayInner {
-    routes: RefCell<HashMap<String, Rc<Instance>>>,
+    routes: RefCell<HashMap<Sym, Rc<Instance>>>,
     /// bumped on every swap; lets tests assert atomicity
     version: Cell<u64>,
 }
@@ -33,8 +39,11 @@ impl Gateway {
     }
 
     /// Install or replace a single route (initial deployment).
-    pub fn set_route(&self, function: impl Into<String>, instance: Rc<Instance>) {
-        self.inner.routes.borrow_mut().insert(function.into(), instance);
+    pub fn set_route(&self, function: impl AsRef<str>, instance: Rc<Instance>) {
+        self.inner
+            .routes
+            .borrow_mut()
+            .insert(Sym::intern(function.as_ref()), instance);
         self.inner.version.set(self.inner.version.get() + 1);
     }
 
@@ -43,12 +52,13 @@ impl Gateway {
     pub fn swap_routes(&self, functions: &[String], instance: Rc<Instance>) -> Result<()> {
         let mut routes = self.inner.routes.borrow_mut();
         for f in functions {
-            if !routes.contains_key(f) {
-                return Err(Error::NoRoute(f.clone()));
+            match Sym::lookup(f) {
+                Some(sym) if routes.contains_key(&sym) => {}
+                _ => return Err(Error::NoRoute(f.clone())),
             }
         }
         for f in functions {
-            routes.insert(f.clone(), Rc::clone(&instance));
+            routes.insert(Sym::intern(f), Rc::clone(&instance));
         }
         self.inner.version.set(self.inner.version.get() + 1);
         Ok(())
@@ -60,25 +70,38 @@ impl Gateway {
     pub fn swap_routes_multi(&self, routes: &[(String, Rc<Instance>)]) -> Result<()> {
         let mut table = self.inner.routes.borrow_mut();
         for (f, _) in routes {
-            if !table.contains_key(f) {
-                return Err(Error::NoRoute(f.clone()));
+            match Sym::lookup(f) {
+                Some(sym) if table.contains_key(&sym) => {}
+                _ => return Err(Error::NoRoute(f.clone())),
             }
         }
         for (f, inst) in routes {
-            table.insert(f.clone(), Rc::clone(inst));
+            table.insert(Sym::intern(f), Rc::clone(inst));
         }
         self.inner.version.set(self.inner.version.get() + 1);
         Ok(())
     }
 
-    /// Resolve a function to its current instance.
+    /// Resolve a function name to its current instance.  Unknown names are
+    /// rejected **without** growing the interner (this is the path client
+    /// input reaches through the HTTP front end); the hot request path
+    /// carries a [`Sym`] and uses [`Self::resolve_sym`].
     pub fn resolve(&self, function: &str) -> Result<Rc<Instance>> {
+        match Sym::lookup(function) {
+            Some(sym) => self.resolve_sym(sym),
+            None => Err(Error::NoRoute(function.to_string())),
+        }
+    }
+
+    /// Resolve an interned function to its current instance.  Hash probe +
+    /// refcount bump: zero heap allocations on the hit path.
+    pub fn resolve_sym(&self, function: Sym) -> Result<Rc<Instance>> {
         self.inner
             .routes
             .borrow()
-            .get(function)
+            .get(&function)
             .cloned()
-            .ok_or_else(|| Error::NoRoute(function.to_string()))
+            .ok_or_else(|| Error::NoRoute(function.as_str().to_string()))
     }
 
     /// Snapshot of the full table (merger introspection, reports).
@@ -88,9 +111,23 @@ impl Gateway {
             .routes
             .borrow()
             .iter()
-            .map(|(k, inst)| (k.clone(), Rc::clone(inst)))
+            .map(|(k, inst)| (k.as_str().to_string(), Rc::clone(inst)))
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Interned snapshot (controller tick: no per-route `String`s), sorted
+    /// by function name (one `as_str` per route, not per comparison).
+    pub fn snapshot_syms(&self) -> Vec<(Sym, Rc<Instance>)> {
+        let mut v: Vec<(Sym, Rc<Instance>)> = self
+            .inner
+            .routes
+            .borrow()
+            .iter()
+            .map(|(k, inst)| (*k, Rc::clone(inst)))
+            .collect();
+        v.sort_by_cached_key(|(sym, _)| sym.as_str());
         v
     }
 
@@ -140,7 +177,9 @@ mod tests {
     fn resolve_and_miss() {
         let (_rt, gw, ia, _ib) = setup();
         assert_eq!(gw.resolve("a").unwrap().id(), ia.id());
+        assert_eq!(gw.resolve_sym(Sym::intern("a")).unwrap().id(), ia.id());
         assert!(matches!(gw.resolve("zz"), Err(Error::NoRoute(_))));
+        assert!(matches!(gw.resolve_sym(Sym::intern("zz")), Err(Error::NoRoute(_))));
     }
 
     #[test]
@@ -176,6 +215,10 @@ mod tests {
         assert_eq!(snap.len(), 2);
         assert_eq!(snap[0].0, "a");
         assert_eq!(snap[1].0, "b");
+        let syms = gw.snapshot_syms();
+        assert_eq!(syms.len(), 2);
+        assert_eq!(syms[0].0.as_str(), "a");
+        assert_eq!(syms[1].0.as_str(), "b");
     }
 
     #[test]

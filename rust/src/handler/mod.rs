@@ -9,6 +9,12 @@
 //! whose target resolves to the same instance are inlined — no gateway, no
 //! network, no serialization — which is exactly the fused fast path of
 //! paper Fig. 1.
+//!
+//! The per-hop plumbing is keyed by interned [`Sym`]s (ISSUE 5): resolving
+//! a route, starting/finishing in-flight accounting, recording the billing
+//! event, and reporting to the Observer all pass a `Copy` handle instead
+//! of cloning a `String` per hop, so a request's orchestration path does
+//! not touch the allocator for names at any depth.
 
 use std::future::Future;
 use std::pin::Pin;
@@ -26,6 +32,7 @@ use crate::gateway::Gateway;
 use crate::metrics::Recorder;
 use crate::netsim::{Fabric, Hop};
 use crate::runtime::ComputeService;
+use crate::util::intern::Sym;
 
 /// How child payloads are derived and responses combined (fixed, so vanilla
 /// and fused deployments produce byte-identical responses).
@@ -101,8 +108,13 @@ impl Dispatcher {
     /// Client-facing invocation of `function` through the full remote path.
     /// External clients have no node: the cross-node surcharge never
     /// applies to ingress, so single-node latencies match the seed exactly.
+    /// Unknown names are rejected without touching the interner (client
+    /// input must not grow the append-only table).
     pub async fn invoke(&self, function: &str, payload: Vec<f32>) -> Result<Vec<f32>> {
-        self.invoke_remote(function.to_string(), payload, 0, None).await
+        let Some(sym) = Sym::lookup(function) else {
+            return Err(Error::NoRoute(function.to_string()));
+        };
+        self.invoke_remote(sym, payload, 0, None).await
     }
 
     /// Full remote invocation: gateway -> (service) -> network -> handler.
@@ -111,7 +123,7 @@ impl Dispatcher {
     /// east-west [`Hop::CrossNode`] surcharge each way.
     fn invoke_remote(
         &self,
-        function: String,
+        function: Sym,
         payload: Vec<f32>,
         depth: u32,
         from_node: Option<NodeId>,
@@ -129,8 +141,10 @@ impl Dispatcher {
             // processing requests", paper §3).  The slot is attributed to
             // the target function (working-set RAM by in-flight ownership).
             let gateway_ms = d.fabric.sample(Hop::Gateway);
-            let inst = d.gateway.resolve(&function)?;
-            inst.request_started_for(&function);
+            let inst = d.gateway.resolve_sym(function)?;
+            // one interner round-trip per hop, not one per use below
+            let name = function.as_str();
+            inst.request_started_for(name);
             let crossed = match (from_node, d.cluster.node_of(inst.id())) {
                 (Some(from), Some(to)) => from != to,
                 _ => false,
@@ -154,7 +168,7 @@ impl Dispatcher {
                 exec::sleep_ms(d.config.latency.health_interval_ms).await;
             }
             if inst.state() == InstanceState::Terminated {
-                inst.request_finished_for(&function);
+                inst.request_finished_for(name);
                 return Err(Error::Request(format!(
                     "instance {} terminated before dispatch",
                     inst.id()
@@ -167,9 +181,9 @@ impl Dispatcher {
             let bill_start = exec::now();
             let dispatch_ms = d.fabric.sample(Hop::Dispatch);
             let result = this
-                .execute_function(Rc::clone(&inst), function.clone(), payload, depth, dispatch_ms)
+                .execute_function(Rc::clone(&inst), function, payload, depth, dispatch_ms)
                 .await;
-            inst.request_finished_for(&function);
+            inst.request_finished_for(name);
             // One billed invocation per remote arrival (§2.3): duration x
             // instance allocation, *including* time blocked on sync calls —
             // the double-billing the paper's fusion eliminates.
@@ -197,7 +211,7 @@ impl Dispatcher {
     fn execute_function(
         &self,
         inst: Rc<Instance>,
-        function: String,
+        function: Sym,
         input: Vec<f32>,
         depth: u32,
         upfront_ms: f64,
@@ -205,7 +219,9 @@ impl Dispatcher {
         let this = self.clone();
         Box::pin(async move {
             let d = &this.inner;
-            let spec = d.app.function(&function)?.clone();
+            // borrow, don't clone: the spec is immutable for the platform's
+            // lifetime and the clone copied every call edge per invocation
+            let spec = d.app.function(function.as_str())?;
 
             // compute body: real PJRT execution (mode-dependent charging);
             // charged together with the upfront hop as one timer
@@ -219,7 +235,7 @@ impl Dispatcher {
             // per-function handler attribution: the self time (hop + compute
             // + busy, no child waits) gives interior functions of a fused
             // group their own latency series for the defusion cost model
-            d.metrics.record_fn_latency(d.metrics.rel_now_ms(), function.clone(), self_ms);
+            d.metrics.record_fn_latency(d.metrics.rel_now_ms(), function, self_ms);
 
             // --- outbound calls ------------------------------------------------
             // Sync calls are issued concurrently and joined in spec order
@@ -228,14 +244,14 @@ impl Dispatcher {
             let mut sync_handles = Vec::new();
             for call in spec.calls.iter().filter(|c| c.mode == CallMode::Sync) {
                 let child_payload = this.child_payload(&out, call.scale);
-                let target_inst = d.gateway.resolve(&call.target)?;
+                let target = Sym::intern(&call.target);
+                let target_inst = d.gateway.resolve_sym(target)?;
                 let local = target_inst.id() == inst.id();
                 let fut: LocalBoxFuture<Result<Vec<f32>>> = if local {
                     // fused fast path: in-process call
                     d.metrics.bump("inline_calls");
                     let inline_ms = d.fabric.sample(Hop::Inline);
                     let this2 = this.clone();
-                    let target = call.target.clone();
                     let inst2 = Rc::clone(&inst);
                     Box::pin(async move {
                         this2
@@ -245,9 +261,9 @@ impl Dispatcher {
                 } else {
                     // remote sync call: THE fusion signal (paper §3)
                     d.metrics.bump("remote_sync_calls");
-                    d.observer.observe_sync_call(&function, &call.target);
+                    d.observer.observe_sync_call_sym(function, target);
                     this.invoke_remote(
-                        call.target.clone(),
+                        target,
                         child_payload,
                         depth + 1,
                         d.cluster.node_of(inst.id()),
@@ -264,10 +280,10 @@ impl Dispatcher {
             // draining instance is not reclaimed under detached local work)
             for call in spec.calls.iter().filter(|c| c.mode == CallMode::Async) {
                 let child_payload = this.child_payload(&out, call.scale);
-                let target_inst = d.gateway.resolve(&call.target)?;
+                let target = Sym::intern(&call.target);
+                let target_inst = d.gateway.resolve_sym(target)?;
                 let local = target_inst.id() == inst.id();
                 let this2 = this.clone();
-                let target = call.target.clone();
                 d.metrics.bump("async_calls");
                 if local {
                     let inline_ms = d.fabric.sample(Hop::Inline);

@@ -206,6 +206,28 @@ fn dispatch(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        Some("figure9") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/fig9"));
+            let mut p = experiments::fig9::Fig9Params::defaults(args.has("smoke"));
+            p.compute = compute_from(args);
+            p.requests = args.u64_or("requests", p.requests)?;
+            p.rate_rps = args.f64_or("rate", p.rate_rps)?;
+            p.seed = args.u64_or("seed", p.seed)?;
+            p.chain_len = args.u64_or("chain", p.chain_len as u64)? as usize;
+            p.feedback_interval_ms =
+                args.f64_or("feedback-interval-ms", p.feedback_interval_ms)?;
+            p.min_observations = args.u32_or("min-observations", p.min_observations)?;
+            if args.has("no-parity") {
+                p.parity = false;
+            }
+            let fig = experiments::fig9::run(&out, p)?;
+            println!("{}", fig.render());
+            println!("outputs written to {}", out.display());
+            if !fig.passed() {
+                return Err(provuse::Error::Runtime("FIG9 scale checks failed".into()));
+            }
+            Ok(())
+        }
         Some("ram-table") => {
             let out = std::path::PathBuf::from(args.str_or("out", "results/ram"));
             let fig = experiments::fig6::run(&out, workload_from(args)?, compute_from(args))?;
@@ -344,6 +366,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20   [--placement P]    fusion-affinity co-location + node-pressure\n\
                  \x20                      migration; --placement spread = measured\n\
                  \x20                      cross-node negative control)\n\
+                 \x20 figure9 [--smoke]    ours: telemetry pipeline at 10^6 requests\n\
+                 \x20   [--no-parity]      (windowed recording, bounded memory, verdict\n\
+                 \x20                      parity vs full retention; emits BENCH_scale.json)\n\
                  \x20 ram-table            §5.2 RAM reductions\n\
                  \x20 cost-table           TAB-COST: double-billing elimination in $\n\
                  \x20 sweep --dim D        ablations (rate|hop|policy|depth|arrival)\n\

@@ -202,7 +202,7 @@ impl Merger {
         //    after a split aren't judged against stale history.
         let baseline_p95_ms = {
             let now_ms = ctx.metrics.rel_now_ms();
-            let lookback = (ctx.observer.policy().feedback_interval_ms * 10.0).max(10_000.0);
+            let lookback = ctx.observer.policy().baseline_lookback_ms();
             ctx.metrics.p95_window(
                 (now_ms - lookback).max(0.0),
                 now_ms,

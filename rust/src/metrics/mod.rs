@@ -2,19 +2,110 @@
 //! per fused group), merge/split events, and named counters — everything
 //! the paper's evaluation section reports plus the feedback controller's
 //! observability surface.
+//!
+//! Since ISSUE 5 the recorder is a **two-tier pipeline**:
+//!
+//! * **Windowed shards** (always on) — per-function and end-to-end
+//!   time-bucketed rings keyed by interned [`Sym`]s, each bucket holding
+//!   the raw samples of one `bucket_ms` slice plus an incrementally
+//!   maintained [`Summary`] + [`LogHistogram`].  The controller-tick
+//!   signals (`fn_p95_window`, `fn_self_ms_window`, `p95_window`) read
+//!   *only* the target function's overlapping buckets — no scan over the
+//!   whole run's interleaved history, no per-tick allocation (a reusable
+//!   scratch buffer holds the sort).  Ring memory is bounded by
+//!   `buckets x bucket_ms` of retention regardless of run length.
+//! * **Full series** ([`RecordingLevel::Full`], the default) — the seed's
+//!   unbounded raw vectors, kept for experiments that export exact CSVs.
+//!   [`RecordingLevel::Windowed`] drops them, bounding recorder memory at
+//!   million-request scale (`figure9`); low-rate *event* series (merges,
+//!   splits, evicts, admissions, regrets) are retained at every level
+//!   because verdict parity checks need them.
+//!
+//! Exactness contract: windowed quantiles are computed from the retained
+//! raw samples with the same retain/sort/interpolate steps as
+//! [`Quantiles`], so for any trailing window inside the retention span the
+//! result is bit-identical across recording levels (the FIG7 golden test
+//! pins this).
 
-use std::cell::RefCell;
-use std::collections::BTreeMap;
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 
 use crate::cluster::NodeId;
 use crate::fusion::SplitReason;
-use crate::util::stats::Quantiles;
+use crate::util::intern::{GroupKey, Sym};
+use crate::util::stats::{quantile_sorted, LogHistogram, Quantiles, Summary};
 
 /// Minimum samples a latency window needs before its p95 is considered
 /// meaningful (shared by the feedback controller's window checks and the
 /// merger's baseline capture).
 pub const MIN_WINDOW_SAMPLES: usize = 5;
+
+/// How much raw telemetry the recorder retains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordingLevel {
+    /// Seed behavior: every sample of every series kept for the whole run
+    /// (exact CSVs; memory grows with request count).
+    Full,
+    /// Bounded: only the windowed ring shards + event series are kept.
+    /// Recorder memory is O(retention), independent of run length.
+    Windowed,
+}
+
+impl RecordingLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecordingLevel::Full => "full",
+            RecordingLevel::Windowed => "windowed",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "full" => Ok(RecordingLevel::Full),
+            "windowed" | "window" | "bounded" => Ok(RecordingLevel::Windowed),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown recording level `{other}` (available: full, windowed)"
+            ))),
+        }
+    }
+}
+
+/// Windowed-shard shape: ring of `buckets` time slices of `bucket_ms`
+/// each; retention = `buckets x bucket_ms`.
+#[derive(Debug, Clone)]
+pub struct RecordingConfig {
+    pub level: RecordingLevel,
+    pub bucket_ms: f64,
+    pub buckets: usize,
+}
+
+impl Default for RecordingConfig {
+    fn default() -> Self {
+        RecordingConfig { level: RecordingLevel::Full, bucket_ms: 1_000.0, buckets: 128 }
+    }
+}
+
+impl RecordingConfig {
+    /// Grow `bucket_ms` (keeping the ring length) until the retention span
+    /// covers `window_ms` — the platform calls this with twice the longest
+    /// trailing window any consumer queries (controller interval, merger
+    /// baseline lookback), so windowed answers are always complete.
+    pub fn ensure_retention_ms(&mut self, window_ms: f64) {
+        self.buckets = self.buckets.max(2);
+        if self.bucket_ms <= 0.0 {
+            self.bucket_ms = 1_000.0;
+        }
+        let retention = self.bucket_ms * self.buckets as f64;
+        if window_ms > retention {
+            self.bucket_ms = window_ms / self.buckets as f64;
+        }
+    }
+
+    pub fn retention_ms(&self) -> f64 {
+        self.bucket_ms * self.buckets as f64
+    }
+}
 
 /// One completed request.
 #[derive(Debug, Clone, Copy)]
@@ -210,34 +301,342 @@ pub struct EvictEvent {
     pub reason: SplitReason,
 }
 
+// ---------------------------------------------------------------------------
+// windowed ring shards
+// ---------------------------------------------------------------------------
+
+/// One `bucket_ms` time slice of a shard: raw samples plus incrementally
+/// maintained aggregates (running sum, [`Summary`], [`LogHistogram`]).
+struct Bucket {
+    /// absolute bucket number (`floor(t / bucket_ms)`); `u64::MAX` = vacant
+    index: u64,
+    /// raw `(t_ms, value)` samples in record order
+    samples: Vec<(f64, f64)>,
+    sum: f64,
+    summary: Summary,
+    hist: LogHistogram,
+}
+
+impl Bucket {
+    fn vacant() -> Bucket {
+        Bucket {
+            index: u64::MAX,
+            samples: Vec::new(),
+            sum: 0.0,
+            summary: Summary::new(),
+            hist: LogHistogram::new(),
+        }
+    }
+
+    /// Reset in place for a new time slice, keeping allocations.
+    fn reset(&mut self, index: u64) {
+        self.index = index;
+        self.samples.clear();
+        self.sum = 0.0;
+        self.summary = Summary::new();
+        self.hist.clear();
+    }
+
+    fn approx_bytes(&self) -> usize {
+        self.samples.capacity() * std::mem::size_of::<(f64, f64)>()
+            + self.hist.approx_bytes()
+            + std::mem::size_of::<Bucket>()
+    }
+}
+
+/// Time-bucketed ring over one value series.  Memory is bounded by the
+/// ring; trailing-window queries touch only the overlapping buckets.
+struct WindowShard {
+    bucket_ms: f64,
+    /// highest bucket index ever recorded (query upper clamp)
+    max_index: u64,
+    any: bool,
+    buckets: Vec<Bucket>,
+}
+
+impl WindowShard {
+    fn new(cfg: &RecordingConfig) -> WindowShard {
+        let n = cfg.buckets.max(2);
+        WindowShard {
+            bucket_ms: if cfg.bucket_ms > 0.0 { cfg.bucket_ms } else { 1_000.0 },
+            max_index: 0,
+            any: false,
+            buckets: (0..n).map(|_| Bucket::vacant()).collect(),
+        }
+    }
+
+    fn record(&mut self, t_ms: f64, value: f64) {
+        let abs = (t_ms.max(0.0) / self.bucket_ms) as u64;
+        let n = self.buckets.len() as u64;
+        let slot = (abs % n) as usize;
+        let b = &mut self.buckets[slot];
+        if b.index != abs {
+            if b.index != u64::MAX && b.index > abs {
+                // a straggler older than the slot's current slice: beyond
+                // retention, drop rather than corrupt the newer bucket
+                return;
+            }
+            b.reset(abs);
+        }
+        b.samples.push((t_ms, value));
+        b.sum += value;
+        b.summary.add(value);
+        b.hist.record(value);
+        if !self.any || abs > self.max_index {
+            self.max_index = abs;
+        }
+        self.any = true;
+    }
+
+    /// Absolute bucket range `[lo, hi)` overlapping `[from_ms, to_ms)`,
+    /// clamped to what the ring can hold (`hi - lo <= buckets`).
+    fn bucket_span(&self, from_ms: f64, to_ms: f64) -> Option<(u64, u64)> {
+        if !self.any || to_ms <= from_ms {
+            return None;
+        }
+        let lo = (from_ms.max(0.0) / self.bucket_ms) as u64;
+        let hi = ((to_ms.max(0.0) / self.bucket_ms).ceil() as u64)
+            .min(self.max_index.saturating_add(1));
+        if hi <= lo {
+            return None;
+        }
+        Some((lo.max(hi.saturating_sub(self.buckets.len() as u64)), hi))
+    }
+
+    /// Whether the ring still holds every bucket overlapping a window
+    /// starting at `from_ms` — i.e. the window is inside the retention
+    /// span.  Full-retention queries fall back to the raw series when this
+    /// is false, so the seed's any-window exactness contract survives.
+    fn covers(&self, from_ms: f64) -> bool {
+        if !self.any {
+            return true;
+        }
+        let lo = (from_ms.max(0.0) / self.bucket_ms) as u64;
+        lo + self.buckets.len() as u64 > self.max_index
+    }
+
+    /// Visit every sample value with `t` in `[from_ms, to_ms)`, ascending
+    /// bucket order.  Allocation-free; O(overlapping buckets + samples).
+    fn for_each_in(&self, from_ms: f64, to_ms: f64, f: &mut impl FnMut(f64)) {
+        let Some((lo, hi)) = self.bucket_span(from_ms, to_ms) else {
+            return;
+        };
+        let n = self.buckets.len() as u64;
+        for abs in lo..hi {
+            let b = &self.buckets[(abs % n) as usize];
+            if b.index != abs {
+                continue;
+            }
+            let start = b.index as f64 * self.bucket_ms;
+            let end = start + self.bucket_ms;
+            if start >= from_ms && end <= to_ms {
+                for &(_, v) in &b.samples {
+                    f(v);
+                }
+            } else {
+                for &(t, v) in &b.samples {
+                    if t >= from_ms && t < to_ms {
+                        f(v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sum of values in `[from_ms, to_ms)`: fully covered buckets
+    /// contribute their running `sum` (the O(#buckets) merge), edge
+    /// buckets are filtered sample-by-sample.
+    fn sum_in(&self, from_ms: f64, to_ms: f64) -> f64 {
+        let Some((lo, hi)) = self.bucket_span(from_ms, to_ms) else {
+            return 0.0;
+        };
+        let n = self.buckets.len() as u64;
+        let mut total = 0.0;
+        for abs in lo..hi {
+            let b = &self.buckets[(abs % n) as usize];
+            if b.index != abs {
+                continue;
+            }
+            let start = b.index as f64 * self.bucket_ms;
+            let end = start + self.bucket_ms;
+            if start >= from_ms && end <= to_ms {
+                total += b.sum;
+            } else {
+                for &(t, v) in &b.samples {
+                    if t >= from_ms && t < to_ms {
+                        total += v;
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Mean over `[from_ms, to_ms)` via the per-bucket [`Summary`]s
+    /// (O(#buckets); edge buckets included whole).
+    fn mean_approx(&self, from_ms: f64, to_ms: f64) -> f64 {
+        let Some((lo, hi)) = self.bucket_span(from_ms, to_ms) else {
+            return f64::NAN;
+        };
+        let n = self.buckets.len() as u64;
+        let mut count = 0u64;
+        let mut weighted = 0.0;
+        for abs in lo..hi {
+            let b = &self.buckets[(abs % n) as usize];
+            if b.index == abs && b.summary.count() > 0 {
+                count += b.summary.count();
+                weighted += b.summary.mean() * b.summary.count() as f64;
+            }
+        }
+        if count == 0 { f64::NAN } else { weighted / count as f64 }
+    }
+
+    /// Approximate quantile over `[from_ms, to_ms)` via the O(#buckets)
+    /// [`LogHistogram`] merge (edge buckets included whole — the cheap,
+    /// non-verdict telemetry read).
+    fn quantile_approx(&self, from_ms: f64, to_ms: f64, q: f64) -> f64 {
+        let Some((lo, hi)) = self.bucket_span(from_ms, to_ms) else {
+            return f64::NAN;
+        };
+        let n = self.buckets.len() as u64;
+        let mut merged = LogHistogram::new();
+        for abs in lo..hi {
+            let b = &self.buckets[(abs % n) as usize];
+            if b.index == abs {
+                merged.merge_from(&b.hist);
+            }
+        }
+        merged.q(q)
+    }
+
+    fn approx_bytes(&self) -> usize {
+        self.buckets.iter().map(Bucket::approx_bytes).sum::<usize>()
+            + std::mem::size_of::<WindowShard>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// recorder
+// ---------------------------------------------------------------------------
+
+/// Incremental time-weighted RAM mean (same accumulation order as the
+/// seed's `windows(2)` loop, so the result is bit-identical).
+#[derive(Default)]
+struct RamAccum {
+    n: u64,
+    first_mb: f64,
+    last_t: f64,
+    last_mb: f64,
+    weighted: f64,
+    span: f64,
+}
+
+impl RamAccum {
+    fn push(&mut self, t_ms: f64, mb: f64) {
+        if self.n == 0 {
+            self.first_mb = mb;
+        } else {
+            let dt = t_ms - self.last_t;
+            self.weighted += self.last_mb * dt;
+            self.span += dt;
+        }
+        self.last_t = t_ms;
+        self.last_mb = mb;
+        self.n += 1;
+    }
+
+    fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else if self.n < 2 || self.span <= 0.0 {
+            self.first_mb
+        } else {
+            self.weighted / self.span
+        }
+    }
+}
+
 /// Shared, single-threaded metrics sink (cheap `Rc` handle).
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct Recorder {
     inner: Rc<RecorderInner>,
 }
 
-#[derive(Default)]
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::with_config(RecordingConfig::default())
+    }
+}
+
 struct RecorderInner {
+    config: RecordingConfig,
+    // -- full-retention raw series (RecordingLevel::Full only) -------------
     latencies: RefCell<Vec<LatencySample>>,
     ram: RefCell<Vec<RamSample>>,
     node_ram: RefCell<Vec<NodeRamSample>>,
-    migrations: RefCell<Vec<MigrationEvent>>,
     group_ram: RefCell<Vec<GroupRamSample>>,
     fn_latencies: RefCell<Vec<FnSample>>,
     fn_ram: RefCell<Vec<FnRamSample>>,
+    // -- event series (every level: low-rate, verdict parity needs them) ---
+    migrations: RefCell<Vec<MigrationEvent>>,
     merges: RefCell<Vec<MergeEvent>>,
     splits: RefCell<Vec<SplitEvent>>,
     evicts: RefCell<Vec<EvictEvent>>,
     admissions: RefCell<Vec<AdmissionSample>>,
     regrets: RefCell<Vec<RegretSample>>,
+    // -- windowed shards (every level: the controller's signal source) -----
+    e2e: RefCell<WindowShard>,
+    fn_shards: RefCell<HashMap<Sym, WindowShard>>,
+    /// reusable sort buffer for window quantiles (zero steady-state alloc)
+    scratch: RefCell<Vec<f64>>,
+    ram_accum: RefCell<RamAccum>,
+    latency_count: Cell<u64>,
     counters: RefCell<BTreeMap<&'static str, u64>>,
     /// absolute virtual-time (ms) all recorded timestamps are relative to
-    epoch_ms: std::cell::Cell<f64>,
+    epoch_ms: Cell<f64>,
 }
 
 impl Recorder {
+    /// Full-retention recorder with the default shard shape (seed-compatible).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Recorder with an explicit recording level + shard shape.
+    pub fn with_config(config: RecordingConfig) -> Self {
+        let e2e = WindowShard::new(&config);
+        Recorder {
+            inner: Rc::new(RecorderInner {
+                config,
+                latencies: RefCell::new(Vec::new()),
+                ram: RefCell::new(Vec::new()),
+                node_ram: RefCell::new(Vec::new()),
+                group_ram: RefCell::new(Vec::new()),
+                fn_latencies: RefCell::new(Vec::new()),
+                fn_ram: RefCell::new(Vec::new()),
+                migrations: RefCell::new(Vec::new()),
+                merges: RefCell::new(Vec::new()),
+                splits: RefCell::new(Vec::new()),
+                evicts: RefCell::new(Vec::new()),
+                admissions: RefCell::new(Vec::new()),
+                regrets: RefCell::new(Vec::new()),
+                e2e: RefCell::new(e2e),
+                fn_shards: RefCell::new(HashMap::new()),
+                scratch: RefCell::new(Vec::new()),
+                ram_accum: RefCell::new(RamAccum::default()),
+                latency_count: Cell::new(0),
+                counters: RefCell::new(BTreeMap::new()),
+                epoch_ms: Cell::new(0.0),
+            }),
+        }
+    }
+
+    pub fn level(&self) -> RecordingLevel {
+        self.inner.config.level
+    }
+
+    fn full(&self) -> bool {
+        self.inner.config.level == RecordingLevel::Full
     }
 
     /// Anchor the time base at the current executor instant (set once, when
@@ -253,31 +652,66 @@ impl Recorder {
     }
 
     pub fn record_latency(&self, t_ms: f64, latency_ms: f64) {
-        self.inner.latencies.borrow_mut().push(LatencySample { t_ms, latency_ms });
+        if self.full() {
+            self.inner.latencies.borrow_mut().push(LatencySample { t_ms, latency_ms });
+        }
+        self.inner.e2e.borrow_mut().record(t_ms, latency_ms);
+        self.inner.latency_count.set(self.inner.latency_count.get() + 1);
     }
 
     pub fn record_ram(&self, t_ms: f64, total_mb: f64, instances: usize) {
-        self.inner.ram.borrow_mut().push(RamSample { t_ms, total_mb, instances });
+        if self.full() {
+            self.inner.ram.borrow_mut().push(RamSample { t_ms, total_mb, instances });
+        }
+        self.inner.ram_accum.borrow_mut().push(t_ms, total_mb);
     }
 
     pub fn record_node_ram(&self, sample: NodeRamSample) {
-        self.inner.node_ram.borrow_mut().push(sample);
+        if self.full() {
+            self.inner.node_ram.borrow_mut().push(sample);
+        }
     }
 
     pub fn record_migration(&self, event: MigrationEvent) {
         self.inner.migrations.borrow_mut().push(event);
     }
 
-    pub fn record_group_ram(&self, t_ms: f64, group: String, ram_mb: f64) {
-        self.inner.group_ram.borrow_mut().push(GroupRamSample { t_ms, group, ram_mb });
+    pub fn record_group_ram(&self, t_ms: f64, group: GroupKey, ram_mb: f64) {
+        if self.full() {
+            self.inner.group_ram.borrow_mut().push(GroupRamSample {
+                t_ms,
+                group: group.as_str().to_string(),
+                ram_mb,
+            });
+        }
     }
 
-    pub fn record_fn_latency(&self, t_ms: f64, function: String, handler_ms: f64) {
-        self.inner.fn_latencies.borrow_mut().push(FnSample { t_ms, function, handler_ms });
+    pub fn record_fn_latency(&self, t_ms: f64, function: Sym, handler_ms: f64) {
+        if self.full() {
+            self.inner.fn_latencies.borrow_mut().push(FnSample {
+                t_ms,
+                function: function.as_str().to_string(),
+                handler_ms,
+            });
+        }
+        let config = &self.inner.config;
+        self.inner
+            .fn_shards
+            .borrow_mut()
+            .entry(function)
+            .or_insert_with(|| WindowShard::new(config))
+            .record(t_ms, handler_ms);
     }
 
-    pub fn record_fn_ram(&self, t_ms: f64, group: String, function: String, ram_mb: f64) {
-        self.inner.fn_ram.borrow_mut().push(FnRamSample { t_ms, group, function, ram_mb });
+    pub fn record_fn_ram(&self, t_ms: f64, group: GroupKey, function: Sym, ram_mb: f64) {
+        if self.full() {
+            self.inner.fn_ram.borrow_mut().push(FnRamSample {
+                t_ms,
+                group: group.as_str().to_string(),
+                function: function.as_str().to_string(),
+                ram_mb,
+            });
+        }
     }
 
     pub fn record_merge(&self, event: MergeEvent) {
@@ -358,42 +792,142 @@ impl Recorder {
         self.inner.regrets.borrow().clone()
     }
 
+    /// Exact quantile of a shard window via the shared scratch buffer:
+    /// identical retain/sort/interpolate steps as [`Quantiles`], zero
+    /// steady-state allocation.  NaN when fewer than `min_n` samples.
+    fn shard_quantile(
+        &self,
+        shard: &WindowShard,
+        from_ms: f64,
+        to_ms: f64,
+        q: f64,
+        min_n: usize,
+    ) -> f64 {
+        let mut scratch = self.inner.scratch.borrow_mut();
+        scratch.clear();
+        shard.for_each_in(from_ms, to_ms, &mut |v| {
+            if v.is_finite() {
+                scratch.push(v);
+            }
+        });
+        if scratch.len() < min_n {
+            return f64::NAN;
+        }
+        scratch.sort_unstable_by(f64::total_cmp);
+        quantile_sorted(&scratch, q)
+    }
+
     /// p95 of one function's handler latencies over `[from_ms, to_ms)`, or
     /// NaN when the window holds fewer than `min_n` samples — the per-route
     /// signal the cost model attributes blame with.
     ///
-    /// `fn_latencies` is appended at completion time, so it is sorted by
-    /// `t_ms`; a binary search bounds the controller's per-tick work to the
-    /// trailing window instead of the whole run's history.
+    /// Reads only the function's own ring shard (no scan over the whole
+    /// run's interleaved history, no allocation at steady state).  Under
+    /// full retention, a window reaching back past the ring falls back to
+    /// the exact raw series (seed semantics for any window); under
+    /// windowed retention such a query is clipped to the retained span.
     pub fn fn_p95_window(&self, function: &str, from_ms: f64, to_ms: f64, min_n: usize) -> f64 {
+        // lookup, not intern: query misses must not grow the leaked table
+        match Sym::lookup(function) {
+            Some(sym) => self.fn_p95_window_sym(sym, from_ms, to_ms, min_n),
+            None => f64::NAN,
+        }
+    }
+
+    /// [`Self::fn_p95_window`] for callers already holding a [`Sym`] (the
+    /// controller tick: no interner round-trip per query).
+    pub fn fn_p95_window_sym(&self, function: Sym, from_ms: f64, to_ms: f64, min_n: usize) -> f64 {
+        {
+            let shards = self.inner.fn_shards.borrow();
+            match shards.get(&function) {
+                Some(shard) if !self.full() || shard.covers(from_ms) => {
+                    return self.shard_quantile(shard, from_ms, to_ms, 0.95, min_n.max(1));
+                }
+                Some(_) => {}
+                None => return f64::NAN,
+            }
+        }
+        // full retention, window older than the ring: exact legacy path
+        let name = function.as_str();
         let borrowed = self.inner.fn_latencies.borrow();
         let series: &[FnSample] = &borrowed;
         let start = series.partition_point(|s| s.t_ms < from_ms);
-        let q = Quantiles::from_samples(
-            series[start..]
-                .iter()
-                .take_while(|s| s.t_ms < to_ms)
-                .filter(|s| s.function == function)
-                .map(|s| s.handler_ms)
-                .collect(),
-        );
-        if q.len() >= min_n { q.p95() } else { f64::NAN }
+        let mut scratch = self.inner.scratch.borrow_mut();
+        scratch.clear();
+        for s in series[start..].iter().take_while(|s| s.t_ms < to_ms) {
+            if s.function == name && s.handler_ms.is_finite() {
+                scratch.push(s.handler_ms);
+            }
+        }
+        if scratch.len() < min_n.max(1) {
+            return f64::NAN;
+        }
+        scratch.sort_unstable_by(f64::total_cmp);
+        quantile_sorted(&scratch, 0.95)
     }
 
     /// Summed handler self-time (ms) of one function over `[from_ms,
     /// to_ms)` — with the billing ledger's windowed duration this yields
     /// the caller's blocked (double-billed) time, the merge planner's
-    /// hop-savings signal.  Same binary-search bound as [`Self::fn_p95_window`].
+    /// hop-savings signal.  Fully covered buckets contribute their running
+    /// sums (O(#buckets)); only edge buckets are walked sample-by-sample.
+    /// Same full-retention fallback as [`Self::fn_p95_window`].
     pub fn fn_self_ms_window(&self, function: &str, from_ms: f64, to_ms: f64) -> f64 {
+        match Sym::lookup(function) {
+            Some(sym) => self.fn_self_ms_window_sym(sym, from_ms, to_ms),
+            None => 0.0,
+        }
+    }
+
+    /// [`Self::fn_self_ms_window`] for callers already holding a [`Sym`].
+    pub fn fn_self_ms_window_sym(&self, function: Sym, from_ms: f64, to_ms: f64) -> f64 {
+        {
+            let shards = self.inner.fn_shards.borrow();
+            match shards.get(&function) {
+                Some(shard) if !self.full() || shard.covers(from_ms) => {
+                    return shard.sum_in(from_ms, to_ms);
+                }
+                Some(_) => {}
+                None => return 0.0,
+            }
+        }
+        let name = function.as_str();
         let borrowed = self.inner.fn_latencies.borrow();
         let series: &[FnSample] = &borrowed;
         let start = series.partition_point(|s| s.t_ms < from_ms);
         series[start..]
             .iter()
             .take_while(|s| s.t_ms < to_ms)
-            .filter(|s| s.function == function)
+            .filter(|s| s.function == name)
             .map(|s| s.handler_ms)
             .sum()
+    }
+
+    /// Approximate per-function p95 via the O(#buckets) histogram merge —
+    /// the cheap telemetry read for reports; verdict paths use the exact
+    /// [`Self::fn_p95_window`].
+    pub fn fn_p95_window_approx(&self, function: &str, from_ms: f64, to_ms: f64) -> f64 {
+        let Some(sym) = Sym::lookup(function) else {
+            return f64::NAN;
+        };
+        let shards = self.inner.fn_shards.borrow();
+        match shards.get(&sym) {
+            Some(shard) => shard.quantile_approx(from_ms, to_ms, 0.95),
+            None => f64::NAN,
+        }
+    }
+
+    /// Mean handler self-time over a window, merged from the per-bucket
+    /// incremental summaries (whole buckets; O(#buckets)).
+    pub fn fn_mean_window_approx(&self, function: &str, from_ms: f64, to_ms: f64) -> f64 {
+        let Some(sym) = Sym::lookup(function) else {
+            return f64::NAN;
+        };
+        let shards = self.inner.fn_shards.borrow();
+        match shards.get(&sym) {
+            Some(shard) => shard.mean_approx(from_ms, to_ms),
+            None => f64::NAN,
+        }
     }
 
     /// RAM attribution samples of one fused group (`+`-joined sorted names).
@@ -408,10 +942,11 @@ impl Recorder {
     }
 
     pub fn request_count(&self) -> usize {
-        self.inner.latencies.borrow().len()
+        self.inner.latency_count.get() as usize
     }
 
-    /// Quantiles over all request latencies.
+    /// Quantiles over all request latencies (full retention only; empty
+    /// under [`RecordingLevel::Windowed`]).
     pub fn latency_quantiles(&self) -> Quantiles {
         Quantiles::from_samples(
             self.inner.latencies.borrow().iter().map(|s| s.latency_ms).collect(),
@@ -420,6 +955,8 @@ impl Recorder {
 
     /// Quantiles over requests arriving in `[from_ms, to_ms)` — used to
     /// separate pre-merge and post-merge phases (paper Fig. 5 analysis).
+    /// Full retention only; windowed runs use [`Self::p95_window`] (exact
+    /// inside the retention span) or [`Self::p95_window_approx`].
     pub fn latency_quantiles_window(&self, from_ms: f64, to_ms: f64) -> Quantiles {
         Quantiles::from_samples(
             self.inner
@@ -433,30 +970,33 @@ impl Recorder {
     }
 
     /// p95 over requests arriving in `[from_ms, to_ms)`, or NaN when the
-    /// window holds fewer than `min_n` samples.
+    /// window holds fewer than `min_n` samples.  Full retention answers
+    /// from the raw series (any window); windowed retention answers from
+    /// the e2e ring shard — bit-identical for trailing windows inside the
+    /// retention span (the only windows the controller and merger ask for).
     pub fn p95_window(&self, from_ms: f64, to_ms: f64, min_n: usize) -> f64 {
-        let q = self.latency_quantiles_window(from_ms, to_ms);
-        if q.len() >= min_n { q.p95() } else { f64::NAN }
+        if self.full() {
+            let q = self.latency_quantiles_window(from_ms, to_ms);
+            return if q.len() >= min_n { q.p95() } else { f64::NAN };
+        }
+        self.shard_quantile(&self.inner.e2e.borrow(), from_ms, to_ms, 0.95, min_n.max(1))
     }
 
-    /// Time-weighted mean of the RAM series (MiB).
+    /// Approximate e2e p95 over a window via the histogram merge (works at
+    /// every recording level; O(#buckets)).
+    pub fn p95_window_approx(&self, from_ms: f64, to_ms: f64) -> f64 {
+        self.inner.e2e.borrow().quantile_approx(from_ms, to_ms, 0.95)
+    }
+
+    /// Time-weighted mean of the RAM series (MiB); maintained incrementally
+    /// so it is exact at every recording level.
     pub fn ram_mean_mb(&self) -> f64 {
-        let ram = self.inner.ram.borrow();
-        if ram.len() < 2 {
-            return ram.first().map(|s| s.total_mb).unwrap_or(f64::NAN);
-        }
-        let mut weighted = 0.0;
-        let mut span = 0.0;
-        for pair in ram.windows(2) {
-            let dt = pair[1].t_ms - pair[0].t_ms;
-            weighted += pair[0].total_mb * dt;
-            span += dt;
-        }
-        if span <= 0.0 { ram[0].total_mb } else { weighted / span }
+        self.inner.ram_accum.borrow().mean()
     }
 
     /// Steady-state RAM: time-weighted mean over the tail of the run
-    /// (after `from_ms`).
+    /// (after `from_ms`).  Needs the full series (NaN under
+    /// [`RecordingLevel::Windowed`]).
     pub fn ram_mean_mb_after(&self, from_ms: f64) -> f64 {
         let ram: Vec<RamSample> = self
             .inner
@@ -477,6 +1017,43 @@ impl Recorder {
             span += dt;
         }
         weighted / span
+    }
+
+    /// Approximate recorder heap footprint (bytes): every retained series
+    /// plus the ring shards.  The `figure9` scale run self-checks this
+    /// stays bounded under [`RecordingLevel::Windowed`].
+    pub fn approx_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let i = &self.inner;
+        let mut b = 0usize;
+        b += i.latencies.borrow().capacity() * size_of::<LatencySample>();
+        b += i.ram.borrow().capacity() * size_of::<RamSample>();
+        b += i.node_ram.borrow().capacity() * size_of::<NodeRamSample>();
+        b += i.group_ram.borrow().capacity() * size_of::<GroupRamSample>()
+            + i.group_ram.borrow().iter().map(|s| s.group.capacity()).sum::<usize>();
+        b += i.fn_latencies.borrow().capacity() * size_of::<FnSample>()
+            + i.fn_latencies.borrow().iter().map(|s| s.function.capacity()).sum::<usize>();
+        b += i.fn_ram.borrow().capacity() * size_of::<FnRamSample>()
+            + i.fn_ram
+                .borrow()
+                .iter()
+                .map(|s| s.group.capacity() + s.function.capacity())
+                .sum::<usize>();
+        b += i.migrations.borrow().capacity() * size_of::<MigrationEvent>();
+        b += i.merges.borrow().capacity() * size_of::<MergeEvent>();
+        b += i.splits.borrow().capacity() * size_of::<SplitEvent>();
+        b += i.evicts.borrow().capacity() * size_of::<EvictEvent>();
+        b += i.admissions.borrow().capacity() * size_of::<AdmissionSample>();
+        b += i.regrets.borrow().capacity() * size_of::<RegretSample>();
+        b += i.e2e.borrow().approx_bytes();
+        b += i
+            .fn_shards
+            .borrow()
+            .values()
+            .map(WindowShard::approx_bytes)
+            .sum::<usize>();
+        b += i.scratch.borrow().capacity() * size_of::<f64>();
+        b
     }
 
     /// CSV export of the latency time series (`t_ms,latency_ms`).
@@ -618,6 +1195,10 @@ impl Recorder {
 mod tests {
     use super::*;
 
+    fn sym(name: &str) -> Sym {
+        Sym::intern(name)
+    }
+
     #[test]
     fn quantiles_and_windows() {
         let r = Recorder::new();
@@ -677,8 +1258,8 @@ mod tests {
             duration_ms: 2.0,
             reason: SplitReason::RamCap,
         });
-        r.record_group_ram(4.0, "a+b".into(), 120.5);
-        r.record_group_ram(5.0, "c+d".into(), 80.0);
+        r.record_group_ram(4.0, GroupKey::from_name("a+b"), 120.5);
+        r.record_group_ram(5.0, GroupKey::from_name("c+d"), 80.0);
         assert_eq!(r.splits().len(), 1);
         assert_eq!(r.splits()[0].reason, SplitReason::RamCap);
         assert!(r.splits_csv().contains("ram_cap"));
@@ -692,10 +1273,10 @@ mod tests {
     fn fn_attribution_series_and_windows() {
         let r = Recorder::new();
         for i in 0..10 {
-            r.record_fn_latency(i as f64 * 100.0, "hot".into(), 200.0);
-            r.record_fn_latency(i as f64 * 100.0, "cool".into(), 10.0);
+            r.record_fn_latency(i as f64 * 100.0, sym("hot"), 200.0);
+            r.record_fn_latency(i as f64 * 100.0, sym("cool"), 10.0);
         }
-        r.record_fn_ram(50.0, "cool+hot".into(), "hot".into(), 120.0);
+        r.record_fn_ram(50.0, GroupKey::from_name("cool+hot"), sym("hot"), 120.0);
         assert_eq!(r.fn_latency_series().len(), 20);
         assert_eq!(r.fn_ram_series().len(), 1);
         // per-function windows are independent
@@ -797,14 +1378,157 @@ mod tests {
     fn fn_self_ms_window_sums_only_the_window() {
         let r = Recorder::new();
         for i in 0..10 {
-            r.record_fn_latency(i as f64 * 100.0, "hot".into(), 20.0);
-            r.record_fn_latency(i as f64 * 100.0, "cool".into(), 5.0);
+            r.record_fn_latency(i as f64 * 100.0, sym("hot"), 20.0);
+            r.record_fn_latency(i as f64 * 100.0, sym("cool"), 5.0);
         }
         assert_eq!(r.fn_self_ms_window("hot", 0.0, 1_000.0), 200.0);
         // [from, to) bounds, per-function filter, empty windows
         assert_eq!(r.fn_self_ms_window("hot", 0.0, 500.0), 100.0);
         assert_eq!(r.fn_self_ms_window("cool", 300.0, 600.0), 15.0);
         assert_eq!(r.fn_self_ms_window("ghost", 0.0, 1_000.0), 0.0);
+    }
+
+    // -- windowed recording level (ISSUE 5) -----------------------------------
+
+    fn windowed() -> Recorder {
+        Recorder::with_config(RecordingConfig {
+            level: RecordingLevel::Windowed,
+            ..RecordingConfig::default()
+        })
+    }
+
+    #[test]
+    fn windowed_drops_raw_series_but_keeps_events_and_counts() {
+        let r = windowed();
+        r.record_latency(1.0, 2.0);
+        r.record_ram(0.0, 100.0, 1);
+        r.record_ram(10.0, 100.0, 1);
+        r.record_fn_latency(1.0, sym("wf"), 5.0);
+        r.record_group_ram(1.0, GroupKey::from_name("wa+wb"), 50.0);
+        r.record_merge(MergeEvent { t_ms: 5.0, functions: vec!["wa".into()], duration_ms: 1.0 });
+        assert!(r.latencies().is_empty());
+        assert!(r.ram_series().is_empty());
+        assert!(r.fn_latency_series().is_empty());
+        assert!(r.group_ram_series().is_empty());
+        // ... but the bounded views keep working
+        assert_eq!(r.request_count(), 1);
+        assert_eq!(r.merges().len(), 1);
+        assert!((r.ram_mean_mb() - 100.0).abs() < 1e-12);
+        assert_eq!(r.fn_self_ms_window("wf", 0.0, 100.0), 5.0);
+    }
+
+    #[test]
+    fn windowed_trailing_queries_match_full_bit_for_bit() {
+        let full = Recorder::new();
+        let win = windowed();
+        let mut rng = crate::util::rng::Rng::new(17);
+        for i in 0..5_000 {
+            let t = i as f64 * 20.0; // 100s of traffic
+            let lat = rng.lognormal(80.0, 0.5);
+            let hot = rng.lognormal(30.0, 0.4);
+            for r in [&full, &win] {
+                r.record_latency(t, lat);
+                r.record_fn_latency(t, sym("wparity"), hot);
+            }
+        }
+        let to = 100_000.0;
+        for from in [99_000.0, 95_000.0, 60_000.0, 0.0] {
+            let a = full.p95_window(from, to, MIN_WINDOW_SAMPLES);
+            let b = win.p95_window(from, to, MIN_WINDOW_SAMPLES);
+            assert_eq!(a.to_bits(), b.to_bits(), "e2e p95 window [{from}, {to})");
+            let a = full.fn_p95_window("wparity", from, to, MIN_WINDOW_SAMPLES);
+            let b = win.fn_p95_window("wparity", from, to, MIN_WINDOW_SAMPLES);
+            assert_eq!(a.to_bits(), b.to_bits(), "fn p95 window [{from}, {to})");
+            let a = full.fn_self_ms_window("wparity", from, to);
+            let b = win.fn_self_ms_window("wparity", from, to);
+            assert_eq!(a.to_bits(), b.to_bits(), "fn self window [{from}, {to})");
+        }
+    }
+
+    #[test]
+    fn windowed_memory_stays_bounded_at_a_million_samples() {
+        // ISSUE 5 satellite: 10^6 synthetic samples, windowed mode stays
+        // under a fixed byte budget while full mode grows with the run.
+        let win = windowed();
+        let full = Recorder::new();
+        let f = sym("mbound");
+        for i in 0..1_000_000u64 {
+            let t = i as f64; // 1000s at 1000 samples/s
+            win.record_latency(t, 50.0 + (i % 100) as f64);
+            win.record_fn_latency(t, f, 10.0 + (i % 10) as f64);
+            full.record_latency(t, 50.0 + (i % 100) as f64);
+            full.record_fn_latency(t, f, 10.0 + (i % 10) as f64);
+        }
+        let win_bytes = win.approx_bytes();
+        let full_bytes = full.approx_bytes();
+        const BUDGET: usize = 32 * 1024 * 1024;
+        assert!(
+            win_bytes < BUDGET,
+            "windowed recorder used {win_bytes} bytes (budget {BUDGET})"
+        );
+        assert!(
+            full_bytes > win_bytes * 4,
+            "full retention ({full_bytes}) should dwarf windowed ({win_bytes})"
+        );
+        assert_eq!(win.request_count(), 1_000_000);
+        // the trailing window is still exact
+        assert!(win.fn_p95_window("mbound", 999_000.0, 1_000_000.0, 5).is_finite());
+    }
+
+    #[test]
+    fn approx_quantiles_track_exact_ones() {
+        let r = Recorder::new();
+        let mut rng = crate::util::rng::Rng::new(23);
+        for i in 0..20_000 {
+            r.record_latency(i as f64 * 5.0, rng.lognormal(100.0, 0.6));
+        }
+        let exact = r.p95_window(0.0, 100_000.0, 5);
+        let approx = r.p95_window_approx(0.0, 100_000.0);
+        let rel = (approx - exact).abs() / exact;
+        assert!(rel < 0.15, "approx {approx} vs exact {exact}");
+    }
+
+    #[test]
+    fn windowed_mean_merges_bucket_summaries() {
+        let r = Recorder::new();
+        let f = sym("meanfn");
+        // bucket 0: 10ms, bucket 1: 30ms -> whole-window mean 20
+        r.record_fn_latency(100.0, f, 10.0);
+        r.record_fn_latency(1_100.0, f, 30.0);
+        assert!((r.fn_mean_window_approx("meanfn", 0.0, 2_000.0) - 20.0).abs() < 1e-12);
+        assert!((r.fn_mean_window_approx("meanfn", 0.0, 1_000.0) - 10.0).abs() < 1e-12);
+        assert!(r.fn_mean_window_approx("ghost", 0.0, 2_000.0).is_nan());
+        assert!(r.fn_p95_window_approx("meanfn", 0.0, 2_000.0) >= 10.0);
+    }
+
+    #[test]
+    fn full_mode_windows_older_than_retention_stay_exact() {
+        // Full retention must answer ANY window exactly (seed contract):
+        // a query reaching back past the ring falls back to the raw series.
+        let r = Recorder::new(); // 128 s retention
+        let f = sym("longfn");
+        for i in 0..200_000u64 {
+            // 200 s at 1000 samples/s — ring holds only the last 128 s
+            r.record_fn_latency(i as f64, f, (i % 7) as f64);
+        }
+        assert_eq!(r.fn_p95_window("longfn", 0.0, 200_000.0, 5), 6.0);
+        let expected: f64 = (0..200_000u64).map(|i| (i % 7) as f64).sum();
+        assert_eq!(r.fn_self_ms_window("longfn", 0.0, 200_000.0), expected);
+        // trailing windows keep using the shard fast path
+        assert!(r.fn_p95_window("longfn", 199_000.0, 200_000.0, 5).is_finite());
+    }
+
+    #[test]
+    fn recording_config_retention_guard() {
+        let mut c = RecordingConfig::default();
+        let before = c.retention_ms();
+        c.ensure_retention_ms(before / 2.0);
+        assert_eq!(c.retention_ms(), before, "smaller windows never shrink retention");
+        c.ensure_retention_ms(before * 4.0);
+        assert!(c.retention_ms() >= before * 4.0 - 1e-9);
+        assert_eq!(RecordingLevel::parse("windowed").unwrap(), RecordingLevel::Windowed);
+        assert_eq!(RecordingLevel::parse("full").unwrap(), RecordingLevel::Full);
+        assert!(RecordingLevel::parse("???").is_err());
     }
 
     // -- working-set RAM attribution (ISSUE 3 satellite) ----------------------

@@ -26,6 +26,7 @@ use crate::merger::{Merger, MergerCtx};
 use crate::metrics::{NodeRamSample, Recorder};
 use crate::netsim::Fabric;
 use crate::runtime::{ArtifactSet, ComputeService};
+use crate::util::intern::{GroupKey, Sym};
 
 use deployer::Deployer;
 
@@ -145,7 +146,19 @@ impl Platform {
         let scheduler = Scheduler::new(config.cluster.placement, cluster.clone());
         let containers = cluster.control();
         let gateway = Gateway::new();
-        let metrics = Recorder::new();
+        // Windowed retention must cover every trailing window a consumer
+        // queries: the controller's feedback interval and the merger's
+        // baseline lookback (10x interval, min 10s) — doubled for slack.
+        let mut rec = config.recording.clone();
+        rec.ensure_retention_ms(config.fusion.baseline_lookback_ms() * 2.0);
+        // under windowed recording the billing ledger is bounded to the
+        // same horizon (it is O(requests) otherwise)
+        let billing_retention_ms = if rec.level == crate::metrics::RecordingLevel::Windowed {
+            rec.retention_ms()
+        } else {
+            0.0
+        };
+        let metrics = Recorder::with_config(rec);
         let fabric = Fabric::new(config.latency.clone(), config.seed);
 
         let compute = match config.compute {
@@ -193,7 +206,11 @@ impl Platform {
         // all recorded series share this epoch (deploy-complete instant)
         metrics.set_epoch_now();
 
-        let billing = BillingLedger::new();
+        let billing = if billing_retention_ms > 0.0 {
+            BillingLedger::windowed(billing_retention_ms)
+        } else {
+            BillingLedger::new()
+        };
         let dispatcher = Dispatcher::new(
             app.clone(),
             Rc::clone(&config),
@@ -285,6 +302,9 @@ impl Platform {
                 + config.latency.health_interval_ms
                     * config.latency.health_checks_required as f64;
             exec::spawn(async move {
+                // reused across ticks: interned member buffer for the
+                // canonical GroupKey lookup (zero steady-state allocation)
+                let mut member_syms: Vec<Sym> = Vec::new();
                 while !stop.get() {
                     exec::sleep_ms(interval).await;
                     if stop.get() {
@@ -296,15 +316,17 @@ impl Platform {
                     let mut samples = Vec::new();
                     // per-function RAM shares inside fused groups, reused by
                     // the merge-planner signals below
-                    let mut fused_ram_share: BTreeMap<String, f64> = BTreeMap::new();
+                    let mut fused_ram_share: BTreeMap<Sym, f64> = BTreeMap::new();
                     for inst in fused_groups_of(&gateway) {
                         let hosted = inst.functions();
                         let mut functions: Vec<String> =
                             hosted.iter().map(|(n, _)| n.clone()).collect();
                         functions.sort();
-                        let group_key = functions.join("+");
+                        member_syms.clear();
+                        member_syms.extend(functions.iter().map(|n| Sym::intern(n)));
+                        let group_key = GroupKey::from_members(&member_syms);
                         let ram_mb = inst.ram_mb();
-                        metrics.record_group_ram(t, group_key.clone(), ram_mb);
+                        metrics.record_group_ram(t, group_key, ram_mb);
                         // The e2e latency window is an *entry-route* signal:
                         // attributing it to every group would let one group's
                         // regression raise every other group's score (the
@@ -326,18 +348,19 @@ impl Platform {
                             crate::metrics::attribute_ram(ram_mb, &hosted, &in_flight);
                         let mut per_fn = Vec::with_capacity(shares.len());
                         for (name, fn_ram) in &shares {
-                            metrics.record_fn_ram(t, group_key.clone(), name.clone(), *fn_ram);
-                            fused_ram_share.insert(name.clone(), *fn_ram);
+                            let name_sym = Sym::intern(name);
+                            metrics.record_fn_ram(t, group_key, name_sym, *fn_ram);
+                            fused_ram_share.insert(name_sym, *fn_ram);
                             per_fn.push(FnAttribution {
                                 function: name.clone(),
                                 ram_mb: *fn_ram,
-                                p95_ms: metrics.fn_p95_window(
-                                    name,
+                                p95_ms: metrics.fn_p95_window_sym(
+                                    name_sym,
                                     from,
                                     t,
                                     crate::metrics::MIN_WINDOW_SAMPLES,
                                 ),
-                                gb_seconds: billing.gb_seconds_window(name, from, t),
+                                gb_seconds: billing.gb_seconds_window_sym(name_sym, from, t),
                             });
                         }
                         samples.push(GroupSample {
@@ -352,23 +375,23 @@ impl Platform {
                     // function (a singleton's attributed RAM is its whole
                     // instance — what fusing it would actually add)
                     let mut signals = Vec::new();
-                    for (function, inst) in gateway.snapshot() {
+                    for (function, inst) in gateway.snapshot_syms() {
                         let ram_mb = fused_ram_share
                             .get(&function)
                             .copied()
                             .unwrap_or_else(|| inst.ram_mb());
                         signals.push(FnSignals {
-                            function: function.clone(),
+                            function,
                             ram_mb,
-                            p95_ms: metrics.fn_p95_window(
-                                &function,
+                            p95_ms: metrics.fn_p95_window_sym(
+                                function,
                                 from,
                                 t,
                                 crate::metrics::MIN_WINDOW_SAMPLES,
                             ),
-                            gb_seconds: billing.gb_seconds_window(&function, from, t),
-                            billed_ms: billing.billed_ms_window(&function, from, t),
-                            self_ms: metrics.fn_self_ms_window(&function, from, t),
+                            gb_seconds: billing.gb_seconds_window_sym(function, from, t),
+                            billed_ms: billing.billed_ms_window_sym(function, from, t),
+                            self_ms: metrics.fn_self_ms_window_sym(function, from, t),
                             window_s,
                             node: cluster.node_of(inst.id()),
                         });

@@ -1,0 +1,212 @@
+//! String interning for the telemetry pipeline and the request hot path.
+//!
+//! Function names are the platform's universal key: every request hop, every
+//! telemetry sample, and every fusion decision is keyed by one.  The seed
+//! tree cloned a fresh `String` per hop and per sample; at figure-9 scale
+//! (10⁶+ requests) those clones dominate the allocator.  [`Sym`] replaces
+//! them with a `u32` handle into a process-wide table — `Copy`, `Eq` by
+//! integer compare, and resolvable back to `&'static str` for display and
+//! CSV export.  [`GroupKey`] does the same for fused-group identities,
+//! replacing the ad-hoc `functions.join("+")` the controller tick used to
+//! rebuild every interval.
+//!
+//! The table is append-only and global (a `Mutex` around two maps): interned
+//! names are leaked once, so `as_str` hands out `&'static str` without
+//! copying.  The set of function names and group identities in any run is
+//! tiny and bounded by the app spec, so the leak is a few hundred bytes for
+//! the lifetime of the process — the classic interner trade.
+//!
+//! Lock discipline: every public call acquires the mutex once and never
+//! re-enters (helpers that need name strings read `names` directly instead
+//! of calling `as_str`), so the API cannot self-deadlock.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Mutex, OnceLock};
+
+/// Interned function name: `Copy`, integer equality/ordering (interning
+/// order, *not* lexicographic — sort by [`Sym::as_str`] when name order
+/// matters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Sym(u32);
+
+/// Interned canonical fused-group identity: the `+`-joined, name-sorted
+/// member list, interned once when the group first forms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GroupKey(u32);
+
+struct GroupEntry {
+    /// the `+`-joined canonical name, itself interned
+    name: Sym,
+}
+
+#[derive(Default)]
+struct Interner {
+    by_name: HashMap<&'static str, u32>,
+    names: Vec<&'static str>,
+    group_by_members: HashMap<Box<[Sym]>, u32>,
+    groups: Vec<GroupEntry>,
+}
+
+impl Interner {
+    /// Intern `name` without allocating on the hit path.
+    fn intern_str(&mut self, name: &str) -> Sym {
+        if let Some(&id) = self.by_name.get(name) {
+            return Sym(id);
+        }
+        self.intern_owned(name.to_string())
+    }
+
+    /// Intern an already-owned string (single allocation path).
+    fn intern_owned(&mut self, name: String) -> Sym {
+        if let Some(&id) = self.by_name.get(name.as_str()) {
+            return Sym(id);
+        }
+        let leaked: &'static str = Box::leak(name.into_boxed_str());
+        let id = self.names.len() as u32;
+        self.names.push(leaked);
+        self.by_name.insert(leaked, id);
+        Sym(id)
+    }
+}
+
+fn table() -> &'static Mutex<Interner> {
+    static TABLE: OnceLock<Mutex<Interner>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(Interner::default()))
+}
+
+impl Sym {
+    /// Intern `name` (allocation-free when already interned).
+    pub fn intern(name: &str) -> Sym {
+        table().lock().unwrap().intern_str(name)
+    }
+
+    /// Resolve an already-interned name **without inserting** — the
+    /// untrusted-input path: the table is append-only and leaks each name
+    /// for the process lifetime, so gateway lookups fed by arbitrary
+    /// client strings must not grow it (every legitimately routable name
+    /// was interned at deploy time).
+    pub fn lookup(name: &str) -> Option<Sym> {
+        table().lock().unwrap().by_name.get(name).copied().map(Sym)
+    }
+
+    /// The interned name (leaked once at interning time, so `'static`).
+    pub fn as_str(self) -> &'static str {
+        table().lock().unwrap().names[self.0 as usize]
+    }
+}
+
+impl fmt::Display for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl From<&str> for Sym {
+    fn from(s: &str) -> Sym {
+        Sym::intern(s)
+    }
+}
+
+impl GroupKey {
+    /// Intern the group identified by `members`, which **must already be
+    /// sorted by name** (the canonical group order every layer uses).
+    /// Allocation-free once the group has been seen — the per-tick path.
+    pub fn from_members(members: &[Sym]) -> GroupKey {
+        let mut t = table().lock().unwrap();
+        debug_assert!(
+            members
+                .windows(2)
+                .all(|w| t.names[w[0].0 as usize] <= t.names[w[1].0 as usize]),
+            "GroupKey members must be sorted by name"
+        );
+        if let Some(&id) = t.group_by_members.get(members) {
+            return GroupKey(id);
+        }
+        let joined = members
+            .iter()
+            .map(|s| t.names[s.0 as usize])
+            .collect::<Vec<&str>>()
+            .join("+");
+        let name = t.intern_owned(joined);
+        let id = t.groups.len() as u32;
+        t.group_by_members
+            .insert(members.to_vec().into_boxed_slice(), id);
+        t.groups.push(GroupEntry { name });
+        GroupKey(id)
+    }
+
+    /// Intern a group from its canonical `+`-joined name (report/test
+    /// convenience; members are derived by splitting on `+`).
+    pub fn from_name(name: &str) -> GroupKey {
+        let members: Vec<Sym> = name.split('+').map(Sym::intern).collect();
+        GroupKey::from_members(&members)
+    }
+
+    /// The canonical `+`-joined name as an interned symbol.
+    pub fn name(self) -> Sym {
+        table().lock().unwrap().groups[self.0 as usize].name
+    }
+
+    /// The canonical `+`-joined name.
+    pub fn as_str(self) -> &'static str {
+        let t = table().lock().unwrap();
+        let sym = t.groups[self.0 as usize].name;
+        t.names[sym.0 as usize]
+    }
+}
+
+impl fmt::Display for GroupKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent_and_stable() {
+        let a = Sym::intern("intern-test-a");
+        let b = Sym::intern("intern-test-b");
+        assert_ne!(a, b);
+        assert_eq!(a, Sym::intern("intern-test-a"));
+        assert_eq!(a.as_str(), "intern-test-a");
+        assert_eq!(b.to_string(), "intern-test-b");
+        let c: Sym = "intern-test-a".into();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn lookup_never_inserts() {
+        assert!(Sym::lookup("intern-test-never-interned").is_none());
+        // ... even after the probe, the name is still absent
+        assert!(Sym::lookup("intern-test-never-interned").is_none());
+        let s = Sym::intern("intern-test-looked-up");
+        assert_eq!(Sym::lookup("intern-test-looked-up"), Some(s));
+    }
+
+    #[test]
+    fn group_key_canonical_name_and_cache() {
+        let a = Sym::intern("ga");
+        let b = Sym::intern("gb");
+        let k = GroupKey::from_members(&[a, b]);
+        assert_eq!(k.as_str(), "ga+gb");
+        assert_eq!(k.name().as_str(), "ga+gb");
+        // second interning hits the cache and returns the same key
+        assert_eq!(k, GroupKey::from_members(&[a, b]));
+        // name-based interning resolves to the identical key
+        assert_eq!(k, GroupKey::from_name("ga+gb"));
+        // a different membership is a different key
+        let c = Sym::intern("gc");
+        assert_ne!(k, GroupKey::from_members(&[a, c]));
+    }
+
+    #[test]
+    fn singleton_group_round_trips() {
+        let k = GroupKey::from_name("solo-fn");
+        assert_eq!(k.as_str(), "solo-fn");
+        assert_eq!(k, GroupKey::from_members(&[Sym::intern("solo-fn")]));
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod intern;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -54,7 +54,9 @@ pub struct Quantiles {
 impl Quantiles {
     pub fn from_samples(mut samples: Vec<f64>) -> Self {
         samples.retain(|x| x.is_finite());
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: total order, no unwrap-on-NaN panic path, and faster
+        // than partial_cmp (no Option in the comparator)
+        samples.sort_unstable_by(f64::total_cmp);
         Quantiles { sorted: samples }
     }
 
@@ -67,19 +69,7 @@ impl Quantiles {
 
     /// Quantile by linear interpolation; `q` in `[0, 1]`.
     pub fn q(&self, q: f64) -> f64 {
-        if self.sorted.is_empty() {
-            return f64::NAN;
-        }
-        let q = q.clamp(0.0, 1.0);
-        let pos = q * (self.sorted.len() - 1) as f64;
-        let lo = pos.floor() as usize;
-        let hi = pos.ceil() as usize;
-        if lo == hi {
-            self.sorted[lo]
-        } else {
-            let frac = pos - lo as f64;
-            self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
-        }
+        quantile_sorted(&self.sorted, q)
     }
 
     pub fn median(&self) -> f64 {
@@ -97,6 +87,26 @@ impl Quantiles {
         } else {
             self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
         }
+    }
+}
+
+/// Quantile by linear interpolation over an **already-sorted** slice —
+/// the allocation-free primitive behind [`Quantiles::q`], shared with the
+/// metrics recorder's windowed shards so both paths are bit-identical by
+/// construction.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
     }
 }
 
@@ -125,13 +135,42 @@ impl LogHistogram {
         LogHistogram { counts: vec![0; SUB * OCTAVES], unit_ns: 1.0, total: 0, sum: 0.0 }
     }
 
+    /// Bucket index = `floor(log2(v / unit) * SUB)`, computed from the IEEE
+    /// exponent + mantissa bits instead of `f64::log2` (ISSUE 5 satellite:
+    /// a transcendental per `record` on the hot path for what is an integer
+    /// question).  The exponent field *is* `floor(log2 r)` for normal
+    /// `r >= 1`, and the sub-bucket is how many octave boundaries
+    /// `2^(j/SUB)` the mantissa clears — a ≤7-step table walk.
     fn index(&self, v: f64) -> usize {
+        // boundaries 2^(j/8) for j = 0..8 within one octave
+        const SUB_BOUNDS: [f64; SUB] = [
+            1.0,
+            1.0905077326652577, // 2^(1/8)
+            1.189207115002721,  // 2^(2/8)
+            1.2968395546510096, // 2^(3/8)
+            1.4142135623730951, // 2^(4/8)
+            1.5422108254079407, // 2^(5/8)
+            1.681792830507429,  // 2^(6/8)
+            1.8340080864093424, // 2^(7/8)
+        ];
         if v < self.unit_ns {
             return 0;
         }
-        let l = (v / self.unit_ns).log2();
-        let idx = (l * SUB as f64) as usize;
-        idx.min(self.counts.len() - 1)
+        let r = v / self.unit_ns;
+        if r < 1.0 {
+            // v ~ unit but the division rounded below 1 (negative exponent)
+            return 0;
+        }
+        let bits = r.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as usize - 1023; // floor(log2 r), r >= 1
+        let mantissa = bits & ((1u64 << 52) - 1);
+        // the mantissa re-biased into [1, 2): r / 2^exp
+        let frac = f64::from_bits(mantissa | (1023u64 << 52));
+        let mut sub = 0usize;
+        while sub + 1 < SUB && frac >= SUB_BOUNDS[sub + 1] {
+            sub += 1;
+        }
+        (exp * SUB + sub).min(self.counts.len() - 1)
     }
 
     pub fn record(&mut self, v: f64) {
@@ -149,6 +188,30 @@ impl LogHistogram {
     }
     pub fn mean(&self) -> f64 {
         if self.total == 0 { f64::NAN } else { self.sum / self.total as f64 }
+    }
+
+    /// Reset in place, keeping the bucket allocation (ring-shard reuse).
+    pub fn clear(&mut self) {
+        self.counts.fill(0);
+        self.total = 0;
+        self.sum = 0.0;
+    }
+
+    /// Accumulate another histogram's counts (same unit/bucketing) — the
+    /// O(#buckets) merge the windowed telemetry shards use for approximate
+    /// cross-bucket quantiles.
+    pub fn merge_from(&mut self, other: &LogHistogram) {
+        for (dst, src) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *dst += src;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+
+    /// Heap footprint (memory-accounting support for the recorder's
+    /// bounded-memory self-checks).
+    pub fn approx_bytes(&self) -> usize {
+        self.counts.capacity() * std::mem::size_of::<u64>()
     }
 
     /// Approximate quantile (upper edge of the containing bucket).
@@ -260,5 +323,62 @@ mod tests {
         h.record(f64::NAN);
         h.record(-5.0);
         assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn integer_bucketing_matches_log2_bucketing() {
+        // ISSUE 5 satellite: the bit-twiddled `index` must agree with the
+        // old `floor(log2(v/unit) * SUB)` formula it replaced.
+        let h = LogHistogram::new();
+        let old_index = |v: f64| -> usize {
+            if v < 1.0 {
+                return 0;
+            }
+            let l = v.log2();
+            let idx = (l * SUB as f64) as usize;
+            idx.min(SUB * OCTAVES - 1)
+        };
+        // hand-picked non-boundary values across the range + the clamp edge
+        for v in [0.0, 0.5, 1.0, 1.3, 2.0, 3.7, 100.0, 1e6, 1e9, 1e300] {
+            assert_eq!(h.index(v), old_index(v), "v = {v}");
+        }
+        // broad randomized agreement (lognormal spans many octaves)
+        let mut rng = crate::util::rng::Rng::new(42);
+        for _ in 0..20_000 {
+            let v = rng.lognormal(1e6, 2.0);
+            assert_eq!(h.index(v), old_index(v), "v = {v}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_clear_and_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in [10.0, 100.0, 1_000.0] {
+            a.record(v);
+        }
+        for v in [20.0, 200.0] {
+            b.record(v);
+        }
+        let mut merged = LogHistogram::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        assert_eq!(merged.count(), 5);
+        assert!((merged.mean() - (10.0 + 100.0 + 1_000.0 + 20.0 + 200.0) / 5.0).abs() < 1e-9);
+        a.clear();
+        assert_eq!(a.count(), 0);
+        assert!(a.mean().is_nan());
+        a.record(50.0);
+        assert_eq!(a.count(), 1);
+    }
+
+    #[test]
+    fn quantile_sorted_matches_quantiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let q = Quantiles::from_samples(v.clone());
+        for p in [0.0, 0.25, 0.5, 0.95, 1.0] {
+            assert_eq!(q.q(p), quantile_sorted(&v, p));
+        }
+        assert!(quantile_sorted(&[], 0.5).is_nan());
     }
 }

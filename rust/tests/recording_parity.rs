@@ -1,0 +1,139 @@
+//! ISSUE 5 golden test: the interned, windowed telemetry pipeline must not
+//! change a single platform decision.  The FIG7 `--app mixed` admission
+//! scenario (light pair admitted, heavy pair churn-gated, cold pair below
+//! threshold) runs twice under a pinned seed — full retention vs windowed
+//! retention — and every verdict (admission evaluations with bit-exact
+//! scores, merges, splits, evicts) plus a sample of trailing p95 windows
+//! must be **bit-identical** across the two recording levels.
+
+use std::rc::Rc;
+
+use provuse::apps;
+use provuse::config::{ComputeMode, MergePolicyKind, PlatformConfig, SplitPolicyKind};
+use provuse::config::WorkloadConfig;
+use provuse::exec::{self, run_virtual};
+use provuse::metrics::{RecordingLevel, MIN_WINDOW_SAMPLES};
+use provuse::platform::Platform;
+use provuse::workload::{self, Arrival};
+
+const SEED: u64 = 77;
+
+fn mixed_config(level: RecordingLevel) -> PlatformConfig {
+    let mut cfg = PlatformConfig::tiny()
+        .with_compute(ComputeMode::Disabled)
+        .with_seed(SEED)
+        .with_recording(level);
+    cfg.latency.image_build_ms = 300.0;
+    cfg.latency.boot_ms = 150.0;
+    cfg.fusion.min_observations = 3;
+    cfg.fusion.feedback_interval_ms = 1_000.0;
+    cfg.fusion.merge_policy = MergePolicyKind::CostModel;
+    cfg.fusion.split_policy = SplitPolicyKind::CostModel;
+    cfg.fusion.max_group_ram_mb = 256.0;
+    cfg
+}
+
+struct MixedOutcome {
+    /// canonical verdict transcript, f64s rendered bit-exactly
+    verdicts: Vec<String>,
+    /// trailing-window signals per function, as raw bits
+    windows: Vec<(String, u64, u64)>,
+    light_group: Vec<String>,
+    heavy_group: Vec<String>,
+    failures: u64,
+}
+
+fn run_mixed(level: RecordingLevel) -> MixedOutcome {
+    run_virtual(async move {
+        let p = Platform::deploy(apps::by_name("mixed").unwrap(), mixed_config(level))
+            .await
+            .unwrap();
+        let wl = |requests: u64, rate_rps: f64| WorkloadConfig {
+            requests,
+            rate_rps,
+            seed: SEED,
+            timeout_ms: 60_000.0,
+        };
+        let light = exec::spawn(workload::run_targeted(
+            Rc::clone(&p),
+            wl(300, 15.0),
+            Arrival::Constant,
+            Some("light_api"),
+        ));
+        let heavy = exec::spawn(workload::run_targeted(
+            Rc::clone(&p),
+            wl(300, 15.0),
+            Arrival::Constant,
+            Some("heavy_api"),
+        ));
+        let cold = exec::spawn(workload::run_targeted(
+            Rc::clone(&p),
+            wl(10, 0.5),
+            Arrival::Constant,
+            Some("cold_api"),
+        ));
+        let mut failures = 0;
+        for handle in [light, heavy, cold] {
+            let report = handle.await.unwrap();
+            failures += report.failed;
+        }
+        exec::sleep_ms(15_000.0).await;
+
+        let m = &p.metrics;
+        // one transcript definition for every parity check (FIG9 + here)
+        let verdicts = provuse::experiments::fig9::verdict_transcript(m);
+        // trailing p95 / self-time windows: the controller's own signal
+        // reads, sampled at the (deterministic) end of the run
+        let now = m.rel_now_ms();
+        let from = now - 5_000.0;
+        let mut windows = Vec::new();
+        for f in ["light_api", "light_fmt", "heavy_api", "heavy_model", "cold_api"] {
+            windows.push((
+                f.to_string(),
+                m.fn_p95_window(f, from, now, MIN_WINDOW_SAMPLES).to_bits(),
+                m.fn_self_ms_window(f, from, now).to_bits(),
+            ));
+        }
+        let outcome = MixedOutcome {
+            verdicts,
+            windows,
+            light_group: p.group_members("light_api"),
+            heavy_group: p.group_members("heavy_api"),
+            failures,
+        };
+        p.shutdown();
+        outcome
+    })
+}
+
+#[test]
+fn mixed_verdicts_and_windows_identical_across_recording_levels() {
+    let full = run_mixed(RecordingLevel::Full);
+    let windowed = run_mixed(RecordingLevel::Windowed);
+
+    assert_eq!(full.failures, 0, "full-retention run dropped requests");
+    assert_eq!(windowed.failures, 0, "windowed run dropped requests");
+
+    // the golden scenario itself: the planner admitted the hot light pair
+    // and refused the heavy one
+    assert_eq!(
+        full.light_group,
+        vec!["light_api".to_string(), "light_fmt".to_string()],
+        "light pair must fuse under cost admission"
+    );
+    assert_eq!(
+        full.heavy_group,
+        vec!["heavy_api".to_string()],
+        "heavy pair must stay unfused (churn gate)"
+    );
+    assert!(
+        full.verdicts.iter().any(|v| v.starts_with("admission")),
+        "no admission evaluations recorded"
+    );
+
+    // the actual golden assertion: recording level changes NOTHING
+    assert_eq!(full.verdicts, windowed.verdicts, "fusion verdicts diverged");
+    assert_eq!(full.windows, windowed.windows, "trailing window signals diverged");
+    assert_eq!(full.light_group, windowed.light_group);
+    assert_eq!(full.heavy_group, windowed.heavy_group);
+}

@@ -1,23 +1,27 @@
-//! Live instance migration: move a serving instance to another node with
-//! zero dropped requests.
+//! Live migration: move a serving replica set to another node with zero
+//! dropped requests, one replica at a time.
 //!
-//! Pipeline per migration (the Merger cutover contract, re-targeted):
+//! Pipeline per replica (the Merger cutover contract, re-targeted):
 //!
-//! 1. resolve the live instance through the gateway and verify the
+//! 1. resolve the route's replica set through the gateway and verify the
 //!    sampled membership still matches the live topology (staleness gate —
 //!    a racing fuse/split/evict aborts the migration, never corrupts it);
 //! 2. capacity-check the target node (a migration that would breach the
 //!    target's RAM capacity is refused up front);
 //! 3. launch the same image on the target node and shrink its active set
-//!    to match the source (an earlier eviction must not resurrect);
+//!    to match the source replica (an earlier eviction must not resurrect);
 //! 4. health-gate the replacement before any traffic moves;
-//! 5. re-verify the topology (the boot wait yielded), then atomically
-//!    swap every hosted function's route to the replacement;
-//! 6. drain the source and terminate it once its in-flight requests
-//!    finish — a request routed before the swap completes on the source.
+//! 5. re-verify the topology (the boot wait yielded), then swap the
+//!    replica inside its set — an in-place cutover no arrival observes;
+//! 6. drain the source replica and terminate it once its in-flight
+//!    requests finish — a request routed before the swap completes there.
 //!
-//! Failure at any stage rolls back: the never-routed replacement is torn
-//! down and the source keeps serving.
+//! Replicas already on the target stay put; moving none at all is
+//! reported as a no-op error (the seed's same-node abort, generalized).
+//! Failure at any stage rolls back the in-flight replica: the
+//! never-routed replacement is torn down and the source keeps serving
+//! (replicas moved by earlier iterations stay moved — each cutover is
+//! complete on its own).
 
 use std::rc::Rc;
 
@@ -28,6 +32,7 @@ use crate::exec;
 use crate::gateway::Gateway;
 use crate::metrics::{MigrationEvent, Recorder};
 use crate::platform::deployer::Deployer;
+use crate::replica::ReplicaSet;
 
 use super::{Cluster, NodeId};
 
@@ -44,6 +49,7 @@ pub struct Migrator {
 }
 
 impl Migrator {
+    /// A migrator sharing the platform's deployer, gateway, and recorder.
     pub fn new(
         cluster: Cluster,
         deployer: Deployer,
@@ -54,9 +60,11 @@ impl Migrator {
         Migrator { cluster, deployer, gateway, metrics, config }
     }
 
-    /// Move the live instance hosting exactly `functions` (any order) to
-    /// node `to`.  Returns the replacement instance.  `reason` lands in
-    /// the migration event ("node_pressure", "fusion_colocation", ...).
+    /// Move the replica set hosting exactly `functions` (any order) to
+    /// node `to`, one replica at a time.  Replicas already on `to` stay
+    /// put; moving none is a no-op error.  Returns the last replacement
+    /// instance.  `reason` lands in every migration event
+    /// ("node_pressure", "fusion_colocation", ...).
     pub async fn migrate(
         &self,
         functions: &[String],
@@ -64,31 +72,59 @@ impl Migrator {
         reason: &'static str,
     ) -> Result<Rc<Instance>> {
         self.metrics.bump("migration_requests");
-        let (source, expected) = self.resolve_live(functions)?;
-        let from = self.cluster.node_of(source.id()).ok_or_else(|| {
-            Error::MigrationAborted(format!("instance {} has no node assignment", source.id()))
-        })?;
-        if from == to {
-            return Err(Error::MigrationAborted(format!(
-                "migration of [{}] is a no-op: already on {to}",
-                expected.join("+")
-            )));
-        }
-        // capacity gate: the replacement lands with the source's current
-        // footprint (its in-flight working sets drain on the source, so
-        // this slightly over-reserves — erring toward refusal)
-        let target = self.cluster.node(to)?;
-        if !target.fits(source.ram_mb()) {
-            self.metrics.bump("migration_refused_capacity");
-            return Err(Error::MigrationAborted(format!(
-                "migrating [{}] ({:.0} MiB) would breach {to}'s capacity \
-                 ({:.0} MiB headroom)",
-                expected.join("+"),
-                source.ram_mb(),
-                target.headroom_mb()
-            )));
+        let (set, expected) = self.resolve_live(functions)?;
+
+        let mut moved: Option<Rc<Instance>> = None;
+        for source in set.live() {
+            let from = self.cluster.node_of(source.id()).ok_or_else(|| {
+                Error::MigrationAborted(format!(
+                    "instance {} has no node assignment",
+                    source.id()
+                ))
+            })?;
+            if from == to {
+                continue;
+            }
+            // capacity gate: the replacement lands with the source's
+            // current footprint (its in-flight working sets drain on the
+            // source, so this slightly over-reserves — erring toward
+            // refusal); re-checked per replica against the live ledger
+            let target = self.cluster.node(to)?;
+            if !target.fits(source.ram_mb()) {
+                self.metrics.bump("migration_refused_capacity");
+                return Err(Error::MigrationAborted(format!(
+                    "migrating [{}] ({:.0} MiB) would breach {to}'s capacity \
+                     ({:.0} MiB headroom)",
+                    expected.join("+"),
+                    source.ram_mb(),
+                    target.headroom_mb()
+                )));
+            }
+            let fresh =
+                self.migrate_replica(&set, &expected, &source, from, to, reason).await?;
+            moved = Some(fresh);
         }
 
+        moved.ok_or_else(|| {
+            Error::MigrationAborted(format!(
+                "migration of [{}] is a no-op: already on {to}",
+                expected.join("+")
+            ))
+        })
+    }
+
+    /// Move one replica of `set` from node `from` to node `to`: launch a
+    /// replacement, mirror the active set, health-gate it, then swap it
+    /// into the set in place and drain the source.
+    async fn migrate_replica(
+        &self,
+        set: &Rc<ReplicaSet>,
+        expected: &[String],
+        source: &Rc<Instance>,
+        from: NodeId,
+        to: NodeId,
+        reason: &'static str,
+    ) -> Result<Rc<Instance>> {
         let t_start = exec::now();
 
         // launch the replacement from the source's image on the target
@@ -106,31 +142,41 @@ impl Migrator {
             self.rollback(&fresh);
         })?;
 
-        // the boot wait yielded: re-verify before committing
-        for f in &expected {
-            let routed = match self.gateway.resolve(f) {
-                Ok(inst) => inst,
+        // the boot wait yielded: re-verify before committing — the set
+        // must still own every function and the source must still serve
+        for f in expected {
+            let routed = match self.gateway.resolve_set(f) {
+                Ok(routed) => routed,
                 Err(err) => {
                     self.rollback(&fresh);
                     return Err(err);
                 }
             };
-            if routed.id() != source.id() {
+            if !Rc::ptr_eq(&routed, set) {
                 self.rollback(&fresh);
                 return Err(Error::MigrationAborted(format!(
-                    "topology changed during migration: `{f}` moved off instance {}",
+                    "topology changed during migration: `{f}` moved off the \
+                     replica set of instance {}",
                     source.id()
                 )));
             }
         }
+        if !set.contains(source.id()) {
+            self.rollback(&fresh);
+            return Err(Error::MigrationAborted(format!(
+                "topology changed during migration: instance {} left its \
+                 replica set",
+                source.id()
+            )));
+        }
 
-        // atomic cutover, then drain the source off the pipeline
-        self.gateway
-            .swap_routes(&expected, Rc::clone(&fresh))
-            .inspect_err(|_| self.rollback(&fresh))?;
+        // in-place cutover (arrivals pick from the set, so swapping the
+        // member is atomic from their view), then drain the source
+        set.replace(source.id(), Rc::clone(&fresh));
+        self.gateway.bump_version();
         self.metrics.record_migration(MigrationEvent {
             t_ms: self.metrics.rel_now_ms(),
-            functions: expected.clone(),
+            functions: expected.to_vec(),
             from,
             to,
             duration_ms: exec::now().duration_since(t_start).as_secs_f64() * 1e3,
@@ -141,18 +187,24 @@ impl Migrator {
         crate::containerd::reclaim_when_drained(
             self.cluster.control(),
             self.metrics.clone(),
-            source,
+            Rc::clone(source),
         );
         Ok(fresh)
     }
 
-    /// Resolve the live instance hosting exactly `functions` (sorted) —
+    /// Resolve the replica set hosting exactly `functions` (sorted) —
     /// the same staleness gate as the Merger's defusion pipelines.
-    fn resolve_live(&self, functions: &[String]) -> Result<(Rc<Instance>, Vec<String>)> {
+    fn resolve_live(&self, functions: &[String]) -> Result<(Rc<ReplicaSet>, Vec<String>)> {
         if functions.is_empty() {
             return Err(Error::MigrationAborted("migration needs at least one function".into()));
         }
-        let source = self.gateway.resolve(&functions[0])?;
+        let set = self.gateway.resolve_set(&functions[0])?;
+        let source = set.primary().ok_or_else(|| {
+            Error::MigrationAborted(format!(
+                "stale migration: `{}` has no live replica",
+                functions[0]
+            ))
+        })?;
         let mut hosted: Vec<String> =
             source.functions().iter().map(|(n, _)| n.clone()).collect();
         hosted.sort();
@@ -167,14 +219,14 @@ impl Migrator {
             )));
         }
         for f in &expected {
-            if self.gateway.resolve(f)?.id() != source.id() {
+            if !Rc::ptr_eq(&self.gateway.resolve_set(f)?, &set) {
                 return Err(Error::MigrationAborted(format!(
-                    "stale migration: `{f}` no longer routed to instance {}",
-                    source.id()
+                    "stale migration: `{f}` no longer routed with `{}`",
+                    expected[0]
                 )));
             }
         }
-        Ok((source, expected))
+        Ok((set, expected))
     }
 
     /// The shared pre-cutover health gate (see
@@ -259,6 +311,34 @@ mod tests {
             // the source never stopped serving
             assert_eq!(source.state(), InstanceState::Healthy);
             assert_eq!(m.gateway.resolve("a").unwrap().id(), source.id());
+        });
+    }
+
+    #[test]
+    fn every_replica_of_a_set_moves_one_at_a_time() {
+        run_virtual(async {
+            let (m, founder) = setup(2, 0.0);
+            // grow the route to two replicas, both on node 0
+            let set = m.gateway.resolve_set("a").unwrap();
+            let extra = m.cluster.launch_on(NodeId(0), founder.image()).unwrap();
+            set.add(Rc::clone(&extra));
+            crate::exec::sleep_ms(1_000.0).await;
+
+            let fresh =
+                m.migrate(&["a".to_string()], NodeId(1), "test").await.unwrap();
+            assert_eq!(m.cluster.node_of(fresh.id()), Some(NodeId(1)));
+            // both replicas were replaced on the target node...
+            let moved = m.gateway.resolve_set("a").unwrap();
+            assert_eq!(moved.live_len(), 2);
+            for inst in moved.live() {
+                assert_eq!(m.cluster.node_of(inst.id()), Some(NodeId(1)));
+            }
+            // ...and both sources drained away (no in-flight requests)
+            crate::exec::sleep_ms(500.0).await;
+            assert_eq!(founder.state(), InstanceState::Terminated);
+            assert_eq!(extra.state(), InstanceState::Terminated);
+            assert_eq!(m.metrics.migrations().len(), 2);
+            assert_eq!(m.metrics.counter("migrations_completed"), 2);
         });
     }
 

@@ -15,7 +15,7 @@
 //! * [`Cluster`] — the fleet: node lookup, instance→node assignment,
 //!   aggregate RAM/instance accounting (the single-node seed platform is a
 //!   one-node cluster, bit-for-bit).
-//! * [`Scheduler`] — pluggable placement ([`PlacementPolicy`]): bin-pack,
+//! * [`Scheduler`] — pluggable placement ([`crate::config::PlacementPolicy`]): bin-pack,
 //!   spread, or fusion-affinity (co-locate statically predicted sync
 //!   fusion groups so fusing them never needs a migration).
 //! * [`Migrator`] — moves a live instance between nodes with the same
@@ -56,10 +56,12 @@ pub struct Node {
 }
 
 impl Node {
+    /// The node's id.
     pub fn id(&self) -> NodeId {
         self.id
     }
 
+    /// RAM capacity (MiB); 0 = uncapped.
     pub fn capacity_mb(&self) -> f64 {
         self.capacity_mb
     }
@@ -74,6 +76,7 @@ impl Node {
         self.containers.total_ram_mb()
     }
 
+    /// Live (booting/healthy/draining) instances on this node.
     pub fn live_count(&self) -> usize {
         self.containers.live_count()
     }
@@ -128,14 +131,17 @@ impl Cluster {
         }
     }
 
+    /// Number of nodes in the cluster.
     pub fn node_count(&self) -> usize {
         self.inner.nodes.len()
     }
 
+    /// All nodes, in id order.
     pub fn nodes(&self) -> Vec<Rc<Node>> {
         self.inner.nodes.clone()
     }
 
+    /// Look up a node by id.
     pub fn node(&self, id: NodeId) -> Result<Rc<Node>> {
         self.inner
             .nodes

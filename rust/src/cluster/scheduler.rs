@@ -31,16 +31,18 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// A scheduler over `cluster` using `policy` for every placement.
     pub fn new(policy: PlacementPolicy, cluster: Cluster) -> Self {
         Scheduler { policy, cluster }
     }
 
+    /// The placement policy this scheduler was built with.
     pub fn policy(&self) -> PlacementPolicy {
         self.policy
     }
 
     /// Choose a node for one fresh instance needing `ram_mb` MiB, against
-    /// the *live* per-node load (the same [`Scheduler::pick`] kernel the
+    /// the *live* per-node load (the same `pick` kernel the
     /// deployment planner uses, fed live ledgers instead of planned ones;
     /// fusion-affinity places singletons like `Spread` — the affinity
     /// special-casing is in [`Scheduler::place_app`]).  Errors when no

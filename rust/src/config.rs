@@ -158,6 +158,62 @@ impl Default for ClusterParams {
     }
 }
 
+/// Replica-set capacity management (ISSUE 6).  The defaults are chosen so
+/// that an untouched config reproduces the seed's one-instance-per-function
+/// behavior **bit for bit**: singleton replica sets never draw from the
+/// balancer RNG, the autoscaler loop is not even spawned, no warm pool is
+/// booted, and an unlimited concurrency cap makes slot accounting a no-op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingParams {
+    /// hard ceiling on replicas per deployed function (>= 1; 1 = the seed's
+    /// single-instance invariant, autoscaler inert)
+    pub replicas_max: u32,
+    /// floor the autoscaler scales back down to after a burst (>= 1 unless
+    /// scale-to-zero overrides it past the idle horizon)
+    pub replicas_min: u32,
+    /// in-flight requests one replica is expected to absorb; the autoscaler
+    /// sizes a set at `ceil(in_flight / target_inflight)`
+    pub target_inflight: u32,
+    /// autoscaler evaluation interval (virtual ms)
+    pub scale_interval_ms: f64,
+    /// idle time (no arrivals, nothing in flight) after which a set scales
+    /// to zero; 0 disables scale-to-zero (the seed behavior)
+    pub idle_horizon_ms: f64,
+    /// pre-booted blank instances kept on standby; a scale-up claims one
+    /// (paying only `warm_attach_ms`) instead of a cold boot
+    pub warm_pool: usize,
+    /// cost of attaching a claimed warm instance to a function's image
+    /// (code pull + handler registration; orders of magnitude under boot)
+    pub warm_attach_ms: f64,
+    /// per-replica concurrent-request cap; excess requests queue at the
+    /// replica (0 = unlimited, the seed behavior)
+    pub concurrency: u32,
+}
+
+impl Default for ScalingParams {
+    fn default() -> Self {
+        ScalingParams {
+            replicas_max: 1,
+            replicas_min: 1,
+            target_inflight: 8,
+            scale_interval_ms: 1_000.0,
+            idle_horizon_ms: 0.0,
+            warm_pool: 0,
+            warm_attach_ms: 120.0,
+            concurrency: 0,
+        }
+    }
+}
+
+impl ScalingParams {
+    /// Whether the autoscaler control loop needs to run at all.  When this
+    /// is false (the default config) the platform spawns no scaling task
+    /// and the request path is byte-identical to the pre-replica seed.
+    pub fn autoscaler_armed(&self) -> bool {
+        self.replicas_max > 1 || self.idle_horizon_ms > 0.0
+    }
+}
+
 /// Which objective the defusion controller optimizes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SplitPolicyKind {
@@ -315,6 +371,9 @@ pub struct PlatformConfig {
     pub ram: RamParams,
     pub fusion: FusionParams,
     pub cluster: ClusterParams,
+    /// replica-set autoscaling / warm-pool knobs (defaults = seed-exact
+    /// single-instance behavior)
+    pub scaling: ScalingParams,
     pub compute: ComputeMode,
     /// telemetry retention (full = seed-exact CSVs; windowed = bounded
     /// recorder memory for scale runs) + windowed shard shape
@@ -355,6 +414,7 @@ impl PlatformConfig {
             },
             fusion: FusionParams::default_enabled(),
             cluster: ClusterParams::default(),
+            scaling: ScalingParams::default(),
             compute: ComputeMode::Replay,
             recording: RecordingConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -498,9 +558,23 @@ impl PlatformConfig {
         let r = &self.ram;
         let f = &self.fusion;
         let c = &self.cluster;
+        let s = &self.scaling;
         Json::obj(vec![
             ("platform", Json::str(self.kind.name())),
             ("seed", Json::Num(self.seed as f64)),
+            (
+                "scaling",
+                Json::obj(vec![
+                    ("replicas_max", Json::Num(s.replicas_max as f64)),
+                    ("replicas_min", Json::Num(s.replicas_min as f64)),
+                    ("target_inflight", Json::Num(s.target_inflight as f64)),
+                    ("scale_interval_ms", Json::Num(s.scale_interval_ms)),
+                    ("idle_horizon_ms", Json::Num(s.idle_horizon_ms)),
+                    ("warm_pool", Json::Num(s.warm_pool as f64)),
+                    ("warm_attach_ms", Json::Num(s.warm_attach_ms)),
+                    ("concurrency", Json::Num(s.concurrency as f64)),
+                ]),
+            ),
             (
                 "recording",
                 Json::obj(vec![
@@ -727,6 +801,35 @@ mod tests {
         assert!(
             v.get("latency_ms").unwrap().get("cross_node").unwrap().as_f64().unwrap() > 0.0
         );
+    }
+
+    #[test]
+    fn scaling_defaults_are_seed_inert_and_serialize() {
+        let c = PlatformConfig::tiny();
+        assert_eq!(c.scaling.replicas_max, 1);
+        assert_eq!(c.scaling.replicas_min, 1);
+        assert_eq!(c.scaling.warm_pool, 0);
+        assert_eq!(c.scaling.concurrency, 0);
+        assert_eq!(c.scaling.idle_horizon_ms, 0.0);
+        assert!(!c.scaling.autoscaler_armed(), "default config must not arm the autoscaler");
+        let j = c.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        let s = v.get("scaling").unwrap();
+        assert_eq!(s.get("replicas_max").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(s.get("warm_pool").unwrap().as_f64().unwrap(), 0.0);
+        assert!(s.get("scale_interval_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(s.get("warm_attach_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn autoscaler_arms_on_replica_headroom_or_idle_horizon() {
+        let mut s = ScalingParams::default();
+        assert!(!s.autoscaler_armed());
+        s.replicas_max = 4;
+        assert!(s.autoscaler_armed());
+        s.replicas_max = 1;
+        s.idle_horizon_ms = 30_000.0;
+        assert!(s.autoscaler_armed(), "scale-to-zero alone must arm the loop");
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::rc::Rc;
 use super::image::{Image, ImageId};
 use crate::config::PlatformConfig;
 use crate::error::{Error, Result};
-use crate::exec::sync::Gauge;
+use crate::exec::sync::{Gauge, Notify};
 
 /// Unique instance identifier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -48,7 +48,9 @@ impl InstanceState {
 /// One container instance.
 pub struct Instance {
     id: InstanceId,
-    image: Rc<Image>,
+    /// mutable so a warm-pool instance (booted from the blank warm image)
+    /// can adopt a function image at claim time without a re-boot
+    image: RefCell<Rc<Image>>,
     config: Rc<PlatformConfig>,
     state: Cell<InstanceState>,
     /// functions actively served: the image's hosted set minus members the
@@ -63,6 +65,12 @@ pub struct Instance {
     fn_inflight: RefCell<BTreeMap<String, i64>>,
     /// lifetime request count (merge observability)
     served: Cell<u64>,
+    /// requests holding a concurrency slot (distinct from `inflight`: a
+    /// slot is taken before boot-wait/billing so queued arrivals don't
+    /// stampede the instance the moment one finishes)
+    busy: Cell<i64>,
+    /// wakes one queued arrival when a concurrency slot frees up
+    slot_freed: Notify,
 }
 
 impl Instance {
@@ -70,13 +78,15 @@ impl Instance {
         let active = RefCell::new(image.functions.clone());
         Instance {
             id,
-            image,
+            image: RefCell::new(image),
             config,
             state: Cell::new(InstanceState::Booting),
             active,
             inflight: Gauge::new(),
             fn_inflight: RefCell::new(BTreeMap::new()),
             served: Cell::new(0),
+            busy: Cell::new(0),
+            slot_freed: Notify::new(),
         }
     }
 
@@ -85,7 +95,16 @@ impl Instance {
     }
 
     pub fn image(&self) -> ImageId {
-        self.image.id
+        self.image.borrow().id
+    }
+
+    /// Swap in a new image and serve its function set — the warm-pool
+    /// claim step: a pre-booted blank instance becomes a replica of the
+    /// claiming function without paying boot latency (only the much
+    /// smaller code-attach delay, modeled by the scaler).
+    pub fn adopt_image(&self, image: Rc<Image>) {
+        *self.active.borrow_mut() = image.functions.clone();
+        *self.image.borrow_mut() = image;
     }
 
     /// Functions actively served by this instance (name, code MiB).  Starts
@@ -198,6 +217,41 @@ impl Instance {
     /// Await zero in-flight requests (merge drain step).
     pub async fn drained(&self) {
         self.inflight.wait_zero().await;
+    }
+
+    // -- concurrency slots ----------------------------------------------------
+
+    /// Acquire one of `cap` concurrency slots, queueing (FIFO-ish via
+    /// [`Notify`] wakeups) until one frees.  `cap == 0` means unlimited —
+    /// the seed behavior — and returns immediately without touching the
+    /// slot counter, so default configs take zero overhead here.
+    pub async fn acquire_slot(&self, cap: u32) {
+        if cap == 0 {
+            return;
+        }
+        loop {
+            if self.busy.get() < cap as i64 {
+                self.busy.set(self.busy.get() + 1);
+                return;
+            }
+            self.slot_freed.notified().await;
+        }
+    }
+
+    /// Release a slot taken by [`Instance::acquire_slot`] and wake one
+    /// queued arrival.  Must be called with the same `cap` (a no-op at 0).
+    pub fn release_slot(&self, cap: u32) {
+        if cap == 0 {
+            return;
+        }
+        self.busy.set((self.busy.get() - 1).max(0));
+        self.slot_freed.notify_one();
+    }
+
+    /// Requests currently holding a concurrency slot (0 under unlimited
+    /// concurrency — the slot counter is bypassed entirely).
+    pub fn busy_slots(&self) -> i64 {
+        self.busy.get()
     }
 
     // -- lifecycle transitions -------------------------------------------------
@@ -362,6 +416,63 @@ mod tests {
         // sole remaining member must stay
         assert!(i.evict_function("b").is_err());
         assert!(i.hosts("b"));
+    }
+
+    #[test]
+    fn adopt_image_swaps_function_set() {
+        let i = instance();
+        i.mark_healthy();
+        assert!(i.hosts("a"));
+        let fused = Rc::new(Image {
+            id: ImageId(7),
+            manifest: FsManifest::function_code("bc", 10),
+            functions: vec![("b".into(), 9.0), ("c".into(), 30.0)],
+        });
+        i.adopt_image(Rc::clone(&fused));
+        assert_eq!(i.image(), ImageId(7));
+        assert!(!i.hosts("a"));
+        assert!(i.hosts("b") && i.hosts("c"));
+        assert_eq!(i.functions().len(), 2);
+    }
+
+    #[test]
+    fn slot_cap_zero_is_unlimited_and_free() {
+        crate::exec::run_virtual(async {
+            let i = Rc::new(instance());
+            i.mark_healthy();
+            for _ in 0..100 {
+                i.acquire_slot(0).await;
+            }
+            assert_eq!(i.busy_slots(), 0, "cap 0 must bypass the counter");
+            i.release_slot(0);
+            assert_eq!(i.busy_slots(), 0);
+        });
+    }
+
+    #[test]
+    fn slots_queue_and_wake_in_order() {
+        use std::cell::RefCell;
+        crate::exec::run_virtual(async {
+            let i = Rc::new(instance());
+            i.mark_healthy();
+            let order: Rc<RefCell<Vec<u32>>> = Rc::new(RefCell::new(Vec::new()));
+            for k in 0..4u32 {
+                let i = Rc::clone(&i);
+                let order = Rc::clone(&order);
+                crate::exec::spawn(async move {
+                    i.acquire_slot(2).await;
+                    order.borrow_mut().push(k);
+                    crate::exec::sleep_ms(10.0).await;
+                    i.release_slot(2);
+                });
+            }
+            crate::exec::sleep_ms(5.0).await;
+            assert_eq!(i.busy_slots(), 2, "only cap slots admitted at once");
+            assert_eq!(order.borrow().len(), 2);
+            crate::exec::sleep_ms(100.0).await;
+            assert_eq!(order.borrow().as_slice(), &[0, 1, 2, 3]);
+            assert_eq!(i.busy_slots(), 0);
+        });
     }
 
     #[test]

@@ -1,0 +1,433 @@
+//! FIG10 (ours) — replica sets under burst (ISSUE 6): a bursty workload
+//! that saturates one instance, absorbed by the autoscaler + warm pool
+//! with **zero dropped requests**, plus a bit-exact seed-parity trio.
+//!
+//! Three self-checked runs share the driver:
+//!
+//! 1. **scaled** — `chain(1)` with a per-replica concurrency cap of 1
+//!    (~22 rps per replica at the 40 ms spec busy time), hit with a
+//!    `burst_rps` arrival stream far beyond one replica's capacity.  The
+//!    autoscaler must ride the burst to multiple replicas (warm-pool
+//!    claims first, cold boots for the remainder — accounted separately
+//!    and required to sum to the scale-up event count), drop **nothing**,
+//!    and scale back down to the one-replica floor once the burst passes.
+//! 2. **control** — the identical workload at `--replicas-max 1`: the
+//!    burst must saturate the lone replica and time requests out
+//!    (`failed > 0`), proving the scaled run's zero-drop verdict is the
+//!    autoscaler's doing and not workload slack.
+//! 3. **parity trio** — a gentle fused-chain workload (the FIG9 regime)
+//!    run three ways: seed-default config, a config built through the
+//!    scaling flags at their inert values (`--replicas-max 1`), and an
+//!    **armed-but-inert** autoscaler (`replicas_max = 2` with an
+//!    unreachable `target_inflight`).  All three must produce
+//!    bit-identical fusion verdict transcripts
+//!    ([`fig9::verdict_transcript`]) and zero scale events: every replica
+//!    mechanism is an exact no-op until a flag asks for it.
+//!
+//! The burst runs pin `ComputeMode::Disabled` so per-request service time
+//! is exactly the spec busy time and the saturation arithmetic stays
+//! calibration-independent; the parity trio honors `--live`/`--no-compute`
+//! (parity is internal to the trio, whatever the compute mode).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use super::{fig9, write_output};
+use crate::apps;
+use crate::config::{
+    ComputeMode, MergePolicyKind, PlatformConfig, ScalingParams, WorkloadConfig,
+};
+use crate::error::Result;
+use crate::exec::{Executor, Mode};
+use crate::metrics::ScaleEvent;
+use crate::platform::Platform;
+use crate::util::stats::fmt_ms;
+use crate::workload::{self, WorkloadReport};
+
+/// FIG10 knobs (CLI + smoke test share the driver).
+#[derive(Debug, Clone, Copy)]
+pub struct Fig10Params {
+    /// requests per burst run (the burst lasts `requests / burst_rps` s)
+    pub requests: u64,
+    /// burst arrival rate — must exceed one replica's ~22 rps capacity
+    pub burst_rps: f64,
+    /// per-request deadline; the control run proves saturation by blowing it
+    pub timeout_ms: f64,
+    pub seed: u64,
+    /// compute mode of the parity trio (burst runs pin `Disabled`)
+    pub compute: ComputeMode,
+    pub replicas_max: u32,
+    pub target_inflight: u32,
+    pub scale_interval_ms: f64,
+    pub warm_pool: usize,
+    pub warm_attach_ms: f64,
+    pub concurrency: u32,
+    /// run the seed-parity trio (skipped by `--no-parity`)
+    pub parity: bool,
+}
+
+impl Fig10Params {
+    pub fn defaults(smoke: bool) -> Self {
+        Fig10Params {
+            requests: if smoke { 240 } else { 1_200 },
+            burst_rps: 120.0,
+            timeout_ms: 5_000.0,
+            seed: 13,
+            compute: ComputeMode::Replay,
+            replicas_max: 8,
+            target_inflight: 1,
+            scale_interval_ms: 150.0,
+            warm_pool: 2,
+            warm_attach_ms: 20.0,
+            concurrency: 1,
+            parity: true,
+        }
+    }
+}
+
+/// One completed burst run.
+pub struct Fig10Run {
+    pub report: WorkloadReport,
+    pub scale_events: Vec<ScaleEvent>,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub warm_pool_hits: u64,
+    pub cold_boots: u64,
+    /// highest routable replica count any scale event reached
+    pub peak_replicas: u32,
+    /// per-route live replica count after the post-burst settle
+    pub floor: Vec<(String, usize)>,
+    /// warm-pool size after the settle (claims must have replenished)
+    pub pool_len: usize,
+    pub scales_csv: String,
+}
+
+/// The parity trio's transcripts.
+pub struct Fig10Parity {
+    pub seed_verdicts: Vec<String>,
+    pub flags_verdicts: Vec<String>,
+    pub armed_verdicts: Vec<String>,
+    pub seed_failed: u64,
+    pub scale_events_across_trio: usize,
+}
+
+pub struct Fig10 {
+    pub params: Fig10Params,
+    pub scaled: Fig10Run,
+    pub control: Fig10Run,
+    pub parity: Option<Fig10Parity>,
+    pub checks: Vec<(String, bool)>,
+}
+
+impl Fig10 {
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|(_, ok)| *ok)
+    }
+
+    pub fn render(&self) -> String {
+        let s = &self.scaled;
+        let c = &self.control;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "FIG10: replica sets under burst — {} requests @ {:.0} rps, \
+             {} ms deadline (chain(1), concurrency {}, replicas-max {}, \
+             warm pool {})\n",
+            self.params.requests,
+            self.params.burst_rps,
+            self.params.timeout_ms,
+            self.params.concurrency,
+            self.params.replicas_max,
+            self.params.warm_pool
+        ));
+        out.push_str(&format!("  scaled  : {}\n", s.report.summary()));
+        out.push_str(&format!(
+            "            {} scale-ups ({} warm, {} cold), peak {} replicas, \
+             {} scale-downs, settled at {} (pool {})\n",
+            s.scale_ups,
+            s.warm_pool_hits,
+            s.cold_boots,
+            s.peak_replicas,
+            s.scale_downs,
+            s.floor
+                .iter()
+                .map(|(f, n)| format!("{f}={n}"))
+                .collect::<Vec<_>>()
+                .join(","),
+            s.pool_len
+        ));
+        out.push_str(&format!(
+            "  control : {} (replicas-max 1, p95 {})\n",
+            c.report.summary(),
+            fmt_ms(c.report.latency.p95())
+        ));
+        if let Some(p) = &self.parity {
+            out.push_str(&format!(
+                "  parity  : {} verdicts (seed) vs {} (flags R=1) vs {} \
+                 (armed-inert), {} scale events across the trio\n",
+                p.seed_verdicts.len(),
+                p.flags_verdicts.len(),
+                p.armed_verdicts.len(),
+                p.scale_events_across_trio
+            ));
+        }
+        for (name, ok) in &self.checks {
+            out.push_str(&format!("  [{}] {}\n", if *ok { "PASS" } else { "FAIL" }, name));
+        }
+        out
+    }
+}
+
+/// Burst-run platform config: vanilla (no fusion — the scaling subsystem
+/// is what's under test), compute disabled (service time = spec busy
+/// time), and the replica knobs from `p`.
+fn burst_config(p: &Fig10Params, replicas_max: u32, warm_pool: usize) -> PlatformConfig {
+    let mut cfg = PlatformConfig::tiny()
+        .with_compute(ComputeMode::Disabled)
+        .with_seed(p.seed)
+        .vanilla();
+    cfg.latency.boot_ms = 200.0;
+    cfg.latency.image_build_ms = 400.0;
+    cfg.scaling.replicas_max = replicas_max;
+    cfg.scaling.replicas_min = 1;
+    cfg.scaling.target_inflight = p.target_inflight;
+    cfg.scaling.scale_interval_ms = p.scale_interval_ms;
+    cfg.scaling.warm_pool = warm_pool;
+    cfg.scaling.warm_attach_ms = p.warm_attach_ms;
+    cfg.scaling.concurrency = p.concurrency;
+    cfg
+}
+
+fn run_burst(p: &Fig10Params, cfg: PlatformConfig) -> Result<Fig10Run> {
+    let wl = WorkloadConfig {
+        requests: p.requests,
+        rate_rps: p.burst_rps,
+        seed: p.seed,
+        timeout_ms: p.timeout_ms,
+    };
+    Executor::new(Mode::Virtual).block_on(async move {
+        let platform = Platform::deploy(apps::chain(1), cfg).await?;
+        let report = workload::run(Rc::clone(&platform), wl).await?;
+        // post-burst quiet phase: drains settle and the autoscaler walks
+        // the set back down to the floor
+        crate::exec::sleep_ms(15_000.0).await;
+        let m = &platform.metrics;
+        let scale_events = m.scales();
+        let floor: Vec<(String, usize)> = platform
+            .app
+            .functions()
+            .map(|f| {
+                let n = platform
+                    .gateway
+                    .resolve_set(&f.name)
+                    .map(|s| s.live_len())
+                    .unwrap_or(0);
+                (f.name.clone(), n)
+            })
+            .collect();
+        let run = Fig10Run {
+            scale_ups: m.counter("scale_ups"),
+            scale_downs: m.counter("scale_downs") + m.counter("scale_to_zero"),
+            warm_pool_hits: m.counter("warm_pool_hits"),
+            cold_boots: m.counter("cold_boots"),
+            peak_replicas: scale_events.iter().map(|e| e.to).max().unwrap_or(1),
+            floor,
+            pool_len: platform.scaler.pool_len(),
+            scales_csv: m.scales_csv(),
+            scale_events,
+            report,
+        };
+        platform.shutdown();
+        Ok(run)
+    })
+}
+
+/// Parity-trio config: the FIG9 regime (fused chain, cost-model
+/// admission) with an explicit [`ScalingParams`].
+fn trio_config(p: &Fig10Params, scaling: ScalingParams) -> PlatformConfig {
+    let mut cfg = PlatformConfig::tiny().with_compute(p.compute).with_seed(p.seed);
+    cfg.latency.image_build_ms = 400.0;
+    cfg.latency.boot_ms = 200.0;
+    cfg.fusion.min_observations = 3;
+    cfg.fusion.feedback_interval_ms = 1_000.0;
+    cfg.fusion.merge_policy = MergePolicyKind::CostModel;
+    cfg.scaling = scaling;
+    cfg
+}
+
+/// One gentle fused-chain run; returns the canonical verdict transcript
+/// plus the drop and scale-event counts.
+fn run_trio_leg(cfg: PlatformConfig, seed: u64) -> Result<(Vec<String>, u64, usize)> {
+    let wl = WorkloadConfig {
+        requests: 600,
+        rate_rps: 100.0,
+        seed,
+        timeout_ms: 120_000.0,
+    };
+    Executor::new(Mode::Virtual).block_on(async move {
+        let platform = Platform::deploy(apps::chain(3), cfg).await?;
+        let report = workload::run(Rc::clone(&platform), wl).await?;
+        crate::exec::sleep_ms(10_000.0).await;
+        platform.shutdown();
+        let m = &platform.metrics;
+        Ok((fig9::verdict_transcript(m), report.failed, m.scales().len()))
+    })
+}
+
+fn run_parity(p: &Fig10Params) -> Result<Fig10Parity> {
+    // 1. the seed shape: ScalingParams never touched
+    let seed_cfg = trio_config(p, ScalingParams::default());
+    // 2. the flags path at its inert values — what `--replicas-max 1`
+    //    builds; must not perturb one bit
+    let flags_cfg = trio_config(
+        p,
+        ScalingParams {
+            replicas_max: 1,
+            replicas_min: 1,
+            target_inflight: 8,
+            scale_interval_ms: 1_000.0,
+            idle_horizon_ms: 0.0,
+            warm_pool: 0,
+            warm_attach_ms: 120.0,
+            concurrency: 0,
+        },
+    );
+    // 3. armed but provably inert: the autoscaler task runs every tick but
+    //    an unreachable target_inflight keeps desired == live == 1 forever
+    let armed_cfg = trio_config(
+        p,
+        ScalingParams {
+            replicas_max: 2,
+            replicas_min: 1,
+            target_inflight: u32::MAX,
+            scale_interval_ms: 500.0,
+            idle_horizon_ms: 0.0,
+            warm_pool: 0,
+            warm_attach_ms: 120.0,
+            concurrency: 0,
+        },
+    );
+    let (seed_verdicts, seed_failed, s1) = run_trio_leg(seed_cfg, p.seed)?;
+    let (flags_verdicts, _, s2) = run_trio_leg(flags_cfg, p.seed)?;
+    let (armed_verdicts, _, s3) = run_trio_leg(armed_cfg, p.seed)?;
+    Ok(Fig10Parity {
+        seed_verdicts,
+        flags_verdicts,
+        armed_verdicts,
+        seed_failed,
+        scale_events_across_trio: s1 + s2 + s3,
+    })
+}
+
+/// Run FIG10 and write `fig10_summary.txt` + `fig10_scales.csv` into
+/// `out_dir`.
+pub fn run(out_dir: &Path, p: Fig10Params) -> Result<Fig10> {
+    let scaled = run_burst(&p, burst_config(&p, p.replicas_max, p.warm_pool))?;
+    // identical burst against a single pinned replica (no warm pool): the
+    // control that proves the workload saturates one instance
+    let control = run_burst(&p, burst_config(&p, 1, 0))?;
+    let parity = if p.parity { Some(run_parity(&p)?) } else { None };
+
+    let s = &scaled;
+    let mut checks: Vec<(String, bool)> = Vec::new();
+    checks.push((
+        format!("scaled run dropped nothing ({} failed)", s.report.failed),
+        s.report.failed == 0,
+    ));
+    checks.push((
+        format!(
+            "autoscaler rode the burst out (peak {} replicas, {} scale-ups)",
+            s.peak_replicas, s.scale_ups
+        ),
+        s.peak_replicas > 1 && s.scale_ups > 0,
+    ));
+    checks.push((
+        format!(
+            "warm pool absorbed the first wave ({} warm hits, {} cold boots)",
+            s.warm_pool_hits, s.cold_boots
+        ),
+        s.warm_pool_hits > 0 && s.cold_boots > 0,
+    ));
+    let up_events =
+        s.scale_events.iter().filter(|e| e.reason == "burst" || e.reason == "scale-from-zero");
+    let warm_events = up_events.clone().filter(|e| e.warm).count() as u64;
+    let up_events = up_events.count() as u64;
+    checks.push((
+        format!(
+            "warm + cold accounting consistent ({} events = {} warm + {} cold)",
+            up_events, s.warm_pool_hits, s.cold_boots
+        ),
+        up_events == s.warm_pool_hits + s.cold_boots && warm_events == s.warm_pool_hits,
+    ));
+    checks.push((
+        format!(
+            "scaled back to the floor after the burst ({} scale-downs, {}, pool {})",
+            s.scale_downs,
+            s.floor
+                .iter()
+                .map(|(f, n)| format!("{f}={n}"))
+                .collect::<Vec<_>>()
+                .join(","),
+            s.pool_len
+        ),
+        s.scale_downs > 0
+            && s.floor.iter().all(|(_, n)| *n == 1)
+            && s.pool_len == p.warm_pool,
+    ));
+    checks.push((
+        format!(
+            "control at --replicas-max 1 saturates ({} of {} dropped, 0 scale events)",
+            control.report.failed, control.report.issued
+        ),
+        control.report.failed > 0 && control.scale_events.is_empty(),
+    ));
+    if let Some(par) = &parity {
+        checks.push((
+            format!(
+                "parity trio is non-trivial ({} verdicts, 0 drops)",
+                par.seed_verdicts.len()
+            ),
+            !par.seed_verdicts.is_empty() && par.seed_failed == 0,
+        ));
+        checks.push((
+            "--replicas-max 1 reproduces seed verdicts bit-for-bit".to_string(),
+            par.flags_verdicts == par.seed_verdicts,
+        ));
+        checks.push((
+            "armed-but-inert autoscaler perturbs no verdict".to_string(),
+            par.armed_verdicts == par.seed_verdicts,
+        ));
+        checks.push((
+            format!(
+                "no scale events anywhere in the trio ({})",
+                par.scale_events_across_trio
+            ),
+            par.scale_events_across_trio == 0,
+        ));
+    }
+
+    let fig = Fig10 { params: p, scaled, control, parity, checks };
+    write_output(&out_dir.join("fig10_summary.txt"), &fig.render())?;
+    write_output(&out_dir.join("fig10_scales.csv"), &fig.scaled.scales_csv)?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_burst_scales_and_control_saturates() {
+        let mut p = Fig10Params::defaults(true);
+        p.compute = ComputeMode::Disabled;
+        let dir = std::env::temp_dir().join("provuse_fig10_test");
+        let fig = run(&dir, p).unwrap();
+        assert!(fig.passed(), "{}", fig.render());
+        let par = fig.parity.as_ref().expect("parity trio must run");
+        assert_eq!(par.seed_verdicts, par.flags_verdicts);
+        assert_eq!(par.seed_verdicts, par.armed_verdicts);
+        assert!(dir.join("fig10_summary.txt").exists());
+        assert!(dir.join("fig10_scales.csv").exists());
+        let csv = std::fs::read_to_string(dir.join("fig10_scales.csv")).unwrap();
+        assert!(csv.lines().count() > 1, "scale events must be exported:\n{csv}");
+    }
+}

@@ -13,7 +13,9 @@
 //! | FIG7    | ours: fuse ∧ split feedback  | [`fig7`]              |
 //! | FIG8    | ours: multi-node cluster     | [`fig8`]              |
 //! | FIG9    | ours: telemetry @ 10⁶ reqs   | [`fig9`]              |
+//! | FIG10   | ours: replica sets + warm pool under burst | [`fig10`] |
 
+pub mod fig10;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;

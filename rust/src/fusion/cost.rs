@@ -61,6 +61,10 @@ pub struct FnSignals {
     /// node hosting the function's instance (None on single-node
     /// platforms and in non-cluster tests: treated as co-located)
     pub node: Option<NodeId>,
+    /// live replica count of the function's set (1 for the seed's
+    /// one-instance-per-function shape).  `ram_mb` is a *per-replica*
+    /// footprint, so fusing multiplies it by the fused set's count.
+    pub replicas: u32,
 }
 
 /// Placement context of one merge-admission evaluation: everything the
@@ -82,6 +86,11 @@ pub struct MergeContext {
     /// (MiB); negative = the co-location would breach node capacity, so
     /// the pair is churn-gated exactly like a RAM-pressure refusal
     pub target_headroom_mb: f64,
+    /// replica count the fused set would deploy at — the busier
+    /// endpoint's count (a 4-replica caller fusing a 1-replica callee
+    /// boots the callee's footprint into all 4 fused replicas).  1 at the
+    /// seed shape, where it changes nothing.
+    pub replica_scale: f64,
 }
 
 impl MergeContext {
@@ -92,6 +101,7 @@ impl MergeContext {
             colocated: true,
             migration_ms: 0.0,
             target_headroom_mb: f64::INFINITY,
+            replica_scale: 1.0,
         }
     }
 }
@@ -101,6 +111,7 @@ impl MergeContext {
 pub struct MergeDecision {
     /// net predicted benefit: `w_latency * lat + w_gbs * gbs - w_ram * ram`
     pub score: f64,
+    /// verdict: `score >= merge_threshold` and the churn gate passed
     pub admit: bool,
     /// predicted hop-latency savings: the caller's double-billed blocked
     /// seconds per wall second (billed minus self time), which fusion
@@ -156,6 +167,7 @@ impl CostModel {
         self.evict_threshold > 0.0
     }
 
+    /// The configured eviction threshold.
     pub fn evict_threshold(&self) -> f64 {
         self.evict_threshold
     }
@@ -225,7 +237,7 @@ impl CostModel {
     /// ```text
     /// benefit = w_latency * caller blocked-time rate * callee share
     ///         + w_gbs     * callee billed GiB-s rate   (double billing gone)
-    /// penalty = w_ram     * (caller_ram + callee_ram) / ram_reference
+    /// penalty = w_ram     * (caller_ram + callee_ram) * replica_scale / ram_reference
     ///         + w_latency * migration_ms / window_ms   (co-location, amortized)
     /// score   = benefit - penalty;  admit iff score >= merge_threshold
     /// ```
@@ -275,7 +287,11 @@ impl CostModel {
         } else {
             ctx.migration_ms.max(0.0) / (caller.window_s * 1e3)
         };
-        let ram_term = (caller.ram_mb.max(0.0) + callee.ram_mb.max(0.0)) / self.ram_ref_mb;
+        // per-replica footprints sum, then every fused replica pays the
+        // combined working set — the replica-count term of the planner
+        let ram_term = (caller.ram_mb.max(0.0) + callee.ram_mb.max(0.0))
+            * ctx.replica_scale.max(1.0)
+            / self.ram_ref_mb;
         let score = self.w_latency * (lat_term - mig_term) + self.w_gbs * gbs_term
             - self.w_ram * ram_term;
         let churn_gated = (self.armed() && self.w_ram * ram_term >= self.evict_threshold)
@@ -305,6 +321,7 @@ impl CostModel {
 /// purely by a latency mis-prediction still raises the RAM weight.
 #[derive(Debug, Clone)]
 pub struct AutoTuner {
+    /// current (online-tuned) weights; start at the configured priors
     pub w_latency: f64,
     pub w_ram: f64,
     pub w_gbs: f64,
@@ -322,6 +339,7 @@ const TUNE_MIN_W: f64 = 0.01;
 const TUNE_MAX_W: f64 = 100.0;
 
 impl AutoTuner {
+    /// A tuner starting at the configured prior weights.
     pub fn new(p: &CostParams) -> Self {
         AutoTuner {
             w_latency: p.w_latency,
@@ -335,10 +353,12 @@ impl AutoTuner {
         }
     }
 
+    /// Current `(w_latency, w_ram, w_gbs)`.
     pub fn weights(&self) -> (f64, f64, f64) {
         (self.w_latency, self.w_ram, self.w_gbs)
     }
 
+    /// Regrets observed so far.
     pub fn regrets(&self) -> u64 {
         self.regrets
     }
@@ -525,6 +545,7 @@ mod tests {
             self_ms,
             window_s: 2.0,
             node: None,
+            replicas: 1,
         }
     }
 
@@ -612,6 +633,7 @@ mod tests {
             colocated: false,
             migration_ms: 1_000.0,
             target_headroom_mb: 100.0,
+            replica_scale: 1.0,
         };
         let d = m.predict_merge(&caller, &callee, 0.0, &cross);
         assert!((d.mig_term - 0.5).abs() < 1e-12, "{d:?}");
@@ -633,6 +655,35 @@ mod tests {
             &MergeContext { target_headroom_mb: -1.0, ..cross },
         );
         assert!(breach.churn_gated && !breach.admit, "{breach:?}");
+    }
+
+    #[test]
+    fn predict_merge_scales_ram_penalty_by_replica_count() {
+        // fusing a 4-replica caller with a 1-replica callee boots the
+        // callee's footprint into all four fused replicas: the RAM
+        // penalty must price the whole fleet, not one instance
+        let m = model(256.0);
+        let caller = signals("a", 40.0, 2_000.0, 400.0, 0.1);
+        let callee = signals("b", 40.0, 0.0, 0.0, 0.1);
+        let single = m.predict_merge(&caller, &callee, 0.0, &MergeContext::local());
+        let fleet = m.predict_merge(
+            &caller,
+            &callee,
+            0.0,
+            &MergeContext { replica_scale: 4.0, ..MergeContext::local() },
+        );
+        assert!((single.ram_term - 80.0 / 256.0).abs() < 1e-12, "{single:?}");
+        assert!((fleet.ram_term - 4.0 * 80.0 / 256.0).abs() < 1e-12, "{fleet:?}");
+        assert!(fleet.score < single.score);
+        // sub-1 scales clamp to the single-replica price instead of
+        // discounting RAM below one instance's footprint
+        let clamped = m.predict_merge(
+            &caller,
+            &callee,
+            0.0,
+            &MergeContext { replica_scale: 0.0, ..MergeContext::local() },
+        );
+        assert!((clamped.ram_term - single.ram_term).abs() < 1e-12);
     }
 
     #[test]
@@ -678,6 +729,7 @@ mod tests {
                 colocated: g.bool(),
                 migration_ms: g.f64(0.0, 5_000.0),
                 target_headroom_mb: g.f64(0.0, 1_000.0),
+                replica_scale: g.f64(1.0, 6.0),
             };
             let caller = FnSignals {
                 function: "a".into(),
@@ -688,6 +740,7 @@ mod tests {
                 self_ms: g.f64(0.0, 5_000.0),
                 window_s: g.f64(0.5, 10.0),
                 node: None,
+                replicas: 1,
             };
             let callee = FnSignals {
                 function: "b".into(),
@@ -698,6 +751,7 @@ mod tests {
                 self_ms: 0.0,
                 window_s: caller.window_s,
                 node: None,
+                replicas: 1,
             };
             let base = m.predict_merge(&caller, &callee, 0.0, &ctx);
             assert!(base.score.is_finite());
@@ -740,6 +794,14 @@ mod tests {
             assert!(
                 m.predict_merge(&caller, &callee, 0.0, &farther).score <= base.score,
                 "a pricier migration raised the merge score"
+            );
+            let wider = MergeContext {
+                replica_scale: ctx.replica_scale + g.f64(0.0, 4.0),
+                ..ctx
+            };
+            assert!(
+                m.predict_merge(&caller, &callee, 0.0, &wider).score <= base.score,
+                "a larger replica scale raised the merge score"
             );
         });
     }

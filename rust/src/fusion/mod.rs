@@ -97,6 +97,7 @@ pub enum SplitReason {
 }
 
 impl SplitReason {
+    /// Stable snake_case label for event/CSV exports.
     pub fn name(&self) -> &'static str {
         match self {
             SplitReason::RamCap => "ram_cap",
@@ -111,7 +112,9 @@ impl SplitReason {
 /// input: prices cross-node co-location and its capacity gate).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NodeLoad {
+    /// node id
     pub node: NodeId,
+    /// live RAM on the node (MiB)
     pub ram_mb: f64,
     /// capacity (MiB); 0 = uncapped
     pub capacity_mb: f64,
@@ -122,7 +125,9 @@ pub struct NodeLoad {
 /// instances that are candidates for relief.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NodeSample {
+    /// node id
     pub node: NodeId,
+    /// live RAM on the node (MiB)
     pub ram_mb: f64,
     /// capacity (MiB); 0 = uncapped (never pressured)
     pub capacity_mb: f64,
@@ -135,6 +140,7 @@ pub struct NodeSample {
 /// billing ledger's trailing window).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FnAttribution {
+    /// member function name
     pub function: String,
     /// attributed RAM (MiB): code footprint + an equal share of the base
     /// runtime and in-flight working sets; group members sum to the
@@ -278,6 +284,7 @@ impl GroupFeedback {
 }
 
 impl Observer {
+    /// An observer recording admission telemetry into a private recorder.
     pub fn new(policy: FusionParams, app: &AppSpec, tx: Sender<FusionRequest>) -> Self {
         Self::with_metrics(policy, app, tx, Recorder::new())
     }
@@ -301,6 +308,7 @@ impl Observer {
         Observer { policy, trust, state: RefCell::new(state), tx, metrics }
     }
 
+    /// The fusion policy this observer enforces.
     pub fn policy(&self) -> &FusionParams {
         &self.policy
     }
@@ -469,6 +477,9 @@ impl Observer {
             colocated,
             migration_ms: if colocated { 0.0 } else { s.migration_est_ms },
             target_headroom_mb,
+            // the fused set deploys at the busier endpoint's replica
+            // count, so every replica pays the combined working set
+            replica_scale: caller_sig.replicas.max(callee_sig.replicas).max(1) as f64,
         }
     }
 
@@ -1501,6 +1512,7 @@ mod tests {
             self_ms,
             window_s: 2.0,
             node: None,
+            replicas: 1,
         }
     }
 

@@ -1,10 +1,21 @@
-//! API gateway: function-name → instance routing with atomic multi-route
-//! hot swap (the Merger's traffic-cutover step depends on it).
+//! API gateway: function-name → replica-set routing with atomic
+//! multi-route hot swap (the Merger's traffic-cutover step depends on it).
 //!
 //! On tinyFaaS the combined instance "overwrites the old function entries
 //! in the API gateway"; on Kubernetes the equivalent is a Service backend
 //! update (paper §4).  Both reduce to the same primitive: swap a set of
 //! routes so no request ever observes a half-updated table.
+//!
+//! Since ISSUE 6 a route resolves to a [`ReplicaSet`], not a single
+//! instance: the set load-balances across its healthy replicas with
+//! power-of-two-choices on in-flight count.  All functions of a fused
+//! group map to the **same** `Rc<ReplicaSet>`, so set identity
+//! (`Rc::ptr_eq`) is the "fused together" relation the pipelines check.
+//! The instance-level entry points ([`Gateway::set_route`],
+//! [`Gateway::swap_routes`], [`Gateway::resolve`], …) are preserved: they
+//! wrap their argument in a singleton set / pick a replica, so the seed's
+//! one-instance-per-function call sites work unchanged and behave
+//! identically at replica count 1.
 //!
 //! Routes are keyed by interned [`Sym`]s (ISSUE 5): `resolve_sym` is a
 //! hash probe + `Rc` bump — zero heap allocations per call — and the
@@ -17,6 +28,7 @@ use std::rc::Rc;
 
 use crate::containerd::Instance;
 use crate::error::{Error, Result};
+use crate::replica::ReplicaSet;
 use crate::util::intern::Sym;
 
 /// Routing table handle (cheaply clonable, single-threaded interior
@@ -28,28 +40,41 @@ pub struct Gateway {
 
 #[derive(Default)]
 struct GatewayInner {
-    routes: RefCell<HashMap<Sym, Rc<Instance>>>,
+    routes: RefCell<HashMap<Sym, Rc<ReplicaSet>>>,
     /// bumped on every swap; lets tests assert atomicity
     version: Cell<u64>,
 }
 
 impl Gateway {
+    /// An empty routing table.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Install or replace a single route (initial deployment).
+    /// Install or replace a single route with a one-replica set (initial
+    /// deployment; the seed's one-instance-per-function shape).
     pub fn set_route(&self, function: impl AsRef<str>, instance: Rc<Instance>) {
-        self.inner
-            .routes
-            .borrow_mut()
-            .insert(Sym::intern(function.as_ref()), instance);
+        self.set_route_set(function, ReplicaSet::singleton(instance));
+    }
+
+    /// Install or replace a single route with an explicit replica set.
+    pub fn set_route_set(&self, function: impl AsRef<str>, set: Rc<ReplicaSet>) {
+        self.inner.routes.borrow_mut().insert(Sym::intern(function.as_ref()), set);
         self.inner.version.set(self.inner.version.get() + 1);
     }
 
     /// Atomically repoint every function in `functions` to `instance` —
-    /// the fused-instance cutover.  Either all routes change or none.
+    /// the fused-instance cutover at replica count 1.  All functions share
+    /// one singleton set (they are one fused group).  Either all routes
+    /// change or none.
     pub fn swap_routes(&self, functions: &[String], instance: Rc<Instance>) -> Result<()> {
+        self.swap_routes_set(functions, ReplicaSet::singleton(instance))
+    }
+
+    /// Atomically repoint every function in `functions` to the same
+    /// replica `set` — the fused-set cutover.  Either all routes change or
+    /// none.
+    pub fn swap_routes_set(&self, functions: &[String], set: Rc<ReplicaSet>) -> Result<()> {
         let mut routes = self.inner.routes.borrow_mut();
         for f in functions {
             match Sym::lookup(f) {
@@ -58,16 +83,27 @@ impl Gateway {
             }
         }
         for f in functions {
-            routes.insert(Sym::intern(f), Rc::clone(&instance));
+            routes.insert(Sym::intern(f), Rc::clone(&set));
         }
         self.inner.version.set(self.inner.version.get() + 1);
         Ok(())
     }
 
     /// Atomically install a set of `(function, instance)` routes — the
-    /// split pipeline's cutover, where every function returns to its own
-    /// instance.  Either all routes change or none.
+    /// split pipeline's cutover at replica count 1, where every function
+    /// returns to its own (singleton-set) instance.  Either all routes
+    /// change or none.
     pub fn swap_routes_multi(&self, routes: &[(String, Rc<Instance>)]) -> Result<()> {
+        let sets: Vec<(String, Rc<ReplicaSet>)> = routes
+            .iter()
+            .map(|(f, inst)| (f.clone(), ReplicaSet::singleton(Rc::clone(inst))))
+            .collect();
+        self.swap_routes_multi_sets(&sets)
+    }
+
+    /// Atomically install a set of `(function, replica set)` routes — the
+    /// general split cutover.  Either all routes change or none.
+    pub fn swap_routes_multi_sets(&self, routes: &[(String, Rc<ReplicaSet>)]) -> Result<()> {
         let mut table = self.inner.routes.borrow_mut();
         for (f, _) in routes {
             match Sym::lookup(f) {
@@ -75,17 +111,17 @@ impl Gateway {
                 _ => return Err(Error::NoRoute(f.clone())),
             }
         }
-        for (f, inst) in routes {
-            table.insert(Sym::intern(f), Rc::clone(inst));
+        for (f, set) in routes {
+            table.insert(Sym::intern(f), Rc::clone(set));
         }
         self.inner.version.set(self.inner.version.get() + 1);
         Ok(())
     }
 
-    /// Resolve a function name to its current instance.  Unknown names are
-    /// rejected **without** growing the interner (this is the path client
-    /// input reaches through the HTTP front end); the hot request path
-    /// carries a [`Sym`] and uses [`Self::resolve_sym`].
+    /// Resolve a function name to a serving replica (load-balanced).
+    /// Unknown names are rejected **without** growing the interner (this
+    /// is the path client input reaches through the HTTP front end); the
+    /// hot request path carries a [`Sym`] and uses [`Self::resolve_sym`].
     pub fn resolve(&self, function: &str) -> Result<Rc<Instance>> {
         match Sym::lookup(function) {
             Some(sym) => self.resolve_sym(sym),
@@ -93,9 +129,29 @@ impl Gateway {
         }
     }
 
-    /// Resolve an interned function to its current instance.  Hash probe +
-    /// refcount bump: zero heap allocations on the hit path.
+    /// Resolve an interned function to a serving replica: hash probe +
+    /// power-of-two-choices pick.  A singleton set adds only a refcount
+    /// bump over the pre-replica path (no RNG draw).  Errors when the
+    /// route is unknown **or** the set currently has no routable replica
+    /// (scaled to zero — the handler's scale-from-zero path resolves the
+    /// set instead and boots a replica).
     pub fn resolve_sym(&self, function: Sym) -> Result<Rc<Instance>> {
+        self.resolve_set_sym(function)?
+            .pick()
+            .ok_or_else(|| Error::NoRoute(function.as_str().to_string()))
+    }
+
+    /// Resolve a function name to its replica set.
+    pub fn resolve_set(&self, function: &str) -> Result<Rc<ReplicaSet>> {
+        match Sym::lookup(function) {
+            Some(sym) => self.resolve_set_sym(sym),
+            None => Err(Error::NoRoute(function.to_string())),
+        }
+    }
+
+    /// Resolve an interned function to its replica set (the handler's hot
+    /// path; zero heap allocations).
+    pub fn resolve_set_sym(&self, function: Sym) -> Result<Rc<ReplicaSet>> {
         self.inner
             .routes
             .borrow()
@@ -104,14 +160,17 @@ impl Gateway {
             .ok_or_else(|| Error::NoRoute(function.as_str().to_string()))
     }
 
-    /// Snapshot of the full table (merger introspection, reports).
+    /// Snapshot of the full table as `(function, primary replica)` pairs
+    /// (merger introspection, reports), sorted by name.  Routes whose set
+    /// is currently scaled to zero are omitted (they have no instance to
+    /// report).
     pub fn snapshot(&self) -> Vec<(String, Rc<Instance>)> {
         let mut v: Vec<(String, Rc<Instance>)> = self
             .inner
             .routes
             .borrow()
             .iter()
-            .map(|(k, inst)| (k.as_str().to_string(), Rc::clone(inst)))
+            .filter_map(|(k, set)| set.primary().map(|p| (k.as_str().to_string(), p)))
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
@@ -119,34 +178,67 @@ impl Gateway {
 
     /// Interned snapshot (controller tick: no per-route `String`s), sorted
     /// by function name (one `as_str` per route, not per comparison).
+    /// Scaled-to-zero routes are omitted, like [`Self::snapshot`].
     pub fn snapshot_syms(&self) -> Vec<(Sym, Rc<Instance>)> {
         let mut v: Vec<(Sym, Rc<Instance>)> = self
             .inner
             .routes
             .borrow()
             .iter()
-            .map(|(k, inst)| (*k, Rc::clone(inst)))
+            .filter_map(|(k, set)| set.primary().map(|p| (*k, p)))
             .collect();
         v.sort_by_cached_key(|(sym, _)| sym.as_str());
         v
     }
 
+    /// Set-level snapshot, sorted by function name — the autoscaler's and
+    /// controller tick's view.  Includes scaled-to-zero routes (their sets
+    /// are what a scale-from-zero revives).
+    pub fn snapshot_sets(&self) -> Vec<(String, Rc<ReplicaSet>)> {
+        let mut v: Vec<(String, Rc<ReplicaSet>)> = self
+            .inner
+            .routes
+            .borrow()
+            .iter()
+            .map(|(k, set)| (k.as_str().to_string(), Rc::clone(set)))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Monotone swap counter; lets tests assert cutover atomicity (an
+    /// aborted swap leaves it unchanged).
     pub fn version(&self) -> u64 {
         self.inner.version.get()
     }
 
+    /// Record an in-set topology change (a migration's one-replica
+    /// [`ReplicaSet::replace`]) in the swap counter, keeping "the routed
+    /// topology changed" observable even when no table entry moved.
+    pub fn bump_version(&self) {
+        self.inner.version.set(self.inner.version.get() + 1);
+    }
+
+    /// Number of routes in the table.
     pub fn len(&self) -> usize {
         self.inner.routes.borrow().len()
     }
 
+    /// Whether the table has no routes at all.
     pub fn is_empty(&self) -> bool {
         self.inner.routes.borrow().is_empty()
     }
 
-    /// Number of distinct instances currently routed to.
+    /// Number of distinct instances currently routed to, across **all**
+    /// replicas of all sets (at replica count 1 this is the seed's count
+    /// of distinct routed instances, so "each merge removes exactly one
+    /// instance" keeps holding).
     pub fn distinct_instances(&self) -> usize {
         let routes = self.inner.routes.borrow();
-        let mut ids: Vec<u64> = routes.values().map(|i| i.id().0).collect();
+        let mut ids: Vec<u64> = routes
+            .values()
+            .flat_map(|set| set.replicas().into_iter().map(|i| i.id().0))
+            .collect();
         ids.sort_unstable();
         ids.dedup();
         ids.len()
@@ -205,6 +297,11 @@ mod tests {
         assert_eq!(gw.resolve("a").unwrap().id(), fused.id());
         assert_eq!(gw.resolve("b").unwrap().id(), fused.id());
         assert_eq!(gw.distinct_instances(), 1);
+        // both names share ONE set: the fused-together relation
+        assert!(Rc::ptr_eq(
+            &gw.resolve_set("a").unwrap(),
+            &gw.resolve_set("b").unwrap()
+        ));
         drop(ib);
     }
 
@@ -219,6 +316,9 @@ mod tests {
         assert_eq!(syms.len(), 2);
         assert_eq!(syms[0].0.as_str(), "a");
         assert_eq!(syms[1].0.as_str(), "b");
+        let sets = gw.snapshot_sets();
+        assert_eq!(sets.len(), 2);
+        assert_eq!(sets[0].0, "a");
     }
 
     #[test]
@@ -245,5 +345,31 @@ mod tests {
         assert_eq!(gw.resolve("a").unwrap().id(), ia.id());
         assert_eq!(gw.resolve("b").unwrap().id(), ib.id());
         assert_eq!(gw.distinct_instances(), 2);
+    }
+
+    #[test]
+    fn multi_replica_route_resolves_and_counts_all_replicas() {
+        let (rt, gw, ia, _ib) = setup();
+        let img = ia.image();
+        let extra = crate::exec::run_virtual({
+            let rt = rt.clone();
+            async move { rt.launch(img).unwrap() }
+        });
+        let set = gw.resolve_set("a").unwrap();
+        set.add(Rc::clone(&extra));
+        // resolve returns one of the two replicas, never b's
+        for _ in 0..20 {
+            let picked = gw.resolve("a").unwrap().id();
+            assert!(picked == ia.id() || picked == extra.id());
+        }
+        // 2 replicas of a + 1 of b
+        assert_eq!(gw.distinct_instances(), 3);
+        // scaled to zero: resolve errors, resolve_set still works
+        set.remove(ia.id());
+        set.remove(extra.id());
+        assert!(matches!(gw.resolve("a"), Err(Error::NoRoute(_))));
+        assert!(gw.resolve_set("a").is_ok());
+        assert_eq!(gw.snapshot().len(), 1, "scaled-to-zero route omitted from snapshot");
+        assert_eq!(gw.snapshot_sets().len(), 2, "set snapshot keeps it");
     }
 }

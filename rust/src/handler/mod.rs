@@ -16,6 +16,7 @@
 //! of cloning a `String` per hop, so a request's orchestration path does
 //! not touch the allocator for names at any depth.
 
+use std::cell::RefCell;
 use std::future::Future;
 use std::pin::Pin;
 use std::rc::Rc;
@@ -31,6 +32,7 @@ use crate::fusion::Observer;
 use crate::gateway::Gateway;
 use crate::metrics::Recorder;
 use crate::netsim::{Fabric, Hop};
+use crate::replica::{ReplicaSet, Scaler};
 use crate::runtime::ComputeService;
 use crate::util::intern::Sym;
 
@@ -58,6 +60,10 @@ struct DispatcherInner {
     observer: Rc<Observer>,
     metrics: Recorder,
     billing: BillingLedger,
+    /// replica supplier for scale-from-zero (set by the platform after
+    /// deploy when the autoscaler is armed; None reproduces the seed's
+    /// hard NoRoute on an empty set)
+    scaler: RefCell<Option<Rc<Scaler>>>,
     payload_len: usize,
     response_len: usize,
 }
@@ -90,10 +96,18 @@ impl Dispatcher {
                 observer,
                 metrics,
                 billing,
+                scaler: RefCell::new(None),
                 payload_len,
                 response_len,
             }),
         }
+    }
+
+    /// Arm scale-from-zero: an arrival on an empty replica set boots a
+    /// replica through `scaler` instead of failing.  Called by the
+    /// platform after deploy when the autoscaler is configured.
+    pub fn set_scaler(&self, scaler: Rc<Scaler>) {
+        *self.inner.scaler.borrow_mut() = Some(scaler);
     }
 
     /// Request payload size expected by entry functions (f32 count).
@@ -141,7 +155,16 @@ impl Dispatcher {
             // processing requests", paper §3).  The slot is attributed to
             // the target function (working-set RAM by in-flight ownership).
             let gateway_ms = d.fabric.sample(Hop::Gateway);
-            let inst = d.gateway.resolve_sym(function)?;
+            let set = d.gateway.resolve_set_sym(function)?;
+            set.note_arrival(d.metrics.rel_now_ms());
+            // load-balance across the set's replicas (singleton sets —
+            // the seed shape — return their sole replica without an RNG
+            // draw); an empty set means the route scaled to zero and this
+            // arrival pays the cold start
+            let inst = match set.pick() {
+                Some(inst) => inst,
+                None => this.revive(function, &set).await?,
+            };
             // one interner round-trip per hop, not one per use below
             let name = function.as_str();
             inst.request_started_for(name);
@@ -167,7 +190,13 @@ impl Dispatcher {
             while inst.state() == InstanceState::Booting {
                 exec::sleep_ms(d.config.latency.health_interval_ms).await;
             }
+            // concurrency gate: a bounded replica queues excess arrivals
+            // here (cap 0 = unlimited, the seed behavior — returns
+            // immediately without touching the slot counter)
+            let cap = d.config.scaling.concurrency;
+            inst.acquire_slot(cap).await;
             if inst.state() == InstanceState::Terminated {
+                inst.release_slot(cap);
                 inst.request_finished_for(name);
                 return Err(Error::Request(format!(
                     "instance {} terminated before dispatch",
@@ -183,6 +212,7 @@ impl Dispatcher {
             let result = this
                 .execute_function(Rc::clone(&inst), function, payload, depth, dispatch_ms)
                 .await;
+            inst.release_slot(cap);
             inst.request_finished_for(name);
             // One billed invocation per remote arrival (§2.3): duration x
             // instance allocation, *including* time blocked on sync calls —
@@ -203,6 +233,47 @@ impl Dispatcher {
             exec::sleep_ms(back_ms).await;
             Ok(out)
         })
+    }
+
+    /// Scale-from-zero: the route exists but its set currently has no
+    /// routable replica.  The first arrival flips the set's
+    /// `scale_pending` guard and boots one replica through the platform's
+    /// [`Scaler`] (warm-pool claim when possible); concurrent arrivals
+    /// wait for that boot instead of each booting their own — the
+    /// thundering herd collapses into one cold start.  Without a scaler
+    /// (seed configs never scale to zero) this degrades to the seed's
+    /// `NoRoute` error.
+    async fn revive(&self, function: Sym, set: &Rc<ReplicaSet>) -> Result<Rc<Instance>> {
+        let d = &self.inner;
+        let mut set = Rc::clone(set);
+        loop {
+            if set.is_retired() {
+                // a fuse/split cutover replaced this set while we waited;
+                // follow the route to its replacement
+                set = d.gateway.resolve_set_sym(function)?;
+                continue;
+            }
+            if let Some(inst) = set.pick() {
+                return Ok(inst);
+            }
+            let scaler = d.scaler.borrow().as_ref().map(Rc::clone);
+            let Some(scaler) = scaler else {
+                return Err(Error::NoRoute(function.as_str().to_string()));
+            };
+            if set.scale_pending() {
+                exec::sleep_ms(d.config.latency.health_interval_ms).await;
+                continue;
+            }
+            set.set_scale_pending(true);
+            let booted =
+                scaler.add_replica(function.as_str(), &set, "scale-from-zero").await;
+            set.set_scale_pending(false);
+            match booted {
+                // the cutover race: retry against the route's current set
+                Err(_) if set.is_retired() => continue,
+                other => return other,
+            }
+        }
     }
 
     /// Execute `function` on `inst` (already located there): upfront charge
@@ -245,8 +316,10 @@ impl Dispatcher {
             for call in spec.calls.iter().filter(|c| c.mode == CallMode::Sync) {
                 let child_payload = this.child_payload(&out, call.scale);
                 let target = Sym::intern(&call.target);
-                let target_inst = d.gateway.resolve_sym(target)?;
-                let local = target_inst.id() == inst.id();
+                // inline iff the target's replica set contains THIS
+                // instance (fused together) — at replica count 1 this is
+                // the seed's same-instance id check
+                let local = d.gateway.resolve_set_sym(target)?.contains(inst.id());
                 let fut: LocalBoxFuture<Result<Vec<f32>>> = if local {
                     // fused fast path: in-process call
                     d.metrics.bump("inline_calls");
@@ -281,8 +354,7 @@ impl Dispatcher {
             for call in spec.calls.iter().filter(|c| c.mode == CallMode::Async) {
                 let child_payload = this.child_payload(&out, call.scale);
                 let target = Sym::intern(&call.target);
-                let target_inst = d.gateway.resolve_sym(target)?;
-                let local = target_inst.id() == inst.id();
+                let local = d.gateway.resolve_set_sym(target)?.contains(inst.id());
                 let this2 = this.clone();
                 d.metrics.bump("async_calls");
                 if local {

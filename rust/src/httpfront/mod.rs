@@ -3,7 +3,7 @@
 //!
 //! Architecture: OS threads own the listener and per-connection I/O and
 //! forward parsed requests through a thread-safe mpsc into the
-//! single-threaded platform executor (running in [`exec::Mode::Real`]);
+//! single-threaded platform executor (running in [`crate::exec::Mode::Real`]);
 //! replies travel back over oneshot channels.  Python is nowhere in sight:
 //! the compute bodies the requests exercise are the AOT artifacts executed
 //! through PJRT.

@@ -37,6 +37,7 @@ pub mod merger;
 pub mod metrics;
 pub mod netsim;
 pub mod platform;
+pub mod replica;
 pub mod runtime;
 pub mod util;
 pub mod workload;

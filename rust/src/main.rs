@@ -112,6 +112,22 @@ fn apply_cluster_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
     Ok(())
 }
 
+/// Apply the replica-scaling flags shared by `experiment` and `serve`.
+/// All defaults are the seed's inert values — a command line that never
+/// mentions a scaling flag runs the single-instance platform bit for bit.
+fn apply_scaling_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
+    let s = &mut config.scaling;
+    s.replicas_max = args.u32_or("replicas-max", s.replicas_max)?;
+    s.replicas_min = args.u32_or("replicas-min", s.replicas_min)?;
+    s.target_inflight = args.u32_or("target-inflight", s.target_inflight)?;
+    s.scale_interval_ms = args.f64_or("scale-interval-ms", s.scale_interval_ms)?;
+    s.idle_horizon_ms = args.f64_or("idle-horizon-ms", s.idle_horizon_ms)?;
+    s.warm_pool = args.u64_or("warm-pool", s.warm_pool as u64)? as usize;
+    s.warm_attach_ms = args.f64_or("warm-attach-ms", s.warm_attach_ms)?;
+    s.concurrency = args.u32_or("concurrency", s.concurrency)?;
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("figure5") => {
@@ -228,6 +244,33 @@ fn dispatch(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        Some("figure10") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/fig10"));
+            let mut p = experiments::fig10::Fig10Params::defaults(args.has("smoke"));
+            p.compute = compute_from(args);
+            p.requests = args.u64_or("requests", p.requests)?;
+            p.burst_rps = args.f64_or("burst-rps", p.burst_rps)?;
+            p.timeout_ms = args.f64_or("timeout-ms", p.timeout_ms)?;
+            p.seed = args.u64_or("seed", p.seed)?;
+            p.replicas_max = args.u32_or("replicas-max", p.replicas_max)?;
+            p.target_inflight = args.u32_or("target-inflight", p.target_inflight)?;
+            p.scale_interval_ms = args.f64_or("scale-interval-ms", p.scale_interval_ms)?;
+            p.warm_pool = args.u64_or("warm-pool", p.warm_pool as u64)? as usize;
+            p.warm_attach_ms = args.f64_or("warm-attach-ms", p.warm_attach_ms)?;
+            p.concurrency = args.u32_or("concurrency", p.concurrency)?;
+            if args.has("no-parity") {
+                p.parity = false;
+            }
+            let fig = experiments::fig10::run(&out, p)?;
+            println!("{}", fig.render());
+            println!("outputs written to {}", out.display());
+            if !fig.passed() {
+                return Err(provuse::Error::Runtime(
+                    "FIG10 replica-scaling checks failed".into(),
+                ));
+            }
+            Ok(())
+        }
         Some("ram-table") => {
             let out = std::path::PathBuf::from(args.str_or("out", "results/ram"));
             let fig = experiments::fig6::run(&out, workload_from(args)?, compute_from(args))?;
@@ -271,6 +314,7 @@ fn dispatch(args: &Args) -> Result<()> {
             let mut config = PlatformConfig::of_kind(kind).with_compute(compute_from(args));
             apply_fusion_flags(args, &mut config)?;
             apply_cluster_flags(args, &mut config)?;
+            apply_scaling_flags(args, &mut config)?;
             if args.has("vanilla") {
                 config = config.vanilla();
             }
@@ -340,6 +384,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 .scale_latency(scale);
             apply_fusion_flags(args, &mut config)?;
             apply_cluster_flags(args, &mut config)?;
+            apply_scaling_flags(args, &mut config)?;
             if args.has("vanilla") {
                 config = config.vanilla();
             }
@@ -369,6 +414,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20 figure9 [--smoke]    ours: telemetry pipeline at 10^6 requests\n\
                  \x20   [--no-parity]      (windowed recording, bounded memory, verdict\n\
                  \x20                      parity vs full retention; emits BENCH_scale.json)\n\
+                 \x20 figure10 [--smoke]   ours: replica sets under burst (warm-pool +\n\
+                 \x20   [--no-parity]      cold-boot scale-out with zero drops, scale-in\n\
+                 \x20                      to floor, --replicas-max 1 seed-parity trio)\n\
                  \x20 ram-table            §5.2 RAM reductions\n\
                  \x20 cost-table           TAB-COST: double-billing elimination in $\n\
                  \x20 sweep --dim D        ablations (rate|hop|policy|depth|arrival)\n\
@@ -386,7 +434,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  merge side  : --merge-policy [observation-count|cost] --merge-threshold F\n\
                  \x20             --auto-tune (hill-climb weights on post-fuse regret)\n\
                  cluster     : --nodes N --placement [bin-pack|spread|fusion-affinity]\n\
-                 \x20             --node-capacity MB --cross-node-ms MS"
+                 \x20             --node-capacity MB --cross-node-ms MS\n\
+                 scaling     : --replicas-max N --replicas-min N --target-inflight N\n\
+                 \x20             --scale-interval-ms MS --idle-horizon-ms MS --warm-pool N\n\
+                 \x20             --warm-attach-ms MS --concurrency N"
             );
             Ok(())
         }

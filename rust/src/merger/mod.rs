@@ -2,11 +2,13 @@
 //! instances into a single container — and, closing the feedback loop,
 //! breaks regressing groups back apart (see [`split`]).
 //!
-//! Fuse pipeline per request: resolve instances → export filesystems →
-//! collision-preserving union → build fused image → deploy → health gate →
-//! atomic route cutover → drain originals → terminate.  Failures at any
-//! stage roll back (never-routed instances are torn down, the pair goes on
-//! cooldown) and the platform keeps serving from the originals.
+//! Fuse pipeline per request: resolve replica sets → export filesystems →
+//! collision-preserving union → build fused image → deploy one fused
+//! replica per slot of the busier endpoint → health gate → atomic route
+//! cutover to the fused set → drain every original replica → terminate.
+//! Failures at any stage roll back (never-routed instances are torn down,
+//! the pair goes on cooldown) and the platform keeps serving from the
+//! originals.
 //!
 //! Split pipeline (defusion) per request: re-deploy the original
 //! per-function instances from their retained images → health gate →
@@ -29,6 +31,7 @@ use crate::fusion::{admit_group, FusionRequest, Observer};
 use crate::gateway::Gateway;
 use crate::metrics::{MergeEvent, Recorder};
 use crate::platform::deployer::Deployer;
+use crate::replica::ReplicaSet;
 
 /// Everything the Merger needs from the platform.
 pub struct MergerCtx {
@@ -119,14 +122,21 @@ impl Merger {
         let ctx = &self.ctx;
         ctx.metrics.bump("fusion_requests");
 
-        // 1. resolve both endpoints to their *current* instances (either may
-        //    already be a fused instance -> transitive growth)
-        let a = ctx.gateway.resolve(caller)?;
-        let b = ctx.gateway.resolve(callee)?;
-        if a.id() == b.id() {
+        // 1. resolve both endpoints to their *current* replica sets (either
+        //    may already be a fused set -> transitive growth); sharing one
+        //    set IS the "fused together" relation
+        let set_a = ctx.gateway.resolve_set(caller)?;
+        let set_b = ctx.gateway.resolve_set(callee)?;
+        if Rc::ptr_eq(&set_a, &set_b) {
             ctx.metrics.bump("fusion_already_colocated");
             return Ok(());
         }
+        let a = set_a.primary().ok_or_else(|| {
+            Error::FusionAborted(format!("`{caller}` has no live replica"))
+        })?;
+        let b = set_b.primary().ok_or_else(|| {
+            Error::FusionAborted(format!("`{callee}` has no live replica"))
+        })?;
         let policy = ctx.observer.policy();
         if !policy.transitive && (a.fn_count() > 1 || b.fn_count() > 1) {
             return Err(Error::FusionAborted("transitive growth disabled".into()));
@@ -151,23 +161,30 @@ impl Merger {
         let t_start = exec::now();
 
         // 2. co-location precondition: an inline call needs a shared
-        //    process, which first needs a shared node.  When the endpoints
-        //    live apart, migrate the callee's instance to the caller's
+        //    process, which first needs a shared node.  When any callee
+        //    replica lives apart, migrate the callee's set to the caller's
         //    node before any image work — the cost planner already priced
         //    this move (`MergeContext::migration_ms`) and capacity-gated
         //    it, and the migrator re-checks capacity regardless (the
         //    observation-count policy has no planner to do it for it).
         let target_node = ctx.cluster.node_of(a.id()).unwrap_or(NodeId(0));
-        let b = match ctx.cluster.node_of(b.id()) {
-            Some(node_b) if node_b != target_node => {
-                let fns: Vec<String> =
-                    b.functions().iter().map(|(n, _)| n.clone()).collect();
-                let fresh =
-                    self.migrator().migrate(&fns, target_node, "fusion_colocation").await?;
-                ctx.metrics.bump("fusion_colocation_migrations");
-                fresh
-            }
-            _ => b,
+        let b = if set_b
+            .live()
+            .iter()
+            .any(|i| matches!(ctx.cluster.node_of(i.id()), Some(n) if n != target_node))
+        {
+            let fns: Vec<String> =
+                b.functions().iter().map(|(n, _)| n.clone()).collect();
+            self.migrator().migrate(&fns, target_node, "fusion_colocation").await?;
+            ctx.metrics.bump("fusion_colocation_migrations");
+            // the set was rewritten in place; re-sample a live replica
+            set_b.primary().ok_or_else(|| {
+                Error::FusionAborted(format!(
+                    "`{callee}` lost its replicas during co-location"
+                ))
+            })?
+        } else {
+            b
         };
 
         // 3. export + union filesystems (collision-preserving)
@@ -183,17 +200,32 @@ impl Merger {
         let image = ctx.containers.build_image(merged, functions.clone()).await?;
 
         // 5. deploy on the caller's node (platform-flavored: direct or
-        //    reconciler-gated) — the fused instance inherits the placement
-        //    the co-location step just established
-        let fused = ctx.deployer.launch(image, target_node).await?;
+        //    reconciler-gated) — the fused set inherits the placement the
+        //    co-location step just established, at the replica count of the
+        //    busier endpoint (fusing a 4-replica caller with a 1-replica
+        //    callee must not shrink the caller's capacity)
+        let replica_count = set_a.live_len().max(set_b.live_len()).max(1);
+        let mut fused_replicas: Vec<Rc<Instance>> = Vec::with_capacity(replica_count);
+        for _ in 0..replica_count {
+            match ctx.deployer.launch(image, target_node).await {
+                Ok(inst) => fused_replicas.push(inst),
+                Err(err) => {
+                    self.teardown(&fused_replicas);
+                    return Err(err);
+                }
+            }
+        }
 
-        // 6. health gate: N consecutive successes before any traffic cutover
-        self.await_healthy(&fused).await.inspect_err(|_| {
-            ctx.metrics.bump("fusion_health_timeouts");
-            // roll back the never-routed instance
-            let _ = fused.begin_drain();
-            let _ = ctx.containers.terminate(&fused);
-        })?;
+        // 6. health gate: N consecutive successes on EVERY replica before
+        //    any traffic cutover (boots overlap; the waits are sequential)
+        for inst in &fused_replicas {
+            if let Err(err) = self.await_healthy(inst).await {
+                ctx.metrics.bump("fusion_health_timeouts");
+                // roll back the never-routed replicas
+                self.teardown(&fused_replicas);
+                return Err(err);
+            }
+        }
 
         // 7. capture the pre-fusion latency regime for the feedback
         //    controller, then atomically swap routes for every hosted
@@ -210,7 +242,8 @@ impl Merger {
             )
         };
         let names: Vec<String> = functions.iter().map(|(n, _)| n.clone()).collect();
-        ctx.gateway.swap_routes(&names, Rc::clone(&fused))?;
+        let fused = ReplicaSet::new(fused_replicas, image);
+        ctx.gateway.swap_routes_set(&names, Rc::clone(&fused))?;
         let now = exec::now();
         ctx.metrics.record_merge(MergeEvent {
             t_ms: ctx.metrics.rel_now_ms(),
@@ -220,13 +253,26 @@ impl Merger {
         ctx.metrics.bump("fusions_completed");
         ctx.observer.fusion_succeeded(caller, callee, &names, baseline_p95_ms);
 
-        // 8. drain + terminate the originals off the merge loop ("stopped
-        //    and deleted as soon as they are no longer processing requests")
-        for old in [a, b] {
+        // 8. drain + terminate every original replica of both endpoints off
+        //    the merge loop ("stopped and deleted as soon as they are no
+        //    longer processing requests").  Retire the old sets first so a
+        //    scale-up that raced this cutover cannot attach a fresh replica
+        //    to either of them.
+        set_a.retire();
+        set_b.retire();
+        for old in set_a.live().into_iter().chain(set_b.live()) {
             old.begin_drain()?;
             self.reclaim_when_drained(old);
         }
         Ok(())
+    }
+
+    /// Tear down never-routed replicas after a mid-pipeline failure.
+    fn teardown(&self, never_routed: &[Rc<Instance>]) {
+        for inst in never_routed {
+            let _ = inst.begin_drain();
+            let _ = self.ctx.containers.terminate(inst);
+        }
     }
 
     /// Terminate `old` once its in-flight requests have drained (detached;

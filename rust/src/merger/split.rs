@@ -4,17 +4,18 @@
 //! `max_group_ram_mb` or p95 past the hysteresis threshold — the Merger
 //! re-deploys the group's functions from their **retained original
 //! images** (no image build: the initial per-function artifacts were never
-//! discarded), health-gates every replacement, atomically cuts the routes
-//! back over, and drains + terminates the fused instance.
+//! discarded) at the fused set's replica count, health-gates every
+//! replacement, atomically cuts the routes back over, and drains +
+//! terminates every fused replica.
 //!
 //! Failure at any stage rolls back: the never-routed replacements are torn
-//! down, the fused instance keeps serving, and the group re-enters cooldown
+//! down, the fused set keeps serving, and the group re-enters cooldown
 //! (`Observer::split_failed`), so a flaky split can never drop a request.
 //!
 //! The **partial-split** pipeline ([`Merger::handle_evict`]) is the same
 //! machinery scoped to one member: redeploy only the evicted function's
 //! original image, health-gate it, atomically re-route just its edges, and
-//! shrink the fused instance in place (the remainder keeps serving and
+//! shrink every fused replica in place (the remainder keeps serving and
 //! never stops).  Only the evicted pairs enter cooldown.
 
 use std::rc::Rc;
@@ -25,20 +26,31 @@ use crate::error::{Error, Result};
 use crate::exec;
 use crate::fusion::SplitReason;
 use crate::metrics::{EvictEvent, SplitEvent};
+use crate::replica::ReplicaSet;
 
 use super::Merger;
 
 impl Merger {
-    /// Resolve the live fused instance hosting the sampled `functions` and
-    /// verify the sampled membership is still the live topology: the
-    /// instance's active set equals the (sorted) sample and every member
-    /// still routes to it.  Shared staleness gate of the split and evict
-    /// pipelines; returns `(fused instance, sorted membership)`.
-    fn resolve_live_group(&self, functions: &[String]) -> Result<(Rc<Instance>, Vec<String>)> {
+    /// Resolve the live fused replica set hosting the sampled `functions`
+    /// and verify the sampled membership is still the live topology: the
+    /// set's active function set equals the (sorted) sample and every
+    /// member still routes to the same set.  Shared staleness gate of the
+    /// split and evict pipelines; returns
+    /// `(fused set, a live replica of it, sorted membership)`.
+    fn resolve_live_group(
+        &self,
+        functions: &[String],
+    ) -> Result<(Rc<ReplicaSet>, Rc<Instance>, Vec<String>)> {
         if functions.len() < 2 {
             return Err(Error::SplitAborted("group has fewer than two functions".into()));
         }
-        let fused = self.ctx.gateway.resolve(&functions[0])?;
+        let set = self.ctx.gateway.resolve_set(&functions[0])?;
+        let fused = set.primary().ok_or_else(|| {
+            Error::SplitAborted(format!(
+                "stale group: `{}` has no live replica",
+                functions[0]
+            ))
+        })?;
         let mut hosted: Vec<String> =
             fused.functions().iter().map(|(n, _)| n.clone()).collect();
         hosted.sort();
@@ -53,14 +65,14 @@ impl Merger {
             )));
         }
         for f in &expected {
-            if self.ctx.gateway.resolve(f)?.id() != fused.id() {
+            if !Rc::ptr_eq(&self.ctx.gateway.resolve_set(f)?, &set) {
                 return Err(Error::SplitAborted(format!(
-                    "stale group: `{f}` no longer routed to instance {}",
-                    fused.id()
+                    "stale group: `{f}` no longer routed with `{}`",
+                    expected[0]
                 )));
             }
         }
-        Ok((fused, expected))
+        Ok((set, fused, expected))
     }
 
     /// One split. Public for targeted tests.
@@ -72,28 +84,33 @@ impl Merger {
         let ctx = &self.ctx;
         ctx.metrics.bump("split_requests");
 
-        // 1. resolve the fused instance and check the sampled membership is
-        //    still the live topology
-        let (fused, expected) = self.resolve_live_group(functions)?;
+        // 1. resolve the fused replica set and check the sampled membership
+        //    is still the live topology
+        let (fused_set, fused, expected) = self.resolve_live_group(functions)?;
 
         let t_start = exec::now();
 
-        // 2. re-deploy one instance per function from its retained original
-        //    image, then health-gate all of them before any traffic moves.
-        //    Replacements stay on the group's home node (single-node
-        //    semantics preserved) — except a node-pressure split, whose
-        //    entire point is shedding that node, so each replacement goes
-        //    wherever the scheduler finds headroom.
+        // 2. re-deploy one replica set per function from its retained
+        //    original image — at the fused set's replica count, so a split
+        //    never shrinks serving capacity — then health-gate every
+        //    replacement before any traffic moves.  Replacements stay on
+        //    the group's home node (single-node semantics preserved) —
+        //    except a node-pressure split, whose entire point is shedding
+        //    that node, so each replacement goes wherever the scheduler
+        //    finds headroom.
         let home = self.ctx.cluster.node_of(fused.id());
-        let fresh = self.deploy_originals(&expected, reason, home).await?;
+        let replica_count = fused_set.live_len().max(1);
+        let fresh = self.deploy_originals(&expected, reason, home, replica_count).await?;
 
-        // 3. atomic cutover: every function back to its own instance
-        let routes: Vec<(String, Rc<Instance>)> = expected
+        // 3. atomic cutover: every function back to its own replica set
+        let routes: Vec<(String, Rc<ReplicaSet>)> = expected
             .iter()
             .cloned()
             .zip(fresh.iter().map(Rc::clone))
             .collect();
-        ctx.gateway.swap_routes_multi(&routes).inspect_err(|_| self.rollback(&fresh))?;
+        ctx.gateway
+            .swap_routes_multi_sets(&routes)
+            .inspect_err(|_| self.rollback_sets(&fresh))?;
 
         let now = exec::now();
         ctx.metrics.record_split(SplitEvent {
@@ -105,9 +122,13 @@ impl Merger {
         ctx.metrics.bump("splits_completed");
         ctx.observer.split_succeeded(&expected);
 
-        // 4. drain + terminate the fused instance off the merge loop
-        fused.begin_drain()?;
-        self.reclaim_when_drained(fused);
+        // 4. drain + terminate every fused replica off the merge loop
+        //    (retired first, so a racing scale-up cannot grow the dead set)
+        fused_set.retire();
+        for old in fused_set.live() {
+            old.begin_drain()?;
+            self.reclaim_when_drained(old);
+        }
         Ok(())
     }
 
@@ -135,14 +156,15 @@ impl Merger {
             )));
         }
 
-        // 1. resolve the fused instance and check the sampled membership is
-        //    still the live topology
-        let (fused, expected) = self.resolve_live_group(functions)?;
+        // 1. resolve the fused replica set and check the sampled membership
+        //    is still the live topology
+        let (fused_set, fused, expected) = self.resolve_live_group(functions)?;
 
         let t_start = exec::now();
 
         // 2. redeploy only the evicted function from its retained original
-        //    image and health-gate it before any traffic moves
+        //    image — at the fused set's replica count — and health-gate the
+        //    replacements before any traffic moves
         let image = match ctx.originals.get(function) {
             Some(id) => *id,
             None => {
@@ -151,60 +173,76 @@ impl Merger {
                 )))
             }
         };
-        // the evicted member returns to its own instance on the group's
+        // the evicted member returns to its own replica set on the group's
         // home node (the defusion objective already priced its RAM there;
         // rebalancing across nodes is the pressure controller's job)
         let home = ctx.cluster.node_of(fused.id()).unwrap_or(NodeId(0));
-        let fresh = ctx.deployer.launch(image, home).await?;
-        self.await_healthy(&fresh).await.inspect_err(|_| {
-            ctx.metrics.bump("evict_health_timeouts");
-            self.rollback(std::slice::from_ref(&fresh));
-        })?;
+        let replica_count = fused_set.live_len().max(1);
+        let mut replicas: Vec<Rc<Instance>> = Vec::with_capacity(replica_count);
+        for _ in 0..replica_count {
+            match ctx.deployer.launch(image, home).await {
+                Ok(inst) => replicas.push(inst),
+                Err(err) => {
+                    self.rollback(&replicas);
+                    return Err(err);
+                }
+            }
+        }
+        for inst in &replicas {
+            if let Err(err) = self.await_healthy(inst).await {
+                ctx.metrics.bump("evict_health_timeouts");
+                self.rollback(&replicas);
+                return Err(err);
+            }
+        }
+        let fresh = ReplicaSet::new(replicas, image);
 
         // 3. the launch + health gate awaited: re-check the topology so a
         //    racing pipeline cannot have invalidated the plan while we
         //    waited (nothing is committed yet — abort tears down only the
-        //    never-routed replacement)
+        //    never-routed replacements)
         for f in &expected {
-            let routed = match ctx.gateway.resolve(f) {
-                Ok(inst) => inst,
+            let routed = match ctx.gateway.resolve_set(f) {
+                Ok(routed) => routed,
                 Err(err) => {
-                    self.rollback(std::slice::from_ref(&fresh));
+                    self.rollback(&fresh.live());
                     return Err(err);
                 }
             };
-            if routed.id() != fused.id() {
-                self.rollback(std::slice::from_ref(&fresh));
+            if !Rc::ptr_eq(&routed, &fused_set) {
+                self.rollback(&fresh.live());
                 return Err(Error::SplitAborted(format!(
-                    "group changed during redeploy: `{f}` moved off instance {}",
-                    fused.id()
+                    "group changed during redeploy: `{f}` moved off its \
+                     replica set"
                 )));
             }
         }
-        if !fused.hosts(function) {
-            self.rollback(std::slice::from_ref(&fresh));
+        if !fused_set.live().iter().all(|i| i.hosts(function)) {
+            self.rollback(&fresh.live());
             return Err(Error::SplitAborted(format!(
-                "group changed during redeploy: instance {} no longer hosts `{function}`",
-                fused.id()
+                "group changed during redeploy: the fused set no longer \
+                 hosts `{function}`"
             )));
         }
 
         // 4. atomic cutover of just the evicted function's route
         ctx.gateway
-            .swap_routes_multi(&[(function.to_string(), Rc::clone(&fresh))])
-            .inspect_err(|_| self.rollback(std::slice::from_ref(&fresh)))?;
+            .swap_routes_multi_sets(&[(function.to_string(), Rc::clone(&fresh))])
+            .inspect_err(|_| self.rollback(&fresh.live()))?;
 
-        // 5. shrink the fused group in place: the instance keeps serving the
+        // 5. shrink every fused replica in place: each keeps serving the
         //    remaining members and unloads the evicted function's code (its
-        //    in-flight requests finish on the old instance — zero drops).
-        //    Should the shrink fail despite the re-check above, undo the
+        //    in-flight requests finish on the old replicas — zero drops).
+        //    Should a shrink fail despite the re-check above, undo the
         //    cutover so the topology never ends with two active hosts.
-        if let Err(err) = fused.evict_function(function) {
-            let _ = ctx
-                .gateway
-                .swap_routes_multi(&[(function.to_string(), Rc::clone(&fused))]);
-            self.rollback(std::slice::from_ref(&fresh));
-            return Err(err);
+        for old in fused_set.live() {
+            if let Err(err) = old.evict_function(function) {
+                let _ = ctx
+                    .gateway
+                    .swap_routes_multi_sets(&[(function.to_string(), Rc::clone(&fused_set))]);
+                self.rollback(&fresh.live());
+                return Err(err);
+            }
         }
 
         ctx.metrics.record_evict(EvictEvent {
@@ -219,50 +257,67 @@ impl Merger {
         Ok(())
     }
 
-    /// Launch a replacement instance per function and wait until every one
-    /// is healthy.  Any failure tears down all replacements and bubbles the
-    /// error (the fused instance was never un-routed, so it keeps serving).
+    /// Launch a replacement replica set per function (each at
+    /// `replica_count` replicas) and wait until every replica is healthy.
+    /// Any failure tears down all replacements and bubbles the error (the
+    /// fused set was never un-routed, so it keeps serving).
     async fn deploy_originals(
         &self,
         functions: &[String],
         reason: SplitReason,
         home: Option<NodeId>,
-    ) -> Result<Vec<Rc<Instance>>> {
+        replica_count: usize,
+    ) -> Result<Vec<Rc<ReplicaSet>>> {
         let ctx = &self.ctx;
-        let mut fresh: Vec<Rc<Instance>> = Vec::with_capacity(functions.len());
+        let mut launched: Vec<Rc<Instance>> = Vec::new();
+        let mut fresh: Vec<Rc<ReplicaSet>> = Vec::with_capacity(functions.len());
         for f in functions {
             let image = match ctx.originals.get(f) {
                 Some(id) => *id,
                 None => {
-                    self.rollback(&fresh);
+                    self.rollback(&launched);
                     return Err(Error::SplitAborted(format!(
                         "no retained original image for `{f}`"
                     )));
                 }
             };
-            let node = match self.replacement_node(image, reason, home) {
-                Ok(node) => node,
-                Err(err) => {
-                    self.rollback(&fresh);
-                    return Err(err);
-                }
-            };
-            match ctx.deployer.launch(image, node).await {
-                Ok(inst) => fresh.push(inst),
-                Err(err) => {
-                    self.rollback(&fresh);
-                    return Err(err);
+            let mut replicas: Vec<Rc<Instance>> = Vec::with_capacity(replica_count);
+            for _ in 0..replica_count {
+                let node = match self.replacement_node(image, reason, home) {
+                    Ok(node) => node,
+                    Err(err) => {
+                        self.rollback(&launched);
+                        return Err(err);
+                    }
+                };
+                match ctx.deployer.launch(image, node).await {
+                    Ok(inst) => {
+                        launched.push(Rc::clone(&inst));
+                        replicas.push(inst);
+                    }
+                    Err(err) => {
+                        self.rollback(&launched);
+                        return Err(err);
+                    }
                 }
             }
+            fresh.push(ReplicaSet::new(replicas, image));
         }
-        for inst in &fresh {
+        for inst in &launched {
             if let Err(err) = self.await_healthy(inst).await {
                 ctx.metrics.bump("split_health_timeouts");
-                self.rollback(&fresh);
+                self.rollback(&launched);
                 return Err(err);
             }
         }
         Ok(fresh)
+    }
+
+    /// Tear down every replica of never-routed replacement sets.
+    fn rollback_sets(&self, fresh: &[Rc<ReplicaSet>]) {
+        for set in fresh {
+            self.rollback(&set.live());
+        }
     }
 
     /// Node a split replacement deploys to: the group's home node, except

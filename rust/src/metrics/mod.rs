@@ -53,6 +53,7 @@ pub enum RecordingLevel {
 }
 
 impl RecordingLevel {
+    /// Stable label (`full`/`windowed`) for CLI flags and exports.
     pub fn name(&self) -> &'static str {
         match self {
             RecordingLevel::Full => "full",
@@ -60,6 +61,7 @@ impl RecordingLevel {
         }
     }
 
+    /// Parse a recording-level name from the CLI.
     pub fn parse(s: &str) -> crate::error::Result<Self> {
         match s {
             "full" => Ok(RecordingLevel::Full),
@@ -75,8 +77,11 @@ impl RecordingLevel {
 /// each; retention = `buckets x bucket_ms`.
 #[derive(Debug, Clone)]
 pub struct RecordingConfig {
+    /// raw-series retention tier
     pub level: RecordingLevel,
+    /// windowed-shard bucket width (virtual ms)
     pub bucket_ms: f64,
+    /// ring length; retention = `buckets * bucket_ms`
     pub buckets: usize,
 }
 
@@ -102,6 +107,7 @@ impl RecordingConfig {
         }
     }
 
+    /// Trailing span the windowed shards retain (ms).
     pub fn retention_ms(&self) -> f64 {
         self.bucket_ms * self.buckets as f64
     }
@@ -119,6 +125,7 @@ pub struct LatencySample {
 /// One RAM ledger sample.
 #[derive(Debug, Clone, Copy)]
 pub struct RamSample {
+    /// virtual timestamp (ms)
     pub t_ms: f64,
     /// total platform RAM across live instances (MiB)
     pub total_mb: f64,
@@ -130,13 +137,16 @@ pub struct RamSample {
 /// record one series for node-0 that mirrors the platform series).
 #[derive(Debug, Clone, Copy)]
 pub struct NodeRamSample {
+    /// virtual timestamp (ms)
     pub t_ms: f64,
+    /// node sampled
     pub node: NodeId,
     /// RAM across the node's live instances (MiB)
     pub ram_mb: f64,
     /// the node's capacity (MiB; 0 = uncapped) — recorded so the CSV is
     /// self-describing for pressure plots
     pub capacity_mb: f64,
+    /// the node's live instance count
     pub instances: usize,
 }
 
@@ -148,7 +158,9 @@ pub struct MigrationEvent {
     pub t_ms: f64,
     /// functions the migrated instance actively hosts (sorted)
     pub functions: Vec<String>,
+    /// source node
     pub from: NodeId,
+    /// target node
     pub to: NodeId,
     /// wall (virtual) duration of the migration pipeline (ms)
     pub duration_ms: f64,
@@ -181,10 +193,32 @@ pub struct SplitEvent {
     pub reason: SplitReason,
 }
 
+/// One autoscaler replica-count transition on a route (FIG10): a
+/// scale-up (cold boot or warm-pool claim), a scale-down, or a
+/// scale-to-zero.
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    /// virtual time the transition was applied (ms)
+    pub t_ms: f64,
+    /// route label (the first hosted function of the replica set)
+    pub function: String,
+    /// routable replica count before the transition
+    pub from: u32,
+    /// routable replica count after the transition
+    pub to: u32,
+    /// what drove it ("burst", "scale-down", "scale-to-zero",
+    /// "scale-from-zero")
+    pub reason: &'static str,
+    /// scale-ups only: satisfied from the warm pool (attach delay) rather
+    /// than a cold boot
+    pub warm: bool,
+}
+
 /// One RAM attribution sample for a live fused group (the controller's
 /// per-group view, recorded every feedback tick).
 #[derive(Debug, Clone)]
 pub struct GroupRamSample {
+    /// virtual timestamp of the controller tick (ms)
     pub t_ms: f64,
     /// `+`-joined sorted function names identifying the group
     pub group: String,
@@ -200,6 +234,7 @@ pub struct GroupRamSample {
 pub struct FnSample {
     /// virtual time the handler finished the function body (ms since epoch)
     pub t_ms: f64,
+    /// function the sample belongs to
     pub function: String,
     /// handler self time: dispatch/inline charge + compute + busy time,
     /// excluding time blocked on outbound calls (ms)
@@ -211,9 +246,11 @@ pub struct FnSample {
 /// recorded by the controller every feedback tick.
 #[derive(Debug, Clone)]
 pub struct FnRamSample {
+    /// virtual timestamp of the controller tick (ms)
     pub t_ms: f64,
     /// `+`-joined sorted names of the hosting group
     pub group: String,
+    /// member function attributed
     pub function: String,
     /// attributed RAM (MiB); group members sum to the instance's RAM
     pub ram_mb: f64,
@@ -223,11 +260,15 @@ pub struct FnRamSample {
 /// time a candidate pair is re-scored against fresh window signals).
 #[derive(Debug, Clone)]
 pub struct AdmissionSample {
+    /// virtual timestamp of the evaluation (ms)
     pub t_ms: f64,
+    /// candidate caller
     pub caller: String,
+    /// candidate callee
     pub callee: String,
     /// predicted net benefit (see `fusion::cost::CostModel::predict_merge`)
     pub score: f64,
+    /// verdict: `score >= merge_threshold` and the churn gate passed
     pub admitted: bool,
 }
 
@@ -236,9 +277,13 @@ pub struct AdmissionSample {
 /// hill-climb step so the series doubles as the weight trajectory.
 #[derive(Debug, Clone)]
 pub struct RegretSample {
+    /// virtual timestamp of the regret (ms)
     pub t_ms: f64,
+    /// caller of the regretted fuse
     pub caller: String,
+    /// callee of the regretted fuse
     pub callee: String,
+    /// weights after the hill-climb step
     pub w_latency: f64,
     pub w_ram: f64,
     pub w_gbs: f64,
@@ -582,6 +627,7 @@ struct RecorderInner {
     merges: RefCell<Vec<MergeEvent>>,
     splits: RefCell<Vec<SplitEvent>>,
     evicts: RefCell<Vec<EvictEvent>>,
+    scales: RefCell<Vec<ScaleEvent>>,
     admissions: RefCell<Vec<AdmissionSample>>,
     regrets: RefCell<Vec<RegretSample>>,
     // -- windowed shards (every level: the controller's signal source) -----
@@ -618,6 +664,7 @@ impl Recorder {
                 merges: RefCell::new(Vec::new()),
                 splits: RefCell::new(Vec::new()),
                 evicts: RefCell::new(Vec::new()),
+                scales: RefCell::new(Vec::new()),
                 admissions: RefCell::new(Vec::new()),
                 regrets: RefCell::new(Vec::new()),
                 e2e: RefCell::new(e2e),
@@ -631,6 +678,7 @@ impl Recorder {
         }
     }
 
+    /// The recorder's retention tier.
     pub fn level(&self) -> RecordingLevel {
         self.inner.config.level
     }
@@ -651,6 +699,7 @@ impl Recorder {
         crate::exec::now().as_millis_f64() - self.inner.epoch_ms.get()
     }
 
+    /// Record one end-to-end request latency.
     pub fn record_latency(&self, t_ms: f64, latency_ms: f64) {
         if self.full() {
             self.inner.latencies.borrow_mut().push(LatencySample { t_ms, latency_ms });
@@ -659,6 +708,7 @@ impl Recorder {
         self.inner.latency_count.set(self.inner.latency_count.get() + 1);
     }
 
+    /// Record a platform-wide RAM sample.
     pub fn record_ram(&self, t_ms: f64, total_mb: f64, instances: usize) {
         if self.full() {
             self.inner.ram.borrow_mut().push(RamSample { t_ms, total_mb, instances });
@@ -666,16 +716,19 @@ impl Recorder {
         self.inner.ram_accum.borrow_mut().push(t_ms, total_mb);
     }
 
+    /// Record one node's RAM sample (cluster mode).
     pub fn record_node_ram(&self, sample: NodeRamSample) {
         if self.full() {
             self.inner.node_ram.borrow_mut().push(sample);
         }
     }
 
+    /// Record a completed live migration.
     pub fn record_migration(&self, event: MigrationEvent) {
         self.inner.migrations.borrow_mut().push(event);
     }
 
+    /// Record one fused group's attributed RAM at a tick.
     pub fn record_group_ram(&self, t_ms: f64, group: GroupKey, ram_mb: f64) {
         if self.full() {
             self.inner.group_ram.borrow_mut().push(GroupRamSample {
@@ -686,6 +739,7 @@ impl Recorder {
         }
     }
 
+    /// Record one function's handler self-time sample.
     pub fn record_fn_latency(&self, t_ms: f64, function: Sym, handler_ms: f64) {
         if self.full() {
             self.inner.fn_latencies.borrow_mut().push(FnSample {
@@ -703,6 +757,7 @@ impl Recorder {
             .record(t_ms, handler_ms);
     }
 
+    /// Record one function's attributed RAM inside its group.
     pub fn record_fn_ram(&self, t_ms: f64, group: GroupKey, function: Sym, ram_mb: f64) {
         if self.full() {
             self.inner.fn_ram.borrow_mut().push(FnRamSample {
@@ -714,80 +769,110 @@ impl Recorder {
         }
     }
 
+    /// Record a completed fuse cutover.
     pub fn record_merge(&self, event: MergeEvent) {
         self.inner.merges.borrow_mut().push(event);
     }
 
+    /// Record a completed split.
     pub fn record_split(&self, event: SplitEvent) {
         self.inner.splits.borrow_mut().push(event);
     }
 
+    /// Record a completed eviction (shrink-in-place).
     pub fn record_evict(&self, event: EvictEvent) {
         self.inner.evicts.borrow_mut().push(event);
     }
 
+    /// Record a replica-count transition (event series: retained at every
+    /// recording level, like the other low-rate pipeline events).
+    pub fn record_scale(&self, event: ScaleEvent) {
+        self.inner.scales.borrow_mut().push(event);
+    }
+
+    /// Record a merge-admission evaluation.
     pub fn record_admission(&self, sample: AdmissionSample) {
         self.inner.admissions.borrow_mut().push(sample);
     }
 
+    /// Record an auto-tune regret (weights after the step).
     pub fn record_regret(&self, sample: RegretSample) {
         self.inner.regrets.borrow_mut().push(sample);
     }
 
+    /// Increment a named counter.
     pub fn bump(&self, name: &'static str) {
         *self.inner.counters.borrow_mut().entry(name).or_insert(0) += 1;
     }
 
+    /// Read a named counter (0 if never bumped).
     pub fn counter(&self, name: &'static str) -> u64 {
         self.inner.counters.borrow().get(name).copied().unwrap_or(0)
     }
 
     // -- accessors ----------------------------------------------------------
 
+    /// Snapshot of the end-to-end latency series.
     pub fn latencies(&self) -> Vec<LatencySample> {
         self.inner.latencies.borrow().clone()
     }
 
+    /// Snapshot of the platform RAM series.
     pub fn ram_series(&self) -> Vec<RamSample> {
         self.inner.ram.borrow().clone()
     }
 
+    /// Snapshot of the per-node RAM series.
     pub fn node_ram_series(&self) -> Vec<NodeRamSample> {
         self.inner.node_ram.borrow().clone()
     }
 
+    /// Snapshot of the migration events.
     pub fn migrations(&self) -> Vec<MigrationEvent> {
         self.inner.migrations.borrow().clone()
     }
 
+    /// Snapshot of the merge events.
     pub fn merges(&self) -> Vec<MergeEvent> {
         self.inner.merges.borrow().clone()
     }
 
+    /// Snapshot of the split events.
     pub fn splits(&self) -> Vec<SplitEvent> {
         self.inner.splits.borrow().clone()
     }
 
+    /// Snapshot of the evict events.
     pub fn evicts(&self) -> Vec<EvictEvent> {
         self.inner.evicts.borrow().clone()
     }
 
+    /// Snapshot of the replica scale events.
+    pub fn scales(&self) -> Vec<ScaleEvent> {
+        self.inner.scales.borrow().clone()
+    }
+
+    /// Snapshot of the per-group RAM attribution series.
     pub fn group_ram_series(&self) -> Vec<GroupRamSample> {
         self.inner.group_ram.borrow().clone()
     }
 
+    /// Snapshot of the per-function self-time series.
     pub fn fn_latency_series(&self) -> Vec<FnSample> {
         self.inner.fn_latencies.borrow().clone()
     }
 
+    /// Snapshot of the per-function RAM attribution series.
     pub fn fn_ram_series(&self) -> Vec<FnRamSample> {
         self.inner.fn_ram.borrow().clone()
     }
 
+    /// Snapshot of the admission evaluations.
     pub fn admissions(&self) -> Vec<AdmissionSample> {
         self.inner.admissions.borrow().clone()
     }
 
+    /// Snapshot of the auto-tune regrets.
     pub fn regrets(&self) -> Vec<RegretSample> {
         self.inner.regrets.borrow().clone()
     }
@@ -941,6 +1026,7 @@ impl Recorder {
             .collect()
     }
 
+    /// End-to-end latency samples recorded so far.
     pub fn request_count(&self) -> usize {
         self.inner.latency_count.get() as usize
     }
@@ -1043,6 +1129,8 @@ impl Recorder {
         b += i.merges.borrow().capacity() * size_of::<MergeEvent>();
         b += i.splits.borrow().capacity() * size_of::<SplitEvent>();
         b += i.evicts.borrow().capacity() * size_of::<EvictEvent>();
+        b += i.scales.borrow().capacity() * size_of::<ScaleEvent>()
+            + i.scales.borrow().iter().map(|s| s.function.capacity()).sum::<usize>();
         b += i.admissions.borrow().capacity() * size_of::<AdmissionSample>();
         b += i.regrets.borrow().capacity() * size_of::<RegretSample>();
         b += i.e2e.borrow().approx_bytes();
@@ -1129,6 +1217,19 @@ impl Recorder {
                 s.duration_ms,
                 s.reason.name(),
                 s.functions.join("+")
+            ));
+        }
+        out
+    }
+
+    /// CSV export of autoscaler transitions
+    /// (`t_ms,function,from,to,reason,warm`).
+    pub fn scales_csv(&self) -> String {
+        let mut out = String::from("t_ms,function,from,to,reason,warm\n");
+        for s in self.inner.scales.borrow().iter() {
+            out.push_str(&format!(
+                "{:.3},{},{},{},{},{}\n",
+                s.t_ms, s.function, s.from, s.to, s.reason, s.warm
             ));
         }
         out
@@ -1339,6 +1440,45 @@ mod tests {
         let r2 = r.clone();
         r2.record_latency(0.0, 1.0);
         assert_eq!(r.request_count(), 1);
+    }
+
+    #[test]
+    fn scale_events_recorded_and_exported() {
+        let r = Recorder::new();
+        r.record_scale(ScaleEvent {
+            t_ms: 12.0,
+            function: "f0".into(),
+            from: 1,
+            to: 2,
+            reason: "burst",
+            warm: true,
+        });
+        r.record_scale(ScaleEvent {
+            t_ms: 90.0,
+            function: "f0".into(),
+            from: 2,
+            to: 0,
+            reason: "scale-to-zero",
+            warm: false,
+        });
+        assert_eq!(r.scales().len(), 2);
+        assert!(r.scales()[0].warm && r.scales()[1].to == 0);
+        assert!(r.scales_csv().contains("12.000,f0,1,2,burst,true"));
+        assert!(r.scales_csv().contains("90.000,f0,2,0,scale-to-zero,false"));
+        // event series survive windowed recording like the other pipelines
+        let w = Recorder::with_config(RecordingConfig {
+            level: RecordingLevel::Windowed,
+            ..RecordingConfig::default()
+        });
+        w.record_scale(ScaleEvent {
+            t_ms: 1.0,
+            function: "g".into(),
+            from: 0,
+            to: 1,
+            reason: "scale-from-zero",
+            warm: false,
+        });
+        assert_eq!(w.scales().len(), 1);
     }
 
     #[test]

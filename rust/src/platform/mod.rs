@@ -44,59 +44,77 @@ pub fn fused_groups_of(gateway: &Gateway) -> Vec<Rc<Instance>> {
 }
 
 /// Check the routing invariants any quiescent topology must satisfy, no
-/// matter what Fuse/Split/Evict history produced it:
+/// matter what Fuse/Split/Evict/Scale history produced it:
 ///
-/// 1. every app function has exactly one route, to a **live** instance
-///    that actively hosts it;
-/// 2. no function is served by two instances — the live instances' active
-///    hosting sets are pairwise disjoint;
-/// 3. the routing table is a bijection onto the live instances: every live
-///    instance is routed to and every routed instance is live.
+/// 1. every app function has exactly one route, to a replica set whose
+///    replicas are all **live** and all actively host it;
+/// 2. no function is served by two replica sets — distinct sets' active
+///    hosting sets are pairwise disjoint (replicas *within* one set
+///    deliberately serve the same functions);
+/// 3. the routing table plus the warm pool is a bijection onto the live
+///    instances: every live instance is either a routed replica or a
+///    pooled blank, and every routed replica is live.
 ///
 /// Returns a description of the first violation (the property suite's
 /// and mutation checks' shared oracle).  Call only after drains settle —
 /// mid-pipeline topologies legitimately hold originals that are still
 /// draining.
 pub fn routing_invariants(platform: &Platform) -> std::result::Result<(), String> {
-    let snapshot = platform.gateway.snapshot();
+    let sets = platform.gateway.snapshot_sets();
     for f in platform.app.functions() {
-        if !snapshot.iter().any(|(name, _)| name == &f.name) {
+        if !sets.iter().any(|(name, _)| name == &f.name) {
             return Err(format!("function `{}` has no route", f.name));
         }
     }
-    for (function, inst) in &snapshot {
-        if !inst.state().is_live() {
-            return Err(format!("`{function}` routed to dead instance {}", inst.id()));
-        }
-        if !inst.hosts(function) {
-            return Err(format!(
-                "`{function}` routed to instance {} which does not actively host it",
-                inst.id()
-            ));
+    for (function, set) in &sets {
+        for inst in set.replicas() {
+            if !inst.state().is_live() {
+                return Err(format!(
+                    "`{function}` routed to dead replica {}",
+                    inst.id()
+                ));
+            }
+            if !inst.hosts(function) {
+                return Err(format!(
+                    "`{function}` routed to replica {} which does not actively host it",
+                    inst.id()
+                ));
+            }
         }
     }
-    let mut owner: BTreeMap<String, u64> = BTreeMap::new();
+    let mut owner: BTreeMap<String, usize> = BTreeMap::new();
     let mut seen = HashSet::new();
-    for (_, inst) in &snapshot {
-        if !seen.insert(inst.id()) {
+    for (_, set) in &sets {
+        let key = Rc::as_ptr(set) as usize;
+        if !seen.insert(key) {
             continue;
         }
-        for (f, _) in inst.functions() {
-            if let Some(prev) = owner.insert(f.clone(), inst.id().0) {
-                if prev != inst.id().0 {
-                    return Err(format!(
-                        "`{f}` actively hosted by two live instances ({prev} and {})",
-                        inst.id().0
-                    ));
+        for inst in set.replicas() {
+            for (f, _) in inst.functions() {
+                if let Some(prev) = owner.insert(f.clone(), key) {
+                    if prev != key {
+                        return Err(format!(
+                            "`{f}` actively hosted by two live replica sets \
+                             (replica {} is in the second)",
+                            inst.id()
+                        ));
+                    }
                 }
             }
         }
     }
     let live = platform.cluster.live_count();
     let routed = platform.gateway.distinct_instances();
-    if routed != live {
+    let pooled = platform
+        .scaler
+        .pool()
+        .iter()
+        .filter(|i| i.state() != InstanceState::Terminated)
+        .count();
+    if routed + pooled != live {
         return Err(format!(
-            "routing table covers {routed} distinct instances but {live} are live"
+            "routing table covers {routed} distinct replicas (+{pooled} \
+             warm-pooled) but {live} are live"
         ));
     }
     Ok(())
@@ -114,6 +132,9 @@ pub struct Platform {
     pub metrics: Recorder,
     pub observer: Rc<Observer>,
     pub billing: BillingLedger,
+    /// replica supplier: warm pool + cold boots (autoscaler and
+    /// scale-from-zero both draw from it)
+    pub scaler: Rc<crate::replica::Scaler>,
     dispatcher: Dispatcher,
     start: SimInstant,
     sampler_stop: Rc<Cell<bool>>,
@@ -140,6 +161,39 @@ impl Platform {
                  signals"
                     .into(),
             ));
+        }
+        // Replica-set bounds: a zero ceiling would deploy routes no replica
+        // can ever serve, and an empty/inverted floor is a config typo, not
+        // a topology.  Reject both up front with the flag names.
+        if config.scaling.replicas_max == 0 {
+            return Err(crate::error::Error::Config(
+                "--replicas-max 0 would deploy routes no replica can serve; \
+                 use --replicas-max 1 for the seed's one-instance-per-function \
+                 shape"
+                    .into(),
+            ));
+        }
+        if config.scaling.replicas_min == 0
+            || config.scaling.replicas_min > config.scaling.replicas_max
+        {
+            return Err(crate::error::Error::Config(format!(
+                "--replicas-min {} must be between 1 and --replicas-max {}",
+                config.scaling.replicas_min, config.scaling.replicas_max
+            )));
+        }
+        // A warm pool that cannot physically fit the cluster would fail
+        // half-deployed at prewarm time; refuse it whole instead.
+        if config.cluster.node_capacity_mb > 0.0 {
+            let fleet_mb =
+                config.cluster.node_capacity_mb * config.cluster.nodes.max(1) as f64;
+            let pool_mb = config.scaling.warm_pool as f64 * config.ram.base_instance_mb;
+            if pool_mb > fleet_mb {
+                return Err(crate::error::Error::Config(format!(
+                    "--warm-pool {} needs {pool_mb:.0} MiB of blank instances \
+                     but the cluster caps at {fleet_mb:.0} MiB",
+                    config.scaling.warm_pool
+                )));
+            }
         }
         let config = Rc::new(config);
         let cluster = Cluster::new(&config);
@@ -192,10 +246,28 @@ impl Platform {
             originals.insert(f.name.clone(), image);
             let node = placement.get(&f.name).copied().unwrap_or(NodeId(0));
             let inst = cluster.launch_on(node, image)?;
-            gateway.set_route(&f.name, Rc::clone(&inst));
-            instances.push(inst);
+            instances.push(Rc::clone(&inst));
+            let set = crate::replica::ReplicaSet::singleton(inst);
+            // --replicas-min above 1: boot the floor's extra replicas
+            // alongside the founder, each placed against the live ledger
+            for _ in 1..config.scaling.replicas_min {
+                let extra_node = scheduler.place(config.ram.base_instance_mb + f.code_mb)?;
+                let extra = cluster.launch_on(extra_node, image)?;
+                set.add(Rc::clone(&extra));
+                instances.push(extra);
+            }
+            gateway.set_route_set(&f.name, set);
         }
         let originals = Rc::new(originals);
+        // warm pool: pre-boot blank instances alongside the initial fleet
+        // (their boots overlap the health wait below)
+        let scaler = crate::replica::Scaler::new(
+            Rc::clone(&config),
+            cluster.clone(),
+            scheduler.clone(),
+            metrics.clone(),
+        );
+        scaler.prewarm()?;
         // wait for the fleet to boot
         loop {
             if instances.iter().all(|i| i.state() == InstanceState::Healthy) {
@@ -222,6 +294,9 @@ impl Platform {
             metrics.clone(),
             billing.clone(),
         );
+        // the handler's scale-from-zero path revives idle routes through
+        // the same warm-pool/cold-boot engine the autoscaler uses
+        dispatcher.set_scaler(Rc::clone(&scaler));
 
         // platform-flavored deployer for fused instances
         let dep = match config.kind {
@@ -394,6 +469,13 @@ impl Platform {
                             self_ms: metrics.fn_self_ms_window_sym(function, from, t),
                             window_s,
                             node: cluster.node_of(inst.id()),
+                            // per-replica RAM signals scale with the count
+                            // when the planner prices a fusion
+                            replicas: gateway
+                                .resolve_set_sym(function)
+                                .map(|s| s.live_len())
+                                .unwrap_or(1)
+                                .max(1) as u32,
                         });
                     }
                     // cluster view: per-node loads price cross-node
@@ -446,6 +528,92 @@ impl Platform {
             });
         }
 
+        // Autoscaler: every scale interval, size each route's replica set
+        // from its summed in-flight count (see `replica::desired_replicas`),
+        // scaling up through the warm pool and down by draining the idlest
+        // replicas; scale-to-zero after the idle horizon.  Never spawned at
+        // the seed defaults (`--replicas-max 1`, no idle horizon).
+        if config.scaling.autoscaler_armed() {
+            let stop = Rc::clone(&sampler_stop);
+            let gateway = gateway.clone();
+            let metrics = metrics.clone();
+            let cluster = cluster.clone();
+            let scaler = Rc::clone(&scaler);
+            let sc = config.scaling.clone();
+            exec::spawn(async move {
+                while !stop.get() {
+                    exec::sleep_ms(sc.scale_interval_ms).await;
+                    if stop.get() {
+                        break;
+                    }
+                    let mut seen: HashSet<usize> = HashSet::new();
+                    for (label, set) in gateway.snapshot_sets() {
+                        if !seen.insert(Rc::as_ptr(&set) as usize) {
+                            continue; // fused set: one decision per set
+                        }
+                        if set.scale_pending() {
+                            continue; // a scale-from-zero revival is in flight
+                        }
+                        if set.is_retired() {
+                            // a fuse/split cutover replaced this set while
+                            // the tick was mid-iteration (add_replica
+                            // awaits); its replicas are already draining
+                            continue;
+                        }
+                        let live = set.live_len() as u32;
+                        let desired = crate::replica::desired_replicas(
+                            set.total_inflight(),
+                            sc.target_inflight,
+                            sc.replicas_min,
+                            sc.replicas_max,
+                            set.idle_ms(metrics.rel_now_ms()),
+                            sc.idle_horizon_ms,
+                        );
+                        if desired > live {
+                            for _ in live..desired {
+                                if scaler.add_replica(&label, &set, "burst").await.is_err() {
+                                    break; // cluster full: retry next tick
+                                }
+                                metrics.bump("scale_ups");
+                            }
+                        } else if desired < live {
+                            let reason =
+                                if desired == 0 { "scale-to-zero" } else { "scale-down" };
+                            for victim in set.drain_candidates((live - desired) as usize) {
+                                set.remove(victim.id());
+                                if victim.begin_drain().is_ok() {
+                                    let rt = cluster
+                                        .node_of(victim.id())
+                                        .and_then(|n| cluster.node(n).ok())
+                                        .map(|n| n.containers().clone())
+                                        .unwrap_or_else(|| cluster.control());
+                                    crate::containerd::reclaim_when_drained(
+                                        rt,
+                                        metrics.clone(),
+                                        victim,
+                                    );
+                                }
+                            }
+                            gateway.bump_version();
+                            metrics.record_scale(crate::metrics::ScaleEvent {
+                                t_ms: metrics.rel_now_ms(),
+                                function: label.clone(),
+                                from: live,
+                                to: desired,
+                                reason,
+                                warm: false,
+                            });
+                            metrics.bump(if desired == 0 {
+                                "scale_to_zero"
+                            } else {
+                                "scale_downs"
+                            });
+                        }
+                    }
+                }
+            });
+        }
+
         Ok(Rc::new(Platform {
             config,
             app,
@@ -455,6 +623,7 @@ impl Platform {
             metrics,
             observer,
             billing,
+            scaler,
             dispatcher,
             start: exec::now(),
             sampler_stop,
@@ -634,6 +803,120 @@ mod tests {
                 err.to_string().contains("feedback-interval-ms"),
                 "unexpected error: {err}"
             );
+        });
+    }
+
+    #[test]
+    fn deploy_rejects_zero_replicas_max() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.scaling.replicas_max = 0;
+            let err = Platform::deploy(apps::chain(2), cfg).await.unwrap_err();
+            assert!(err.to_string().contains("--replicas-max 0"), "{err}");
+        });
+    }
+
+    #[test]
+    fn deploy_rejects_replica_floor_outside_the_ceiling() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.scaling.replicas_min = 0;
+            let err = Platform::deploy(apps::chain(2), cfg).await.unwrap_err();
+            assert!(err.to_string().contains("--replicas-min"), "{err}");
+
+            let mut cfg = self::cfg();
+            cfg.scaling.replicas_min = 5;
+            cfg.scaling.replicas_max = 2;
+            let err = Platform::deploy(apps::chain(2), cfg).await.unwrap_err();
+            assert!(err.to_string().contains("--replicas-min 5"), "{err}");
+        });
+    }
+
+    #[test]
+    fn deploy_rejects_warm_pool_beyond_cluster_capacity() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.cluster.nodes = 2;
+            cfg.cluster.node_capacity_mb = 100.0;
+            cfg.scaling.warm_pool = 64; // 64 blanks cannot fit 200 MiB
+            let err = Platform::deploy(apps::chain(2), cfg).await.unwrap_err();
+            assert!(err.to_string().contains("--warm-pool 64"), "{err}");
+
+            // ... while a pool the fleet can hold deploys fine
+            let mut cfg = self::cfg();
+            cfg.cluster.nodes = 2;
+            cfg.cluster.node_capacity_mb = 1_000.0;
+            cfg.scaling.warm_pool = 2;
+            let p = Platform::deploy(apps::chain(2), cfg.vanilla()).await.unwrap();
+            exec::sleep_ms(3_000.0).await;
+            assert_eq!(p.scaler.pool_len(), 2);
+            routing_invariants(&p).unwrap();
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn deploy_boots_the_replica_floor_per_function() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.scaling.replicas_min = 2;
+            cfg.scaling.replicas_max = 2;
+            let p = Platform::deploy(apps::chain(2), cfg.vanilla()).await.unwrap();
+            assert_eq!(p.cluster.live_count(), 4, "2 functions x 2 replicas");
+            assert_eq!(p.gateway.len(), 2);
+            assert_eq!(p.gateway.distinct_instances(), 4);
+            for f in ["s0", "s1"] {
+                assert_eq!(p.gateway.resolve_set(f).unwrap().live_len(), 2);
+            }
+            let payload = vec![0.1f32; p.payload_len()];
+            p.invoke(payload).await.unwrap();
+            routing_invariants(&p).unwrap();
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn autoscaler_rides_a_burst_up_and_back_down_to_the_floor() {
+        run_virtual(async {
+            let mut cfg = cfg();
+            cfg.scaling.replicas_max = 3;
+            cfg.scaling.target_inflight = 1;
+            cfg.scaling.concurrency = 1;
+            cfg.scaling.scale_interval_ms = 200.0;
+            cfg.scaling.warm_pool = 1;
+            let p = Platform::deploy(apps::chain(2), cfg.vanilla()).await.unwrap();
+            exec::sleep_ms(2_000.0).await; // warm blank becomes claimable
+
+            // a burst far past one replica's single slot
+            let mut handles = Vec::new();
+            for _ in 0..12 {
+                let p2 = Rc::clone(&p);
+                handles.push(exec::spawn(async move {
+                    let payload = vec![0.1f32; p2.payload_len()];
+                    p2.invoke(payload).await.unwrap();
+                }));
+            }
+            for h in handles {
+                h.await;
+            }
+            assert!(
+                p.metrics.counter("scale_ups") > 0,
+                "burst must scale out: {}",
+                p.metrics.counter("scale_ups")
+            );
+            assert!(
+                p.metrics.counter("warm_pool_hits") > 0,
+                "first scale-up should claim the warm blank"
+            );
+            assert!(p.gateway.resolve_set("s0").unwrap().live_len() > 1);
+
+            // idle: the controller shrinks back to the one-replica floor
+            exec::sleep_ms(30_000.0).await;
+            assert_eq!(p.gateway.resolve_set("s0").unwrap().live_len(), 1);
+            assert!(p.metrics.counter("scale_downs") > 0);
+            exec::sleep_ms(2_000.0).await; // drained victims terminate
+            routing_invariants(&p).unwrap();
+            p.shutdown();
         });
     }
 

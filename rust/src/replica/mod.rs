@@ -1,0 +1,454 @@
+//! Replica sets: N load-balanced instances behind one route (ISSUE 6).
+//!
+//! The seed platform kept exactly one [`Instance`] per deployed function.
+//! This module replaces that invariant with a [`ReplicaSet`] per route: the
+//! gateway resolves a `Sym` to a set, the set picks a healthy replica with
+//! **power-of-two-choices** on in-flight count, and the platform's
+//! autoscaler (see [`desired_replicas`] for the policy function) grows and
+//! shrinks the set from windowed in-flight and arrival signals — down to
+//! zero after an idle horizon, back up on the next arrival (paying the
+//! cold-start penalty, or a warm-pool attach when one is available).
+//!
+//! **Seed parity contract**: a singleton set is an exact no-op. `pick()`
+//! returns the sole replica without ever drawing from the balancer RNG, so
+//! a config with `replicas_max = 1`, no warm pool, and an unlimited
+//! concurrency cap reproduces the pre-replica platform bit for bit — the
+//! `figure10` experiment asserts this against the verdict transcript.
+//!
+//! Fusion interplay: the fuse/split/evict/migrate pipelines treat sets as
+//! units — a cutover swaps the whole set atomically in the routing table,
+//! a migration replaces one replica at a time via [`ReplicaSet::replace`],
+//! and a fused set is sized at the *maximum* of its members' replica
+//! counts (the merge planner prices that multiplication; see
+//! `fusion::cost::MergeContext::replica_scale`).
+
+mod scale;
+
+pub use scale::Scaler;
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use crate::containerd::{ImageId, Instance, InstanceId, InstanceState};
+use crate::util::rng::{splitmix64, Rng};
+
+/// Autoscaler sizing policy: how many replicas a route should run given its
+/// current in-flight load and idleness.  Pure so it can be tested (and
+/// doctested) without a platform.
+///
+/// * `inflight / target_inflight` (rounded up) sizes the set,
+///   clamped to `[min, max]`;
+/// * an idle route (`inflight == 0` for at least `idle_horizon_ms`) scales
+///   to **zero**, overriding the floor — the next arrival pays a cold
+///   start; `idle_horizon_ms <= 0` disables scale-to-zero entirely.
+///
+/// ```
+/// use provuse::replica::desired_replicas;
+/// // 13 in flight at 4 per replica -> ceil(13/4) = 4 replicas
+/// assert_eq!(desired_replicas(13, 4, 1, 8, 0.0, 0.0), 4);
+/// // a burst beyond the ceiling clamps to `max`
+/// assert_eq!(desired_replicas(1_000, 4, 1, 8, 0.0, 0.0), 8);
+/// // idle with no horizon configured: hold the floor (seed behavior)
+/// assert_eq!(desired_replicas(0, 4, 2, 8, 60_000.0, 0.0), 2);
+/// // idle past the horizon: scale to zero, overriding the floor
+/// assert_eq!(desired_replicas(0, 4, 2, 8, 60_000.0, 30_000.0), 0);
+/// // still idle but horizon not yet reached: floor holds
+/// assert_eq!(desired_replicas(0, 4, 2, 8, 10_000.0, 30_000.0), 2);
+/// ```
+pub fn desired_replicas(
+    inflight: u64,
+    target_inflight: u32,
+    min: u32,
+    max: u32,
+    idle_ms: f64,
+    idle_horizon_ms: f64,
+) -> u32 {
+    if idle_horizon_ms > 0.0 && inflight == 0 && idle_ms >= idle_horizon_ms {
+        return 0;
+    }
+    let per = target_inflight.max(1) as u64;
+    let need = inflight.div_ceil(per) as u32;
+    need.clamp(min.max(1), max.max(1))
+}
+
+/// N replicas of one deployed (possibly fused) function group behind a
+/// single route.  Interior-mutable like everything else in the
+/// single-threaded simulation; handed around as `Rc<ReplicaSet>` — the
+/// gateway maps every hosted function name of a group to the **same** set,
+/// so set identity (`Rc::ptr_eq`) is the "fused together" relation the
+/// pipelines check.
+///
+/// ```
+/// use std::rc::Rc;
+/// use provuse::config::PlatformConfig;
+/// use provuse::containerd::ContainerRuntime;
+/// use provuse::replica::ReplicaSet;
+///
+/// provuse::exec::run_virtual(async {
+///     let rt = ContainerRuntime::new(Rc::new(PlatformConfig::tiny()));
+///     let img = rt.register_image(
+///         provuse::containerd::FsManifest::function_code("f", 16),
+///         vec![("f".into(), 9.0)],
+///     );
+///     let a = rt.launch(img).unwrap();
+///     let set = ReplicaSet::new(vec![Rc::clone(&a)], img);
+///     // singleton fast path: the sole replica, no RNG draw
+///     assert_eq!(set.pick().unwrap().id(), a.id());
+///     // a second replica joins; the set tracks aggregate in-flight load
+///     let b = rt.launch(img).unwrap();
+///     set.add(Rc::clone(&b));
+///     a.request_started();
+///     a.request_started();
+///     assert_eq!(set.total_inflight(), 2);
+///     // a draining replica is never picked: cutovers and scale-downs
+///     // drain, so traffic deterministically shifts to the survivor
+///     a.begin_drain().unwrap();
+///     assert_eq!(set.live_len(), 1);
+///     assert_eq!(set.pick().unwrap().id(), b.id());
+///     a.request_finished();
+///     a.request_finished();
+/// });
+/// ```
+pub struct ReplicaSet {
+    replicas: RefCell<Vec<Rc<Instance>>>,
+    /// image every replica runs (remembered even at zero replicas, so a
+    /// scale-from-zero knows what to boot)
+    image: Cell<ImageId>,
+    /// balancer RNG (power-of-two-choices); seeded deterministically from
+    /// the founding replica's id, and never drawn from by singleton sets
+    rng: RefCell<Rng>,
+    /// virtual-time (ms since executor epoch) of the last routed arrival;
+    /// NAN until the first — the autoscaler's idle signal
+    last_arrival_ms: Cell<f64>,
+    /// a scale-from-zero launch is in flight (collapses the thundering
+    /// herd of a burst hitting an empty set into one boot)
+    scale_pending: Cell<bool>,
+    /// a fuse/split cutover replaced this set in the routing table; its
+    /// replicas are draining and it must never grow again (guards the
+    /// scale-up-races-cutover window — see [`Scaler::add_replica`])
+    retired: Cell<bool>,
+}
+
+impl ReplicaSet {
+    /// Build a set over `replicas`, all running `image`.  The balancer
+    /// seed derives from the first replica's cluster-unique id (or the
+    /// image id for an initially empty set), so runs stay reproducible.
+    pub fn new(replicas: Vec<Rc<Instance>>, image: ImageId) -> Rc<Self> {
+        let mut tag = replicas.first().map(|i| i.id().0).unwrap_or(image.0) ^ 0xC0FFEE;
+        let seed = splitmix64(&mut tag);
+        Rc::new(ReplicaSet {
+            replicas: RefCell::new(replicas),
+            image: Cell::new(image),
+            rng: RefCell::new(Rng::new(seed)),
+            last_arrival_ms: Cell::new(f64::NAN),
+            scale_pending: Cell::new(false),
+            retired: Cell::new(false),
+        })
+    }
+
+    /// Convenience: a one-replica set (the seed deployment shape).
+    pub fn singleton(instance: Rc<Instance>) -> Rc<Self> {
+        let image = instance.image();
+        Self::new(vec![instance], image)
+    }
+
+    /// The image this set's replicas run (a scale-up boots another one).
+    pub fn image(&self) -> ImageId {
+        self.image.get()
+    }
+
+    /// Pick the replica a new request should go to: among non-draining
+    /// live replicas, power-of-two-choices on in-flight count (two uniform
+    /// draws, keep the idler; ties keep the first).  A singleton set
+    /// returns its sole replica **without drawing from the RNG** — the
+    /// seed-parity fast path.  `None` when no routable replica exists
+    /// (scaled to zero, or everything is draining).
+    pub fn pick(&self) -> Option<Rc<Instance>> {
+        let replicas = self.replicas.borrow();
+        let mut routable = replicas
+            .iter()
+            .filter(|i| matches!(i.state(), InstanceState::Booting | InstanceState::Healthy));
+        let first = routable.next()?;
+        let rest: Vec<&Rc<Instance>> = routable.collect();
+        if rest.is_empty() {
+            return Some(Rc::clone(first));
+        }
+        let mut candidates = Vec::with_capacity(rest.len() + 1);
+        candidates.push(first);
+        candidates.extend(rest);
+        let n = candidates.len() as u64;
+        let mut rng = self.rng.borrow_mut();
+        let i = rng.below(n) as usize;
+        let j = rng.below(n) as usize;
+        let a = candidates[i];
+        let b = candidates[j];
+        Some(Rc::clone(if b.inflight() < a.inflight() { b } else { a }))
+    }
+
+    /// All current replicas, in join order (includes draining ones that
+    /// have not yet been removed; callers filter by state as needed).
+    pub fn replicas(&self) -> Vec<Rc<Instance>> {
+        self.replicas.borrow().clone()
+    }
+
+    /// Routable (Booting or Healthy) replicas, in join order.
+    pub fn live(&self) -> Vec<Rc<Instance>> {
+        self.replicas
+            .borrow()
+            .iter()
+            .filter(|i| matches!(i.state(), InstanceState::Booting | InstanceState::Healthy))
+            .cloned()
+            .collect()
+    }
+
+    /// Count of routable replicas (what the autoscaler sizes against).
+    pub fn live_len(&self) -> usize {
+        self.replicas
+            .borrow()
+            .iter()
+            .filter(|i| matches!(i.state(), InstanceState::Booting | InstanceState::Healthy))
+            .count()
+    }
+
+    /// First routable replica — the set's representative for topology
+    /// inspection (fs export, hosted-function checks, node affinity).
+    pub fn primary(&self) -> Option<Rc<Instance>> {
+        self.replicas
+            .borrow()
+            .iter()
+            .find(|i| matches!(i.state(), InstanceState::Booting | InstanceState::Healthy))
+            .cloned()
+    }
+
+    /// Whether `id` is one of this set's replicas (any state).  The
+    /// handler's inline-vs-remote test: a sync call whose target set
+    /// contains the calling instance runs in-process.
+    pub fn contains(&self, id: InstanceId) -> bool {
+        self.replicas.borrow().iter().any(|i| i.id() == id)
+    }
+
+    /// Summed in-flight requests across all replicas (the autoscaler's
+    /// load signal; queued-for-a-slot requests count — they hold a slot
+    /// wait, which is exactly the pressure scale-out relieves).
+    pub fn total_inflight(&self) -> u64 {
+        self.replicas
+            .borrow()
+            .iter()
+            .map(|i| i.inflight().max(0) as u64)
+            .sum()
+    }
+
+    /// Add a freshly launched (or warm-claimed) replica.
+    pub fn add(&self, instance: Rc<Instance>) {
+        self.replicas.borrow_mut().push(instance);
+    }
+
+    /// Remove the replica with `id` (scale-down: the caller drains it).
+    pub fn remove(&self, id: InstanceId) -> Option<Rc<Instance>> {
+        let mut replicas = self.replicas.borrow_mut();
+        let idx = replicas.iter().position(|i| i.id() == id)?;
+        Some(replicas.remove(idx))
+    }
+
+    /// Atomically substitute `fresh` for the replica with `old` — the
+    /// migration primitive: the set keeps serving throughout, one replica
+    /// moves at a time, and no pick can observe a half-applied swap
+    /// (single-threaded executor + this single borrow).  Returns the
+    /// replaced replica, or `None` if `old` is no longer a member.
+    pub fn replace(&self, old: InstanceId, fresh: Rc<Instance>) -> Option<Rc<Instance>> {
+        let mut replicas = self.replicas.borrow_mut();
+        let idx = replicas.iter().position(|i| i.id() == old)?;
+        Some(std::mem::replace(&mut replicas[idx], fresh))
+    }
+
+    /// The scale-down victims: up to `count` routable replicas with the
+    /// fewest in-flight requests (ties resolve toward later joiners, so
+    /// the founding replica is shed last and the set composition stays
+    /// deterministic).
+    pub fn drain_candidates(&self, count: usize) -> Vec<Rc<Instance>> {
+        let mut live = self.live();
+        live.reverse();
+        live.sort_by_key(|i| i.inflight());
+        live.truncate(count);
+        live
+    }
+
+    /// Record a routed arrival (the autoscaler's idle clock).
+    pub fn note_arrival(&self, t_ms: f64) {
+        self.last_arrival_ms.set(t_ms);
+    }
+
+    /// Milliseconds since the last routed arrival (`f64::INFINITY` if the
+    /// route has never been hit — a never-used function is idle).
+    pub fn idle_ms(&self, now_ms: f64) -> f64 {
+        let last = self.last_arrival_ms.get();
+        if last.is_nan() { f64::INFINITY } else { (now_ms - last).max(0.0) }
+    }
+
+    /// Scale-from-zero guard: true while a boot for this empty set is in
+    /// flight, so concurrent arrivals wait for it instead of each booting
+    /// their own replica.
+    pub fn scale_pending(&self) -> bool {
+        self.scale_pending.get()
+    }
+
+    /// Set/clear the scale-from-zero guard (see [`Self::scale_pending`]).
+    pub fn set_scale_pending(&self, pending: bool) {
+        self.scale_pending.set(pending);
+    }
+
+    /// Mark this set as replaced in the routing table (fuse/split cutover).
+    /// A retired set is drained and must never receive another replica: a
+    /// scale-up that raced the cutover would otherwise attach a fresh
+    /// instance to a dead set and leak it.
+    pub fn retire(&self) {
+        self.retired.set(true);
+    }
+
+    /// Whether a cutover has replaced this set (see [`Self::retire`]).
+    pub fn is_retired(&self) -> bool {
+        self.retired.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::containerd::{ContainerRuntime, FsManifest};
+    use crate::exec::{run_virtual, sleep_ms};
+
+    fn runtime() -> ContainerRuntime {
+        ContainerRuntime::new(Rc::new(PlatformConfig::tiny()))
+    }
+
+    fn image(rt: &ContainerRuntime, name: &str) -> ImageId {
+        rt.register_image(FsManifest::function_code(name, 16), vec![(name.into(), 9.0)])
+    }
+
+    #[test]
+    fn desired_replicas_policy_edges() {
+        // exact multiples round to themselves; the +1 boundary rounds up
+        assert_eq!(desired_replicas(8, 4, 1, 10, 0.0, 0.0), 2);
+        assert_eq!(desired_replicas(9, 4, 1, 10, 0.0, 0.0), 3);
+        // zero in flight holds the floor without a horizon
+        assert_eq!(desired_replicas(0, 4, 1, 10, f64::INFINITY, 0.0), 1);
+        // scale-to-zero requires BOTH idle-past-horizon and nothing in flight
+        assert_eq!(desired_replicas(1, 4, 1, 10, 99_000.0, 30_000.0), 1);
+        assert_eq!(desired_replicas(0, 4, 1, 10, 29_999.0, 30_000.0), 1);
+        assert_eq!(desired_replicas(0, 4, 1, 10, 30_000.0, 30_000.0), 0);
+        // degenerate knobs clamp instead of dividing by zero
+        assert_eq!(desired_replicas(5, 0, 0, 0, 0.0, 0.0), 1);
+    }
+
+    #[test]
+    fn singleton_pick_never_draws_from_the_rng() {
+        run_virtual(async {
+            let rt = runtime();
+            let img = image(&rt, "f");
+            let a = rt.launch(img).unwrap();
+            let set = ReplicaSet::singleton(Rc::clone(&a));
+            let mut probe = set.rng.borrow().clone();
+            let rng_before = probe.next_u64();
+            for _ in 0..100 {
+                assert_eq!(set.pick().unwrap().id(), a.id());
+            }
+            let mut probe = set.rng.borrow().clone();
+            let rng_after = probe.next_u64();
+            assert_eq!(rng_before, rng_after, "singleton pick must not consume RNG state");
+        });
+    }
+
+    #[test]
+    fn p2c_prefers_idler_replica_and_skips_draining() {
+        run_virtual(async {
+            let rt = runtime();
+            let img = image(&rt, "f");
+            let a = rt.launch(img).unwrap();
+            let b = rt.launch(img).unwrap();
+            sleep_ms(2_000.0).await; // both healthy
+            let set = ReplicaSet::new(vec![Rc::clone(&a), Rc::clone(&b)], img);
+            // load a heavily: p2c lands on b far more often than a
+            for _ in 0..5 {
+                a.request_started();
+            }
+            let picks_b =
+                (0..200).filter(|_| set.pick().unwrap().id() == b.id()).count();
+            assert!(picks_b > 150, "p2c must prefer the idle replica: {picks_b}/200");
+            for _ in 0..5 {
+                a.request_finished();
+            }
+            // a draining replica never receives a pick
+            b.begin_drain().unwrap();
+            for _ in 0..50 {
+                assert_eq!(set.pick().unwrap().id(), a.id());
+            }
+            // both gone -> None
+            a.begin_drain().unwrap();
+            assert!(set.pick().is_none());
+            assert_eq!(set.live_len(), 0);
+        });
+    }
+
+    #[test]
+    fn replace_swaps_one_replica_atomically() {
+        run_virtual(async {
+            let rt = runtime();
+            let img = image(&rt, "f");
+            let a = rt.launch(img).unwrap();
+            let b = rt.launch(img).unwrap();
+            let c = rt.launch(img).unwrap();
+            let set = ReplicaSet::new(vec![Rc::clone(&a), Rc::clone(&b)], img);
+            let swapped = set.replace(a.id(), Rc::clone(&c)).unwrap();
+            assert_eq!(swapped.id(), a.id());
+            assert!(set.contains(c.id()) && set.contains(b.id()) && !set.contains(a.id()));
+            assert_eq!(set.replicas().len(), 2);
+            // replacing a non-member is a no-op
+            assert!(set.replace(a.id(), Rc::clone(&c)).is_none());
+        });
+    }
+
+    #[test]
+    fn drain_candidates_pick_least_loaded_and_spare_the_founder_on_ties() {
+        run_virtual(async {
+            let rt = runtime();
+            let img = image(&rt, "f");
+            let a = rt.launch(img).unwrap();
+            let b = rt.launch(img).unwrap();
+            let c = rt.launch(img).unwrap();
+            let set =
+                ReplicaSet::new(vec![Rc::clone(&a), Rc::clone(&b), Rc::clone(&c)], img);
+            // all idle: ties shed the newest joiners first, founder last
+            let victims = set.drain_candidates(2);
+            assert_eq!(
+                victims.iter().map(|i| i.id()).collect::<Vec<_>>(),
+                vec![c.id(), b.id()]
+            );
+            // load c: it is no longer the first victim
+            c.request_started();
+            c.request_started();
+            let victims = set.drain_candidates(2);
+            assert_eq!(victims[0].id(), b.id());
+            assert_eq!(victims[1].id(), a.id());
+            c.request_finished();
+            c.request_finished();
+        });
+    }
+
+    #[test]
+    fn idle_clock_and_scale_pending_guard() {
+        run_virtual(async {
+            let rt = runtime();
+            let img = image(&rt, "f");
+            let set = ReplicaSet::new(vec![rt.launch(img).unwrap()], img);
+            assert_eq!(set.idle_ms(5_000.0), f64::INFINITY, "never-hit route is idle");
+            set.note_arrival(1_000.0);
+            assert_eq!(set.idle_ms(5_000.0), 4_000.0);
+            assert!(!set.scale_pending());
+            set.set_scale_pending(true);
+            assert!(set.scale_pending());
+            set.set_scale_pending(false);
+            assert!(!set.scale_pending());
+        });
+    }
+}

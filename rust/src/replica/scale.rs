@@ -1,0 +1,260 @@
+//! The scale-up engine: where new replicas come from.
+//!
+//! Two paths, priced very differently (the paper's cold-start motivation):
+//!
+//! * **warm pool** — a reserve of pre-booted blank instances.  Claiming
+//!   one costs only `warm_attach_ms` (code attach: the instance
+//!   [`Instance::adopt_image`]s the route's image) instead of a full
+//!   container boot; the pool replenishes itself in the background after
+//!   each claim.
+//! * **cold boot** — place a node via the [`Scheduler`], launch the
+//!   route's image, and let arrivals queue on the `Booting` state exactly
+//!   like the seed's initial deployment.
+//!
+//! Every scale-up records a [`crate::metrics::ScaleEvent`] with a `warm`
+//! flag and bumps `warm_pool_hits` / `cold_boots`, so the `figure10`
+//! experiment can account the two separately.  With `warm_pool = 0`
+//! (default) the pool never exists and this engine is only reachable when
+//! the autoscaler is armed — the seed path never touches it.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use crate::cluster::{Cluster, Scheduler};
+use crate::config::PlatformConfig;
+use crate::containerd::{FsManifest, ImageId, Instance, InstanceState};
+use crate::error::{Error, Result};
+use crate::exec;
+use crate::metrics::{Recorder, ScaleEvent};
+
+use super::ReplicaSet;
+
+/// Replica supplier for the autoscaler and the handler's
+/// scale-from-zero path (cheaply clonable via `Rc`).
+pub struct Scaler {
+    config: Rc<PlatformConfig>,
+    cluster: Cluster,
+    scheduler: Scheduler,
+    metrics: Recorder,
+    /// pre-booted blank instances, oldest first
+    pool: RefCell<Vec<Rc<Instance>>>,
+    /// lazily registered blank image the pool boots from
+    warm_image: Cell<Option<ImageId>>,
+}
+
+impl Scaler {
+    /// A scaler placing replicas through `scheduler`; the warm pool
+    /// starts empty until [`Scaler::prewarm`] fills it at deploy time.
+    pub fn new(
+        config: Rc<PlatformConfig>,
+        cluster: Cluster,
+        scheduler: Scheduler,
+        metrics: Recorder,
+    ) -> Rc<Self> {
+        Rc::new(Scaler {
+            config,
+            cluster,
+            scheduler,
+            metrics,
+            pool: RefCell::new(Vec::new()),
+            warm_image: Cell::new(None),
+        })
+    }
+
+    /// Boot `config.scaling.warm_pool` blank instances into the pool
+    /// (deploy-time; they come up `Booting` and turn claimable once
+    /// healthy).  A no-op at the default pool size 0.
+    pub fn prewarm(&self) -> Result<()> {
+        for _ in 0..self.config.scaling.warm_pool {
+            self.boot_blank()?;
+        }
+        Ok(())
+    }
+
+    /// Pre-booted instances currently parked in the pool (ledger
+    /// accounting: their base RAM is real and counts against nodes).
+    pub fn pool(&self) -> Vec<Rc<Instance>> {
+        self.pool.borrow().clone()
+    }
+
+    /// Current warm-pool size (healthy + still-booting blanks).
+    pub fn pool_len(&self) -> usize {
+        self.pool.borrow().len()
+    }
+
+    /// Add one replica to `set`: warm-claim when the pool has a healthy
+    /// blank (attach delay only), cold-boot otherwise (full boot latency;
+    /// arrivals queue on `Booting` like the seed's initial deployment).
+    /// `label` is the route name the scale event is recorded under.
+    pub async fn add_replica(
+        &self,
+        label: &str,
+        set: &Rc<ReplicaSet>,
+        reason: &'static str,
+    ) -> Result<Rc<Instance>> {
+        if set.is_retired() {
+            return Err(Error::NoRoute(format!(
+                "`{label}`: replica set was replaced by a cutover"
+            )));
+        }
+        let image_id = set.image();
+        let image = self.cluster.control().image(image_id)?;
+        let from = set.live_len() as u32;
+
+        if let Some(warm) = self.claim_warm() {
+            exec::sleep_ms(self.config.scaling.warm_attach_ms).await;
+            if set.is_retired() {
+                // a fuse/split cutover replaced the set while the code
+                // attach was in flight: adding now would leak a live
+                // instance onto a drained set.  Return the still-blank
+                // claim to the pool instead.
+                self.pool.borrow_mut().insert(0, warm);
+                return Err(Error::NoRoute(format!(
+                    "`{label}`: replica set was replaced during warm attach"
+                )));
+            }
+            warm.adopt_image(image);
+            set.add(Rc::clone(&warm));
+            self.metrics.bump("warm_pool_hits");
+            self.record(label, from, set.live_len() as u32, reason, true);
+            // keep the reserve warm for the next burst (best effort: a
+            // full cluster just leaves the pool smaller)
+            let _ = self.boot_blank();
+            return Ok(warm);
+        }
+
+        let est_mb: f64 = self.config.ram.base_instance_mb
+            + image.functions.iter().map(|(_, mb)| mb).sum::<f64>();
+        let node = self.scheduler.place(est_mb)?;
+        let inst = self.cluster.launch_on(node, image_id)?;
+        set.add(Rc::clone(&inst));
+        self.metrics.bump("cold_boots");
+        self.record(label, from, set.live_len() as u32, reason, false);
+        Ok(inst)
+    }
+
+    /// Take the oldest healthy blank out of the pool (None while every
+    /// pooled instance is still booting, or the pool is empty — the
+    /// caller falls back to a cold boot).
+    pub fn claim_warm(&self) -> Option<Rc<Instance>> {
+        let mut pool = self.pool.borrow_mut();
+        let idx = pool.iter().position(|i| i.state() == InstanceState::Healthy)?;
+        Some(pool.remove(idx))
+    }
+
+    fn boot_blank(&self) -> Result<()> {
+        let image = self.warm_image();
+        let node = self.scheduler.place(self.config.ram.base_instance_mb)?;
+        let inst = self.cluster.launch_on(node, image)?;
+        self.pool.borrow_mut().push(inst);
+        Ok(())
+    }
+
+    fn warm_image(&self) -> ImageId {
+        if let Some(id) = self.warm_image.get() {
+            return id;
+        }
+        // a base runtime with no function code: hosts nothing until a
+        // claim adopts a real image
+        let id = self
+            .cluster
+            .control()
+            .register_image(FsManifest::function_code("__warm", 1), Vec::new());
+        self.warm_image.set(Some(id));
+        id
+    }
+
+    fn record(&self, label: &str, from: u32, to: u32, reason: &'static str, warm: bool) {
+        self.metrics.record_scale(ScaleEvent {
+            t_ms: self.metrics.rel_now_ms(),
+            function: label.to_string(),
+            from,
+            to,
+            reason,
+            warm,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlacementPolicy;
+    use crate::exec::{run_virtual, sleep_ms};
+
+    fn scaler_with(warm_pool: usize) -> (Rc<Scaler>, Cluster, Rc<PlatformConfig>) {
+        let mut cfg = PlatformConfig::tiny();
+        cfg.scaling.warm_pool = warm_pool;
+        let config = Rc::new(cfg);
+        let cluster = Cluster::new(&config);
+        let scheduler = Scheduler::new(PlacementPolicy::Spread, cluster.clone());
+        let metrics = Recorder::new();
+        (Scaler::new(Rc::clone(&config), cluster.clone(), scheduler, metrics), cluster, config)
+    }
+
+    fn route(cluster: &Cluster) -> Rc<ReplicaSet> {
+        let img = cluster
+            .control()
+            .register_image(FsManifest::function_code("f", 16), vec![("f".into(), 9.0)]);
+        let inst = cluster.launch_on(crate::cluster::NodeId(0), img).unwrap();
+        ReplicaSet::singleton(inst)
+    }
+
+    #[test]
+    fn warm_claim_attaches_without_a_boot() {
+        run_virtual(async {
+            let (scaler, cluster, config) = scaler_with(2);
+            scaler.prewarm().unwrap();
+            assert_eq!(scaler.pool_len(), 2);
+            let set = route(&cluster);
+            sleep_ms(2_000.0).await; // pool + founder healthy
+            let before = crate::exec::now();
+            let inst = scaler.add_replica("f", &set, "burst").await.unwrap();
+            let took = crate::exec::now().duration_since(before).as_secs_f64() * 1e3;
+            assert!(
+                (took - config.scaling.warm_attach_ms).abs() < 1e-6,
+                "warm claim must cost exactly the attach delay, took {took}"
+            );
+            // claimed instance serves immediately and hosts the route's code
+            assert_eq!(inst.state(), InstanceState::Healthy);
+            assert!(inst.hosts("f"));
+            assert_eq!(set.live_len(), 2);
+            // pool replenished itself in the background
+            assert_eq!(scaler.pool_len(), 2);
+            assert_eq!(scaler.metrics.counter("warm_pool_hits"), 1);
+            assert_eq!(scaler.metrics.counter("cold_boots"), 0);
+        });
+    }
+
+    #[test]
+    fn empty_pool_falls_back_to_cold_boot() {
+        run_virtual(async {
+            let (scaler, cluster, _config) = scaler_with(0);
+            scaler.prewarm().unwrap();
+            assert_eq!(scaler.pool_len(), 0);
+            let set = route(&cluster);
+            sleep_ms(2_000.0).await;
+            let inst = scaler.add_replica("f", &set, "burst").await.unwrap();
+            // cold boots come up Booting; arrivals queue on the state
+            assert_eq!(inst.state(), InstanceState::Booting);
+            assert_eq!(set.live_len(), 2);
+            assert_eq!(scaler.metrics.counter("cold_boots"), 1);
+            assert_eq!(scaler.metrics.counter("warm_pool_hits"), 0);
+            sleep_ms(2_000.0).await;
+            assert_eq!(inst.state(), InstanceState::Healthy);
+        });
+    }
+
+    #[test]
+    fn booting_pool_is_not_claimable_yet() {
+        run_virtual(async {
+            let (scaler, _cluster, _config) = scaler_with(1);
+            scaler.prewarm().unwrap();
+            // no virtual time has passed: the blank is still booting
+            assert!(scaler.claim_warm().is_none());
+            sleep_ms(2_000.0).await;
+            assert!(scaler.claim_warm().is_some());
+            assert_eq!(scaler.pool_len(), 0);
+        });
+    }
+}

@@ -14,7 +14,7 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// Parse from an iterator of arguments (excluding `argv[0]`).
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();

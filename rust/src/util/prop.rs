@@ -6,7 +6,7 @@
 //! deterministically:
 //!
 //! ```no_run
-//! use provuse::util::prop::{check, Gen};
+//! use provuse::util::prop::check;
 //! check("sum is commutative", 256, |g| {
 //!     let a = g.int(0, 1000);
 //!     let b = g.int(0, 1000);

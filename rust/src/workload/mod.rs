@@ -4,7 +4,7 @@
 //! Arrivals are scheduled on the virtual clock at exactly `i / rate`
 //! seconds (open loop: a slow platform does not slow the arrival process),
 //! payloads are seeded per request index, and every completion is recorded
-//! in the platform's [`Recorder`].
+//! in the platform's [`Recorder`](crate::metrics::Recorder).
 
 pub mod arrivals;
 

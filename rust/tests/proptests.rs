@@ -585,6 +585,107 @@ fn broken_route_swap_is_caught_by_invariants() {
 }
 
 #[test]
+fn prop_replica_scaling_races_traffic_and_pipelines_without_drops() {
+    // ISSUE 6 satellite: the REAL autoscaler (scale-up through the warm
+    // pool, scale-down, scale-to-zero) churns replica sets while open-loop
+    // traffic races it AND manual fuse/split pipelines rewrite the routing
+    // table underneath.  Afterwards:
+    //   * no request was ever dropped — in particular none committed to a
+    //     draining replica, and a cold start after scale-to-zero revives
+    //     the route instead of failing it;
+    //   * `routing_invariants` holds (routed replicas + warm pool are
+    //     exactly the live instances — a scale-up racing a cutover must
+    //     not leak an instance onto a retired set);
+    //   * per-replica RAM attribution sums exactly to the cluster ledger.
+    check("replica scaling churn invariants", 8, |g| {
+        let app = random_app(g);
+        let kind = *g.choose(&[PlatformKind::Tiny, PlatformKind::Kube]);
+        let mut cfg = fast_cfg(g, kind);
+        cfg.cluster.nodes = g.usize(1, 3);
+        cfg.scaling.replicas_max = g.usize(2, 4) as u32;
+        cfg.scaling.target_inflight = g.usize(1, 4) as u32;
+        cfg.scaling.scale_interval_ms = g.f64(200.0, 1_200.0);
+        cfg.scaling.warm_pool = g.usize(0, 2);
+        cfg.scaling.concurrency = g.usize(0, 2) as u32;
+        if g.bool() {
+            // scale-to-zero in play: idle routes empty out and the next
+            // arrival pays a cold start (or a warm-pool attach)
+            cfg.scaling.idle_horizon_ms = g.f64(2_000.0, 8_000.0);
+        }
+        let ops = g.usize(3, 7);
+        let op_seed = g.rng().next_u64();
+        let wl = WorkloadConfig {
+            requests: g.usize(40, 120) as u64,
+            rate_rps: g.f64(10.0, 60.0),
+            seed: g.rng().next_u64(),
+            timeout_ms: 120_000.0,
+        };
+        run_virtual(async move {
+            // vanilla: the manual pipelines below are the only fusion ops,
+            // but the real autoscaler is armed (replicas_max > 1) and races
+            // every one of them
+            let p = Platform::deploy(app, cfg.vanilla()).await.unwrap();
+            let merger = manual_merger(&p);
+            let sync_edges: Vec<(String, String)> = p
+                .app
+                .functions()
+                .flat_map(|f| {
+                    f.calls
+                        .iter()
+                        .filter(|c| c.mode == CallMode::Sync)
+                        .map(|c| (f.name.clone(), c.target.clone()))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            let traffic = provuse::exec::spawn(workload::run(Rc::clone(&p), wl));
+            let mut g = Gen::replay(op_seed);
+            for _ in 0..ops {
+                provuse::exec::sleep_ms(g.f64(300.0, 3_000.0)).await;
+                if g.bool() && !sync_edges.is_empty() {
+                    // fuse a random sync pair: the fused set deploys at the
+                    // busier endpoint's replica count, and its cutover may
+                    // race an in-flight scale-up (aborts are in the space)
+                    let (caller, callee) = g.choose(&sync_edges).clone();
+                    let _ = merger.handle_fuse(&caller, &callee).await;
+                } else {
+                    // split a random live fused group whole
+                    let groups = p.fused_groups();
+                    if !groups.is_empty() {
+                        let fns = sorted_members(g.choose(&groups));
+                        let _ = merger.handle_split(&fns, SplitReason::RamCap).await;
+                    }
+                }
+            }
+            let report = traffic.await.unwrap();
+            assert_eq!(report.failed, 0, "dropped requests under replica churn");
+            provuse::exec::sleep_ms(40_000.0).await; // drains + scale-downs settle
+
+            if let Err(violation) = routing_invariants(&p) {
+                panic!("invariant violated under replica churn: {violation}");
+            }
+            // per-replica RAM attribution sums exactly to the cluster
+            // ledger: every routed replica (sets deduped — a fused set is
+            // shared by all its member routes) plus every pooled blank
+            let mut seen = std::collections::HashSet::new();
+            let mut routed_ram = 0.0;
+            for (_, set) in p.gateway.snapshot_sets() {
+                if !seen.insert(Rc::as_ptr(&set) as usize) {
+                    continue;
+                }
+                routed_ram += set.live().iter().map(|i| i.ram_mb()).sum::<f64>();
+            }
+            let pool_ram: f64 = p.scaler.pool().iter().map(|i| i.ram_mb()).sum();
+            let ledger = p.cluster.total_ram_mb();
+            assert!(
+                ((routed_ram + pool_ram) - ledger).abs() < 1e-6,
+                "per-replica RAM {routed_ram} + pool {pool_ram} != cluster ledger {ledger}"
+            );
+            p.shutdown();
+        });
+    });
+}
+
+#[test]
 fn prop_merge_monotonically_reduces_instances() {
     // Each completed merge reduces distinct routed instances by >= 1 and
     // the instance count never increases at quiescence.

@@ -171,6 +171,19 @@ impl Cluster {
         self.inner.assignments.borrow().get(&instance).copied()
     }
 
+    /// Simulation-core lane hosting `instance`'s work under a sharded
+    /// executor: node `n` owns lane `n % shards` (with `--shards` =
+    /// `--nodes` each node gets its own lane).  Unknown instances fall to
+    /// the control lane 0.  The mapping is pure arithmetic so 1-shard and
+    /// N-shard runs agree on ownership — a precondition for the fig9
+    /// transcript-parity check.
+    pub fn shard_of(&self, instance: InstanceId, shards: usize) -> usize {
+        match self.node_of(instance) {
+            Some(node) => node.0 as usize % shards.max(1),
+            None => 0,
+        }
+    }
+
     /// Total RAM across every node's live instances (MiB).
     pub fn total_ram_mb(&self) -> f64 {
         self.inner.nodes.iter().map(|n| n.ram_mb()).sum()

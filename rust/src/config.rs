@@ -146,6 +146,11 @@ pub struct ClusterParams {
     pub node_capacity_mb: f64,
     /// how fresh instances are assigned to nodes
     pub placement: PlacementPolicy,
+    /// simulation-core lanes (`--shards`): tasks/timers are partitioned by
+    /// node across this many shards (`Executor::sharded`).  Schedules are
+    /// bit-identical for any value under a pinned seed; 1 = the unsharded
+    /// seed executor.  Clamped to at least 1 at use sites.
+    pub shards: usize,
 }
 
 impl Default for ClusterParams {
@@ -154,6 +159,7 @@ impl Default for ClusterParams {
             nodes: 1,
             node_capacity_mb: 0.0,
             placement: PlacementPolicy::BinPack,
+            shards: 1,
         }
     }
 }
@@ -589,6 +595,7 @@ impl PlatformConfig {
                     ("nodes", Json::Num(c.nodes as f64)),
                     ("node_capacity_mb", Json::Num(c.node_capacity_mb)),
                     ("placement", Json::str(c.placement.name())),
+                    ("shards", Json::Num(c.shards as f64)),
                 ]),
             ),
             (
@@ -768,6 +775,7 @@ mod tests {
         assert_eq!(c.cluster.nodes, 1);
         assert_eq!(c.cluster.node_capacity_mb, 0.0);
         assert_eq!(c.cluster.placement, PlacementPolicy::BinPack);
+        assert_eq!(c.cluster.shards, 1, "default must be the unsharded seed executor");
         assert!(c.latency.cross_node_ms > c.latency.net_hop_ms);
     }
 
@@ -792,12 +800,14 @@ mod tests {
         c.cluster.nodes = 3;
         c.cluster.node_capacity_mb = 512.0;
         c.cluster.placement = PlacementPolicy::FusionAffinity;
+        c.cluster.shards = 3;
         let j = c.to_json().to_string();
         let v = crate::util::json::Json::parse(&j).unwrap();
         let cl = v.get("cluster").unwrap();
         assert_eq!(cl.get("nodes").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(cl.get("node_capacity_mb").unwrap().as_f64().unwrap(), 512.0);
         assert_eq!(cl.get("placement").unwrap().as_str().unwrap(), "fusion-affinity");
+        assert_eq!(cl.get("shards").unwrap().as_f64().unwrap(), 3.0);
         assert!(
             v.get("latency_ms").unwrap().get("cross_node").unwrap().as_f64().unwrap() > 0.0
         );

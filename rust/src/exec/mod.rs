@@ -13,8 +13,16 @@
 //! Tasks are plain non-`Send` futures (`Rc`-friendly platform state);
 //! wakers are `Send` as the contract requires — they only push a task id
 //! onto a mutex-protected queue.
+//!
+//! **Sharded virtual mode** ([`Executor::sharded`], ISSUE 7): tasks and
+//! timers are partitioned into per-node lanes whose cross-lane traffic is
+//! `Send` ([`shard`]).  Wakes carry a global sequence stamp and the
+//! scheduler merges lanes by that stamp, so the N-shard schedule is
+//! bit-identical to the 1-shard schedule for a pinned seed — see
+//! `docs/ARCHITECTURE.md` § "Sharded simulation core".
 
 pub mod channel;
+pub mod shard;
 pub mod sync;
 
 use std::cell::{Cell, RefCell};
@@ -90,6 +98,10 @@ thread_local! {
     /// (timers fire inside `advance_idle`, tasks wake tasks mid-poll), so
     /// the thread-safe queue only pays for contention that cannot exist.
     static LOCAL_READY: RefCell<Vec<(u64, u64)>> = const { RefCell::new(Vec::new()) };
+    /// Shard the currently-polled task belongs to (0 outside task polls).
+    /// Spawned tasks inherit it, so a request's continuation stays on the
+    /// lane of the node it is executing on; [`spawn_on`] overrides it.
+    static CURRENT_SHARD: Cell<u32> = const { Cell::new(0) };
 }
 
 /// Drain this executor's entries from the thread-local ready list into
@@ -123,11 +135,17 @@ struct TaskWaker {
     /// thread-safe queue so external I/O threads park/wake correctly)
     fast_local: bool,
     queue: Arc<WakeQueue>,
+    /// sharded executors route every wake through the owning lane's
+    /// `Send` inbox instead of the thread-local fast path — a sharded
+    /// task's waker is legal to invoke from any worker thread
+    lane: Option<shard::WakeLane>,
 }
 
 impl TaskWaker {
     fn wake_id(&self) {
-        if self.fast_local && ACTIVE_EXEC.with(|c| c.get()) == self.exec_id {
+        if let Some(lane) = &self.lane {
+            lane.push(self.id);
+        } else if self.fast_local && ACTIVE_EXEC.with(|c| c.get()) == self.exec_id {
             LOCAL_READY.with(|q| q.borrow_mut().push((self.exec_id, self.id)));
         } else {
             self.queue.push(self.id);
@@ -177,6 +195,25 @@ struct TaskEntry {
     future: LocalFuture,
     /// created once per task; cloning is a refcount bump, not an alloc
     waker: Waker,
+    /// owning lane (0 on unsharded executors)
+    shard: u32,
+}
+
+/// One shard's lane: the timers it owns plus the `Send` inbox its tasks
+/// are woken through.  Lane membership never changes after spawn.
+struct Lane {
+    timers: RefCell<BinaryHeap<Reverse<TimerEntry>>>,
+    inbox: Arc<shard::Inbox>,
+}
+
+/// Per-executor sharding state ([`Executor::sharded`]).  The scheduler
+/// drains every lane inbox and merges by the shared `wake_seq` stamp —
+/// exactly the order one global queue would have produced, which is what
+/// keeps N-shard schedules bit-identical to 1-shard ones.
+struct ShardedState {
+    lanes: Vec<Lane>,
+    /// executor-wide wake-order counter, shared by every lane's wakers
+    wake_seq: Arc<AtomicU64>,
 }
 
 struct Inner {
@@ -187,10 +224,16 @@ struct Inner {
     next_task_id: Cell<u64>,
     next_timer_seq: Cell<u64>,
     tasks: RefCell<HashMap<u64, TaskEntry>>,
-    /// tasks spawned while the executor is mid-poll (picked up next loop)
-    incoming: RefCell<Vec<(u64, LocalFuture)>>,
+    /// tasks spawned while the executor is mid-poll (picked up next loop):
+    /// `(task_id, shard, future)`
+    incoming: RefCell<Vec<(u64, u32, LocalFuture)>>,
     timers: RefCell<BinaryHeap<Reverse<TimerEntry>>>,
     wake_queue: Arc<WakeQueue>,
+    /// `Some` iff built by [`Executor::sharded`] with more than one shard
+    sharded: Option<ShardedState>,
+    /// virtual-clock advances completed (one per discrete-event epoch) —
+    /// the unit the threaded milestone's `shard::EpochGate` synchronizes on
+    epochs: Cell<u64>,
 }
 
 thread_local! {
@@ -214,6 +257,35 @@ pub struct Executor {
 
 impl Executor {
     pub fn new(mode: Mode) -> Self {
+        Self::sharded(mode, 1)
+    }
+
+    /// Executor whose tasks/timers are partitioned into `shards` lanes
+    /// (one per cluster node; clamped to at least 1).  Scheduling is
+    /// bit-identical to the unsharded executor for any shard count — the
+    /// global wake/timer sequence stamps are merged back into single-queue
+    /// order — so `--shards N` reproduces `--shards 1` exactly under a
+    /// pinned seed.  `shards == 1` uses the unsharded fast path verbatim.
+    ///
+    /// # Panics
+    /// If `shards > 1` with [`Mode::Real`]: discrete-event sharding is
+    /// defined over the virtual clock only (real mode parks on wall time,
+    /// which has no epoch boundaries to merge on).
+    pub fn sharded(mode: Mode, shards: usize) -> Self {
+        let shards = shards.max(1);
+        assert!(
+            shards == 1 || mode == Mode::Virtual,
+            "sharded execution requires Mode::Virtual"
+        );
+        let sharded = (shards > 1).then(|| ShardedState {
+            lanes: (0..shards)
+                .map(|_| Lane {
+                    timers: RefCell::new(BinaryHeap::new()),
+                    inbox: shard::Inbox::new(),
+                })
+                .collect(),
+            wake_seq: Arc::new(AtomicU64::new(0)),
+        });
         Executor {
             inner: Rc::new(Inner {
                 mode,
@@ -226,8 +298,15 @@ impl Executor {
                 incoming: RefCell::new(Vec::new()),
                 timers: RefCell::new(BinaryHeap::new()),
                 wake_queue: Arc::new(WakeQueue::default()),
+                sharded,
+                epochs: Cell::new(0),
             }),
         }
+    }
+
+    /// Number of lanes this executor schedules over (1 when unsharded).
+    pub fn shards(&self) -> usize {
+        self.inner.shard_count()
     }
 
     /// Handle external threads can use to wake the executor (real mode).
@@ -240,11 +319,23 @@ impl Executor {
         let guard = CurrentGuard::install(Rc::clone(&self.inner));
         let result: Rc<RefCell<Option<T>>> = Rc::new(RefCell::new(None));
         let result2 = Rc::clone(&result);
-        let root_id = self.inner.spawn_inner(async move {
+        // the root always lives on shard 0 (the control lane)
+        let root_id = self.inner.spawn_inner_on(0, async move {
             *result2.borrow_mut() = Some(root.await);
         });
-        self.inner.wake_task(root_id);
+        self.inner.wake_spawned(root_id, 0);
+        let v = if self.inner.sharded.is_some() {
+            self.run_sharded(&result)
+        } else {
+            self.run_single(&result)
+        };
+        drop(guard);
+        v
+    }
 
+    /// The unsharded scheduler loop — the PR 5 thread-local fast path,
+    /// byte-for-byte the pre-sharding behavior.
+    fn run_single<T: 'static>(&self, result: &Rc<RefCell<Option<T>>>) -> T {
         let fast_local = self.inner.mode == Mode::Virtual;
         let mut ready: Vec<u64> = Vec::new();
         loop {
@@ -253,14 +344,15 @@ impl Executor {
                 let mut incoming = self.inner.incoming.borrow_mut();
                 if !incoming.is_empty() {
                     let mut tasks = self.inner.tasks.borrow_mut();
-                    for (id, future) in incoming.drain(..) {
+                    for (id, shard, future) in incoming.drain(..) {
                         let waker = Waker::from(Arc::new(TaskWaker {
                             id,
                             exec_id: self.inner.exec_id,
                             fast_local,
                             queue: Arc::clone(&self.inner.wake_queue),
+                            lane: None,
                         }));
-                        tasks.insert(id, TaskEntry { future, waker });
+                        tasks.insert(id, TaskEntry { future, waker, shard });
                     }
                 }
             }
@@ -283,13 +375,86 @@ impl Executor {
             }
 
             if let Some(v) = result.borrow_mut().take() {
-                drop(guard);
                 return v;
             }
             if polled_any || !self.inner.incoming.borrow().is_empty() {
                 continue;
             }
             // Nothing runnable: advance (virtual) or park (real).
+            if !self.inner.advance_idle() {
+                panic!(
+                    "executor stalled: root not finished, no runnable tasks, no timers \
+                     ({} tasks parked)",
+                    self.inner.tasks.borrow().len()
+                );
+            }
+        }
+    }
+
+    /// The sharded scheduler loop.  Each iteration drains every lane's
+    /// `Send` inbox and merges by the global wake stamp — reconstructing
+    /// the exact FIFO order the unsharded loop's single ready list would
+    /// hold — then polls with `CURRENT_SHARD` pinned to the task's lane so
+    /// spawns and timers land on the right shard.
+    fn run_sharded<T: 'static>(&self, result: &Rc<RefCell<Option<T>>>) -> T {
+        let s = self.inner.sharded.as_ref().expect("run_sharded on unsharded executor");
+        let mut ready: Vec<u64> = Vec::new();
+        let mut staged: Vec<(u64, u64)> = Vec::new();
+        loop {
+            {
+                let mut incoming = self.inner.incoming.borrow_mut();
+                if !incoming.is_empty() {
+                    let mut tasks = self.inner.tasks.borrow_mut();
+                    for (id, shard, future) in incoming.drain(..) {
+                        let waker = Waker::from(Arc::new(TaskWaker {
+                            id,
+                            exec_id: self.inner.exec_id,
+                            fast_local: false,
+                            queue: Arc::clone(&self.inner.wake_queue),
+                            lane: Some(shard::WakeLane::new(
+                                &s.lanes[shard as usize].inbox,
+                                &s.wake_seq,
+                            )),
+                        }));
+                        tasks.insert(id, TaskEntry { future, waker, shard });
+                    }
+                }
+            }
+
+            ready.clear();
+            // external (Remote) nudges first, mirroring the unsharded loop
+            self.inner.wake_queue.drain_into(&mut ready);
+            staged.clear();
+            for lane in &s.lanes {
+                lane.inbox.drain_into(&mut staged);
+            }
+            // k-way merge by wake stamp: single-queue FIFO order, exactly
+            staged.sort_unstable();
+            ready.extend(staged.iter().map(|&(_, id)| id));
+
+            let mut polled_any = false;
+            for &id in ready.iter() {
+                let entry = self.inner.tasks.borrow_mut().remove(&id);
+                let Some(mut entry) = entry else { continue }; // completed or duplicate wake
+                polled_any = true;
+                let prev = CURRENT_SHARD.with(|c| c.replace(entry.shard));
+                let mut cx = Context::from_waker(&entry.waker);
+                let poll = entry.future.as_mut().poll(&mut cx);
+                CURRENT_SHARD.with(|c| c.set(prev));
+                match poll {
+                    Poll::Ready(()) => {}
+                    Poll::Pending => {
+                        self.inner.tasks.borrow_mut().insert(id, entry);
+                    }
+                }
+            }
+
+            if let Some(v) = result.borrow_mut().take() {
+                return v;
+            }
+            if polled_any || !self.inner.incoming.borrow().is_empty() {
+                continue;
+            }
             if !self.inner.advance_idle() {
                 panic!(
                     "executor stalled: root not finished, no runnable tasks, no timers \
@@ -309,6 +474,7 @@ impl Executor {
 struct CurrentGuard {
     prev: Option<Rc<Inner>>,
     prev_exec: u64,
+    prev_shard: u32,
     exec_id: u64,
 }
 
@@ -317,7 +483,10 @@ impl CurrentGuard {
         let exec_id = inner.exec_id;
         let prev = CURRENT.with(|c| c.borrow_mut().replace(inner));
         let prev_exec = ACTIVE_EXEC.with(|c| c.replace(exec_id));
-        CurrentGuard { prev, prev_exec, exec_id }
+        // a nested block_on starts on its own shard 0; the outer
+        // executor's lane is restored on drop
+        let prev_shard = CURRENT_SHARD.with(|c| c.replace(0));
+        CurrentGuard { prev, prev_exec, prev_shard, exec_id }
     }
 }
 
@@ -327,6 +496,7 @@ impl Drop for CurrentGuard {
         let prev_exec = self.prev_exec;
         let exec_id = self.exec_id;
         ACTIVE_EXEC.with(|c| c.set(prev_exec));
+        CURRENT_SHARD.with(|c| c.set(self.prev_shard));
         // purge this executor's leftover local wakeups (tasks that were
         // still pending when the root finished); try_borrow so an unwind
         // mid-push cannot double-panic
@@ -352,6 +522,24 @@ impl Remote {
 }
 
 impl Inner {
+    fn shard_count(&self) -> usize {
+        self.sharded.as_ref().map_or(1, |s| s.lanes.len())
+    }
+
+    /// Resolve a spawn's lane: an explicit request wraps modulo the lane
+    /// count; `None` inherits the spawning task's lane.  Unsharded
+    /// executors collapse everything to 0.
+    fn resolve_shard(&self, explicit: Option<usize>) -> u32 {
+        match &self.sharded {
+            Some(s) => {
+                let shard =
+                    explicit.unwrap_or_else(|| CURRENT_SHARD.with(|c| c.get()) as usize);
+                (shard % s.lanes.len()) as u32
+            }
+            None => 0,
+        }
+    }
+
     /// Enqueue a wakeup for `id`, taking the virtual-mode thread-local
     /// fast path when running on this executor's own thread.
     fn wake_task(&self, id: u64) {
@@ -364,6 +552,19 @@ impl Inner {
         }
     }
 
+    /// Wake a freshly spawned task whose waker does not exist yet (it is
+    /// created when `incoming` drains): sharded executors stamp it into
+    /// the owning lane's inbox so spawn order keeps its global position.
+    fn wake_spawned(&self, id: u64, shard: u32) {
+        match &self.sharded {
+            Some(s) => {
+                let seq = s.wake_seq.fetch_add(1, Ordering::Relaxed);
+                s.lanes[shard as usize].inbox.push(seq, id);
+            }
+            None => self.wake_task(id),
+        }
+    }
+
     fn current_now(&self) -> SimInstant {
         match self.mode {
             Mode::Virtual => SimInstant(self.now_ns.get()),
@@ -371,25 +572,60 @@ impl Inner {
         }
     }
 
-    fn spawn_inner(&self, fut: impl Future<Output = ()> + 'static) -> u64 {
+    fn spawn_inner_on(&self, shard: u32, fut: impl Future<Output = ()> + 'static) -> u64 {
         let id = self.next_task_id.get();
         self.next_task_id.set(id + 1);
-        self.incoming.borrow_mut().push((id, Box::pin(fut)));
+        self.incoming.borrow_mut().push((id, shard, Box::pin(fut)));
         id
     }
 
     fn register_timer(&self, deadline: u64, waker: Waker) {
         let seq = self.next_timer_seq.get();
         self.next_timer_seq.set(seq + 1);
-        self.timers
-            .borrow_mut()
-            .push(Reverse(TimerEntry { deadline, seq, waker }));
+        match &self.sharded {
+            // the currently-polled task's lane owns its timers; the global
+            // `seq` keeps cross-lane firing order identical to one heap
+            Some(s) => {
+                let shard = CURRENT_SHARD.with(|c| c.get()) as usize % s.lanes.len();
+                s.lanes[shard]
+                    .timers
+                    .borrow_mut()
+                    .push(Reverse(TimerEntry { deadline, seq, waker }));
+            }
+            None => {
+                self.timers
+                    .borrow_mut()
+                    .push(Reverse(TimerEntry { deadline, seq, waker }));
+            }
+        }
     }
 
     /// Fire timers with deadline <= now; returns how many fired.
     fn fire_due_timers(&self) -> usize {
         let now = self.current_now().0;
         let mut fired = 0;
+        if let Some(s) = &self.sharded {
+            // pop due timers across lanes in global (deadline, seq) order —
+            // identical to the order one shared heap would pop them in
+            loop {
+                let mut best: Option<((u64, u64), usize)> = None;
+                for (idx, lane) in s.lanes.iter().enumerate() {
+                    if let Some(Reverse(e)) = lane.timers.borrow().peek() {
+                        if e.deadline <= now {
+                            let key = (e.deadline, e.seq);
+                            if best.map(|(k, _)| key < k).unwrap_or(true) {
+                                best = Some((key, idx));
+                            }
+                        }
+                    }
+                }
+                let Some((_, idx)) = best else { break };
+                let Reverse(entry) = s.lanes[idx].timers.borrow_mut().pop().unwrap();
+                entry.waker.wake();
+                fired += 1;
+            }
+            return fired;
+        }
         let mut timers = self.timers.borrow_mut();
         while let Some(Reverse(head)) = timers.peek() {
             if head.deadline > now {
@@ -407,11 +643,22 @@ impl Inner {
     fn advance_idle(&self) -> bool {
         match self.mode {
             Mode::Virtual => {
-                let next = self.timers.borrow().peek().map(|Reverse(e)| e.deadline);
+                let next = match &self.sharded {
+                    // earliest deadline across every lane's heap; in the
+                    // threaded milestone this is the value workers agree on
+                    // at the `shard::EpochGate` before the clock moves
+                    Some(s) => s
+                        .lanes
+                        .iter()
+                        .filter_map(|l| l.timers.borrow().peek().map(|Reverse(e)| e.deadline))
+                        .min(),
+                    None => self.timers.borrow().peek().map(|Reverse(e)| e.deadline),
+                };
                 match next {
                     Some(deadline) => {
                         self.now_ns.set(self.now_ns.get().max(deadline));
                         self.fire_due_timers();
+                        self.epochs.set(self.epochs.get() + 1);
                         true
                     }
                     None => false,
@@ -466,11 +713,30 @@ impl Inner {
 // ---------------------------------------------------------------------------
 
 /// Spawn a task on the current executor; returns a [`JoinHandle`].
+/// On a sharded executor the task inherits the spawner's shard.
 pub fn spawn<T: 'static>(fut: impl Future<Output = T> + 'static) -> JoinHandle<T> {
+    spawn_with(None, fut)
+}
+
+/// Spawn pinned to `shard` (wrapped modulo the executor's shard count) —
+/// how the dispatcher keeps a remote call's task on the lane of the node
+/// that executes it.  On an unsharded executor this is exactly [`spawn`].
+pub fn spawn_on<T: 'static>(
+    shard: usize,
+    fut: impl Future<Output = T> + 'static,
+) -> JoinHandle<T> {
+    spawn_with(Some(shard), fut)
+}
+
+fn spawn_with<T: 'static>(
+    shard: Option<usize>,
+    fut: impl Future<Output = T> + 'static,
+) -> JoinHandle<T> {
     let state = Rc::new(RefCell::new(JoinState::<T> { value: None, waker: None }));
     let state2 = Rc::clone(&state);
     let id = with_current(|inner| {
-        let id = inner.spawn_inner(async move {
+        let shard = inner.resolve_shard(shard);
+        let id = inner.spawn_inner_on(shard, async move {
             let value = fut.await;
             let mut s = state2.borrow_mut();
             s.value = Some(value);
@@ -478,10 +744,28 @@ pub fn spawn<T: 'static>(fut: impl Future<Output = T> + 'static) -> JoinHandle<T
                 w.wake();
             }
         });
-        inner.wake_task(id);
+        inner.wake_spawned(id, shard);
         id
     });
     JoinHandle { state, id }
+}
+
+/// Shard of the currently-polled task (0 on unsharded executors and
+/// outside task polls).
+pub fn current_shard() -> usize {
+    CURRENT_SHARD.with(|c| c.get()) as usize
+}
+
+/// Lane count of the running executor (1 when unsharded).
+pub fn shard_count() -> usize {
+    with_current(|inner| inner.shard_count())
+}
+
+/// Discrete-event epochs completed so far (virtual-clock advances) — the
+/// unit the sharded core's barrier synchronizes on; equal across shard
+/// counts for a pinned seed, which the fig9 parity check exploits.
+pub fn epochs() -> u64 {
+    with_current(|inner| inner.epochs.get())
 }
 
 struct JoinState<T> {
@@ -760,6 +1044,103 @@ mod tests {
             });
             assert_eq!(inner, 2);
             assert_eq!(h.await, 7);
+        });
+    }
+
+    #[test]
+    fn sharded_schedule_bit_identical_across_shard_counts() {
+        // the tentpole invariant: the merged N-shard schedule replays the
+        // 1-shard schedule exactly — same poll order, same timestamps —
+        // even with tasks scattered across lanes on purpose
+        fn run_once(shards: usize) -> (Vec<(u32, u64)>, u64) {
+            Executor::sharded(Mode::Virtual, shards).block_on(async move {
+                let log = Rc::new(RefCell::new(Vec::new()));
+                let mut handles = Vec::new();
+                for i in 0..24u32 {
+                    let log = Rc::clone(&log);
+                    handles.push(spawn_on(i as usize, async move {
+                        sleep_ms(((i * 7) % 13) as f64).await;
+                        log.borrow_mut().push((i, now().0));
+                        sleep_ms((i % 3) as f64).await;
+                        log.borrow_mut().push((i + 100, now().0));
+                    }));
+                }
+                for h in handles {
+                    h.await;
+                }
+                let log = Rc::try_unwrap(log).unwrap().into_inner();
+                (log, epochs())
+            })
+        }
+        let single = run_once(1);
+        assert_eq!(single, run_once(2));
+        assert_eq!(single, run_once(3));
+        assert_eq!(single, run_once(7));
+    }
+
+    #[test]
+    fn spawn_on_pins_and_spawn_inherits_the_lane() {
+        Executor::sharded(Mode::Virtual, 3).block_on(async {
+            assert_eq!(shard_count(), 3);
+            assert_eq!(current_shard(), 0); // root lives on the control lane
+            let h = spawn_on(1, async {
+                assert_eq!(current_shard(), 1);
+                // plain spawn inherits the spawner's lane
+                let child = spawn(async { current_shard() });
+                // explicit shard wraps modulo the lane count
+                let wrapped = spawn_on(5, async { current_shard() });
+                (child.await, wrapped.await)
+            });
+            assert_eq!(h.await, (1, 2));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "sharded execution requires Mode::Virtual")]
+    fn real_mode_rejects_multiple_shards() {
+        let _ = Executor::sharded(Mode::Real, 2);
+    }
+
+    #[test]
+    fn sharded_single_lane_is_the_legacy_executor() {
+        // shards == 1 must take the unsharded fast path (Executor::new is
+        // defined as sharded(mode, 1)); behavior and clock agree
+        let ex = Executor::sharded(Mode::Virtual, 1);
+        assert_eq!(ex.shards(), 1);
+        ex.block_on(async {
+            assert_eq!(shard_count(), 1);
+            let h = spawn_on(9, async { current_shard() }); // wraps to 0
+            assert_eq!(h.await, 0);
+            sleep_ms(5.0).await;
+            assert_eq!(now().as_millis_f64(), 5.0);
+        });
+    }
+
+    #[test]
+    fn nested_executor_inside_a_sharded_task_stays_isolated() {
+        // a task on lane 2 runs a whole inner (sharded) executor to
+        // completion; the outer executor's pending wakeups and the task's
+        // lane must survive untouched
+        Executor::sharded(Mode::Virtual, 3).block_on(async {
+            let outer = spawn_on(1, async {
+                sleep_ms(5.0).await;
+                7u32
+            });
+            let h = spawn_on(2, async {
+                let inner = Executor::sharded(Mode::Virtual, 2).block_on(async {
+                    assert_eq!(shard_count(), 2);
+                    let a = spawn_on(1, async {
+                        sleep_ms(1.0).await;
+                        current_shard() as u32
+                    });
+                    a.await + 1
+                });
+                // back on the outer executor: still lane 2
+                assert_eq!(current_shard(), 2);
+                inner
+            });
+            assert_eq!(h.await, 2);
+            assert_eq!(outer.await, 7);
         });
     }
 

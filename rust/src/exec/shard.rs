@@ -1,0 +1,232 @@
+//! Cross-shard plumbing for the sharded simulation core (ISSUE 7).
+//!
+//! A sharded [`Executor`](super::Executor) partitions its tasks and timers
+//! into per-node *lanes*.  Everything that crosses a lane boundary travels
+//! through the types in this module, and all of them are `Send`:
+//!
+//! * [`Inbox`] — a lane's ready queue.  Wakes are stamped with a globally
+//!   monotone sequence number at wake time; the scheduler drains every
+//!   lane and merges by that stamp, which reconstructs the exact order a
+//!   single shared queue would have produced.  That merge is what makes an
+//!   N-shard schedule bit-identical to the 1-shard schedule for a pinned
+//!   seed — determinism holds *by construction*, independent of how tasks
+//!   are assigned to lanes or (in the threaded milestone) which worker
+//!   thread drains first.
+//! * [`WakeLane`] — the `Send + Sync` half a [`Waker`](std::task::Waker)
+//!   carries: an inbox handle plus the shared wake counter.  No `Rc`, no
+//!   thread-local — a waker for a sharded task may be invoked from any
+//!   thread.
+//! * [`EpochGate`] — a reusable barrier for the threaded milestone.  One
+//!   epoch is the interval between two virtual-clock advances; workers
+//!   arrive at the gate once their lane has quiesced, and the clock only
+//!   moves when every shard has arrived.
+//!
+//! The executor in `exec/mod.rs` currently drives all lanes from one
+//! thread (the sharded-ready fallback milestone — see `docs/ARCHITECTURE.md`);
+//! these types are the contract that lets worker threads be introduced
+//! without touching scheduling semantics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A lane's ready queue: `(wake_seq, task_id)` pairs pushed by wakers
+/// (possibly from other threads) and drained by the scheduler.
+#[derive(Default)]
+pub(crate) struct Inbox {
+    entries: Mutex<Vec<(u64, u64)>>,
+}
+
+impl Inbox {
+    pub(crate) fn new() -> Arc<Inbox> {
+        Arc::new(Inbox::default())
+    }
+
+    pub(crate) fn push(&self, seq: u64, id: u64) {
+        self.entries.lock().unwrap().push((seq, id));
+    }
+
+    /// Append all pending entries to `buf` (reused across scheduler
+    /// iterations; the merge sorts by `seq` afterwards).
+    pub(crate) fn drain_into(&self, buf: &mut Vec<(u64, u64)>) {
+        let mut entries = self.entries.lock().unwrap();
+        buf.append(&mut entries);
+    }
+}
+
+/// The `Send + Sync` wake route a sharded task's waker holds: pushing
+/// stamps the wake with the executor-wide sequence counter so the
+/// scheduler's k-way merge replays single-queue FIFO order exactly.
+pub(crate) struct WakeLane {
+    inbox: Arc<Inbox>,
+    seq: Arc<AtomicU64>,
+}
+
+impl WakeLane {
+    pub(crate) fn new(inbox: &Arc<Inbox>, seq: &Arc<AtomicU64>) -> Self {
+        WakeLane { inbox: Arc::clone(inbox), seq: Arc::clone(seq) }
+    }
+
+    pub(crate) fn push(&self, id: u64) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.inbox.push(seq, id);
+    }
+}
+
+/// Reusable N-participant barrier synchronizing shards at epoch
+/// boundaries (an epoch = the interval between two virtual-clock
+/// advances).  Workers call [`EpochGate::arrive`] when their lane has no
+/// runnable tasks; the call blocks until every participant has arrived,
+/// then all are released into the next epoch together.  Generation
+/// counting makes the gate safe to reuse round after round.
+pub struct EpochGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    parties: usize,
+    arrived: usize,
+    epoch: u64,
+}
+
+impl EpochGate {
+    /// Gate for `parties` participants (clamped to at least 1; a
+    /// single-party gate never blocks).
+    pub fn new(parties: usize) -> Self {
+        EpochGate {
+            state: Mutex::new(GateState { parties: parties.max(1), arrived: 0, epoch: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Arrive at the gate and wait for the rest of the cohort; returns
+    /// the epoch number everyone is released into.
+    pub fn arrive(&self) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        let epoch = s.epoch;
+        s.arrived += 1;
+        if s.arrived == s.parties {
+            s.arrived = 0;
+            s.epoch += 1;
+            self.cv.notify_all();
+            return s.epoch;
+        }
+        while s.epoch == epoch {
+            s = self.cv.wait(s).unwrap();
+        }
+        s.epoch
+    }
+
+    /// Completed epochs so far.
+    pub fn epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+}
+
+// The whole point of this module: nothing on the cross-shard path may be
+// `Rc` or thread-local.  Enforced at compile time.
+#[allow(dead_code)]
+fn assert_cross_shard_types_are_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<Inbox>();
+    check::<WakeLane>();
+    check::<EpochGate>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn inbox_merge_reconstructs_global_push_order() {
+        // pushes interleaved across two lanes; the seq-sorted merge must
+        // equal the order a single shared queue would have seen
+        let seq = Arc::new(AtomicU64::new(0));
+        let a = Inbox::new();
+        let b = Inbox::new();
+        let lane_a = WakeLane::new(&a, &seq);
+        let lane_b = WakeLane::new(&b, &seq);
+        lane_a.push(10);
+        lane_b.push(20);
+        lane_a.push(11);
+        lane_b.push(21);
+        lane_a.push(12);
+        let mut merged = Vec::new();
+        a.drain_into(&mut merged);
+        b.drain_into(&mut merged);
+        merged.sort_unstable();
+        let ids: Vec<u64> = merged.iter().map(|&(_, id)| id).collect();
+        assert_eq!(ids, vec![10, 20, 11, 21, 12]);
+        // drained: both inboxes empty now
+        let mut rest = Vec::new();
+        a.drain_into(&mut rest);
+        b.drain_into(&mut rest);
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn inbox_accepts_pushes_from_other_threads() {
+        let seq = Arc::new(AtomicU64::new(0));
+        let inbox = Inbox::new();
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let lane = WakeLane::new(&inbox, &seq);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..100u64 {
+                    lane.push(t * 1000 + i);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let mut buf = Vec::new();
+        inbox.drain_into(&mut buf);
+        assert_eq!(buf.len(), 400);
+        // every wake got a unique global stamp
+        let mut seqs: Vec<u64> = buf.iter().map(|&(s, _)| s).collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), 400);
+    }
+
+    #[test]
+    fn epoch_gate_releases_whole_cohort_each_round() {
+        const PARTIES: usize = 4;
+        const ROUNDS: u64 = 50;
+        let gate = Arc::new(EpochGate::new(PARTIES));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..PARTIES {
+            let gate = Arc::clone(&gate);
+            let peak = Arc::clone(&peak);
+            joins.push(std::thread::spawn(move || {
+                let mut epochs = Vec::new();
+                for _ in 0..ROUNDS {
+                    epochs.push(gate.arrive());
+                }
+                peak.fetch_max(epochs.len(), Ordering::Relaxed);
+                epochs
+            }));
+        }
+        let want: Vec<u64> = (1..=ROUNDS).collect();
+        for j in joins {
+            // every worker observes the same strictly increasing epoch
+            // sequence: nobody skips a round, nobody sees one twice
+            assert_eq!(j.join().unwrap(), want);
+        }
+        assert_eq!(gate.epoch(), ROUNDS);
+    }
+
+    #[test]
+    fn single_party_gate_never_blocks() {
+        let gate = EpochGate::new(1);
+        assert_eq!(gate.arrive(), 1);
+        assert_eq!(gate.arrive(), 2);
+        assert_eq!(gate.epoch(), 2);
+        // zero clamps to one
+        let gate = EpochGate::new(0);
+        assert_eq!(gate.arrive(), 1);
+    }
+}

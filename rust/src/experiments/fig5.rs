@@ -91,6 +91,10 @@ impl Fig5 {
 /// Run the experiment and write `fig5_vanilla.csv`, `fig5_fusion.csv`,
 /// `fig5_merges.csv`, and `fig5_summary.txt` into `out_dir`.
 pub fn run(out_dir: &Path, wl: WorkloadConfig, compute: ComputeMode) -> Result<Fig5> {
+    // RecordingLevel::Full on purpose (ISSUE 7 recording audit): fig5's
+    // whole output IS the raw per-request latency series CSV plus the
+    // post-merge median — both Full-only.  Windowed recording would write
+    // empty CSVs.  Drivers without raw exports (fig6, sweeps) run Windowed.
     let vanilla = run_one(PlatformKind::Tiny, "iot", false, wl.clone(), compute)?;
     let fusion = run_one(PlatformKind::Tiny, "iot", true, wl, compute)?;
     let fig = Fig5 { vanilla, fusion };

@@ -14,7 +14,7 @@
 
 use std::path::Path;
 
-use super::{reduction_pct, run_one, write_output, RunResult};
+use super::{reduction_pct, write_output, RunResult};
 use crate::config::{ComputeMode, PlatformKind, WorkloadConfig};
 use crate::error::Result;
 
@@ -191,8 +191,14 @@ pub fn run(out_dir: &Path, wl: WorkloadConfig, compute: ComputeMode) -> Result<F
     let mut cells = Vec::new();
     for (kind, app, paper) in CONFIGS {
         eprintln!("  fig6: running {}/{app} ...", kind.name());
-        let vanilla = run_one(kind, app, false, wl.clone(), compute)?;
-        let fusion = run_one(kind, app, true, wl.clone(), compute)?;
+        // Windowed recording (ISSUE 7): fig6 exports no raw-series CSVs —
+        // every cell consumes workload-side latencies, the incremental
+        // ram_mean_mb, merge counts, and billing totals, all of which are
+        // level-independent (run_custom grows the windowed retention to
+        // span the run, so the TAB-COST bill stays whole-run-exact).
+        let level = crate::metrics::RecordingLevel::Windowed;
+        let vanilla = super::run_one_at(kind, app, false, wl.clone(), compute, level)?;
+        let fusion = super::run_one_at(kind, app, true, wl.clone(), compute, level)?;
         cells.push(Cell { platform: kind, app, vanilla, fusion, paper });
     }
     let fig = Fig6 { cells };

@@ -872,6 +872,11 @@ fn snapshot(platform: &Platform, probes: &[&str]) -> TopologySnap {
 /// Run FIG7 and write its CSVs + summary into `out_dir`.
 pub fn run(out_dir: &Path, params: Fig7Params) -> Result<Fig7> {
     let (fig, series_csvs) = Executor::new(Mode::Virtual).block_on(async move {
+        // Stays on the default RecordingLevel::Full (ISSUE 7 recording
+        // audit): fig7 exports the raw latency/ram/group-ram/fn-series
+        // CSVs and its phase analysis reads p95s over arbitrary windows —
+        // both genuinely Full-only.  Bounded-memory drivers are fig6, the
+        // sweeps, and fig9/fig10.
         let mut cfg = PlatformConfig::tiny().with_compute(params.compute).with_seed(params.seed);
         cfg.latency.image_build_ms = params.image_build_ms;
         cfg.latency.boot_ms = params.boot_ms;

@@ -505,6 +505,10 @@ impl Fig8 {
 }
 
 fn base_config(p: &Fig8Params, placement: PlacementPolicy, nodes: usize) -> PlatformConfig {
+    // Default RecordingLevel::Full on purpose (ISSUE 7 recording audit):
+    // fig8 exports raw `fig8_latency.csv` / `fig8_node_ram.csv` and its
+    // migration-phase analysis windows over the whole run — Full-only
+    // queries.  Drivers without raw exports run Windowed (fig6, sweeps).
     let mut cfg = PlatformConfig::tiny().with_compute(p.compute).with_seed(p.seed);
     cfg.cluster.nodes = nodes;
     cfg.cluster.placement = placement;

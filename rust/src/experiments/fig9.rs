@@ -16,6 +16,12 @@
 //! CI's reduced-scale smoke job regenerates it as an artifact and warns
 //! (non-blocking) on >20 % throughput regressions against the checked-in
 //! baseline.
+//!
+//! With `--shards N` (ISSUE 7) the simulation core runs on N per-node
+//! lanes; the driver then replays a 1-shard twin and self-checks that the
+//! verdict transcript and every node's final RAM ledger are bit-identical
+//! before the throughput point is recorded — sharding must never change
+//! the schedule, only how fast it is produced.
 
 use std::path::Path;
 use std::rc::Rc;
@@ -49,6 +55,13 @@ pub struct Fig9Params {
     pub parity: bool,
     pub feedback_interval_ms: f64,
     pub min_observations: u32,
+    /// simulation-core lanes (`--shards N`).  When > 1 the driver also runs
+    /// a 1-shard twin and self-checks the verdict transcript and per-node
+    /// RAM ledgers are bit-identical before recording the throughput point.
+    pub shards: usize,
+    /// cluster nodes (`--nodes N`) — shards map node `n` to lane
+    /// `n % shards`, so multi-lane runs want a multi-node cluster.
+    pub nodes: usize,
 }
 
 impl Fig9Params {
@@ -62,6 +75,8 @@ impl Fig9Params {
             parity: true,
             feedback_interval_ms: 1_000.0,
             min_observations: 3,
+            shards: 1,
+            nodes: 1,
         }
     }
 }
@@ -83,6 +98,11 @@ pub struct Fig9Run {
     /// canonical verdict transcript (admissions with bit-exact scores,
     /// merges/splits/evicts with bit-exact timestamps)
     pub verdicts: Vec<String>,
+    /// per-node final RAM ledger as `(node id, ram_mb bit pattern)` —
+    /// compared bit-for-bit across shard counts
+    pub node_ram: Vec<(u64, u64)>,
+    /// discrete-event epochs (virtual-clock advances) the run consumed
+    pub epochs: u64,
 }
 
 impl Fig9Run {
@@ -96,6 +116,10 @@ pub struct Fig9 {
     pub windowed: Fig9Run,
     /// full-retention twin (None with `--no-parity`)
     pub full: Option<Fig9Run>,
+    /// 1-shard twin (None unless `--shards N` with N > 1) — the sharded
+    /// schedule must reproduce it bit-for-bit before the throughput point
+    /// is recorded
+    pub single: Option<Fig9Run>,
     pub checks: Vec<(String, bool)>,
 }
 
@@ -145,6 +169,17 @@ impl Fig9 {
                 full.verdicts.len()
             ));
         }
+        if let Some(single) = &self.single {
+            out.push_str(&format!(
+                "  shards   : {} lanes over {} nodes, {} epochs — 1-shard twin \
+                 replayed {} verdicts + {} node RAM ledgers for comparison\n",
+                self.params.shards,
+                self.params.nodes,
+                w.epochs,
+                single.verdicts.len(),
+                single.node_ram.len()
+            ));
+        }
         for (name, ok) in &self.checks {
             out.push_str(&format!("  [{}] {}\n", if *ok { "PASS" } else { "FAIL" }, name));
         }
@@ -170,6 +205,10 @@ impl Fig9 {
             ("merges", Json::Num(w.merges.len() as f64)),
             ("failed_requests", Json::Num(w.report.failed as f64)),
             ("parity_checked", Json::Bool(self.full.is_some())),
+            ("shards", Json::Num(self.params.shards as f64)),
+            ("nodes", Json::Num(self.params.nodes as f64)),
+            ("shard_parity_checked", Json::Bool(self.single.is_some())),
+            ("milestone", Json::str("sharded-ready-event-loop")),
             ("provisional", Json::Bool(false)),
         ])
     }
@@ -187,6 +226,11 @@ fn config(p: &Fig9Params, level: RecordingLevel) -> PlatformConfig {
     // a healthy fused chain — verdict parity covers it either way
     cfg.fusion.merge_policy = MergePolicyKind::CostModel;
     cfg.recording.level = level;
+    cfg.cluster.nodes = p.nodes;
+    // `cluster.shards` is informational here (serialized into config dumps);
+    // the executor lane count is the `shards` argument to `run_once`, so the
+    // 1-shard twin can reuse this config unchanged.
+    cfg.cluster.shards = p.shards;
     cfg
 }
 
@@ -228,7 +272,7 @@ pub fn verdict_transcript(m: &crate::metrics::Recorder) -> Vec<String> {
     v
 }
 
-fn run_once(p: &Fig9Params, level: RecordingLevel) -> Result<Fig9Run> {
+fn run_once(p: &Fig9Params, level: RecordingLevel, shards: usize) -> Result<Fig9Run> {
     let cfg = config(p, level);
     let app = apps::chain(p.chain_len);
     let wl = WorkloadConfig {
@@ -238,13 +282,18 @@ fn run_once(p: &Fig9Params, level: RecordingLevel) -> Result<Fig9Run> {
         timeout_ms: 120_000.0,
     };
     let wall_start = std::time::Instant::now();
-    let mut run = Executor::new(Mode::Virtual).block_on(async move {
+    let mut run = Executor::sharded(Mode::Virtual, shards.max(1)).block_on(async move {
         let platform = Platform::deploy(app, cfg).await?;
         let report = workload::run(Rc::clone(&platform), wl).await?;
         // let stragglers (drains, detached work) settle before sampling ends
         crate::exec::sleep_ms(10_000.0).await;
         platform.shutdown();
         let m = &platform.metrics;
+        let node_ram = platform
+            .node_ram_ledger()
+            .into_iter()
+            .map(|(id, mb)| (id, mb.to_bits()))
+            .collect();
         Ok::<Fig9Run, crate::error::Error>(Fig9Run {
             wall_s: 0.0, // filled in below, outside the virtual clock
             recorder_bytes: m.approx_bytes(),
@@ -255,6 +304,8 @@ fn run_once(p: &Fig9Params, level: RecordingLevel) -> Result<Fig9Run> {
             evicts: m.evicts().len(),
             inline_calls: m.counter("inline_calls"),
             verdicts: verdict_transcript(m),
+            node_ram,
+            epochs: crate::exec::epochs(),
             report,
         })
     })?;
@@ -265,8 +316,14 @@ fn run_once(p: &Fig9Params, level: RecordingLevel) -> Result<Fig9Run> {
 /// Run FIG9 and write `BENCH_scale.json` + `fig9_summary.txt` into
 /// `out_dir`.
 pub fn run(out_dir: &Path, p: Fig9Params) -> Result<Fig9> {
-    let windowed = run_once(&p, RecordingLevel::Windowed)?;
-    let full = if p.parity { Some(run_once(&p, RecordingLevel::Full)?) } else { None };
+    let windowed = run_once(&p, RecordingLevel::Windowed, p.shards)?;
+    let full = if p.parity { Some(run_once(&p, RecordingLevel::Full, p.shards)?) } else { None };
+    // Shard self-check: replay the same windowed run on a single lane and
+    // demand the merged schedule reproduced every platform decision and
+    // every node's final RAM balance bit-for-bit.  Only then is the
+    // N-shard throughput number comparable to the trajectory baseline.
+    let single =
+        if p.shards > 1 { Some(run_once(&p, RecordingLevel::Windowed, 1)?) } else { None };
 
     let mut checks: Vec<(String, bool)> = Vec::new();
     checks.push((
@@ -299,8 +356,26 @@ pub fn run(out_dir: &Path, p: Fig9Params) -> Result<Fig9> {
             full.report.failed == 0,
         ));
     }
+    if let Some(single) = &single {
+        checks.push((
+            format!(
+                "{}-shard verdict transcript identical to 1-shard ({} vs {} entries)",
+                p.shards,
+                windowed.verdicts.len(),
+                single.verdicts.len()
+            ),
+            windowed.verdicts == single.verdicts,
+        ));
+        checks.push((
+            format!(
+                "per-node RAM ledgers identical across shard counts ({} nodes)",
+                windowed.node_ram.len()
+            ),
+            windowed.node_ram == single.node_ram,
+        ));
+    }
 
-    let fig = Fig9 { params: p, windowed, full, checks };
+    let fig = Fig9 { params: p, windowed, full, single, checks };
     write_output(&out_dir.join("BENCH_scale.json"), &fig.bench_json().to_string())?;
     write_output(&out_dir.join("fig9_summary.txt"), &fig.render())?;
     Ok(fig)
@@ -330,5 +405,31 @@ mod tests {
         assert!(v.get("wall_time_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.get("requests_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.get("recorder_bytes").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fig9_shard_parity_small_scale() {
+        // 3 lanes over a 3-node cluster must replay the 1-shard schedule
+        // bit-for-bit (the driver runs the twin itself and records the
+        // comparison as checks).  Full-retention parity is skipped here —
+        // the shard axis is what's under test.
+        let mut p = Fig9Params::defaults(true);
+        p.requests = 1_200;
+        p.rate_rps = 200.0;
+        p.compute = ComputeMode::Disabled;
+        p.parity = false;
+        p.shards = 3;
+        p.nodes = 3;
+        let dir = std::env::temp_dir().join("provuse_fig9_shard_test");
+        let fig = run(&dir, p).unwrap();
+        assert!(fig.passed(), "{}", fig.render());
+        let single = fig.single.as_ref().expect("1-shard twin must run");
+        assert_eq!(fig.windowed.verdicts, single.verdicts);
+        assert_eq!(fig.windowed.node_ram, single.node_ram);
+        assert!(!fig.windowed.node_ram.is_empty());
+        let json = std::fs::read_to_string(dir.join("BENCH_scale.json")).unwrap();
+        let v = Json::parse(&json).unwrap();
+        assert_eq!(v.get("shards").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(v.get("shard_parity_checked").unwrap(), &Json::Bool(true));
     }
 }

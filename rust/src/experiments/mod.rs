@@ -66,7 +66,8 @@ impl RunResult {
     }
 }
 
-/// Execute one benchmark run on a fresh virtual-clock executor.
+/// Execute one benchmark run on a fresh virtual-clock executor (Full
+/// recording — the drivers whose CSV exports need every raw sample).
 pub fn run_one(
     kind: PlatformKind,
     app_name: &str,
@@ -74,8 +75,25 @@ pub fn run_one(
     wl: WorkloadConfig,
     compute: ComputeMode,
 ) -> Result<RunResult> {
+    run_one_at(kind, app_name, fusion, wl, compute, crate::metrics::RecordingLevel::Full)
+}
+
+/// [`run_one`] at an explicit recording level.  Drivers that never read
+/// the Full-only raw series (fig6's tables, the sweeps) pass
+/// [`RecordingLevel::Windowed`](crate::metrics::RecordingLevel) for
+/// bounded recorder memory; every number they consume — workload-side
+/// latencies, the incremental `ram_mean_mb`, event series, billing
+/// totals — is bit-identical across levels (`tests/recording_parity.rs`).
+pub fn run_one_at(
+    kind: PlatformKind,
+    app_name: &str,
+    fusion: bool,
+    wl: WorkloadConfig,
+    compute: ComputeMode,
+    level: crate::metrics::RecordingLevel,
+) -> Result<RunResult> {
     let app = apps::by_name(app_name)?;
-    let mut config = PlatformConfig::of_kind(kind).with_compute(compute);
+    let mut config = PlatformConfig::of_kind(kind).with_compute(compute).with_recording(level);
     if !fusion {
         config = config.vanilla();
     }
@@ -85,13 +103,26 @@ pub fn run_one(
 /// Execute a benchmark run with a fully custom platform config (sweeps).
 pub fn run_custom(
     app: apps::AppSpec,
-    config: PlatformConfig,
+    mut config: PlatformConfig,
     wl: WorkloadConfig,
 ) -> Result<RunResult> {
     let kind = config.kind;
     let fusion = config.fusion.enabled;
     let app_name = app.name.clone();
-    Executor::new(Mode::Virtual).block_on(async move {
+    // Under windowed recording, grow the retention horizon to span the
+    // whole run (ring memory is O(buckets) regardless): whole-run
+    // aggregates served off the bounded ledgers — the TAB-COST bill —
+    // then cover every event, not just a trailing window.
+    if config.recording.level == crate::metrics::RecordingLevel::Windowed {
+        let span_ms = if wl.rate_rps > 0.0 {
+            wl.requests as f64 / wl.rate_rps * 1e3
+        } else {
+            0.0
+        };
+        config.recording.ensure_retention_ms(span_ms + wl.timeout_ms + 60_000.0);
+    }
+    let shards = config.cluster.shards.max(1);
+    Executor::sharded(Mode::Virtual, shards).block_on(async move {
         let platform = Platform::deploy(app, config).await?;
         let report = workload::run(Rc::clone(&platform), wl).await?;
         // let stragglers (async branches, drains) settle before sampling ends

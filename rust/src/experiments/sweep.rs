@@ -57,15 +57,20 @@ impl Sweep {
 }
 
 /// Like `experiments::run_custom` but under an explicit arrival process.
+///
+/// Runs under **windowed** recording (ISSUE 7): sweep points consume only
+/// workload-side latency medians and merge counts — both level-independent
+/// — so the ablation grid never pays Full's O(requests) recorder memory.
 fn run_arrival(
     app: AppSpec,
-    config: PlatformConfig,
+    mut config: PlatformConfig,
     wl: WorkloadConfig,
     arrival: Arrival,
 ) -> Result<RunResult> {
     let kind = config.kind;
     let fusion = config.fusion.enabled;
     let app_name = app.name.clone();
+    config.recording.level = crate::metrics::RecordingLevel::Windowed;
     Executor::new(Mode::Virtual).block_on(async move {
         let platform = Platform::deploy(app, config).await?;
         let report =

@@ -21,6 +21,13 @@
 //! hash probe + `Rc` bump — zero heap allocations per call — and the
 //! string-typed entry points intern once (allocation-free for any name
 //! seen before) so existing callers keep working unchanged.
+//!
+//! Under the sharded simulation core (ISSUE 7) the routing table is
+//! control-plane state: `Rc<Instance>` / `Rc<ReplicaSet>` handles resolved
+//! here must never cross a shard boundary.  The dispatcher instead derives
+//! the target's *lane index* ([`crate::cluster::Cluster::shard_of`]) and
+//! pins the call's task there with `exec::spawn_on` — only `Send` wake
+//! messages travel between lanes (see `docs/ARCHITECTURE.md`).
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;

@@ -319,7 +319,8 @@ impl Dispatcher {
                 // inline iff the target's replica set contains THIS
                 // instance (fused together) — at replica count 1 this is
                 // the seed's same-instance id check
-                let local = d.gateway.resolve_set_sym(target)?.contains(inst.id());
+                let target_set = d.gateway.resolve_set_sym(target)?;
+                let local = target_set.contains(inst.id());
                 let fut: LocalBoxFuture<Result<Vec<f32>>> = if local {
                     // fused fast path: in-process call
                     d.metrics.bump("inline_calls");
@@ -342,7 +343,15 @@ impl Dispatcher {
                         d.cluster.node_of(inst.id()),
                     )
                 };
-                sync_handles.push(exec::spawn(fut));
+                // inline work inherits this instance's lane; a remote call
+                // runs on the lane of the target's node (its primary
+                // replica — the no-Rc-across-shards ownership rule).  Lane
+                // choice never alters the schedule (global wake-seq merge),
+                // so this is pinning, not reordering.
+                sync_handles.push(match this.call_lane(local, &target_set) {
+                    Some(lane) => exec::spawn_on(lane, fut),
+                    None => exec::spawn(fut),
+                });
             }
             for handle in sync_handles {
                 let child_out = handle.await?;
@@ -354,7 +363,8 @@ impl Dispatcher {
             for call in spec.calls.iter().filter(|c| c.mode == CallMode::Async) {
                 let child_payload = this.child_payload(&out, call.scale);
                 let target = Sym::intern(&call.target);
-                let local = d.gateway.resolve_set_sym(target)?.contains(inst.id());
+                let target_set = d.gateway.resolve_set_sym(target)?;
+                let local = target_set.contains(inst.id());
                 let this2 = this.clone();
                 d.metrics.bump("async_calls");
                 if local {
@@ -379,19 +389,48 @@ impl Dispatcher {
                     });
                 } else {
                     let my_node = d.cluster.node_of(inst.id());
-                    exec::spawn(async move {
+                    // detached remote call: pinned to the target's lane,
+                    // same rule as the sync path above
+                    let lane = this.call_lane(false, &target_set);
+                    let fut = async move {
                         let r = this2
                             .invoke_remote(target, child_payload, depth + 1, my_node)
                             .await;
                         if r.is_err() {
                             this2.inner.metrics.bump("async_failures");
                         }
-                    });
+                    };
+                    match lane {
+                        Some(lane) => {
+                            exec::spawn_on(lane, fut);
+                        }
+                        None => {
+                            exec::spawn(fut);
+                        }
+                    }
                 }
             }
 
             Ok(out)
         })
+    }
+
+    /// Lane an outbound call's task should run on under a sharded
+    /// executor: `None` (inherit the caller's lane) for inline calls and
+    /// for unsharded runs — keeping the unsharded spawn path untouched —
+    /// otherwise the lane of the node hosting the target's primary
+    /// replica.  Only a lane *index* leaves this function; the
+    /// `Rc<ReplicaSet>` itself never crosses a shard boundary.
+    fn call_lane(&self, local: bool, target_set: &ReplicaSet) -> Option<usize> {
+        if local {
+            return None;
+        }
+        let shards = exec::shard_count();
+        if shards <= 1 {
+            return None;
+        }
+        let primary = target_set.primary()?;
+        Some(self.inner.cluster.shard_of(primary.id(), shards))
     }
 
     /// Derive a child call payload from the caller's output: deterministic

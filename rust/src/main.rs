@@ -104,6 +104,9 @@ fn apply_cluster_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
     let c = &mut config.cluster;
     c.nodes = args.u64_or("nodes", c.nodes as u64)? as usize;
     c.node_capacity_mb = args.f64_or("node-capacity", c.node_capacity_mb)?;
+    // --shards N: partition the simulation core into N per-node lanes
+    // (schedules stay bit-identical to --shards 1 for a pinned seed)
+    c.shards = args.u64_or("shards", c.shards as u64)?.max(1) as usize;
     if let Some(policy) = args.flag("placement") {
         c.placement = PlacementPolicy::parse(policy)?;
     }
@@ -233,6 +236,8 @@ fn dispatch(args: &Args) -> Result<()> {
             p.feedback_interval_ms =
                 args.f64_or("feedback-interval-ms", p.feedback_interval_ms)?;
             p.min_observations = args.u32_or("min-observations", p.min_observations)?;
+            p.shards = args.u64_or("shards", p.shards as u64)?.max(1) as usize;
+            p.nodes = args.u64_or("nodes", p.nodes as u64)?.max(1) as usize;
             if args.has("no-parity") {
                 p.parity = false;
             }
@@ -413,7 +418,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20                      cross-node negative control)\n\
                  \x20 figure9 [--smoke]    ours: telemetry pipeline at 10^6 requests\n\
                  \x20   [--no-parity]      (windowed recording, bounded memory, verdict\n\
-                 \x20                      parity vs full retention; emits BENCH_scale.json)\n\
+                 \x20   [--shards N]       parity vs full retention; --shards N self-checks\n\
+                 \x20   [--nodes N]        1-vs-N-shard transcript parity, then emits\n\
+                 \x20                      BENCH_scale.json)\n\
                  \x20 figure10 [--smoke]   ours: replica sets under burst (warm-pool +\n\
                  \x20   [--no-parity]      cold-boot scale-out with zero drops, scale-in\n\
                  \x20                      to floor, --replicas-max 1 seed-parity trio)\n\
@@ -434,7 +441,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  merge side  : --merge-policy [observation-count|cost] --merge-threshold F\n\
                  \x20             --auto-tune (hill-climb weights on post-fuse regret)\n\
                  cluster     : --nodes N --placement [bin-pack|spread|fusion-affinity]\n\
-                 \x20             --node-capacity MB --cross-node-ms MS\n\
+                 \x20             --node-capacity MB --cross-node-ms MS --shards N\n\
                  scaling     : --replicas-max N --replicas-min N --target-inflight N\n\
                  \x20             --scale-interval-ms MS --idle-horizon-ms MS --warm-pool N\n\
                  \x20             --warm-attach-ms MS --concurrency N"

@@ -44,6 +44,17 @@ impl Fabric {
         &self.params
     }
 
+    /// Minimum virtual-time cost of a cross-node hop (ms) — the sharded
+    /// core's *epoch lookahead*: a `Hop::CrossNode` message sent in epoch
+    /// `e` cannot be observed by another shard before `e`'s clock advance,
+    /// so worker threads in the threaded milestone may run one epoch
+    /// without inter-shard synchronization whenever this floor is
+    /// positive.  Single-node calibrations return 0 (no lookahead: every
+    /// hop stays on its lane).
+    pub fn epoch_lookahead_ms(&self) -> f64 {
+        self.params.cross_node_ms.max(0.0)
+    }
+
     /// Sample the latency (ms) of one `hop`.
     pub fn sample(&self, hop: Hop) -> f64 {
         let p = &self.params;
@@ -163,6 +174,20 @@ mod tests {
         let big = f.serialize_cost(1024 * 1024);
         assert!(big > small);
         assert!((big - small - per_kb * 1023.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn epoch_lookahead_is_the_cross_node_floor() {
+        let f = fabric(false);
+        assert_eq!(f.epoch_lookahead_ms(), PlatformConfig::tiny().latency.cross_node_ms);
+        assert!(f.epoch_lookahead_ms() > 0.0);
+        // the lookahead is a *floor*: no cross-node sample undercuts it...
+        // within the calibrated distribution's practical support; what the
+        // sharded core relies on is only that it is positive when a
+        // cross-node surcharge exists and zero when it doesn't
+        let mut p = PlatformConfig::tiny().latency;
+        p.cross_node_ms = 0.0;
+        assert_eq!(Fabric::new(p, 1).epoch_lookahead_ms(), 0.0);
     }
 
     #[test]

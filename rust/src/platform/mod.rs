@@ -676,6 +676,30 @@ impl Platform {
         self.gateway.resolve(function).ok().and_then(|inst| self.cluster.node_of(inst.id()))
     }
 
+    /// Simulation-core lane serving `function` under a sharded executor
+    /// (0 when unrouted or unsharded).  Workload drivers pin each
+    /// request's root task here (`exec::spawn_on`) so ingress enters on
+    /// the lane of the node that will execute it.  Resolves through the
+    /// set's primary replica — **never** the load-balanced `resolve`,
+    /// which draws from the P2C RNG and would perturb seed streams.
+    pub fn route_shard(&self, function: &str) -> usize {
+        let shards = exec::shard_count();
+        if shards <= 1 {
+            return 0;
+        }
+        match self.gateway.resolve_set(function).ok().and_then(|set| set.primary()) {
+            Some(inst) => self.cluster.shard_of(inst.id(), shards),
+            None => 0,
+        }
+    }
+
+    /// Final per-node RAM ledger: `(node id, live RAM MiB)` in node order —
+    /// the cross-shard determinism artifact the fig9 shard-parity check
+    /// compares bit-for-bit between 1-shard and N-shard runs.
+    pub fn node_ram_ledger(&self) -> Vec<(u64, f64)> {
+        self.cluster.nodes().iter().map(|n| (n.id().0, n.ram_mb())).collect()
+    }
+
     /// Virtual time the platform finished deploying.
     pub fn start(&self) -> SimInstant {
         self.start

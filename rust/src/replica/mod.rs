@@ -159,10 +159,11 @@ impl ReplicaSet {
 
     /// Pick the replica a new request should go to: among non-draining
     /// live replicas, power-of-two-choices on in-flight count (two uniform
-    /// draws, keep the idler; ties keep the first).  A singleton set
-    /// returns its sole replica **without drawing from the RNG** — the
-    /// seed-parity fast path.  `None` when no routable replica exists
-    /// (scaled to zero, or everything is draining).
+    /// draws of **distinct** replicas, keep the idler; ties keep the
+    /// first-drawn).  A singleton set returns its sole replica **without
+    /// drawing from the RNG** — the seed-parity fast path.  `None` when no
+    /// routable replica exists (scaled to zero, or everything is
+    /// draining).
     pub fn pick(&self) -> Option<Rc<Instance>> {
         let replicas = self.replicas.borrow();
         let mut routable = replicas
@@ -179,7 +180,15 @@ impl ReplicaSet {
         let n = candidates.len() as u64;
         let mut rng = self.rng.borrow_mut();
         let i = rng.below(n) as usize;
-        let j = rng.below(n) as usize;
+        // Draw the second candidate from the n-1 *others* and offset it
+        // past `i`: `i != j` always holds, so the choice never degenerates
+        // to a single uniform sample (it used to collide with probability
+        // 1/n — worst exactly at the small replica counts the autoscaler
+        // lives at).  Still two RNG draws, so seed streams are unchanged.
+        let mut j = rng.below(n - 1) as usize;
+        if j >= i {
+            j += 1;
+        }
         let a = candidates[i];
         let b = candidates[j];
         Some(Rc::clone(if b.inflight() < a.inflight() { b } else { a }))
@@ -387,6 +396,52 @@ mod tests {
             a.begin_drain().unwrap();
             assert!(set.pick().is_none());
             assert_eq!(set.live_len(), 0);
+        });
+    }
+
+    #[test]
+    fn p2c_candidates_never_collide() {
+        // The ISSUE 7 distribution test for the i==j sampling bug.  With
+        // n = 2 and a strictly less-loaded replica, *collision-free* P2C
+        // always compares both replicas and must route every pick to the
+        // idler.  The old independent draws collided (i == j) with
+        // probability 1/2, sending ~1/4 of picks to the busy replica —
+        // ~150/200 here under any seed — so this asserts strictly more
+        // than any collided-sample baseline can achieve: all 200.
+        run_virtual(async {
+            let rt = runtime();
+            let img = image(&rt, "f");
+            let a = rt.launch(img).unwrap();
+            let b = rt.launch(img).unwrap();
+            sleep_ms(2_000.0).await; // both healthy
+            let set = ReplicaSet::new(vec![Rc::clone(&a), Rc::clone(&b)], img);
+            for _ in 0..5 {
+                a.request_started();
+            }
+            let picks_b =
+                (0..200).filter(|_| set.pick().unwrap().id() == b.id()).count();
+            assert_eq!(
+                picks_b, 200,
+                "distinct-candidate p2c must always find the idler at n=2: {picks_b}/200"
+            );
+            for _ in 0..5 {
+                a.request_finished();
+            }
+            // at n=3 the idler still wins whenever it is drawn (2 of 3
+            // unordered distinct pairs) — a fixed seed keeps this exact
+            let c = rt.launch(img).unwrap();
+            sleep_ms(2_000.0).await;
+            set.add(Rc::clone(&c));
+            for _ in 0..4 {
+                a.request_started();
+                b.request_started();
+            }
+            let picks_c =
+                (0..300).filter(|_| set.pick().unwrap().id() == c.id()).count();
+            // E[picks_c] = 2/3 * 300 = 200; collided draws would pull the
+            // expectation down to 5/9 * 300 ≈ 167.  Assert above the
+            // collided mean with slack for seed noise.
+            assert!(picks_c > 180, "idler must win 2/3 of distinct pairs: {picks_c}/300");
         });
     }
 

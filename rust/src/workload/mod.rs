@@ -106,7 +106,11 @@ pub async fn run_targeted(
         let failed = Rc::clone(&failed);
         let latencies = Rc::clone(&latencies);
         let timeout_ms = cfg.timeout_ms;
-        handles.push(exec::spawn(async move {
+        // sharded core: each request's root task enters on the lane of the
+        // node serving the entry route (inherit-the-spawner on unsharded
+        // runs — route_shard returns 0 and spawn_on(0, _) ≡ spawn there)
+        let entry_shard = platform.route_shard(&function);
+        handles.push(exec::spawn_on(entry_shard, async move {
             let t0 = exec::now();
             let arrival_ms = platform.metrics.rel_now_ms();
             let result = exec::timeout(

@@ -5,18 +5,22 @@
 //! * [`chain`] — an N-stage sequential chain used by the ablation sweeps.
 //! * [`mixed`] — three independent pairs (light/heavy/cold) for the
 //!   merge-admission planner scenario.
+//! * [`trap`] — a chain whose optimal partition is unreachable by greedy
+//!   pairwise admission (the global re-planner A/B scenario).
 
 mod spec;
 
 pub mod chain;
 pub mod iot;
 pub mod mixed;
+pub mod trap;
 pub mod tree;
 
 pub use chain::chain;
 pub use iot::{iot, iot_heavy};
 pub use mixed::mixed;
 pub use spec::{AppBuilder, AppSpec, CallMode, CallSpec, FnBuilder, FunctionSpec};
+pub use trap::trap;
 pub use tree::tree;
 
 use crate::error::{Error, Result};
@@ -31,6 +35,7 @@ pub fn by_name(name: &str) -> Result<AppSpec> {
         "iot-heavy" => Ok(iot_heavy()),
         "chain" => Ok(chain(6)),
         "mixed" => Ok(mixed()),
+        "trap" => Ok(trap()),
         other => Err(Error::Config(format!(
             "unknown app `{other}` (available: {})",
             APP_NAMES.join(", ")
@@ -39,7 +44,7 @@ pub fn by_name(name: &str) -> Result<AppSpec> {
 }
 
 /// All benchmark app names.
-pub const APP_NAMES: &[&str] = &["tree", "iot", "iot-heavy", "chain", "mixed"];
+pub const APP_NAMES: &[&str] = &["tree", "iot", "iot-heavy", "chain", "mixed", "trap"];
 
 #[cfg(test)]
 mod tests {

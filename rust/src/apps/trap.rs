@@ -1,0 +1,87 @@
+//! The TRAP application — the global re-planner's proving ground
+//! (FIG11 `--app trap`).  A three-stage sync chain in one trust domain:
+//!
+//! ```text
+//! intake --sync--> enrich --sync--> archive
+//! ```
+//!
+//! `enrich` carries a ~450 MiB enrichment-model dependency stack, sized so
+//! that **every pairwise step is a loss** under the greedy cost-model
+//! admission: both (intake, enrich) and (enrich, archive) put `enrich`'s
+//! working set into the predicted fused footprint, which trips the churn
+//! gate (`w_ram * ram_term >= evict_threshold`).  The greedy planner
+//! therefore refuses both candidate pairs forever and locks the topology
+//! into all-singletons — a textbook local optimum, reached by never
+//! accepting a temporarily-worse intermediate.
+//!
+//! The *whole-partition* objective tells a different story: fusing the
+//! full chain removes both cut edges' double-billed blocked time while the
+//! RAM residency total barely moves (the model is resident either way —
+//! it is priced once per group, not once per candidate pair).  The global
+//! planner walks through the greedy-refused intermediate and lands on the
+//! all-fused partition, whose steady state strictly dominates greedy's on
+//! the same latency×RAM×bill objective.  `figure11` self-checks exactly
+//! that A/B.
+
+use super::spec::{AppSpec, CallMode, FunctionSpec};
+
+fn f(
+    name: &str,
+    body: &str,
+    busy_ms: f64,
+    code_mb: f64,
+    calls: Vec<(&str, CallMode)>,
+) -> FunctionSpec {
+    FunctionSpec::calibrated(name, body, busy_ms, code_mb, "trap", calls)
+}
+
+/// Build the TRAP application.
+pub fn trap() -> AppSpec {
+    use CallMode::*;
+    AppSpec::new(
+        "trap",
+        "intake",
+        vec![
+            f("intake", "parse", 10.0, 10.0, vec![("enrich", Sync)]),
+            f("enrich", "temperature", 40.0, 450.0, vec![("archive", Sync)]),
+            f("archive", "aggregate", 15.0, 9.0, vec![]),
+        ],
+    )
+    .expect("trap app is statically valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_chain_one_trust_domain() {
+        let app = trap();
+        assert_eq!(app.entry, "intake");
+        assert_eq!(app.len(), 3);
+        let groups = app.sync_fusion_groups();
+        assert_eq!(
+            groups,
+            vec![vec!["archive".to_string(), "enrich".into(), "intake".into()]]
+        );
+        for f in app.functions() {
+            assert_eq!(f.trust_domain, "trap");
+            assert!(f.body.is_some(), "{} missing body", f.name);
+        }
+    }
+
+    #[test]
+    fn heavy_middle_traps_every_pairwise_step() {
+        let app = trap();
+        let enrich = app.function("enrich").unwrap().code_mb;
+        // against the default cost params (ram_ref 256 MiB, evict/churn
+        // threshold 2.0) the enrich working set alone trips the churn gate
+        // for BOTH of its pairs: enrich/256 > 1.7 leaves under 0.3 for the
+        // partner, and both partners' instances exceed that on base RAM
+        // alone — the greedy arm can never take the first step
+        assert!(enrich / 256.0 > 1.7, "enrich must dominate the churn gate");
+        for name in ["intake", "archive"] {
+            assert!(app.function(name).unwrap().code_mb < 20.0);
+        }
+    }
+}

@@ -288,6 +288,42 @@ impl MergePolicyKind {
     }
 }
 
+/// Which planning regime drives topology changes (ISSUE 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerKind {
+    /// Seed behavior: pairwise-greedy decisions per feedback tick — each
+    /// Fuse/Split/Evict/Migrate is emitted the moment its local signal
+    /// trips.  Bit-identical to the pre-planner platform.
+    Greedy,
+    /// Konflux-style global re-planner: every `replan_interval_ticks`
+    /// feedback ticks the observer's windowed signals are snapshotted and a
+    /// simulated-annealing search over whole call-graph partitions emits a
+    /// plan-diff (ordered fuse/split/evict/migrate actions) executed
+    /// through the existing pipelines with a stale-topology abort guard.
+    /// All greedy emissions are suppressed; plans are the only source of
+    /// topology change.
+    Global,
+}
+
+impl PlannerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlannerKind::Greedy => "greedy",
+            PlannerKind::Global => "global",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "greedy" => Ok(PlannerKind::Greedy),
+            "global" => Ok(PlannerKind::Global),
+            other => Err(Error::Config(format!(
+                "unknown planner `{other}` (available: greedy, global)"
+            ))),
+        }
+    }
+}
+
 /// Cost-model weights and thresholds (used when `split_policy` is
 /// [`SplitPolicyKind::CostModel`]; see `fusion::cost`).
 #[derive(Debug, Clone)]
@@ -367,6 +403,13 @@ pub struct FusionParams {
     /// cost-model weights (read under `SplitPolicyKind::CostModel` and/or
     /// `MergePolicyKind::CostModel`)
     pub cost: CostParams,
+    /// which planning regime drives topology changes (`--planner`):
+    /// greedy per-tick emissions (the seed default, bit-identical to the
+    /// pre-planner platform) or the periodic global re-planner
+    pub planner: PlannerKind,
+    /// feedback ticks between global re-plans (`--replan-ticks`; only read
+    /// under [`PlannerKind::Global`], must be >= 1)
+    pub replan_interval_ticks: u32,
 }
 
 /// Complete platform assembly configuration.
@@ -524,6 +567,8 @@ impl FusionParams {
             merge_policy: MergePolicyKind::ObservationCount,
             auto_tune: false,
             cost: CostParams::default(),
+            planner: PlannerKind::Greedy,
+            replan_interval_ticks: 5,
         }
     }
 
@@ -645,6 +690,8 @@ impl PlatformConfig {
                     ("split_policy", Json::str(f.split_policy.name())),
                     ("merge_policy", Json::str(f.merge_policy.name())),
                     ("auto_tune", Json::Bool(f.auto_tune)),
+                    ("planner", Json::str(f.planner.name())),
+                    ("replan_interval_ticks", Json::Num(f.replan_interval_ticks as f64)),
                     (
                         "cost",
                         Json::obj(vec![
@@ -753,6 +800,28 @@ mod tests {
         let cost = fusion.get("cost").unwrap();
         assert_eq!(cost.get("merge_threshold").unwrap().as_f64().unwrap(), 0.0);
         assert!(cost.get("tune_step").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn planner_parses_and_defaults_to_greedy() {
+        let p = FusionParams::default_enabled();
+        assert_eq!(p.planner, PlannerKind::Greedy, "default must be the greedy seed regime");
+        assert!(p.replan_interval_ticks >= 1);
+        assert_eq!(PlannerKind::parse("greedy").unwrap(), PlannerKind::Greedy);
+        assert_eq!(PlannerKind::parse("global").unwrap(), PlannerKind::Global);
+        assert!(PlannerKind::parse("konflux").is_err());
+    }
+
+    #[test]
+    fn planner_knobs_serialize() {
+        let mut c = PlatformConfig::tiny();
+        c.fusion.planner = PlannerKind::Global;
+        c.fusion.replan_interval_ticks = 7;
+        let j = c.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        let fusion = v.get("fusion").unwrap();
+        assert_eq!(fusion.get("planner").unwrap().as_str().unwrap(), "global");
+        assert_eq!(fusion.get("replan_interval_ticks").unwrap().as_f64().unwrap(), 7.0);
     }
 
     #[test]

@@ -14,8 +14,10 @@
 //! | FIG8    | ours: multi-node cluster     | [`fig8`]              |
 //! | FIG9    | ours: telemetry @ 10⁶ reqs   | [`fig9`]              |
 //! | FIG10   | ours: replica sets + warm pool under burst | [`fig10`] |
+//! | FIG11   | ours: greedy vs global re-planning A/B     | [`fig11`] |
 
 pub mod fig10;
+pub mod fig11;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;

@@ -306,6 +306,58 @@ impl CostModel {
             churn_gated,
         }
     }
+
+    // -- global re-planner pricing (ISSUE 8) --------------------------------
+    //
+    // The global planner scores whole partitions with the SAME per-term
+    // prices `predict_merge` charges pairs, rearranged as a minimization:
+    // every *cut* sync edge keeps paying its blocked-time and double-billing
+    // rates, every group keeps paying RAM residency.  A partition's total is
+    // therefore comparable across arbitrary rearrangements, while a single
+    // pair's predict_merge score remains exactly the delta of fusing that
+    // pair in isolation.
+
+    /// Ongoing price of leaving the sync edge (`caller` -> `callee`) *cut*
+    /// (un-fused): the caller's double-billed blocked-time rate scaled by
+    /// the callee's share of its outbound calls, plus the callee's
+    /// separately billed GiB-s rate — the two benefit terms of
+    /// [`CostModel::predict_merge`], charged as a cost while the edge
+    /// stays remote.
+    pub fn cut_cost(&self, caller: &FnSignals, callee: &FnSignals, callee_share: f64) -> f64 {
+        let share = callee_share.clamp(0.0, 1.0);
+        let lat_term = if caller.window_s > 0.0 {
+            share * (caller.billed_ms - caller.self_ms).max(0.0) / (caller.window_s * 1e3)
+        } else {
+            0.0
+        };
+        let gbs_term = if callee.window_s > 0.0 {
+            callee.gb_seconds.max(0.0) / callee.window_s
+        } else {
+            0.0
+        };
+        self.w_latency * lat_term + self.w_gbs * gbs_term
+    }
+
+    /// Ongoing RAM-residency price of one group: summed per-replica
+    /// footprints, every fused replica paying the combined working set —
+    /// the penalty term of [`CostModel::predict_merge`] as a group cost.
+    pub fn residency_cost(&self, ram_mb: f64, replica_scale: f64) -> f64 {
+        self.w_ram * ram_mb.max(0.0) * replica_scale.max(1.0) / self.ram_ref_mb
+    }
+
+    /// One-off co-location price of a migration, amortized over the
+    /// feedback window (the `mig_term` of [`CostModel::predict_merge`]).
+    pub fn migration_cost(&self, migration_ms: f64, window_s: f64) -> f64 {
+        if window_s <= 0.0 {
+            return 0.0;
+        }
+        self.w_latency * migration_ms.max(0.0) / (window_s * 1e3)
+    }
+
+    /// The RAM reference scale (MiB) the residency term divides by.
+    pub fn ram_ref_mb(&self) -> f64 {
+        self.ram_ref_mb
+    }
 }
 
 /// Online hill-climb over the three merge weights, driven by post-fuse
@@ -802,6 +854,53 @@ mod tests {
             assert!(
                 m.predict_merge(&caller, &callee, 0.0, &wider).score <= base.score,
                 "a larger replica scale raised the merge score"
+            );
+        });
+    }
+
+    #[test]
+    fn planner_prices_decompose_predict_merge_exactly() {
+        // The global planner's cut/residency/migration prices must be the
+        // SAME terms predict_merge charges, so a pair's admission score is
+        // exactly the objective delta of fusing it in isolation:
+        //   score = cut_cost - migration_cost - residency_cost(pair)
+        check("planner prices decompose predict_merge", 128, |g| {
+            let mut p = FusionParams::default_enabled();
+            p.max_group_ram_mb = g.f64(50.0, 1_000.0);
+            p.cost.w_latency = g.f64(0.0, 4.0);
+            p.cost.w_ram = g.f64(0.0, 4.0);
+            p.cost.w_gbs = g.f64(0.0, 4.0);
+            let m = CostModel::from_params(&p);
+            let window_s = g.f64(0.5, 10.0);
+            let caller = FnSignals {
+                window_s,
+                ..signals("a", g.f64(0.0, 500.0), g.f64(0.0, 8_000.0), g.f64(0.0, 4_000.0), g.f64(0.0, 4.0))
+            };
+            let callee = FnSignals {
+                window_s,
+                ..signals("b", g.f64(0.0, 500.0), 0.0, 0.0, g.f64(0.0, 4.0))
+            };
+            let colocated = g.bool();
+            let ctx = MergeContext {
+                callee_share: g.f64(0.0, 1.0),
+                colocated,
+                migration_ms: g.f64(0.0, 5_000.0),
+                target_headroom_mb: f64::INFINITY,
+                replica_scale: g.f64(1.0, 5.0),
+            };
+            let d = m.predict_merge(&caller, &callee, 0.0, &ctx);
+            let mig = if colocated {
+                0.0
+            } else {
+                m.migration_cost(ctx.migration_ms, caller.window_s)
+            };
+            let recomposed = m.cut_cost(&caller, &callee, ctx.callee_share)
+                - mig
+                - m.residency_cost(caller.ram_mb + callee.ram_mb, ctx.replica_scale);
+            assert!(
+                (d.score - recomposed).abs() < 1e-12,
+                "predict_merge {} != decomposed {recomposed}",
+                d.score
             );
         });
     }

@@ -37,13 +37,14 @@
 //! `provuse apps --observed` can dump.
 
 pub mod cost;
+pub mod plan;
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, HashSet};
 
 use crate::apps::AppSpec;
 use crate::cluster::NodeId;
-use crate::config::{FusionParams, MergePolicyKind, SplitPolicyKind};
+use crate::config::{FusionParams, MergePolicyKind, PlannerKind, SplitPolicyKind};
 use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::Sender;
@@ -51,6 +52,7 @@ use crate::metrics::{AdmissionSample, Recorder, RegretSample};
 use crate::util::intern::Sym;
 
 pub use cost::{FnSignals, MergeContext, MergeDecision};
+pub use plan::{Plan, PlanAction, PlanSnapshot};
 
 use cost::{AutoTuner, CostModel};
 
@@ -79,6 +81,10 @@ pub enum FusionRequest {
     /// node `to` — the node-pressure controller's cheaper alternative to
     /// defusing (no image build, the fusion wins survive the move).
     Migrate { functions: Vec<String>, to: NodeId },
+    /// A whole plan-diff from the global re-planner (`--planner global`):
+    /// an ordered action list the Merger executes atomically-or-aborts
+    /// under the plan's snapshot-epoch guard.
+    Plan(plan::Plan),
 }
 
 /// Which policy violation triggered a defusion.
@@ -230,6 +236,10 @@ struct ObserverState {
     /// online weight tuner (Some only under CostModel merge policy with
     /// auto_tune on)
     tuner: Option<AutoTuner>,
+    /// bumped on every completed topology change (fuse/split/evict/migrate)
+    /// — the global planner's stale-plan guard: a plan emitted at epoch E
+    /// aborts as soon as the live epoch disagrees with its expectation
+    topology_epoch: u64,
 }
 
 /// A cost-admitted fuse awaiting its regret verdict.
@@ -332,6 +342,12 @@ impl Observer {
             *c
         };
         if !self.policy.enabled {
+            return;
+        }
+        // Under the global planner the greedy pairwise path only *observes*
+        // (the counts feed the planner's snapshot); all topology changes
+        // come from periodic plan-diffs.
+        if self.policy.planner == PlannerKind::Global {
             return;
         }
         if count < self.policy.min_observations as u64 {
@@ -624,6 +640,7 @@ impl Observer {
     ) {
         let now = exec::now().as_millis_f64();
         let mut s = self.state.borrow_mut();
+        s.topology_epoch += 1;
         let pair = (Sym::intern(caller), Sym::intern(callee));
         s.requested.insert(pair);
         // the regret window runs from the cutover, not the admission (the
@@ -670,6 +687,11 @@ impl Observer {
     ///   topology change, minus a pointlessly oversized instance).
     pub fn feedback(&self, samples: &[GroupSample]) {
         if !self.policy.enabled || !self.policy.defusion {
+            return;
+        }
+        // Global planner: splits/evicts arrive via plan-diffs, not the
+        // greedy per-group strike counters.
+        if self.policy.planner == PlannerKind::Global {
             return;
         }
         match self.policy.split_policy {
@@ -782,6 +804,11 @@ impl Observer {
         if !self.policy.enabled {
             return;
         }
+        // Global planner: node pressure is a capacity constraint inside the
+        // partition search; the greedy one-action-per-episode path is off.
+        if self.policy.planner == PlannerKind::Global {
+            return;
+        }
         let now = exec::now().as_millis_f64();
         let hysteresis = self.policy.split_hysteresis_windows.max(1);
         let mut s = self.state.borrow_mut();
@@ -885,6 +912,7 @@ impl Observer {
     pub fn migrate_succeeded(&self, functions: &[String]) {
         let now = exec::now().as_millis_f64();
         let mut s = self.state.borrow_mut();
+        s.topology_epoch += 1;
         let mut key: Vec<String> = functions.to_vec();
         key.sort();
         if let Some(node) = s.pending_migrations.remove(&key) {
@@ -920,6 +948,7 @@ impl Observer {
     pub fn split_succeeded(&self, functions: &[String]) {
         let now = exec::now().as_millis_f64();
         let mut s = self.state.borrow_mut();
+        s.topology_epoch += 1;
         self.note_defusion_regrets(&mut s, functions, None);
         let mut key: Vec<String> = functions.to_vec();
         key.sort();
@@ -957,6 +986,7 @@ impl Observer {
     pub fn evict_succeeded(&self, functions: &[String], evicted: &str) {
         let now = exec::now().as_millis_f64();
         let mut s = self.state.borrow_mut();
+        s.topology_epoch += 1;
         self.note_defusion_regrets(&mut s, functions, Some(evicted));
         let mut key: Vec<String> = functions.to_vec();
         key.sort();
@@ -1075,6 +1105,60 @@ impl Observer {
             .collect();
         v.sort();
         v
+    }
+
+    /// Monotonic count of completed topology changes (fuse / split / evict
+    /// / migrate).  The global planner stamps every plan with the epoch its
+    /// snapshot was taken at; the executor aborts the remainder of a plan
+    /// the moment the live epoch disagrees with its expectation.
+    pub fn topology_epoch(&self) -> u64 {
+        self.state.borrow().topology_epoch
+    }
+
+    /// Freeze the planner's world view: observed call graph, latest
+    /// windowed per-function signals, live fused groups (any other
+    /// observed function is an implicit singleton), node loads, trust
+    /// domains, and the pairs still inside a fuse cooldown — stamped with
+    /// the current topology epoch.
+    pub fn plan_snapshot(&self) -> PlanSnapshot {
+        let now = exec::now().as_millis_f64();
+        let s = self.state.borrow();
+        let mut signals: Vec<FnSignals> = s.fn_signals.values().cloned().collect();
+        signals.sort_by(|a, b| a.function.as_str().cmp(b.function.as_str()));
+        let mut edges: Vec<((String, String), u64)> = s
+            .counts
+            .iter()
+            .map(|((a, b), n)| ((a.as_str().to_string(), b.as_str().to_string()), *n))
+            .collect();
+        edges.sort();
+        let groups: Vec<Vec<String>> = s.groups.keys().cloned().collect();
+        let mut cooling: Vec<(String, String)> = s
+            .cooldown_until
+            .iter()
+            .filter(|&(_, &until)| now < until)
+            .map(|((a, b), _)| (a.as_str().to_string(), b.as_str().to_string()))
+            .collect();
+        cooling.sort();
+        let trust: BTreeMap<String, String> = self
+            .trust
+            .iter()
+            .map(|(k, v)| (k.as_str().to_string(), v.clone()))
+            .collect();
+        PlanSnapshot {
+            epoch: s.topology_epoch,
+            signals,
+            edges,
+            groups,
+            node_loads: s.node_loads.clone(),
+            migration_est_ms: s.migration_est_ms,
+            trust,
+            cooling,
+        }
+    }
+
+    /// Hand a plan-diff to the Merger for guarded execution.
+    pub fn submit_plan(&self, plan: Plan) {
+        let _ = self.tx.send(FusionRequest::Plan(plan));
     }
 }
 

@@ -1,0 +1,1106 @@
+//! Global fusion re-planner (ISSUE 8, Konflux-style).
+//!
+//! Instead of admitting one (caller, callee) pair at a time, the global
+//! planner periodically freezes the Observer's world view into a
+//! [`PlanSnapshot`] — observed call graph, windowed [`FnSignals`], live
+//! fused groups, node loads — and searches over **whole call-graph
+//! partitions** with simulated-annealing-style perturbations.  The score
+//! is the same weighted latency×RAM×bill pricing the greedy planner uses
+//! ([`CostModel::cut_cost`] / [`CostModel::residency_cost`]), summed over
+//! the partition: every cut sync edge keeps paying its blocked-time and
+//! double-billing rates, every group keeps paying RAM residency.  Because
+//! the score is a whole-partition total, the search can walk *through*
+//! intermediate partitions a greedy pairwise step would refuse — the
+//! local optima Konflux shows greedy merging locks into.
+//!
+//! The winning partition is emitted as a [`Plan`]: an ordered **plan-diff**
+//! (splits/evicts first, then migrations, then fuses along observed sync
+//! edges) the Merger executes through its existing pipelines.  The plan
+//! carries the snapshot's topology epoch; the executor aborts the
+//! remainder cleanly the moment the live epoch disagrees (stale-plan
+//! guard), so a plan never stomps a topology it did not see.
+//!
+//! Hard constraints the search enforces on every emitted target:
+//! * groups are connected subgraphs of the **observed** sync-call graph;
+//! * trust domains are uniform inside a group (when the policy says so);
+//! * `max_group_size` / `max_group_ram_mb` caps;
+//! * pairs inside a fuse cooldown are not regrouped (anti-flap);
+//! * predicted per-node RAM (group footprint × replicas) ≤ node capacity.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+
+use crate::cluster::NodeId;
+use crate::config::FusionParams;
+use crate::util::intern::Sym;
+use crate::util::rng::Rng;
+
+use super::cost::{CostModel, FnSignals};
+use super::NodeLoad;
+
+/// Minimum relative score improvement before a plan is worth emitting —
+/// re-plans cheaper than this are churn, not wins.
+pub const REPLAN_MIN_GAIN: f64 = 0.01;
+
+/// Per-MiB penalty (in objective units, scaled by the model's RAM
+/// reference) charged while a search state overflows a node capacity or
+/// the group RAM cap; large enough that any real objective gain cannot
+/// pay for a constraint violation, while still giving the annealer a
+/// gradient back to feasibility.
+const OVERFLOW_PENALTY: f64 = 1e3;
+
+/// The Observer's frozen world view a plan is computed against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanSnapshot {
+    /// topology epoch at snapshot time (stale-plan guard)
+    pub epoch: u64,
+    /// latest windowed per-function signals, sorted by function name
+    pub signals: Vec<FnSignals>,
+    /// observed sync-call counts ((caller, callee) -> count), sorted
+    pub edges: Vec<((String, String), u64)>,
+    /// live fused groups (sorted member lists); observed functions not in
+    /// any group are implicit singletons
+    pub groups: Vec<Vec<String>>,
+    /// latest per-node loads (empty on single-node platforms)
+    pub node_loads: Vec<NodeLoad>,
+    /// calibrated one-off migration cost estimate (ms)
+    pub migration_est_ms: f64,
+    /// fn name -> trust domain
+    pub trust: BTreeMap<String, String>,
+    /// (caller, callee) pairs inside a fuse cooldown at snapshot time
+    pub cooling: Vec<(String, String)>,
+}
+
+/// One step of a plan-diff, executed through the existing Merger /
+/// Migrator pipelines.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanAction {
+    /// Split the fused group hosting exactly `functions` into singletons.
+    Split { functions: Vec<String> },
+    /// Evict `function` from the group hosting exactly `functions`.
+    Evict { functions: Vec<String>, function: String },
+    /// Fuse `callee`'s group into `caller`'s (oriented along an observed
+    /// sync edge).
+    Fuse { caller: String, callee: String },
+    /// Move the instance hosting exactly `functions` to node `to`.
+    Migrate { functions: Vec<String>, to: NodeId },
+}
+
+/// One group of the plan's target partition, with its predicted node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanGroup {
+    /// sorted member functions
+    pub functions: Vec<String>,
+    /// predicted hosting node (None on single-node platforms)
+    pub node: Option<NodeId>,
+}
+
+/// An emitted plan-diff: ordered actions plus the bookkeeping the
+/// executor and the A/B telemetry need.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// monotonically increasing plan id (per platform run)
+    pub id: u64,
+    /// topology epoch the snapshot was taken at
+    pub epoch: u64,
+    /// ordered plan-diff: splits/evicts, then migrations, then fuses
+    pub actions: Vec<PlanAction>,
+    /// partition objective of the snapshot's live partition
+    pub predicted_before: f64,
+    /// partition objective of the target partition
+    pub predicted_after: f64,
+    /// the target partition the diff reproduces, sorted
+    pub target: Vec<PlanGroup>,
+}
+
+impl Plan {
+    /// Compact per-kind action tally for event logs, e.g.
+    /// `split:1 evict:0 migrate:0 fuse:2`.
+    pub fn summary(&self) -> String {
+        let mut split = 0;
+        let mut evict = 0;
+        let mut migrate = 0;
+        let mut fuse = 0;
+        for a in &self.actions {
+            match a {
+                PlanAction::Split { .. } => split += 1,
+                PlanAction::Evict { .. } => evict += 1,
+                PlanAction::Migrate { .. } => migrate += 1,
+                PlanAction::Fuse { .. } => fuse += 1,
+            }
+        }
+        format!("split:{split} evict:{evict} migrate:{migrate} fuse:{fuse}")
+    }
+}
+
+/// The snapshot's live partition: fused groups plus one singleton per
+/// observed-but-unfused function, sorted.
+pub fn snapshot_partition(snap: &PlanSnapshot) -> Vec<Vec<String>> {
+    let mut parts: Vec<Vec<String>> = snap
+        .groups
+        .iter()
+        .map(|g| {
+            let mut g = g.clone();
+            g.sort();
+            g
+        })
+        .collect();
+    let grouped: HashSet<&String> = snap.groups.iter().flatten().collect();
+    for s in &snap.signals {
+        let name = s.function.as_str().to_string();
+        if !grouped.contains(&name) {
+            parts.push(vec![name]);
+        }
+    }
+    parts.sort();
+    parts
+}
+
+/// The partition objective (minimize): Σ cut-edge costs + Σ group RAM
+/// residency, priced by the same [`CostModel`] terms greedy admission
+/// uses.  A cut edge's callee share is computed against the *candidate*
+/// partition — only still-remote callees sit in the denominator, exactly
+/// like the greedy planner's `MergeContext`.
+pub fn partition_objective(
+    snap: &PlanSnapshot,
+    partition: &[Vec<String>],
+    model: &CostModel,
+) -> f64 {
+    let sigs: HashMap<&str, &FnSignals> =
+        snap.signals.iter().map(|s| (s.function.as_str(), s)).collect();
+    let mut owner: HashMap<&str, usize> = HashMap::new();
+    for (gi, g) in partition.iter().enumerate() {
+        for f in g {
+            owner.insert(f.as_str(), gi);
+        }
+    }
+    let is_cut = |a: &str, b: &str| match (owner.get(a), owner.get(b)) {
+        (Some(x), Some(y)) => x != y,
+        // an endpoint outside the partition stays remote by definition
+        _ => true,
+    };
+    let mut total = 0.0;
+    for g in partition {
+        let priced: Vec<&FnSignals> =
+            g.iter().filter_map(|f| sigs.get(f.as_str()).copied()).collect();
+        if priced.is_empty() {
+            continue;
+        }
+        let ram: f64 = priced.iter().map(|s| s.ram_mb.max(0.0)).sum();
+        let replicas = priced.iter().map(|s| s.replicas.max(1)).max().unwrap_or(1);
+        total += model.residency_cost(ram, replicas as f64);
+    }
+    let mut outbound: HashMap<&str, u64> = HashMap::new();
+    for ((a, b), n) in &snap.edges {
+        if is_cut(a, b) {
+            *outbound.entry(a.as_str()).or_insert(0) += n;
+        }
+    }
+    for ((a, b), n) in &snap.edges {
+        if !is_cut(a, b) {
+            continue;
+        }
+        let (Some(sa), Some(sb)) = (sigs.get(a.as_str()), sigs.get(b.as_str())) else {
+            continue;
+        };
+        let out = outbound.get(a.as_str()).copied().unwrap_or(0);
+        let share = if out > 0 { *n as f64 / out as f64 } else { 1.0 };
+        total += model.cut_cost(sa, sb, share);
+    }
+    total
+}
+
+/// Objective of the snapshot's own live partition under the policy's cost
+/// model — the number `figure11` compares across the greedy/global arms.
+pub fn snapshot_objective(snap: &PlanSnapshot, policy: &FusionParams) -> f64 {
+    let model = CostModel::from_params(policy);
+    partition_objective(snap, &snapshot_partition(snap), &model)
+}
+
+/// Replay a plan-diff against a partition (pure bookkeeping — Migrate
+/// does not change membership).  The plan-validity property asserts this
+/// reproduces [`Plan::target`] exactly.
+pub fn apply_diff(initial: &[Vec<String>], actions: &[PlanAction]) -> Vec<Vec<String>> {
+    let mut parts: Vec<Vec<String>> = initial
+        .iter()
+        .map(|g| {
+            let mut g = g.clone();
+            g.sort();
+            g
+        })
+        .collect();
+    for action in actions {
+        match action {
+            PlanAction::Split { functions } => {
+                let mut key = functions.clone();
+                key.sort();
+                parts.retain(|p| *p != key);
+                for f in &key {
+                    parts.push(vec![f.clone()]);
+                }
+            }
+            PlanAction::Evict { functions, function } => {
+                let mut key = functions.clone();
+                key.sort();
+                parts.retain(|p| *p != key);
+                let mut rest = key;
+                rest.retain(|f| f != function);
+                parts.push(rest);
+                parts.push(vec![function.clone()]);
+            }
+            PlanAction::Fuse { caller, callee } => {
+                let a = parts.iter().position(|p| p.iter().any(|f| f == caller));
+                let b = parts.iter().position(|p| p.iter().any(|f| f == callee));
+                if let (Some(a), Some(b)) = (a, b) {
+                    if a != b {
+                        let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+                        let moved = parts.remove(hi);
+                        parts[lo].extend(moved);
+                        parts[lo].sort();
+                    }
+                }
+            }
+            PlanAction::Migrate { .. } => {}
+        }
+    }
+    parts.retain(|p| !p.is_empty());
+    parts.sort();
+    parts
+}
+
+/// One group of a search state: sorted member indices plus the predicted
+/// hosting node.
+#[derive(Debug, Clone, PartialEq)]
+struct Group {
+    members: Vec<usize>,
+    node: Option<NodeId>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct State {
+    groups: Vec<Group>,
+}
+
+/// Immutable search context derived from one snapshot.
+struct World<'a> {
+    names: Vec<String>,
+    sigs: Vec<FnSignals>,
+    counts: BTreeMap<(usize, usize), u64>,
+    /// undirected adjacency over observed sync edges, sorted + deduped
+    adj: Vec<Vec<usize>>,
+    trust: Vec<Option<String>>,
+    /// unordered cooling pairs, stored as (min, max)
+    cooling: HashSet<(usize, usize)>,
+    /// node id -> capacity (only nodes with a positive cap)
+    capacities: HashMap<u64, f64>,
+    /// node ids available as migration targets
+    nodes: Vec<NodeId>,
+    policy: &'a FusionParams,
+    model: CostModel,
+}
+
+impl<'a> World<'a> {
+    fn build(snap: &PlanSnapshot, policy: &'a FusionParams) -> World<'a> {
+        let mut names: Vec<String> =
+            snap.signals.iter().map(|s| s.function.as_str().to_string()).collect();
+        let mut sigs: Vec<FnSignals> = snap.signals.clone();
+        let mut index: HashMap<String, usize> =
+            names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+        // group members the tick has not priced yet still need a slot so
+        // the diff can reason about their group; they price as zero
+        for g in &snap.groups {
+            for f in g {
+                if !index.contains_key(f) {
+                    index.insert(f.clone(), names.len());
+                    names.push(f.clone());
+                    sigs.push(FnSignals {
+                        function: Sym::intern(f),
+                        ram_mb: 0.0,
+                        p95_ms: f64::NAN,
+                        gb_seconds: 0.0,
+                        billed_ms: 0.0,
+                        self_ms: 0.0,
+                        window_s: 1.0,
+                        node: None,
+                        replicas: 1,
+                    });
+                }
+            }
+        }
+        let n = names.len();
+        let mut counts = BTreeMap::new();
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for ((a, b), c) in &snap.edges {
+            let (Some(&i), Some(&j)) = (index.get(a), index.get(b)) else {
+                continue;
+            };
+            if i == j {
+                continue;
+            }
+            *counts.entry((i, j)).or_insert(0) += c;
+            adj[i].push(j);
+            adj[j].push(i);
+        }
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
+        }
+        let trust = names.iter().map(|f| snap.trust.get(f).cloned()).collect();
+        let cooling = snap
+            .cooling
+            .iter()
+            .filter_map(|(a, b)| {
+                let (i, j) = (*index.get(a)?, *index.get(b)?);
+                Some((i.min(j), i.max(j)))
+            })
+            .collect();
+        let capacities = snap
+            .node_loads
+            .iter()
+            .filter(|l| l.capacity_mb > 0.0)
+            .map(|l| (l.node.0, l.capacity_mb))
+            .collect();
+        let nodes = snap.node_loads.iter().map(|l| l.node).collect();
+        World {
+            names,
+            sigs,
+            counts,
+            adj,
+            trust,
+            cooling,
+            capacities,
+            nodes,
+            policy,
+            model: CostModel::from_params(policy),
+        }
+    }
+
+    fn initial_state(&self, snap: &PlanSnapshot) -> State {
+        let index: HashMap<&str, usize> =
+            self.names.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+        let mut assigned = vec![false; self.names.len()];
+        let mut groups = Vec::new();
+        for g in &snap.groups {
+            let mut members: Vec<usize> =
+                g.iter().filter_map(|f| index.get(f.as_str()).copied()).collect();
+            members.sort_unstable();
+            members.dedup();
+            if members.is_empty() {
+                continue;
+            }
+            let node = members.iter().find_map(|&m| self.sigs[m].node);
+            for &m in &members {
+                assigned[m] = true;
+            }
+            groups.push(Group { members, node });
+        }
+        for i in 0..self.names.len() {
+            if !assigned[i] {
+                groups.push(Group { members: vec![i], node: self.sigs[i].node });
+            }
+        }
+        State { groups }
+    }
+
+    fn owner_map(&self, state: &State) -> Vec<usize> {
+        let mut owner = vec![usize::MAX; self.names.len()];
+        for (gi, g) in state.groups.iter().enumerate() {
+            for &m in &g.members {
+                owner[m] = gi;
+            }
+        }
+        owner
+    }
+
+    fn group_footprint(&self, g: &Group) -> f64 {
+        let ram: f64 = g.members.iter().map(|&m| self.sigs[m].ram_mb.max(0.0)).sum();
+        let replicas =
+            g.members.iter().map(|&m| self.sigs[m].replicas.max(1)).max().unwrap_or(1);
+        ram * replicas as f64
+    }
+
+    /// (objective, overflow penalty) of a state.  The objective mirrors
+    /// [`partition_objective`]; the penalty prices node-capacity and
+    /// group-RAM-cap overflows so the annealer is pulled back to
+    /// feasibility without making infeasible intermediates unreachable.
+    fn score(&self, state: &State) -> (f64, f64) {
+        let owner = self.owner_map(state);
+        let mut objective = 0.0;
+        for g in &state.groups {
+            let ram: f64 = g.members.iter().map(|&m| self.sigs[m].ram_mb.max(0.0)).sum();
+            let replicas =
+                g.members.iter().map(|&m| self.sigs[m].replicas.max(1)).max().unwrap_or(1);
+            objective += self.model.residency_cost(ram, replicas as f64);
+        }
+        let mut outbound: HashMap<usize, u64> = HashMap::new();
+        for (&(i, j), &c) in &self.counts {
+            if owner[i] != owner[j] {
+                *outbound.entry(i).or_insert(0) += c;
+            }
+        }
+        for (&(i, j), &c) in &self.counts {
+            if owner[i] == owner[j] {
+                continue;
+            }
+            let out = outbound.get(&i).copied().unwrap_or(0);
+            let share = if out > 0 { c as f64 / out as f64 } else { 1.0 };
+            objective += self.model.cut_cost(&self.sigs[i], &self.sigs[j], share);
+        }
+
+        let ram_ref = self.model.ram_ref_mb();
+        let mut penalty = 0.0;
+        if self.policy.max_group_ram_mb > 0.0 {
+            for g in &state.groups {
+                let ram: f64 =
+                    g.members.iter().map(|&m| self.sigs[m].ram_mb.max(0.0)).sum();
+                if ram > self.policy.max_group_ram_mb {
+                    penalty += OVERFLOW_PENALTY * (ram - self.policy.max_group_ram_mb) / ram_ref;
+                }
+            }
+        }
+        if !self.capacities.is_empty() {
+            let mut load: HashMap<u64, f64> = HashMap::new();
+            for g in &state.groups {
+                if let Some(node) = g.node {
+                    *load.entry(node.0).or_insert(0.0) += self.group_footprint(g);
+                }
+            }
+            for (node, cap) in &self.capacities {
+                let l = load.get(node).copied().unwrap_or(0.0);
+                if l > *cap {
+                    penalty += OVERFLOW_PENALTY * (l - cap) / ram_ref;
+                }
+            }
+        }
+        (objective, penalty)
+    }
+
+    fn connected(&self, members: &[usize]) -> bool {
+        if members.len() <= 1 {
+            return true;
+        }
+        let set: HashSet<usize> = members.iter().copied().collect();
+        let mut seen = HashSet::new();
+        let mut queue = VecDeque::new();
+        seen.insert(members[0]);
+        queue.push_back(members[0]);
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.adj[u] {
+                if set.contains(&v) && seen.insert(v) {
+                    queue.push_back(v);
+                }
+            }
+        }
+        seen.len() == members.len()
+    }
+
+    /// Connected components of `members` over the observed-edge graph,
+    /// each sorted, in ascending order of their smallest member.
+    fn components(&self, members: &[usize]) -> Vec<Vec<usize>> {
+        let set: HashSet<usize> = members.iter().copied().collect();
+        let mut seen: HashSet<usize> = HashSet::new();
+        let mut out = Vec::new();
+        let mut sorted = members.to_vec();
+        sorted.sort_unstable();
+        for &start in &sorted {
+            if seen.contains(&start) {
+                continue;
+            }
+            let mut comp = vec![start];
+            seen.insert(start);
+            let mut queue = VecDeque::from([start]);
+            while let Some(u) = queue.pop_front() {
+                for &v in &self.adj[u] {
+                    if set.contains(&v) && seen.insert(v) {
+                        comp.push(v);
+                        queue.push_back(v);
+                    }
+                }
+            }
+            comp.sort_unstable();
+            out.push(comp);
+        }
+        out
+    }
+
+    /// Trust domains uniform, no cooling pair regrouped, size cap.
+    fn merge_admissible(&self, a: &Group, b: &Group) -> bool {
+        let size = a.members.len() + b.members.len();
+        if self.policy.max_group_size > 0 && size > self.policy.max_group_size {
+            return false;
+        }
+        if self.policy.respect_trust_domains {
+            let domains: HashSet<&Option<String>> = a
+                .members
+                .iter()
+                .chain(b.members.iter())
+                .map(|&m| &self.trust[m])
+                .collect();
+            if domains.len() > 1 || domains.contains(&None) {
+                return false;
+            }
+        }
+        for &i in &a.members {
+            for &j in &b.members {
+                if self.cooling.contains(&(i.min(j), i.max(j))) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// All hard constraints on an emitted target: structural ones plus
+    /// zero overflow.  Initial states from adversarial snapshots may fail
+    /// this; the search only emits targets that pass.
+    fn hard_valid(&self, state: &State) -> bool {
+        for g in &state.groups {
+            if g.members.len() < 2 {
+                continue;
+            }
+            if !self.connected(&g.members) {
+                return false;
+            }
+            if self.policy.max_group_size > 0 && g.members.len() > self.policy.max_group_size {
+                return false;
+            }
+            if self.policy.respect_trust_domains {
+                let domains: HashSet<&Option<String>> =
+                    g.members.iter().map(|&m| &self.trust[m]).collect();
+                if domains.len() > 1 || domains.contains(&None) {
+                    return false;
+                }
+            }
+            for (k, &i) in g.members.iter().enumerate() {
+                for &j in &g.members[k + 1..] {
+                    if self.cooling.contains(&(i.min(j), i.max(j))) {
+                        return false;
+                    }
+                }
+            }
+            if self.policy.max_group_ram_mb > 0.0 {
+                let ram: f64 =
+                    g.members.iter().map(|&m| self.sigs[m].ram_mb.max(0.0)).sum();
+                if ram > self.policy.max_group_ram_mb {
+                    return false;
+                }
+            }
+        }
+        if !self.capacities.is_empty() {
+            let mut load: HashMap<u64, f64> = HashMap::new();
+            for g in &state.groups {
+                if let Some(node) = g.node {
+                    *load.entry(node.0).or_insert(0.0) += self.group_footprint(g);
+                }
+            }
+            for (node, cap) in &self.capacities {
+                if load.get(node).copied().unwrap_or(0.0) > *cap {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// One random perturbation: merge across a cut edge, extract a member
+    /// to a singleton (splitting a disconnected remainder into its
+    /// components), or move a group to another node.
+    fn propose(&self, state: &State, rng: &mut Rng) -> Option<State> {
+        let moveable_nodes = self.nodes.len() >= 2;
+        let roll = rng.below(100);
+        if moveable_nodes && roll < 20 {
+            // move a group to a random other node
+            let gi = rng.below(state.groups.len() as u64) as usize;
+            let current = state.groups[gi].node;
+            let candidates: Vec<NodeId> =
+                self.nodes.iter().copied().filter(|n| Some(*n) != current).collect();
+            if candidates.is_empty() {
+                return None;
+            }
+            let to = candidates[rng.below(candidates.len() as u64) as usize];
+            let mut next = state.clone();
+            next.groups[gi].node = Some(to);
+            return Some(next);
+        }
+        if roll < if moveable_nodes { 60 } else { 55 } {
+            // merge across a random cut edge
+            let owner = self.owner_map(state);
+            let cut: Vec<(usize, usize)> = self
+                .counts
+                .keys()
+                .copied()
+                .filter(|&(i, j)| owner[i] != owner[j])
+                .collect();
+            if cut.is_empty() {
+                return None;
+            }
+            let (i, j) = cut[rng.below(cut.len() as u64) as usize];
+            let (ga, gb) = (owner[i], owner[j]);
+            if !self.merge_admissible(&state.groups[ga], &state.groups[gb]) {
+                return None;
+            }
+            let mut next = state.clone();
+            let mut merged = next.groups[ga].members.clone();
+            merged.extend(next.groups[gb].members.iter().copied());
+            merged.sort_unstable();
+            // the fused set lands where the caller's group lives
+            let node = next.groups[ga].node.or(next.groups[gb].node);
+            let (hi, lo) = if ga > gb { (ga, gb) } else { (gb, ga) };
+            next.groups.remove(hi);
+            next.groups.remove(lo);
+            next.groups.push(Group { members: merged, node });
+            return Some(next);
+        }
+        // extract a random member of a multi-member group
+        let multi: Vec<usize> = state
+            .groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.members.len() >= 2)
+            .map(|(i, _)| i)
+            .collect();
+        if multi.is_empty() {
+            return None;
+        }
+        let gi = multi[rng.below(multi.len() as u64) as usize];
+        let g = &state.groups[gi];
+        let k = rng.below(g.members.len() as u64) as usize;
+        let member = g.members[k];
+        let mut rest = g.members.clone();
+        rest.remove(k);
+        let node = g.node;
+        let mut next = state.clone();
+        next.groups.remove(gi);
+        next.groups.push(Group { members: vec![member], node });
+        for comp in self.components(&rest) {
+            next.groups.push(Group { members: comp, node });
+        }
+        Some(next)
+    }
+
+    /// The ordered plan-diff turning `initial` into `target`:
+    /// splits/evicts, then migrations of groups that survive intact, then
+    /// fuses along a spanning order of observed sync edges.
+    fn diff(&self, initial: &State, target: &State) -> Vec<PlanAction> {
+        let tgt_owner = self.owner_map(target);
+        let names = |members: &[usize]| -> Vec<String> {
+            members.iter().map(|&m| self.names[m].clone()).collect()
+        };
+        let mut actions = Vec::new();
+        // 1. break every current group not contained in a target group;
+        //    track each surviving component and the node it came from
+        let mut components: Vec<(Vec<usize>, Option<NodeId>)> = Vec::new();
+        for g in &initial.groups {
+            if g.members.len() < 2 {
+                components.push((g.members.clone(), g.node));
+                continue;
+            }
+            let t0 = tgt_owner[g.members[0]];
+            if g.members.iter().all(|&m| tgt_owner[m] == t0) {
+                components.push((g.members.clone(), g.node));
+                continue;
+            }
+            let evict = if g.members.len() >= 3 {
+                g.members.iter().enumerate().find(|&(k, _)| {
+                    let rest: Vec<usize> = g
+                        .members
+                        .iter()
+                        .enumerate()
+                        .filter(|&(r, _)| r != k)
+                        .map(|(_, &m)| m)
+                        .collect();
+                    let t = tgt_owner[rest[0]];
+                    rest.iter().all(|&m| tgt_owner[m] == t)
+                })
+            } else {
+                None
+            };
+            match evict {
+                Some((k, &m)) => {
+                    actions.push(PlanAction::Evict {
+                        functions: names(&g.members),
+                        function: self.names[m].clone(),
+                    });
+                    let mut rest = g.members.clone();
+                    rest.remove(k);
+                    components.push((rest, g.node));
+                    components.push((vec![m], g.node));
+                }
+                None => {
+                    actions.push(PlanAction::Split { functions: names(&g.members) });
+                    for &m in &g.members {
+                        components.push((vec![m], g.node));
+                    }
+                }
+            }
+        }
+        // 2. migrate components that already equal their target group —
+        //    fused-to-be components skip this, the fuse pipeline colocates
+        for (comp, origin) in &components {
+            let t = tgt_owner[comp[0]];
+            if target.groups[t].members != *comp {
+                continue;
+            }
+            if let (Some(from), Some(to)) = (*origin, target.groups[t].node) {
+                if from != to {
+                    actions.push(PlanAction::Migrate { functions: names(comp), to });
+                }
+            }
+        }
+        // 3. fuse along a BFS spanning order of observed edges inside
+        //    each target group, skipping already-joined components
+        let mut uf = Uf::new(self.names.len());
+        for (comp, _) in &components {
+            for w in comp.windows(2) {
+                uf.union(w[0], w[1]);
+            }
+        }
+        let mut tgroups: Vec<&Group> =
+            target.groups.iter().filter(|g| g.members.len() >= 2).collect();
+        tgroups.sort_by(|a, b| a.members.cmp(&b.members));
+        for g in tgroups {
+            let set: HashSet<usize> = g.members.iter().copied().collect();
+            let root = g.members[0];
+            let mut seen = HashSet::from([root]);
+            let mut queue = VecDeque::from([root]);
+            while let Some(u) = queue.pop_front() {
+                for &v in &self.adj[u] {
+                    if !set.contains(&v) || !seen.insert(v) {
+                        continue;
+                    }
+                    queue.push_back(v);
+                    if uf.find(u) != uf.find(v) {
+                        uf.union(u, v);
+                        let (caller, callee) =
+                            if self.counts.contains_key(&(u, v)) { (u, v) } else { (v, u) };
+                        actions.push(PlanAction::Fuse {
+                            caller: self.names[caller].clone(),
+                            callee: self.names[callee].clone(),
+                        });
+                    }
+                }
+            }
+        }
+        actions
+    }
+
+    fn plan_groups(&self, state: &State) -> Vec<PlanGroup> {
+        let mut out: Vec<PlanGroup> = state
+            .groups
+            .iter()
+            .map(|g| PlanGroup {
+                functions: g.members.iter().map(|&m| self.names[m].clone()).collect(),
+                node: g.node,
+            })
+            .collect();
+        out.sort_by(|a, b| a.functions.cmp(&b.functions));
+        out
+    }
+}
+
+/// Plain union-find with path halving (diff bookkeeping).
+struct Uf {
+    parent: Vec<usize>,
+}
+
+impl Uf {
+    fn new(n: usize) -> Uf {
+        Uf { parent: (0..n).collect() }
+    }
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]];
+            x = self.parent[x];
+        }
+        x
+    }
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra] = rb;
+        }
+    }
+}
+
+/// Search for a better whole-graph partition.  Deterministic for a given
+/// (snapshot, policy, seed); returns `None` when the best feasible
+/// partition found does not beat the live one by [`REPLAN_MIN_GAIN`], or
+/// when the diff is empty.
+pub fn search(snap: &PlanSnapshot, policy: &FusionParams, seed: u64, plan_id: u64) -> Option<Plan> {
+    let world = World::build(snap, policy);
+    if world.names.is_empty() {
+        return None;
+    }
+    let initial = world.initial_state(snap);
+    let (obj0, pen0) = world.score(&initial);
+    let start_total = obj0 + pen0;
+
+    let mut cur = initial.clone();
+    let mut cur_total = start_total;
+    let mut best = initial.clone();
+    let mut best_total = start_total;
+    let mut best_obj = obj0;
+    let mut have_best = world.hard_valid(&initial);
+
+    let n = world.names.len();
+    let iters = (150 * n).clamp(300, 3000);
+    let mut temp = (start_total.abs() * 0.2).max(1e-3);
+    let t_end = (temp * 1e-3).max(1e-9);
+    let alpha = (t_end / temp).powf(1.0 / iters as f64);
+    let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+
+    for _ in 0..iters {
+        if let Some(cand) = world.propose(&cur, &mut rng) {
+            let (obj, pen) = world.score(&cand);
+            let total = obj + pen;
+            let d = total - cur_total;
+            if d <= 0.0 || rng.f64() < (-d / temp.max(1e-12)).exp() {
+                cur = cand;
+                cur_total = total;
+                if (total < best_total - 1e-12 || !have_best) && world.hard_valid(&cur) {
+                    best = cur.clone();
+                    best_total = total;
+                    best_obj = obj;
+                    have_best = true;
+                }
+            }
+        }
+        temp *= alpha;
+    }
+
+    if !have_best {
+        return None;
+    }
+    let gain = start_total - best_total;
+    if gain < REPLAN_MIN_GAIN * start_total.abs().max(1e-9) {
+        return None;
+    }
+    let actions = world.diff(&initial, &best);
+    if actions.is_empty() {
+        return None;
+    }
+    let target = world.plan_groups(&best);
+    Some(Plan {
+        id: plan_id,
+        epoch: snap.epoch,
+        actions,
+        predicted_before: obj0,
+        predicted_after: best_obj,
+        target,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(name: &str, ram_mb: f64, billed_ms: f64, self_ms: f64, gbs: f64) -> FnSignals {
+        FnSignals {
+            function: Sym::intern(name),
+            ram_mb,
+            p95_ms: 10.0,
+            gb_seconds: gbs,
+            billed_ms,
+            self_ms,
+            window_s: 5.0,
+            node: None,
+            replicas: 1,
+        }
+    }
+
+    fn policy() -> FusionParams {
+        let mut p = FusionParams::default_enabled();
+        p.respect_trust_domains = false;
+        p.max_group_size = 0;
+        p.max_group_ram_mb = 0.0;
+        p
+    }
+
+    /// The figure-11 trap in miniature: a -> b -> c chain where every
+    /// pairwise fuse is refused by greedy admission (huge combined RAM
+    /// against the churn gate) but the all-fused partition strictly wins
+    /// the whole-partition objective.  The global search must find it.
+    #[test]
+    fn search_escapes_the_pairwise_trap_on_a_chain() {
+        let p = policy();
+        let snap = PlanSnapshot {
+            epoch: 7,
+            signals: vec![
+                sig("a", 60.0, 4000.0, 500.0, 1.0),
+                sig("b", 600.0, 4000.0, 500.0, 1.5),
+                sig("c", 60.0, 1000.0, 900.0, 0.5),
+            ],
+            edges: vec![
+                (("a".into(), "b".into()), 200),
+                (("b".into(), "c".into()), 200),
+            ],
+            groups: Vec::new(),
+            node_loads: Vec::new(),
+            migration_est_ms: 0.0,
+            trust: BTreeMap::new(),
+            cooling: Vec::new(),
+        };
+        let plan = search(&snap, &p, 42, 1).expect("chain trap must yield a plan");
+        assert_eq!(plan.epoch, 7);
+        assert!(plan.predicted_after < plan.predicted_before);
+        let target: Vec<Vec<String>> =
+            plan.target.iter().map(|g| g.functions.clone()).collect();
+        assert_eq!(target, vec![vec!["a".to_string(), "b".into(), "c".into()]]);
+        // replaying the diff reproduces the target exactly
+        let replayed = apply_diff(&snapshot_partition(&snap), &plan.actions);
+        assert_eq!(replayed, target);
+        // fuses are oriented along observed edges
+        for a in &plan.actions {
+            if let PlanAction::Fuse { caller, callee } = a {
+                assert!(snap
+                    .edges
+                    .iter()
+                    .any(|((x, y), _)| (x == caller && y == callee)
+                        || (x == callee && y == caller)));
+            }
+        }
+    }
+
+    #[test]
+    fn optimal_snapshot_yields_no_plan() {
+        let p = policy();
+        let snap = PlanSnapshot {
+            epoch: 0,
+            signals: vec![
+                sig("a", 60.0, 4000.0, 500.0, 1.0),
+                sig("b", 60.0, 1000.0, 900.0, 0.5),
+            ],
+            edges: vec![(("a".into(), "b".into()), 100)],
+            groups: vec![vec!["a".into(), "b".into()]],
+            node_loads: Vec::new(),
+            migration_est_ms: 0.0,
+            trust: BTreeMap::new(),
+            cooling: Vec::new(),
+        };
+        assert!(search(&snap, &p, 1, 1).is_none());
+    }
+
+    #[test]
+    fn cooling_pair_is_not_regrouped() {
+        let p = policy();
+        let snap = PlanSnapshot {
+            epoch: 0,
+            signals: vec![
+                sig("a", 60.0, 4000.0, 500.0, 1.0),
+                sig("b", 60.0, 1000.0, 900.0, 0.5),
+            ],
+            edges: vec![(("a".into(), "b".into()), 100)],
+            groups: Vec::new(),
+            node_loads: Vec::new(),
+            migration_est_ms: 0.0,
+            trust: BTreeMap::new(),
+            cooling: vec![("a".into(), "b".into())],
+        };
+        assert!(search(&snap, &p, 3, 1).is_none());
+    }
+
+    #[test]
+    fn trust_domains_partition_the_search_space() {
+        let mut p = policy();
+        p.respect_trust_domains = true;
+        let mut trust = BTreeMap::new();
+        trust.insert("a".to_string(), "alpha".to_string());
+        trust.insert("b".to_string(), "beta".to_string());
+        let snap = PlanSnapshot {
+            epoch: 0,
+            signals: vec![
+                sig("a", 60.0, 4000.0, 500.0, 1.0),
+                sig("b", 60.0, 1000.0, 900.0, 0.5),
+            ],
+            edges: vec![(("a".into(), "b".into()), 100)],
+            groups: Vec::new(),
+            node_loads: Vec::new(),
+            migration_est_ms: 0.0,
+            trust,
+            cooling: Vec::new(),
+        };
+        assert!(search(&snap, &p, 5, 1).is_none());
+    }
+
+    #[test]
+    fn node_capacity_blocks_an_otherwise_winning_fuse() {
+        let p = policy();
+        let mut a = sig("a", 400.0, 4000.0, 500.0, 1.0);
+        a.node = Some(NodeId(0));
+        let mut b = sig("b", 400.0, 1000.0, 900.0, 0.5);
+        b.node = Some(NodeId(1));
+        let snap = PlanSnapshot {
+            epoch: 0,
+            signals: vec![a, b],
+            edges: vec![(("a".into(), "b".into()), 100)],
+            groups: Vec::new(),
+            node_loads: vec![
+                NodeLoad { node: NodeId(0), ram_mb: 400.0, capacity_mb: 500.0 },
+                NodeLoad { node: NodeId(1), ram_mb: 400.0, capacity_mb: 500.0 },
+            ],
+            migration_est_ms: 100.0,
+            trust: BTreeMap::new(),
+            cooling: Vec::new(),
+        };
+        // the fused group (800 MiB) fits on no node: any emitted plan must
+        // keep a and b apart
+        if let Some(plan) = search(&snap, &p, 11, 1) {
+            for g in &plan.target {
+                assert!(g.functions.len() < 2, "over-capacity group emitted: {:?}", g);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_diff_replays_split_evict_fuse() {
+        let initial = vec![
+            vec!["a".to_string(), "b".into(), "c".into()],
+            vec!["d".to_string()],
+        ];
+        let actions = vec![
+            PlanAction::Evict {
+                functions: vec!["a".into(), "b".into(), "c".into()],
+                function: "c".into(),
+            },
+            PlanAction::Fuse { caller: "c".into(), callee: "d".into() },
+        ];
+        let out = apply_diff(&initial, &actions);
+        assert_eq!(
+            out,
+            vec![
+                vec!["a".to_string(), "b".into()],
+                vec!["c".to_string(), "d".into()],
+            ]
+        );
+    }
+
+    #[test]
+    fn partition_objective_prices_cut_edges_and_residency() {
+        let p = policy();
+        let model = CostModel::from_params(&p);
+        let snap = PlanSnapshot {
+            epoch: 0,
+            signals: vec![
+                sig("a", 60.0, 4000.0, 500.0, 1.0),
+                sig("b", 60.0, 1000.0, 900.0, 0.5),
+            ],
+            edges: vec![(("a".into(), "b".into()), 100)],
+            groups: Vec::new(),
+            node_loads: Vec::new(),
+            migration_est_ms: 0.0,
+            trust: BTreeMap::new(),
+            cooling: Vec::new(),
+        };
+        let split = vec![vec!["a".to_string()], vec!["b".to_string()]];
+        let fused = vec![vec!["a".to_string(), "b".to_string()]];
+        let split_cost = partition_objective(&snap, &split, &model);
+        let fused_cost = partition_objective(&snap, &fused, &model);
+        // fusing removes the cut edge; residency is linear so with equal
+        // replica counts the fused partition strictly wins
+        assert!(fused_cost < split_cost);
+        // and the delta is exactly the edge's cut cost
+        let sa = &snap.signals[0];
+        let sb = &snap.signals[1];
+        let delta = split_cost - fused_cost;
+        assert!((delta - model.cut_cost(sa, sb, 1.0)).abs() < 1e-9);
+    }
+}

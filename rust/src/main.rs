@@ -14,8 +14,8 @@
 //! ```
 
 use provuse::config::{
-    ComputeMode, MergePolicyKind, PlacementPolicy, PlatformConfig, PlatformKind,
-    SplitPolicyKind, WorkloadConfig,
+    ComputeMode, MergePolicyKind, PlacementPolicy, PlannerKind, PlatformConfig,
+    PlatformKind, SplitPolicyKind, WorkloadConfig,
 };
 use provuse::error::Result;
 use provuse::util::args::Args;
@@ -96,6 +96,13 @@ fn apply_fusion_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
     if args.has("no-transitive") {
         f.transitive = false;
     }
+    // `--planner global` swaps the greedy per-tick emissions for the
+    // periodic whole-partition re-planner; `--replan-ticks N` sets its
+    // cadence in feedback ticks
+    if let Some(planner) = args.flag("planner") {
+        f.planner = PlannerKind::parse(planner)?;
+    }
+    f.replan_interval_ticks = args.u32_or("replan-ticks", f.replan_interval_ticks)?;
     Ok(())
 }
 
@@ -276,6 +283,27 @@ fn dispatch(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        Some("figure11") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/fig11"));
+            let mut p = experiments::fig11::Fig11Params::defaults(args.has("smoke"));
+            p.compute = compute_from(args);
+            p.requests = args.u64_or("requests", p.requests)?;
+            p.rate_rps = args.f64_or("rate", p.rate_rps)?;
+            p.seed = args.u64_or("seed", p.seed)?;
+            p.feedback_interval_ms =
+                args.f64_or("feedback-interval-ms", p.feedback_interval_ms)?;
+            p.replan_ticks = args.u32_or("replan-ticks", p.replan_ticks)?.max(1);
+            p.min_observations = args.u32_or("min-observations", p.min_observations)?;
+            let fig = experiments::fig11::run(&out, p)?;
+            println!("{}", fig.render());
+            println!("outputs written to {}", out.display());
+            if !fig.passed() {
+                return Err(provuse::Error::Runtime(
+                    "FIG11 greedy-vs-global checks failed".into(),
+                ));
+            }
+            Ok(())
+        }
         Some("ram-table") => {
             let out = std::path::PathBuf::from(args.str_or("out", "results/ram"));
             let fig = experiments::fig6::run(&out, workload_from(args)?, compute_from(args))?;
@@ -424,6 +452,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20 figure10 [--smoke]   ours: replica sets under burst (warm-pool +\n\
                  \x20   [--no-parity]      cold-boot scale-out with zero drops, scale-in\n\
                  \x20                      to floor, --replicas-max 1 seed-parity trio)\n\
+                 \x20 figure11 [--smoke]   ours: greedy vs global re-planning A/B on the\n\
+                 \x20   [--replan-ticks N] trap app (greedy locks into a local optimum;\n\
+                 \x20                      the global planner's steady state dominates)\n\
                  \x20 ram-table            §5.2 RAM reductions\n\
                  \x20 cost-table           TAB-COST: double-billing elimination in $\n\
                  \x20 sweep --dim D        ablations (rate|hop|policy|depth|arrival)\n\
@@ -440,6 +471,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20             --w-latency F --w-ram F --w-gbs F\n\
                  merge side  : --merge-policy [observation-count|cost] --merge-threshold F\n\
                  \x20             --auto-tune (hill-climb weights on post-fuse regret)\n\
+                 planner     : --planner [greedy|global] --replan-ticks N\n\
                  cluster     : --nodes N --placement [bin-pack|spread|fusion-affinity]\n\
                  \x20             --node-capacity MB --cross-node-ms MS --shards N\n\
                  scaling     : --replicas-max N --replicas-min N --target-inflight N\n\

@@ -27,9 +27,9 @@ use crate::containerd::{ContainerRuntime, ImageId, Instance};
 use crate::error::{Error, Result};
 use crate::exec;
 use crate::exec::channel::Receiver;
-use crate::fusion::{admit_group, FusionRequest, Observer};
+use crate::fusion::{admit_group, FusionRequest, Observer, Plan, PlanAction, SplitReason};
 use crate::gateway::Gateway;
-use crate::metrics::{MergeEvent, Recorder};
+use crate::metrics::{MergeEvent, PlanEvent, Recorder};
 use crate::platform::deployer::Deployer;
 use crate::replica::ReplicaSet;
 
@@ -101,7 +101,81 @@ impl Merger {
                     }
                 }
             }
+            FusionRequest::Plan(plan) => self.execute_plan(plan).await,
         }
+    }
+
+    /// Execute a global re-planner plan-diff action by action through the
+    /// existing pipelines, under the stale-topology abort guard.
+    ///
+    /// Every completed fuse/split/evict/migrate bumps the Observer's
+    /// topology epoch exactly once, so the executor's expectation is
+    /// `plan.epoch + completed_actions`.  Any disagreement — a topology
+    /// change that raced the plan, or an action that failed or aborted —
+    /// abandons the **remainder** cleanly: no partial re-application, and
+    /// none of the greedy failure callbacks fire (a dropped plan must not
+    /// poison pair cooldowns or node retry budgets; the next re-plan
+    /// starts from a fresh snapshot instead).
+    pub async fn execute_plan(&self, plan: Plan) {
+        let ctx = &self.ctx;
+        ctx.metrics.bump("plan_requests");
+        let mut expected = plan.epoch;
+        for (i, action) in plan.actions.iter().enumerate() {
+            if ctx.observer.topology_epoch() != expected {
+                self.plan_event(&plan, "aborted", format!("stale_epoch_before_action_{i}"));
+                ctx.metrics.bump("plan_aborted_stale");
+                return;
+            }
+            let result = match action {
+                PlanAction::Split { functions } => {
+                    self.handle_split(functions, SplitReason::CostModel).await
+                }
+                PlanAction::Evict { functions, function } => {
+                    self.handle_evict(functions, function, SplitReason::CostModel).await
+                }
+                // plan fuses ride the full merge pipeline but bypass the
+                // pair-cooldown anti-flap gate: the cooldowns set by this
+                // plan's own splits must not veto its target partition
+                PlanAction::Fuse { caller, callee } => {
+                    self.fuse_inner(caller, callee, false).await
+                }
+                PlanAction::Migrate { functions, to } => self
+                    .migrator()
+                    .migrate(functions, *to, "plan")
+                    .await
+                    .map(|_| ctx.observer.migrate_succeeded(functions)),
+            };
+            if let Err(err) = result {
+                self.plan_event(&plan, "aborted", format!("action_{i}_failed: {err}"));
+                ctx.metrics.bump("plan_aborted_action");
+                return;
+            }
+            let now_epoch = ctx.observer.topology_epoch();
+            if now_epoch != expected + 1 {
+                // the action completed without exactly one epoch bump — a
+                // no-op cutover or an interleaved foreign change; either
+                // way the plan no longer describes the live topology
+                self.plan_event(&plan, "aborted", format!("epoch_skew_after_action_{i}"));
+                ctx.metrics.bump("plan_aborted_stale");
+                return;
+            }
+            expected = now_epoch;
+        }
+        self.plan_event(&plan, "executed", plan.summary());
+        ctx.metrics.bump("plans_executed");
+    }
+
+    fn plan_event(&self, plan: &Plan, kind: &str, detail: String) {
+        self.ctx.metrics.record_plan(PlanEvent {
+            t_ms: self.ctx.metrics.rel_now_ms(),
+            plan_id: plan.id,
+            kind: kind.to_string(),
+            actions: plan.actions.len() as u32,
+            predicted_before: plan.predicted_before,
+            predicted_after: plan.predicted_after,
+            realized: f64::NAN,
+            detail,
+        });
     }
 
     /// Migration engine over this Merger's platform context (sharing the
@@ -119,6 +193,14 @@ impl Merger {
 
     /// One merge. Public for targeted tests.
     pub async fn handle_fuse(&self, caller: &str, callee: &str) -> Result<()> {
+        self.fuse_inner(caller, callee, true).await
+    }
+
+    /// The merge pipeline.  `respect_cooldown` is false only for plan-diff
+    /// fuses, whose target partition already excluded cooling pairs at
+    /// snapshot time — the cooldowns its own splits just set must not veto
+    /// the remainder of the plan.
+    async fn fuse_inner(&self, caller: &str, callee: &str, respect_cooldown: bool) -> Result<()> {
         let ctx = &self.ctx;
         ctx.metrics.bump("fusion_requests");
 
@@ -146,14 +228,16 @@ impl Merger {
         // but either endpoint may meanwhile be fused with third parties —
         // a transitive merge must not reunite ANY pair a recent defusion
         // put on cooldown before that cooldown expires.
-        for (x, _) in a.functions() {
-            for (y, _) in b.functions() {
-                if ctx.observer.pair_in_cooldown(&x, &y)
-                    || ctx.observer.pair_in_cooldown(&y, &x)
-                {
-                    return Err(Error::FusionAborted(format!(
-                        "pair ({x}, {y}) is cooling down after a defusion"
-                    )));
+        if respect_cooldown {
+            for (x, _) in a.functions() {
+                for (y, _) in b.functions() {
+                    if ctx.observer.pair_in_cooldown(&x, &y)
+                        || ctx.observer.pair_in_cooldown(&y, &x)
+                    {
+                        return Err(Error::FusionAborted(format!(
+                            "pair ({x}, {y}) is cooling down after a defusion"
+                        )));
+                    }
                 }
             }
         }

@@ -346,6 +346,32 @@ pub struct EvictEvent {
     pub reason: SplitReason,
 }
 
+/// One global re-planner lifecycle event (`--planner global`).  Each plan
+/// id appears up to three times: `planned` when the search emits it,
+/// `executed` / `aborted` when the Merger finishes or epoch-guards it,
+/// and `realized` when the next snapshot prices the live partition the
+/// plan produced — predicted-vs-realized deltas are auditable from the
+/// CSV alone.
+#[derive(Debug, Clone)]
+pub struct PlanEvent {
+    /// virtual time of the event (ms)
+    pub t_ms: f64,
+    /// plan id (monotonic per platform run)
+    pub plan_id: u64,
+    /// `planned` | `executed` | `aborted` | `realized`
+    pub kind: String,
+    /// number of actions in the plan-diff
+    pub actions: u32,
+    /// partition objective of the snapshot the plan was computed against
+    pub predicted_before: f64,
+    /// predicted partition objective of the plan's target
+    pub predicted_after: f64,
+    /// measured objective of the live partition (NaN except `realized`)
+    pub realized: f64,
+    /// free-form context (action summary, abort cause, ...)
+    pub detail: String,
+}
+
 // ---------------------------------------------------------------------------
 // windowed ring shards
 // ---------------------------------------------------------------------------
@@ -630,6 +656,7 @@ struct RecorderInner {
     scales: RefCell<Vec<ScaleEvent>>,
     admissions: RefCell<Vec<AdmissionSample>>,
     regrets: RefCell<Vec<RegretSample>>,
+    plans: RefCell<Vec<PlanEvent>>,
     // -- windowed shards (every level: the controller's signal source) -----
     e2e: RefCell<WindowShard>,
     fn_shards: RefCell<HashMap<Sym, WindowShard>>,
@@ -667,6 +694,7 @@ impl Recorder {
                 scales: RefCell::new(Vec::new()),
                 admissions: RefCell::new(Vec::new()),
                 regrets: RefCell::new(Vec::new()),
+                plans: RefCell::new(Vec::new()),
                 e2e: RefCell::new(e2e),
                 fn_shards: RefCell::new(HashMap::new()),
                 scratch: RefCell::new(Vec::new()),
@@ -800,6 +828,11 @@ impl Recorder {
         self.inner.regrets.borrow_mut().push(sample);
     }
 
+    /// Record a global re-planner lifecycle event.
+    pub fn record_plan(&self, event: PlanEvent) {
+        self.inner.plans.borrow_mut().push(event);
+    }
+
     /// Increment a named counter.
     pub fn bump(&self, name: &'static str) {
         *self.inner.counters.borrow_mut().entry(name).or_insert(0) += 1;
@@ -875,6 +908,11 @@ impl Recorder {
     /// Snapshot of the auto-tune regrets.
     pub fn regrets(&self) -> Vec<RegretSample> {
         self.inner.regrets.borrow().clone()
+    }
+
+    /// Snapshot of the global re-planner events.
+    pub fn plans(&self) -> Vec<PlanEvent> {
+        self.inner.plans.borrow().clone()
     }
 
     /// Exact quantile of a shard window via the shared scratch buffer:
@@ -1133,6 +1171,12 @@ impl Recorder {
             + i.scales.borrow().iter().map(|s| s.function.capacity()).sum::<usize>();
         b += i.admissions.borrow().capacity() * size_of::<AdmissionSample>();
         b += i.regrets.borrow().capacity() * size_of::<RegretSample>();
+        b += i.plans.borrow().capacity() * size_of::<PlanEvent>()
+            + i.plans
+                .borrow()
+                .iter()
+                .map(|s| s.kind.capacity() + s.detail.capacity())
+                .sum::<usize>();
         b += i.e2e.borrow().approx_bytes();
         b += i
             .fn_shards
@@ -1286,6 +1330,29 @@ impl Recorder {
             out.push_str(&format!(
                 "{:.3},{},{},{:.4},{:.4},{:.4}\n",
                 s.t_ms, s.caller, s.callee, s.w_latency, s.w_ram, s.w_gbs
+            ));
+        }
+        out
+    }
+
+    /// CSV export of the global re-planner lifecycle
+    /// (`t_ms,plan_id,kind,actions,predicted_before,predicted_after,realized,detail`)
+    /// — the greedy-vs-global A/B's audit trail: every plan's predicted
+    /// objective delta next to what the following snapshot measured.
+    pub fn plan_events_csv(&self) -> String {
+        let mut out =
+            String::from("t_ms,plan_id,kind,actions,predicted_before,predicted_after,realized,detail\n");
+        for s in self.inner.plans.borrow().iter() {
+            out.push_str(&format!(
+                "{:.3},{},{},{},{:.4},{:.4},{:.4},{}\n",
+                s.t_ms,
+                s.plan_id,
+                s.kind,
+                s.actions,
+                s.predicted_before,
+                s.predicted_after,
+                s.realized,
+                s.detail
             ));
         }
         out

@@ -13,17 +13,19 @@ use std::rc::Rc;
 use crate::apps::AppSpec;
 use crate::billing::BillingLedger;
 use crate::cluster::{Cluster, NodeId, Scheduler};
-use crate::config::{ComputeMode, MergePolicyKind, PlatformConfig, PlatformKind};
+use crate::config::{ComputeMode, MergePolicyKind, PlannerKind, PlatformConfig, PlatformKind};
 use crate::containerd::{ContainerRuntime, FsManifest, ImageId, Instance, InstanceState};
 use crate::error::Result;
 use crate::exec;
 use crate::exec::channel::mpsc;
 use crate::exec::SimInstant;
-use crate::fusion::{FnAttribution, FnSignals, GroupSample, NodeLoad, NodeSample, Observer};
+use crate::fusion::{
+    plan, FnAttribution, FnSignals, GroupSample, NodeLoad, NodeSample, Observer,
+};
 use crate::gateway::Gateway;
 use crate::handler::Dispatcher;
 use crate::merger::{Merger, MergerCtx};
-use crate::metrics::{NodeRamSample, Recorder};
+use crate::metrics::{NodeRamSample, PlanEvent, Recorder};
 use crate::netsim::Fabric;
 use crate::runtime::{ArtifactSet, ComputeService};
 use crate::util::intern::{GroupKey, Sym};
@@ -159,6 +161,20 @@ impl Platform {
                 "merge-policy `cost` needs a positive --feedback-interval-ms: \
                  the admission planner scores pairs from controller-tick window \
                  signals"
+                    .into(),
+            ));
+        }
+        // The global re-planner's only input is the controller tick's
+        // snapshot (signals + node loads); same reasoning as above.
+        if config.fusion.enabled
+            && config.fusion.planner == PlannerKind::Global
+            && (config.fusion.feedback_interval_ms <= 0.0
+                || config.fusion.replan_interval_ticks == 0)
+        {
+            return Err(crate::error::Error::Config(
+                "--planner global needs a positive --feedback-interval-ms and \
+                 --replan-ticks: the planner searches over controller-tick \
+                 snapshots"
                     .into(),
             ));
         }
@@ -362,6 +378,7 @@ impl Platform {
             && config.fusion.feedback_interval_ms > 0.0
             && (config.fusion.defusion
                 || config.fusion.merge_policy == MergePolicyKind::CostModel
+                || config.fusion.planner == PlannerKind::Global
                 || pressure_managed)
         {
             let stop = Rc::clone(&sampler_stop);
@@ -372,6 +389,9 @@ impl Platform {
             let cluster = cluster.clone();
             let entry = app.entry.clone();
             let interval = config.fusion.feedback_interval_ms;
+            let cfg = Rc::clone(&config);
+            let planner_global = config.fusion.planner == PlannerKind::Global;
+            let replan_ticks = config.fusion.replan_interval_ticks.max(1);
             // predicted one-off co-location cost the merge planner amortizes
             let migration_est_ms = config.latency.boot_ms
                 + config.latency.health_interval_ms
@@ -380,6 +400,12 @@ impl Platform {
                 // reused across ticks: interned member buffer for the
                 // canonical GroupKey lookup (zero steady-state allocation)
                 let mut member_syms: Vec<Sym> = Vec::new();
+                // global re-planner state: tick countdown, monotonic plan
+                // ids, and the last emitted plan awaiting its realized
+                // objective at the next snapshot
+                let mut replan_tick: u32 = 0;
+                let mut next_plan_id: u64 = 1;
+                let mut awaiting_realize: Option<(u64, f64, f64)> = None;
                 while !stop.get() {
                     exec::sleep_ms(interval).await;
                     if stop.get() {
@@ -523,6 +549,49 @@ impl Platform {
                     observer.update_fn_signals(signals);
                     if !samples.is_empty() {
                         observer.feedback(&samples);
+                    }
+                    // Global re-planner (ISSUE 8): every N ticks, freeze a
+                    // snapshot, price the previous plan's realized steady
+                    // state, and search for a better whole-graph partition.
+                    if planner_global {
+                        replan_tick += 1;
+                        if replan_tick >= replan_ticks {
+                            replan_tick = 0;
+                            let snap = observer.plan_snapshot();
+                            if let Some((id, before, after)) = awaiting_realize.take() {
+                                metrics.record_plan(PlanEvent {
+                                    t_ms: metrics.rel_now_ms(),
+                                    plan_id: id,
+                                    kind: "realized".to_string(),
+                                    actions: 0,
+                                    predicted_before: before,
+                                    predicted_after: after,
+                                    realized: plan::snapshot_objective(&snap, &cfg.fusion),
+                                    detail: String::new(),
+                                });
+                            }
+                            let plan_seed = cfg
+                                .seed
+                                .wrapping_add(next_plan_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                            if let Some(p) =
+                                plan::search(&snap, &cfg.fusion, plan_seed, next_plan_id)
+                            {
+                                next_plan_id += 1;
+                                metrics.record_plan(PlanEvent {
+                                    t_ms: metrics.rel_now_ms(),
+                                    plan_id: p.id,
+                                    kind: "planned".to_string(),
+                                    actions: p.actions.len() as u32,
+                                    predicted_before: p.predicted_before,
+                                    predicted_after: p.predicted_after,
+                                    realized: f64::NAN,
+                                    detail: p.summary(),
+                                });
+                                awaiting_realize =
+                                    Some((p.id, p.predicted_before, p.predicted_after));
+                                observer.submit_plan(p);
+                            }
+                        }
                     }
                 }
             });

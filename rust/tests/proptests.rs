@@ -7,14 +7,16 @@ use std::rc::Rc;
 use provuse::apps::{AppSpec, CallMode, CallSpec, FunctionSpec};
 use provuse::cluster::{Migrator, NodeId, Scheduler};
 use provuse::config::{
-    ComputeMode, MergePolicyKind, PlacementPolicy, PlatformConfig, PlatformKind,
-    SplitPolicyKind, WorkloadConfig,
+    ComputeMode, FusionParams, MergePolicyKind, PlacementPolicy, PlannerKind,
+    PlatformConfig, PlatformKind, SplitPolicyKind, WorkloadConfig,
 };
 use provuse::containerd::{ImageId, InstanceState};
 use provuse::exec::run_virtual;
-use provuse::fusion::SplitReason;
+use provuse::fusion::plan;
+use provuse::fusion::{FnSignals, NodeLoad, Plan, PlanAction, PlanSnapshot, SplitReason};
 use provuse::merger::{Merger, MergerCtx};
 use provuse::platform::{deployer::Deployer, routing_invariants, Platform};
+use provuse::util::intern::Sym;
 use provuse::util::prop::{check, Gen};
 use provuse::workload::{self, request_payload};
 
@@ -683,6 +685,486 @@ fn prop_replica_scaling_races_traffic_and_pipelines_without_drops() {
             p.shutdown();
         });
     });
+}
+
+#[test]
+fn prop_global_plans_are_valid() {
+    // ISSUE 8 tentpole property: for ANY random call graph, signal set,
+    // live grouping, cooldown set, and node-capacity regime, a plan the
+    // global search emits satisfies every structural contract:
+    //   * the target partition is disjoint and complete over the snapshot
+    //     universe;
+    //   * every multi-member target group is connected via OBSERVED sync
+    //     edges, trust-uniform (when enforced), inside the size/RAM caps,
+    //     and contains no cooling pair;
+    //   * predicted per-node RAM footprints respect node capacities;
+    //   * every Fuse action follows an observed sync edge;
+    //   * replaying the plan-diff over the snapshot partition reproduces
+    //     the target partition exactly (the executor applies precisely
+    //     what the search scored);
+    //   * the search is deterministic for a pinned (snapshot, seed).
+    check("global plan validity", 48, |g| {
+        let n = g.usize(2, 8);
+        let domains = ["alpha", "beta"];
+        let n_domains = g.usize(1, 2);
+        let nodes = g.usize(1, 3);
+        let mut signals = Vec::new();
+        let mut trust = BTreeMap::new();
+        for i in 0..n {
+            let name = format!("f{i}");
+            signals.push(FnSignals {
+                function: Sym::intern(&name),
+                ram_mb: g.f64(20.0, 700.0),
+                p95_ms: g.f64(5.0, 200.0),
+                gb_seconds: g.f64(0.0, 3.0),
+                billed_ms: g.f64(100.0, 6_000.0),
+                self_ms: g.f64(50.0, 1_000.0),
+                window_s: g.f64(1.0, 30.0),
+                node: if nodes > 1 {
+                    Some(NodeId(g.usize(0, nodes - 1) as u64))
+                } else {
+                    None
+                },
+                replicas: g.usize(1, 3) as u32,
+            });
+            trust.insert(name, domains[g.usize(0, n_domains - 1)].to_string());
+        }
+        let mut edges: Vec<((String, String), u64)> = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if g.f64(0.0, 1.0) < 0.4 {
+                    edges.push(((format!("f{i}"), format!("f{j}")), g.usize(1, 500) as u64));
+                }
+            }
+        }
+        // live groups: grown along a random subset of observed same-trust
+        // edges — the kind of topology a greedy history could have built
+        fn find(owner: &mut Vec<usize>, mut x: usize) -> usize {
+            while owner[x] != x {
+                owner[x] = owner[owner[x]];
+                x = owner[x];
+            }
+            x
+        }
+        let mut owner: Vec<usize> = (0..n).collect();
+        for ((a, b), _) in &edges {
+            if g.f64(0.0, 1.0) < 0.3 && trust[a] == trust[b] {
+                let i: usize = a[1..].parse().unwrap();
+                let j: usize = b[1..].parse().unwrap();
+                let (ra, rb) = (find(&mut owner, i), find(&mut owner, j));
+                if ra != rb {
+                    owner[ra] = rb;
+                }
+            }
+        }
+        let mut by_root: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+        for i in 0..n {
+            let r = find(&mut owner, i);
+            by_root.entry(r).or_default().push(format!("f{i}"));
+        }
+        let groups: Vec<Vec<String>> =
+            by_root.into_values().filter(|members| members.len() > 1).collect();
+        let cooling: Vec<(String, String)> = edges
+            .iter()
+            .filter(|_| g.f64(0.0, 1.0) < 0.15)
+            .map(|((a, b), _)| (a.clone(), b.clone()))
+            .collect();
+        let node_loads: Vec<NodeLoad> = if nodes > 1 {
+            (0..nodes)
+                .map(|k| NodeLoad {
+                    node: NodeId(k as u64),
+                    ram_mb: 0.0,
+                    capacity_mb: if g.bool() { g.f64(1_000.0, 4_000.0) } else { 0.0 },
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let snap = PlanSnapshot {
+            epoch: g.rng().next_u64() % 1_000,
+            signals,
+            edges,
+            groups,
+            node_loads,
+            migration_est_ms: g.f64(0.0, 2_000.0),
+            trust,
+            cooling,
+        };
+        let mut policy = FusionParams::default_enabled();
+        policy.respect_trust_domains = g.bool();
+        policy.max_group_size = if g.bool() { 0 } else { g.usize(2, 4) };
+        policy.max_group_ram_mb = if g.bool() { 0.0 } else { g.f64(400.0, 1_500.0) };
+        let seed = g.rng().next_u64();
+
+        let Some(p) = plan::search(&snap, &policy, seed, 1) else {
+            return; // no profitable re-plan for this snapshot — valid outcome
+        };
+        assert_eq!(
+            Some(&p),
+            plan::search(&snap, &policy, seed, 1).as_ref(),
+            "search must be deterministic for a pinned (snapshot, seed)"
+        );
+        assert_eq!(p.epoch, snap.epoch, "plan must carry the snapshot epoch");
+        assert!(!p.actions.is_empty());
+
+        // disjoint + complete over the snapshot universe
+        let universe: std::collections::BTreeSet<String> = snap
+            .signals
+            .iter()
+            .map(|s| s.function.as_str().to_string())
+            .chain(snap.groups.iter().flatten().cloned())
+            .collect();
+        let mut seen = std::collections::BTreeSet::new();
+        for pg in &p.target {
+            for f in &pg.functions {
+                assert!(universe.contains(f), "target invents `{f}`");
+                assert!(seen.insert(f.clone()), "target repeats `{f}`");
+            }
+        }
+        assert_eq!(seen, universe, "target partition must be complete");
+
+        let adj: std::collections::HashSet<(String, String)> = snap
+            .edges
+            .iter()
+            .flat_map(|((a, b), _)| [(a.clone(), b.clone()), (b.clone(), a.clone())])
+            .collect();
+        let sigs: std::collections::HashMap<&str, &FnSignals> =
+            snap.signals.iter().map(|s| (s.function.as_str(), s)).collect();
+        for pg in &p.target {
+            if pg.functions.len() < 2 {
+                continue;
+            }
+            // connected via observed sync edges only
+            let mut reach = std::collections::HashSet::new();
+            reach.insert(pg.functions[0].clone());
+            let mut queue = std::collections::VecDeque::from([pg.functions[0].clone()]);
+            while let Some(u) = queue.pop_front() {
+                for v in &pg.functions {
+                    if !reach.contains(v) && adj.contains(&(u.clone(), v.clone())) {
+                        reach.insert(v.clone());
+                        queue.push_back(v.clone());
+                    }
+                }
+            }
+            assert_eq!(
+                reach.len(),
+                pg.functions.len(),
+                "target group not edge-connected: {:?}",
+                pg.functions
+            );
+            if policy.respect_trust_domains {
+                let doms: std::collections::HashSet<&String> =
+                    pg.functions.iter().map(|f| snap.trust.get(f).unwrap()).collect();
+                assert_eq!(doms.len(), 1, "trust domains mixed: {:?}", pg.functions);
+            }
+            if policy.max_group_size > 0 {
+                assert!(pg.functions.len() <= policy.max_group_size);
+            }
+            for (a, b) in &snap.cooling {
+                assert!(
+                    !(pg.functions.contains(a) && pg.functions.contains(b)),
+                    "cooling pair ({a}, {b}) regrouped"
+                );
+            }
+            if policy.max_group_ram_mb > 0.0 {
+                let ram: f64 = pg
+                    .functions
+                    .iter()
+                    .filter_map(|f| sigs.get(f.as_str()))
+                    .map(|s| s.ram_mb)
+                    .sum();
+                assert!(ram <= policy.max_group_ram_mb + 1e-9, "group RAM cap violated");
+            }
+        }
+
+        // predicted per-node footprints respect capacities
+        let caps: std::collections::HashMap<u64, f64> = snap
+            .node_loads
+            .iter()
+            .filter(|l| l.capacity_mb > 0.0)
+            .map(|l| (l.node.0, l.capacity_mb))
+            .collect();
+        if !caps.is_empty() {
+            let mut load: std::collections::HashMap<u64, f64> =
+                std::collections::HashMap::new();
+            for pg in &p.target {
+                if let Some(node) = pg.node {
+                    let ram: f64 = pg
+                        .functions
+                        .iter()
+                        .filter_map(|f| sigs.get(f.as_str()))
+                        .map(|s| s.ram_mb)
+                        .sum();
+                    let replicas = pg
+                        .functions
+                        .iter()
+                        .filter_map(|f| sigs.get(f.as_str()))
+                        .map(|s| s.replicas.max(1))
+                        .max()
+                        .unwrap_or(1);
+                    *load.entry(node.0).or_insert(0.0) += ram * replicas as f64;
+                }
+            }
+            for (node, cap) in &caps {
+                assert!(
+                    load.get(node).copied().unwrap_or(0.0) <= cap + 1e-6,
+                    "node {node} over capacity"
+                );
+            }
+        }
+
+        // every fuse follows an observed sync edge
+        for a in &p.actions {
+            if let PlanAction::Fuse { caller, callee } = a {
+                assert!(
+                    adj.contains(&(caller.clone(), callee.clone())),
+                    "fuse off the observed graph: {caller} -> {callee}"
+                );
+            }
+        }
+
+        // replaying the diff over the snapshot partition reproduces the
+        // target exactly
+        let mut target_parts: Vec<Vec<String>> = p
+            .target
+            .iter()
+            .map(|pg| {
+                let mut v = pg.functions.clone();
+                v.sort();
+                v
+            })
+            .collect();
+        target_parts.sort();
+        assert_eq!(
+            plan::apply_diff(&plan::snapshot_partition(&snap), &p.actions),
+            target_parts,
+            "plan-diff replay must land on the scored target"
+        );
+    });
+}
+
+#[test]
+fn stale_plan_aborts_cleanly_without_partial_application() {
+    // ISSUE 8 satellite: a topology change landing between plan emission
+    // and execution must abort the WHOLE remainder — no partial
+    // application, no cooldown poisoning.
+    run_virtual(async {
+        let mut cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled);
+        cfg.fusion.feedback_interval_ms = 0.0; // ops driven by hand
+        let p = Platform::deploy(provuse::apps::chain(3), cfg.vanilla()).await.unwrap();
+        let merger = manual_merger(&p);
+        let plan = Plan {
+            id: 1,
+            epoch: p.observer.topology_epoch(),
+            actions: vec![
+                PlanAction::Fuse { caller: "s1".into(), callee: "s2".into() },
+                PlanAction::Fuse { caller: "s0".into(), callee: "s1".into() },
+            ],
+            predicted_before: 1.0,
+            predicted_after: 0.5,
+            target: Vec::new(),
+        };
+        // the topology moves before the plan runs (a foreign fuse lands)
+        merger.handle_fuse("s0", "s1").await.unwrap();
+        merger.execute_plan(plan).await;
+
+        // aborted before action 0: s1 + s2 were never joined
+        assert_ne!(
+            p.gateway.resolve("s1").unwrap().id(),
+            p.gateway.resolve("s2").unwrap().id(),
+            "stale plan must not apply any action"
+        );
+        assert_eq!(p.metrics.counter("plan_aborted_stale"), 1);
+        assert_eq!(p.metrics.counter("plans_executed"), 0);
+        let events = p.metrics.plans();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, "aborted");
+        assert!(
+            events[0].detail.contains("stale_epoch_before_action_0"),
+            "unexpected abort detail: {}",
+            events[0].detail
+        );
+        // an abort is not a failure: no pair cooldown was poisoned
+        assert!(!p.observer.pair_in_cooldown("s1", "s2"));
+        assert!(!p.observer.pair_in_cooldown("s2", "s1"));
+        p.shutdown();
+    });
+}
+
+#[test]
+fn mid_plan_epoch_skew_aborts_the_remainder() {
+    // A plan action that completes WITHOUT exactly one epoch bump (here: a
+    // fuse that turns out to be a no-op because the pair is already
+    // colocated) means the plan no longer describes the live topology —
+    // the executor must stop right there.
+    run_virtual(async {
+        let mut cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled);
+        cfg.fusion.feedback_interval_ms = 0.0;
+        let p = Platform::deploy(provuse::apps::chain(3), cfg.vanilla()).await.unwrap();
+        let merger = manual_merger(&p);
+        merger.handle_fuse("s0", "s1").await.unwrap();
+        let plan = Plan {
+            id: 2,
+            epoch: p.observer.topology_epoch(),
+            actions: vec![
+                PlanAction::Fuse { caller: "s0".into(), callee: "s1".into() }, // no-op
+                PlanAction::Fuse { caller: "s1".into(), callee: "s2".into() },
+            ],
+            predicted_before: 1.0,
+            predicted_after: 0.5,
+            target: Vec::new(),
+        };
+        merger.execute_plan(plan).await;
+        assert_ne!(
+            p.gateway.resolve("s1").unwrap().id(),
+            p.gateway.resolve("s2").unwrap().id(),
+            "remainder must not run after an epoch skew"
+        );
+        assert_eq!(p.metrics.counter("plan_aborted_stale"), 1);
+        let events = p.metrics.plans();
+        assert_eq!(events.len(), 1);
+        assert!(
+            events[0].detail.contains("epoch_skew_after_action_0"),
+            "unexpected abort detail: {}",
+            events[0].detail
+        );
+        assert!(!p.observer.pair_in_cooldown("s1", "s2"));
+        p.shutdown();
+    });
+}
+
+#[test]
+fn plan_fuses_bypass_the_cooldowns_its_own_splits_set() {
+    // Positive control for the executor: a plan that splits a group and
+    // re-fuses its members in a different shape must run to completion —
+    // the split's own pair cooldowns cannot veto the plan's fuses (they
+    // still veto greedy fuses, which is the anti-flap contract).
+    run_virtual(async {
+        let mut cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled);
+        cfg.fusion.feedback_interval_ms = 0.0;
+        let p = Platform::deploy(provuse::apps::chain(3), cfg.vanilla()).await.unwrap();
+        let merger = manual_merger(&p);
+        merger.handle_fuse("s0", "s1").await.unwrap();
+        let plan = Plan {
+            id: 3,
+            epoch: p.observer.topology_epoch(),
+            actions: vec![
+                PlanAction::Split { functions: vec!["s0".into(), "s1".into()] },
+                PlanAction::Fuse { caller: "s0".into(), callee: "s1".into() },
+                PlanAction::Fuse { caller: "s1".into(), callee: "s2".into() },
+            ],
+            predicted_before: 1.0,
+            predicted_after: 0.5,
+            target: Vec::new(),
+        };
+        merger.execute_plan(plan).await;
+        assert_eq!(p.metrics.counter("plans_executed"), 1, "plan must complete");
+        assert_eq!(p.metrics.counter("plan_aborted_stale"), 0);
+        assert_eq!(p.metrics.counter("plan_aborted_action"), 0);
+        let s0 = p.gateway.resolve("s0").unwrap().id();
+        assert_eq!(s0, p.gateway.resolve("s1").unwrap().id());
+        assert_eq!(s0, p.gateway.resolve("s2").unwrap().id());
+        p.shutdown();
+    });
+}
+
+#[test]
+fn windowed_signals_calibrate_against_ram_and_billing_ledgers() {
+    // ISSUE 8 satellite: the snapshot the planner scores is built from
+    // windowed telemetry — its priced working sets and billing rates must
+    // agree with the platform's authoritative ledgers within tolerance,
+    // or the search optimizes a fiction.
+    run_virtual(async {
+        let mut cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled).with_seed(17);
+        cfg.latency.image_build_ms = 400.0;
+        cfg.latency.boot_ms = 200.0;
+        cfg.fusion.feedback_interval_ms = 1_000.0;
+        cfg.fusion.merge_policy = MergePolicyKind::CostModel;
+        let p = Platform::deploy(provuse::apps::chain(3), cfg).await.unwrap();
+        let wl = WorkloadConfig {
+            requests: 400,
+            rate_rps: 50.0,
+            seed: 17,
+            timeout_ms: 120_000.0,
+        };
+        let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(report.failed, 0);
+        // one more controller tick lands after the workload drains
+        provuse::exec::sleep_ms(3_000.0).await;
+
+        let snap = p.observer.plan_snapshot();
+        assert!(!snap.signals.is_empty(), "controller ticks must populate signals");
+        for s in &snap.signals {
+            assert!(s.window_s > 0.0, "{}: empty window", s.function.as_str());
+            assert!(s.self_ms >= 0.0 && s.billed_ms >= s.self_ms - 1e-9,
+                "{}: billed {} < self {}", s.function.as_str(), s.billed_ms, s.self_ms);
+        }
+        // RAM side: the priced working sets reproduce the container ledger
+        let sig_ram: f64 = snap.signals.iter().map(|s| s.ram_mb).sum();
+        let ledger = p.containers.total_ram_mb();
+        assert!(
+            (sig_ram - ledger).abs() / ledger < 0.25,
+            "signal RAM {sig_ram:.1} disagrees with ledger {ledger:.1}"
+        );
+        // billing side: windowed GB-seconds are a trailing subset of the
+        // authoritative bill, and a non-trivial one for a steady run
+        let sig_gbs: f64 = snap.signals.iter().map(|s| s.gb_seconds).sum();
+        let bill = p.billing.bill();
+        assert!(sig_gbs > 0.0, "windowed billing signals must be live");
+        assert!(
+            sig_gbs <= bill.gb_seconds + 1e-6,
+            "windowed {sig_gbs:.3} GB-s exceeds the total bill {:.3}",
+            bill.gb_seconds
+        );
+        // and the objective the planner would score is well-defined
+        let objective = plan::snapshot_objective(&snap, &p.config.fusion);
+        assert!(objective.is_finite() && objective > 0.0);
+        p.shutdown();
+    });
+}
+
+#[test]
+fn planner_greedy_is_bit_identical_to_the_default_platform() {
+    // Pinned-seed golden (ISSUE 8 acceptance): `--planner greedy` — with
+    // any re-plan cadence — must keep the full verdict transcript
+    // bit-identical to an untouched default config.  The planner axis can
+    // only ever change behavior under `--planner global`.
+    fn transcript(tweak: fn(&mut PlatformConfig)) -> (Vec<String>, usize) {
+        let mut cfg =
+            PlatformConfig::tiny().with_compute(ComputeMode::Disabled).with_seed(11);
+        cfg.latency.image_build_ms = 400.0;
+        cfg.latency.boot_ms = 200.0;
+        cfg.fusion.min_observations = 3;
+        cfg.fusion.feedback_interval_ms = 1_000.0;
+        cfg.fusion.merge_policy = MergePolicyKind::CostModel;
+        tweak(&mut cfg);
+        run_virtual(async move {
+            let p = Platform::deploy(provuse::apps::chain(3), cfg).await.unwrap();
+            let wl = WorkloadConfig {
+                requests: 600,
+                rate_rps: 100.0,
+                seed: 11,
+                timeout_ms: 120_000.0,
+            };
+            let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+            assert_eq!(report.failed, 0);
+            provuse::exec::sleep_ms(10_000.0).await;
+            p.shutdown();
+            (
+                provuse::experiments::fig9::verdict_transcript(&p.metrics),
+                p.metrics.plans().len(),
+            )
+        })
+    }
+    let (base, base_plans) = transcript(|_| {});
+    assert!(!base.is_empty(), "the pinned run must produce verdicts");
+    assert_eq!(base_plans, 0, "the default platform must never emit plan events");
+    let (explicit, explicit_plans) = transcript(|cfg| {
+        cfg.fusion.planner = PlannerKind::Greedy;
+        cfg.fusion.replan_interval_ticks = 3;
+    });
+    assert_eq!(base, explicit, "--planner greedy must be bit-identical to the default");
+    assert_eq!(explicit_plans, 0);
 }
 
 #[test]

@@ -1,0 +1,131 @@
+//! `cargo bench --bench trace_overhead` — the tracer's allocation
+//! contract (ISSUE 9 tentpole acceptance):
+//!
+//! 1. with sampling **off** the tracer adds exactly **zero** heap
+//!    allocations to the request path — every call is one `Option` check;
+//! 2. with sampling **on** the end-to-end per-request allocation delta is
+//!    O(spans): pooled span buffers are recycled through a freelist, so
+//!    steady-state cost is the retained-trace copy and nothing else.
+//!
+//! A counting `#[global_allocator]` must own the whole binary, which is
+//! why these assertions live in a bench target rather than a lib test
+//! (same split as `benches/hotpath.rs`); CI runs it in the smoke job.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use provuse::apps;
+use provuse::config::{ComputeMode, PlatformConfig, WorkloadConfig};
+use provuse::exec::{run_virtual, Executor, Mode};
+use provuse::platform::Platform;
+use provuse::trace::{SpanKind, Tracer};
+use provuse::util::intern::Sym;
+use provuse::workload;
+
+/// Counting allocator: lets the bench assert a code path never touches
+/// the heap (the same idiom as `benches/hotpath.rs`).
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// One full chain(3) workload run; returns the allocation count it cost.
+fn e2e_allocs(sample_every: u64, requests: u64) -> u64 {
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    Executor::new(Mode::Virtual).block_on(async move {
+        let mut cfg =
+            PlatformConfig::tiny().with_compute(ComputeMode::Disabled).with_seed(5);
+        cfg.latency.image_build_ms = 200.0;
+        cfg.latency.boot_ms = 100.0;
+        cfg.fusion.min_observations = 1;
+        cfg.trace.sample_every = sample_every;
+        cfg.trace.max_traces = 512;
+        let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+        let wl = WorkloadConfig {
+            requests,
+            rate_rps: 50.0,
+            seed: 5,
+            timeout_ms: 60_000.0,
+        };
+        let r = workload::run(Rc::clone(&p), wl).await.unwrap();
+        assert_eq!(r.failed, 0);
+        if sample_every == 1 {
+            assert_eq!(p.tracer.conservation_violations(), 0);
+            assert_eq!(p.tracer.retained_total(), requests);
+        }
+        p.shutdown();
+    });
+    ALLOCATIONS.load(Ordering::Relaxed) - before
+}
+
+fn main() {
+    println!("== trace overhead (allocation contract) ==");
+
+    // 1. the disabled tracer is allocation-free across its whole API —
+    //    the exact call sequence the dispatcher makes per request
+    {
+        let tracer = Tracer::disabled();
+        let f = Sym::intern("bench_fn");
+        run_virtual(async move {
+            let before = ALLOCATIONS.load(Ordering::Relaxed);
+            for i in 0..10_000u64 {
+                let ctx = tracer.begin_request(f, i as f64);
+                let frame = tracer.open_frame(ctx, SpanKind::Invoke, f, true);
+                let seg = tracer.start_seg(frame, SpanKind::ColdWait, f);
+                tracer.end_seg(seg);
+                let t = provuse::exec::now();
+                tracer.add_parts(frame, t, t, f, &[(SpanKind::Dispatch, 0.0)]);
+                tracer.close_frame(frame);
+                tracer.finish_ok(ctx, 0.0);
+            }
+            let allocs = ALLOCATIONS.load(Ordering::Relaxed) - before;
+            println!("disabled tracer allocations over 10k request cycles: {allocs}");
+            assert_eq!(allocs, 0, "the disabled tracer must never touch the heap");
+        });
+    }
+
+    // 2. end-to-end: sampling off adds nothing (bit-identical schedule),
+    //    sampling every request costs O(spans) — pooled buffers recycle,
+    //    so the steady-state delta is the retained-trace copy only
+    {
+        const REQUESTS: u64 = 200;
+        // throwaway warmup run: interning tables, thread-locals, and other
+        // one-time global growth land here, not in the measurement
+        let _ = e2e_allocs(0, REQUESTS);
+        let untraced = e2e_allocs(0, REQUESTS);
+        let traced = e2e_allocs(1, REQUESTS);
+        let delta = traced as i64 - untraced as i64;
+        let per_request = delta as f64 / REQUESTS as f64;
+        println!(
+            "e2e allocations: untraced {untraced}, traced(1-in-1) {traced}, \
+             delta {delta} ({per_request:.1}/request)"
+        );
+        assert!(delta > 0, "tracing every request must retain traces (and pay for them)");
+        // generous O(spans) ceiling: a chain(3) trace is a few dozen spans;
+        // anything near this bound means per-span buffers stopped recycling
+        assert!(
+            per_request <= 1_024.0,
+            "traced per-request allocation delta {per_request:.1} exceeds the \
+             O(spans) bound — is the span pool recycling?"
+        );
+    }
+
+    println!("\ntrace_overhead bench complete");
+}

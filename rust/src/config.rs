@@ -412,6 +412,36 @@ pub struct FusionParams {
     pub replan_interval_ticks: u32,
 }
 
+/// Request-tracing knobs (ISSUE 9).  The defaults are seed-inert: with
+/// `sample_every == 0` the platform builds a disabled [`crate::trace::Tracer`]
+/// — no allocation, no RNG, no clock reads — and the request path is
+/// byte-identical to the pre-tracing seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceParams {
+    /// retain roughly 1-in-N successful request traces by seeded draw
+    /// (dropped and window-slowest requests are always retained);
+    /// 0 = tracing off entirely (the seed default)
+    pub sample_every: u64,
+    /// bounded ring of retained traces (oldest evicted first)
+    pub max_traces: usize,
+    /// aggregation window for the breakdown ledger and the
+    /// slowest-in-window retention class (ms)
+    pub window_ms: f64,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        TraceParams { sample_every: 0, max_traces: 256, window_ms: 1_000.0 }
+    }
+}
+
+impl TraceParams {
+    /// Whether the tracer records anything at all.
+    pub fn armed(&self) -> bool {
+        self.sample_every > 0
+    }
+}
+
 /// Complete platform assembly configuration.
 #[derive(Debug, Clone)]
 pub struct PlatformConfig {
@@ -427,6 +457,8 @@ pub struct PlatformConfig {
     /// telemetry retention (full = seed-exact CSVs; windowed = bounded
     /// recorder memory for scale runs) + windowed shard shape
     pub recording: RecordingConfig,
+    /// request-level span tracing (defaults = tracing off, zero cost)
+    pub trace: TraceParams,
     /// directory containing `manifest.json` + HLO artifacts
     pub artifacts_dir: String,
     pub seed: u64,
@@ -466,6 +498,7 @@ impl PlatformConfig {
             scaling: ScalingParams::default(),
             compute: ComputeMode::Replay,
             recording: RecordingConfig::default(),
+            trace: TraceParams::default(),
             artifacts_dir: "artifacts".into(),
             seed: 7,
         }
@@ -632,6 +665,14 @@ impl PlatformConfig {
                     ("level", Json::str(self.recording.level.name())),
                     ("bucket_ms", Json::Num(self.recording.bucket_ms)),
                     ("buckets", Json::Num(self.recording.buckets as f64)),
+                ]),
+            ),
+            (
+                "trace",
+                Json::obj(vec![
+                    ("sample_every", Json::Num(self.trace.sample_every as f64)),
+                    ("max_traces", Json::Num(self.trace.max_traces as f64)),
+                    ("window_ms", Json::Num(self.trace.window_ms)),
                 ]),
             ),
             (
@@ -909,6 +950,23 @@ mod tests {
         s.replicas_max = 1;
         s.idle_horizon_ms = 30_000.0;
         assert!(s.autoscaler_armed(), "scale-to-zero alone must arm the loop");
+    }
+
+    #[test]
+    fn trace_defaults_are_seed_inert_and_serialize() {
+        let c = PlatformConfig::tiny();
+        assert_eq!(c.trace.sample_every, 0, "default config must not arm the tracer");
+        assert!(!c.trace.armed());
+        assert!(c.trace.max_traces > 0);
+        assert!(c.trace.window_ms > 0.0);
+        let j = c.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        let t = v.get("trace").unwrap();
+        assert_eq!(t.get("sample_every").unwrap().as_f64().unwrap(), 0.0);
+        assert!(t.get("max_traces").unwrap().as_f64().unwrap() > 0.0);
+        assert!(t.get("window_ms").unwrap().as_f64().unwrap() > 0.0);
+        let armed = TraceParams { sample_every: 64, ..TraceParams::default() };
+        assert!(armed.armed());
     }
 
     #[test]

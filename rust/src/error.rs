@@ -58,6 +58,26 @@ pub enum Error {
     Xla(String),
 }
 
+impl Error {
+    /// Counter name a dropped request is tagged with (ISSUE 9 drop-cause
+    /// tagging: the workload driver bumps this alongside the aggregate
+    /// `request_failures`, so `counters_csv` can audit *why* requests
+    /// dropped).  Causes map from the error the request path surfaces:
+    /// boot health timeouts, fuse/split cutover races (an instance
+    /// terminated between routing and dispatch), migration aborts, and
+    /// cluster-capacity refusals (scale-from-zero placement failures).
+    pub fn drop_cause(&self) -> &'static str {
+        match self {
+            Error::HealthTimeout(_) => "failed_boot_timeout",
+            Error::Request(_) => "failed_cutover_race",
+            Error::MigrationAborted(_) => "failed_migration_abort",
+            Error::Config(_) => "failed_capacity",
+            Error::NoRoute(_) => "failed_no_route",
+            _ => "failed_other",
+        }
+    }
+}
+
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -118,6 +138,16 @@ mod tests {
             "invalid lifecycle transition for instance 3: Healthy -> Terminated"
         );
         assert_eq!(Error::SplitAborted("x".into()).to_string(), "split aborted: x");
+    }
+
+    #[test]
+    fn drop_causes_are_distinct_per_failure_class() {
+        assert_eq!(Error::HealthTimeout(1).drop_cause(), "failed_boot_timeout");
+        assert_eq!(Error::Request("terminated".into()).drop_cause(), "failed_cutover_race");
+        assert_eq!(Error::MigrationAborted("x".into()).drop_cause(), "failed_migration_abort");
+        assert_eq!(Error::Config("no node can fit".into()).drop_cause(), "failed_capacity");
+        assert_eq!(Error::NoRoute("f".into()).drop_cause(), "failed_no_route");
+        assert_eq!(Error::Runtime("r".into()).drop_cause(), "failed_other");
     }
 
     #[test]

@@ -100,6 +100,9 @@ pub struct Fig10Run {
     /// warm-pool size after the settle (claims must have replenished)
     pub pool_len: usize,
     pub scales_csv: String,
+    /// full counter ledger (`counter,value` CSV) — on the control run this
+    /// carries the per-cause drop tags (ISSUE 9)
+    pub counters_csv: String,
 }
 
 /// The parity trio's transcripts.
@@ -233,6 +236,7 @@ fn run_burst(p: &Fig10Params, cfg: PlatformConfig) -> Result<Fig10Run> {
             floor,
             pool_len: platform.scaler.pool_len(),
             scales_csv: m.scales_csv(),
+            counters_csv: m.counters_csv(),
             scale_events,
             report,
         };
@@ -380,6 +384,16 @@ pub fn run(out_dir: &Path, p: Fig10Params) -> Result<Fig10> {
         ),
         control.report.failed > 0 && control.scale_events.is_empty(),
     ));
+    // drop-cause tagging (ISSUE 9): the control run's drops are deadline
+    // blowouts, so the counter ledger must attribute every one of them
+    checks.push((
+        "control drops are cause-tagged in the counter ledger".to_string(),
+        control.counters_csv.lines().any(|l| {
+            l.strip_prefix("failed_timeout,")
+                .and_then(|v| v.parse::<u64>().ok())
+                .is_some_and(|n| n == control.report.failed)
+        }),
+    ));
     if let Some(par) = &parity {
         checks.push((
             format!(
@@ -408,6 +422,7 @@ pub fn run(out_dir: &Path, p: Fig10Params) -> Result<Fig10> {
     let fig = Fig10 { params: p, scaled, control, parity, checks };
     write_output(&out_dir.join("fig10_summary.txt"), &fig.render())?;
     write_output(&out_dir.join("fig10_scales.csv"), &fig.scaled.scales_csv)?;
+    write_output(&out_dir.join("fig10_counters.csv"), &fig.control.counters_csv)?;
     Ok(fig)
 }
 
@@ -429,5 +444,10 @@ mod tests {
         assert!(dir.join("fig10_scales.csv").exists());
         let csv = std::fs::read_to_string(dir.join("fig10_scales.csv")).unwrap();
         assert!(csv.lines().count() > 1, "scale events must be exported:\n{csv}");
+        // the control run's drops must be cause-tagged in the ledger
+        let counters = std::fs::read_to_string(dir.join("fig10_counters.csv")).unwrap();
+        assert!(counters.starts_with("counter,value\n"), "{counters}");
+        assert!(counters.contains("failed_timeout,"), "{counters}");
+        assert!(counters.contains("request_failures,"), "{counters}");
     }
 }

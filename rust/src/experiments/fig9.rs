@@ -22,6 +22,13 @@
 //! verdict transcript and every node's final RAM ledger are bit-identical
 //! before the throughput point is recorded — sharding must never change
 //! the schedule, only how fast it is produced.
+//!
+//! With `--trace-sample N` (ISSUE 9, default 64) a traced twin re-runs
+//! the scale point with 1-in-N span sampling armed, self-checks that
+//! tracing is schedule-transparent (identical verdict transcript), that
+//! every sampled trace conserves its critical path, and that the trace
+//! ring stays under [`TRACE_BUDGET_BYTES`]; `trace_overhead_pct` and
+//! `trace_bytes` land in `BENCH_scale.json`.
 
 use std::path::Path;
 use std::rc::Rc;
@@ -41,6 +48,11 @@ use crate::workload::{self, WorkloadReport};
 /// an order of magnitude above the steady-state shard footprint so the
 /// check trips on unbounded growth, not on calibration drift.
 pub const RECORDER_BUDGET_BYTES: usize = 64 * 1024 * 1024;
+
+/// Byte budget for the trace ring in the traced twin (ISSUE 9) — the ring
+/// is bounded by `max_traces`, so its footprint must not scale with the
+/// request count either.
+pub const TRACE_BUDGET_BYTES: usize = 8 * 1024 * 1024;
 
 /// FIG9 knobs (CLI + smoke test share the driver).
 #[derive(Debug, Clone, Copy)]
@@ -62,6 +74,11 @@ pub struct Fig9Params {
     /// cluster nodes (`--nodes N`) — shards map node `n` to lane
     /// `n % shards`, so multi-lane runs want a multi-node cluster.
     pub nodes: usize,
+    /// trace-sampling rate for the traced twin (`--trace-sample N`, ISSUE
+    /// 9): the scale point itself runs untraced, then a twin re-runs it at
+    /// 1-in-N sampling to measure tracing's wall-clock overhead and bound
+    /// the trace-ring bytes.  0 skips the twin.
+    pub trace_sample: u64,
 }
 
 impl Fig9Params {
@@ -77,6 +94,7 @@ impl Fig9Params {
             min_observations: 3,
             shards: 1,
             nodes: 1,
+            trace_sample: 64,
         }
     }
 }
@@ -103,6 +121,12 @@ pub struct Fig9Run {
     pub node_ram: Vec<(u64, u64)>,
     /// discrete-event epochs (virtual-clock advances) the run consumed
     pub epochs: u64,
+    /// trace-ring heap footprint (0 when tracing is off)
+    pub trace_bytes: usize,
+    /// traces whose critical path failed to sum to the recorded latency
+    pub trace_violations: u64,
+    /// traces retained in the ring at the end of the run
+    pub trace_retained: u64,
 }
 
 impl Fig9Run {
@@ -120,12 +144,27 @@ pub struct Fig9 {
     /// schedule must reproduce it bit-for-bit before the throughput point
     /// is recorded
     pub single: Option<Fig9Run>,
+    /// traced twin at `trace_sample` 1-in-N (None with `--trace-sample 0`)
+    pub traced: Option<Fig9Run>,
     pub checks: Vec<(String, bool)>,
 }
 
 impl Fig9 {
     pub fn passed(&self) -> bool {
         self.checks.iter().all(|(_, ok)| *ok)
+    }
+
+    /// Wall-clock overhead of 1-in-N tracing over the untraced scale point
+    /// (percent; 0.0 when the traced twin was skipped).  Wall time is
+    /// host-dependent noise in small runs — the number is informational,
+    /// never a pass/fail check.
+    pub fn trace_overhead_pct(&self) -> f64 {
+        match &self.traced {
+            Some(t) if self.windowed.wall_s > 0.0 => {
+                (t.wall_s - self.windowed.wall_s) / self.windowed.wall_s * 100.0
+            }
+            _ => 0.0,
+        }
     }
 
     pub fn render(&self) -> String {
@@ -169,6 +208,17 @@ impl Fig9 {
                 full.verdicts.len()
             ));
         }
+        if let Some(traced) = &self.traced {
+            out.push_str(&format!(
+                "  tracing  : 1-in-{} sampling retained {} traces in {} bytes, \
+                 {:+.1}% wall overhead, {} conservation violations\n",
+                self.params.trace_sample,
+                traced.trace_retained,
+                traced.trace_bytes,
+                self.trace_overhead_pct(),
+                traced.trace_violations
+            ));
+        }
         if let Some(single) = &self.single {
             out.push_str(&format!(
                 "  shards   : {} lanes over {} nodes, {} epochs — 1-shard twin \
@@ -208,7 +258,15 @@ impl Fig9 {
             ("shards", Json::Num(self.params.shards as f64)),
             ("nodes", Json::Num(self.params.nodes as f64)),
             ("shard_parity_checked", Json::Bool(self.single.is_some())),
-            ("milestone", Json::str("sharded-ready-event-loop")),
+            ("trace_sample", Json::Num(self.params.trace_sample as f64)),
+            ("trace_overhead_pct", Json::Num(self.trace_overhead_pct())),
+            (
+                "trace_bytes",
+                Json::Num(
+                    self.traced.as_ref().map(|t| t.trace_bytes).unwrap_or(0) as f64
+                ),
+            ),
+            ("milestone", Json::str("request-span-tracing")),
             ("provisional", Json::Bool(false)),
         ])
     }
@@ -272,8 +330,16 @@ pub fn verdict_transcript(m: &crate::metrics::Recorder) -> Vec<String> {
     v
 }
 
-fn run_once(p: &Fig9Params, level: RecordingLevel, shards: usize) -> Result<Fig9Run> {
-    let cfg = config(p, level);
+fn run_once(
+    p: &Fig9Params,
+    level: RecordingLevel,
+    shards: usize,
+    trace_sample: u64,
+) -> Result<Fig9Run> {
+    let mut cfg = config(p, level);
+    // the traced twin arms the tracer; every other run keeps the seed's
+    // disabled (zero-cost) tracer
+    cfg.trace.sample_every = trace_sample;
     let app = apps::chain(p.chain_len);
     let wl = WorkloadConfig {
         requests: p.requests,
@@ -306,6 +372,9 @@ fn run_once(p: &Fig9Params, level: RecordingLevel, shards: usize) -> Result<Fig9
             verdicts: verdict_transcript(m),
             node_ram,
             epochs: crate::exec::epochs(),
+            trace_bytes: platform.tracer.approx_bytes(),
+            trace_violations: platform.tracer.conservation_violations(),
+            trace_retained: platform.tracer.retained_total(),
             report,
         })
     })?;
@@ -316,14 +385,24 @@ fn run_once(p: &Fig9Params, level: RecordingLevel, shards: usize) -> Result<Fig9
 /// Run FIG9 and write `BENCH_scale.json` + `fig9_summary.txt` into
 /// `out_dir`.
 pub fn run(out_dir: &Path, p: Fig9Params) -> Result<Fig9> {
-    let windowed = run_once(&p, RecordingLevel::Windowed, p.shards)?;
-    let full = if p.parity { Some(run_once(&p, RecordingLevel::Full, p.shards)?) } else { None };
+    let windowed = run_once(&p, RecordingLevel::Windowed, p.shards, 0)?;
+    let full =
+        if p.parity { Some(run_once(&p, RecordingLevel::Full, p.shards, 0)?) } else { None };
     // Shard self-check: replay the same windowed run on a single lane and
     // demand the merged schedule reproduced every platform decision and
     // every node's final RAM balance bit-for-bit.  Only then is the
     // N-shard throughput number comparable to the trajectory baseline.
     let single =
-        if p.shards > 1 { Some(run_once(&p, RecordingLevel::Windowed, 1)?) } else { None };
+        if p.shards > 1 { Some(run_once(&p, RecordingLevel::Windowed, 1, 0)?) } else { None };
+    // Traced twin (ISSUE 9): same run with 1-in-N span sampling armed.
+    // Tracing reads the clock only at awaits the request path already
+    // takes, so the twin must replay the identical schedule — verdict
+    // parity below — while staying inside the trace-ring byte budget.
+    let traced = if p.trace_sample > 0 {
+        Some(run_once(&p, RecordingLevel::Windowed, p.shards, p.trace_sample)?)
+    } else {
+        None
+    };
 
     let mut checks: Vec<(String, bool)> = Vec::new();
     checks.push((
@@ -375,7 +454,33 @@ pub fn run(out_dir: &Path, p: Fig9Params) -> Result<Fig9> {
         ));
     }
 
-    let fig = Fig9 { params: p, windowed, full, single, checks };
+    if let Some(traced) = &traced {
+        checks.push((
+            format!(
+                "traced twin replayed the schedule bit-for-bit ({} vs {} verdicts)",
+                traced.verdicts.len(),
+                windowed.verdicts.len()
+            ),
+            traced.verdicts == windowed.verdicts
+                && traced.report.failed == windowed.report.failed,
+        ));
+        checks.push((
+            format!(
+                "every sampled trace conserved ({} retained, {} violations)",
+                traced.trace_retained, traced.trace_violations
+            ),
+            traced.trace_retained > 0 && traced.trace_violations == 0,
+        ));
+        checks.push((
+            format!(
+                "trace ring bounded ({} bytes < {})",
+                traced.trace_bytes, TRACE_BUDGET_BYTES
+            ),
+            traced.trace_bytes < TRACE_BUDGET_BYTES,
+        ));
+    }
+
+    let fig = Fig9 { params: p, windowed, full, single, traced, checks };
     write_output(&out_dir.join("BENCH_scale.json"), &fig.bench_json().to_string())?;
     write_output(&out_dir.join("fig9_summary.txt"), &fig.render())?;
     Ok(fig)
@@ -399,12 +504,20 @@ mod tests {
         let full = fig.full.as_ref().expect("parity twin must run");
         assert_eq!(fig.windowed.verdicts, full.verdicts);
         assert!(fig.windowed.recorder_bytes < full.recorder_bytes);
+        // traced twin: sampled, conserved, bounded, schedule-transparent
+        let traced = fig.traced.as_ref().expect("traced twin must run");
+        assert!(traced.trace_retained > 0);
+        assert_eq!(traced.trace_violations, 0);
+        assert_eq!(traced.verdicts, fig.windowed.verdicts);
         assert!(dir.join("BENCH_scale.json").exists());
         let json = std::fs::read_to_string(dir.join("BENCH_scale.json")).unwrap();
         let v = Json::parse(&json).unwrap();
         assert!(v.get("wall_time_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.get("requests_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.get("recorder_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(v.get("trace_sample").unwrap().as_f64().unwrap(), 64.0);
+        assert!(v.get("trace_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("trace_overhead_pct").is_some());
     }
 
     #[test]
@@ -420,9 +533,11 @@ mod tests {
         p.parity = false;
         p.shards = 3;
         p.nodes = 3;
+        p.trace_sample = 0; // the shard axis is what's under test
         let dir = std::env::temp_dir().join("provuse_fig9_shard_test");
         let fig = run(&dir, p).unwrap();
         assert!(fig.passed(), "{}", fig.render());
+        assert!(fig.traced.is_none());
         let single = fig.single.as_ref().expect("1-shard twin must run");
         assert_eq!(fig.windowed.verdicts, single.verdicts);
         assert_eq!(fig.windowed.node_ram, single.node_ram);

@@ -15,9 +15,11 @@
 //! | FIG9    | ours: telemetry @ 10⁶ reqs   | [`fig9`]              |
 //! | FIG10   | ours: replica sets + warm pool under burst | [`fig10`] |
 //! | FIG11   | ours: greedy vs global re-planning A/B     | [`fig11`] |
+//! | FIG12   | ours: exact span-level latency attribution | [`fig12`] |
 
 pub mod fig10;
 pub mod fig11;
+pub mod fig12;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
@@ -55,6 +57,12 @@ pub struct RunResult {
     pub remote_sync_calls: u64,
     /// aggregate provider bill (invocations + GiB-seconds)
     pub bill: Bill,
+    /// per-window latency-breakdown ledger, when the tracer was armed
+    pub trace_breakdown_csv: Option<String>,
+    /// Chrome trace-event JSON of the retained traces, when armed
+    pub trace_chrome_json: Option<String>,
+    /// traces whose critical path failed to sum to the recorded latency
+    pub trace_violations: u64,
 }
 
 impl RunResult {
@@ -144,6 +152,15 @@ pub fn run_custom(
             inline_calls: m.counter("inline_calls"),
             remote_sync_calls: m.counter("remote_sync_calls"),
             bill: platform.billing.bill(),
+            trace_breakdown_csv: platform
+                .tracer
+                .enabled()
+                .then(|| platform.tracer.latency_breakdown_csv()),
+            trace_chrome_json: platform
+                .tracer
+                .enabled()
+                .then(|| platform.tracer.chrome_trace_json()),
+            trace_violations: platform.tracer.conservation_violations(),
             report,
         })
     })

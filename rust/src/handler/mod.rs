@@ -34,6 +34,7 @@ use crate::metrics::Recorder;
 use crate::netsim::{Fabric, Hop};
 use crate::replica::{ReplicaSet, Scaler};
 use crate::runtime::ComputeService;
+use crate::trace::{SpanKind, TraceCtx, Tracer};
 use crate::util::intern::Sym;
 
 /// How child payloads are derived and responses combined (fixed, so vanilla
@@ -60,6 +61,8 @@ struct DispatcherInner {
     observer: Rc<Observer>,
     metrics: Recorder,
     billing: BillingLedger,
+    /// request-level span tracer (ISSUE 9); disabled = zero-cost no-op
+    tracer: Tracer,
     /// replica supplier for scale-from-zero (set by the platform after
     /// deploy when the autoscaler is armed; None reproduces the seed's
     /// hard NoRoute on an empty set)
@@ -80,6 +83,7 @@ impl Dispatcher {
         observer: Rc<Observer>,
         metrics: Recorder,
         billing: BillingLedger,
+        tracer: Tracer,
     ) -> Self {
         let (payload_len, response_len) = match compute.artifacts() {
             Some(set) => (set.batch * set.in_dim, set.batch * set.out_dim),
@@ -96,6 +100,7 @@ impl Dispatcher {
                 observer,
                 metrics,
                 billing,
+                tracer,
                 scaler: RefCell::new(None),
                 payload_len,
                 response_len,
@@ -125,10 +130,24 @@ impl Dispatcher {
     /// Unknown names are rejected without touching the interner (client
     /// input must not grow the append-only table).
     pub async fn invoke(&self, function: &str, payload: Vec<f32>) -> Result<Vec<f32>> {
+        self.invoke_traced(function, payload, None).await
+    }
+
+    /// [`Self::invoke`] under a live trace context.  The workload driver
+    /// owns the trace lifecycle (`Tracer::begin_request` /
+    /// `Tracer::finish_ok` / `Tracer::finish_dropped`) because a timed-out
+    /// request's future is dropped mid-flight — only the caller can still
+    /// finalize its trace.
+    pub async fn invoke_traced(
+        &self,
+        function: &str,
+        payload: Vec<f32>,
+        trace: Option<TraceCtx>,
+    ) -> Result<Vec<f32>> {
         let Some(sym) = Sym::lookup(function) else {
             return Err(Error::NoRoute(function.to_string()));
         };
-        self.invoke_remote(sym, payload, 0, None).await
+        self.invoke_remote(sym, payload, 0, None, trace).await
     }
 
     /// Full remote invocation: gateway -> (service) -> network -> handler.
@@ -141,6 +160,7 @@ impl Dispatcher {
         payload: Vec<f32>,
         depth: u32,
         from_node: Option<NodeId>,
+        trace: Option<TraceCtx>,
     ) -> LocalBoxFuture<Result<Vec<f32>>> {
         let this = self.clone();
         Box::pin(async move {
@@ -148,6 +168,11 @@ impl Dispatcher {
             if depth > 64 {
                 return Err(Error::Request("call depth exceeded".into()));
             }
+            // span frame for this invocation: at depth 0 it is the root
+            // request's sole critical child; nested remote calls hang off
+            // the caller's exec frame as non-critical children (the
+            // caller's Join segment is their critical cover)
+            let frame = d.tracer.open_frame(trace, SpanKind::Invoke, function, depth == 0);
             // gateway admission + route lookup. In-flight accounting starts
             // at routing time: once the gateway has committed this request
             // to an instance, a draining original must wait for it
@@ -163,7 +188,14 @@ impl Dispatcher {
             // arrival pays the cold start
             let inst = match set.pick() {
                 Some(inst) => inst,
-                None => this.revive(function, &set).await?,
+                None => {
+                    // scale-from-zero boots and fuse/split/migration
+                    // cutover retries stall the request here
+                    let stall = d.tracer.start_seg(frame, SpanKind::CutoverStall, function);
+                    let inst = this.revive(function, &set).await?;
+                    d.tracer.end_seg(stall);
+                    inst
+                }
             };
             // one interner round-trip per hop, not one per use below
             let name = function.as_str();
@@ -178,23 +210,43 @@ impl Dispatcher {
 
             // gateway + (kube) service indirection + network (+ cross-node
             // surcharge) + request serialization, charged as one timer
-            // (perf: §Perf L3-3)
-            let env_ms = gateway_ms
-                + d.fabric.sample(Hop::ServiceIndirection)
-                + d.fabric.sample(Hop::Network)
-                + if crossed { d.fabric.sample(Hop::CrossNode) } else { 0.0 }
-                + d.fabric.serialize_cost(payload.len() * 4);
+            // (perf: §Perf L3-3).  Components are drawn into locals — same
+            // draw order, same sum order, bit-identical env_ms — so a live
+            // trace can partition the charged interval exactly.
+            let svc_ms = d.fabric.sample(Hop::ServiceIndirection);
+            let net_ms = d.fabric.sample(Hop::Network);
+            let cross_ms = if crossed { d.fabric.sample(Hop::CrossNode) } else { 0.0 };
+            let ser_ms = d.fabric.serialize_cost(payload.len() * 4);
+            let env_ms = gateway_ms + svc_ms + net_ms + cross_ms + ser_ms;
+            let env_start = exec::now();
             exec::sleep_ms(env_ms).await;
+            d.tracer.add_parts(
+                frame,
+                env_start,
+                exec::now(),
+                function,
+                &[
+                    (SpanKind::Gateway, gateway_ms),
+                    (SpanKind::ServiceIndirection, svc_ms),
+                    (SpanKind::Network, net_ms),
+                    (SpanKind::CrossNode, cross_ms),
+                    (SpanKind::Serialize, ser_ms),
+                ],
+            );
 
             // cold-start wait: a booting instance queues the request
+            let cold = d.tracer.start_seg(frame, SpanKind::ColdWait, function);
             while inst.state() == InstanceState::Booting {
                 exec::sleep_ms(d.config.latency.health_interval_ms).await;
             }
+            d.tracer.end_seg(cold);
             // concurrency gate: a bounded replica queues excess arrivals
             // here (cap 0 = unlimited, the seed behavior — returns
             // immediately without touching the slot counter)
+            let gate = d.tracer.start_seg(frame, SpanKind::GateQueue, function);
             let cap = d.config.scaling.concurrency;
             inst.acquire_slot(cap).await;
+            d.tracer.end_seg(gate);
             if inst.state() == InstanceState::Terminated {
                 inst.release_slot(cap);
                 inst.request_finished_for(name);
@@ -210,7 +262,15 @@ impl Dispatcher {
             let bill_start = exec::now();
             let dispatch_ms = d.fabric.sample(Hop::Dispatch);
             let result = this
-                .execute_function(Rc::clone(&inst), function, payload, depth, dispatch_ms)
+                .execute_function(
+                    Rc::clone(&inst),
+                    function,
+                    payload,
+                    depth,
+                    dispatch_ms,
+                    frame,
+                    SpanKind::Dispatch,
+                )
                 .await;
             inst.release_slot(cap);
             inst.request_finished_for(name);
@@ -227,10 +287,24 @@ impl Dispatcher {
 
             // response path: serialization + network (+ the cross-node
             // surcharge again) back to the caller
-            let back_ms = d.fabric.serialize_cost(out.len() * 4)
-                + d.fabric.sample(Hop::Network)
-                + if crossed { d.fabric.sample(Hop::CrossNode) } else { 0.0 };
+            let ser_back_ms = d.fabric.serialize_cost(out.len() * 4);
+            let net_back_ms = d.fabric.sample(Hop::Network);
+            let cross_back_ms = if crossed { d.fabric.sample(Hop::CrossNode) } else { 0.0 };
+            let back_ms = ser_back_ms + net_back_ms + cross_back_ms;
+            let back_start = exec::now();
             exec::sleep_ms(back_ms).await;
+            d.tracer.add_parts(
+                frame,
+                back_start,
+                exec::now(),
+                function,
+                &[
+                    (SpanKind::Serialize, ser_back_ms),
+                    (SpanKind::Network, net_back_ms),
+                    (SpanKind::CrossNode, cross_back_ms),
+                ],
+            );
+            d.tracer.close_frame(frame);
             Ok(out)
         })
     }
@@ -278,7 +352,11 @@ impl Dispatcher {
 
     /// Execute `function` on `inst` (already located there): upfront charge
     /// (dispatch for remote arrivals, inline hop for fused calls), compute
-    /// body, then the outbound call plan.
+    /// body, then the outbound call plan.  `upfront_kind` labels the
+    /// upfront charge in a live trace (`Dispatch` or `Inline`) and decides
+    /// whether this exec frame is a critical segment of its parent
+    /// (remote dispatch) or covered by the caller's Join (inline child).
+    #[allow(clippy::too_many_arguments)]
     fn execute_function(
         &self,
         inst: Rc<Instance>,
@@ -286,10 +364,18 @@ impl Dispatcher {
         input: Vec<f32>,
         depth: u32,
         upfront_ms: f64,
+        trace: Option<TraceCtx>,
+        upfront_kind: SpanKind,
     ) -> LocalBoxFuture<Result<Vec<f32>>> {
         let this = self.clone();
         Box::pin(async move {
             let d = &this.inner;
+            let ex = d.tracer.open_frame(
+                trace,
+                SpanKind::Exec,
+                function,
+                upfront_kind == SpanKind::Dispatch,
+            );
             // borrow, don't clone: the spec is immutable for the platform's
             // lifetime and the clone copied every call edge per invocation
             let spec = d.app.function(function.as_str())?;
@@ -301,7 +387,18 @@ impl Dispatcher {
                 None => d.compute.run("", &input)?, // orchestration-only fold
             };
             let self_ms = upfront_ms + compute_ms + spec.busy_ms;
+            let self_start = exec::now();
             exec::sleep_ms(self_ms).await;
+            d.tracer.add_parts(
+                ex,
+                self_start,
+                exec::now(),
+                function,
+                &[
+                    (upfront_kind, upfront_ms),
+                    (SpanKind::SelfTime, compute_ms + spec.busy_ms),
+                ],
+            );
             d.metrics.bump("invocations");
             // per-function handler attribution: the self time (hop + compute
             // + busy, no child waits) gives interior functions of a fused
@@ -329,7 +426,15 @@ impl Dispatcher {
                     let inst2 = Rc::clone(&inst);
                     Box::pin(async move {
                         this2
-                            .execute_function(inst2, target, child_payload, depth + 1, inline_ms)
+                            .execute_function(
+                                inst2,
+                                target,
+                                child_payload,
+                                depth + 1,
+                                inline_ms,
+                                ex,
+                                SpanKind::Inline,
+                            )
                             .await
                     })
                 } else {
@@ -341,6 +446,7 @@ impl Dispatcher {
                         child_payload,
                         depth + 1,
                         d.cluster.node_of(inst.id()),
+                        ex,
                     )
                 };
                 // inline work inherits this instance's lane; a remote call
@@ -348,13 +454,22 @@ impl Dispatcher {
                 // replica — the no-Rc-across-shards ownership rule).  Lane
                 // choice never alters the schedule (global wake-seq merge),
                 // so this is pinning, not reordering.
-                sync_handles.push(match this.call_lane(local, &target_set) {
-                    Some(lane) => exec::spawn_on(lane, fut),
-                    None => exec::spawn(fut),
-                });
+                sync_handles.push((
+                    match this.call_lane(local, &target_set) {
+                        Some(lane) => exec::spawn_on(lane, fut),
+                        None => exec::spawn(fut),
+                    },
+                    target,
+                ));
             }
-            for handle in sync_handles {
-                let child_out = handle.await?;
+            for (handle, target) in sync_handles {
+                // the handler blocks here — the sync-detection signal and,
+                // in a live trace, the critical Join segment whose interval
+                // covers the child's (concurrently recorded) frame
+                let join = d.tracer.start_seg(ex, SpanKind::Join, target);
+                let joined = handle.await;
+                d.tracer.end_seg(join);
+                let child_out = joined?;
                 combine(&mut out, &child_out);
             }
 
@@ -373,6 +488,8 @@ impl Dispatcher {
                     // count before detaching so a drain waits for this work
                     inst2.request_started();
                     exec::spawn(async move {
+                        // detached work is off the caller's critical path —
+                        // async children are never traced
                         let r = this2
                             .execute_function(
                                 Rc::clone(&inst2),
@@ -380,6 +497,8 @@ impl Dispatcher {
                                 child_payload,
                                 depth + 1,
                                 inline_ms,
+                                None,
+                                SpanKind::Inline,
                             )
                             .await;
                         inst2.request_finished();
@@ -394,7 +513,7 @@ impl Dispatcher {
                     let lane = this.call_lane(false, &target_set);
                     let fut = async move {
                         let r = this2
-                            .invoke_remote(target, child_payload, depth + 1, my_node)
+                            .invoke_remote(target, child_payload, depth + 1, my_node, None)
                             .await;
                         if r.is_err() {
                             this2.inner.metrics.bump("async_failures");
@@ -411,6 +530,7 @@ impl Dispatcher {
                 }
             }
 
+            d.tracer.close_frame(ex);
             Ok(out)
         })
     }

@@ -39,6 +39,7 @@ pub mod netsim;
 pub mod platform;
 pub mod replica;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 pub mod workload;
 pub mod xla;

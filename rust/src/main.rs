@@ -138,6 +138,17 @@ fn apply_scaling_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
     Ok(())
 }
 
+/// Apply the request-tracing flags shared by `experiment` and `serve`.
+/// Defaults are the seed's inert values: a command line that never
+/// mentions a trace flag runs with the tracer disabled entirely.
+fn apply_trace_flags(args: &Args, config: &mut PlatformConfig) -> Result<()> {
+    let t = &mut config.trace;
+    t.sample_every = args.u64_or("trace-sample", t.sample_every)?;
+    t.max_traces = args.u64_or("trace-max", t.max_traces as u64)? as usize;
+    t.window_ms = args.f64_or("trace-window-ms", t.window_ms)?;
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("figure5") => {
@@ -245,6 +256,7 @@ fn dispatch(args: &Args) -> Result<()> {
             p.min_observations = args.u32_or("min-observations", p.min_observations)?;
             p.shards = args.u64_or("shards", p.shards as u64)?.max(1) as usize;
             p.nodes = args.u64_or("nodes", p.nodes as u64)?.max(1) as usize;
+            p.trace_sample = args.u64_or("trace-sample", p.trace_sample)?;
             if args.has("no-parity") {
                 p.parity = false;
             }
@@ -304,6 +316,30 @@ fn dispatch(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        Some("figure12") => {
+            let out = std::path::PathBuf::from(args.str_or("out", "results/fig12"));
+            let mut p = experiments::fig12::Fig12Params::defaults(args.has("smoke"));
+            p.chain_len = args.u64_or("chain", p.chain_len as u64)?.max(2) as usize;
+            p.measured = args.u64_or("requests", p.measured)?.max(1);
+            p.seed = args.u64_or("seed", p.seed)?;
+            let fig = experiments::fig12::run(&out, p)?;
+            println!("{}", fig.render());
+            println!("outputs written to {}", out.display());
+            // `--trace-out PATH` additionally copies the fused arm's Chrome
+            // trace-event JSON to an explicit path (CI artifact upload)
+            if let Some(path) = args.flag("trace-out") {
+                experiments::write_output(
+                    std::path::Path::new(path),
+                    &fig.fused.chrome_json,
+                )?;
+            }
+            if !fig.passed() {
+                return Err(provuse::Error::Runtime(
+                    "FIG12 exact-attribution checks failed".into(),
+                ));
+            }
+            Ok(())
+        }
         Some("ram-table") => {
             let out = std::path::PathBuf::from(args.str_or("out", "results/ram"));
             let fig = experiments::fig6::run(&out, workload_from(args)?, compute_from(args))?;
@@ -348,6 +384,7 @@ fn dispatch(args: &Args) -> Result<()> {
             apply_fusion_flags(args, &mut config)?;
             apply_cluster_flags(args, &mut config)?;
             apply_scaling_flags(args, &mut config)?;
+            apply_trace_flags(args, &mut config)?;
             if args.has("vanilla") {
                 config = config.vanilla();
             }
@@ -361,6 +398,23 @@ fn dispatch(args: &Args) -> Result<()> {
                 result.final_instances,
                 result.inline_calls
             );
+            if result.trace_violations > 0 {
+                return Err(provuse::Error::Runtime(format!(
+                    "{} trace conservation violations",
+                    result.trace_violations
+                )));
+            }
+            // `--trace-out PATH` dumps the retained traces as Chrome
+            // trace-event JSON (open in chrome://tracing or Perfetto)
+            if let Some(path) = args.flag("trace-out") {
+                let json = result.trace_chrome_json.as_deref().ok_or_else(|| {
+                    provuse::Error::Config(
+                        "--trace-out requires tracing armed (--trace-sample N > 0)".into(),
+                    )
+                })?;
+                experiments::write_output(std::path::Path::new(path), json)?;
+                println!("  traces written to {path}");
+            }
             Ok(())
         }
         Some("apps") => {
@@ -418,6 +472,7 @@ fn dispatch(args: &Args) -> Result<()> {
             apply_fusion_flags(args, &mut config)?;
             apply_cluster_flags(args, &mut config)?;
             apply_scaling_flags(args, &mut config)?;
+            apply_trace_flags(args, &mut config)?;
             if args.has("vanilla") {
                 config = config.vanilla();
             }
@@ -455,6 +510,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20 figure11 [--smoke]   ours: greedy vs global re-planning A/B on the\n\
                  \x20   [--replan-ticks N] trap app (greedy locks into a local optimum;\n\
                  \x20                      the global planner's steady state dominates)\n\
+                 \x20 figure12 [--smoke]   ours: exact span-level latency attribution\n\
+                 \x20   [--chain N]        (unfused vs fused chain on a jitter-free\n\
+                 \x20   [--trace-out PATH] fabric: e2e delta == eliminated envelope -\n\
+                 \x20                      added inline, in integer ns)\n\
                  \x20 ram-table            §5.2 RAM reductions\n\
                  \x20 cost-table           TAB-COST: double-billing elimination in $\n\
                  \x20 sweep --dim D        ablations (rate|hop|policy|depth|arrival)\n\
@@ -476,7 +535,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20             --node-capacity MB --cross-node-ms MS --shards N\n\
                  scaling     : --replicas-max N --replicas-min N --target-inflight N\n\
                  \x20             --scale-interval-ms MS --idle-horizon-ms MS --warm-pool N\n\
-                 \x20             --warm-attach-ms MS --concurrency N"
+                 \x20             --warm-attach-ms MS --concurrency N\n\
+                 tracing     : --trace-sample N (1-in-N; 0 = off) --trace-max N\n\
+                 \x20             --trace-window-ms MS --trace-out PATH"
             );
             Ok(())
         }

@@ -1357,6 +1357,18 @@ impl Recorder {
         }
         out
     }
+
+    /// CSV export of every named event counter (`counter,value`), sorted by
+    /// name (the backing map is a `BTreeMap`).  Makes hop and drop-cause
+    /// counters — `request_failures` next to its `failed_*` split (ISSUE 9)
+    /// — auditable from CSVs alone like every other event series.
+    pub fn counters_csv(&self) -> String {
+        let mut out = String::from("counter,value\n");
+        for (name, value) in self.inner.counters.borrow().iter() {
+            out.push_str(&format!("{name},{value}\n"));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -1400,6 +1412,18 @@ mod tests {
         r.bump("merge_requests");
         assert_eq!(r.counter("merge_requests"), 2);
         assert_eq!(r.counter("nope"), 0);
+    }
+
+    #[test]
+    fn counters_csv_lists_every_counter_sorted() {
+        let r = Recorder::new();
+        r.bump("request_failures");
+        r.bump("failed_cutover_race");
+        r.bump("failed_cutover_race");
+        let csv = r.counters_csv();
+        assert!(csv.starts_with("counter,value\n"));
+        // BTreeMap order: failed_* sorts before request_failures
+        assert_eq!(csv, "counter,value\nfailed_cutover_race,2\nrequest_failures,1\n");
     }
 
     #[test]

@@ -137,6 +137,9 @@ pub struct Platform {
     /// replica supplier: warm pool + cold boots (autoscaler and
     /// scale-from-zero both draw from it)
     pub scaler: Rc<crate::replica::Scaler>,
+    /// request-level span tracer (ISSUE 9; disabled under the default
+    /// `trace.sample_every = 0` — a zero-cost no-op)
+    pub tracer: crate::trace::Tracer,
     dispatcher: Dispatcher,
     start: SimInstant,
     sampler_stop: Rc<Cell<bool>>,
@@ -299,6 +302,7 @@ impl Platform {
         } else {
             BillingLedger::new()
         };
+        let tracer = crate::trace::Tracer::new(&config.trace, config.seed);
         let dispatcher = Dispatcher::new(
             app.clone(),
             Rc::clone(&config),
@@ -309,6 +313,7 @@ impl Platform {
             Rc::clone(&observer),
             metrics.clone(),
             billing.clone(),
+            tracer.clone(),
         );
         // the handler's scale-from-zero path revives idle routes through
         // the same warm-pool/cold-boot engine the autoscaler uses
@@ -693,6 +698,7 @@ impl Platform {
             observer,
             billing,
             scaler,
+            tracer,
             dispatcher,
             start: exec::now(),
             sampler_stop,
@@ -708,6 +714,17 @@ impl Platform {
     /// Invoke an arbitrary function (targeted tests / custom clients).
     pub async fn invoke_function(&self, function: &str, payload: Vec<f32>) -> Result<Vec<f32>> {
         self.dispatcher.invoke(function, payload).await
+    }
+
+    /// [`Self::invoke_function`] under a live trace context from
+    /// [`Platform::tracer`] (the workload driver owns begin/finish).
+    pub async fn invoke_function_traced(
+        &self,
+        function: &str,
+        payload: Vec<f32>,
+        trace: Option<crate::trace::TraceCtx>,
+    ) -> Result<Vec<f32>> {
+        self.dispatcher.invoke_traced(function, payload, trace).await
     }
 
     /// Expected request payload length (f32 count).

@@ -1,0 +1,1026 @@
+//! Request-level span tracing with exact critical-path latency attribution
+//! (ISSUE 9).
+//!
+//! The handler prices every component of a request's end-to-end latency —
+//! gateway admission, service indirection, network traversal, cross-node
+//! surcharge, serialization, cold-start waits, concurrency-gate queueing,
+//! dispatch, inline hops, handler self-time — and then charges them as
+//! opaque `sleep_ms` timers.  This module records that decomposition as a
+//! per-request **span tree** so the platform can answer "where did the
+//! latency go?" mechanically.
+//!
+//! Because time is virtual, the decomposition is *exact*: every
+//! time-advancing await on a request's path is bracketed by spans that
+//! tile their parent frame with no gaps, so a trace's critical path sums
+//! **bit-for-bit** to the `LatencySample` the recorder keeps for the same
+//! request (the conservation contract; see [`verify`]).
+//!
+//! Design constraints inherited from ISSUE 5's telemetry work:
+//!
+//! * **Zero cost when off.** `--trace-sample 0` (the seed default) builds
+//!   a [`Tracer`] with no inner state; every call site is an `Option`
+//!   check and the resolved-request hot path performs zero additional
+//!   allocations (asserted by `benches/trace_overhead.rs`).
+//! * **Bounded when on.** Span buffers are pooled and reused across
+//!   requests; retained traces live in a ring capped at
+//!   `--trace-max` entries.  [`Tracer::approx_bytes`] is the
+//!   recorder-style byte bound `figure9` budgets.
+//! * **Deterministic.** Retention draws from a dedicated seeded RNG (the
+//!   fabric streams are untouched), so a pinned seed retains the same
+//!   traces every run — and an enabled tracer never perturbs the
+//!   schedule, a property `figure9` checks by verdict-transcript parity
+//!   against an untraced twin.
+//!
+//! Sampling is 1-in-N by seeded draw, plus two always-retain classes:
+//! **dropped** requests (timeouts and errors — the traces operators
+//! actually need) and the **window-slowest-so-far** request of each
+//! aggregation window (an online approximation of per-window slowest:
+//! the first and every record-breaking request of a window is kept).
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::config::TraceParams;
+use crate::exec::{self, SimInstant};
+use crate::util::intern::Sym;
+use crate::util::rng::Rng;
+
+/// Sentinel parent index for the root span.
+pub const NO_PARENT: u32 = u32::MAX;
+
+/// Sentinel end for a span that was opened but never closed (the request
+/// failed or timed out mid-flight); finalization clamps it.
+const OPEN_END: u64 = u64::MAX;
+
+/// Hard cap on spans per trace — a runaway fan-out stops recording (and
+/// the trace is marked truncated, exempting it from conservation) instead
+/// of growing without bound.
+pub const MAX_SPANS_PER_TRACE: usize = 8_192;
+
+/// What a span's interval was spent on.  Leaf kinds mirror the components
+/// the handler/gateway/replica path prices; container kinds (`Request`,
+/// `Invoke`, `Exec`, `Join`) structure the tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// root: one per sampled request, spanning the whole e2e interval
+    Request,
+    /// one remote invocation frame (gateway -> ... -> response)
+    Invoke,
+    /// one handler execution frame (dispatch/inline + body + sync joins)
+    Exec,
+    /// caller blocked on one synchronous child call
+    Join,
+    /// client/caller -> gateway admission + route lookup
+    Gateway,
+    /// Kubernetes Service VIP indirection (zero on tiny)
+    ServiceIndirection,
+    /// instance-to-instance network traversal (request or response leg)
+    Network,
+    /// east-west surcharge for a hop crossing node boundaries
+    CrossNode,
+    /// payload/response (de)serialization
+    Serialize,
+    /// queued behind a booting instance (cold start)
+    ColdWait,
+    /// queued on the replica's concurrency gate
+    GateQueue,
+    /// scale-from-zero revival and fuse/split/migration cutover retries
+    CutoverStall,
+    /// handler dispatch shim (remote arrivals only)
+    Dispatch,
+    /// fused same-process call hop
+    Inline,
+    /// handler self-time: compute body + calibrated busy term
+    SelfTime,
+}
+
+impl SpanKind {
+    /// Stable lowercase name used in CSV and Chrome-trace exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Invoke => "invoke",
+            SpanKind::Exec => "exec",
+            SpanKind::Join => "join",
+            SpanKind::Gateway => "gateway",
+            SpanKind::ServiceIndirection => "service_indirection",
+            SpanKind::Network => "network",
+            SpanKind::CrossNode => "cross_node",
+            SpanKind::Serialize => "serialize",
+            SpanKind::ColdWait => "cold_wait",
+            SpanKind::GateQueue => "gate_queue",
+            SpanKind::CutoverStall => "cutover_stall",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::Inline => "inline",
+            SpanKind::SelfTime => "self",
+        }
+    }
+
+    /// Leaf component kinds — the ones the breakdown ledger aggregates.
+    /// Container kinds (`Request`/`Invoke`/`Exec`/`Join`) only structure
+    /// the tree; counting them would double-charge their contents.
+    pub fn is_component(self) -> bool {
+        !matches!(
+            self,
+            SpanKind::Request | SpanKind::Invoke | SpanKind::Exec | SpanKind::Join
+        )
+    }
+}
+
+/// One node of a request's span tree.  Intervals are virtual-clock
+/// nanoseconds (the executor's native unit), so sums are exact integer
+/// arithmetic and the conservation contract is bit-for-bit.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// function the interval is attributed to
+    pub function: Sym,
+    /// index of the parent span in the trace (`NO_PARENT` for the root)
+    pub parent: u32,
+    /// critical-path segment: the crit children of any span tile its
+    /// interval exactly (no gaps, no overlap)
+    pub crit: bool,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Span {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// Why a finished trace was retained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetainReason {
+    /// seeded 1-in-N draw
+    Sampled,
+    /// slowest-so-far in its aggregation window
+    WindowSlowest,
+    /// the request failed or timed out — always retained
+    Dropped,
+}
+
+impl RetainReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            RetainReason::Sampled => "sampled",
+            RetainReason::WindowSlowest => "window_slowest",
+            RetainReason::Dropped => "dropped",
+        }
+    }
+}
+
+/// One retained request trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// monotonic per-tracer sequence number (assigned at begin)
+    pub seq: u64,
+    /// arrival time (recorder-relative ms), the aggregation-window key
+    pub t_ms: f64,
+    /// entry function of the request
+    pub function: Sym,
+    /// recorded e2e latency (ms); NaN for dropped requests
+    pub latency_ms: f64,
+    /// the request failed or timed out (partial span tree, no
+    /// conservation claim)
+    pub dropped: bool,
+    /// span recording hit [`MAX_SPANS_PER_TRACE`] (no conservation claim)
+    pub truncated: bool,
+    /// the critical path summed bit-for-bit to `latency_ms`
+    pub conserved: bool,
+    pub reason: RetainReason,
+    pub spans: Vec<Span>,
+}
+
+/// Copy handle threading a live trace through the dispatcher: which slot
+/// the request records into and which span new children attach to.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceCtx {
+    tok: u32,
+    span: u32,
+}
+
+/// Handle to one open critical-path segment.
+#[derive(Debug, Clone, Copy)]
+pub struct SegRef {
+    tok: u32,
+    span: u32,
+}
+
+/// In-flight per-request recording state (pooled and reused).
+struct Slot {
+    seq: u64,
+    t_ms: f64,
+    function: Sym,
+    truncated: bool,
+    spans: Vec<Span>,
+}
+
+struct TracerInner {
+    sample_every: u64,
+    max_traces: usize,
+    window_ms: f64,
+    rng: RefCell<Rng>,
+    slots: RefCell<Vec<Slot>>,
+    free: RefCell<Vec<u32>>,
+    retained: RefCell<VecDeque<Trace>>,
+    /// scratch per-span crit-child sums for the finish-time conservation
+    /// check (reused; zero steady-state allocation)
+    scratch: RefCell<Vec<u64>>,
+    next_seq: Cell<u64>,
+    started: Cell<u64>,
+    finished: Cell<u64>,
+    dropped: Cell<u64>,
+    retained_total: Cell<u64>,
+    conservation_violations: Cell<u64>,
+    /// slowest-so-far state of the current aggregation window
+    window_index: Cell<i64>,
+    window_max_ms: Cell<f64>,
+}
+
+/// Deterministic, bounded span tracer.  Cheaply clonable; a disabled
+/// tracer (`sample_every == 0`) carries no state and every operation is a
+/// no-op.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Option<Rc<TracerInner>>,
+}
+
+impl Tracer {
+    /// Build from config; `params.sample_every == 0` yields the disabled
+    /// (zero-cost) tracer.
+    pub fn new(params: &TraceParams, seed: u64) -> Self {
+        if params.sample_every == 0 {
+            return Tracer::disabled();
+        }
+        Tracer {
+            inner: Some(Rc::new(TracerInner {
+                sample_every: params.sample_every,
+                max_traces: params.max_traces.max(1),
+                window_ms: if params.window_ms > 0.0 { params.window_ms } else { 1_000.0 },
+                rng: RefCell::new(Rng::new(seed ^ 0x7ACE_7ACE)),
+                slots: RefCell::new(Vec::new()),
+                free: RefCell::new(Vec::new()),
+                retained: RefCell::new(VecDeque::new()),
+                scratch: RefCell::new(Vec::new()),
+                next_seq: Cell::new(0),
+                started: Cell::new(0),
+                finished: Cell::new(0),
+                dropped: Cell::new(0),
+                retained_total: Cell::new(0),
+                conservation_violations: Cell::new(0),
+                window_index: Cell::new(i64::MIN),
+                window_max_ms: Cell::new(f64::NEG_INFINITY),
+            })),
+        }
+    }
+
+    /// The zero-cost tracer: every call is an `Option` check and nothing
+    /// else — no allocation, no RNG, no clock reads.
+    pub fn disabled() -> Self {
+        Tracer { inner: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Start recording one request arriving at `t_ms` (recorder-relative).
+    /// Returns `None` when disabled; the returned context's parent is the
+    /// root `Request` span.
+    pub fn begin_request(&self, function: Sym, t_ms: f64) -> Option<TraceCtx> {
+        let inner = self.inner.as_ref()?;
+        let seq = inner.next_seq.get();
+        inner.next_seq.set(seq + 1);
+        inner.started.set(inner.started.get() + 1);
+        let root = Span {
+            kind: SpanKind::Request,
+            function,
+            parent: NO_PARENT,
+            crit: false,
+            start_ns: exec::now().0,
+            end_ns: OPEN_END,
+        };
+        let mut slots = inner.slots.borrow_mut();
+        let tok = match inner.free.borrow_mut().pop() {
+            Some(tok) => {
+                let slot = &mut slots[tok as usize];
+                slot.seq = seq;
+                slot.t_ms = t_ms;
+                slot.function = function;
+                slot.truncated = false;
+                slot.spans.clear();
+                slot.spans.push(root);
+                tok
+            }
+            None => {
+                slots.push(Slot {
+                    seq,
+                    t_ms,
+                    function,
+                    truncated: false,
+                    spans: vec![root],
+                });
+                (slots.len() - 1) as u32
+            }
+        };
+        Some(TraceCtx { tok, span: 0 })
+    }
+
+    fn push_span(inner: &TracerInner, tok: u32, span: Span) -> u32 {
+        let mut slots = inner.slots.borrow_mut();
+        let slot = &mut slots[tok as usize];
+        if slot.spans.len() >= MAX_SPANS_PER_TRACE {
+            slot.truncated = true;
+            return u32::MAX;
+        }
+        slot.spans.push(span);
+        (slot.spans.len() - 1) as u32
+    }
+
+    /// Open a container frame (`Invoke`/`Exec`) under `ctx`; children of
+    /// the returned context attach to the new frame.  `crit` marks the
+    /// frame as a critical-path segment of its parent (true when the
+    /// caller awaits it inline rather than through a `Join`).
+    pub fn open_frame(
+        &self,
+        ctx: Option<TraceCtx>,
+        kind: SpanKind,
+        function: Sym,
+        crit: bool,
+    ) -> Option<TraceCtx> {
+        let inner = self.inner.as_ref()?;
+        let ctx = ctx?;
+        let idx = Self::push_span(
+            inner,
+            ctx.tok,
+            Span {
+                kind,
+                function,
+                parent: ctx.span,
+                crit,
+                start_ns: exec::now().0,
+                end_ns: OPEN_END,
+            },
+        );
+        if idx == u32::MAX {
+            return None;
+        }
+        Some(TraceCtx { tok: ctx.tok, span: idx })
+    }
+
+    /// Close a frame opened with [`Self::open_frame`].
+    pub fn close_frame(&self, ctx: Option<TraceCtx>) {
+        let (Some(inner), Some(ctx)) = (self.inner.as_ref(), ctx) else {
+            return;
+        };
+        let now = exec::now().0;
+        let mut slots = inner.slots.borrow_mut();
+        slots[ctx.tok as usize].spans[ctx.span as usize].end_ns = now;
+    }
+
+    /// Open a critical-path segment (cold wait, gate queue, join, ...)
+    /// under `ctx`, starting now.
+    pub fn start_seg(
+        &self,
+        ctx: Option<TraceCtx>,
+        kind: SpanKind,
+        function: Sym,
+    ) -> Option<SegRef> {
+        let inner = self.inner.as_ref()?;
+        let ctx = ctx?;
+        let idx = Self::push_span(
+            inner,
+            ctx.tok,
+            Span {
+                kind,
+                function,
+                parent: ctx.span,
+                crit: true,
+                start_ns: exec::now().0,
+                end_ns: OPEN_END,
+            },
+        );
+        if idx == u32::MAX {
+            return None;
+        }
+        Some(SegRef { tok: ctx.tok, span: idx })
+    }
+
+    /// Close a segment opened with [`Self::start_seg`].  Zero-length
+    /// segments (no virtual time passed) are removed again when they are
+    /// the newest span — the common no-wait case stays span-free.
+    pub fn end_seg(&self, seg: Option<SegRef>) {
+        let (Some(inner), Some(seg)) = (self.inner.as_ref(), seg) else {
+            return;
+        };
+        let now = exec::now().0;
+        let mut slots = inner.slots.borrow_mut();
+        let spans = &mut slots[seg.tok as usize].spans;
+        let span = &mut spans[seg.span as usize];
+        span.end_ns = now;
+        if span.start_ns == now && seg.span as usize == spans.len() - 1 {
+            spans.pop();
+        }
+    }
+
+    /// Record the component breakdown of one already-charged interval
+    /// `[start, end]`: consecutive critical sub-spans partition the
+    /// interval in `parts` order, each sized by its modeled cost in ms
+    /// (converted with the executor's own ms→ns rule); the last non-zero
+    /// part absorbs the sub-nanosecond conversion remainder so the
+    /// partition tiles the measured interval exactly.  Zero-cost parts
+    /// are skipped.
+    pub fn add_parts(
+        &self,
+        ctx: Option<TraceCtx>,
+        start: SimInstant,
+        end: SimInstant,
+        function: Sym,
+        parts: &[(SpanKind, f64)],
+    ) {
+        let (Some(inner), Some(ctx)) = (self.inner.as_ref(), ctx) else {
+            return;
+        };
+        let end_ns = end.0.max(start.0);
+        let mut cursor = start.0;
+        let last_nonzero = parts.iter().rposition(|(_, ms)| *ms > 0.0);
+        for (i, (kind, ms)) in parts.iter().enumerate() {
+            if *ms <= 0.0 {
+                continue;
+            }
+            // same conversion as exec::sleep_ms, clamped into the interval
+            let span_end = if Some(i) == last_nonzero {
+                end_ns
+            } else {
+                (cursor + (*ms * 1e6) as u64).min(end_ns)
+            };
+            Self::push_span(
+                inner,
+                ctx.tok,
+                Span {
+                    kind: *kind,
+                    function,
+                    parent: ctx.span,
+                    crit: true,
+                    start_ns: cursor,
+                    end_ns: span_end,
+                },
+            );
+            cursor = span_end;
+        }
+    }
+
+    /// Finish a successful request: close the root, run the conservation
+    /// check against the recorded `latency_ms`, and decide retention
+    /// (seeded 1-in-N or slowest-so-far in the window).
+    pub fn finish_ok(&self, ctx: Option<TraceCtx>, latency_ms: f64) {
+        let (Some(inner), Some(ctx)) = (self.inner.as_ref(), ctx) else {
+            return;
+        };
+        inner.finished.set(inner.finished.get() + 1);
+        let conserved = {
+            let mut slots = inner.slots.borrow_mut();
+            let slot = &mut slots[ctx.tok as usize];
+            let now = exec::now().0;
+            for s in slot.spans.iter_mut() {
+                if s.end_ns == OPEN_END {
+                    s.end_ns = now;
+                }
+            }
+            let ok = !slot.truncated && conservation_holds(&slot.spans, latency_ms, &inner.scratch);
+            if !ok {
+                inner
+                    .conservation_violations
+                    .set(inner.conservation_violations.get() + 1);
+            }
+            ok
+        };
+        // retention: seeded 1-in-N ...
+        let sampled = inner.rng.borrow_mut().below(inner.sample_every) == 0;
+        // ... plus the slowest-so-far request of each aggregation window
+        let t_ms = inner.slots.borrow()[ctx.tok as usize].t_ms;
+        let window = (t_ms / inner.window_ms).floor() as i64;
+        let slowest = if window != inner.window_index.get() {
+            inner.window_index.set(window);
+            inner.window_max_ms.set(latency_ms);
+            true
+        } else if latency_ms > inner.window_max_ms.get() {
+            inner.window_max_ms.set(latency_ms);
+            true
+        } else {
+            false
+        };
+        if sampled || slowest {
+            let reason =
+                if sampled { RetainReason::Sampled } else { RetainReason::WindowSlowest };
+            self.retain(ctx.tok, latency_ms, false, conserved, reason);
+        } else {
+            self.release(ctx.tok);
+        }
+    }
+
+    /// Finish a failed or timed-out request: the (partial) trace is
+    /// always retained — these are the traces operators need most.
+    pub fn finish_dropped(&self, ctx: Option<TraceCtx>) {
+        let (Some(inner), Some(ctx)) = (self.inner.as_ref(), ctx) else {
+            return;
+        };
+        inner.finished.set(inner.finished.get() + 1);
+        inner.dropped.set(inner.dropped.get() + 1);
+        {
+            let mut slots = inner.slots.borrow_mut();
+            let now = exec::now().0;
+            for s in slots[ctx.tok as usize].spans.iter_mut() {
+                if s.end_ns == OPEN_END {
+                    s.end_ns = now;
+                }
+            }
+        }
+        self.retain(ctx.tok, f64::NAN, true, false, RetainReason::Dropped);
+    }
+
+    fn retain(&self, tok: u32, latency_ms: f64, dropped: bool, conserved: bool, reason: RetainReason) {
+        let inner = self.inner.as_ref().expect("retain on disabled tracer");
+        let trace = {
+            let mut slots = inner.slots.borrow_mut();
+            let slot = &mut slots[tok as usize];
+            Trace {
+                seq: slot.seq,
+                t_ms: slot.t_ms,
+                function: slot.function,
+                latency_ms,
+                dropped,
+                truncated: slot.truncated,
+                conserved,
+                reason,
+                spans: std::mem::take(&mut slot.spans),
+            }
+        };
+        let mut retained = inner.retained.borrow_mut();
+        if retained.len() >= inner.max_traces {
+            retained.pop_front();
+        }
+        retained.push_back(trace);
+        inner.retained_total.set(inner.retained_total.get() + 1);
+        inner.free.borrow_mut().push(tok);
+    }
+
+    fn release(&self, tok: u32) {
+        let inner = self.inner.as_ref().expect("release on disabled tracer");
+        inner.slots.borrow_mut()[tok as usize].spans.clear();
+        inner.free.borrow_mut().push(tok);
+    }
+
+    /// Requests whose recording began.
+    pub fn started(&self) -> u64 {
+        self.inner.as_ref().map(|i| i.started.get()).unwrap_or(0)
+    }
+
+    /// Requests whose recording finished (ok or dropped).
+    pub fn finished(&self) -> u64 {
+        self.inner.as_ref().map(|i| i.finished.get()).unwrap_or(0)
+    }
+
+    /// Traces retained over the run's lifetime (the ring may since have
+    /// evicted some).
+    pub fn retained_total(&self) -> u64 {
+        self.inner.as_ref().map(|i| i.retained_total.get()).unwrap_or(0)
+    }
+
+    /// Finished traces whose critical path did **not** sum bit-for-bit to
+    /// the recorded latency.  Always 0 unless the handler grew an
+    /// unbracketed await — the self-check `figure12` and the property
+    /// suite pin.
+    pub fn conservation_violations(&self) -> u64 {
+        self.inner.as_ref().map(|i| i.conservation_violations.get()).unwrap_or(0)
+    }
+
+    /// Snapshot of the retained-trace ring (oldest first).
+    pub fn snapshot(&self) -> Vec<Trace> {
+        match &self.inner {
+            Some(i) => i.retained.borrow().iter().cloned().collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Approximate tracer heap footprint (bytes): pooled slot buffers plus
+    /// the retained ring — the `trace_bytes` bound `figure9` records.
+    pub fn approx_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let Some(inner) = self.inner.as_ref() else {
+            return 0;
+        };
+        let slots = inner.slots.borrow();
+        let mut b = slots.capacity() * size_of::<Slot>();
+        b += slots.iter().map(|s| s.spans.capacity() * size_of::<Span>()).sum::<usize>();
+        b += inner.free.borrow().capacity() * size_of::<u32>();
+        let retained = inner.retained.borrow();
+        b += retained.capacity() * size_of::<Trace>();
+        b += retained.iter().map(|t| t.spans.capacity() * size_of::<Span>()).sum::<usize>();
+        b += inner.scratch.borrow().capacity() * size_of::<u64>();
+        b
+    }
+
+    /// Per-window latency-breakdown ledger over the retained traces, in
+    /// CSV form: `window_ms,function,component,total_ms,share_of_e2e`.
+    ///
+    /// One row per (aggregation window, entry function, component kind):
+    /// `total_ms` sums every component span of that kind across the
+    /// window's retained traces for that entry route; `share_of_e2e`
+    /// divides by the same traces' summed end-to-end time.  Shares of one
+    /// route's rows sum to 1 for sequential call chains; under concurrent
+    /// sync fan-out component *work* can exceed e2e *wall* time, so
+    /// shares may sum past 1 (work vs span, as in any trace analytics).
+    /// Dropped (partial) traces are excluded.
+    pub fn latency_breakdown_csv(&self) -> String {
+        use std::collections::BTreeMap;
+        let mut out = String::from("window_ms,function,component,total_ms,share_of_e2e\n");
+        let Some(inner) = self.inner.as_ref() else {
+            return out;
+        };
+        // (window, entry route, kind name) -> summed ns
+        let mut by_component: BTreeMap<(i64, Sym, &'static str), u128> = BTreeMap::new();
+        let mut e2e: BTreeMap<(i64, Sym), u128> = BTreeMap::new();
+        for trace in inner.retained.borrow().iter() {
+            if trace.dropped {
+                continue;
+            }
+            let window = (trace.t_ms / inner.window_ms).floor() as i64;
+            let route = trace.function;
+            let root_ns = trace.spans.first().map(|s| s.duration_ns()).unwrap_or(0);
+            *e2e.entry((window, route)).or_insert(0) += root_ns as u128;
+            for span in &trace.spans {
+                if span.kind.is_component() {
+                    *by_component.entry((window, route, span.kind.name())).or_insert(0) +=
+                        span.duration_ns() as u128;
+                }
+            }
+        }
+        for ((window, route, component), ns) in &by_component {
+            let total = *e2e.get(&(*window, *route)).unwrap_or(&0);
+            let share = if total > 0 { *ns as f64 / total as f64 } else { f64::NAN };
+            out.push_str(&format!(
+                "{},{},{},{:.6},{:.6}\n",
+                *window as f64 * inner.window_ms,
+                route.as_str(),
+                component,
+                *ns as f64 / 1e6,
+                share
+            ));
+        }
+        out
+    }
+
+    /// Retained traces as Chrome trace-event JSON (load in
+    /// `chrome://tracing` / Perfetto).  One `tid` per request; `ts`/`dur`
+    /// in microseconds of virtual time.
+    pub fn chrome_trace_json(&self) -> String {
+        let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        if let Some(inner) = self.inner.as_ref() {
+            for trace in inner.retained.borrow().iter() {
+                for span in &trace.spans {
+                    if !first {
+                        out.push(',');
+                    }
+                    first = false;
+                    out.push_str(&format!(
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\
+                         \"dur\":{:.3},\"pid\":0,\"tid\":{},\"args\":{{\"function\":\"{}\",\
+                         \"crit\":{},\"reason\":\"{}\"}}}}",
+                        span.kind.name(),
+                        if span.crit { "crit" } else { "frame" },
+                        span.start_ns as f64 / 1e3,
+                        span.duration_ns() as f64 / 1e3,
+                        trace.seq,
+                        span.function.as_str(),
+                        span.crit,
+                        trace.reason.name(),
+                    ));
+                }
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// The finish-time conservation check: every span with critical children
+/// must be tiled by them exactly, and the root's interval must convert to
+/// the recorded latency bit-for-bit (same nanos→ms arithmetic as the
+/// workload's measurement).
+fn conservation_holds(spans: &[Span], latency_ms: f64, scratch: &RefCell<Vec<u64>>) -> bool {
+    let Some(root) = spans.first() else {
+        return false;
+    };
+    let root_ms = std::time::Duration::from_nanos(root.duration_ns()).as_secs_f64() * 1e3;
+    if root_ms.to_bits() != latency_ms.to_bits() {
+        return false;
+    }
+    let mut sums = scratch.borrow_mut();
+    sums.clear();
+    sums.resize(spans.len(), 0);
+    let mut has_crit_child = vec![false; spans.len()];
+    for span in spans {
+        if span.crit && span.parent != NO_PARENT {
+            sums[span.parent as usize] += span.duration_ns();
+            has_crit_child[span.parent as usize] = true;
+        }
+    }
+    for (i, span) in spans.iter().enumerate() {
+        if has_crit_child[i] && sums[i] != span.duration_ns() {
+            return false;
+        }
+    }
+    true
+}
+
+/// Structural well-formedness + conservation oracle shared by `figure12`
+/// and the property suite.  Checks, for a finished non-dropped trace:
+///
+/// 1. span 0 is the `Request` root and every other span's parent precedes
+///    it (indices form a forest rooted at 0);
+/// 2. every span's interval is contained in its parent's;
+/// 3. the critical children of any span are non-overlapping in recording
+///    order and **tile** the parent exactly (no gaps: durations sum to
+///    the parent's duration);
+/// 4. unless the trace is truncated, the critical path sums bit-for-bit
+///    to the recorded latency.
+///
+/// Returns a description of the first violation.
+pub fn verify(trace: &Trace) -> Result<(), String> {
+    let spans = &trace.spans;
+    let Some(root) = spans.first() else {
+        return Err("trace has no spans".into());
+    };
+    if root.kind != SpanKind::Request || root.parent != NO_PARENT {
+        return Err("span 0 is not the Request root".into());
+    }
+    let mut crit_sum: Vec<u64> = vec![0; spans.len()];
+    let mut crit_any: Vec<bool> = vec![false; spans.len()];
+    let mut crit_cursor: Vec<u64> = spans.iter().map(|s| s.start_ns).collect();
+    for (i, span) in spans.iter().enumerate() {
+        if span.end_ns < span.start_ns {
+            return Err(format!("span {i} ({}) ends before it starts", span.kind.name()));
+        }
+        if i == 0 {
+            continue;
+        }
+        let p = span.parent as usize;
+        if span.parent == NO_PARENT || p >= i {
+            return Err(format!("span {i} has invalid parent {}", span.parent));
+        }
+        let parent = &spans[p];
+        if span.start_ns < parent.start_ns || span.end_ns > parent.end_ns {
+            return Err(format!(
+                "span {i} ({}) [{}, {}] escapes parent {} ({}) [{}, {}]",
+                span.kind.name(),
+                span.start_ns,
+                span.end_ns,
+                p,
+                parent.kind.name(),
+                parent.start_ns,
+                parent.end_ns
+            ));
+        }
+        if span.crit {
+            if span.start_ns < crit_cursor[p] {
+                return Err(format!(
+                    "critical span {i} ({}) overlaps a sibling on the critical path \
+                     (starts {} before cursor {})",
+                    span.kind.name(),
+                    span.start_ns,
+                    crit_cursor[p]
+                ));
+            }
+            crit_cursor[p] = span.end_ns;
+            crit_sum[p] += span.duration_ns();
+            crit_any[p] = true;
+        }
+    }
+    for (i, span) in spans.iter().enumerate() {
+        if crit_any[i] && crit_sum[i] != span.duration_ns() {
+            return Err(format!(
+                "span {i} ({}) duration {} ns is not tiled by its critical children \
+                 (sum {} ns)",
+                span.kind.name(),
+                span.duration_ns(),
+                crit_sum[i]
+            ));
+        }
+    }
+    if !trace.dropped && !trace.truncated {
+        let root_ms =
+            std::time::Duration::from_nanos(root.duration_ns()).as_secs_f64() * 1e3;
+        if root_ms.to_bits() != trace.latency_ms.to_bits() {
+            return Err(format!(
+                "critical path {root_ms} ms != recorded latency {} ms (bitwise)",
+                trace.latency_ms
+            ));
+        }
+        if !trace.conserved {
+            return Err("tracer flagged the trace as non-conserved".into());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::run_virtual;
+
+    fn params(sample_every: u64) -> TraceParams {
+        TraceParams { sample_every, max_traces: 64, window_ms: 1_000.0 }
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let t = Tracer::new(&params(0), 7);
+        assert!(!t.enabled());
+        assert!(t.begin_request(Sym::intern("f"), 0.0).is_none());
+        t.finish_ok(None, 1.0);
+        t.finish_dropped(None);
+        assert_eq!(t.started(), 0);
+        assert_eq!(t.approx_bytes(), 0);
+        assert_eq!(t.snapshot().len(), 0);
+        assert!(t.latency_breakdown_csv().ends_with("share_of_e2e\n"));
+    }
+
+    #[test]
+    fn trace_records_and_conserves_a_synthetic_request() {
+        run_virtual(async {
+            let t = Tracer::new(&params(1), 7);
+            let f = Sym::intern("syn");
+            let t0 = exec::now();
+            let ctx = t.begin_request(f, 0.0);
+            assert!(ctx.is_some());
+            let frame = t.open_frame(ctx, SpanKind::Invoke, f, true);
+            let e0 = exec::now();
+            exec::sleep_ms(10.0).await;
+            t.add_parts(
+                frame,
+                e0,
+                exec::now(),
+                f,
+                &[(SpanKind::Gateway, 4.0), (SpanKind::Network, 6.0)],
+            );
+            let seg = t.start_seg(frame, SpanKind::SelfTime, f);
+            exec::sleep_ms(5.0).await;
+            t.end_seg(seg);
+            t.close_frame(frame);
+            let latency_ms = exec::now().duration_since(t0).as_secs_f64() * 1e3;
+            t.finish_ok(ctx, latency_ms);
+            assert_eq!(t.conservation_violations(), 0);
+            let traces = t.snapshot();
+            assert_eq!(traces.len(), 1);
+            let trace = &traces[0];
+            assert!(trace.conserved);
+            verify(trace).unwrap();
+            // root + invoke + gateway + network + self
+            assert_eq!(trace.spans.len(), 5);
+            let kinds: Vec<&str> = trace.spans.iter().map(|s| s.kind.name()).collect();
+            assert_eq!(kinds, vec!["request", "invoke", "gateway", "network", "self"]);
+            // component partition is exact
+            assert_eq!(trace.spans[2].duration_ns(), 4_000_000);
+            assert_eq!(trace.spans[3].duration_ns(), 6_000_000);
+            let csv = t.latency_breakdown_csv();
+            assert!(csv.contains("syn,gateway"), "{csv}");
+            assert!(csv.contains("syn,network"), "{csv}");
+            let chrome = t.chrome_trace_json();
+            assert!(chrome.contains("\"name\":\"gateway\""), "{chrome}");
+            assert!(chrome.ends_with("]}"));
+        });
+    }
+
+    #[test]
+    fn zero_length_segments_are_elided() {
+        run_virtual(async {
+            let t = Tracer::new(&params(1), 7);
+            let f = Sym::intern("z");
+            let ctx = t.begin_request(f, 0.0);
+            let frame = t.open_frame(ctx, SpanKind::Invoke, f, true);
+            let seg = t.start_seg(frame, SpanKind::ColdWait, f);
+            t.end_seg(seg); // no time passed
+            t.close_frame(frame);
+            t.finish_ok(ctx, 0.0);
+            let traces = t.snapshot();
+            assert_eq!(traces[0].spans.len(), 2, "{:?}", traces[0].spans);
+        });
+    }
+
+    #[test]
+    fn dropped_requests_are_always_retained_and_sampling_is_seeded() {
+        async fn drive(t: &Tracer) {
+            let f = Sym::intern("d");
+            for i in 0..20 {
+                let ctx = t.begin_request(f, i as f64 * 10.0);
+                exec::sleep_ms(1.0).await;
+                if i % 2 == 0 {
+                    t.finish_dropped(ctx);
+                } else {
+                    t.finish_ok(ctx, 1.0);
+                }
+            }
+        }
+        run_virtual(async {
+            // sample_every large: the 1-in-N draw almost never fires, yet
+            // every dropped request and each window's first/slowest stay
+            let t = Tracer::new(&params(1_000_000), 7);
+            drive(&t).await;
+            let traces = t.snapshot();
+            let dropped = traces.iter().filter(|t| t.dropped).count();
+            assert_eq!(dropped, 10);
+            // same seed, same retention decisions
+            let t2 = Tracer::new(&params(1_000_000), 7);
+            drive(&t2).await;
+            let a: Vec<u64> = t.snapshot().iter().map(|x| x.seq).collect();
+            let b: Vec<u64> = t2.snapshot().iter().map(|x| x.seq).collect();
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn retained_ring_is_bounded() {
+        run_virtual(async {
+            let mut p = params(1);
+            p.max_traces = 8;
+            let t = Tracer::new(&p, 7);
+            let f = Sym::intern("ring");
+            for i in 0..50 {
+                let ctx = t.begin_request(f, i as f64);
+                exec::sleep_ms(1.0).await;
+                t.finish_ok(ctx, 1.0);
+            }
+            assert_eq!(t.snapshot().len(), 8);
+            assert_eq!(t.retained_total(), 50);
+            assert!(t.approx_bytes() > 0);
+        });
+    }
+
+    #[test]
+    fn verify_rejects_malformed_trees() {
+        let f = Sym::intern("bad");
+        let mk = |spans: Vec<Span>| Trace {
+            seq: 0,
+            t_ms: 0.0,
+            function: f,
+            latency_ms: 1.0,
+            dropped: false,
+            truncated: false,
+            conserved: true,
+            reason: RetainReason::Sampled,
+            spans,
+        };
+        let root = Span {
+            kind: SpanKind::Request,
+            function: f,
+            parent: NO_PARENT,
+            crit: false,
+            start_ns: 0,
+            end_ns: 1_000_000,
+        };
+        // child escapes the parent interval
+        let escape = mk(vec![
+            root,
+            Span {
+                kind: SpanKind::Invoke,
+                function: f,
+                parent: 0,
+                crit: true,
+                start_ns: 0,
+                end_ns: 2_000_000,
+            },
+        ]);
+        assert!(verify(&escape).unwrap_err().contains("escapes"));
+        // critical children leave a gap
+        let gap = mk(vec![
+            root,
+            Span {
+                kind: SpanKind::Invoke,
+                function: f,
+                parent: 0,
+                crit: true,
+                start_ns: 0,
+                end_ns: 500_000,
+            },
+        ]);
+        assert!(verify(&gap).unwrap_err().contains("not tiled"));
+        // a correct tiling passes
+        let good = mk(vec![
+            root,
+            Span {
+                kind: SpanKind::Invoke,
+                function: f,
+                parent: 0,
+                crit: true,
+                start_ns: 0,
+                end_ns: 1_000_000,
+            },
+        ]);
+        verify(&good).unwrap();
+    }
+}

@@ -83,6 +83,10 @@ pub async fn run_targeted(
     let function: Rc<String> = Rc::new(
         target.map(str::to_string).unwrap_or_else(|| platform.app.entry.clone()),
     );
+    // trace attribution key for the route under load (the driver — not the
+    // dispatcher — owns the trace lifecycle: a timed-out request's future
+    // is dropped mid-flight, so only this task can still finalize it)
+    let fn_sym = crate::util::intern::Sym::intern(&function);
     let start = exec::now();
     let payload_len = platform.payload_len();
     let ok = Rc::new(RefCell::new(0u64));
@@ -113,9 +117,10 @@ pub async fn run_targeted(
         handles.push(exec::spawn_on(entry_shard, async move {
             let t0 = exec::now();
             let arrival_ms = platform.metrics.rel_now_ms();
+            let trace = platform.tracer.begin_request(fn_sym, arrival_ms);
             let result = exec::timeout(
                 std::time::Duration::from_nanos((timeout_ms * 1e6) as u64),
-                platform.invoke_function(&function, payload),
+                platform.invoke_function_traced(&function, payload, trace),
             )
             .await;
             let latency_ms = exec::now().duration_since(t0).as_secs_f64() * 1e3;
@@ -124,10 +129,22 @@ pub async fn run_targeted(
                     *ok.borrow_mut() += 1;
                     latencies.borrow_mut().push(latency_ms);
                     platform.metrics.record_latency(arrival_ms, latency_ms);
+                    platform.tracer.finish_ok(trace, latency_ms);
                 }
-                Ok(Err(_)) | Err(_) => {
+                Ok(Err(e)) => {
                     *failed.borrow_mut() += 1;
                     platform.metrics.bump("request_failures");
+                    // drop-cause tagging (ISSUE 9): the aggregate counter
+                    // keeps its seed semantics; the per-cause counter makes
+                    // the failure auditable from counters_csv alone
+                    platform.metrics.bump(e.drop_cause());
+                    platform.tracer.finish_dropped(trace);
+                }
+                Err(_) => {
+                    *failed.borrow_mut() += 1;
+                    platform.metrics.bump("request_failures");
+                    platform.metrics.bump("failed_timeout");
+                    platform.tracer.finish_dropped(trace);
                 }
             }
         }));
@@ -204,6 +221,47 @@ mod tests {
             let fn_lat = p.metrics.fn_latency_series();
             assert!(fn_lat.iter().all(|s| s.function == "s2"), "{fn_lat:?}");
             assert_eq!(fn_lat.len(), 10);
+            p.shutdown();
+        });
+    }
+
+    #[test]
+    fn traced_run_conserves_every_trace_and_never_perturbs_the_schedule() {
+        run_virtual(async {
+            let wl =
+                WorkloadConfig { requests: 30, rate_rps: 20.0, seed: 5, timeout_ms: 60_000.0 };
+            // untraced twin first: the baseline schedule
+            let cfg0 = PlatformConfig::tiny().with_compute(ComputeMode::Disabled).vanilla();
+            let p0 = crate::platform::Platform::deploy(apps::chain(3), cfg0).await.unwrap();
+            let r0 = run(Rc::clone(&p0), wl.clone()).await.unwrap();
+            p0.shutdown();
+
+            let mut cfg = PlatformConfig::tiny().with_compute(ComputeMode::Disabled).vanilla();
+            cfg.trace.sample_every = 1;
+            cfg.trace.max_traces = 64;
+            let p = crate::platform::Platform::deploy(apps::chain(3), cfg).await.unwrap();
+            let report = run(Rc::clone(&p), wl).await.unwrap();
+            assert_eq!(report.failed, 0);
+            // every request retained (sample 1), every trace exact
+            assert_eq!(p.tracer.conservation_violations(), 0);
+            let traces = p.tracer.snapshot();
+            assert_eq!(traces.len(), 30);
+            for t in &traces {
+                crate::trace::verify(t).unwrap_or_else(|e| panic!("{e}"));
+                assert!(t.conserved);
+            }
+            // chain(3) vanilla: remote hops appear in the span taxonomy
+            let csv = p.tracer.latency_breakdown_csv();
+            assert!(csv.contains(",network,"), "{csv}");
+            assert!(csv.contains(",dispatch,"), "{csv}");
+            assert!(csv.contains(",self,"), "{csv}");
+            // tracing is schedule-transparent: bit-identical latencies
+            assert_eq!(
+                report.latency.median().to_bits(),
+                r0.latency.median().to_bits(),
+                "tracing must not perturb the schedule"
+            );
+            assert_eq!(report.latency.mean().to_bits(), r0.latency.mean().to_bits());
             p.shutdown();
         });
     }

@@ -432,6 +432,120 @@ fn prop_controller_loop_fuzz_preserves_invariants_and_never_flaps() {
 }
 
 #[test]
+fn prop_trace_conservation_under_policy_churn() {
+    // ISSUE 9 satellite property: with sampling at 1-in-1, for ANY random
+    // DAG app, ANY cluster shape, and ANY interleaving of fuse / split /
+    // evict / migrate pipelines racing open-loop traffic, every retained
+    // trace is a well-formed span tree and every successful request's
+    // critical path sums **bit-for-bit** to its recorded e2e latency —
+    // cold-start waits, cutover stalls, inline hops and cross-node
+    // surcharges included.  The exactness contract is what makes the
+    // latency breakdown trustworthy; any drift (a span double-charged, a
+    // stall untracked) fails here before it can skew an experiment.
+    check("trace conservation under churn", 12, |g| {
+        let app = random_app(g);
+        let kind = *g.choose(&[PlatformKind::Tiny, PlatformKind::Kube]);
+        let mut cfg = fast_cfg(g, kind);
+        cfg.cluster.nodes = g.usize(1, 3);
+        cfg.fusion.feedback_interval_ms = 0.0; // ops driven by hand
+        cfg.trace.sample_every = 1;
+        cfg.trace.max_traces = 4096;
+        let ops = g.usize(3, 8);
+        let op_seed = g.rng().next_u64();
+        let wl = WorkloadConfig {
+            requests: g.usize(30, 90) as u64,
+            rate_rps: g.f64(10.0, 50.0),
+            seed: g.rng().next_u64(),
+            timeout_ms: 120_000.0,
+        };
+        let n_requests = wl.requests;
+        run_virtual(async move {
+            // vanilla platform: the manual pipelines below are the only
+            // topology mutations, all racing the traced traffic
+            let p = Platform::deploy(app, cfg.vanilla()).await.unwrap();
+            let merger = manual_merger(&p);
+            let migrator = Migrator::new(
+                p.cluster.clone(),
+                Deployer::direct(p.cluster.clone()),
+                p.gateway.clone(),
+                p.metrics.clone(),
+                Rc::clone(&p.config),
+            );
+            let n_nodes = p.cluster.node_count();
+            let names: Vec<String> = p.app.functions().map(|f| f.name.clone()).collect();
+            let sync_edges: Vec<(String, String)> = p
+                .app
+                .functions()
+                .flat_map(|f| {
+                    f.calls
+                        .iter()
+                        .filter(|c| c.mode == CallMode::Sync)
+                        .map(|c| (f.name.clone(), c.target.clone()))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            let traffic = provuse::exec::spawn(workload::run(Rc::clone(&p), wl));
+            let mut g = Gen::replay(op_seed);
+            for _ in 0..ops {
+                provuse::exec::sleep_ms(g.f64(200.0, 2_500.0)).await;
+                match g.weighted(&[3.0, 2.0, 2.0, 2.0]) {
+                    0 => {
+                        if !sync_edges.is_empty() {
+                            let (caller, callee) = g.choose(&sync_edges).clone();
+                            let _ = merger.handle_fuse(&caller, &callee).await;
+                        }
+                    }
+                    1 => {
+                        let groups = p.fused_groups();
+                        if !groups.is_empty() {
+                            let fns = sorted_members(g.choose(&groups));
+                            let _ = merger.handle_split(&fns, SplitReason::RamCap).await;
+                        }
+                    }
+                    2 => {
+                        let groups = p.fused_groups();
+                        if !groups.is_empty() {
+                            let fns = sorted_members(g.choose(&groups));
+                            let victim = g.choose(&fns).clone();
+                            let _ = merger
+                                .handle_evict(&fns, &victim, SplitReason::CostModel)
+                                .await;
+                        }
+                    }
+                    3 => {
+                        let probe = g.choose(&names).clone();
+                        let group = p.group_members(&probe);
+                        let to = NodeId(g.usize(0, n_nodes - 1) as u64);
+                        let _ = migrator.migrate(&group, to, "prop").await;
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            let report = traffic.await.unwrap();
+            assert_eq!(report.failed, 0, "dropped requests under churn");
+            provuse::exec::sleep_ms(25_000.0).await; // drains settle
+
+            assert_eq!(p.tracer.conservation_violations(), 0);
+            let traces = p.tracer.snapshot();
+            assert_eq!(
+                traces.len() as u64,
+                n_requests,
+                "1-in-1 sampling must retain every request"
+            );
+            for t in &traces {
+                provuse::trace::verify(t).unwrap_or_else(|e| panic!("{e}"));
+                assert!(!t.dropped, "no request dropped, no trace may be");
+                assert!(
+                    t.conserved,
+                    "critical path must sum bit-for-bit to the e2e latency"
+                );
+            }
+            p.shutdown();
+        });
+    });
+}
+
+#[test]
 fn prop_cluster_invariants_hold_across_placements_and_migrations() {
     // ISSUE 4 satellite: for ANY node count, placement policy, capacity
     // regime, and traffic, with random fuse + migrate pipelines woven

@@ -1,0 +1,133 @@
+//! `cargo bench --bench shard_scale` — threaded-core scaling (ISSUE 10):
+//! the same seeded chain-workload tenant fleet driven by 1, 2, and 4
+//! worker threads, printing requests/sec plus per-worker epoch-window and
+//! stall counters (barrier wait as % of wall) so lookahead regressions
+//! are visible at a glance, and asserting throughput is monotone in the
+//! worker count (with a noise tolerance) whenever the host actually has
+//! the cores to back the added workers.
+//!
+//! The fleet shape is fixed at 4 tenant lanes so every worker count
+//! divides it evenly and the 4-worker run is one lane per thread — the
+//! shape the figure9 `--threads on` acceptance point uses.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::time::Instant;
+
+use provuse::apps;
+use provuse::config::{ComputeMode, MergePolicyKind, PlatformConfig, WorkloadConfig};
+use provuse::exec;
+use provuse::exec::threads::run_fleet;
+use provuse::metrics::RecordingLevel;
+use provuse::platform::Platform;
+use provuse::workload;
+
+const TENANTS: usize = 4;
+const REQUESTS_PER_TENANT: u64 = 2_000;
+const SEED: u64 = 77;
+
+/// Virtual batch window the fleet paces itself with (the tenants are
+/// independent, so the conservative license is unbounded).
+const PACED_WINDOW_NS: u64 = 250_000_000;
+
+/// One tenant lane: a single-node chain(3) platform under a
+/// tenant-derived seed carrying its share of the workload.  Returns the
+/// number of failed requests (asserted zero by the driver).
+fn tenant_job(tenant: usize) -> impl FnOnce() -> Pin<Box<dyn Future<Output = u64>>> + Send {
+    move || {
+        Box::pin(async move {
+            let mut cfg = PlatformConfig::tiny()
+                .with_compute(ComputeMode::Disabled)
+                .with_seed(SEED ^ 0x9E3779B97F4A7C15u64.wrapping_mul(tenant as u64 + 1))
+                .with_recording(RecordingLevel::Windowed);
+            cfg.latency.image_build_ms = 300.0;
+            cfg.latency.boot_ms = 150.0;
+            cfg.fusion.min_observations = 3;
+            cfg.fusion.feedback_interval_ms = 1_000.0;
+            cfg.fusion.merge_policy = MergePolicyKind::CostModel;
+            cfg.cluster.nodes = 1;
+            let seed = cfg.seed;
+            let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+            let wl = WorkloadConfig {
+                requests: REQUESTS_PER_TENANT,
+                rate_rps: 400.0,
+                seed,
+                timeout_ms: 60_000.0,
+            };
+            let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+            exec::sleep_ms(10_000.0).await;
+            p.shutdown();
+            report.failed
+        })
+    }
+}
+
+/// Drive the fleet on `workers` threads; returns wall requests/sec.
+fn run_at(workers: usize) -> f64 {
+    let mut jobs: Vec<Vec<_>> = (0..workers).map(|_| Vec::new()).collect();
+    for t in 0..TENANTS {
+        jobs[t % workers].push(tenant_job(t));
+    }
+    let wall = Instant::now();
+    let fleet = run_fleet(PACED_WINDOW_NS, jobs).expect("fleet must complete");
+    let wall_s = wall.elapsed().as_secs_f64();
+    let failed: u64 = fleet.results.iter().flatten().sum();
+    assert_eq!(failed, 0, "fleet dropped requests at {workers} workers");
+    let total = (TENANTS as u64 * REQUESTS_PER_TENANT) as f64;
+    let rps = total / wall_s;
+    println!(
+        "workers {workers}: {total:.0} requests in {wall_s:.2} s -> {rps:.0} req/s \
+         ({} epoch windows)",
+        fleet.windows
+    );
+    for ws in &fleet.stats {
+        println!(
+            "  worker {}: {} lanes, {} windows, {} epochs, stall {:.1}% of wall",
+            ws.worker,
+            ws.jobs,
+            ws.windows,
+            ws.epochs,
+            ws.stall_pct()
+        );
+    }
+    rps
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("== shard scale (threaded simulation core, {cores} host cores) ==");
+
+    // warmup: interner tables, thread locals, and other one-time global
+    // growth land here, not in the measured runs
+    let _ = run_at(1);
+
+    let r1 = run_at(1);
+    let r2 = run_at(2);
+    let r4 = run_at(4);
+
+    println!(
+        "\nscaling: 1->2 workers {:.2}x, 2->4 workers {:.2}x, 1->4 workers {:.2}x",
+        r2 / r1,
+        r4 / r2,
+        r4 / r1
+    );
+
+    // Monotone-throughput gate, tolerance 0.85 for scheduler noise.  Only
+    // binding where the host can actually run the workers concurrently —
+    // on a smaller box the numbers above are informational.
+    if cores >= 2 {
+        assert!(
+            r2 >= 0.85 * r1,
+            "2-worker throughput regressed vs 1 worker: {r2:.0} < 0.85 * {r1:.0}"
+        );
+    }
+    if cores >= 4 {
+        assert!(
+            r4 >= 0.85 * r2,
+            "4-worker throughput regressed vs 2 workers: {r4:.0} < 0.85 * {r2:.0}"
+        );
+    }
+
+    println!("shard_scale bench complete");
+}

@@ -56,6 +56,11 @@ pub enum Error {
 
     /// Error bubbled up from the `xla` layer.
     Xla(String),
+
+    /// A worker thread of the threaded simulation core panicked (or the
+    /// cohort deadlocked); the epoch gate was poisoned and the run
+    /// aborted.  Carries the dying shard and its panic payload.
+    ShardPanicked { shard: usize, payload: String },
 }
 
 impl Error {
@@ -99,6 +104,9 @@ impl fmt::Display for Error {
             Error::Request(msg) => write!(f, "request failed: {msg}"),
             Error::Io(err) => write!(f, "{err}"),
             Error::Xla(msg) => write!(f, "xla: {msg}"),
+            Error::ShardPanicked { shard, payload } => {
+                write!(f, "shard {shard} panicked: {payload}")
+            }
         }
     }
 }
@@ -124,6 +132,12 @@ impl From<xla::Error> for Error {
     }
 }
 
+impl From<crate::exec::shard::ShardPanic> for Error {
+    fn from(p: crate::exec::shard::ShardPanic) -> Self {
+        Error::ShardPanicked { shard: p.shard, payload: p.payload }
+    }
+}
+
 pub type Result<T> = std::result::Result<T, Error>;
 
 #[cfg(test)]
@@ -138,6 +152,18 @@ mod tests {
             "invalid lifecycle transition for instance 3: Healthy -> Terminated"
         );
         assert_eq!(Error::SplitAborted("x".into()).to_string(), "split aborted: x");
+        assert_eq!(
+            Error::ShardPanicked { shard: 2, payload: "boom".into() }.to_string(),
+            "shard 2 panicked: boom"
+        );
+    }
+
+    #[test]
+    fn shard_panic_converts_from_the_gate_poison() {
+        let poison = crate::exec::shard::ShardPanic { shard: 1, payload: "p".into() };
+        let err: Error = poison.into();
+        assert!(matches!(err, Error::ShardPanicked { shard: 1, .. }));
+        assert_eq!(err.drop_cause(), "failed_other");
     }
 
     #[test]

@@ -24,6 +24,7 @@
 pub mod channel;
 pub mod shard;
 pub mod sync;
+pub mod threads;
 
 use std::cell::{Cell, RefCell};
 use std::cmp::Reverse;
@@ -234,6 +235,11 @@ struct Inner {
     /// virtual-clock advances completed (one per discrete-event epoch) —
     /// the unit the threaded milestone's `shard::EpochGate` synchronizes on
     epochs: Cell<u64>,
+    /// the lane [`current_shard`] reports while this executor runs outside
+    /// task polls — 0 for ordinary executors; a [`Stepper`] pinned to a
+    /// worker lane by [`Stepper::on_lane`] reports that lane instead, so
+    /// threaded-core tenants see the shard that hosts them
+    home_lane: Cell<u32>,
 }
 
 thread_local! {
@@ -300,6 +306,7 @@ impl Executor {
                 wake_queue: Arc::new(WakeQueue::default()),
                 sharded,
                 epochs: Cell::new(0),
+                home_lane: Cell::new(0),
             }),
         }
     }
@@ -481,11 +488,12 @@ struct CurrentGuard {
 impl CurrentGuard {
     fn install(inner: Rc<Inner>) -> Self {
         let exec_id = inner.exec_id;
+        let home_lane = inner.home_lane.get();
         let prev = CURRENT.with(|c| c.borrow_mut().replace(inner));
         let prev_exec = ACTIVE_EXEC.with(|c| c.replace(exec_id));
-        // a nested block_on starts on its own shard 0; the outer
-        // executor's lane is restored on drop
-        let prev_shard = CURRENT_SHARD.with(|c| c.replace(0));
+        // a nested block_on starts on its own home lane (shard 0 for
+        // ordinary executors); the outer executor's lane is restored on drop
+        let prev_shard = CURRENT_SHARD.with(|c| c.replace(home_lane));
         CurrentGuard { prev, prev_exec, prev_shard, exec_id }
     }
 }
@@ -881,6 +889,155 @@ pub fn run_virtual<T: 'static>(fut: impl Future<Output = T> + 'static) -> T {
     Executor::new(Mode::Virtual).block_on(fut)
 }
 
+// ---------------------------------------------------------------------------
+// resumable execution (the threaded core's per-lane drain loop)
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`Stepper::pump_until`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pump {
+    /// the root future completed (its value is held until
+    /// [`Stepper::into_result`])
+    Done,
+    /// no runnable work at or before the window bound; `next_deadline` is
+    /// the earliest pending timer (ns), `progressed` whether anything was
+    /// polled or fired during this pump — the [`shard::LaneReport`] pair
+    /// the threaded core hands its governor
+    Idle { next_deadline: Option<u64>, progressed: bool },
+}
+
+/// A virtual-clock executor driven in bounded slices instead of to
+/// completion: [`Stepper::pump_until`] runs the scheduler loop exactly as
+/// [`Executor::block_on`] would, but stops advancing the clock at a caller
+/// -supplied bound and reports back instead of panicking when it runs dry.
+///
+/// This is the per-lane drain loop of the threaded simulation core
+/// ([`threads`]): each worker thread owns the steppers of the lanes
+/// assigned to it and pumps them window by window under the
+/// [`shard::WindowGovernor`].  Between pumps, wakes from other threads
+/// land in the executor's thread-safe wake queue and are drained by the
+/// next pump; everything else about the schedule — poll order, timer
+/// order, clock arithmetic — is byte-for-byte the single-threaded loop,
+/// which is what keeps a pumped schedule bit-identical to a `block_on` of
+/// the same root (window boundaries never create or reorder clock points).
+pub struct Stepper<T> {
+    exec: Executor,
+    result: Rc<RefCell<Option<T>>>,
+    done: bool,
+}
+
+impl<T: 'static> Stepper<T> {
+    /// Stepper for `root` on a fresh single-lane virtual executor.
+    pub fn new(root: impl Future<Output = T> + 'static) -> Self {
+        Self::on_lane(0, root)
+    }
+
+    /// Like [`Stepper::new`], with [`current_shard`] reporting `lane`
+    /// inside this stepper's polls — how threaded-core tenants observe
+    /// the worker lane hosting them.
+    pub fn on_lane(lane: u32, root: impl Future<Output = T> + 'static) -> Self {
+        let exec = Executor::new(Mode::Virtual);
+        exec.inner.home_lane.set(lane);
+        let result: Rc<RefCell<Option<T>>> = Rc::new(RefCell::new(None));
+        let result2 = Rc::clone(&result);
+        let root_id = exec.inner.spawn_inner_on(0, async move {
+            *result2.borrow_mut() = Some(root.await);
+        });
+        exec.inner.wake_spawned(root_id, 0);
+        Stepper { exec, result, done: false }
+    }
+
+    /// Run until the root completes or nothing is runnable at or before
+    /// `bound_ns` on the virtual clock.  Mirrors the unsharded
+    /// `block_on` loop exactly, except the idle step refuses to advance
+    /// the clock past the bound.  Safe to call again after `Idle` (the
+    /// usual case) and after `Done` (returns `Done` immediately).
+    pub fn pump_until(&mut self, bound_ns: u64) -> Pump {
+        if self.done {
+            return Pump::Done;
+        }
+        let guard = CurrentGuard::install(Rc::clone(&self.exec.inner));
+        let inner = &self.exec.inner;
+        let mut ready: Vec<u64> = Vec::new();
+        let mut progressed = false;
+        let outcome = loop {
+            {
+                let mut incoming = inner.incoming.borrow_mut();
+                if !incoming.is_empty() {
+                    let mut tasks = inner.tasks.borrow_mut();
+                    for (id, shard, future) in incoming.drain(..) {
+                        let waker = Waker::from(Arc::new(TaskWaker {
+                            id,
+                            exec_id: inner.exec_id,
+                            fast_local: true,
+                            queue: Arc::clone(&inner.wake_queue),
+                            lane: None,
+                        }));
+                        tasks.insert(id, TaskEntry { future, waker, shard });
+                    }
+                }
+            }
+
+            ready.clear();
+            inner.wake_queue.drain_into(&mut ready);
+            drain_local_ready(inner.exec_id, &mut ready);
+            let mut polled_any = false;
+            for &id in ready.iter() {
+                let entry = inner.tasks.borrow_mut().remove(&id);
+                let Some(mut entry) = entry else { continue }; // completed or duplicate wake
+                polled_any = true;
+                let mut cx = Context::from_waker(&entry.waker);
+                match entry.future.as_mut().poll(&mut cx) {
+                    Poll::Ready(()) => {}
+                    Poll::Pending => {
+                        inner.tasks.borrow_mut().insert(id, entry);
+                    }
+                }
+            }
+            progressed |= polled_any;
+
+            if self.result.borrow().is_some() {
+                break Pump::Done;
+            }
+            if polled_any || !inner.incoming.borrow().is_empty() {
+                continue;
+            }
+            // Nothing runnable: the bounded idle step.  Same clock
+            // arithmetic as `advance_idle`, stopping at the bound.
+            let next = inner.timers.borrow().peek().map(|Reverse(e)| e.deadline);
+            match next {
+                Some(deadline) if deadline <= bound_ns => {
+                    inner.now_ns.set(inner.now_ns.get().max(deadline));
+                    inner.fire_due_timers();
+                    inner.epochs.set(inner.epochs.get() + 1);
+                    progressed = true;
+                }
+                next_deadline => break Pump::Idle { next_deadline, progressed },
+            }
+        };
+        drop(guard);
+        if outcome == Pump::Done {
+            self.done = true;
+        }
+        outcome
+    }
+
+    /// Discrete-event epochs this stepper's executor has completed.
+    pub fn epochs(&self) -> u64 {
+        self.exec.inner.epochs.get()
+    }
+
+    /// Current instant on this stepper's virtual clock.
+    pub fn now(&self) -> SimInstant {
+        self.exec.inner.current_now()
+    }
+
+    /// The root's value, if it completed.
+    pub fn into_result(self) -> Option<T> {
+        self.result.borrow_mut().take()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1142,6 +1299,108 @@ mod tests {
             assert_eq!(h.await, 2);
             assert_eq!(outer.await, 7);
         });
+    }
+
+    #[test]
+    fn stepper_replays_block_on_bit_for_bit() {
+        // the threaded-core invariant: pumping a schedule in windows must
+        // reproduce the block_on schedule exactly — same poll order, same
+        // timestamps, same epoch count
+        fn workload(log: Rc<RefCell<Vec<(u32, u64)>>>) -> impl Future<Output = ()> {
+            async move {
+                let mut handles = Vec::new();
+                for i in 0..20u32 {
+                    let log = Rc::clone(&log);
+                    handles.push(spawn(async move {
+                        sleep_ms(((i * 7) % 13) as f64).await;
+                        log.borrow_mut().push((i, now().0));
+                        sleep_ms((i % 3) as f64).await;
+                        log.borrow_mut().push((i + 100, now().0));
+                    }));
+                }
+                for h in handles {
+                    h.await;
+                }
+            }
+        }
+        let baseline = {
+            let log = Rc::new(RefCell::new(Vec::new()));
+            let ex = Executor::new(Mode::Virtual);
+            ex.block_on(workload(Rc::clone(&log)));
+            Rc::try_unwrap(log).unwrap().into_inner()
+        };
+        // pump in 1ms windows
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let mut stepper = Stepper::new(workload(Rc::clone(&log)));
+        let mut bound = 0;
+        let mut pumps = 0;
+        loop {
+            match stepper.pump_until(bound) {
+                Pump::Done => break,
+                Pump::Idle { next_deadline, .. } => {
+                    bound = next_deadline.expect("root unfinished yet no timers");
+                    pumps += 1;
+                    assert!(pumps < 10_000, "stepper failed to make progress");
+                }
+            }
+        }
+        assert_eq!(stepper.into_result(), Some(()));
+        assert_eq!(Rc::try_unwrap(log).unwrap().into_inner(), baseline);
+    }
+
+    #[test]
+    fn stepper_idles_at_the_bound_without_advancing_past_it() {
+        let mut stepper = Stepper::new(async {
+            sleep_ms(10.0).await;
+            42u32
+        });
+        // bound below the deadline: runs t=0 work, reports the deadline
+        match stepper.pump_until(5_000_000) {
+            Pump::Idle { next_deadline, progressed } => {
+                assert_eq!(next_deadline, Some(10_000_000));
+                assert!(progressed); // the root was polled to its first await
+            }
+            done => panic!("unexpected {done:?}"),
+        }
+        assert_eq!(stepper.now().0, 0); // clock never passed the bound
+        // an idle re-pump below the bound reports no progress
+        match stepper.pump_until(5_000_000) {
+            Pump::Idle { next_deadline, progressed } => {
+                assert_eq!(next_deadline, Some(10_000_000));
+                assert!(!progressed);
+            }
+            done => panic!("unexpected {done:?}"),
+        }
+        // bound at the deadline: completes
+        assert_eq!(stepper.pump_until(10_000_000), Pump::Done);
+        // pumping a finished stepper is a no-op
+        assert_eq!(stepper.pump_until(u64::MAX), Pump::Done);
+        assert_eq!(stepper.epochs(), 1);
+        assert_eq!(stepper.into_result(), Some(42));
+    }
+
+    #[test]
+    fn stepper_on_lane_reports_its_home_shard() {
+        let mut stepper = Stepper::on_lane(3, async { current_shard() });
+        assert_eq!(stepper.pump_until(0), Pump::Done);
+        assert_eq!(stepper.into_result(), Some(3));
+        // ordinary executors still report lane 0
+        assert_eq!(run_virtual(async { current_shard() }), 0);
+    }
+
+    #[test]
+    fn stepper_receives_cross_thread_wakes_between_pumps() {
+        // a waker captured by another thread lands in the thread-safe wake
+        // queue while the stepper is idle; the next pump drains it
+        let (tx, mut rx) = crate::exec::channel::mpsc::<u32>();
+        let mut stepper = Stepper::new(async move { rx.recv().await });
+        match stepper.pump_until(u64::MAX) {
+            Pump::Idle { next_deadline, .. } => assert_eq!(next_deadline, None),
+            done => panic!("unexpected {done:?}"),
+        }
+        tx.send(9).unwrap();
+        assert_eq!(stepper.pump_until(u64::MAX), Pump::Done);
+        assert_eq!(stepper.into_result(), Some(Some(9)));
     }
 
     #[test]

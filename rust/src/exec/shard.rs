@@ -19,12 +19,24 @@
 //! * [`EpochGate`] — a reusable barrier for the threaded milestone.  One
 //!   epoch is the interval between two virtual-clock advances; workers
 //!   arrive at the gate once their lane has quiesced, and the clock only
-//!   moves when every shard has arrived.
+//!   moves when every shard has arrived.  A panicking worker [poisons]
+//!   the gate instead of leaving the cohort hung ([`EpochGate::poison`]).
+//! * [`WindowGovernor`] — the epoch-window coordinator the threaded core
+//!   ([`super::threads`]) runs on: workers drain their lanes up to a
+//!   shared virtual-time bound, rendezvous at the embedded [`EpochGate`],
+//!   and the governor advances the bound to the earliest pending deadline
+//!   plus the conservative *lookahead* (the minimum latency of any
+//!   cross-lane edge — [`crate::netsim::Fabric::epoch_lookahead_ms`] for
+//!   fabric-coupled lanes).  Lanes may therefore skew by at most one
+//!   lookahead, which is exactly the horizon within which no cross-lane
+//!   event can affect them: the classic conservative-PDES window.
 //!
-//! The executor in `exec/mod.rs` currently drives all lanes from one
-//! thread (the sharded-ready fallback milestone — see `docs/ARCHITECTURE.md`);
-//! these types are the contract that lets worker threads be introduced
-//! without touching scheduling semantics.
+//! [poisons]: EpochGate::poison
+//!
+//! The single-thread scheduler in `exec/mod.rs` still drives merged lanes
+//! for the shared-platform (`--threads off`) path; the threaded core in
+//! `exec/threads.rs` drives decoupled lanes through these types — see
+//! `docs/ARCHITECTURE.md` § "Sharded simulation core".
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -72,12 +84,34 @@ impl WakeLane {
     }
 }
 
+/// What a dying worker leaves behind when it poisons the gate: the shard
+/// that panicked and the (stringified) panic payload.  Carried out of the
+/// barrier to every surviving worker and ultimately converted into
+/// [`Error::ShardPanicked`](crate::error::Error::ShardPanicked).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPanic {
+    pub shard: usize,
+    pub payload: String,
+}
+
+impl std::fmt::Display for ShardPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard {} panicked: {}", self.shard, self.payload)
+    }
+}
+
 /// Reusable N-participant barrier synchronizing shards at epoch
 /// boundaries (an epoch = the interval between two virtual-clock
 /// advances).  Workers call [`EpochGate::arrive`] when their lane has no
 /// runnable tasks; the call blocks until every participant has arrived,
 /// then all are released into the next epoch together.  Generation
 /// counting makes the gate safe to reuse round after round.
+///
+/// Threaded-core extensions: a worker whose lane panicked calls
+/// [`EpochGate::poison`] so the rest of the cohort aborts instead of
+/// waiting forever on a party that will never arrive, and a worker whose
+/// lane has finished all of its roots calls [`EpochGate::retire`] to
+/// shrink the cohort without blocking it.
 pub struct EpochGate {
     state: Mutex<GateState>,
     cv: Condvar,
@@ -87,6 +121,7 @@ struct GateState {
     parties: usize,
     arrived: usize,
     epoch: u64,
+    poison: Option<ShardPanic>,
 }
 
 impl EpochGate {
@@ -94,32 +129,247 @@ impl EpochGate {
     /// single-party gate never blocks).
     pub fn new(parties: usize) -> Self {
         EpochGate {
-            state: Mutex::new(GateState { parties: parties.max(1), arrived: 0, epoch: 0 }),
+            state: Mutex::new(GateState {
+                parties: parties.max(1),
+                arrived: 0,
+                epoch: 0,
+                poison: None,
+            }),
             cv: Condvar::new(),
         }
     }
 
     /// Arrive at the gate and wait for the rest of the cohort; returns
     /// the epoch number everyone is released into.
+    ///
+    /// # Panics
+    /// If the gate was [poisoned](EpochGate::poison) — single-thread
+    /// callers that never poison keep the infallible signature; the
+    /// threaded core uses [`EpochGate::arrive_checked`] instead.
     pub fn arrive(&self) -> u64 {
+        match self.arrive_checked() {
+            Ok(epoch) => epoch,
+            Err(p) => panic!("EpochGate poisoned: {p}"),
+        }
+    }
+
+    /// [`EpochGate::arrive`], except a poisoned gate returns the poison
+    /// instead of panicking — the abort path a surviving worker unwinds
+    /// through when a sibling shard dies.
+    pub fn arrive_checked(&self) -> Result<u64, ShardPanic> {
         let mut s = self.state.lock().unwrap();
+        if let Some(p) = &s.poison {
+            return Err(p.clone());
+        }
         let epoch = s.epoch;
         s.arrived += 1;
-        if s.arrived == s.parties {
+        if s.arrived >= s.parties {
             s.arrived = 0;
             s.epoch += 1;
             self.cv.notify_all();
-            return s.epoch;
+            return Ok(s.epoch);
         }
         while s.epoch == epoch {
             s = self.cv.wait(s).unwrap();
+            if let Some(p) = &s.poison {
+                return Err(p.clone());
+            }
         }
-        s.epoch
+        Ok(s.epoch)
+    }
+
+    /// Poison the gate on behalf of a panicking shard: every current and
+    /// future arrival returns the poison instead of blocking on a party
+    /// that will never come.  First poison wins.
+    pub fn poison(&self, shard: usize, payload: String) {
+        let mut s = self.state.lock().unwrap();
+        if s.poison.is_none() {
+            s.poison = Some(ShardPanic { shard, payload });
+        }
+        self.cv.notify_all();
+    }
+
+    /// The poison left by a dead shard, if any.
+    pub fn poisoned(&self) -> Option<ShardPanic> {
+        self.state.lock().unwrap().poison.clone()
+    }
+
+    /// Permanently remove one party from the cohort (a worker whose roots
+    /// all completed).  If everyone else is already waiting, the round
+    /// completes immediately — retiring never strands the cohort.
+    pub fn retire(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.parties = s.parties.saturating_sub(1);
+        if s.parties > 0 && s.arrived >= s.parties {
+            s.arrived = 0;
+            s.epoch += 1;
+            self.cv.notify_all();
+        }
     }
 
     /// Completed epochs so far.
     pub fn epoch(&self) -> u64 {
         self.state.lock().unwrap().epoch
+    }
+}
+
+/// Sentinel lookahead meaning "no cross-lane edges": workers free-run to
+/// quiescence without intermediate rendezvous.  Negotiated by
+/// [`crate::netsim::negotiate_lookahead`] when the lane graph is
+/// edge-free (e.g. the tenant-partitioned fleet, where every fabric hop
+/// is internal to one lane).
+pub const UNBOUNDED_LOOKAHEAD: u64 = u64::MAX;
+
+/// What a worker tells the governor when its lane has drained up to the
+/// current window bound.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneReport {
+    /// earliest pending timer deadline on this lane (ns), if any
+    pub next_deadline: Option<u64>,
+    /// whether the lane polled any task or fired any timer this window —
+    /// cross-lane wakes it produced may still be in flight, so a busy
+    /// cohort re-runs the window before quiescence can be declared
+    pub progressed: bool,
+}
+
+/// The governor's decision for the next round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Window {
+    /// drain your lane up to `end_ns` (inclusive), then arrive again
+    Open { end_ns: u64 },
+    /// two consecutive all-idle rounds with no pending deadline anywhere:
+    /// the cohort is globally quiescent.  A worker holding unfinished
+    /// roots at this point is deadlocked (mirrors the single-thread
+    /// "executor stalled" panic).
+    Quiesced,
+}
+
+/// Epoch-window coordinator for the threaded simulation core.
+///
+/// Every round, each worker drains its lane up to the current window
+/// bound, then calls [`WindowGovernor::arrive`] with a [`LaneReport`].
+/// The call aggregates the report, rendezvouses the cohort at the
+/// embedded [`EpochGate`], and returns the next [`Window`]:
+///
+/// * any pending deadline → the window advances to the *earliest*
+///   deadline across all lanes plus the lookahead (never backwards, so
+///   lane clocks stay within one lookahead of each other);
+/// * no deadlines but somebody progressed → the same window re-runs
+///   (cross-lane wakes the busy lane produced may still be undrained);
+/// * nobody progressed and no deadlines → one *confirm* round re-runs
+///   the window (every in-flight cross-thread wake push happens-before
+///   the round decision under the gate's lock, so a single re-drain
+///   observes them all), and only a second silent round returns
+///   [`Window::Quiesced`].
+///
+/// Panic propagation rides the gate's poison: [`WindowGovernor::arrive`]
+/// returns `Err(ShardPanic)` for every survivor once any worker has
+/// called [`WindowGovernor::poison`].
+pub struct WindowGovernor {
+    lookahead_ns: u64,
+    gate: EpochGate,
+    agg: Mutex<WindowState>,
+}
+
+struct WindowState {
+    /// round inputs, reset by the first worker released from each round
+    min_deadline: Option<u64>,
+    busy: bool,
+    /// gate epoch the current `window`/`confirming` were computed for
+    computed_for: u64,
+    /// current window bound (monotone; 0 lets the cohort run t=0 work)
+    window_end: u64,
+    /// a confirm round is in flight (first all-idle round seen)
+    confirming: bool,
+    window: Window,
+}
+
+impl WindowGovernor {
+    /// Governor for `parties` workers with the given conservative
+    /// lookahead in nanoseconds ([`UNBOUNDED_LOOKAHEAD`] for decoupled
+    /// lanes).
+    pub fn new(parties: usize, lookahead_ns: u64) -> Self {
+        WindowGovernor {
+            lookahead_ns,
+            gate: EpochGate::new(parties),
+            agg: Mutex::new(WindowState {
+                min_deadline: None,
+                busy: false,
+                computed_for: 0,
+                window_end: 0,
+                confirming: false,
+                window: Window::Open { end_ns: 0 },
+            }),
+        }
+    }
+
+    /// The bound workers drain to before their first arrival: 0, i.e. all
+    /// ready work and t=0 timers.
+    pub fn initial_window(&self) -> u64 {
+        0
+    }
+
+    /// Report a drained lane and block until the cohort decides the next
+    /// window.  Returns the poison instead if any shard died.
+    pub fn arrive(&self, report: LaneReport) -> Result<Window, ShardPanic> {
+        {
+            let mut a = self.agg.lock().unwrap();
+            a.min_deadline = match (a.min_deadline, report.next_deadline) {
+                (Some(x), Some(y)) => Some(x.min(y)),
+                (x, y) => x.or(y),
+            };
+            a.busy |= report.progressed;
+        }
+        let epoch = self.gate.arrive_checked()?;
+        let mut a = self.agg.lock().unwrap();
+        // Exactly-once window computation per round: every released
+        // worker reaches this lock only after the barrier, and every
+        // worker of the *next* round can only aggregate after returning
+        // from this arrive — so the first worker through computes from a
+        // complete, uncontended aggregate and resets it for the next
+        // round.
+        if a.computed_for < epoch {
+            a.window = match (a.min_deadline, a.busy) {
+                (Some(d), _) => {
+                    a.confirming = false;
+                    a.window_end = d.saturating_add(self.lookahead_ns).max(a.window_end);
+                    Window::Open { end_ns: a.window_end }
+                }
+                (None, true) => {
+                    a.confirming = false;
+                    Window::Open { end_ns: a.window_end }
+                }
+                (None, false) if !a.confirming => {
+                    a.confirming = true;
+                    Window::Open { end_ns: a.window_end }
+                }
+                (None, false) => Window::Quiesced,
+            };
+            a.min_deadline = None;
+            a.busy = false;
+            a.computed_for = epoch;
+        }
+        Ok(a.window)
+    }
+
+    /// Remove this worker from the cohort (all of its roots completed).
+    pub fn retire(&self) {
+        self.gate.retire();
+    }
+
+    /// Poison the cohort on behalf of a panicking worker (first wins).
+    pub fn poison(&self, shard: usize, payload: String) {
+        self.gate.poison(shard, payload);
+    }
+
+    /// The poison left by a dead shard, if any.
+    pub fn poisoned(&self) -> Option<ShardPanic> {
+        self.gate.poisoned()
+    }
+
+    /// Completed window rounds (epoch-gate generations) so far.
+    pub fn windows(&self) -> u64 {
+        self.gate.epoch()
     }
 }
 
@@ -131,6 +381,8 @@ fn assert_cross_shard_types_are_send_sync() {
     check::<Inbox>();
     check::<WakeLane>();
     check::<EpochGate>();
+    check::<WindowGovernor>();
+    check::<ShardPanic>();
 }
 
 #[cfg(test)]
@@ -228,5 +480,118 @@ mod tests {
         // zero clamps to one
         let gate = EpochGate::new(0);
         assert_eq!(gate.arrive(), 1);
+    }
+
+    #[test]
+    fn poisoned_gate_releases_waiters_with_the_first_poison() {
+        let gate = Arc::new(EpochGate::new(3));
+        let mut joins = Vec::new();
+        for _ in 0..2 {
+            let gate = Arc::clone(&gate);
+            joins.push(std::thread::spawn(move || gate.arrive_checked()));
+        }
+        // give the two survivors time to block, then the third dies
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        gate.poison(2, "boom".to_string());
+        gate.poison(0, "late poison must not win".to_string());
+        for j in joins {
+            let err = j.join().unwrap().unwrap_err();
+            assert_eq!(err.shard, 2);
+            assert_eq!(err.payload, "boom");
+        }
+        // arrivals after the fact fail fast too
+        assert_eq!(gate.arrive_checked().unwrap_err().shard, 2);
+        assert_eq!(gate.poisoned().unwrap().payload, "boom");
+    }
+
+    #[test]
+    fn retiring_last_party_completes_the_round_for_waiters() {
+        let gate = Arc::new(EpochGate::new(2));
+        let waiter = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || gate.arrive_checked())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        gate.retire();
+        assert_eq!(waiter.join().unwrap().unwrap(), 1);
+        // the survivor is now a single-party cohort
+        assert_eq!(gate.arrive(), 2);
+    }
+
+    #[test]
+    fn governor_advances_window_by_min_deadline_plus_lookahead() {
+        let gov = WindowGovernor::new(1, 100);
+        assert_eq!(gov.initial_window(), 0);
+        let w = gov
+            .arrive(LaneReport { next_deadline: Some(1_000), progressed: true })
+            .unwrap();
+        assert_eq!(w, Window::Open { end_ns: 1_100 });
+        // busy with no deadline re-runs the same window
+        let w = gov.arrive(LaneReport { next_deadline: None, progressed: true }).unwrap();
+        assert_eq!(w, Window::Open { end_ns: 1_100 });
+        // the window never moves backwards even if a smaller deadline shows
+        // up later (it can't in practice — drained lanes only hold future
+        // deadlines — but monotonicity is the invariant lane clocks rely on)
+        let w = gov
+            .arrive(LaneReport { next_deadline: Some(500), progressed: true })
+            .unwrap();
+        assert_eq!(w, Window::Open { end_ns: 1_100 });
+        assert_eq!(gov.windows(), 3);
+    }
+
+    #[test]
+    fn governor_quiesces_only_after_a_confirm_round() {
+        let gov = WindowGovernor::new(1, 100);
+        let idle = LaneReport { next_deadline: None, progressed: false };
+        // first silent round: confirm (re-run the window once)
+        assert_eq!(gov.arrive(idle).unwrap(), Window::Open { end_ns: 0 });
+        // second silent round: quiesced
+        assert_eq!(gov.arrive(idle).unwrap(), Window::Quiesced);
+        // progress during a confirm round cancels it
+        let gov = WindowGovernor::new(1, 100);
+        assert_eq!(gov.arrive(idle).unwrap(), Window::Open { end_ns: 0 });
+        let busy = LaneReport { next_deadline: None, progressed: true };
+        assert_eq!(gov.arrive(busy).unwrap(), Window::Open { end_ns: 0 });
+        assert_eq!(gov.arrive(idle).unwrap(), Window::Open { end_ns: 0 });
+        assert_eq!(gov.arrive(idle).unwrap(), Window::Quiesced);
+    }
+
+    #[test]
+    fn governor_cohort_agrees_on_each_window() {
+        const PARTIES: usize = 3;
+        const ROUNDS: usize = 40;
+        let gov = Arc::new(WindowGovernor::new(PARTIES, 7));
+        let mut joins = Vec::new();
+        for worker in 0..PARTIES {
+            let gov = Arc::clone(&gov);
+            joins.push(std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                for round in 0..ROUNDS {
+                    // only worker 0 ever has pending work; everyone must
+                    // still agree on every window bound
+                    let report = LaneReport {
+                        next_deadline: (worker == 0).then_some((round as u64 + 1) * 10),
+                        progressed: worker == 0,
+                    };
+                    seen.push(gov.arrive(report).unwrap());
+                }
+                seen
+            }));
+        }
+        let want: Vec<Window> =
+            (0..ROUNDS).map(|r| Window::Open { end_ns: (r as u64 + 1) * 10 + 7 }).collect();
+        for j in joins {
+            assert_eq!(j.join().unwrap(), want);
+        }
+        assert_eq!(gov.windows(), ROUNDS as u64);
+    }
+
+    #[test]
+    fn unbounded_lookahead_saturates_the_window() {
+        let gov = WindowGovernor::new(1, UNBOUNDED_LOOKAHEAD);
+        let w = gov
+            .arrive(LaneReport { next_deadline: Some(123), progressed: true })
+            .unwrap();
+        assert_eq!(w, Window::Open { end_ns: u64::MAX });
     }
 }

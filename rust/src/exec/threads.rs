@@ -1,0 +1,423 @@
+//! The threaded simulation core (ISSUE 10): real OS worker threads driving
+//! decoupled lanes under the epoch-window protocol of
+//! [`shard::WindowGovernor`].
+//!
+//! # What runs in parallel
+//!
+//! The platform's futures are deliberately non-`Send` (`Rc`-based state),
+//! so a *single* platform instance can never be polled from two threads.
+//! What the threaded core parallelizes is a **fleet of independent lanes**:
+//! each lane owns a whole simulation (in the figure-9 scale point, one
+//! tenant's platform + workload on its own cluster node) built *on* the
+//! worker thread from a `Send` job constructor and driven by a resumable
+//! [`Stepper`].  Only `Send` data crosses threads: job constructors in,
+//! results and counters out, and — for lanes that are coupled (the bench
+//! and test harnesses) — wakes through the executors' thread-safe wake
+//! queues.
+//!
+//! # The epoch-window protocol
+//!
+//! Worker `k` pumps each of its live steppers up to the shared window
+//! bound, then reports its earliest pending deadline to the governor and
+//! blocks on the embedded [`shard::EpochGate`].  When the whole cohort
+//! has arrived, the window advances to the global minimum deadline plus
+//! the negotiated *lookahead* ([`crate::netsim::negotiate_lookahead`]) and
+//! everyone is released.  Lane virtual clocks therefore never skew by
+//! more than one lookahead — the horizon inside which no cross-lane event
+//! can affect a lane, so every lane's schedule is bit-identical to
+//! pumping it alone (and, by [`Stepper`]'s contract, to a plain
+//! `block_on`).  That is the oracle the determinism goldens check: the
+//! threaded fleet must reproduce the sequentially-driven fleet exactly.
+//!
+//! # Worker lifecycle and failure
+//!
+//! A worker whose roots have all completed **retires** from the gate, so
+//! finished lanes never block live ones.  A panic anywhere in a lane
+//! (task code, stepper, the worker loop itself) is caught at the thread
+//! boundary, **poisons** the gate with the shard id and panic payload,
+//! and every surviving worker's next `arrive` aborts with that poison —
+//! the run fails fast with
+//! [`Error::ShardPanicked`](crate::error::Error::ShardPanicked) instead
+//! of deadlocking the barrier.  Global quiescence with unfinished roots
+//! (a cross-lane deadlock) takes the same path via the governor's
+//! [`Window::Quiesced`](shard::Window::Quiesced) verdict.
+
+use std::future::Future;
+use std::panic::AssertUnwindSafe;
+use std::pin::Pin;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::shard::{self, LaneReport, ShardPanic, Window, WindowGovernor};
+use super::{Pump, Stepper};
+
+/// A lane job: a `Send` constructor invoked on the worker thread to build
+/// the (non-`Send`) root future it will drive.
+pub type LaneJob<T> = Box<dyn FnOnce() -> Pin<Box<dyn Future<Output = T>>> + Send>;
+
+/// Per-worker counters for the scale bench's stall accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerStats {
+    pub worker: usize,
+    /// lanes this worker drove
+    pub jobs: usize,
+    /// epoch windows this worker participated in
+    pub windows: u64,
+    /// discrete-event epochs across this worker's lanes
+    pub epochs: u64,
+    /// wall nanoseconds spent blocked at the epoch gate
+    pub stall_ns: u64,
+    /// total wall nanoseconds of the worker loop
+    pub run_ns: u64,
+}
+
+impl WorkerStats {
+    /// Barrier-wait share of this worker's wall time, in percent.
+    pub fn stall_pct(&self) -> f64 {
+        if self.run_ns == 0 {
+            0.0
+        } else {
+            self.stall_ns as f64 / self.run_ns as f64 * 100.0
+        }
+    }
+}
+
+/// A completed fleet run: per-worker results in job order, per-worker
+/// counters, and the number of epoch-window rounds the cohort completed.
+#[derive(Debug)]
+pub struct FleetRun<T> {
+    /// `results[w][j]` is the value of worker `w`'s `j`-th job
+    pub results: Vec<Vec<T>>,
+    pub stats: Vec<WorkerStats>,
+    pub windows: u64,
+}
+
+/// Drive `jobs[w]` on worker thread `w` under the epoch-window protocol
+/// with the given conservative lookahead
+/// ([`shard::UNBOUNDED_LOOKAHEAD`] for lanes with no cross-lane edges).
+///
+/// Returns the per-lane results once every lane completed, or the first
+/// [`ShardPanic`] if any worker died or deadlocked.
+pub fn run_fleet<T, F>(
+    lookahead_ns: u64,
+    jobs: Vec<Vec<F>>,
+) -> Result<FleetRun<T>, ShardPanic>
+where
+    T: Send + 'static,
+    F: FnOnce() -> Pin<Box<dyn Future<Output = T>>> + Send + 'static,
+{
+    let workers = jobs.len();
+    if workers == 0 {
+        return Ok(FleetRun { results: Vec::new(), stats: Vec::new(), windows: 0 });
+    }
+    let governor = Arc::new(WindowGovernor::new(workers, lookahead_ns));
+    let mut handles = Vec::with_capacity(workers);
+    for (worker, lane_jobs) in jobs.into_iter().enumerate() {
+        let governor = Arc::clone(&governor);
+        let handle = std::thread::Builder::new()
+            .name(format!("shard-{worker}"))
+            .spawn(move || {
+                // catch everything below the thread boundary: a panicking
+                // lane must poison the gate, not strand the cohort
+                let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    worker_loop(worker, lane_jobs, &governor)
+                }));
+                match run {
+                    Ok(done) => done, // Ok, or Err carrying a sibling's poison
+                    Err(panic) => {
+                        let payload = panic_payload(panic.as_ref());
+                        governor.poison(worker, payload.clone());
+                        Err(ShardPanic { shard: worker, payload })
+                    }
+                }
+            })
+            .expect("failed to spawn shard worker thread");
+        handles.push(handle);
+    }
+
+    let mut results = Vec::with_capacity(workers);
+    let mut stats = Vec::with_capacity(workers);
+    for (worker, handle) in handles.into_iter().enumerate() {
+        match handle.join() {
+            Ok(Ok((values, s))) => {
+                results.push(values);
+                stats.push(s);
+            }
+            Ok(Err(_)) => {} // resolved below via the gate's first poison
+            Err(_) => {
+                // the worker died outside catch_unwind (e.g. a poisoned
+                // mutex during poison handling) — still fail cleanly
+                governor.poison(worker, "worker thread died".to_string());
+            }
+        }
+    }
+    if let Some(poison) = governor.poisoned() {
+        return Err(poison);
+    }
+    Ok(FleetRun { results, stats, windows: governor.windows() })
+}
+
+/// One worker's drain loop: pump every live stepper to the window bound,
+/// report, rendezvous, repeat; retire once all roots completed.
+fn worker_loop<T, F>(
+    worker: usize,
+    jobs: Vec<F>,
+    governor: &WindowGovernor,
+) -> Result<(Vec<T>, WorkerStats), ShardPanic>
+where
+    T: 'static,
+    F: FnOnce() -> Pin<Box<dyn Future<Output = T>>>,
+{
+    let started = Instant::now();
+    let mut steppers: Vec<Option<Stepper<T>>> = jobs
+        .into_iter()
+        .map(|build| Some(Stepper::on_lane(worker as u32, build())))
+        .collect();
+    let mut results: Vec<Option<T>> = steppers.iter().map(|_| None).collect();
+    let mut stats = WorkerStats {
+        worker,
+        jobs: steppers.len(),
+        windows: 0,
+        epochs: 0,
+        stall_ns: 0,
+        run_ns: 0,
+    };
+    let mut window_end = governor.initial_window();
+    loop {
+        let mut next_deadline: Option<u64> = None;
+        let mut progressed = false;
+        let mut live = 0usize;
+        for (i, slot) in steppers.iter_mut().enumerate() {
+            let Some(stepper) = slot else { continue };
+            match stepper.pump_until(window_end) {
+                Pump::Done => {
+                    // completing a root is progress (its last sends may
+                    // still be in flight to other lanes)
+                    progressed = true;
+                    stats.epochs += stepper.epochs();
+                    let value = slot
+                        .take()
+                        .unwrap()
+                        .into_result()
+                        .expect("finished stepper lost its result");
+                    results[i] = Some(value);
+                }
+                Pump::Idle { next_deadline: d, progressed: p } => {
+                    live += 1;
+                    progressed |= p;
+                    next_deadline = match (next_deadline, d) {
+                        (Some(x), Some(y)) => Some(x.min(y)),
+                        (x, y) => x.or(y),
+                    };
+                }
+            }
+        }
+        if live == 0 {
+            governor.retire();
+            break;
+        }
+        let stall_started = Instant::now();
+        match governor.arrive(LaneReport { next_deadline, progressed })? {
+            Window::Open { end_ns } => {
+                stats.stall_ns += stall_started.elapsed().as_nanos() as u64;
+                stats.windows += 1;
+                window_end = end_ns;
+            }
+            Window::Quiesced => {
+                // mirrors the single-thread "executor stalled" panic; the
+                // unwind poisons the gate so the cohort aborts with us
+                panic!(
+                    "executor stalled: shard {worker} holds {live} unfinished \
+                     roots, no runnable tasks, no timers on any lane"
+                );
+            }
+        }
+    }
+    stats.run_ns = started.elapsed().as_nanos() as u64;
+    let values = results
+        .into_iter()
+        .map(|v| v.expect("retired worker with an unfinished lane"))
+        .collect();
+    Ok((values, stats))
+}
+
+fn panic_payload(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{self, channel, Executor, Mode};
+
+    /// The per-lane schedule a job produces: (tag, virtual ns) pairs.
+    fn lane_workload(lane: u64) -> Pin<Box<dyn Future<Output = Vec<(u64, u64)>>>> {
+        Box::pin(async move {
+            let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+            let mut handles = Vec::new();
+            for i in 0..12u64 {
+                let log = std::rc::Rc::clone(&log);
+                handles.push(exec::spawn(async move {
+                    exec::sleep_ms(((lane * 5 + i * 7) % 13) as f64).await;
+                    log.borrow_mut().push((i, exec::now().0));
+                }));
+            }
+            for h in handles {
+                h.await;
+            }
+            std::rc::Rc::try_unwrap(log).unwrap().into_inner()
+        })
+    }
+
+    #[test]
+    fn fleet_matches_block_on_lane_by_lane() {
+        let baseline: Vec<Vec<(u64, u64)>> = (0..6u64)
+            .map(|lane| Executor::new(Mode::Virtual).block_on(lane_workload(lane)))
+            .collect();
+        for lookahead in [1_000_000u64, shard::UNBOUNDED_LOOKAHEAD] {
+            // lanes 0..6 over 3 workers, 2 jobs each
+            let jobs: Vec<Vec<LaneJob<Vec<(u64, u64)>>>> = (0..3u64)
+                .map(|w| {
+                    vec![
+                        Box::new(move || lane_workload(w)) as LaneJob<_>,
+                        Box::new(move || lane_workload(w + 3)) as LaneJob<_>,
+                    ]
+                })
+                .collect();
+            let fleet = run_fleet(lookahead, jobs).unwrap();
+            assert_eq!(fleet.stats.len(), 3);
+            for w in 0..3usize {
+                assert_eq!(fleet.results[w][0], baseline[w]);
+                assert_eq!(fleet.results[w][1], baseline[w + 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_shard_poisons_the_cohort_instead_of_hanging() {
+        // shard 2 of 3 dies mid-run; shards 0 and 1 are still mid-schedule
+        // and must be released from the gate with the poison, not hang
+        let slow = |lane: u64| {
+            move || -> Pin<Box<dyn Future<Output = u64>>> {
+                Box::pin(async move {
+                    for _ in 0..1_000 {
+                        exec::sleep_ms(1.0).await;
+                    }
+                    lane
+                })
+            }
+        };
+        let jobs: Vec<Vec<LaneJob<u64>>> = vec![
+            vec![Box::new(slow(0))],
+            vec![Box::new(slow(1))],
+            vec![Box::new(|| {
+                Box::pin(async {
+                    exec::sleep_ms(5.0).await;
+                    panic!("boom on shard 2");
+                })
+            })],
+        ];
+        // finite lookahead: survivors rendezvous every window and observe
+        // the poison on their next arrival
+        let err = run_fleet(500_000, jobs).unwrap_err();
+        assert_eq!(err.shard, 2);
+        assert!(err.payload.contains("boom on shard 2"), "payload: {}", err.payload);
+    }
+
+    #[test]
+    fn coupled_lanes_ping_pong_across_threads() {
+        // two lanes exchange messages through Send channel halves; wakes
+        // travel through the executors' thread-safe wake queues and the
+        // receiving lane's virtual clock is untouched by wall-clock timing
+        const ROUNDS: u32 = 10;
+        let (to_b, mut from_a) = channel::mpsc::<u32>();
+        let (to_a, mut from_b) = channel::mpsc::<u32>();
+        let jobs: Vec<Vec<LaneJob<Vec<u64>>>> = vec![
+            vec![Box::new(move || {
+                Box::pin(async move {
+                    let mut stamps = Vec::new();
+                    for k in 0..ROUNDS {
+                        exec::sleep_ms(2.0).await;
+                        to_b.send(k).unwrap();
+                        assert_eq!(from_b.recv().await, Some(k));
+                        stamps.push(exec::now().0);
+                    }
+                    stamps
+                })
+            })],
+            vec![Box::new(move || {
+                Box::pin(async move {
+                    let mut stamps = Vec::new();
+                    for k in 0..ROUNDS {
+                        assert_eq!(from_a.recv().await, Some(k));
+                        exec::sleep_ms(2.0).await;
+                        to_a.send(k).unwrap();
+                        stamps.push(exec::now().0);
+                    }
+                    stamps
+                })
+            })],
+        ];
+        let fleet = run_fleet(1_000_000, jobs).unwrap();
+        // each lane's virtual timestamps are a pure function of its own
+        // sleeps: lane A stamps after its k-th 2ms sleep + ack, lane B
+        // after its k-th 2ms sleep
+        let a: Vec<u64> = (1..=ROUNDS as u64).map(|k| k * 2_000_000).collect();
+        assert_eq!(fleet.results[0][0], a);
+        assert_eq!(fleet.results[1][0], a);
+        assert!(fleet.windows > 0);
+    }
+
+    #[test]
+    fn global_quiescence_with_a_live_root_fails_as_a_stall() {
+        // lane 0 waits forever on a channel whose sender the test holds
+        // open; lane 1 finishes instantly and retires.  The governor's
+        // confirm round must find the cohort silent and abort the run.
+        let (tx, mut rx) = channel::mpsc::<u32>();
+        let jobs: Vec<Vec<LaneJob<u32>>> = vec![
+            vec![Box::new(move || Box::pin(async move { rx.recv().await.unwrap_or(0) }))],
+            vec![Box::new(|| Box::pin(async { 7u32 }))],
+        ];
+        let err = run_fleet(1_000_000, jobs).unwrap_err();
+        assert_eq!(err.shard, 0);
+        assert!(err.payload.contains("executor stalled"), "payload: {}", err.payload);
+        drop(tx);
+    }
+
+    #[test]
+    fn workers_without_jobs_retire_without_blocking_the_rest() {
+        let jobs: Vec<Vec<LaneJob<u32>>> = vec![
+            vec![Box::new(|| {
+                Box::pin(async {
+                    exec::sleep_ms(25.0).await;
+                    41u32
+                })
+            })],
+            vec![],
+            vec![],
+        ];
+        let fleet = run_fleet(1_000_000, jobs).unwrap();
+        assert_eq!(fleet.results[0], vec![41]);
+        assert!(fleet.results[1].is_empty());
+        assert_eq!(fleet.stats[0].jobs, 1);
+        assert!(fleet.stats[0].epochs > 0);
+    }
+
+    #[test]
+    fn fleet_is_deterministic_across_repeated_runs() {
+        let run = || {
+            let jobs: Vec<Vec<_>> = (0..4u64).map(|w| vec![move || lane_workload(w)]).collect();
+            run_fleet(250_000, jobs).unwrap().results
+        };
+        let first = run();
+        for _ in 0..4 {
+            assert_eq!(run(), first);
+        }
+    }
+}

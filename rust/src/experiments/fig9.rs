@@ -29,6 +29,18 @@
 //! every sampled trace conserves its critical path, and that the trace
 //! ring stays under [`TRACE_BUDGET_BYTES`]; `trace_overhead_pct` and
 //! `trace_bytes` land in `BENCH_scale.json`.
+//!
+//! With `--threads on` (ISSUE 10) the scale point runs on the **threaded
+//! simulation core**: the cluster becomes a fleet of independent tenant
+//! lanes (one single-node platform + workload per `--nodes`, carrying an
+//! equal share of the requests under a tenant-derived seed), driven by
+//! `--shards` real OS worker threads under the epoch-window protocol of
+//! [`crate::exec::threads::run_fleet`].  The driver then replays the
+//! *same* fleet sequentially on one thread and demands the merged verdict
+//! transcript, per-tenant RAM ledgers, and epoch counts are bit-identical
+//! — thread interleaving must never leak into any lane's schedule — and
+//! records the measured speedup as the `parallel-event-loop` trajectory
+//! point.
 
 use std::path::Path;
 use std::rc::Rc;
@@ -79,6 +91,10 @@ pub struct Fig9Params {
     /// 1-in-N sampling to measure tracing's wall-clock overhead and bound
     /// the trace-ring bytes.  0 skips the twin.
     pub trace_sample: u64,
+    /// `--threads on` (ISSUE 10): drive the scale point as a tenant fleet
+    /// on real worker threads (`shards` workers over `nodes` tenant
+    /// lanes), with a sequentially-driven twin as the bit-parity oracle.
+    pub threads: bool,
 }
 
 impl Fig9Params {
@@ -95,6 +111,7 @@ impl Fig9Params {
             shards: 1,
             nodes: 1,
             trace_sample: 64,
+            threads: false,
         }
     }
 }
@@ -135,6 +152,36 @@ impl Fig9Run {
     }
 }
 
+/// Telemetry from the threaded fleet run (`--threads on`): worker-thread
+/// shape, epoch-window counters, and the wall-clock speedup over the
+/// sequentially-driven twin.
+pub struct FleetStats {
+    /// independent tenant lanes in the fleet (= `--nodes`)
+    pub tenants: usize,
+    /// OS worker threads (= `min(--shards, tenants)`)
+    pub workers: usize,
+    /// `available_parallelism` on the host that produced the numbers
+    pub host_cores: usize,
+    /// epoch-window rounds the cohort completed at the gate
+    pub windows: u64,
+    pub worker_stats: Vec<crate::exec::threads::WorkerStats>,
+    /// threaded wall vs the same fleet driven sequentially — with equal
+    /// request totals this is exactly the requests/sec ratio
+    pub speedup: f64,
+}
+
+impl FleetStats {
+    /// Mean barrier-wait share across workers, in percent.
+    pub fn mean_stall_pct(&self) -> f64 {
+        if self.worker_stats.is_empty() {
+            0.0
+        } else {
+            self.worker_stats.iter().map(|w| w.stall_pct()).sum::<f64>()
+                / self.worker_stats.len() as f64
+        }
+    }
+}
+
 pub struct Fig9 {
     pub params: Fig9Params,
     pub windowed: Fig9Run,
@@ -142,10 +189,13 @@ pub struct Fig9 {
     pub full: Option<Fig9Run>,
     /// 1-shard twin (None unless `--shards N` with N > 1) — the sharded
     /// schedule must reproduce it bit-for-bit before the throughput point
-    /// is recorded
+    /// is recorded.  With `--threads on` this holds the sequentially-driven
+    /// fleet twin instead (one worker, same lanes).
     pub single: Option<Fig9Run>,
     /// traced twin at `trace_sample` 1-in-N (None with `--trace-sample 0`)
     pub traced: Option<Fig9Run>,
+    /// threaded-fleet counters (None unless `--threads on`)
+    pub fleet: Option<FleetStats>,
     pub checks: Vec<(String, bool)>,
 }
 
@@ -219,7 +269,30 @@ impl Fig9 {
                 traced.trace_violations
             ));
         }
-        if let Some(single) = &self.single {
+        if let Some(fl) = &self.fleet {
+            out.push_str(&format!(
+                "  threads  : {} workers over {} tenant lanes ({} host cores), \
+                 {} epoch windows, {:.2}x vs sequential twin, \
+                 mean barrier stall {:.1}%\n",
+                fl.workers,
+                fl.tenants,
+                fl.host_cores,
+                fl.windows,
+                fl.speedup,
+                fl.mean_stall_pct()
+            ));
+            for ws in &fl.worker_stats {
+                out.push_str(&format!(
+                    "             worker {}: {} lanes, {} windows, {} epochs, \
+                     stall {:.1}%\n",
+                    ws.worker,
+                    ws.jobs,
+                    ws.windows,
+                    ws.epochs,
+                    ws.stall_pct()
+                ));
+            }
+        } else if let Some(single) = &self.single {
             out.push_str(&format!(
                 "  shards   : {} lanes over {} nodes, {} epochs — 1-shard twin \
                  replayed {} verdicts + {} node RAM ledgers for comparison\n",
@@ -266,7 +339,39 @@ impl Fig9 {
                     self.traced.as_ref().map(|t| t.trace_bytes).unwrap_or(0) as f64
                 ),
             ),
-            ("milestone", Json::str("request-span-tracing")),
+            ("threads", Json::Bool(self.fleet.is_some())),
+            (
+                "workers",
+                Json::Num(self.fleet.as_ref().map(|f| f.workers).unwrap_or(1) as f64),
+            ),
+            (
+                "tenants",
+                Json::Num(self.fleet.as_ref().map(|f| f.tenants).unwrap_or(0) as f64),
+            ),
+            (
+                "host_cores",
+                Json::Num(self.fleet.as_ref().map(|f| f.host_cores).unwrap_or(0) as f64),
+            ),
+            (
+                "epoch_windows",
+                Json::Num(self.fleet.as_ref().map(|f| f.windows).unwrap_or(0) as f64),
+            ),
+            (
+                "speedup_vs_single_worker",
+                Json::Num(self.fleet.as_ref().map(|f| f.speedup).unwrap_or(0.0)),
+            ),
+            (
+                "barrier_stall_pct",
+                Json::Num(self.fleet.as_ref().map(|f| f.mean_stall_pct()).unwrap_or(0.0)),
+            ),
+            (
+                "milestone",
+                Json::str(if self.fleet.is_some() {
+                    "parallel-event-loop"
+                } else {
+                    "request-span-tracing"
+                }),
+            ),
             ("provisional", Json::Bool(false)),
         ])
     }
@@ -382,9 +487,266 @@ fn run_once(
     Ok(run)
 }
 
+/// Virtual-time batch window the threaded fleet paces itself with when
+/// the negotiated lookahead is unbounded (independent tenants, no
+/// cross-lane edges): coarse enough that barrier crossings are amortized
+/// over thousands of events, finite so the epoch gate is actually
+/// exercised and stall accounting stays meaningful.
+pub const PACED_WINDOW_NS: u64 = 250_000_000;
+
+/// One tenant lane's completed simulation — the `Send` payload a worker
+/// thread ships back to the fleet driver.
+struct TenantRun {
+    tenant: usize,
+    report: WorkloadReport,
+    recorder_bytes: usize,
+    billing_bytes: usize,
+    ram_mean_mb: f64,
+    merges: Vec<MergeEvent>,
+    splits: usize,
+    evicts: usize,
+    inline_calls: u64,
+    verdicts: Vec<String>,
+    node_ram: Vec<(u64, u64)>,
+    epochs: u64,
+}
+
+/// Per-tenant platform + workload shape: a single-node slice of the
+/// cluster carrying an equal share of the requests under a seed derived
+/// from the run seed and the tenant id (golden-ratio mix, so tenant
+/// streams are decorrelated but pinned).
+fn tenant_setup(p: &Fig9Params, tenant: usize, tenants: usize) -> (PlatformConfig, WorkloadConfig) {
+    let tseed = p.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(tenant as u64 + 1);
+    let mut cfg = config(p, RecordingLevel::Windowed);
+    cfg.seed = tseed;
+    cfg.cluster.nodes = 1;
+    cfg.cluster.shards = 1;
+    let extra = u64::from((tenant as u64) < p.requests % tenants as u64);
+    let wl = WorkloadConfig {
+        requests: p.requests / tenants as u64 + extra,
+        rate_rps: p.rate_rps / tenants as f64,
+        seed: tseed,
+        timeout_ms: 120_000.0,
+    };
+    (cfg, wl)
+}
+
+/// The root future one tenant lane runs — same pipeline as [`run_once`]'s
+/// body, returning a `Send` [`TenantRun`] instead of borrowing platform
+/// state across threads.
+fn tenant_future(
+    tenant: usize,
+    chain_len: usize,
+    cfg: PlatformConfig,
+    wl: WorkloadConfig,
+) -> std::pin::Pin<Box<dyn std::future::Future<Output = Result<TenantRun>>>> {
+    Box::pin(async move {
+        let app = apps::chain(chain_len);
+        let platform = Platform::deploy(app, cfg).await?;
+        let report = workload::run(Rc::clone(&platform), wl).await?;
+        crate::exec::sleep_ms(10_000.0).await;
+        platform.shutdown();
+        let m = &platform.metrics;
+        let node_ram = platform
+            .node_ram_ledger()
+            .into_iter()
+            .map(|(_, mb)| (tenant as u64, mb.to_bits()))
+            .collect();
+        Ok(TenantRun {
+            tenant,
+            recorder_bytes: m.approx_bytes(),
+            billing_bytes: platform.billing.approx_bytes(),
+            ram_mean_mb: m.ram_mean_mb(),
+            merges: m.merges(),
+            splits: m.splits().len(),
+            evicts: m.evicts().len(),
+            inline_calls: m.counter("inline_calls"),
+            verdicts: verdict_transcript(m),
+            node_ram,
+            epochs: crate::exec::epochs(),
+            report,
+        })
+    })
+}
+
+/// Merge a fleet of tenant lanes into one [`Fig9Run`]: counters sum,
+/// latency samples pool into one distribution, and the canonical
+/// transcript is every tenant's verdicts prefixed with its id, in tenant
+/// order — the artifact the sequential twin must reproduce bit-for-bit.
+fn merge_tenants(mut lanes: Vec<TenantRun>, wall_s: f64) -> Fig9Run {
+    lanes.sort_by_key(|t| t.tenant);
+    let reports: Vec<WorkloadReport> = lanes.iter().map(|t| t.report.clone()).collect();
+    let mut run = Fig9Run {
+        report: WorkloadReport::merged(&reports),
+        wall_s,
+        recorder_bytes: 0,
+        billing_bytes: 0,
+        ram_mean_mb: 0.0,
+        merges: Vec::new(),
+        splits: 0,
+        evicts: 0,
+        inline_calls: 0,
+        verdicts: Vec::new(),
+        node_ram: Vec::new(),
+        epochs: 0,
+        trace_bytes: 0,
+        trace_violations: 0,
+        trace_retained: 0,
+    };
+    for t in &lanes {
+        run.recorder_bytes += t.recorder_bytes;
+        run.billing_bytes += t.billing_bytes;
+        run.ram_mean_mb += t.ram_mean_mb;
+        run.merges.extend(t.merges.iter().cloned());
+        run.splits += t.splits;
+        run.evicts += t.evicts;
+        run.inline_calls += t.inline_calls;
+        run.verdicts.extend(t.verdicts.iter().map(|v| format!("t{} {v}", t.tenant)));
+        run.node_ram.extend(t.node_ram.iter().copied());
+        run.epochs += t.epochs;
+    }
+    run.ram_mean_mb /= lanes.len().max(1) as f64;
+    run
+}
+
+/// `--threads on`: run the scale point as a tenant fleet on real worker
+/// threads, replay the same fleet sequentially as the bit-parity oracle,
+/// and record the measured speedup.
+fn run_threaded(out_dir: &Path, p: Fig9Params) -> Result<Fig9> {
+    let tenants = p.nodes.max(1);
+    let workers = p.shards.clamp(1, tenants);
+    // tenant t rides worker t % workers (the node→lane rule of the
+    // single-threaded sharded core, applied to whole tenant lanes)
+    let mut jobs: Vec<Vec<crate::exec::threads::LaneJob<Result<TenantRun>>>> =
+        (0..workers).map(|_| Vec::new()).collect();
+    for t in 0..tenants {
+        let (cfg, wl) = tenant_setup(&p, t, tenants);
+        let chain_len = p.chain_len;
+        jobs[t % workers].push(Box::new(move || tenant_future(t, chain_len, cfg, wl)));
+    }
+    // Independent tenants have no cross-lane edges, so the negotiated
+    // conservative license is unbounded; pace with the finite batch
+    // window instead so the epoch gate is exercised.
+    let lookahead_ns = crate::netsim::negotiate_lookahead(&[]).unwrap_or(PACED_WINDOW_NS);
+    let wall = std::time::Instant::now();
+    let fleet = crate::exec::threads::run_fleet(lookahead_ns, jobs)
+        .map_err(crate::error::Error::from)?;
+    let wall_threaded = wall.elapsed().as_secs_f64();
+    let mut lanes = Vec::with_capacity(tenants);
+    for worker_results in fleet.results {
+        for lane in worker_results {
+            lanes.push(lane?);
+        }
+    }
+    let windowed = merge_tenants(lanes, wall_threaded);
+
+    // The oracle: the identical fleet driven to completion one lane at a
+    // time on this thread.  Tenant lanes are pure functions of
+    // (seed, config), so any divergence means thread interleaving leaked
+    // into a schedule.
+    let wall = std::time::Instant::now();
+    let mut twin_lanes = Vec::with_capacity(tenants);
+    for t in 0..tenants {
+        let (cfg, wl) = tenant_setup(&p, t, tenants);
+        let lane = Executor::sharded(Mode::Virtual, 1)
+            .block_on(tenant_future(t, p.chain_len, cfg, wl))?;
+        twin_lanes.push(lane);
+    }
+    let single = merge_tenants(twin_lanes, wall.elapsed().as_secs_f64());
+
+    let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let speedup = if windowed.wall_s > 0.0 { single.wall_s / windowed.wall_s } else { 0.0 };
+
+    let mut checks: Vec<(String, bool)> = Vec::new();
+    checks.push((
+        format!("zero dropped requests ({} failed)", windowed.report.failed),
+        windowed.report.failed == 0,
+    ));
+    checks.push((
+        format!(
+            "telemetry bytes bounded (recorder {} + billing {} < {})",
+            windowed.recorder_bytes, windowed.billing_bytes, RECORDER_BUDGET_BYTES
+        ),
+        windowed.recorder_bytes + windowed.billing_bytes < RECORDER_BUDGET_BYTES,
+    ));
+    checks.push((
+        format!(
+            "every tenant chain fused ({} merges over {} tenants)",
+            windowed.merges.len(),
+            tenants
+        ),
+        windowed.merges.len() >= tenants,
+    ));
+    checks.push((
+        format!(
+            "threaded verdict transcript identical to sequential twin \
+             ({} vs {} entries)",
+            windowed.verdicts.len(),
+            single.verdicts.len()
+        ),
+        windowed.verdicts == single.verdicts,
+    ));
+    checks.push((
+        format!(
+            "per-tenant RAM ledgers identical across drive modes ({} lanes)",
+            windowed.node_ram.len()
+        ),
+        windowed.node_ram == single.node_ram,
+    ));
+    checks.push((
+        format!(
+            "epoch counts identical across drive modes ({} vs {})",
+            windowed.epochs, single.epochs
+        ),
+        windowed.epochs == single.epochs,
+    ));
+    // The throughput gate only binds at real scale on hardware that can
+    // host the fleet; smoke runs record the measured number without
+    // failing on a loaded or small runner.
+    let binding = host_cores >= workers && workers >= 2 && p.requests >= 200_000;
+    let target = 0.75 * workers.min(host_cores) as f64;
+    checks.push((
+        format!(
+            "threaded speedup {speedup:.2}x vs sequential twin \
+             ({} workers, {host_cores} cores{})",
+            workers,
+            if binding {
+                format!(", target {target:.2}x")
+            } else {
+                ", informational at this scale".to_string()
+            }
+        ),
+        !binding || speedup >= target,
+    ));
+
+    let fleet_stats = FleetStats {
+        tenants,
+        workers,
+        host_cores,
+        windows: fleet.windows,
+        worker_stats: fleet.stats,
+        speedup,
+    };
+    let fig = Fig9 {
+        params: p,
+        windowed,
+        full: None,
+        single: Some(single),
+        traced: None,
+        fleet: Some(fleet_stats),
+        checks,
+    };
+    write_output(&out_dir.join("BENCH_scale.json"), &fig.bench_json().to_string())?;
+    write_output(&out_dir.join("fig9_summary.txt"), &fig.render())?;
+    Ok(fig)
+}
+
 /// Run FIG9 and write `BENCH_scale.json` + `fig9_summary.txt` into
 /// `out_dir`.
 pub fn run(out_dir: &Path, p: Fig9Params) -> Result<Fig9> {
+    if p.threads {
+        return run_threaded(out_dir, p);
+    }
     let windowed = run_once(&p, RecordingLevel::Windowed, p.shards, 0)?;
     let full =
         if p.parity { Some(run_once(&p, RecordingLevel::Full, p.shards, 0)?) } else { None };
@@ -480,7 +842,7 @@ pub fn run(out_dir: &Path, p: Fig9Params) -> Result<Fig9> {
         ));
     }
 
-    let fig = Fig9 { params: p, windowed, full, single, traced, checks };
+    let fig = Fig9 { params: p, windowed, full, single, traced, fleet: None, checks };
     write_output(&out_dir.join("BENCH_scale.json"), &fig.bench_json().to_string())?;
     write_output(&out_dir.join("fig9_summary.txt"), &fig.render())?;
     Ok(fig)
@@ -546,5 +908,40 @@ mod tests {
         let v = Json::parse(&json).unwrap();
         assert_eq!(v.get("shards").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(v.get("shard_parity_checked").unwrap(), &Json::Bool(true));
+    }
+
+    #[test]
+    fn fig9_threaded_fleet_parity_small_scale() {
+        // 2 worker threads over a 3-tenant fleet: the merged transcript,
+        // per-tenant RAM ledgers, and epoch counts must be bit-identical
+        // to the same fleet driven sequentially on one thread — the
+        // driver runs the twin itself and records the comparisons.
+        let mut p = Fig9Params::defaults(true);
+        p.requests = 2_400;
+        p.rate_rps = 300.0;
+        p.compute = ComputeMode::Disabled;
+        p.parity = false;
+        p.shards = 2;
+        p.nodes = 3;
+        p.trace_sample = 0;
+        p.threads = true;
+        let dir = std::env::temp_dir().join("provuse_fig9_threads_test");
+        let fig = run(&dir, p).unwrap();
+        assert!(fig.passed(), "{}", fig.render());
+        let fl = fig.fleet.as_ref().expect("fleet stats must be recorded");
+        assert_eq!((fl.workers, fl.tenants), (2, 3));
+        assert!(fl.windows > 0, "the epoch gate must be exercised");
+        let single = fig.single.as_ref().expect("sequential twin must run");
+        assert_eq!(fig.windowed.verdicts, single.verdicts);
+        assert!(!fig.windowed.verdicts.is_empty());
+        assert_eq!(fig.windowed.node_ram, single.node_ram);
+        assert_eq!(fig.windowed.epochs, single.epochs);
+        assert_eq!(fig.windowed.report.issued, p.requests);
+        let json = std::fs::read_to_string(dir.join("BENCH_scale.json")).unwrap();
+        let v = Json::parse(&json).unwrap();
+        assert_eq!(v.get("threads").unwrap(), &Json::Bool(true));
+        assert_eq!(v.get("workers").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("tenants").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(v.get("milestone").unwrap().as_str().unwrap(), "parallel-event-loop");
     }
 }

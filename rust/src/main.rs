@@ -257,6 +257,17 @@ fn dispatch(args: &Args) -> Result<()> {
             p.shards = args.u64_or("shards", p.shards as u64)?.max(1) as usize;
             p.nodes = args.u64_or("nodes", p.nodes as u64)?.max(1) as usize;
             p.trace_sample = args.u64_or("trace-sample", p.trace_sample)?;
+            // --threads on: real worker threads over the tenant fleet
+            // (a bare `--threads` also arms it)
+            p.threads = match args.flag("threads") {
+                Some("on") | Some("true") => true,
+                Some("off") | None => false,
+                Some(other) => {
+                    return Err(provuse::Error::Config(format!(
+                        "--threads expects on|off, got `{other}`"
+                    )))
+                }
+            };
             if args.has("no-parity") {
                 p.parity = false;
             }
@@ -503,7 +514,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20   [--no-parity]      (windowed recording, bounded memory, verdict\n\
                  \x20   [--shards N]       parity vs full retention; --shards N self-checks\n\
                  \x20   [--nodes N]        1-vs-N-shard transcript parity, then emits\n\
-                 \x20                      BENCH_scale.json)\n\
+                 \x20   [--threads on]     BENCH_scale.json; --threads on drives a tenant\n\
+                 \x20                      fleet on N real worker threads with a\n\
+                 \x20                      sequential bit-parity twin)\n\
                  \x20 figure10 [--smoke]   ours: replica sets under burst (warm-pool +\n\
                  \x20   [--no-parity]      cold-boot scale-out with zero drops, scale-in\n\
                  \x20                      to floor, --replicas-max 1 seed-parity trio)\n\

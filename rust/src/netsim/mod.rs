@@ -55,6 +55,14 @@ impl Fabric {
         self.params.cross_node_ms.max(0.0)
     }
 
+    /// [`epoch_lookahead_ms`](Fabric::epoch_lookahead_ms) in the virtual
+    /// clock's native nanoseconds — the unit the threaded core's
+    /// [`WindowGovernor`](crate::exec::shard::WindowGovernor) windows are
+    /// denominated in.
+    pub fn epoch_lookahead_ns(&self) -> u64 {
+        (self.epoch_lookahead_ms() * 1e6) as u64
+    }
+
     /// Sample the latency (ms) of one `hop`.
     pub fn sample(&self, hop: Hop) -> f64 {
         let p = &self.params;
@@ -98,6 +106,26 @@ impl Fabric {
             + self.sample(Hop::Network)
             + self.serialize_cost(payload_bytes)
     }
+}
+
+/// Conservative-PDES lookahead negotiation for a fleet of simulation
+/// lanes: the epoch window every worker thread may run without
+/// synchronizing is bounded by the *minimum* latency floor over all
+/// cross-lane edges.  Each entry in `cross_lane_floors_ns` is the
+/// [`Fabric::epoch_lookahead_ns`] floor of one edge that can carry
+/// events between lanes owned by different workers.
+///
+/// An empty slice means no event can ever cross lanes — independent
+/// tenants — and the license is unbounded (`None`): workers may pick any
+/// window they like (the fig9 fleet driver still paces with a finite
+/// batched window so the [`EpochGate`](crate::exec::shard::EpochGate)
+/// is exercised and stall accounting stays meaningful).
+///
+/// A zero floor on any edge collapses the license to zero: the caller
+/// must fall back to the single-threaded loop, because a 0-latency
+/// cross-lane edge admits no conservative window.
+pub fn negotiate_lookahead(cross_lane_floors_ns: &[u64]) -> Option<u64> {
+    cross_lane_floors_ns.iter().copied().min()
 }
 
 #[cfg(test)]
@@ -188,6 +216,20 @@ mod tests {
         let mut p = PlatformConfig::tiny().latency;
         p.cross_node_ms = 0.0;
         assert_eq!(Fabric::new(p, 1).epoch_lookahead_ms(), 0.0);
+    }
+
+    #[test]
+    fn lookahead_negotiation_takes_the_tightest_edge() {
+        let f = fabric(false);
+        let ns = f.epoch_lookahead_ns();
+        assert_eq!(ns, (f.epoch_lookahead_ms() * 1e6) as u64);
+        assert!(ns > 0);
+        // the fleet license is the minimum over the cross-lane edges
+        assert_eq!(negotiate_lookahead(&[ns, ns * 3, ns * 2]), Some(ns));
+        // a zero-latency edge collapses the license to zero
+        assert_eq!(negotiate_lookahead(&[ns, 0]), Some(0));
+        // no cross-lane edges at all: unbounded license
+        assert_eq!(negotiate_lookahead(&[]), None);
     }
 
     #[test]

@@ -67,6 +67,13 @@ impl Quantiles {
         self.sorted.is_empty()
     }
 
+    /// The retained (finite, sorted) samples — lets callers that hold
+    /// several per-lane `Quantiles` pool them into one distribution
+    /// (`from_samples` re-sorts the concatenation).
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+
     /// Quantile by linear interpolation; `q` in `[0, 1]`.
     pub fn q(&self, q: f64) -> f64 {
         quantile_sorted(&self.sorted, q)

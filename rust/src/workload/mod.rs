@@ -46,6 +46,30 @@ impl WorkloadReport {
             self.latency.p99(),
         )
     }
+
+    /// Pool per-lane reports from a tenant fleet into one aggregate:
+    /// counters sum, latency samples are re-sorted into one distribution,
+    /// and the duration is the max (the lanes ran concurrently in the
+    /// same virtual timeline, not back to back).
+    pub fn merged(reports: &[WorkloadReport]) -> WorkloadReport {
+        let mut samples = Vec::new();
+        let mut merged = WorkloadReport {
+            issued: 0,
+            ok: 0,
+            failed: 0,
+            latency: Quantiles::from_samples(Vec::new()),
+            duration_ms: 0.0,
+        };
+        for r in reports {
+            merged.issued += r.issued;
+            merged.ok += r.ok;
+            merged.failed += r.failed;
+            merged.duration_ms = merged.duration_ms.max(r.duration_ms);
+            samples.extend_from_slice(r.latency.samples());
+        }
+        merged.latency = Quantiles::from_samples(samples);
+        merged
+    }
 }
 
 /// Deterministic per-request payload (seeded by workload seed + index).
@@ -278,5 +302,31 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("9 ok"));
         assert!(s.contains("1 failed"));
+    }
+
+    #[test]
+    fn merged_reports_pool_lanes_into_one_distribution() {
+        let a = WorkloadReport {
+            issued: 4,
+            ok: 3,
+            failed: 1,
+            latency: Quantiles::from_samples(vec![3.0, 1.0, 5.0]),
+            duration_ms: 900.0,
+        };
+        let b = WorkloadReport {
+            issued: 6,
+            ok: 6,
+            failed: 0,
+            latency: Quantiles::from_samples(vec![2.0, 4.0]),
+            duration_ms: 1200.0,
+        };
+        let m = WorkloadReport::merged(&[a, b]);
+        assert_eq!((m.issued, m.ok, m.failed), (10, 9, 1));
+        assert_eq!(m.duration_ms, 1200.0);
+        assert_eq!(m.latency.samples(), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(m.latency.median(), 3.0);
+        let empty = WorkloadReport::merged(&[]);
+        assert_eq!(empty.issued, 0);
+        assert!(empty.latency.is_empty());
     }
 }

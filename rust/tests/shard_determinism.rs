@@ -9,7 +9,17 @@
 //! Also proves nested executors stay isolated while an outer sharded run
 //! is in flight: a task pinned to a non-zero lane can spin up its own
 //! inner (sharded) executor without perturbing the outer lane assignment.
+//!
+//! ISSUE 10 extends the golden to **real worker threads**: a pinned-seed
+//! tenant fleet driven by 1 vs 3 vs 7 OS workers under the epoch-window
+//! protocol must produce bit-identical per-tenant verdict transcripts,
+//! RAM ledgers, and epoch counts — thread interleaving (including the
+//! shared interner and any other process-global state) must never leak
+//! into a lane's schedule — and repeated runs of the same fleet in the
+//! same binary must be byte-stable.
 
+use std::future::Future;
+use std::pin::Pin;
 use std::rc::Rc;
 
 use provuse::apps;
@@ -94,6 +104,128 @@ fn schedule_identical_across_shard_counts() {
     assert_eq!(single.verdicts, sharded.verdicts, "fusion verdicts diverged");
     assert_eq!(single.node_ram, sharded.node_ram, "node RAM ledgers diverged");
     assert_eq!(single.epochs, sharded.epochs, "epoch counts diverged");
+}
+
+/// Lanes in the threaded fleet golden — 7 so the widest worker count
+/// below drives one tenant per thread while 3 gets an uneven 3/2/2 split.
+const TENANTS: usize = 7;
+
+/// One tenant lane of the fleet golden: the ISSUE 7 scenario scaled to a
+/// single-node slice under a tenant-derived seed.  Returns a `Send`
+/// constructor for `exec::threads::run_fleet`.
+fn tenant_job(tenant: usize) -> impl FnOnce() -> Pin<Box<dyn Future<Output = Outcome>>> + Send {
+    move || {
+        Box::pin(async move {
+            let mut cfg = scenario_config();
+            cfg.seed = SEED ^ 0x9E3779B97F4A7C15u64.wrapping_mul(tenant as u64 + 1);
+            cfg.cluster.nodes = 1;
+            let seed = cfg.seed;
+            let p = Platform::deploy(apps::chain(3), cfg).await.unwrap();
+            let wl = WorkloadConfig {
+                requests: 240,
+                rate_rps: 60.0,
+                seed,
+                timeout_ms: 60_000.0,
+            };
+            let report = workload::run(Rc::clone(&p), wl).await.unwrap();
+            exec::sleep_ms(15_000.0).await;
+            p.shutdown();
+            let m = &p.metrics;
+            Outcome {
+                verdicts: provuse::experiments::fig9::verdict_transcript(m),
+                node_ram: p
+                    .node_ram_ledger()
+                    .into_iter()
+                    .map(|(id, mb)| (id, mb.to_bits()))
+                    .collect(),
+                epochs: exec::epochs(),
+                failures: report.failed,
+                merges: m.merges().len(),
+            }
+        })
+    }
+}
+
+/// Drive the `TENANTS`-lane fleet on `workers` OS threads (tenant `t`
+/// rides worker `t % workers`) and return the outcomes in tenant order.
+fn run_fleet_golden(workers: usize) -> Vec<Outcome> {
+    let mut jobs: Vec<Vec<_>> = (0..workers).map(|_| Vec::new()).collect();
+    for t in 0..TENANTS {
+        jobs[t % workers].push(tenant_job(t));
+    }
+    // paced virtual window: the tenants are independent (unbounded
+    // lookahead license), but a finite window keeps the gate in play
+    let fleet = exec::threads::run_fleet(250_000_000, jobs).expect("fleet must complete");
+    let mut by_tenant: Vec<(usize, Outcome)> = Vec::new();
+    for (w, lane) in fleet.results.into_iter().enumerate() {
+        for (j, outcome) in lane.into_iter().enumerate() {
+            by_tenant.push((w + j * workers, outcome));
+        }
+    }
+    by_tenant.sort_by_key(|(t, _)| *t);
+    assert_eq!(by_tenant.len(), TENANTS);
+    by_tenant.into_iter().map(|(_, o)| o).collect()
+}
+
+#[test]
+fn threaded_fleet_schedule_identical_across_worker_counts() {
+    let w1 = run_fleet_golden(1);
+    let w3 = run_fleet_golden(3);
+    let w7 = run_fleet_golden(7);
+
+    assert!(w1.iter().any(|o| o.merges > 0), "no tenant fused — golden is trivial");
+    for t in 0..TENANTS {
+        assert_eq!(w1[t].failures, 0, "tenant {t} dropped requests");
+        assert!(!w1[t].verdicts.is_empty(), "tenant {t} recorded no verdicts");
+        // the golden assertions: worker count changes NOTHING observable
+        assert_eq!(w1[t].verdicts, w3[t].verdicts, "tenant {t} verdicts diverged at 3 workers");
+        assert_eq!(w1[t].verdicts, w7[t].verdicts, "tenant {t} verdicts diverged at 7 workers");
+        assert_eq!(w1[t].node_ram, w3[t].node_ram, "tenant {t} RAM ledger diverged at 3 workers");
+        assert_eq!(w1[t].node_ram, w7[t].node_ram, "tenant {t} RAM ledger diverged at 7 workers");
+        assert_eq!(w1[t].epochs, w3[t].epochs, "tenant {t} epochs diverged at 3 workers");
+        assert_eq!(w1[t].epochs, w7[t].epochs, "tenant {t} epochs diverged at 7 workers");
+    }
+}
+
+#[test]
+fn threaded_fleet_is_stable_across_repeated_runs() {
+    // same binary, same process, 5 runs: transcripts must be byte-stable
+    let first = run_fleet_golden(3);
+    for run in 1..5 {
+        let again = run_fleet_golden(3);
+        for t in 0..TENANTS {
+            assert_eq!(first[t].verdicts, again[t].verdicts, "run {run}, tenant {t}: verdicts");
+            assert_eq!(first[t].node_ram, again[t].node_ram, "run {run}, tenant {t}: RAM");
+            assert_eq!(first[t].epochs, again[t].epochs, "run {run}, tenant {t}: epochs");
+        }
+    }
+}
+
+#[test]
+fn worker_panic_surfaces_as_shard_panicked_error() {
+    // shard 2 of 3 detonates mid-window; the gate poison must convert
+    // into the crate error instead of hanging the barrier
+    let jobs: Vec<Vec<exec::threads::LaneJob<u32>>> = (0..3usize)
+        .map(|w| {
+            vec![Box::new(move || -> Pin<Box<dyn Future<Output = u32>>> {
+                Box::pin(async move {
+                    exec::sleep_ms(5.0).await;
+                    if w == 2 {
+                        panic!("tenant meltdown");
+                    }
+                    exec::sleep_ms(50.0).await;
+                    w as u32
+                })
+            }) as exec::threads::LaneJob<u32>]
+        })
+        .collect();
+    let poison = exec::threads::run_fleet(1_000_000, jobs).unwrap_err();
+    let err: provuse::Error = poison.into();
+    assert!(
+        matches!(err, provuse::Error::ShardPanicked { shard: 2, .. }),
+        "unexpected error: {err}"
+    );
+    assert!(err.to_string().contains("tenant meltdown"), "{err}");
 }
 
 #[test]
